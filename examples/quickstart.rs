@@ -1,0 +1,61 @@
+//! Quickstart: one frame through the three-stage pipeline on real PJRT
+//! inference, at every horizontal-partitioning width.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use pats::runtime::{partition, Engine, Tensor};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. Load the AOT-compiled model artifacts (built once by `make
+    //    artifacts`; Python is not involved from here on).
+    let engine = Engine::load(&Engine::default_dir())?;
+    println!(
+        "loaded {} executables on {}",
+        engine.names().count(),
+        engine.platform()
+    );
+
+    // 2. Synthesise a conveyor-belt frame: uniform background + one waste
+    //    item.
+    let background = Tensor::zeros(&[48, 48, 3]);
+    let mut frame = background.clone();
+    for h in 14..34 {
+        for w in 10..30 {
+            for c in 0..3 {
+                frame.data[(h * 48 + w) * 3 + c] = 0.7 + 0.1 * c as f32;
+            }
+        }
+    }
+
+    // 3. Stage 1 — foreground object detector (always local, ~constant).
+    let score = partition::run_detector(&engine, &frame, &background)?;
+    println!("stage 1: foreground score {score:.4} -> object {}", score > 0.01);
+
+    // 4. Stage 2 — high-priority low-complexity classifier.
+    let decision = partition::run_classifier(&engine, &frame)?;
+    println!(
+        "stage 2: decision value {decision:.4} -> {}",
+        if decision > 0.0 { "recyclable (spawn stage 3)" } else { "general waste" }
+    );
+
+    // 5. Stage 3 — high-complexity CNN at each core configuration. The
+    //    outputs must agree: that is the §3.2 horizontal-partitioning
+    //    invariant the scheduler relies on when it trades cores for
+    //    latency.
+    let mono = engine.execute("cnn_full", &[&frame])?;
+    println!("stage 3 (monolithic): logits {:?} -> class {}", mono.data, mono.argmax());
+    for tiles in [2usize, 4] {
+        let t0 = std::time::Instant::now();
+        let out = partition::run_cnn(&engine, &frame, tiles)?;
+        println!(
+            "stage 3 ({}-core cfg): class {} | max|Δ| vs monolithic {:.2e} | {:?}",
+            tiles,
+            out.argmax(),
+            out.max_abs_diff(&mono),
+            t0.elapsed()
+        );
+        assert!(out.max_abs_diff(&mono) < 2e-4);
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,262 @@
+//! End-to-end serving driver: a real-clock mini edge cluster serving real
+//! frames through real PJRT inference, coordinated by the paper's
+//! preemption-aware scheduler.
+//!
+//! This is the proof that all three layers compose: the Rust coordinator
+//! (L3) plans time-slotted placements; the placements execute the
+//! AOT-compiled JAX model (L2) whose conv blocks are Pallas kernels (L1) —
+//! horizontally partitioned exactly as the allocation's core configuration
+//! dictates. Python is not running.
+//!
+//! Timings are calibrated: the stage benchmarks are *measured* on this
+//! machine at startup (the paper benchmarks its stages on the RPi2B the
+//! same way, §5), and the frame period is derived from them with the
+//! paper's "minimum viable completion time" rule.
+//!
+//!     make artifacts && cargo run --release --example serve_cluster [frames]
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use pats::config::SystemConfig;
+use pats::coordinator::Controller;
+use pats::runtime::{partition, Engine, Tensor};
+use pats::scheduler::PatsScheduler;
+use pats::task::{DeviceId, FrameId};
+use pats::time::{Clock, RealClock, SimTime};
+use pats::trace::{Distribution, Trace};
+use pats::util::rng::Rng;
+use pats::util::stats::Summary;
+
+/// A wall-clock event in the serving loop.
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct Event {
+    at: SimTime,
+    seq: u64,
+    kind: Kind,
+}
+
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+enum Kind {
+    Frame { cycle: usize, device: u32 },
+}
+
+fn make_frame(rng: &mut Rng, object: bool) -> (Tensor, Tensor) {
+    let background = Tensor::zeros(&[48, 48, 3]);
+    let mut frame = background.clone();
+    if object {
+        let h0 = rng.range_usize(2, 20);
+        let w0 = rng.range_usize(2, 20);
+        for h in h0..h0 + 16 {
+            for w in w0..w0 + 16 {
+                for c in 0..3 {
+                    frame.data[(h * 48 + w) * 3 + c] = rng.range_f64(0.4, 1.0) as f32;
+                }
+            }
+        }
+    }
+    (frame, background)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let frames_target: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+
+    // ---- load + calibrate ------------------------------------------------
+    let engine = Engine::load(&Engine::default_dir())?;
+    println!("engine: {} executables on {}", engine.names().count(), engine.platform());
+
+    let mut rng = Rng::seed_from_u64(7);
+    let (frame, bg) = make_frame(&mut rng, true);
+    let time_of = |f: &dyn Fn() -> ()| {
+        let t0 = Instant::now();
+        f();
+        t0.elapsed().as_secs_f64()
+    };
+    // Warm-up once (first PJRT execution pays compilation/dispatch setup).
+    partition::run_cnn(&engine, &frame, 2)?;
+    let t_detector = time_of(&|| {
+        partition::run_detector(&engine, &frame, &bg).unwrap();
+    });
+    let t_classifier = time_of(&|| {
+        partition::run_classifier(&engine, &frame).unwrap();
+    });
+    let t_cnn2 = time_of(&|| {
+        partition::run_cnn(&engine, &frame, 2).unwrap();
+    });
+    let t_cnn4_raw = time_of(&|| {
+        partition::run_cnn(&engine, &frame, 4).unwrap();
+    });
+    // On a single-CPU host the 4-tile path has no parallel speed-up; model
+    // the 4-core configuration with the paper's 2c/4c ratio so the
+    // scheduler faces the paper's actual trade-off.
+    let t_cnn4 = (t_cnn4_raw).min(t_cnn2 * 11.611 / 16.862);
+    println!(
+        "calibration: detector {:.1} ms | classifier {:.1} ms | cnn 2-tile {:.1} ms | 4-tile {:.1} ms (scheduled as {:.1} ms)",
+        t_detector * 1e3, t_classifier * 1e3, t_cnn2 * 1e3, t_cnn4_raw * 1e3, t_cnn4 * 1e3
+    );
+
+    // ---- scaled config (the paper's §5 derivation) -------------------------
+    // Floors keep windows well above OS sleep/jitter granularity: inference
+    // on this host is orders of magnitude faster than on an RPi2B, so
+    // slots are sized as if the stages ran at device-grade speeds while
+    // the *real* inference executes comfortably inside them.
+    let mut cfg = SystemConfig::default();
+    cfg.stage1_s = t_detector.max(0.002);
+    cfg.hp_proc_s = t_classifier.max(0.020);
+    cfg.hp_proc_std_s = cfg.hp_proc_s * 0.5 + 0.002;
+    cfg.lp_proc_2core_s = t_cnn2.max(0.150);
+    cfg.lp_proc_4core_s = t_cnn4.max(0.100).min(cfg.lp_proc_2core_s);
+    cfg.lp_proc_std_s = cfg.lp_proc_2core_s * 0.25;
+    cfg.lp_live_extra_s = 0.0;
+    // Minimum viable completion time: stage1 + hp + one 2-core DNN + slack.
+    cfg.frame_period_s = (cfg.stage1_s + cfg.hp_proc_s + cfg.lp_proc_2core_s) * 1.6;
+    cfg.hp_deadline_s = (cfg.hp_proc_s + cfg.hp_proc_std_s) * 4.0 + 0.05;
+    cfg.controller_overhead_s = 0.0002;
+    cfg.validate()?;
+    println!(
+        "scaled frame period: {:.1} ms ({} device-frames over {} devices)",
+        cfg.frame_period_s * 1e3,
+        frames_target,
+        cfg.devices
+    );
+
+    // ---- cluster state -----------------------------------------------------
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, frames_target, 11);
+    let policy = PatsScheduler::from_config(&cfg);
+    let mut controller = Controller::new(cfg.clone(), policy);
+    let clock = RealClock::new();
+
+    let mut events: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let period = cfg.frame_period_s;
+    for cycle in 0..trace.cycles() {
+        for d in 0..cfg.devices {
+            let offset = if d >= cfg.devices / 2 { period / 2.0 } else { 0.0 };
+            let at = SimTime::from_secs_f64(cycle as f64 * period + offset + d as f64 * 0.001);
+            seq += 1;
+            events.push(Reverse(Event { at, seq, kind: Kind::Frame { cycle, device: d as u32 } }));
+        }
+    }
+
+    let mut hp_latency = Summary::new();
+    let mut set_latency = Summary::new();
+    let mut stage3_done = 0u64;
+    let mut stage3_total = 0u64;
+    let mut hp_done = 0u64;
+    let mut hp_total = 0u64;
+    let mut frames_completed = 0u64;
+    let mut frames_with_work = 0u64;
+    let mut preemptions = 0u64;
+    let wall0 = Instant::now();
+
+    while let Some(Reverse(ev)) = events.pop() {
+        // Real-time pacing: sleep until the frame instant.
+        loop {
+            let now = clock.now();
+            if now >= ev.at {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(
+                (ev.at.as_micros() - now.as_micros()).min(5_000),
+            ));
+        }
+        let Kind::Frame { cycle, device } = ev.kind;
+        let load = trace.load_at(cycle, device as usize);
+        let frame_id = FrameId((cycle * cfg.devices + device as usize) as u64);
+        let t_frame = Instant::now();
+
+        // Stage 1 — real detector inference.
+        let (frame, bg) = make_frame(&mut rng, load.spawns_hp());
+        let score = partition::run_detector(&engine, &frame, &bg)?;
+        if !load.spawns_hp() || score < 1e-3 {
+            frames_completed += 1; // empty belt: pipeline trivially done
+            continue;
+        }
+        frames_with_work += 1;
+        hp_total += 1;
+
+        // Stage 2 — allocate through the controller, then run for real.
+        let now = clock.now();
+        let (hp_task, _t, hp_out) = controller.handle_hp_request(frame_id, DeviceId(device), now);
+        let Some(_window) = hp_out.window else {
+            continue; // stage-2 blocked: frame lost (counted via hp_total)
+        };
+        if hp_out.preemption.is_some() {
+            preemptions += 1;
+        }
+        let _decision = partition::run_classifier(&engine, &frame)?;
+        controller.handle_state_update(hp_task, true, clock.now());
+        hp_done += 1;
+        hp_latency.add(t_frame.elapsed().as_secs_f64() * 1e3);
+
+        // Stage 3 — allocate the DNN set, then execute each placement with
+        // the real partitioned CNN at its assigned core configuration.
+        let n = load.lp_tasks();
+        if n == 0 {
+            frames_completed += 1;
+            continue;
+        }
+        stage3_total += n as u64;
+        let deadline = ev.at + pats::time::SimDuration::from_secs_f64(period);
+        let (_rid, _t, lp_out) =
+            controller.handle_lp_request(frame_id, DeviceId(device), n, deadline, clock.now());
+        let mut all_ok = lp_out.unallocated.is_empty();
+        let mut placements = lp_out.placements.clone();
+        placements.sort_by_key(|p| p.window.start);
+        for p in &placements {
+            // Wait for the reserved window, then run the real inference at
+            // the allocated width (2 or 4 tiles).
+            loop {
+                let now = clock.now();
+                if now >= p.window.start {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_micros(
+                    (p.window.start.as_micros() - now.as_micros()).min(2_000),
+                ));
+            }
+            let tiles = p.cores as usize; // 2-core → 2 tiles, 4-core → 4 tiles
+            let _logits = partition::run_cnn(&engine, &frame, tiles)?;
+            let finished = clock.now();
+            let ok = finished <= p.window.end;
+            controller.handle_state_update(p.task, ok, finished);
+            if ok {
+                stage3_done += 1;
+            } else {
+                all_ok = false;
+            }
+        }
+        if all_ok && !placements.is_empty() {
+            frames_completed += 1;
+            set_latency.add(t_frame.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+
+    // ---- report -------------------------------------------------------------
+    let wall = wall0.elapsed().as_secs_f64();
+    println!("\n=== serve_cluster report ===");
+    println!("wall time: {wall:.2} s for {frames_target} device-frames ({frames_with_work} with objects)");
+    println!(
+        "frames completed end-to-end: {frames_completed}/{frames_target} ({:.1} %)",
+        100.0 * frames_completed as f64 / frames_target as f64
+    );
+    println!(
+        "stage-2 (high-priority): {hp_done}/{hp_total} | mean latency {:.1} ms | preemptions {preemptions}",
+        hp_latency.mean()
+    );
+    println!(
+        "stage-3 (DNN tasks): {stage3_done}/{stage3_total} within their windows | throughput {:.2} DNN/s",
+        stage3_done as f64 / wall
+    );
+    let mut sl = set_latency;
+    println!(
+        "end-to-end frame latency (full sets): mean {:.1} ms, p95 {:.1} ms",
+        sl.mean(),
+        sl.percentile(95.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Run one full-scale paper scenario from a trace file (or a generated
+//! distribution) and print its metrics — the per-scenario building block of
+//! the experiments harness.
+//!
+//!     cargo run --release --example trace_experiment -- weighted4
+
+use pats::config::SystemConfig;
+use pats::sim::run_scenario;
+use pats::trace::{Distribution, Trace};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let dist_name = std::env::args().nth(1).unwrap_or_else(|| "uniform".into());
+    let dist = Distribution::parse(&dist_name)?;
+
+    let mut cfg = SystemConfig::default();
+    let trace = Trace::generate(dist, cfg.devices, cfg.frames, cfg.seed);
+    let (lp, hp, frames) = trace.potential_counts();
+    println!("trace {dist_name}: {frames} device-frames, potential HP {hp}, potential LP {lp}");
+
+    // Preemption on vs off over the SAME trace — the paper's core A/B.
+    for preemption in [true, false] {
+        cfg.preemption = preemption;
+        let label = if preemption { "preemption" } else { "no-preemption" };
+        let mut result = run_scenario(&cfg, &trace, label);
+        println!("\n{}", result.metrics.render_text());
+        println!(
+            "  virtual time {} simulated in {:.0?} wall",
+            result.virtual_end, result.elapsed
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,136 @@
+"""AOT compile path: lower every model entry point to HLO *text* artifacts.
+
+Run once by `make artifacts`; the Rust runtime (`rust/src/runtime/`) loads
+the text with `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+client, and executes it on the request path. Python is never invoked again.
+
+HLO text — NOT `lowered.compiler_ir("hlo").serialize()` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Every artifact fixes its weights as HLO constants (weights are generated from
+a fixed seed in model.py), so executables take only image/feature tensors.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+MANIFEST_NAME = "manifest.txt"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser).
+
+    `print_large_constants=True` is load-bearing: the default printer elides
+    big constant tensors as `{...}`, which the HLO text parser silently
+    re-materialises as ZEROS — the model would run with zero weights.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape: tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _fmt_shape(shape: tuple[int, ...]) -> str:
+    return "f32[" + ",".join(str(d) for d in shape) + "]"
+
+
+def entry_points() -> list[tuple[str, object, list[tuple[int, ...]], tuple[int, ...]]]:
+    """(name, fn, input shapes, output shape) for every artifact.
+
+    The return-value shape is the single tensor inside the 1-tuple the
+    lowering emits (return_tuple=True).
+    """
+    img = (model.IMG_H, model.IMG_W, model.IMG_C)
+    eps: list[tuple[str, object, list[tuple[int, ...]], tuple[int, ...]]] = [
+        ("detector", lambda f, b: (model.detector(f, b),), [img, img], (1,)),
+        ("classifier", lambda f: (model.classifier(f),), [img], (1,)),
+        ("cnn_full", lambda f: (model.cnn_forward(f, tiles=1),), [img], (model.NUM_CLASSES,)),
+    ]
+    shapes = model.block_shapes()
+    for i, bs in enumerate(shapes):
+        block_in = (bs.h_in, bs.w_in, bs.c_in)
+        block_out = (bs.h_in, bs.w_in, bs.c_out)
+        eps.append(
+            (
+                f"block{i}_full",
+                (lambda i_: lambda x: (model.cnn_block_full(x, i_),))(i),
+                [block_in],
+                block_out,
+            )
+        )
+        for tiles in (2, 4):
+            tin = bs.tile_input_shape(tiles)
+            tout = bs.tile_output_shape(tiles)
+            eps.append(
+                (
+                    f"block{i}_tile{tiles}",
+                    (lambda i_: lambda x: (model.cnn_block_tile(x, i_),))(i),
+                    [tin],
+                    tout,
+                )
+            )
+        eps.append(
+            (
+                f"pool{i}",
+                lambda x: (model.cnn_pool(x),),
+                [block_out],
+                bs.pooled_shape(),
+            )
+        )
+    head_in = model.head_input_shape()
+    eps.append(("head", lambda x: (model.cnn_head(x),), [head_in], (model.NUM_CLASSES,)))
+    return eps
+
+
+def build(out_dir: str, verbose: bool = True) -> list[str]:
+    """Lower every entry point into `out_dir`; returns the artifact names."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    names = []
+    for name, fn, in_shapes, out_shape in entry_points():
+        specs = [_spec(s) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        ins = ",".join(_fmt_shape(s) for s in in_shapes)
+        manifest_lines.append(f"{name}\t{fname}\tinputs={ins}\toutput={_fmt_shape(out_shape)}")
+        names.append(name)
+        if verbose:
+            print(f"  {name}: {ins} -> {_fmt_shape(out_shape)} ({len(text)} chars)")
+    with open(os.path.join(out_dir, MANIFEST_NAME), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    if verbose:
+        print(f"wrote {len(names)} artifacts + {MANIFEST_NAME} to {out_dir}")
+    return names
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument("--quiet", action="store_true")
+    args = parser.parse_args()
+    build(args.out, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: tiled direct 2-D convolution (the horizontal-partitioning
+hot spot of the paper's stage-3 CNN).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper partitions
+conv inputs across *CPU cores* with halo rows exchanged over IPC. On TPU the
+same insight becomes a Pallas grid over output row-blocks: each grid step
+owns one row-block of the output in VMEM, reads the matching input rows plus
+the (kh-1) halo rows, and expresses the convolution as kh*kw accumulated
+matmuls of shape (block_h * W, Cin) @ (Cin, Cout) so the inner loop maps onto
+the MXU instead of a scalar sliding window.
+
+The kernel computes VALID over H / SAME over W: the caller pre-pads the W
+axis (and, for the full-image flavour, the H axis) so tile semantics match
+`ref.conv2d_validh_ref` exactly. `interpret=True` everywhere — the CPU PJRT
+plugin cannot run Mosaic custom-calls; real-TPU efficiency is estimated
+statically in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_block_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int,
+                       block_h: int, relu: bool):
+    """One grid step: compute `block_h` output rows.
+
+    x_ref: (Hin, Wp, Cin) full (pre-padded-W) input — halo comes for free by
+           reading `block_h + kh - 1` rows at the block offset.
+    w_ref: (kh, kw, Cin, Cout); b_ref: (Cout,);
+    o_ref: (block_h, Wout, Cout) this grid step's output block.
+    """
+    i = pl.program_id(0)
+    wout = o_ref.shape[1]
+    cout = o_ref.shape[2]
+    cin = x_ref.shape[2]
+    # Rows needed for this output block: block offset plus (kh-1) halo rows.
+    x_rows = x_ref[pl.dslice(i * block_h, block_h + kh - 1), :, :]
+    acc = jnp.zeros((block_h * wout, cout), dtype=jnp.float32)
+    # kh*kw shifted sub-images, each contracted over Cin on the MXU.
+    for ki in range(kh):
+        for kj in range(kw):
+            patch = jax.lax.dynamic_slice(
+                x_rows, (ki, kj, 0), (block_h, wout, cin)
+            ).reshape(block_h * wout, cin)
+            acc = acc + jnp.dot(
+                patch.astype(jnp.float32),
+                w_ref[ki, kj, :, :].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+    out = acc.reshape(block_h, wout, cout) + b_ref[...].astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pick_block_h(hout: int) -> int:
+    """Largest divisor of `hout` no bigger than 8 — keeps each grid step's
+    VMEM footprint bounded while amortising the halo re-read."""
+    for cand in (8, 6, 4, 3, 2, 1):
+        if hout % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_h"))
+def conv2d_validh(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                  relu: bool = False, block_h: int | None = None) -> jax.Array:
+    """Convolution VALID over H, SAME over W (+bias, optional ReLU).
+
+    x: (Hin, W, Cin); w: (kh, kw, Cin, Cout); b: (Cout,).
+    Returns (Hin - kh + 1, W, Cout). Matches `ref.conv2d_validh_ref` (+ReLU).
+    """
+    kh, kw, cin, cout = w.shape
+    hin, width, xc = x.shape
+    assert xc == cin, f"channel mismatch {xc} != {cin}"
+    hout = hin - kh + 1
+    assert hout >= 1, f"input too short: {hin} rows for kh={kh}"
+    # SAME over W: pre-pad the width axis.
+    pad_l = (kw - 1) // 2
+    pad_r = kw - 1 - pad_l
+    xp = jnp.pad(x, ((0, 0), (pad_l, pad_r), (0, 0)))
+    bh = block_h or _pick_block_h(hout)
+    assert hout % bh == 0, f"block_h={bh} must divide Hout={hout}"
+    grid = (hout // bh,)
+    return pl.pallas_call(
+        functools.partial(_conv_block_kernel, kh=kh, kw=kw, block_h=bh, relu=relu),
+        grid=grid,
+        in_specs=[
+            # Full input visible to every grid step; the kernel slices its
+            # rows + halo itself (BlockSpec cannot express overlapping reads).
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bh, width, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hout, width, cout), x.dtype),
+        interpret=True,
+    )(xp, w, b)
+
+
+def conv2d_same(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                relu: bool = False) -> jax.Array:
+    """Convolution SAME over H and W (+bias, optional ReLU).
+
+    Implemented as H-padding + the VALID-H kernel, which is exactly the
+    decomposition horizontal partitioning relies on.
+    """
+    kh = w.shape[0]
+    pad_t = (kh - 1) // 2
+    pad_b = kh - 1 - pad_t
+    xp = jnp.pad(x, ((pad_t, pad_b), (0, 0), (0, 0)))
+    return conv2d_validh(xp, w, b, relu=relu)

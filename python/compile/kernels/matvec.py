@@ -1,0 +1,32 @@
+"""L1 Pallas kernel: fused matvec + bias.
+
+Used by the stage-2 "SVM" decision function and the stage-3 classification
+head — both are y = x @ W + b over small feature vectors. A single grid step
+suffices; the dot maps onto the MXU with an f32 accumulator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    y = jnp.dot(x[None, :], w, preferred_element_type=jnp.float32)[0]
+    o_ref[...] = (y + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@jax.jit
+def matvec(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """y = x @ w + b. x: (n,); w: (n, m); b: (m,). Matches `ref.matvec_ref`."""
+    n, m = w.shape
+    assert x.shape == (n,), f"shape mismatch {x.shape} vs {w.shape}"
+    assert b.shape == (m,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(x, w, b)

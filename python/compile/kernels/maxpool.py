@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: 2x2/stride-2 max pooling.
+
+This is the paper's reassembly barrier: horizontal partitioning processes
+conv layers per-tile, but max-pool strides may not align with tile borders,
+so tiles are stitched back together and pooled as one array (§3.2). The
+kernel therefore always sees the full stitched feature map.
+
+Grid over output row-blocks; each step reduces a (2*block_h, W, C) slab to
+(block_h, W/2, C) with reshape-max — a pure VPU op on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref, *, block_h: int):
+    i = pl.program_id(0)
+    w = x_ref.shape[1]
+    c = x_ref.shape[2]
+    rows = x_ref[pl.dslice(i * 2 * block_h, 2 * block_h), :, :]
+    o_ref[...] = rows.reshape(block_h, 2, w // 2, 2, c).max(axis=(1, 3))
+
+
+def _pick_block_h(hout: int) -> int:
+    for cand in (8, 6, 4, 3, 2, 1):
+        if hout % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("block_h",))
+def maxpool2x2(x: jax.Array, *, block_h: int | None = None) -> jax.Array:
+    """2x2 max pooling, stride 2. x: (H, W, C), H and W even.
+
+    Matches `ref.maxpool2x2_ref`.
+    """
+    h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"maxpool needs even dims, got {x.shape}"
+    hout, wout = h // 2, w // 2
+    bh = block_h or _pick_block_h(hout)
+    assert hout % bh == 0
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, block_h=bh),
+        grid=(hout // bh,),
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((bh, wout, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hout, wout, c), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracle implementations for every Pallas kernel.
+
+These are the ground truth the build-time pytest suite checks the Pallas
+kernels against (L1 correctness gate), and the reference the horizontal
+partitioning equivalence invariant is stated in terms of.
+
+Conventions: single image, NHWC without the N axis — i.e. arrays are
+(H, W, C). Convolutions are 3x3 (or kh x kw), stride 1. "SAME" padding over
+both axes for the full-image op; the tiled op uses VALID over H (the halo
+rows supply the context) and SAME over W.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_same_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """kh x kw convolution, stride 1, SAME padding on H and W, plus bias.
+
+    x: (H, W, Cin); w: (kh, kw, Cin, Cout); b: (Cout,). Returns (H, W, Cout).
+    """
+    lhs = x[None].transpose(0, 3, 1, 2)  # NCHW
+    rhs = w.transpose(3, 2, 0, 1)  # OIHW
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1, 1), padding="SAME"
+    )
+    return out[0].transpose(1, 2, 0) + b
+
+
+def conv2d_validh_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Convolution VALID over H, SAME over W, plus bias.
+
+    This is the per-tile flavour: the caller supplies (tile_h + kh - 1) rows
+    (the halo) and receives tile_h rows back.
+
+    x: (Hin, W, Cin); w: (kh, kw, Cin, Cout); b: (Cout,).
+    Returns (Hin - kh + 1, W, Cout).
+    """
+    kw = w.shape[1]
+    lhs = x[None].transpose(0, 3, 1, 2)
+    rhs = w.transpose(3, 2, 0, 1)
+    pad_w = ((kw - 1) // 2, kw - 1 - (kw - 1) // 2)
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1, 1), padding=[(0, 0), pad_w]
+    )
+    return out[0].transpose(1, 2, 0) + b
+
+
+def relu_ref(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2x2_ref(x: jax.Array) -> jax.Array:
+    """2x2 max pooling, stride 2. x: (H, W, C) with even H and W."""
+    h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"maxpool needs even dims, got {x.shape}"
+    x = x.reshape(h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(1, 3))
+
+
+def matvec_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """y = x @ w + b. x: (n,); w: (n, m); b: (m,)."""
+    return x @ w + b
+
+
+def pad_h(x: jax.Array, pad: int) -> jax.Array:
+    """Zero-pad the H axis by `pad` rows on each side (SAME-conv context)."""
+    return jnp.pad(x, ((pad, pad), (0, 0), (0, 0)))
+
+
+def split_tiles_with_halo(x: jax.Array, tiles: int, halo: int) -> list[jax.Array]:
+    """Horizontal partitioning: split the H axis of a pre-padded input.
+
+    `x` must already be padded by `halo` rows top and bottom (see `pad_h`) so
+    every tile — including the edge tiles — has uniform shape
+    (tile_h + 2*halo, W, C). This mirrors the paper's §3.2: "partitions of
+    input data ... expanding the partitions around the edges".
+    """
+    h_padded = x.shape[0]
+    h = h_padded - 2 * halo
+    assert h % tiles == 0, f"H={h} not divisible into {tiles} tiles"
+    tile_h = h // tiles
+    return [x[i * tile_h : i * tile_h + tile_h + 2 * halo] for i in range(tiles)]
+
+
+def stitch_tiles(tile_outputs: list[jax.Array]) -> jax.Array:
+    """Reassemble tile outputs along H (the paper's max-pool barrier)."""
+    return jnp.concatenate(tile_outputs, axis=0)

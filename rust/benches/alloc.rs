@@ -1,0 +1,156 @@
+//! Controller hot-path micro-benchmarks (Fig 9 / Fig 10 at the
+//! algorithm level): high-priority allocation, the preemption path, and
+//! low-priority request allocation, each at increasing network load.
+
+use pats::bench::{bench_with_setup, section};
+use pats::config::SystemConfig;
+use pats::scheduler::{PatsScheduler, Policy};
+use pats::state::NetworkState;
+use pats::task::{Allocation, DeviceId, FrameId, LpRequest, Priority, TaskSpec, Window};
+use pats::time::SimTime;
+
+/// Build a network state pre-loaded with `load` low-priority allocations
+/// spread across devices (the paper's search-time driver, §6.3).
+fn loaded_state(cfg: &SystemConfig, load: usize) -> NetworkState {
+    let mut st = NetworkState::new(cfg);
+    for i in 0..load {
+        let id = st.fresh_task_id();
+        let dev = DeviceId((i % cfg.devices) as u32);
+        let start = SimTime::from_secs_f64(20.0 + (i / cfg.devices) as f64 * 18.0);
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(i as u64),
+            source: dev,
+            priority: Priority::Low,
+            deadline: start + pats::time::SimDuration::from_secs_f64(60.0),
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        st.commit_allocation(Allocation {
+            task: id,
+            device: dev,
+            window: Window::from_duration(start, cfg.lp_slot(2)),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+    }
+    st
+}
+
+fn hp_spec(st: &mut NetworkState, cfg: &SystemConfig) -> pats::task::TaskId {
+    let id = st.fresh_task_id();
+    st.register_task(TaskSpec {
+        id,
+        frame: FrameId(999),
+        source: DeviceId(0),
+        priority: Priority::High,
+        deadline: SimTime::from_secs_f64(cfg.hp_deadline_s),
+        spawn: SimTime::ZERO,
+        request: None,
+    });
+    id
+}
+
+fn lp_request(st: &mut NetworkState, n: usize) -> pats::task::RequestId {
+    let rid = st.fresh_request_id();
+    let deadline = SimTime::from_secs_f64(18.86);
+    let mut tasks = Vec::new();
+    for _ in 0..n {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(998),
+            source: DeviceId(0),
+            priority: Priority::Low,
+            deadline,
+            spawn: SimTime::ZERO,
+            request: Some(rid),
+        });
+        tasks.push(id);
+    }
+    st.register_request(LpRequest {
+        id: rid,
+        frame: FrameId(998),
+        source: DeviceId(0),
+        deadline,
+        spawn: SimTime::ZERO,
+        tasks,
+    });
+    rid
+}
+
+fn main() {
+    let cfg = SystemConfig::default();
+
+    section("high-priority allocation (Fig 9a)");
+    for load in [0usize, 8, 32, 128] {
+        let mut r = bench_with_setup(
+            &format!("hp_alloc/load={load}"),
+            20,
+            300,
+            || {
+                let mut st = loaded_state(&cfg, load);
+                let task = hp_spec(&mut st, &cfg);
+                (st, task, PatsScheduler { preemption: true, reallocate: true, set_aware_victims: false })
+            },
+            |(mut st, task, mut sched)| sched.allocate_hp(&mut st, &cfg, task, SimTime::ZERO),
+        );
+        println!("{}", r.render());
+    }
+
+    section("high-priority allocation with preemption firing (Fig 9b)");
+    for load in [8usize, 32, 128] {
+        let mut r = bench_with_setup(
+            &format!("hp_alloc_preempt/load={load}"),
+            20,
+            300,
+            || {
+                let mut st = loaded_state(&cfg, load);
+                // Saturate the source device so the HP attempt must preempt.
+                let blocker = st.fresh_task_id();
+                st.register_task(TaskSpec {
+                    id: blocker,
+                    frame: FrameId(997),
+                    source: DeviceId(0),
+                    priority: Priority::Low,
+                    deadline: SimTime::from_secs_f64(90.0),
+                    spawn: SimTime::ZERO,
+                    request: None,
+                });
+                st.commit_allocation(Allocation {
+                    task: blocker,
+                    device: DeviceId(0),
+                    window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
+                    cores: 4,
+                    offloaded: false,
+                })
+                .unwrap();
+                let task = hp_spec(&mut st, &cfg);
+                (st, task, PatsScheduler { preemption: true, reallocate: true, set_aware_victims: false })
+            },
+            |(mut st, task, mut sched)| {
+                let out = sched.allocate_hp(&mut st, &cfg, task, SimTime::ZERO);
+                assert!(out.preemption.is_some());
+                out
+            },
+        );
+        println!("{}", r.render());
+    }
+
+    section("low-priority request allocation (Fig 10)");
+    for (n, load) in [(1usize, 0usize), (4, 0), (1, 64), (4, 64), (4, 256)] {
+        let mut r = bench_with_setup(
+            &format!("lp_alloc/tasks={n}/load={load}"),
+            10,
+            200,
+            || {
+                let mut st = loaded_state(&cfg, load);
+                let rid = lp_request(&mut st, n);
+                (st, rid, PatsScheduler { preemption: true, reallocate: true, set_aware_victims: false })
+            },
+            |(mut st, rid, mut sched)| sched.allocate_lp(&mut st, &cfg, rid, SimTime::ZERO),
+        );
+        println!("{}", r.render());
+    }
+}

@@ -1,0 +1,19 @@
+//! End-to-end experiment benchmark: every paper scenario at full scale
+//! (5184 device-frames), timed, followed by the complete figure/table
+//! report. `cargo bench --bench experiments` regenerates the paper's
+//! evaluation in one shot.
+
+use pats::config::SystemConfig;
+use pats::experiments::ExperimentSet;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    println!(
+        "running the full scenario matrix at {} device-frames (seed {:#x}) ...",
+        cfg.frames, cfg.seed
+    );
+    let t0 = std::time::Instant::now();
+    let mut set = ExperimentSet::run(&cfg);
+    println!("matrix complete in {:.2?}\n", t0.elapsed());
+    println!("{}", set.render_all());
+}

@@ -1,0 +1,50 @@
+//! PJRT execution benchmarks: per-artifact latency and the horizontal
+//! partitioning pipeline at each width (skipped when `make artifacts` has
+//! not run).
+
+use pats::bench::{bench, section};
+use pats::runtime::{partition, Engine, Tensor};
+
+fn main() {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return;
+    }
+    let engine = Engine::load(&dir).expect("load artifacts");
+    println!("platform {}, {} executables", engine.platform(), engine.names().count());
+
+    let frame = Tensor::from_fn(&[48, 48, 3], |i| ((i * 2_654_435_761) % 1000) as f32 / 1000.0);
+    let bg = Tensor::zeros(&[48, 48, 3]);
+
+    section("single executables");
+    let mut r = bench("detector", 3, 50, || {
+        partition::run_detector(&engine, &frame, &bg).unwrap()
+    });
+    println!("{}", r.render());
+    let mut r = bench("classifier", 3, 50, || {
+        partition::run_classifier(&engine, &frame).unwrap()
+    });
+    println!("{}", r.render());
+    let mut r = bench("cnn_full (monolithic)", 3, 20, || {
+        engine.execute("cnn_full", &[&frame]).unwrap()
+    });
+    println!("{}", r.render());
+
+    section("horizontal partitioning pipeline");
+    for tiles in [1usize, 2, 4] {
+        let mut r = bench(&format!("run_cnn/tiles={tiles}"), 2, 15, || {
+            partition::run_cnn(&engine, &frame, tiles).unwrap()
+        });
+        println!("{}", r.render());
+    }
+
+    section("per-block tile executables");
+    for block in 0..partition::NUM_BLOCKS {
+        let spec = engine.spec(&format!("block{block}_tile4")).unwrap().clone();
+        let tile = Tensor::zeros(&spec.input_shapes[0]);
+        let name = format!("block{block}_tile4");
+        let mut r = bench(&name, 3, 30, || engine.execute(&name, &[&tile]).unwrap());
+        println!("{}", r.render());
+    }
+}

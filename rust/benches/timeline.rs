@@ -1,0 +1,98 @@
+//! Reservation-calendar micro-benchmarks: the data structures under every
+//! scheduling decision (earliest-fit search, reservation insert, preemption
+//! candidate selection, completion-point enumeration) at increasing
+//! occupancy.
+
+use pats::bench::{bench_with_setup, section};
+use pats::resources::{CoreTimeline, SlotKind, Timeline};
+use pats::task::{TaskId, Window};
+use pats::time::{SimDuration, SimTime};
+
+fn filled_timeline(n: usize) -> Timeline {
+    let mut tl = Timeline::new();
+    for i in 0..n {
+        // 1 ms slots with 1 ms gaps.
+        let start = SimTime::from_micros(2_000 * i as u64);
+        tl.reserve(start, SimDuration::from_millis(1), SlotKind::StateUpdate, TaskId(i as u64))
+            .unwrap();
+    }
+    tl
+}
+
+fn filled_cores(n: usize) -> CoreTimeline {
+    let mut ct = CoreTimeline::new(4);
+    for i in 0..n {
+        let start = SimTime::from_secs_f64(18.0 * (i / 2) as f64);
+        ct.reserve(
+            Window::from_duration(start, SimDuration::from_secs_f64(17.0)),
+            2,
+            TaskId(i as u64),
+            start + SimDuration::from_secs_f64(60.0),
+            true,
+        )
+        .unwrap();
+    }
+    ct
+}
+
+fn main() {
+    section("link timeline: earliest_fit");
+    for n in [10usize, 100, 1_000, 10_000] {
+        let tl = filled_timeline(n);
+        let mut r = bench_with_setup(
+            &format!("earliest_fit/slots={n}"),
+            50,
+            2_000,
+            || (),
+            |_| tl.earliest_fit(SimTime::ZERO, SimDuration::from_micros(1_500)),
+        );
+        println!("{}", r.render());
+    }
+
+    section("link timeline: reserve + remove");
+    for n in [100usize, 1_000, 10_000] {
+        let mut r = bench_with_setup(
+            &format!("reserve_remove/slots={n}"),
+            10,
+            400,
+            || filled_timeline(n),
+            |mut tl| {
+                let start = tl.earliest_fit(SimTime::ZERO, SimDuration::from_micros(500));
+                tl.reserve(start, SimDuration::from_micros(500), SlotKind::PollMsg, TaskId(u64::MAX))
+                    .unwrap();
+                tl.remove_owner(TaskId(u64::MAX))
+            },
+        );
+        println!("{}", r.render());
+    }
+
+    section("core timeline: fits / preemption candidates / completion points");
+    for n in [8usize, 64, 512] {
+        let ct = filled_cores(n);
+        let probe = Window::new(SimTime::from_secs_f64(1.0), SimTime::from_secs_f64(18.0));
+        let mut r = bench_with_setup(
+            &format!("fits/slots={n}"),
+            50,
+            2_000,
+            || (),
+            |_| ct.fits(&probe, 1),
+        );
+        println!("{}", r.render());
+        let mut r = bench_with_setup(
+            &format!("preemption_candidates/slots={n}"),
+            50,
+            2_000,
+            || (),
+            |_| ct.preemption_candidates(&probe).len(),
+        );
+        println!("{}", r.render());
+        let mut r = bench_with_setup(
+            &format!("completion_points/slots={n}"),
+            50,
+            2_000,
+            || (),
+            |_| ct.completion_points(SimTime::ZERO, SimTime::from_secs_f64(1e6)).len(),
+        );
+        println!("{}", r.render());
+    }
+}

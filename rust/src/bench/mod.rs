@@ -1,0 +1,137 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warm-up + timed iterations, reporting mean / p50 / p99 / min per
+//! iteration. Used by the targets in `rust/benches/` (all `harness =
+//! false`).
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Result of one benchmark case.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    samples_ns: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.mean()
+    }
+
+    pub fn p50_ns(&mut self) -> f64 {
+        self.samples_ns.percentile(50.0)
+    }
+
+    pub fn p99_ns(&mut self) -> f64 {
+        self.samples_ns.percentile(99.0)
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns.min()
+    }
+
+    /// One aligned report line.
+    pub fn render(&mut self) -> String {
+        let (mean, p50, p99, min) =
+            (self.mean_ns(), self.p50_ns(), self.p99_ns(), self.min_ns());
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(p99),
+            fmt_ns(min),
+        )
+    }
+}
+
+/// Human-friendly nanosecond formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs. Each
+/// iteration gets fresh per-iteration state from `setup`.
+pub fn bench_with_setup<S, R>(
+    name: &str,
+    warmup: u32,
+    iters: u32,
+    mut setup: impl FnMut() -> S,
+    mut f: impl FnMut(S) -> R,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f(setup()));
+    }
+    let mut samples = Summary::new();
+    for _ in 0..iters {
+        let state = setup();
+        let t0 = Instant::now();
+        std::hint::black_box(f(state));
+        samples.add(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult { name: name.to_string(), iters, samples_ns: samples }
+}
+
+/// Time a closure with no per-iteration setup.
+pub fn bench<R>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> R) -> BenchResult {
+    bench_with_setup(name, warmup, iters, || (), |_| f())
+}
+
+/// Print a section header for a bench group.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut counter = 0u64;
+        let mut r = bench("spin", 2, 25, || {
+            counter += 1;
+            std::hint::black_box(counter)
+        });
+        assert_eq!(r.iters, 25);
+        assert_eq!(counter, 27, "warmup + iters all ran");
+        assert!(r.mean_ns() >= 0.0);
+        assert!(r.p99_ns() >= r.p50_ns());
+        assert!(r.render().contains("spin"));
+    }
+
+    #[test]
+    fn setup_not_timed() {
+        // A slow setup must not inflate the measured time.
+        let mut r = bench_with_setup(
+            "setup-heavy",
+            0,
+            10,
+            || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                7u64
+            },
+            |x| x * 2,
+        );
+        assert!(r.p50_ns() < 1_000_000.0, "p50 {} must be far below 2 ms", r.p50_ns());
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.000 s");
+    }
+}

@@ -1,0 +1,218 @@
+//! The controller (§3.3 "Request Processing").
+//!
+//! "Edge devices issue task requests to the controller which then allocates
+//! resources to process the task in the network. Incoming task placement
+//! requests ... are placed in an internal job queue upon arrival ...
+//! Messages are processed by priority and arrival time within their
+//! priority class. ... all requests and jobs in the queue are processed in
+//! a blocking sequential fashion."
+//!
+//! The controller is a serial resource: each job costs
+//! `controller_overhead_s` (REST decode + bookkeeping, §7.3) and jobs are
+//! admitted priority-first. [`Controller`] wraps a [`Policy`] +
+//! [`NetworkState`] and exposes the admission discipline; the simulation
+//! runner and the live `serve_cluster` example both drive it.
+
+use crate::config::SystemConfig;
+use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy};
+use crate::state::NetworkState;
+use crate::task::{
+    DeviceId, FrameId, LpRequest, Priority, RequestId, TaskId, TaskSpec,
+};
+use crate::time::{SimDuration, SimTime};
+
+/// Job priority classes in the controller queue: high-priority requests
+/// overtake queued low-priority work of the same arrival window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum JobClass {
+    High,
+    Low,
+}
+
+/// The master node.
+pub struct Controller<P: Policy> {
+    pub cfg: SystemConfig,
+    pub state: NetworkState,
+    pub policy: P,
+    /// The serial job queue is modelled by its busy horizon.
+    busy_until: SimTime,
+    /// Jobs admitted (for queue-pressure metrics).
+    pub jobs_processed: u64,
+}
+
+impl<P: Policy> Controller<P> {
+    pub fn new(cfg: SystemConfig, policy: P) -> Controller<P> {
+        let state = NetworkState::new(&cfg);
+        Controller { cfg, state, policy, busy_until: SimTime::ZERO, jobs_processed: 0 }
+    }
+
+    /// Admit a job arriving at `now`: it begins processing when the queue
+    /// drains and costs one controller overhead. Returns the decision time.
+    pub fn admit(&mut self, now: SimTime) -> SimTime {
+        let start = now.max(self.busy_until);
+        let done = start + SimDuration::from_secs_f64(self.cfg.controller_overhead_s);
+        self.busy_until = done;
+        self.jobs_processed += 1;
+        done
+    }
+
+    /// Register a freshly spawned high-priority (stage-2) task and run the
+    /// policy for it. Returns (decision time, outcome).
+    pub fn handle_hp_request(
+        &mut self,
+        frame: FrameId,
+        source: DeviceId,
+        now: SimTime,
+    ) -> (TaskId, SimTime, HpOutcome) {
+        let decision_t = self.admit(now);
+        let id = self.state.fresh_task_id();
+        self.state.register_task(TaskSpec {
+            id,
+            frame,
+            source,
+            priority: Priority::High,
+            deadline: now + SimDuration::from_secs_f64(self.cfg.hp_deadline_s),
+            spawn: now,
+            request: None,
+        });
+        let outcome = self.policy.allocate_hp(&mut self.state, &self.cfg, id, decision_t);
+        (id, decision_t, outcome)
+    }
+
+    /// Register a low-priority request of `n` DNN tasks (spawned by a
+    /// completed stage-2 task) and run the policy. The request deadline is
+    /// the frame deadline.
+    pub fn handle_lp_request(
+        &mut self,
+        frame: FrameId,
+        source: DeviceId,
+        n: u8,
+        frame_deadline: SimTime,
+        now: SimTime,
+    ) -> (RequestId, SimTime, LpOutcome) {
+        let decision_t = self.admit(now);
+        let rid = self.state.fresh_request_id();
+        let mut tasks = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let id = self.state.fresh_task_id();
+            self.state.register_task(TaskSpec {
+                id,
+                frame,
+                source,
+                priority: Priority::Low,
+                deadline: frame_deadline,
+                spawn: now,
+                request: Some(rid),
+            });
+            tasks.push(id);
+        }
+        self.state.register_request(LpRequest {
+            id: rid,
+            frame,
+            source,
+            deadline: frame_deadline,
+            spawn: now,
+            tasks,
+        });
+        let outcome = self.policy.allocate_lp(&mut self.state, &self.cfg, rid, decision_t);
+        (rid, decision_t, outcome)
+    }
+
+    /// A device reported a task result (state update, §3.1). Returns any
+    /// follow-on placements the policy made (workstealers steal here).
+    pub fn handle_state_update(
+        &mut self,
+        task: TaskId,
+        completed: bool,
+        now: SimTime,
+    ) -> Vec<LpPlacement> {
+        let decision_t = self.admit(now);
+        if completed {
+            self.state.complete_task(task, decision_t);
+        } else {
+            self.state
+                .fail_task(task, crate::task::FailReason::Violated, decision_t);
+        }
+        self.policy.on_task_end(&mut self.state, &self.cfg, task, decision_t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::PatsScheduler;
+
+    fn controller() -> Controller<PatsScheduler> {
+        let cfg = SystemConfig::default();
+        let policy = PatsScheduler::from_config(&cfg);
+        Controller::new(cfg, policy)
+    }
+
+    #[test]
+    fn admission_serialises_jobs() {
+        let mut c = controller();
+        let t1 = c.admit(SimTime::ZERO);
+        let t2 = c.admit(SimTime::ZERO); // same arrival: queues behind
+        assert!(t2 > t1);
+        assert_eq!(
+            t2.since(t1),
+            SimDuration::from_secs_f64(c.cfg.controller_overhead_s)
+        );
+        // A job arriving after the queue drained is not delayed.
+        let later = SimTime::from_secs_f64(10.0);
+        let t3 = c.admit(later);
+        assert_eq!(
+            t3,
+            later + SimDuration::from_secs_f64(c.cfg.controller_overhead_s)
+        );
+        assert_eq!(c.jobs_processed, 3);
+    }
+
+    #[test]
+    fn hp_request_end_to_end() {
+        let mut c = controller();
+        let (id, decision_t, out) =
+            c.handle_hp_request(FrameId(0), DeviceId(0), SimTime::ZERO);
+        assert!(out.allocated());
+        assert!(decision_t > SimTime::ZERO, "controller overhead applies");
+        assert!(out.window.unwrap().start >= decision_t);
+        assert_eq!(c.state.task(id).unwrap().spec.priority, Priority::High);
+    }
+
+    #[test]
+    fn lp_request_registers_set() {
+        let mut c = controller();
+        let deadline = SimTime::from_secs_f64(18.86);
+        let (rid, _, out) =
+            c.handle_lp_request(FrameId(0), DeviceId(1), 3, deadline, SimTime::from_millis(1200));
+        assert_eq!(c.state.request(rid).unwrap().tasks.len(), 3);
+        assert!(out.fully_allocated());
+        for p in &out.placements {
+            assert!(p.window.end <= deadline);
+        }
+    }
+
+    #[test]
+    fn state_update_completes_task() {
+        let mut c = controller();
+        let (id, _, out) = c.handle_hp_request(FrameId(0), DeviceId(0), SimTime::ZERO);
+        let end = out.window.unwrap().end;
+        c.handle_state_update(id, true, end);
+        assert_eq!(
+            c.state.task(id).unwrap().state,
+            crate::task::TaskState::Completed
+        );
+    }
+
+    #[test]
+    fn violation_state_update_fails_task() {
+        let mut c = controller();
+        let (id, _, out) = c.handle_hp_request(FrameId(0), DeviceId(0), SimTime::ZERO);
+        let end = out.window.unwrap().end;
+        c.handle_state_update(id, false, end);
+        assert_eq!(
+            c.state.task(id).unwrap().state,
+            crate::task::TaskState::Failed(crate::task::FailReason::Violated)
+        );
+    }
+}

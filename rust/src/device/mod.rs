@@ -1,0 +1,166 @@
+//! Edge-device execution model.
+//!
+//! The controller plans with *padded* slots; devices experience *sampled*
+//! reality. This module owns the sampling: actual processing durations
+//! (Gaussian around the benchmarked mean) and the device-side violation
+//! rule — "in the event that a task overruns its allotted window the edge
+//! device will terminate it, issuing a task violation message to the
+//! controller" (§7.3).
+//!
+//! σ = `noise_frac` × the slot padding, so overruns are possible but rare
+//! (the paper attributes ~1 % of high-priority losses to runtime
+//! deviations).
+
+use crate::config::SystemConfig;
+use crate::task::Window;
+use crate::time::{SimDuration, SimTime};
+use crate::util::rng::Rng;
+
+/// Samples "what actually happened" on a device.
+#[derive(Debug)]
+pub struct ExecutionModel {
+    hp_mean_s: f64,
+    hp_sigma_s: f64,
+    lp_mean_2c_s: f64,
+    lp_mean_4c_s: f64,
+    lp_sigma_s: f64,
+}
+
+impl ExecutionModel {
+    pub fn new(cfg: &SystemConfig) -> ExecutionModel {
+        ExecutionModel {
+            hp_mean_s: cfg.hp_proc_s,
+            hp_sigma_s: cfg.hp_proc_std_s * cfg.noise_frac,
+            lp_mean_2c_s: cfg.lp_proc_2core_s + cfg.lp_live_extra_s,
+            lp_mean_4c_s: cfg.lp_proc_4core_s + cfg.lp_live_extra_s,
+            lp_sigma_s: cfg.lp_proc_std_s * cfg.noise_frac,
+        }
+    }
+
+    /// Actual duration of a high-priority (stage-2) execution.
+    pub fn sample_hp(&self, rng: &mut Rng) -> SimDuration {
+        let s = rng.normal(self.hp_mean_s, self.hp_sigma_s);
+        SimDuration::from_secs_f64(s.max(self.hp_mean_s * 0.5))
+    }
+
+    /// Actual duration of a low-priority DNN at `cores`.
+    pub fn sample_lp(&self, cores: u32, rng: &mut Rng) -> SimDuration {
+        let mean = if cores >= 4 { self.lp_mean_4c_s } else { self.lp_mean_2c_s };
+        let s = rng.normal(mean, self.lp_sigma_s);
+        SimDuration::from_secs_f64(s.max(mean * 0.5))
+    }
+}
+
+/// Outcome of running a task inside its reserved window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecOutcome {
+    /// Finished at the contained time.
+    Completed(SimTime),
+    /// Overran the window; the device terminated it at `window.end`.
+    Violated,
+}
+
+/// Apply the §7.3 device rule: execution begins at the later of the window
+/// start and the input's actual arrival, and must finish inside the window.
+pub fn execute_in_window(
+    window: &Window,
+    input_arrival: Option<SimTime>,
+    actual: SimDuration,
+) -> ExecOutcome {
+    let begin = match input_arrival {
+        Some(arrival) => arrival.max(window.start),
+        None => window.start,
+    };
+    let done = begin + actual;
+    if done <= window.end {
+        ExecOutcome::Completed(done)
+    } else {
+        ExecOutcome::Violated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> (SystemConfig, ExecutionModel) {
+        let cfg = SystemConfig::default();
+        let m = ExecutionModel::new(&cfg);
+        (cfg, m)
+    }
+
+    #[test]
+    fn hp_samples_center_on_benchmark() {
+        let (cfg, m) = model();
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| m.sample_hp(&mut rng).as_secs_f64()).sum::<f64>() / n as f64;
+        assert!((mean - cfg.hp_proc_s).abs() < 0.005, "mean {mean}");
+    }
+
+    #[test]
+    fn lp_4core_faster_than_2core() {
+        let (_, m) = model();
+        let mut rng = Rng::seed_from_u64(2);
+        let two = m.sample_lp(2, &mut rng);
+        let four = m.sample_lp(4, &mut rng);
+        // Means differ by >5 s; noise σ is ~0.2 s, so ordering holds.
+        assert!(four < two);
+    }
+
+    #[test]
+    fn overrun_rate_is_rare_but_nonzero() {
+        // The padded slot absorbs most noise: overrun ≈ P(Z > 1/noise_frac).
+        let (cfg, m) = model();
+        let mut rng = Rng::seed_from_u64(3);
+        let slot = cfg.hp_slot();
+        let n = 50_000;
+        let over = (0..n).filter(|_| m.sample_hp(&mut rng) > slot).count();
+        let rate = over as f64 / n as f64;
+        assert!(rate > 0.0001 && rate < 0.03, "overrun rate {rate}");
+    }
+
+    #[test]
+    fn execute_within_window_completes() {
+        let w = Window::new(SimTime::from_millis(100), SimTime::from_millis(200));
+        assert_eq!(
+            execute_in_window(&w, None, SimDuration::from_millis(80)),
+            ExecOutcome::Completed(SimTime::from_millis(180))
+        );
+    }
+
+    #[test]
+    fn overrun_is_violated() {
+        let w = Window::new(SimTime::from_millis(100), SimTime::from_millis(200));
+        assert_eq!(
+            execute_in_window(&w, None, SimDuration::from_millis(150)),
+            ExecOutcome::Violated
+        );
+    }
+
+    #[test]
+    fn late_input_eats_the_padding() {
+        let w = Window::new(SimTime::from_millis(100), SimTime::from_millis(200));
+        // Input arrives 60 ms into the window: a 90 ms execution overruns.
+        assert_eq!(
+            execute_in_window(&w, Some(SimTime::from_millis(160)), SimDuration::from_millis(90)),
+            ExecOutcome::Violated
+        );
+        // Early input is clamped to the window start.
+        assert_eq!(
+            execute_in_window(&w, Some(SimTime::from_millis(10)), SimDuration::from_millis(90)),
+            ExecOutcome::Completed(SimTime::from_millis(190))
+        );
+    }
+
+    #[test]
+    fn durations_never_absurdly_small() {
+        let (cfg, m) = model();
+        let mut rng = Rng::seed_from_u64(4);
+        for _ in 0..10_000 {
+            assert!(m.sample_hp(&mut rng).as_secs_f64() >= cfg.hp_proc_s * 0.5);
+            assert!(m.sample_lp(4, &mut rng).as_secs_f64() >= cfg.lp_proc_4core_s * 0.5);
+        }
+    }
+}

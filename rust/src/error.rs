@@ -1,0 +1,45 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the PATS library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration file / value problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Trace-file parse problems.
+    #[error("trace error: {0}")]
+    Trace(String),
+
+    /// A scheduling request that cannot be satisfied (not a bug: the paper's
+    /// algorithms legitimately fail to allocate under load).
+    #[error("allocation failed: {0}")]
+    Allocation(String),
+
+    /// Violation of an internal invariant — always a bug.
+    #[error("invariant violated: {0}")]
+    Invariant(String),
+
+    /// Artifact registry / PJRT runtime problems.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// XLA/PJRT errors from the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O errors.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

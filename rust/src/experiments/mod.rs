@@ -1,0 +1,596 @@
+//! Experiment harness: regenerates every table and figure in the paper's
+//! evaluation (§6) and renders them side-by-side with the paper's reported
+//! numbers.
+//!
+//! Scenario labels follow the paper's Table 1:
+//!
+//! | label   | meaning                                            |
+//! |---------|----------------------------------------------------|
+//! | UPS     | uniform, scheduler, preemption                     |
+//! | UNPS    | uniform, scheduler, no preemption                  |
+//! | WPS_n   | weighted-n, scheduler, preemption                  |
+//! | WNPS_4  | weighted-4, scheduler, no preemption               |
+//! | CPW/CNPW| weighted-4, centralised workstealer ± preemption   |
+//! | DPW/DNPW| weighted-4, decentralised workstealer ± preemption |
+
+use std::fmt::Write as _;
+
+use crate::config::{Policy as PolicyKind, SystemConfig};
+use crate::metrics::ScenarioMetrics;
+use crate::sim::run_scenario;
+use crate::trace::{Distribution, Trace};
+use crate::util::json::Json;
+
+/// One experiment scenario (a row of the paper's Table 1).
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub label: &'static str,
+    pub dist: Distribution,
+    pub policy: PolicyKind,
+    pub preemption: bool,
+}
+
+/// The paper's full scenario matrix.
+pub fn scenario_matrix() -> Vec<Scenario> {
+    use Distribution::*;
+    use PolicyKind::*;
+    vec![
+        Scenario { label: "UPS", dist: Uniform, policy: Scheduler, preemption: true },
+        Scenario { label: "UNPS", dist: Uniform, policy: Scheduler, preemption: false },
+        Scenario { label: "WPS_1", dist: Weighted(1), policy: Scheduler, preemption: true },
+        Scenario { label: "WPS_2", dist: Weighted(2), policy: Scheduler, preemption: true },
+        Scenario { label: "WPS_3", dist: Weighted(3), policy: Scheduler, preemption: true },
+        Scenario { label: "WPS_4", dist: Weighted(4), policy: Scheduler, preemption: true },
+        Scenario { label: "WNPS_4", dist: Weighted(4), policy: Scheduler, preemption: false },
+        Scenario { label: "CPW", dist: Weighted(4), policy: CentralWorkstealer, preemption: true },
+        Scenario {
+            label: "CNPW",
+            dist: Weighted(4),
+            policy: CentralWorkstealer,
+            preemption: false,
+        },
+        Scenario { label: "DPW", dist: Weighted(4), policy: DecentralWorkstealer, preemption: true },
+        Scenario {
+            label: "DNPW",
+            dist: Weighted(4),
+            policy: DecentralWorkstealer,
+            preemption: false,
+        },
+    ]
+}
+
+/// Paper-reported value for a (figure, label) pair, when the text gives one.
+fn paper(metric: &str, label: &str) -> Option<f64> {
+    let v = match (metric, label) {
+        // Fig 2 — frame completion %.
+        ("frames", "UPS") => 50.0,
+        ("frames", "UNPS") => 45.0,
+        ("frames", "WPS_4") => 32.4,
+        ("frames", "WNPS_4") => 29.36,
+        ("frames", "CPW") => 9.65,
+        ("frames", "CNPW") => 9.23,
+        ("frames", "DPW") => 8.96,
+        ("frames", "DNPW") => 5.64,
+        // Fig 3 — high-priority completion %.
+        ("hp", "UPS") => 99.0,
+        ("hp", "UNPS") => 80.0,
+        ("hp", "WPS_1") | ("hp", "WPS_2") | ("hp", "WPS_3") | ("hp", "WPS_4") => 99.0,
+        ("hp", "WNPS_4") => 72.1,
+        ("hp", "CNPW") => 89.56,
+        ("hp", "DNPW") => 76.75,
+        ("hp", "CPW") | ("hp", "DPW") => 99.0,
+        // Fig 4 — raw LP completion %.
+        ("lp", "WPS_1") => 71.71,
+        ("lp", "WPS_2") => 72.07,
+        ("lp", "WPS_3") => 60.78,
+        ("lp", "WPS_4") => 51.73,
+        ("lp", "WNPS_4") => 63.31,
+        ("lp", "CPW") => 15.65,
+        ("lp", "CNPW") => 13.76,
+        ("lp", "DPW") => 14.20,
+        ("lp", "DNPW") => 11.36,
+        // Fig 5 — per-request set completion %.
+        ("lp_set", "WPS_1") => 75.0,
+        ("lp_set", "WPS_2") => 75.0,
+        // Table 2 — LP tasks generated.
+        ("lp_gen", "UPS") => 8640.0,
+        ("lp_gen", "UNPS") => 6961.0,
+        ("lp_gen", "WPS_1") => 9296.0,
+        ("lp_gen", "WPS_2") => 10372.0,
+        ("lp_gen", "WPS_3") => 12973.0,
+        ("lp_gen", "WPS_4") => 13941.0,
+        ("lp_gen", "WNPS_4") => 9966.0,
+        ("lp_gen", "CPW") => 13800.0,
+        ("lp_gen", "CNPW") => 12414.0,
+        ("lp_gen", "DPW") => 13935.0,
+        ("lp_gen", "DNPW") => 10671.0,
+        // Table 3 — preemption reallocation failures / successes.
+        ("realloc_fail", "UPS") => 822.0,
+        ("realloc_ok", "UPS") => 1.0,
+        ("realloc_fail", "WPS_1") => 855.0,
+        ("realloc_ok", "WPS_1") => 0.0,
+        ("realloc_fail", "WPS_2") => 664.0,
+        ("realloc_ok", "WPS_2") => 2.0,
+        ("realloc_fail", "WPS_3") => 807.0,
+        ("realloc_ok", "WPS_3") => 0.0,
+        ("realloc_fail", "WPS_4") => 601.0,
+        ("realloc_ok", "WPS_4") => 1.0,
+        ("realloc_fail", "DPW") => 1256.0,
+        ("realloc_ok", "DPW") => 1.0,
+        // Fig 9 — HP allocation latency (ms) on the paper's M1 controller.
+        ("hp_ms", "UNPS") => 1.0,
+        ("hp_ms", "UPS") => 8.0,
+        ("hp_ms", "WPS_1") => 12.29,
+        ("hp_ms", "WPS_2") => 8.50,
+        ("hp_ms", "WPS_3") => 10.36,
+        ("realloc_ms", "UPS") => 365.0,
+        ("realloc_ms", "WPS_1") => 271.52,
+        ("realloc_ms", "WPS_2") => 263.42,
+        ("realloc_ms", "WPS_3") => 251.43,
+        // Fig 10 — LP allocation latency (ms).
+        ("lp_ms", "UPS") => 148.0,
+        ("lp_ms", "UNPS") => 150.0,
+        _ => return None,
+    };
+    Some(v)
+}
+
+fn fmt_paper(metric: &str, label: &str) -> String {
+    match paper(metric, label) {
+        Some(v) => format!("{v:.2}"),
+        None => "—".to_string(),
+    }
+}
+
+/// All scenario results for one experiment campaign.
+pub struct ExperimentSet {
+    pub cfg: SystemConfig,
+    scenarios: Vec<Scenario>,
+    results: Vec<ScenarioMetrics>,
+    /// Table-4 accounting per distribution actually used.
+    traces: Vec<(String, (u64, u64, u64))>,
+}
+
+impl ExperimentSet {
+    /// Run every scenario in the matrix on `base` (same seed ⇒ same traces
+    /// for paired preemption/non-preemption comparisons).
+    pub fn run(base: &SystemConfig) -> ExperimentSet {
+        Self::run_matrix(base, scenario_matrix())
+    }
+
+    /// Run a chosen subset of scenarios.
+    pub fn run_matrix(base: &SystemConfig, scenarios: Vec<Scenario>) -> ExperimentSet {
+        let mut results = Vec::with_capacity(scenarios.len());
+        let mut traces: Vec<(String, (u64, u64, u64))> = Vec::new();
+        for sc in &scenarios {
+            let mut cfg = base.clone();
+            cfg.policy = sc.policy;
+            cfg.preemption = sc.preemption;
+            let trace = Trace::generate(sc.dist, cfg.devices, cfg.frames, cfg.seed);
+            let name = sc.dist.name();
+            if !traces.iter().any(|(n, _)| n == &name) {
+                traces.push((name, trace.potential_counts()));
+            }
+            let result = run_scenario(&cfg, &trace, sc.label);
+            log::info!("{}", result.metrics.label);
+            results.push(result.metrics);
+        }
+        // Table 4 also lists the network-slice trace.
+        let slice = Trace::generate(Distribution::NetworkSlice, base.devices, 96, base.seed);
+        traces.push(("network-slice".into(), slice.potential_counts()));
+        ExperimentSet { cfg: base.clone(), scenarios, results, traces }
+    }
+
+    fn idx(&self, label: &str) -> Option<usize> {
+        self.scenarios.iter().position(|s| s.label == label)
+    }
+
+    pub fn metrics(&self, label: &str) -> Option<&ScenarioMetrics> {
+        self.idx(label).map(|i| &self.results[i])
+    }
+
+    fn metrics_mut(&mut self, label: &str) -> Option<&mut ScenarioMetrics> {
+        let i = self.idx(label)?;
+        Some(&mut self.results[i])
+    }
+
+    pub fn labels(&self) -> Vec<&'static str> {
+        self.scenarios.iter().map(|s| s.label).collect()
+    }
+
+    // ---- figures -------------------------------------------------------
+
+    /// Fig 2a: frame completion by solution (weighted-4 + uniform).
+    pub fn fig2a(&self) -> String {
+        let mut out = String::from(
+            "## Fig 2a — Frame completion by solution\n\n\
+             | scenario | frames completed | % (ours) | % (paper) |\n|---|---|---|---|\n",
+        );
+        for label in ["UPS", "UNPS", "WPS_4", "WNPS_4", "CPW", "CNPW", "DPW", "DNPW"] {
+            if let Some(m) = self.metrics(label) {
+                let _ = writeln!(
+                    out,
+                    "| {label} | {}/{} | {:.2} | {} |",
+                    m.frames_completed,
+                    m.frames_total,
+                    m.frame_completion_pct(),
+                    fmt_paper("frames", label),
+                );
+            }
+        }
+        out
+    }
+
+    /// Fig 2b: frames completed under increasing weighted load.
+    pub fn fig2b(&self) -> String {
+        let mut out = String::from(
+            "## Fig 2b — Scheduler (preemption) frame completion vs load\n\n\
+             | scenario | % completed | Δ vs previous |\n|---|---|---|\n",
+        );
+        let mut prev: Option<f64> = None;
+        for label in ["WPS_1", "WPS_2", "WPS_3", "WPS_4"] {
+            if let Some(m) = self.metrics(label) {
+                let pct = m.frame_completion_pct();
+                let delta = prev.map(|p| format!("{:+.2}", pct - p)).unwrap_or_else(|| "—".into());
+                let _ = writeln!(out, "| {label} | {pct:.2} | {delta} |");
+                prev = Some(pct);
+            }
+        }
+        out
+    }
+
+    /// Fig 3a/3b: high-priority completion (+ share via preemption).
+    pub fn fig3(&self) -> String {
+        let mut out = String::from(
+            "## Fig 3 — High-priority completion\n\n\
+             | scenario | completed | % (ours) | % via preemption | % (paper) |\n|---|---|---|---|---|\n",
+        );
+        for label in self.labels() {
+            if let Some(m) = self.metrics(label) {
+                let _ = writeln!(
+                    out,
+                    "| {label} | {}/{} | {:.2} | {:.2} | {} |",
+                    m.hp_completed,
+                    m.hp_generated,
+                    m.hp_completion_pct(),
+                    m.hp_via_preemption_pct(),
+                    fmt_paper("hp", label),
+                );
+            }
+        }
+        out
+    }
+
+    /// Fig 4a/4b: raw low-priority completion.
+    pub fn fig4(&self) -> String {
+        let mut out = String::from(
+            "## Fig 4 — Low-priority task completion\n\n\
+             | scenario | completed | % (ours) | % (paper) |\n|---|---|---|---|\n",
+        );
+        for label in self.labels() {
+            if let Some(m) = self.metrics(label) {
+                let _ = writeln!(
+                    out,
+                    "| {label} | {}/{} | {:.2} | {} |",
+                    m.lp_completed,
+                    m.lp_generated,
+                    m.lp_completion_pct(),
+                    fmt_paper("lp", label),
+                );
+            }
+        }
+        out
+    }
+
+    /// Fig 5a/5b: per-request set completion.
+    pub fn fig5(&mut self) -> String {
+        let mut out = String::from(
+            "## Fig 5 — Low-priority completion per request\n\n\
+             | scenario | mean % of set completed | full sets | % (paper) |\n|---|---|---|---|\n",
+        );
+        for label in self.labels() {
+            if let Some(m) = self.metrics_mut(label) {
+                let per_req = m.lp_per_request_pct();
+                let (sets_done, sets_total) = (m.lp_sets_completed, m.lp_sets_total);
+                let _ = writeln!(
+                    out,
+                    "| {label} | {per_req:.2} | {sets_done}/{sets_total} | {} |",
+                    fmt_paper("lp_set", label),
+                );
+            }
+        }
+        out
+    }
+
+    /// Fig 6a/6b: offloaded low-priority completion.
+    pub fn fig6(&self) -> String {
+        let mut out = String::from(
+            "## Fig 6 — Offloaded low-priority completion\n\n\
+             | scenario | offloaded completed | % |\n|---|---|---|\n",
+        );
+        for label in self.labels() {
+            if let Some(m) = self.metrics(label) {
+                let _ = writeln!(
+                    out,
+                    "| {label} | {}/{} | {:.2} |",
+                    m.lp_offloaded_completed,
+                    m.lp_offloaded,
+                    m.lp_offloaded_completion_pct(),
+                );
+            }
+        }
+        out
+    }
+
+    /// Fig 7a/7b: preempted tasks by partition configuration.
+    pub fn fig7(&self) -> String {
+        let mut out = String::from(
+            "## Fig 7 — Preempted tasks by core configuration\n\n\
+             | scenario | 2-core | 4-core | % at 4-core |\n|---|---|---|---|\n",
+        );
+        for label in self.labels() {
+            if let Some(m) = self.metrics(label) {
+                if m.preemptions == 0 {
+                    continue;
+                }
+                let two = m.preempted_by_cores.get(&2).copied().unwrap_or(0);
+                let four = m.preempted_by_cores.get(&4).copied().unwrap_or(0);
+                let _ = writeln!(
+                    out,
+                    "| {label} | {two} | {four} | {:.2} |",
+                    crate::util::stats::pct(four, two + four),
+                );
+            }
+        }
+        out
+    }
+
+    /// Fig 8: core allocation census, local vs offloaded.
+    pub fn fig8(&self) -> String {
+        let mut out = String::from(
+            "## Fig 8 — Core allocation of local and offloaded tasks\n\n\
+             | scenario | local 2c | local 4c | offloaded 2c | offloaded 4c |\n|---|---|---|---|---|\n",
+        );
+        for label in ["WPS_4", "WNPS_4", "CPW", "CNPW", "DPW", "DNPW"] {
+            if let Some(m) = self.metrics(label) {
+                let g = |map: &std::collections::BTreeMap<u32, u64>, k: u32| {
+                    map.get(&k).copied().unwrap_or(0)
+                };
+                let _ = writeln!(
+                    out,
+                    "| {label} | {} | {} | {} | {} |",
+                    g(&m.core_alloc_local, 2),
+                    g(&m.core_alloc_local, 4),
+                    g(&m.core_alloc_offloaded, 2),
+                    g(&m.core_alloc_offloaded, 4),
+                );
+            }
+        }
+        out
+    }
+
+    /// Fig 9a/9b: high-priority allocation latency.
+    ///
+    /// Absolute values are incomparable with the paper (Rust in-process vs
+    /// C++ behind REST on an M1); the *shape* — growth with load and the
+    /// preemption path being far slower than the plain path — is the claim.
+    pub fn fig9(&mut self) -> String {
+        let mut out = String::from(
+            "## Fig 9 — High-priority allocation time (ms)\n\n\
+             | scenario | initial mean | initial p99 | preemption-path mean | paper initial | paper realloc |\n\
+             |---|---|---|---|---|---|\n",
+        );
+        for label in self.labels() {
+            let (a, a99, b) = match self.metrics_mut(label) {
+                Some(m) => (
+                    m.hp_alloc_ms.mean(),
+                    m.hp_alloc_ms.percentile(99.0),
+                    m.hp_preempt_path_ms.mean(),
+                ),
+                None => continue,
+            };
+            let _ = writeln!(
+                out,
+                "| {label} | {a:.4} | {a99:.4} | {b:.4} | {} | {} |",
+                fmt_paper("hp_ms", label),
+                fmt_paper("realloc_ms", label),
+            );
+        }
+        out
+    }
+
+    /// Fig 10a/10b: low-priority allocation + reallocation latency.
+    pub fn fig10(&mut self) -> String {
+        let mut out = String::from(
+            "## Fig 10 — Low-priority allocation time (ms)\n\n\
+             | scenario | alloc mean | alloc p99 | realloc mean | paper alloc |\n|---|---|---|---|---|\n",
+        );
+        for label in self.labels() {
+            let (a, a99, r) = match self.metrics_mut(label) {
+                Some(m) => (
+                    m.lp_alloc_ms.mean(),
+                    m.lp_alloc_ms.percentile(99.0),
+                    m.lp_realloc_ms.mean(),
+                ),
+                None => continue,
+            };
+            let _ = writeln!(
+                out,
+                "| {label} | {a:.4} | {a99:.4} | {r:.4} | {} |",
+                fmt_paper("lp_ms", label),
+            );
+        }
+        out
+    }
+
+    /// Table 2: total low-priority tasks generated.
+    pub fn table2(&self) -> String {
+        let mut out = String::from(
+            "## Table 2 — Low-priority tasks generated\n\n\
+             | scenario | generated (ours) | generated (paper) |\n|---|---|---|\n",
+        );
+        for label in self.labels() {
+            if let Some(m) = self.metrics(label) {
+                let _ = writeln!(
+                    out,
+                    "| {label} | {} | {} |",
+                    m.lp_generated,
+                    fmt_paper("lp_gen", label),
+                );
+            }
+        }
+        out
+    }
+
+    /// Table 3: post-preemption reallocation outcomes.
+    pub fn table3(&self) -> String {
+        let mut out = String::from(
+            "## Table 3 — Post-preemption reallocation\n\n\
+             | scenario | failure (ours) | success (ours) | failure (paper) | success (paper) |\n\
+             |---|---|---|---|---|\n",
+        );
+        for label in self.labels() {
+            if let Some(m) = self.metrics(label) {
+                if m.preemptions == 0 {
+                    continue;
+                }
+                let _ = writeln!(
+                    out,
+                    "| {label} | {} | {} | {} | {} |",
+                    m.realloc_failure,
+                    m.realloc_success,
+                    fmt_paper("realloc_fail", label),
+                    fmt_paper("realloc_ok", label),
+                );
+            }
+        }
+        out
+    }
+
+    /// Table 4: potential task counts per trace.
+    pub fn table4(&self) -> String {
+        let mut out = String::from(
+            "## Table 4 — Potential task counts by trace\n\n\
+             | trace | potential LP | potential HP | device-frames |\n|---|---|---|---|\n",
+        );
+        for (name, (lp, hp, frames)) in &self.traces {
+            let _ = writeln!(out, "| {name} | {lp} | {hp} | {frames} |");
+        }
+        out
+    }
+
+    /// The complete markdown report (every figure + table).
+    pub fn render_all(&mut self) -> String {
+        let mut out = format!(
+            "# PATS experiment report\n\n\
+             device-frames per scenario: {} | seed: {} | throughput: {} MB/s | \
+             preemption-scheduler matrix per paper Table 1\n\n",
+            self.cfg.frames, self.cfg.seed, self.cfg.throughput_mbps
+        );
+        out.push_str(&self.fig2a());
+        out.push('\n');
+        out.push_str(&self.fig2b());
+        out.push('\n');
+        out.push_str(&self.fig3());
+        out.push('\n');
+        out.push_str(&self.fig4());
+        out.push('\n');
+        out.push_str(&self.fig5());
+        out.push('\n');
+        out.push_str(&self.fig6());
+        out.push('\n');
+        out.push_str(&self.fig7());
+        out.push('\n');
+        out.push_str(&self.fig8());
+        out.push('\n');
+        out.push_str(&self.fig9());
+        out.push('\n');
+        out.push_str(&self.fig10());
+        out.push('\n');
+        out.push_str(&self.table2());
+        out.push('\n');
+        out.push_str(&self.table3());
+        out.push('\n');
+        out.push_str(&self.table4());
+        out
+    }
+
+    /// Machine-readable dump of every scenario.
+    pub fn to_json(&mut self) -> Json {
+        let mut arr = Vec::new();
+        for i in 0..self.results.len() {
+            arr.push(self.results[i].to_json());
+        }
+        Json::obj()
+            .with("frames", self.cfg.frames)
+            .with("seed", self.cfg.seed)
+            .with("scenarios", Json::Arr(arr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_set() -> ExperimentSet {
+        let mut cfg = SystemConfig::default();
+        cfg.frames = 80;
+        let matrix = vec![
+            scenario_matrix()[0], // UPS
+            scenario_matrix()[1], // UNPS
+            scenario_matrix()[7], // CPW
+        ];
+        ExperimentSet::run_matrix(&cfg, matrix)
+    }
+
+    #[test]
+    fn matrix_matches_table1() {
+        let m = scenario_matrix();
+        assert_eq!(m.len(), 11);
+        let labels: Vec<&str> = m.iter().map(|s| s.label).collect();
+        for l in ["UPS", "UNPS", "WPS_1", "WPS_4", "WNPS_4", "CPW", "CNPW", "DPW", "DNPW"] {
+            assert!(labels.contains(&l), "missing {l}");
+        }
+    }
+
+    #[test]
+    fn paper_reference_values_present() {
+        assert_eq!(paper("frames", "WPS_4"), Some(32.4));
+        assert_eq!(paper("lp_gen", "DNPW"), Some(10671.0));
+        assert_eq!(paper("frames", "nonexistent"), None);
+        assert_eq!(fmt_paper("frames", "nonexistent"), "—");
+    }
+
+    #[test]
+    fn small_campaign_renders_every_section() {
+        let mut set = small_set();
+        let report = set.render_all();
+        for section in [
+            "Fig 2a", "Fig 2b", "Fig 3", "Fig 4", "Fig 5", "Fig 6", "Fig 7", "Fig 8",
+            "Fig 9", "Fig 10", "Table 2", "Table 3", "Table 4",
+        ] {
+            assert!(report.contains(section), "missing {section}");
+        }
+        assert!(report.contains("UPS"));
+        // Table 4 always includes the network-slice trace.
+        assert!(report.contains("network-slice"));
+    }
+
+    #[test]
+    fn json_dump_covers_all_scenarios() {
+        let mut set = small_set();
+        let j = set.to_json();
+        let Json::Arr(scenarios) = j.get("scenarios").unwrap() else {
+            panic!("scenarios not an array");
+        };
+        assert_eq!(scenarios.len(), 3);
+    }
+
+    #[test]
+    fn metrics_lookup_by_label() {
+        let set = small_set();
+        assert!(set.metrics("UPS").is_some());
+        assert!(set.metrics("WPS_9").is_none());
+        assert_eq!(set.metrics("UPS").unwrap().frames_total, 80);
+    }
+}

@@ -1,0 +1,58 @@
+//! # PATS — Preemption-Aware Task Scheduling for edge DNN inference offloading
+//!
+//! A from-scratch reproduction of *"Preemption Aware Task Scheduling for
+//! Priority and Deadline Constrained DNN Inference Task Offloading in
+//! Homogeneous Mobile-Edge Networks"* (Cotter et al., CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — dependency-free substrates (PRNG, stats, JSON, TOML, CLI,
+//!   property-testing, logging) built in-tree because the build is offline.
+//! * [`time`] — simulation time, virtual/real clocks, NTP-style skew model.
+//! * [`config`] — every constant the paper reports, TOML-overridable.
+//! * [`net`] — the star-topology shared wireless link: message catalogue,
+//!   throughput estimation (static + EMA), jitter padding.
+//! * [`resources`] — time-slotted reservation calendars for the link and for
+//!   per-device CPU cores (variable-length slots, per the paper §3).
+//! * [`task`] — frames, pipeline stages, priorities, deadlines, partition
+//!   configurations, request sets.
+//! * [`state`] — the controller's tracked view of the network.
+//! * [`scheduler`] — **the paper's contribution**: the high-priority
+//!   allocation algorithm (± preemption), the low-priority time-point search
+//!   with partial allocation and the improvement pass, and the preemption
+//!   mechanism with victim selection + reallocation.
+//! * [`workstealer`] — centralised and decentralised baselines (± preemption).
+//! * [`coordinator`] — the controller: job queue, message processing,
+//!   master–worker orchestration.
+//! * [`device`] — edge-device model: inference managers, violations.
+//! * [`pipeline`] — the three-stage waste-classification pipeline lifecycle.
+//! * [`trace`] — trace-file workload format and generators.
+//! * [`sim`] — discrete-event engine + scenario runner.
+//! * [`metrics`] — counters and report rendering for every figure/table.
+//! * [`runtime`] — PJRT (XLA) execution of AOT-compiled artifacts, plus the
+//!   Rust side of horizontal partitioning (tile/halo/stitch).
+//! * [`experiments`] — regenerates every table and figure in the paper.
+//! * [`bench`] — micro-benchmark harness (offline criterion replacement).
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod error;
+pub mod experiments;
+pub mod metrics;
+pub mod net;
+pub mod pipeline;
+pub mod resources;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod state;
+pub mod task;
+pub mod time;
+pub mod trace;
+pub mod util;
+pub mod workstealer;
+
+pub use error::{Error, Result};

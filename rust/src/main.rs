@@ -1,0 +1,198 @@
+//! `pats` — the PATS command-line launcher.
+//!
+//! Subcommands:
+//!
+//! * `experiments` — run the full scenario matrix and regenerate every
+//!   table/figure of the paper (markdown + JSON).
+//! * `sim`         — run one scenario and print its metrics.
+//! * `trace-gen`   — generate a workload trace file.
+//! * `check`       — load the AOT artifacts and run one frame end-to-end
+//!   through the three-stage pipeline (PJRT smoke test).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pats::config::{Policy as PolicyKind, SystemConfig};
+use pats::experiments::ExperimentSet;
+use pats::runtime::{partition, Engine, Tensor};
+use pats::sim::run_scenario;
+use pats::trace::{Distribution, Trace};
+use pats::util::cli::Args;
+
+const USAGE: &str = "\
+pats — preemption-aware task scheduling for edge DNN offloading
+
+USAGE:
+  pats experiments [--frames N] [--seed S] [--out DIR]
+  pats sim --dist DIST [--policy P] [--no-preemption] [--set-aware-victims]
+           [--frames N] [--seed S] [--trace FILE] [--config FILE]
+  pats trace-gen --dist DIST [--frames N] [--seed S] [--out FILE]
+  pats check [--artifacts DIR]
+
+  DIST:   uniform | weighted1..4 | network-slice
+  P:      scheduler | central-workstealer | decentral-workstealer
+";
+
+fn main() -> ExitCode {
+    pats::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &["no-preemption", "set-aware-victims", "json", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if args.flag("help") || args.command.is_none() {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    let result = match args.command.as_deref() {
+        Some("experiments") => cmd_experiments(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("trace-gen") => cmd_trace_gen(&args),
+        Some("check") => cmd_check(&args),
+        Some(other) => Err(format!("unknown subcommand {other:?}\n{USAGE}")),
+        None => unreachable!(),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn base_config(args: &Args) -> Result<SystemConfig, String> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => SystemConfig::load(std::path::Path::new(path)).map_err(|e| e.to_string())?,
+        None => SystemConfig::default(),
+    };
+    cfg.frames = args.opt_u64("frames", cfg.frames)?;
+    cfg.seed = args.opt_u64("seed", cfg.seed)?;
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+fn cmd_experiments(args: &Args) -> Result<(), String> {
+    let cfg = base_config(args)?;
+    let out_dir = PathBuf::from(args.opt_str("out", "results"));
+    eprintln!(
+        "running {} scenarios at {} device-frames each ...",
+        pats::experiments::scenario_matrix().len(),
+        cfg.frames
+    );
+    let t0 = std::time::Instant::now();
+    let mut set = ExperimentSet::run(&cfg);
+    eprintln!("done in {:.2?}", t0.elapsed());
+    let report = set.render_all();
+    println!("{report}");
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+    let md = out_dir.join("experiments.md");
+    std::fs::write(&md, &report).map_err(|e| e.to_string())?;
+    let json = out_dir.join("experiments.json");
+    std::fs::write(&json, set.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+    eprintln!("wrote {} and {}", md.display(), json.display());
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<(), String> {
+    let mut cfg = base_config(args)?;
+    if let Some(p) = args.opt("policy") {
+        cfg.policy = PolicyKind::parse(p).map_err(|e| e.to_string())?;
+    }
+    if args.flag("no-preemption") {
+        cfg.preemption = false;
+    }
+    if args.flag("set-aware-victims") {
+        cfg.set_aware_victims = true; // §8 future-work extension
+    }
+    let trace = match args.opt("trace") {
+        Some(path) => Trace::load(std::path::Path::new(path)).map_err(|e| e.to_string())?,
+        None => {
+            let dist = Distribution::parse(args.opt_str("dist", "uniform"))
+                .map_err(|e| e.to_string())?;
+            Trace::generate(dist, cfg.devices, cfg.frames, cfg.seed)
+        }
+    };
+    let label = format!(
+        "{}{}",
+        cfg.policy.name(),
+        if cfg.preemption { "+preemption" } else { "" }
+    );
+    let mut result = run_scenario(&cfg, &trace, &label);
+    if args.flag("json") {
+        println!("{}", result.metrics.to_json().to_string_pretty());
+    } else {
+        println!("{}", result.metrics.render_text());
+        println!(
+            "virtual time: {} | wall time: {:.2?}",
+            result.virtual_end, result.elapsed
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<(), String> {
+    let cfg = base_config(args)?;
+    let dist =
+        Distribution::parse(args.opt_str("dist", "uniform")).map_err(|e| e.to_string())?;
+    let trace = Trace::generate(dist, cfg.devices, cfg.frames, cfg.seed);
+    let (lp, hp, frames) = trace.potential_counts();
+    eprintln!("{}: {} device-frames, potential HP {hp}, potential LP {lp}", dist.name(), frames);
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, trace.to_text()).map_err(|e| e.to_string())?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{}", trace.to_text()),
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<(), String> {
+    let dir = args
+        .opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Engine::default_dir);
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let engine = Engine::load(&dir).map_err(|e| e.to_string())?;
+    eprintln!("platform: {}, {} executables", engine.platform(), engine.names().count());
+
+    // One frame through the whole pipeline, timed.
+    let bg = Tensor::zeros(&[48, 48, 3]);
+    let mut frame = bg.clone();
+    for h in 12..36 {
+        for w in 12..36 {
+            for c in 0..3 {
+                frame.data[(h * 48 + w) * 3 + c] = 0.8;
+            }
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let score = partition::run_detector(&engine, &frame, &bg).map_err(|e| e.to_string())?;
+    let t1 = std::time::Instant::now();
+    let decision = partition::run_classifier(&engine, &frame).map_err(|e| e.to_string())?;
+    let t2 = std::time::Instant::now();
+    let mono = engine.execute("cnn_full", &[&frame]).map_err(|e| e.to_string())?;
+    let t3 = std::time::Instant::now();
+    println!("stage 1 (detector):    score={score:.4}  ({:?})", t1 - t0);
+    println!("stage 2 (classifier):  decision={decision:.4}  ({:?})", t2 - t1);
+    println!("stage 3 (monolithic):  logits={:?}  ({:?})", mono.data, t3 - t2);
+    for tiles in [2usize, 4] {
+        let t = std::time::Instant::now();
+        let out = partition::run_cnn(&engine, &frame, tiles).map_err(|e| e.to_string())?;
+        let diff = out.max_abs_diff(&mono);
+        println!(
+            "stage 3 ({tiles}-tile):     class={} max|Δ| vs monolithic = {diff:.2e}  ({:?})",
+            out.argmax(),
+            t.elapsed()
+        );
+        if diff > 2e-4 {
+            return Err(format!("partition divergence {diff} exceeds tolerance"));
+        }
+    }
+    println!("check OK");
+    Ok(())
+}

@@ -1,0 +1,315 @@
+//! Scenario metrics: every counter the paper's figures and tables need.
+//!
+//! One [`ScenarioMetrics`] is filled per experiment run; the `experiments`
+//! module renders them into the paper's tables/figures and EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+
+use crate::task::FailReason;
+use crate::util::json::Json;
+use crate::util::stats::{pct, Summary};
+
+/// All counters for one scenario run.
+#[derive(Debug, Default)]
+pub struct ScenarioMetrics {
+    /// Scenario label (e.g. "UPS", "WNPS_4").
+    pub label: String,
+
+    // ---- frames (Fig 2) ----
+    pub frames_total: u64,
+    pub frames_completed: u64,
+    pub frames_failed_hp: u64,
+    pub frames_failed_lp: u64,
+
+    // ---- high-priority tasks (Fig 3) ----
+    pub hp_generated: u64,
+    pub hp_completed: u64,
+    /// Completed only because preemption freed resources.
+    pub hp_completed_via_preemption: u64,
+    pub hp_failed_alloc: u64,
+    pub hp_violated: u64,
+
+    // ---- low-priority tasks (Fig 4, 5, 6; Table 2) ----
+    pub lp_generated: u64,
+    pub lp_completed: u64,
+    pub lp_failed_alloc: u64,
+    pub lp_failed_preempted: u64,
+    pub lp_violated: u64,
+    /// Offloaded sub-population (Fig 6).
+    pub lp_offloaded: u64,
+    pub lp_offloaded_completed: u64,
+    /// Per-request completion fractions (Fig 5).
+    pub lp_set_fractions: Summary,
+    /// Requests where the full set completed.
+    pub lp_sets_completed: u64,
+    pub lp_sets_total: u64,
+
+    // ---- preemption (Fig 7, Table 3) ----
+    /// Preempted-task counts keyed by the core config they held.
+    pub preempted_by_cores: BTreeMap<u32, u64>,
+    pub preemptions: u64,
+    pub realloc_success: u64,
+    pub realloc_failure: u64,
+
+    // ---- core allocation census (Fig 8) ----
+    pub core_alloc_local: BTreeMap<u32, u64>,
+    pub core_alloc_offloaded: BTreeMap<u32, u64>,
+
+    // ---- controller latencies (Fig 9, 10) ----
+    /// HP allocation search time, no preemption invoked (ms).
+    pub hp_alloc_ms: Summary,
+    /// HP allocation search time when preemption fired (ms), including the
+    /// victim-selection + retry + reallocation work.
+    pub hp_preempt_path_ms: Summary,
+    /// LP request allocation search time (ms).
+    pub lp_alloc_ms: Summary,
+    /// Preempted-victim reallocation time (ms).
+    pub lp_realloc_ms: Summary,
+}
+
+impl ScenarioMetrics {
+    pub fn new(label: &str) -> ScenarioMetrics {
+        ScenarioMetrics { label: label.to_string(), ..Default::default() }
+    }
+
+    // ---- recording helpers -------------------------------------------------
+
+    pub fn record_lp_failure(&mut self, reason: &FailReason) {
+        match reason {
+            FailReason::NoResources => self.lp_failed_alloc += 1,
+            FailReason::Preempted => self.lp_failed_preempted += 1,
+            FailReason::Violated => self.lp_violated += 1,
+            FailReason::Cancelled => {}
+        }
+    }
+
+    pub fn record_core_alloc(&mut self, cores: u32, offloaded: bool) {
+        let map = if offloaded {
+            &mut self.core_alloc_offloaded
+        } else {
+            &mut self.core_alloc_local
+        };
+        *map.entry(cores).or_insert(0) += 1;
+    }
+
+    pub fn record_preemption(&mut self, victim_cores: u32, reallocated: bool) {
+        self.preemptions += 1;
+        *self.preempted_by_cores.entry(victim_cores).or_insert(0) += 1;
+        if reallocated {
+            self.realloc_success += 1;
+        } else {
+            self.realloc_failure += 1;
+        }
+    }
+
+    // ---- derived figures ----------------------------------------------------
+
+    /// Fig 2: frame completion percentage.
+    pub fn frame_completion_pct(&self) -> f64 {
+        pct(self.frames_completed, self.frames_total)
+    }
+
+    /// Fig 3: high-priority completion percentage.
+    pub fn hp_completion_pct(&self) -> f64 {
+        pct(self.hp_completed, self.hp_generated)
+    }
+
+    /// Fig 3: share of HP completions that needed preemption.
+    pub fn hp_via_preemption_pct(&self) -> f64 {
+        pct(self.hp_completed_via_preemption, self.hp_generated)
+    }
+
+    /// Fig 4: raw low-priority completion percentage.
+    pub fn lp_completion_pct(&self) -> f64 {
+        pct(self.lp_completed, self.lp_generated)
+    }
+
+    /// Fig 5: mean per-request set completion percentage.
+    pub fn lp_per_request_pct(&mut self) -> f64 {
+        self.lp_set_fractions.mean() * 100.0
+    }
+
+    /// Fig 6: offloaded low-priority completion percentage.
+    pub fn lp_offloaded_completion_pct(&self) -> f64 {
+        pct(self.lp_offloaded_completed, self.lp_offloaded)
+    }
+
+    /// JSON export for EXPERIMENTS.md appendices / plotting.
+    pub fn to_json(&mut self) -> Json {
+        let preempted_by_cores: Vec<Json> = self
+            .preempted_by_cores
+            .iter()
+            .map(|(c, n)| Json::obj().with("cores", *c).with("count", *n))
+            .collect();
+        let census = |m: &BTreeMap<u32, u64>| -> Vec<Json> {
+            m.iter()
+                .map(|(c, n)| Json::obj().with("cores", *c).with("count", *n))
+                .collect()
+        };
+        let local = census(&self.core_alloc_local);
+        let offl = census(&self.core_alloc_offloaded);
+        Json::obj()
+            .with("label", self.label.as_str())
+            .with(
+                "frames",
+                Json::obj()
+                    .with("total", self.frames_total)
+                    .with("completed", self.frames_completed)
+                    .with("completion_pct", self.frame_completion_pct())
+                    .with("failed_hp", self.frames_failed_hp)
+                    .with("failed_lp", self.frames_failed_lp),
+            )
+            .with(
+                "hp",
+                Json::obj()
+                    .with("generated", self.hp_generated)
+                    .with("completed", self.hp_completed)
+                    .with("completion_pct", self.hp_completion_pct())
+                    .with("via_preemption", self.hp_completed_via_preemption)
+                    .with("failed_alloc", self.hp_failed_alloc)
+                    .with("violated", self.hp_violated),
+            )
+            .with(
+                "lp",
+                Json::obj()
+                    .with("generated", self.lp_generated)
+                    .with("completed", self.lp_completed)
+                    .with("completion_pct", self.lp_completion_pct())
+                    .with("failed_alloc", self.lp_failed_alloc)
+                    .with("failed_preempted", self.lp_failed_preempted)
+                    .with("violated", self.lp_violated)
+                    .with("offloaded", self.lp_offloaded)
+                    .with("offloaded_completed", self.lp_offloaded_completed)
+                    .with("offloaded_pct", self.lp_offloaded_completion_pct())
+                    .with("per_request_pct", self.lp_per_request_pct())
+                    .with("sets_total", self.lp_sets_total)
+                    .with("sets_completed", self.lp_sets_completed),
+            )
+            .with(
+                "preemption",
+                Json::obj()
+                    .with("count", self.preemptions)
+                    .with("by_cores", Json::Arr(preempted_by_cores))
+                    .with("realloc_success", self.realloc_success)
+                    .with("realloc_failure", self.realloc_failure),
+            )
+            .with(
+                "core_alloc",
+                Json::obj()
+                    .with("local", Json::Arr(local))
+                    .with("offloaded", Json::Arr(offl)),
+            )
+            .with(
+                "latency_ms",
+                Json::obj()
+                    .with("hp_alloc_mean", self.hp_alloc_ms.mean())
+                    .with("hp_alloc_p99", self.hp_alloc_ms.percentile(99.0))
+                    .with("hp_preempt_path_mean", self.hp_preempt_path_ms.mean())
+                    .with("lp_alloc_mean", self.lp_alloc_ms.mean())
+                    .with("lp_realloc_mean", self.lp_realloc_ms.mean()),
+            )
+    }
+
+    /// One human-readable summary block.
+    pub fn render_text(&mut self) -> String {
+        let pr = self.lp_per_request_pct();
+        let ham = self.hp_alloc_ms.mean();
+        let hpm = self.hp_preempt_path_ms.mean();
+        let lam = self.lp_alloc_ms.mean();
+        let lrm = self.lp_realloc_ms.mean();
+        format!(
+            "[{label}] frames {fc}/{ft} ({fp:.2}%) | HP {hc}/{hg} ({hp:.2}%, {hv:.2}% via preemption) | \
+             LP {lc}/{lg} ({lp:.2}%, per-request {pr:.2}%, offloaded {op:.2}%) | \
+             preemptions {pe} (realloc {rs}/{rf}) | \
+             alloc ms: hp {ham:.3} hp+preempt {hpm:.3} lp {lam:.3} realloc {lrm:.3}",
+            label = self.label,
+            fc = self.frames_completed,
+            ft = self.frames_total,
+            fp = self.frame_completion_pct(),
+            hc = self.hp_completed,
+            hg = self.hp_generated,
+            hp = self.hp_completion_pct(),
+            hv = self.hp_via_preemption_pct(),
+            lc = self.lp_completed,
+            lg = self.lp_generated,
+            lp = self.lp_completion_pct(),
+            pr = pr,
+            op = self.lp_offloaded_completion_pct(),
+            pe = self.preemptions,
+            rs = self.realloc_success,
+            rf = self.realloc_failure,
+            ham = ham,
+            hpm = hpm,
+            lam = lam,
+            lrm = lrm,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentages() {
+        let mut m = ScenarioMetrics::new("t");
+        m.frames_total = 200;
+        m.frames_completed = 50;
+        assert_eq!(m.frame_completion_pct(), 25.0);
+        m.hp_generated = 100;
+        m.hp_completed = 99;
+        assert!((m.hp_completion_pct() - 99.0).abs() < 1e-9);
+        assert_eq!(m.lp_completion_pct(), 0.0, "no LP generated → 0, not NaN");
+    }
+
+    #[test]
+    fn failure_recording_routes_by_reason() {
+        let mut m = ScenarioMetrics::new("t");
+        m.record_lp_failure(&FailReason::NoResources);
+        m.record_lp_failure(&FailReason::Preempted);
+        m.record_lp_failure(&FailReason::Violated);
+        m.record_lp_failure(&FailReason::Cancelled);
+        assert_eq!(m.lp_failed_alloc, 1);
+        assert_eq!(m.lp_failed_preempted, 1);
+        assert_eq!(m.lp_violated, 1);
+    }
+
+    #[test]
+    fn preemption_census() {
+        let mut m = ScenarioMetrics::new("t");
+        m.record_preemption(4, false);
+        m.record_preemption(4, false);
+        m.record_preemption(2, true);
+        assert_eq!(m.preemptions, 3);
+        assert_eq!(m.preempted_by_cores.get(&4), Some(&2));
+        assert_eq!(m.realloc_success, 1);
+        assert_eq!(m.realloc_failure, 2);
+    }
+
+    #[test]
+    fn core_alloc_census() {
+        let mut m = ScenarioMetrics::new("t");
+        m.record_core_alloc(2, false);
+        m.record_core_alloc(2, false);
+        m.record_core_alloc(4, true);
+        assert_eq!(m.core_alloc_local.get(&2), Some(&2));
+        assert_eq!(m.core_alloc_offloaded.get(&4), Some(&1));
+    }
+
+    #[test]
+    fn json_has_all_sections() {
+        let mut m = ScenarioMetrics::new("UPS");
+        m.frames_total = 10;
+        let j = m.to_json();
+        for key in ["label", "frames", "hp", "lp", "preemption", "core_alloc", "latency_ms"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("label").and_then(Json::as_str), Some("UPS"));
+    }
+
+    #[test]
+    fn text_render_contains_label() {
+        let mut m = ScenarioMetrics::new("WPS_3");
+        assert!(m.render_text().contains("WPS_3"));
+    }
+}

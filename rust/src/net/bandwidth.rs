@@ -1,0 +1,117 @@
+//! Link throughput estimation (§5 startup measurement, §7.3 EMA ablation).
+//!
+//! The paper's main experiments measure throughput once at startup with
+//! iperf3 and use that static estimate for every reservation. §7.3 evaluates
+//! "a more responsive method of throughput estimation using an exponential
+//! moving average (EMA) based on actively measured communication times" and
+//! finds comparable performance — we implement both so the ablation bench
+//! can reproduce that comparison.
+
+use crate::config::{BandwidthEstimator, SystemConfig};
+use crate::time::SimDuration;
+
+/// Throughput estimator state.
+#[derive(Debug, Clone)]
+pub struct BandwidthTracker {
+    mode: BandwidthEstimator,
+    /// Current estimate, bytes per second (effective, i.e. post-AP-halving).
+    estimate_bps: f64,
+    /// EMA smoothing factor.
+    alpha: f64,
+    /// Number of observations folded in (EMA mode).
+    observations: u64,
+}
+
+impl BandwidthTracker {
+    /// Initialise from the startup measurement in the config.
+    pub fn new(cfg: &SystemConfig) -> BandwidthTracker {
+        BandwidthTracker {
+            mode: cfg.bandwidth_estimator,
+            estimate_bps: cfg.effective_throughput_bps(),
+            alpha: cfg.ema_alpha,
+            observations: 0,
+        }
+    }
+
+    /// Current estimate in bytes/second.
+    pub fn estimate_bps(&self) -> f64 {
+        self.estimate_bps
+    }
+
+    /// Observations folded into the estimate so far.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Fold in a measured transfer: `bytes` took `took`.
+    /// No-op in static mode (the paper's default behaviour).
+    pub fn observe(&mut self, bytes: u64, took: SimDuration) {
+        if took == SimDuration::ZERO {
+            return;
+        }
+        if let BandwidthEstimator::Ema = self.mode {
+            let measured = bytes as f64 / took.as_secs_f64();
+            self.estimate_bps = self.alpha * measured + (1.0 - self.alpha) * self.estimate_bps;
+            self.observations += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mode: BandwidthEstimator) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.bandwidth_estimator = mode;
+        c
+    }
+
+    #[test]
+    fn static_mode_never_moves() {
+        let c = cfg(BandwidthEstimator::Static);
+        let mut t = BandwidthTracker::new(&c);
+        let initial = t.estimate_bps();
+        t.observe(1_000_000, SimDuration::from_secs_f64(1.0));
+        assert_eq!(t.estimate_bps(), initial);
+        assert_eq!(t.observations(), 0);
+    }
+
+    #[test]
+    fn ema_converges_toward_measured() {
+        let c = cfg(BandwidthEstimator::Ema);
+        let mut t = BandwidthTracker::new(&c);
+        // Feed consistent 4 MB/s observations.
+        for _ in 0..100 {
+            t.observe(4_000_000, SimDuration::from_secs_f64(1.0));
+        }
+        assert!((t.estimate_bps() - 4_000_000.0).abs() < 10_000.0);
+        assert_eq!(t.observations(), 100);
+    }
+
+    #[test]
+    fn ema_single_step_math() {
+        let mut c = cfg(BandwidthEstimator::Ema);
+        c.ema_alpha = 0.5;
+        c.throughput_mbps = 16.0; // effective 8 MB/s
+        let mut t = BandwidthTracker::new(&c);
+        t.observe(4_000_000, SimDuration::from_secs_f64(1.0)); // measured 4 MB/s
+        assert!((t.estimate_bps() - 6_000_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn zero_duration_observation_ignored() {
+        let c = cfg(BandwidthEstimator::Ema);
+        let mut t = BandwidthTracker::new(&c);
+        let initial = t.estimate_bps();
+        t.observe(1000, SimDuration::ZERO);
+        assert_eq!(t.estimate_bps(), initial);
+    }
+
+    #[test]
+    fn starts_from_effective_throughput() {
+        let c = cfg(BandwidthEstimator::Static);
+        let t = BandwidthTracker::new(&c);
+        assert_eq!(t.estimate_bps(), c.effective_throughput_bps());
+    }
+}

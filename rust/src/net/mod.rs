@@ -1,0 +1,171 @@
+//! The star-topology shared wireless link (§3, §5).
+//!
+//! Every message in the system crosses one shared 802.11n link routed
+//! through the AP, which halves effective throughput for device↔device
+//! transfers. The controller sizes link time-slots from benchmarked message
+//! sizes and a throughput estimate, padded for jitter; the simulator then
+//! samples *actual* transfer times around the unpadded mean, so late
+//! arrivals (and the resulting task violations, §7.3) genuinely occur.
+
+pub mod bandwidth;
+
+pub use bandwidth::BandwidthTracker;
+
+use crate::config::SystemConfig;
+use crate::resources::SlotKind;
+use crate::time::SimDuration;
+use crate::util::rng::Rng;
+
+/// Message catalogue: benchmarked max sizes in bytes (§5).
+pub fn message_bytes(cfg: &SystemConfig, kind: SlotKind) -> u64 {
+    match kind {
+        SlotKind::HpAllocMsg => cfg.msg_hp_alloc_bytes,
+        SlotKind::LpAllocMsg => cfg.msg_lp_alloc_bytes,
+        SlotKind::InputTransfer => cfg.msg_input_transfer_bytes,
+        SlotKind::StateUpdate => cfg.msg_state_update_bytes,
+        SlotKind::PreemptMsg => cfg.msg_preempt_bytes,
+        SlotKind::PollMsg => cfg.msg_poll_bytes,
+    }
+}
+
+/// Link model: turns message kinds into slot durations (controller view)
+/// and sampled transfer times (simulation ground truth).
+#[derive(Debug)]
+pub struct LinkModel {
+    /// Effective throughput estimate used for reservations, bytes/sec.
+    tracker: BandwidthTracker,
+    /// Jitter fraction: σ of actual transfer time and padding of slots.
+    jitter_frac: f64,
+}
+
+impl LinkModel {
+    pub fn new(cfg: &SystemConfig) -> LinkModel {
+        LinkModel {
+            tracker: BandwidthTracker::new(cfg),
+            jitter_frac: cfg.jitter_frac,
+        }
+    }
+
+    /// Raw (unpadded) expected transfer duration for `bytes`.
+    pub fn raw_duration(&self, bytes: u64) -> SimDuration {
+        SimDuration::from_secs_f64(bytes as f64 / self.tracker.estimate_bps())
+    }
+
+    /// Slot duration the controller reserves: expected time plus jitter
+    /// padding (§3: "additional time-padding at the end of created
+    /// time-slots ... the jitter in the network tests as communication
+    /// padding").
+    pub fn slot_duration(&self, cfg: &SystemConfig, kind: SlotKind) -> SimDuration {
+        let raw = self.raw_duration(message_bytes(cfg, kind));
+        raw + raw.scale(self.jitter_frac)
+    }
+
+    /// Sample an *actual* transfer time: Gaussian around the raw duration
+    /// with σ = jitter_frac · raw, truncated at 10 % of raw.
+    pub fn sample_transfer(
+        &self,
+        cfg: &SystemConfig,
+        kind: SlotKind,
+        rng: &mut Rng,
+    ) -> SimDuration {
+        let raw = self.raw_duration(message_bytes(cfg, kind)).as_secs_f64();
+        let sampled = rng.normal(raw, raw * self.jitter_frac);
+        SimDuration::from_secs_f64(sampled.max(raw * 0.1))
+    }
+
+    /// Feed an observed (bytes, duration) back to the estimator (EMA mode).
+    pub fn observe(&mut self, bytes: u64, took: SimDuration) {
+        self.tracker.observe(bytes, took);
+    }
+
+    /// Current estimate, bytes/sec.
+    pub fn estimate_bps(&self) -> f64 {
+        self.tracker.estimate_bps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn message_sizes_match_paper() {
+        let c = cfg();
+        assert_eq!(message_bytes(&c, SlotKind::HpAllocMsg), 700);
+        assert_eq!(message_bytes(&c, SlotKind::LpAllocMsg), 2250);
+        assert_eq!(message_bytes(&c, SlotKind::StateUpdate), 550);
+        assert_eq!(message_bytes(&c, SlotKind::PreemptMsg), 550);
+        assert_eq!(message_bytes(&c, SlotKind::InputTransfer), 21_500);
+    }
+
+    #[test]
+    fn slot_duration_is_padded() {
+        let c = cfg();
+        let link = LinkModel::new(&c);
+        let raw = link.raw_duration(c.msg_input_transfer_bytes);
+        let slot = link.slot_duration(&c, SlotKind::InputTransfer);
+        assert!(slot > raw);
+        let frac = slot.as_secs_f64() / raw.as_secs_f64();
+        // µs rounding: tolerance loose enough for the smallest messages.
+        assert!((frac - (1.0 + c.jitter_frac)).abs() < 1e-2, "frac {frac}");
+    }
+
+    #[test]
+    fn durations_scale_with_bytes() {
+        let c = cfg();
+        let link = LinkModel::new(&c);
+        let small = link.slot_duration(&c, SlotKind::StateUpdate);
+        let big = link.slot_duration(&c, SlotKind::InputTransfer);
+        assert!(big > small);
+        // 21500 / 550 ≈ 39× difference.
+        let ratio = big.as_secs_f64() / small.as_secs_f64();
+        assert!((ratio - 21_500.0 / 550.0).abs() < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn input_transfer_magnitude_sane() {
+        // 21.5 kB at 16.3/2 MB/s ≈ 2.6 ms.
+        let c = cfg();
+        let link = LinkModel::new(&c);
+        let ms = link.raw_duration(c.msg_input_transfer_bytes).as_millis_f64();
+        assert!((2.0..4.0).contains(&ms), "{ms} ms");
+    }
+
+    #[test]
+    fn sampled_transfers_vary_but_center() {
+        let c = cfg();
+        let link = LinkModel::new(&c);
+        let mut rng = Rng::seed_from_u64(5);
+        let raw = link.raw_duration(c.msg_input_transfer_bytes).as_secs_f64();
+        let n = 2000;
+        let mut sum = 0.0;
+        let mut distinct = std::collections::BTreeSet::new();
+        for _ in 0..n {
+            let s = link.sample_transfer(&c, SlotKind::InputTransfer, &mut rng);
+            sum += s.as_secs_f64();
+            distinct.insert(s.as_micros());
+            assert!(s.as_secs_f64() >= raw * 0.1);
+        }
+        let mean = sum / n as f64;
+        assert!((mean - raw).abs() < raw * 0.02, "mean {mean} vs raw {raw}");
+        assert!(distinct.len() > 100);
+    }
+
+    #[test]
+    fn some_samples_exceed_padded_slot() {
+        // Violations must be *possible*: padding is ~1σ, so ~16 % of
+        // transfers overrun their padded slot.
+        let c = cfg();
+        let link = LinkModel::new(&c);
+        let slot = link.slot_duration(&c, SlotKind::InputTransfer);
+        let mut rng = Rng::seed_from_u64(6);
+        let over = (0..1000)
+            .filter(|_| link.sample_transfer(&c, SlotKind::InputTransfer, &mut rng) > slot)
+            .count();
+        assert!(over > 50 && over < 400, "overruns {over}");
+    }
+}

@@ -1,0 +1,260 @@
+//! Frame pipeline lifecycle (§3, §5).
+//!
+//! Devices sample their conveyor belt every `frame_period_s`; the paper
+//! starts devices "as pairs in a staggered fashion ... two checking at the
+//! start of the cycle and the other two at middle cycle", with "a random
+//! offset between any two devices at the start of a frame".
+
+use crate::config::SystemConfig;
+use crate::task::{DeviceId, FrameId, RequestId, TaskId};
+use crate::time::{SimDuration, SimTime};
+use crate::trace::FrameLoad;
+use crate::util::rng::Rng;
+
+/// Per-device start offsets implementing staggered pairs + random jitter.
+#[derive(Debug, Clone)]
+pub struct StartSchedule {
+    offsets: Vec<SimDuration>,
+    period: SimDuration,
+}
+
+impl StartSchedule {
+    pub fn sample(cfg: &SystemConfig, rng: &mut Rng) -> StartSchedule {
+        let period = SimDuration::from_secs_f64(cfg.frame_period_s);
+        let offsets = (0..cfg.devices)
+            .map(|d| {
+                let pair_shift = if cfg.staggered_pairs && d >= cfg.devices / 2 {
+                    // Second pair samples at mid-cycle.
+                    SimDuration::from_secs_f64(cfg.frame_period_s / 2.0)
+                } else {
+                    SimDuration::ZERO
+                };
+                let jitter =
+                    SimDuration::from_secs_f64(rng.range_f64(0.0, cfg.max_start_offset_s));
+                pair_shift + jitter
+            })
+            .collect();
+        StartSchedule { offsets, period }
+    }
+
+    /// Start time of `cycle` on `device`.
+    pub fn frame_start(&self, device: DeviceId, cycle: usize) -> SimTime {
+        SimTime::ZERO + self.offsets[device.0 as usize] + self.period * cycle as u64
+    }
+
+    pub fn period(&self) -> SimDuration {
+        self.period
+    }
+}
+
+/// Lifecycle status of one frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameStatus {
+    /// Pipeline still in flight.
+    InFlight,
+    /// Every stage the frame required completed before its deadline.
+    Completed,
+    /// Some stage failed (annotated with which).
+    Failed(FrameFailure),
+}
+
+/// Which stage sank the frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameFailure {
+    /// Stage-2 high-priority task was never allocated or was violated.
+    HighPriority,
+    /// Stage-3: at least one DNN task of the set failed.
+    LowPrioritySet,
+}
+
+/// Bookkeeping for one frame's walk through the pipeline.
+#[derive(Debug, Clone)]
+pub struct FrameRecord {
+    pub id: FrameId,
+    pub device: DeviceId,
+    pub cycle: usize,
+    pub load: FrameLoad,
+    pub start: SimTime,
+    /// The pipeline deadline: everything must finish within the period.
+    pub deadline: SimTime,
+    pub hp_task: Option<TaskId>,
+    pub lp_request: Option<RequestId>,
+    /// Low-priority tasks still outstanding.
+    pub lp_remaining: u32,
+    pub status: FrameStatus,
+}
+
+impl FrameRecord {
+    pub fn new(
+        id: FrameId,
+        device: DeviceId,
+        cycle: usize,
+        load: FrameLoad,
+        start: SimTime,
+        period: SimDuration,
+    ) -> FrameRecord {
+        let status = if load.spawns_hp() {
+            FrameStatus::InFlight
+        } else {
+            // No object: the pipeline is the stage-1 detector only, which
+            // always runs locally — the frame is trivially complete.
+            FrameStatus::Completed
+        };
+        FrameRecord {
+            id,
+            device,
+            cycle,
+            load,
+            start,
+            deadline: start + period,
+            hp_task: None,
+            lp_request: None,
+            lp_remaining: load.lp_tasks() as u32,
+            status,
+        }
+    }
+
+    /// Stage-2 outcome.
+    pub fn on_hp_result(&mut self, completed: bool) {
+        if self.status != FrameStatus::InFlight {
+            return;
+        }
+        if !completed {
+            self.status = FrameStatus::Failed(FrameFailure::HighPriority);
+        } else if self.load.lp_tasks() == 0 {
+            self.status = FrameStatus::Completed;
+        }
+        // Otherwise stay in flight until the LP set resolves.
+    }
+
+    /// One stage-3 task of the set resolved.
+    pub fn on_lp_result(&mut self, completed: bool) {
+        if self.status != FrameStatus::InFlight {
+            return;
+        }
+        if !completed {
+            self.status = FrameStatus::Failed(FrameFailure::LowPrioritySet);
+            return;
+        }
+        assert!(self.lp_remaining > 0, "more LP results than tasks");
+        self.lp_remaining -= 1;
+        if self.lp_remaining == 0 {
+            self.status = FrameStatus::Completed;
+        }
+    }
+
+    pub fn completed(&self) -> bool {
+        self.status == FrameStatus::Completed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn staggered_pairs_offset_by_half_period() {
+        let c = cfg();
+        let mut rng = Rng::seed_from_u64(1);
+        let s = StartSchedule::sample(&c, &mut rng);
+        let early = s.frame_start(DeviceId(0), 0);
+        let late = s.frame_start(DeviceId(2), 0);
+        let half = c.frame_period_s / 2.0;
+        let gap = late.since(early).as_secs_f64();
+        // Half-period shift ± the random jitter of both devices.
+        assert!(
+            (gap - half).abs() <= c.max_start_offset_s,
+            "gap {gap} vs half {half}"
+        );
+    }
+
+    #[test]
+    fn cycles_advance_by_period() {
+        let c = cfg();
+        let mut rng = Rng::seed_from_u64(2);
+        let s = StartSchedule::sample(&c, &mut rng);
+        let a = s.frame_start(DeviceId(1), 0);
+        let b = s.frame_start(DeviceId(1), 5);
+        assert_eq!(
+            b.since(a),
+            SimDuration::from_secs_f64(c.frame_period_s) * 5
+        );
+    }
+
+    #[test]
+    fn offsets_are_random_but_bounded() {
+        let c = cfg();
+        let mut rng = Rng::seed_from_u64(3);
+        let s = StartSchedule::sample(&c, &mut rng);
+        let a = s.frame_start(DeviceId(0), 0);
+        let b = s.frame_start(DeviceId(1), 0);
+        assert_ne!(a, b, "random offsets should differ");
+        assert!(a.as_secs_f64() <= c.max_start_offset_s);
+    }
+
+    fn frame(load: FrameLoad) -> FrameRecord {
+        FrameRecord::new(
+            FrameId(1),
+            DeviceId(0),
+            0,
+            load,
+            SimTime::ZERO,
+            SimDuration::from_secs_f64(18.86),
+        )
+    }
+
+    #[test]
+    fn no_object_frames_complete_trivially() {
+        let f = frame(FrameLoad::NoObject);
+        assert!(f.completed());
+    }
+
+    #[test]
+    fn hp_only_frame_completes_on_hp() {
+        let mut f = frame(FrameLoad::HpOnly);
+        assert_eq!(f.status, FrameStatus::InFlight);
+        f.on_hp_result(true);
+        assert!(f.completed());
+    }
+
+    #[test]
+    fn hp_failure_fails_frame() {
+        let mut f = frame(FrameLoad::HpAndLp(3));
+        f.on_hp_result(false);
+        assert_eq!(f.status, FrameStatus::Failed(FrameFailure::HighPriority));
+        // Late LP results cannot resurrect it.
+        f.on_lp_result(true);
+        assert_eq!(f.status, FrameStatus::Failed(FrameFailure::HighPriority));
+    }
+
+    #[test]
+    fn full_set_required_for_completion() {
+        let mut f = frame(FrameLoad::HpAndLp(3));
+        f.on_hp_result(true);
+        assert_eq!(f.status, FrameStatus::InFlight);
+        f.on_lp_result(true);
+        f.on_lp_result(true);
+        assert_eq!(f.status, FrameStatus::InFlight);
+        f.on_lp_result(true);
+        assert!(f.completed());
+    }
+
+    #[test]
+    fn one_lp_failure_sinks_the_set() {
+        let mut f = frame(FrameLoad::HpAndLp(2));
+        f.on_hp_result(true);
+        f.on_lp_result(true);
+        f.on_lp_result(false);
+        assert_eq!(f.status, FrameStatus::Failed(FrameFailure::LowPrioritySet));
+    }
+
+    #[test]
+    fn deadline_is_one_period() {
+        let f = frame(FrameLoad::HpOnly);
+        assert_eq!(f.deadline, SimTime::from_secs_f64(18.86));
+    }
+}

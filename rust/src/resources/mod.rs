@@ -1,0 +1,13 @@
+//! Time-slotted resource reservation calendars.
+//!
+//! The controller allocates two resource types (§3): the shared wireless
+//! **link** (exclusive — no two transfers overlap) and each device's **CPU
+//! cores** (additive — concurrent reservations as long as the core sum stays
+//! within capacity). Slots are variable-length and carry the padding the
+//! paper adds for run-time variation.
+
+mod cores;
+mod timeline;
+
+pub use cores::CoreTimeline;
+pub use timeline::{SlotKind, Timeline};

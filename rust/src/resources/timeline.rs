@@ -1,0 +1,288 @@
+//! Exclusive-resource reservation timeline (the shared wireless link).
+//!
+//! Variable-length, non-overlapping, half-open slots kept sorted by start
+//! time. The controller reserves one slot per message: allocation messages,
+//! input transfers, state updates, preemption notices (§3.1).
+
+use crate::error::{Error, Result};
+use crate::task::{TaskId, Window};
+use crate::time::{SimDuration, SimTime};
+
+/// What a link slot carries (sizes differ per kind — see `net`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SlotKind {
+    /// Controller → device: high-priority allocation decision.
+    HpAllocMsg,
+    /// Controller → device: low-priority allocation decision.
+    LpAllocMsg,
+    /// Device → device: input image transfer for an offloaded task.
+    InputTransfer,
+    /// Device → controller: status update on task completion.
+    StateUpdate,
+    /// Controller → device: preemption notice.
+    PreemptMsg,
+    /// Workstealer poll: "do you have work?" (decentralised baseline).
+    PollMsg,
+}
+
+/// One reserved slot.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub window: Window,
+    pub kind: SlotKind,
+    /// The task this slot serves.
+    pub owner: TaskId,
+}
+
+/// A sorted, non-overlapping reservation calendar for an exclusive resource.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    /// Sorted by `window.start`; pairwise non-overlapping.
+    slots: Vec<Slot>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline { slots: Vec::new() }
+    }
+
+    /// Number of reserved slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Index of the first slot whose end is after `t` (binary search).
+    fn first_ending_after(&self, t: SimTime) -> usize {
+        // Slots are non-overlapping and sorted by start, hence also by end.
+        self.slots.partition_point(|s| s.window.end <= t)
+    }
+
+    /// Earliest start `>= not_before` where a slot of `dur` fits.
+    ///
+    /// Linear scan over the gaps from the first relevant slot; the paper's
+    /// own complexity analysis is linear in allocated tasks (§6.3).
+    pub fn earliest_fit(&self, not_before: SimTime, dur: SimDuration) -> SimTime {
+        let mut candidate = not_before;
+        for slot in &self.slots[self.first_ending_after(not_before)..] {
+            let needed_end = candidate + dur;
+            if needed_end <= slot.window.start {
+                return candidate;
+            }
+            candidate = candidate.max(slot.window.end);
+        }
+        candidate
+    }
+
+    /// Reserve `[start, start+dur)`. Fails on any overlap.
+    pub fn reserve(
+        &mut self,
+        start: SimTime,
+        dur: SimDuration,
+        kind: SlotKind,
+        owner: TaskId,
+    ) -> Result<Window> {
+        let window = Window::from_duration(start, dur);
+        let idx = self.slots.partition_point(|s| s.window.start < window.start);
+        // Check neighbour on each side (sufficient because non-overlapping).
+        if idx > 0 && self.slots[idx - 1].window.overlaps(&window) {
+            return Err(Error::Allocation(format!(
+                "link slot {:?} overlaps existing {:?}",
+                window, self.slots[idx - 1].window
+            )));
+        }
+        if idx < self.slots.len() && self.slots[idx].window.overlaps(&window) {
+            return Err(Error::Allocation(format!(
+                "link slot {:?} overlaps existing {:?}",
+                window, self.slots[idx].window
+            )));
+        }
+        self.slots.insert(idx, Slot { window, kind, owner });
+        Ok(window)
+    }
+
+    /// Convenience: earliest-fit then reserve. Returns the reserved window.
+    pub fn reserve_earliest(
+        &mut self,
+        not_before: SimTime,
+        dur: SimDuration,
+        kind: SlotKind,
+        owner: TaskId,
+    ) -> Window {
+        let start = self.earliest_fit(not_before, dur);
+        self.reserve(start, dur, kind, owner)
+            .expect("earliest_fit returned an occupied window")
+    }
+
+    /// Remove all slots owned by `task`; returns how many were removed.
+    pub fn remove_owner(&mut self, task: TaskId) -> usize {
+        let before = self.slots.len();
+        self.slots.retain(|s| s.owner != task);
+        before - self.slots.len()
+    }
+
+    /// Remove slots owned by `task` that start at or after `t` (keep already
+    /// transmitted messages when cancelling a future allocation).
+    pub fn remove_owner_from(&mut self, task: TaskId, t: SimTime) -> usize {
+        let before = self.slots.len();
+        self.slots.retain(|s| s.owner != task || s.window.start < t);
+        before - self.slots.len()
+    }
+
+    /// Drop slots that ended at or before `t` (bookkeeping compaction).
+    pub fn prune_before(&mut self, t: SimTime) -> usize {
+        let cut = self.first_ending_after(t);
+        self.slots.drain(..cut).count()
+    }
+
+    /// All slots overlapping `window`.
+    pub fn overlapping<'a>(&'a self, window: &'a Window) -> impl Iterator<Item = &'a Slot> {
+        let start = self.first_ending_after(window.start);
+        self.slots[start..]
+            .iter()
+            .take_while(move |s| s.window.start < window.end)
+            .filter(move |s| s.window.overlaps(window))
+    }
+
+    /// Iterate all slots (sorted).
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    /// Total reserved time within `window`.
+    pub fn busy_time_in(&self, window: &Window) -> SimDuration {
+        let mut total = SimDuration::ZERO;
+        for s in self.overlapping(window) {
+            let lo = s.window.start.max(window.start);
+            let hi = s.window.end.min(window.end);
+            total = total + hi.since(lo);
+        }
+        total
+    }
+
+    /// Debug invariant: sorted and non-overlapping.
+    pub fn check_invariants(&self) -> Result<()> {
+        for pair in self.slots.windows(2) {
+            if pair[0].window.start > pair[1].window.start {
+                return Err(Error::Invariant("timeline not sorted".into()));
+            }
+            if pair[0].window.overlaps(&pair[1].window) {
+                return Err(Error::Invariant(format!(
+                    "timeline overlap: {:?} vs {:?}",
+                    pair[0].window, pair[1].window
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ms: u64) -> SimTime {
+        SimTime::from_millis(ms)
+    }
+    fn d(ms: u64) -> SimDuration {
+        SimDuration::from_millis(ms)
+    }
+
+    #[test]
+    fn empty_timeline_fits_immediately() {
+        let tl = Timeline::new();
+        assert_eq!(tl.earliest_fit(t(5), d(10)), t(5));
+    }
+
+    #[test]
+    fn earliest_fit_skips_occupied() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(10), d(10), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        tl.reserve(t(30), d(10), SlotKind::StateUpdate, TaskId(1)).unwrap();
+        // Fits in the gap [20, 30).
+        assert_eq!(tl.earliest_fit(t(0), d(10)), t(0));
+        assert_eq!(tl.earliest_fit(t(5), d(10)), t(20));
+        // Too big for the gap: lands after the last slot.
+        assert_eq!(tl.earliest_fit(t(5), d(11)), t(40));
+        // Start inside a slot: pushed to its end.
+        assert_eq!(tl.earliest_fit(t(12), d(5)), t(20));
+    }
+
+    #[test]
+    fn reserve_rejects_overlap() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(10), d(10), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        assert!(tl.reserve(t(15), d(10), SlotKind::HpAllocMsg, TaskId(2)).is_err());
+        assert!(tl.reserve(t(5), d(6), SlotKind::HpAllocMsg, TaskId(2)).is_err());
+        // Touching is fine (half-open).
+        assert!(tl.reserve(t(20), d(5), SlotKind::HpAllocMsg, TaskId(2)).is_ok());
+        assert!(tl.reserve(t(5), d(5), SlotKind::HpAllocMsg, TaskId(3)).is_ok());
+        tl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_earliest_composes() {
+        let mut tl = Timeline::new();
+        let w1 = tl.reserve_earliest(t(0), d(10), SlotKind::LpAllocMsg, TaskId(1));
+        let w2 = tl.reserve_earliest(t(0), d(10), SlotKind::LpAllocMsg, TaskId(2));
+        assert_eq!(w1.start, t(0));
+        assert_eq!(w2.start, t(10));
+        tl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_owner_clears_slots() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(0), d(5), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        tl.reserve(t(10), d(5), SlotKind::StateUpdate, TaskId(1)).unwrap();
+        tl.reserve(t(20), d(5), SlotKind::HpAllocMsg, TaskId(2)).unwrap();
+        assert_eq!(tl.remove_owner(TaskId(1)), 2);
+        assert_eq!(tl.len(), 1);
+        // Freed space is reusable.
+        assert_eq!(tl.earliest_fit(t(0), d(5)), t(0));
+    }
+
+    #[test]
+    fn remove_owner_from_keeps_past() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(0), d(5), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        tl.reserve(t(10), d(5), SlotKind::InputTransfer, TaskId(1)).unwrap();
+        assert_eq!(tl.remove_owner_from(TaskId(1), t(8)), 1);
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl.slots()[0].window.start, t(0));
+    }
+
+    #[test]
+    fn overlapping_iterates_correctly() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(0), d(10), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        tl.reserve(t(20), d(10), SlotKind::HpAllocMsg, TaskId(2)).unwrap();
+        tl.reserve(t(40), d(10), SlotKind::HpAllocMsg, TaskId(3)).unwrap();
+        let window = Window::new(t(5), t(45));
+        let owners: Vec<_> = tl.overlapping(&window).map(|s| s.owner).collect();
+        assert_eq!(owners, vec![TaskId(1), TaskId(2), TaskId(3)]);
+        let window = Window::new(t(10), t(20));
+        assert_eq!(tl.overlapping(&window).count(), 0, "touching doesn't overlap");
+    }
+
+    #[test]
+    fn busy_time_clips_to_window() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(0), d(10), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        tl.reserve(t(20), d(10), SlotKind::HpAllocMsg, TaskId(2)).unwrap();
+        let w = Window::new(t(5), t(25));
+        assert_eq!(tl.busy_time_in(&w), d(10)); // 5 from first + 5 from second
+    }
+
+    #[test]
+    fn prune_drops_history() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(0), d(5), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        tl.reserve(t(10), d(5), SlotKind::HpAllocMsg, TaskId(2)).unwrap();
+        assert_eq!(tl.prune_before(t(9)), 1);
+        assert_eq!(tl.len(), 1);
+    }
+}

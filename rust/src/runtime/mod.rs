@@ -1,0 +1,305 @@
+//! PJRT execution of the AOT-compiled model artifacts.
+//!
+//! `make artifacts` (Python, build-time only) lowers every model entry point
+//! to HLO *text* under `artifacts/`; this module loads the text with
+//! `HloModuleProto::from_text_file`, compiles each module once on the PJRT
+//! CPU client, and executes them from the Rust request path. Python never
+//! runs at serving time.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod partition;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// A dense f32 tensor (row-major), the only dtype the pipeline models use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Fill from a function of the flat index.
+    pub fn from_fn(shape: &[usize], f: impl Fn(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(f).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rank-3 (H, W, C) accessor.
+    pub fn at3(&self, h: usize, w: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        let (_, wd, cd) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(h * wd + w) * cd + c]
+    }
+
+    /// Maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Index of the maximum element (argmax over the flat data).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Parsed manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shape: Vec<usize>,
+}
+
+/// Parse `manifest.txt` (written by `python/compile/aot.py`).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() != 4 {
+            return Err(Error::Runtime(format!(
+                "manifest line {}: expected 4 tab-separated fields",
+                lineno + 1
+            )));
+        }
+        let inputs = parts[2]
+            .strip_prefix("inputs=")
+            .ok_or_else(|| Error::Runtime(format!("manifest line {}: bad inputs", lineno + 1)))?;
+        let output = parts[3]
+            .strip_prefix("output=")
+            .ok_or_else(|| Error::Runtime(format!("manifest line {}: bad output", lineno + 1)))?;
+        specs.push(ArtifactSpec {
+            name: parts[0].to_string(),
+            file: parts[1].to_string(),
+            input_shapes: parse_shape_list(inputs)?,
+            output_shape: parse_shape(output)?,
+        });
+    }
+    if specs.is_empty() {
+        return Err(Error::Runtime("empty manifest".into()));
+    }
+    Ok(specs)
+}
+
+/// Parse `f32[a,b,c]`.
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    let body = s
+        .strip_prefix("f32[")
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| Error::Runtime(format!("bad shape {s:?}")))?;
+    body.split(',')
+        .map(|d| {
+            d.parse::<usize>()
+                .map_err(|_| Error::Runtime(format!("bad dim {d:?} in {s:?}")))
+        })
+        .collect()
+}
+
+/// Parse `f32[a,b],f32[c]` — shapes are comma-joined but each closes with `]`.
+fn parse_shape_list(s: &str) -> Result<Vec<Vec<usize>>> {
+    let parts: Vec<&str> = s.split("],").collect();
+    let mut shapes = Vec::new();
+    for (i, chunk) in parts.iter().enumerate() {
+        // Every chunk except the last lost its `]` to the separator; the
+        // last must close itself or the manifest is malformed.
+        let owned = if i + 1 < parts.len() {
+            format!("{chunk}]")
+        } else {
+            chunk.to_string()
+        };
+        shapes.push(parse_shape(&owned)?);
+    }
+    Ok(shapes)
+}
+
+/// The PJRT engine: compiled executables for every artifact.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    specs: HashMap<String, ArtifactSpec>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Default artifact directory: `$PATS_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PATS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// Load and compile every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {}/manifest.txt ({e}); run `make artifacts` first",
+                dir.display()
+            ))
+        })?;
+        let specs = parse_manifest(&manifest)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        let mut spec_map = HashMap::new();
+        for spec in specs {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(spec.name.clone(), exe);
+            spec_map.insert(spec.name.clone(), spec);
+        }
+        Ok(Engine { client, executables, specs: spec_map, dir: dir.to_path_buf() })
+    }
+
+    /// Artifact directory this engine was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names of loaded executables.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.specs.keys().map(String::as_str)
+    }
+
+    /// Spec of one artifact.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the single
+    /// output tensor (all entry points are lowered with `return_tuple=True`
+    /// around one result).
+    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact {name:?}")))?;
+        if inputs.len() != spec.input_shapes.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.input_shapes.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (tensor, want) in inputs.iter().zip(&spec.input_shapes) {
+            if &tensor.shape != want {
+                return Err(Error::Runtime(format!(
+                    "{name}: input shape {:?} != manifest {:?}",
+                    tensor.shape, want
+                )));
+            }
+            let dims: Vec<i64> = tensor.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(&tensor.data).reshape(&dims)?);
+        }
+        let exe = &self.executables[name];
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        if data.len() != spec.output_shape.iter().product::<usize>() {
+            return Err(Error::Runtime(format!(
+                "{name}: output length {} != manifest shape {:?}",
+                data.len(),
+                spec.output_shape
+            )));
+        }
+        Ok(Tensor::new(spec.output_shape.clone(), data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_basics() {
+        let t = Tensor::from_fn(&[2, 3, 1], |i| i as f32);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.at3(1, 2, 0), 5.0);
+        assert_eq!(t.argmax(), 5);
+        let z = Tensor::zeros(&[2, 3, 1]);
+        assert_eq!(t.max_abs_diff(&z), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "detector\tdetector.hlo.txt\tinputs=f32[48,48,3],f32[48,48,3]\toutput=f32[1]\n\
+                    head\thead.hlo.txt\tinputs=f32[6,6,32]\toutput=f32[4]\n";
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "detector");
+        assert_eq!(specs[0].input_shapes, vec![vec![48, 48, 3], vec![48, 48, 3]]);
+        assert_eq!(specs[0].output_shape, vec![1]);
+        assert_eq!(specs[1].input_shapes, vec![vec![6, 6, 32]]);
+        assert_eq!(specs[1].output_shape, vec![4]);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("").is_err());
+        assert!(parse_manifest("a\tb\tc\n").is_err());
+        assert!(parse_manifest("a\tb\tinputs=f32[2\toutput=f32[1]\n").is_err());
+        assert!(parse_manifest("a\tb\tinputs=f32[2]\toutput=i32[1]\n").is_err());
+    }
+
+    #[test]
+    fn shape_list_parsing() {
+        assert_eq!(
+            parse_shape_list("f32[1,2],f32[3]").unwrap(),
+            vec![vec![1, 2], vec![3]]
+        );
+        assert_eq!(parse_shape_list("f32[5]").unwrap(), vec![vec![5]]);
+    }
+}

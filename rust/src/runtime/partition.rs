@@ -1,0 +1,170 @@
+//! Rust-side horizontal partitioning (§3.2).
+//!
+//! The scheduler decides a core configuration (1/2/4); this module executes
+//! the stage-3 CNN at that width: pad the feature map's H axis, split it
+//! into row tiles with a one-row halo, run the per-tile conv artifact for
+//! each tile, stitch the outputs back together, and run the max-pool
+//! artifact over the stitched map — "each partition is processed through a
+//! consecutive block of convolutional layers, then the outputs are combined
+//! into an intermediate output which is processed by the following
+//! max-pooling layer".
+//!
+//! Only the tile *border* changes between the split and the stitched map,
+//! which is the paper's IPC-minimisation observation; here tiles are plain
+//! slices of one address space, so the stitch is a row-range copy.
+
+use crate::error::{Error, Result};
+use crate::runtime::{Engine, Tensor};
+
+/// One halo row per side (3x3 convolutions).
+pub const HALO: usize = 1;
+/// Number of conv blocks in the stage-3 CNN (must match `model.py`).
+pub const NUM_BLOCKS: usize = 3;
+
+/// Zero-pad the H axis by `pad` rows on each side.
+pub fn pad_h(x: &Tensor, pad: usize) -> Tensor {
+    assert_eq!(x.shape.len(), 3);
+    let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let mut out = Tensor::zeros(&[h + 2 * pad, w, c]);
+    let row = w * c;
+    out.data[pad * row..(pad + h) * row].copy_from_slice(&x.data);
+    out
+}
+
+/// Split a pre-padded map into `tiles` row tiles of uniform shape
+/// `(tile_h + 2*halo, W, C)`.
+pub fn split_tiles_with_halo(padded: &Tensor, tiles: usize, halo: usize) -> Vec<Tensor> {
+    let (hp, w, c) = (padded.shape[0], padded.shape[1], padded.shape[2]);
+    let h = hp - 2 * halo;
+    assert_eq!(h % tiles, 0, "H={h} not divisible into {tiles} tiles");
+    let tile_h = h / tiles;
+    let row = w * c;
+    (0..tiles)
+        .map(|i| {
+            let lo = i * tile_h;
+            let hi = lo + tile_h + 2 * halo;
+            Tensor::new(
+                vec![tile_h + 2 * halo, w, c],
+                padded.data[lo * row..hi * row].to_vec(),
+            )
+        })
+        .collect()
+}
+
+/// Reassemble tile outputs along H.
+pub fn stitch_tiles(tiles: &[Tensor]) -> Tensor {
+    assert!(!tiles.is_empty());
+    let (_, w, c) = (tiles[0].shape[0], tiles[0].shape[1], tiles[0].shape[2]);
+    let total_h: usize = tiles.iter().map(|t| t.shape[0]).sum();
+    let mut data = Vec::with_capacity(total_h * w * c);
+    for t in tiles {
+        assert_eq!(&t.shape[1..], &[w, c], "tile width/channel mismatch");
+        data.extend_from_slice(&t.data);
+    }
+    Tensor::new(vec![total_h, w, c], data)
+}
+
+/// Execute the full stage-3 CNN at a horizontal-partitioning width.
+///
+/// `tiles == 1` uses the monolithic per-block artifacts; `tiles ∈ {2, 4}`
+/// mirror the paper's two-core and four-core configurations. Tile
+/// executions within a block are independent — on the testbed they ran on
+/// separate cores; here they run as independent `Engine::execute` calls.
+pub fn run_cnn(engine: &Engine, input: &Tensor, tiles: usize) -> Result<Tensor> {
+    if ![1, 2, 4].contains(&tiles) {
+        return Err(Error::Runtime(format!("unsupported tile count {tiles}")));
+    }
+    let mut x = input.clone();
+    for block in 0..NUM_BLOCKS {
+        let conv_out = if tiles == 1 {
+            engine.execute(&format!("block{block}_full"), &[&x])?
+        } else {
+            let padded = pad_h(&x, HALO);
+            let tile_inputs = split_tiles_with_halo(&padded, tiles, HALO);
+            let name = format!("block{block}_tile{tiles}");
+            let mut outs = Vec::with_capacity(tiles);
+            for t in &tile_inputs {
+                outs.push(engine.execute(&name, &[t])?);
+            }
+            stitch_tiles(&outs)
+        };
+        x = engine.execute(&format!("pool{block}"), &[&conv_out])?;
+    }
+    engine.execute("head", &[&x])
+}
+
+/// Stage-1 foreground detector: score > threshold ⇒ object present.
+pub fn run_detector(engine: &Engine, frame: &Tensor, background: &Tensor) -> Result<f32> {
+    Ok(engine.execute("detector", &[frame, background])?.data[0])
+}
+
+/// Stage-2 classifier: decision value > 0 ⇒ recyclable (spawn stage 3).
+pub fn run_classifier(engine: &Engine, frame: &Tensor) -> Result<f32> {
+    Ok(engine.execute("classifier", &[frame])?.data[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t3(h: usize, w: usize, c: usize) -> Tensor {
+        Tensor::from_fn(&[h, w, c], |i| i as f32)
+    }
+
+    #[test]
+    fn pad_h_adds_zero_rows() {
+        let x = t3(2, 3, 1);
+        let p = pad_h(&x, 1);
+        assert_eq!(p.shape, vec![4, 3, 1]);
+        assert_eq!(&p.data[0..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(&p.data[3..9], &x.data[..]);
+        assert_eq!(&p.data[9..12], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn split_produces_uniform_tiles_with_overlap() {
+        let x = t3(8, 2, 1);
+        let padded = pad_h(&x, 1);
+        let tiles = split_tiles_with_halo(&padded, 4, 1);
+        assert_eq!(tiles.len(), 4);
+        for t in &tiles {
+            assert_eq!(t.shape, vec![4, 2, 1]); // 2 rows + 2 halo
+        }
+        // Tile i's last interior row equals tile i+1's first halo row.
+        assert_eq!(tiles[0].data[6..8], tiles[1].data[2..4]);
+    }
+
+    #[test]
+    fn split_stitch_inner_roundtrip() {
+        let x = t3(12, 3, 2);
+        let padded = pad_h(&x, 1);
+        let tiles = split_tiles_with_halo(&padded, 3, 1);
+        // Drop each tile's halo rows and stitch: recovers the original.
+        let inner: Vec<Tensor> = tiles
+            .iter()
+            .map(|t| {
+                let (h, w, c) = (t.shape[0], t.shape[1], t.shape[2]);
+                Tensor::new(
+                    vec![h - 2, w, c],
+                    t.data[w * c..(h - 1) * w * c].to_vec(),
+                )
+            })
+            .collect();
+        assert_eq!(stitch_tiles(&inner), x);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn split_rejects_ragged() {
+        let padded = pad_h(&t3(7, 2, 1), 1);
+        split_tiles_with_halo(&padded, 4, 1);
+    }
+
+    #[test]
+    fn stitch_validates_shapes() {
+        let a = t3(2, 3, 1);
+        let b = t3(4, 3, 1);
+        let s = stitch_tiles(&[a, b]);
+        assert_eq!(s.shape, vec![6, 3, 1]);
+    }
+}

@@ -1,0 +1,263 @@
+//! The high-priority allocation algorithm (§4).
+//!
+//! "The high priority algorithm first finds the earliest time-slot that can
+//! accommodate the allocation message on the network link ... Next, the
+//! scheduler calculates the processing time-slot [t1, t2] by using the time
+//! the allocated message is expected to arrive on the edge device as t1 and
+//! t2 = t1 + the benchmarked processing time. If the total core usage of
+//! existing tasks that overlap with the processing time-slot plus the
+//! additional core for the high priority task does not exceed the source
+//! device's capacity then the task is allocated. Otherwise the high-priority
+//! task is not allocated. If preemption is enabled and allocation is not
+//! possible the scheduler must generate a preemption request for the source
+//! device at this time-slot."
+
+use std::time::Instant;
+
+use crate::config::SystemConfig;
+use crate::resources::SlotKind;
+use crate::scheduler::{preemption, HpOutcome, PatsScheduler};
+use crate::state::NetworkState;
+use crate::task::{Allocation, TaskId, Window};
+use crate::time::SimTime;
+
+/// Cores a high-priority task occupies (§3.1: "only require one CPU core").
+pub const HP_CORES: u32 = 1;
+
+/// Attempt the three-slot high-priority allocation; fire preemption if
+/// enabled and needed.
+pub fn allocate(
+    sched: &PatsScheduler,
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+) -> HpOutcome {
+    let t0 = Instant::now();
+    if let Some(window) = try_allocate(st, cfg, task, now) {
+        return HpOutcome { window: Some(window), preemption: None, search: t0.elapsed() };
+    }
+    if !sched.preemption {
+        return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+    }
+    // Preemption path: eject the farthest-deadline conflicting low-priority
+    // task on the source device, re-run the allocation, then try to
+    // reallocate the victim (§4).
+    let search = t0.elapsed(); // Fig 9a measures the failed initial search
+    let (window, report) =
+        preemption::preempt_and_retry(sched, st, cfg, task, now, try_allocate);
+    HpOutcome { window, preemption: report, search }
+}
+
+/// One shot of the §4 algorithm, committing all three slots on success:
+/// allocation message → processing window on the source device → state
+/// update. Returns the processing window.
+pub fn try_allocate(
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+) -> Option<Window> {
+    let rec = st.task(task)?;
+    let source = rec.spec.source;
+    let deadline = rec.spec.deadline;
+
+    // 1. Earliest feasible slot for the allocation message on the link.
+    let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
+    let msg_start = st.link.earliest_fit(now, msg_dur);
+    let t1 = msg_start + msg_dur; // expected arrival on the device
+
+    // 2. Processing slot [t1, t2] with the benchmarked (padded) time.
+    let window = Window::from_duration(t1, cfg.hp_slot());
+    if window.end > deadline {
+        return None; // cannot complete before the stage deadline
+    }
+
+    // 3. Core-usage check on the source device.
+    if !st.device(source).fits(&window, HP_CORES) {
+        return None;
+    }
+
+    // Commit: allocation message, processing reservation, state update.
+    st.link
+        .reserve(msg_start, msg_dur, SlotKind::HpAllocMsg, task)
+        .expect("earliest_fit produced occupied hp-alloc slot");
+    st.commit_allocation(Allocation {
+        task,
+        device: source,
+        window,
+        cores: HP_CORES,
+        offloaded: false,
+    })
+    .expect("fits() said the window was free");
+    st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
+    Some(window)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{DeviceId, FrameId, Priority, TaskSpec, TaskState};
+    use crate::time::SimDuration;
+
+    fn setup() -> (SystemConfig, NetworkState, PatsScheduler) {
+        let cfg = SystemConfig::default();
+        let st = NetworkState::new(&cfg);
+        let sched = PatsScheduler { preemption: true, reallocate: true, set_aware_victims: false };
+        (cfg, st, sched)
+    }
+
+    fn hp_task(st: &mut NetworkState, cfg: &SystemConfig, source: u32, now: SimTime) -> TaskId {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(0),
+            source: DeviceId(source),
+            priority: Priority::High,
+            deadline: now + SimDuration::from_secs_f64(cfg.hp_deadline_s),
+            spawn: now,
+            request: None,
+        });
+        id
+    }
+
+    fn lp_task(
+        st: &mut NetworkState,
+        source: u32,
+        deadline: SimTime,
+    ) -> TaskId {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(1),
+            source: DeviceId(source),
+            priority: Priority::Low,
+            deadline,
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        id
+    }
+
+    #[test]
+    fn allocates_on_idle_device() {
+        let (cfg, mut st, mut sched) = setup();
+        let id = hp_task(&mut st, &cfg, 0, SimTime::ZERO);
+        let out = crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
+        assert!(out.allocated());
+        assert!(out.preemption.is_none());
+        let w = out.window.unwrap();
+        // Window starts after the allocation message and lasts the padded slot.
+        assert!(w.start > SimTime::ZERO);
+        assert_eq!(w.duration(), cfg.hp_slot());
+        // Three artefacts: hp-alloc msg + state update on the link, 1 core on dev0.
+        assert_eq!(st.link.len(), 2);
+        assert_eq!(st.device(DeviceId(0)).len(), 1);
+        assert_eq!(st.task(id).unwrap().state, TaskState::Allocated);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn always_local_to_source() {
+        let (cfg, mut st, mut sched) = setup();
+        // Saturate device 2 with an HP-incompatible load? No: give task on dev2
+        // with free dev0 — must still go to dev2.
+        let id = hp_task(&mut st, &cfg, 2, SimTime::ZERO);
+        let out = crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
+        assert!(out.allocated());
+        assert_eq!(st.task(id).unwrap().allocation.as_ref().unwrap().device, DeviceId(2));
+    }
+
+    #[test]
+    fn fails_without_preemption_when_full() {
+        let (cfg, mut st, _) = setup();
+        let mut sched = PatsScheduler { preemption: false, reallocate: false, set_aware_victims: false };
+        // Fill device 0 completely for a long time with an LP task.
+        let blocker = lp_task(&mut st, 0, SimTime::from_secs_f64(60.0));
+        st.commit_allocation(Allocation {
+            task: blocker,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(30.0)),
+            cores: 4,
+            offloaded: false,
+        })
+        .unwrap();
+        let id = hp_task(&mut st, &cfg, 0, SimTime::ZERO);
+        let out = crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
+        assert!(!out.allocated());
+        assert!(out.preemption.is_none());
+        assert_eq!(st.task(id).unwrap().state, TaskState::Pending);
+        // No partial commits leaked.
+        assert_eq!(st.link.len(), 0);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempts_when_enabled_and_full() {
+        let (cfg, mut st, mut sched) = setup();
+        let blocker = lp_task(&mut st, 0, SimTime::from_secs_f64(60.0));
+        st.commit_allocation(Allocation {
+            task: blocker,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(30.0)),
+            cores: 4,
+            offloaded: false,
+        })
+        .unwrap();
+        let id = hp_task(&mut st, &cfg, 0, SimTime::ZERO);
+        let out = crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
+        assert!(out.allocated(), "preemption must free the core");
+        let report = out.preemption.expect("preemption fired");
+        assert_eq!(report.victim, blocker);
+        assert_eq!(report.victim_cores, 4);
+        assert_eq!(st.task(id).unwrap().state, TaskState::Allocated);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn respects_deadline() {
+        let (cfg, mut st, mut sched) = setup();
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(0),
+            source: DeviceId(0),
+            priority: Priority::High,
+            // Deadline shorter than the processing slot: infeasible.
+            deadline: SimTime::from_millis(500),
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        let out = crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
+        assert!(!out.allocated());
+    }
+
+    #[test]
+    fn hp_tasks_share_device_up_to_capacity() {
+        let (cfg, mut st, mut sched) = setup();
+        // cores_per_device = 4 ⇒ four concurrent HP tasks fit, a fifth at
+        // the same instant is pushed out... but HP msg slots serialise on
+        // the link, so all five eventually fit; check the four overlap.
+        let mut windows = Vec::new();
+        for _ in 0..4 {
+            let id = hp_task(&mut st, &cfg, 1, SimTime::ZERO);
+            let out =
+                crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
+            windows.push(out.window.expect("fits"));
+        }
+        assert!(windows[0].overlaps(&windows[3]));
+        let peak = st
+            .device(DeviceId(1))
+            .peak_usage_in(&Window::new(SimTime::ZERO, SimTime::from_secs_f64(2.0)));
+        assert_eq!(peak, 4);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn search_time_is_measured() {
+        let (cfg, mut st, mut sched) = setup();
+        let id = hp_task(&mut st, &cfg, 0, SimTime::ZERO);
+        let out = crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
+        assert!(out.search.as_nanos() > 0);
+    }
+}

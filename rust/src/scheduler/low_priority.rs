@@ -1,0 +1,483 @@
+//! The low-priority allocation algorithm (§4).
+//!
+//! "The low-priority scheduler operates over a set of time points,
+//! representing the completion of existing tasks and the release of their
+//! occupied resources back into the network. This set is constrained to
+//! time-points between the moment the scheduler is called until the request
+//! deadline. At each time point, the scheduler attempts to allocate any
+//! remaining unallocated tasks from the initial request. The scheduler
+//! first reserves the network link for the allocation message as early as
+//! possible and allocates a time window for image transfer (in case the
+//! task is offloaded). Next, the scheduler searches for a device that can
+//! process a given task at the minimum viable resource configuration (e.g.
+//! two-cores) within the processing window ... When selecting a device for
+//! partial allocation, the scheduler prioritises the task's source device
+//! to avoid the need for image data transfer. If that is not possible, it
+//! aims to distribute tasks evenly across devices in the network. After
+//! attempting a partial allocation for each unallocated task, the scheduler
+//! then tries to improve each task's allocation by reducing processing
+//! time, checking if the allocated device can support increased resource
+//! usage. Finally, for each allocated task, the scheduler reserves a state
+//! update message on the network link."
+
+use std::time::Instant;
+
+use crate::config::SystemConfig;
+use crate::resources::SlotKind;
+use crate::scheduler::{LpOutcome, LpPlacement};
+use crate::state::NetworkState;
+use crate::task::{Allocation, CoreConfig, DeviceId, RequestId, TaskId, Window};
+use crate::time::SimTime;
+
+/// Allocate every task of a low-priority request.
+pub fn allocate_request(
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    request: RequestId,
+    now: SimTime,
+) -> LpOutcome {
+    let t0 = Instant::now();
+    let Some(req) = st.request(request) else {
+        return LpOutcome { placements: Vec::new(), unallocated: Vec::new(), search: t0.elapsed() };
+    };
+    let tasks = req.tasks.clone();
+    let source = req.source;
+    let deadline = req.deadline;
+    let (placements, unallocated) = allocate_tasks(st, cfg, &tasks, source, deadline, now);
+    LpOutcome { placements, unallocated, search: t0.elapsed() }
+}
+
+/// Reallocate a single (preempted) task before its own deadline.
+pub fn allocate_single(
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+) -> Option<LpPlacement> {
+    let rec = st.task(task)?;
+    let source = rec.spec.source;
+    let deadline = rec.spec.deadline;
+    let (placements, _) = allocate_tasks(st, cfg, &[task], source, deadline, now);
+    placements.into_iter().next()
+}
+
+/// The time-point search over a set of tasks sharing a source and deadline.
+fn allocate_tasks(
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    tasks: &[TaskId],
+    source: DeviceId,
+    deadline: SimTime,
+    now: SimTime,
+) -> (Vec<LpPlacement>, Vec<TaskId>) {
+    let mut unallocated: Vec<TaskId> = tasks.to_vec();
+    let mut placements: Vec<LpPlacement> = Vec::new();
+
+    // A request that arrives at or past its deadline cannot be placed at
+    // all (live mode: the controller may be invoked late).
+    if now >= deadline {
+        return (placements, unallocated);
+    }
+
+    // Time points: "now" plus every completion of an existing reservation
+    // up to the request deadline.
+    let mut time_points = vec![now];
+    time_points.extend(st.completion_points(now, deadline));
+
+    for tp in time_points {
+        if unallocated.is_empty() {
+            break;
+        }
+        // Partial allocation pass at the minimum viable configuration.
+        let mut placed_this_round: Vec<usize> = Vec::new();
+        unallocated.retain(|&task| {
+            match try_place_min(st, cfg, task, source, tp, deadline, now) {
+                Some(p) => {
+                    placements.push(p);
+                    placed_this_round.push(placements.len() - 1);
+                    false
+                }
+                None => true,
+            }
+        });
+        // Improvement pass: upgrade this round's placements to more cores
+        // where the device can support the increased usage.
+        for idx in placed_this_round {
+            let upgraded = try_improve(st, cfg, &placements[idx]);
+            if let Some(p) = upgraded {
+                placements[idx] = p;
+            }
+            // State update message for the (possibly improved) allocation.
+            let p = &placements[idx];
+            st.reserve_link_message(cfg, p.window.end, SlotKind::StateUpdate, p.task);
+        }
+    }
+    (placements, unallocated)
+}
+
+/// Attempt a partial allocation of `task` at [`CoreConfig::MIN`] starting no
+/// earlier than time point `tp`. Commits link + core reservations on
+/// success; leaves no residue on failure.
+fn try_place_min(
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    source: DeviceId,
+    tp: SimTime,
+    deadline: SimTime,
+    now: SimTime,
+) -> Option<LpPlacement> {
+    let cores = CoreConfig::MIN.cores();
+    let slot = cfg.lp_slot(CoreConfig::MIN.cores());
+
+    // 1. Allocation message as early as possible.
+    let msg_dur = st.link_model.slot_duration(cfg, SlotKind::LpAllocMsg);
+    let msg_start = st.link.earliest_fit(now, msg_dur);
+    let arrival = msg_start + msg_dur;
+
+    // 2a. Source device first (no image transfer).
+    let local_start = arrival.max(tp);
+    let local_window = Window::from_duration(local_start, slot);
+    if local_window.end <= deadline && st.device(source).fits(&local_window, cores) {
+        st.link
+            .reserve(msg_start, msg_dur, SlotKind::LpAllocMsg, task)
+            .expect("earliest_fit produced occupied lp-alloc slot");
+        st.commit_allocation(Allocation {
+            task,
+            device: source,
+            window: local_window,
+            cores,
+            offloaded: false,
+        })
+        .expect("fits() said the local window was free");
+        return Some(LpPlacement {
+            task,
+            device: source,
+            window: local_window,
+            cores,
+            offloaded: false,
+            input_ready: None,
+        });
+    }
+
+    // 2b. Offload: remaining devices, most-idle first (even distribution).
+    let mut candidates: Vec<DeviceId> = st.device_ids().filter(|&d| d != source).collect();
+    candidates.sort_by_key(|&d| {
+        let horizon = Window::new(tp, deadline.max(tp));
+        let busy: u64 = st
+            .device(d)
+            .overlapping(&horizon)
+            .map(|s| s.window.duration().as_micros() * s.cores as u64)
+            .sum();
+        (busy, d.0)
+    });
+
+    for dev in candidates {
+        // Reserve message, then the image transfer right after it; both are
+        // rolled back if the device cannot host the window.
+        let msg_w = match st.link.reserve(msg_start, msg_dur, SlotKind::LpAllocMsg, task) {
+            Ok(w) => w,
+            Err(_) => return None, // link changed under us — cannot happen single-threaded
+        };
+        let xfer_dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
+        let xfer_start = st.link.earliest_fit(msg_w.end, xfer_dur);
+        let xfer_end = xfer_start + xfer_dur;
+        let start = xfer_end.max(tp);
+        let window = Window::from_duration(start, slot);
+        if window.end <= deadline && st.device(dev).fits(&window, cores) {
+            st.link
+                .reserve(xfer_start, xfer_dur, SlotKind::InputTransfer, task)
+                .expect("earliest_fit produced occupied transfer slot");
+            st.commit_allocation(Allocation {
+                task,
+                device: dev,
+                window,
+                cores,
+                offloaded: true,
+            })
+            .expect("fits() said the offload window was free");
+            return Some(LpPlacement {
+                task,
+                device: dev,
+                window,
+                cores,
+                offloaded: true,
+                input_ready: Some(xfer_end),
+            });
+        }
+        // Roll back the tentative message slot and try the next device.
+        st.link.remove_owner(task);
+    }
+    None
+}
+
+/// The improvement pass: try to raise a placement to the next core
+/// configuration, shrinking its processing window.
+fn try_improve(
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    p: &LpPlacement,
+) -> Option<LpPlacement> {
+    let current = CoreConfig::from_cores(p.cores)?;
+    let next = current.upgrade()?;
+    let new_window = Window::from_duration(p.window.start, cfg.lp_slot(next.cores()));
+    debug_assert!(new_window.end <= p.window.end, "upgrades must shrink the window");
+
+    // Re-reserve atomically: drop the old core slot, try the wider one,
+    // restore on failure.
+    let rec = st.task(p.task)?.clone();
+    let removed = st.device_mut(p.device).remove_task(p.task);
+    debug_assert_eq!(removed, 1);
+    let deadline = rec.spec.deadline;
+    let result = st.device_mut(p.device).reserve(
+        new_window,
+        next.cores(),
+        p.task,
+        deadline,
+        true,
+    );
+    match result {
+        Ok(()) => {
+            let alloc = Allocation {
+                task: p.task,
+                device: p.device,
+                window: new_window,
+                cores: next.cores(),
+                offloaded: p.offloaded,
+            };
+            st.task_mut(p.task).unwrap().allocation = Some(alloc);
+            Some(LpPlacement {
+                cores: next.cores(),
+                window: new_window,
+                ..p.clone()
+            })
+        }
+        Err(_) => {
+            st.device_mut(p.device)
+                .reserve(p.window, p.cores, p.task, deadline, true)
+                .expect("restoring the original reservation cannot fail");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{FrameId, LpRequest, Priority, TaskSpec, TaskState};
+
+    fn setup() -> (SystemConfig, NetworkState) {
+        let cfg = SystemConfig::default();
+        let st = NetworkState::new(&cfg);
+        (cfg, st)
+    }
+
+    /// Register an LP request of `n` tasks from `source` with the frame
+    /// deadline at `deadline_s` seconds.
+    fn lp_request(
+        st: &mut NetworkState,
+        source: u32,
+        n: usize,
+        deadline_s: f64,
+    ) -> RequestId {
+        let rid = st.fresh_request_id();
+        let deadline = SimTime::from_secs_f64(deadline_s);
+        let mut tasks = Vec::new();
+        for _ in 0..n {
+            let id = st.fresh_task_id();
+            st.register_task(TaskSpec {
+                id,
+                frame: FrameId(7),
+                source: DeviceId(source),
+                priority: Priority::Low,
+                deadline,
+                spawn: SimTime::ZERO,
+                request: Some(rid),
+            });
+            tasks.push(id);
+        }
+        st.register_request(LpRequest {
+            id: rid,
+            frame: FrameId(7),
+            source: DeviceId(source),
+            deadline,
+            spawn: SimTime::ZERO,
+            tasks,
+        });
+        rid
+    }
+
+    #[test]
+    fn single_task_gets_four_cores_locally() {
+        // One DNN task on an idle network: placed at MIN then improved to
+        // the four-core configuration on its own device (§3.2: "When a
+        // single DNN task is generated ... it can be executed in the
+        // four-core configuration").
+        let (cfg, mut st) = setup();
+        let rid = lp_request(&mut st, 0, 1, 18.86);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        assert!(out.fully_allocated());
+        let p = &out.placements[0];
+        assert_eq!(p.device, DeviceId(0));
+        assert_eq!(p.cores, 4, "improvement pass upgrades a lone task");
+        assert!(!p.offloaded);
+        assert_eq!(p.window.duration(), cfg.lp_slot(4));
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn two_tasks_share_source_at_two_cores() {
+        let (cfg, mut st) = setup();
+        let rid = lp_request(&mut st, 1, 2, 18.86);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        assert!(out.fully_allocated());
+        // Both fit locally at 2 cores; the improvement pass cannot upgrade
+        // either to 4 (the sibling holds the other two cores).
+        for p in &out.placements {
+            assert_eq!(p.device, DeviceId(1));
+            assert_eq!(p.cores, 2);
+            assert!(!p.offloaded);
+        }
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn overflow_tasks_offload_with_transfer() {
+        let (cfg, mut st) = setup();
+        let rid = lp_request(&mut st, 0, 3, 18.86);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        assert!(out.fully_allocated());
+        let offloaded: Vec<_> = out.placements.iter().filter(|p| p.offloaded).collect();
+        assert_eq!(offloaded.len(), 1, "two fit locally, the third offloads");
+        let p = offloaded[0];
+        assert!(p.input_ready.is_some());
+        assert!(p.input_ready.unwrap() <= p.window.start);
+        // The transfer occupies the link.
+        let transfers = st
+            .link
+            .slots()
+            .iter()
+            .filter(|s| s.kind == SlotKind::InputTransfer)
+            .count();
+        assert_eq!(transfers, 1);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn four_tasks_spread_evenly() {
+        let (cfg, mut st) = setup();
+        let rid = lp_request(&mut st, 0, 4, 18.86);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        assert!(out.fully_allocated());
+        let mut by_dev = std::collections::BTreeMap::new();
+        for p in &out.placements {
+            *by_dev.entry(p.device.0).or_insert(0u32) += 1;
+        }
+        // Two local + two spread over distinct other devices.
+        assert_eq!(by_dev.get(&0), Some(&2));
+        assert_eq!(by_dev.len(), 3, "offloads balanced across devices: {by_dev:?}");
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn uses_future_time_points_when_now_is_full() {
+        let (cfg, mut st) = setup();
+        // Pre-fill every device's cores until t=8s.
+        let mut blockers = Vec::new();
+        for d in 0..4u32 {
+            let id = st.fresh_task_id();
+            st.register_task(TaskSpec {
+                id,
+                frame: FrameId(0),
+                source: DeviceId(d),
+                priority: Priority::Low,
+                deadline: SimTime::from_secs_f64(60.0),
+                spawn: SimTime::ZERO,
+                request: None,
+            });
+            st.commit_allocation(Allocation {
+                task: id,
+                device: DeviceId(d),
+                window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(8.0)),
+                cores: 4,
+                offloaded: false,
+            })
+            .unwrap();
+            blockers.push(id);
+        }
+        // Deadline 30 s: the 2-core slot (≈19 s) fits only if it starts at
+        // the t=8 s completion point.
+        let rid = lp_request(&mut st, 0, 1, 30.0);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        assert!(out.fully_allocated());
+        let p = &out.placements[0];
+        assert_eq!(p.window.start, SimTime::from_secs_f64(8.0));
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fails_when_deadline_too_tight() {
+        let (cfg, mut st) = setup();
+        // Deadline shorter than even the 4-core slot.
+        let rid = lp_request(&mut st, 0, 1, 5.0);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        assert!(!out.fully_allocated());
+        assert_eq!(out.unallocated.len(), 1);
+        // No resource residue.
+        assert_eq!(st.link.len(), 0);
+        assert_eq!(st.device(DeviceId(0)).len(), 0);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn state_updates_reserved_per_placement() {
+        let (cfg, mut st) = setup();
+        let rid = lp_request(&mut st, 0, 2, 18.86);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        assert!(out.fully_allocated());
+        let updates = st
+            .link
+            .slots()
+            .iter()
+            .filter(|s| s.kind == SlotKind::StateUpdate)
+            .count();
+        assert_eq!(updates, 2);
+        for p in &out.placements {
+            let upd = st
+                .link
+                .slots()
+                .iter()
+                .find(|s| s.kind == SlotKind::StateUpdate && s.owner == p.task)
+                .unwrap();
+            assert!(upd.window.start >= p.window.end, "update after processing");
+        }
+    }
+
+    #[test]
+    fn allocate_single_reallocates_a_preempted_task() {
+        let (cfg, mut st) = setup();
+        let rid = lp_request(&mut st, 2, 1, 18.86);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        let task = out.placements[0].task;
+        st.preempt_task(task, SimTime::from_secs_f64(1.0)).unwrap();
+        let p = allocate_single(&mut st, &cfg, task, SimTime::from_secs_f64(1.0));
+        let p = p.expect("idle network: reallocation must succeed");
+        assert_eq!(st.task(task).unwrap().state, TaskState::Allocated);
+        assert!(p.window.end <= SimTime::from_secs_f64(18.86));
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tasks_marked_allocated_in_registry() {
+        let (cfg, mut st) = setup();
+        let rid = lp_request(&mut st, 0, 2, 18.86);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        for p in &out.placements {
+            let rec = st.task(p.task).unwrap();
+            assert_eq!(rec.state, TaskState::Allocated);
+            let alloc = rec.allocation.as_ref().unwrap();
+            assert_eq!(alloc.cores, p.cores);
+            assert_eq!(alloc.device, p.device);
+        }
+    }
+}

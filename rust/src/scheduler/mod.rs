@@ -1,0 +1,190 @@
+//! Allocation policies.
+//!
+//! [`Policy`] is the interface the coordinator drives: the paper's
+//! time-slotted scheduler ([`PatsScheduler`]) implements it, and so do the
+//! two workstealer baselines (`crate::workstealer`), so every experiment
+//! runs the same event loop with a different policy plugged in.
+
+pub mod high_priority;
+pub mod low_priority;
+pub mod preemption;
+
+use crate::config::SystemConfig;
+use crate::state::NetworkState;
+use crate::task::{DeviceId, RequestId, TaskId, Window};
+use crate::time::SimTime;
+
+/// One committed low-priority placement.
+#[derive(Debug, Clone)]
+pub struct LpPlacement {
+    pub task: TaskId,
+    pub device: DeviceId,
+    /// Processing window reserved on the device.
+    pub window: Window,
+    pub cores: u32,
+    pub offloaded: bool,
+    /// End of the input-transfer slot (offloaded tasks only): the earliest
+    /// moment the input is on the device.
+    pub input_ready: Option<SimTime>,
+}
+
+/// Report of one preemption invocation (drives Table 3 / Fig 7).
+#[derive(Debug, Clone)]
+pub struct PreemptionReport {
+    pub victim: TaskId,
+    /// Core configuration the victim held when ejected (Fig 7).
+    pub victim_cores: u32,
+    /// Whether the victim was already inside its processing window when
+    /// preempted (vs still waiting for it).
+    pub victim_was_running: bool,
+    /// Reallocation attempt result (Table 3).
+    pub reallocation: Option<LpPlacement>,
+    /// Wall-clock time of the reallocation search (component of the
+    /// paper's Fig 9b "reallocation time").
+    pub realloc_search: std::time::Duration,
+}
+
+/// Outcome of a high-priority allocation attempt.
+#[derive(Debug, Clone)]
+pub struct HpOutcome {
+    /// The committed processing window on the source device, if successful.
+    pub window: Option<Window>,
+    /// Set when the preemption mechanism had to fire to make room.
+    pub preemption: Option<PreemptionReport>,
+    /// Wall-clock search time of the allocation itself (Fig 9a).
+    pub search: std::time::Duration,
+}
+
+impl HpOutcome {
+    pub fn allocated(&self) -> bool {
+        self.window.is_some()
+    }
+}
+
+/// Outcome of a low-priority request allocation.
+#[derive(Debug, Clone)]
+pub struct LpOutcome {
+    pub placements: Vec<LpPlacement>,
+    /// Tasks the policy could not place before the deadline.
+    pub unallocated: Vec<TaskId>,
+    /// Wall-clock search time (Fig 10).
+    pub search: std::time::Duration,
+}
+
+impl LpOutcome {
+    pub fn fully_allocated(&self) -> bool {
+        self.unallocated.is_empty()
+    }
+}
+
+/// An allocation policy driven by the coordinator.
+pub trait Policy {
+    /// A high-priority (stage-2) task request arrived at the controller.
+    fn allocate_hp(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        task: TaskId,
+        now: SimTime,
+    ) -> HpOutcome;
+
+    /// A low-priority (stage-3) request of 1–4 DNN tasks arrived.
+    fn allocate_lp(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        request: RequestId,
+        now: SimTime,
+    ) -> LpOutcome;
+
+    /// A task finished (completed, failed, or violated). Workstealers use
+    /// this to pull queued work onto the freed cores; the scheduler has
+    /// already planned ahead and returns no new placements.
+    fn on_task_end(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        task: TaskId,
+        now: SimTime,
+    ) -> Vec<LpPlacement>;
+
+    /// Periodic wake-up for policies that poll for work (workstealers).
+    /// Returns any placements the wake-up produced. Default: nothing.
+    fn poll(
+        &mut self,
+        _st: &mut NetworkState,
+        _cfg: &SystemConfig,
+        _dev: DeviceId,
+        _now: SimTime,
+    ) -> Vec<LpPlacement> {
+        Vec::new()
+    }
+
+    /// Poll period in seconds, if this policy wants periodic wake-ups.
+    fn poll_interval(&self) -> Option<f64> {
+        None
+    }
+
+    /// Human-readable policy name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's preemption-aware time-slotted scheduler.
+pub struct PatsScheduler {
+    /// Preemption mechanism enabled (the paper's main toggle).
+    pub preemption: bool,
+    /// Attempt to reallocate preempted victims (§4, Table 3).
+    pub reallocate: bool,
+    /// §8 extension: prefer victims from already-doomed request sets.
+    pub set_aware_victims: bool,
+}
+
+impl PatsScheduler {
+    pub fn from_config(cfg: &SystemConfig) -> PatsScheduler {
+        PatsScheduler {
+            preemption: cfg.preemption,
+            reallocate: cfg.reallocate_preempted,
+            set_aware_victims: cfg.set_aware_victims,
+        }
+    }
+}
+
+impl Policy for PatsScheduler {
+    fn allocate_hp(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        task: TaskId,
+        now: SimTime,
+    ) -> HpOutcome {
+        high_priority::allocate(self, st, cfg, task, now)
+    }
+
+    fn allocate_lp(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        request: RequestId,
+        now: SimTime,
+    ) -> LpOutcome {
+        low_priority::allocate_request(st, cfg, request, now)
+    }
+
+    fn on_task_end(
+        &mut self,
+        _st: &mut NetworkState,
+        _cfg: &SystemConfig,
+        _task: TaskId,
+        _now: SimTime,
+    ) -> Vec<LpPlacement> {
+        Vec::new() // the scheduler plans ahead; nothing to do reactively
+    }
+
+    fn name(&self) -> &'static str {
+        if self.preemption {
+            "scheduler+preemption"
+        } else {
+            "scheduler"
+        }
+    }
+}

@@ -1,0 +1,450 @@
+//! The deadline-aware preemption mechanism (§4).
+//!
+//! "When the high-priority scheduler fails to allocate a high-priority
+//! task, it begins the preemption process, where it iterates over the tasks
+//! source device and selects a single conflicting task with the farthest
+//! deadline for preemption. It then re-runs the high-priority scheduler for
+//! the failed task and finally attempts to reallocate the preempted
+//! low-priority task by searching for a device can execute it before its
+//! deadline."
+
+use std::time::Instant;
+
+use crate::config::SystemConfig;
+use crate::resources::SlotKind;
+use crate::scheduler::{low_priority, PatsScheduler, PreemptionReport};
+use crate::state::NetworkState;
+use crate::task::{FailReason, TaskId, Window};
+use crate::time::SimTime;
+
+/// Signature of the single-shot high-priority allocator being retried.
+pub type RetryFn = fn(&mut NetworkState, &SystemConfig, TaskId, SimTime) -> Option<Window>;
+
+/// Eject the farthest-deadline conflicting low-priority task on the source
+/// device, re-run the high-priority allocation, then try to reallocate the
+/// victim.
+pub fn preempt_and_retry(
+    sched: &PatsScheduler,
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+    retry: RetryFn,
+) -> (Option<Window>, Option<PreemptionReport>) {
+    let Some(rec) = st.task(task) else {
+        return (None, None);
+    };
+    let source = rec.spec.source;
+
+    // Reconstruct the conflicting processing window the failed attempt
+    // wanted (same arithmetic as high_priority::try_allocate).
+    let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
+    let t1 = st.link.earliest_fit(now, msg_dur) + msg_dur;
+    let window = Window::from_duration(t1, cfg.hp_slot());
+
+    // Select the victim: conflicting, preemptible, farthest deadline. With
+    // the §8 set-aware extension, a candidate whose request set is already
+    // doomed (a sibling terminally failed) is preferred — ejecting it
+    // cannot sink an otherwise-completable frame. Ties keep the
+    // farthest-deadline order.
+    let candidates = st.device(source).preemption_candidates(&window);
+    let chosen = if sched.set_aware_victims {
+        candidates
+            .iter()
+            .find(|slot| {
+                st.task(slot.task)
+                    .and_then(|rec| rec.spec.request)
+                    .and_then(|rid| st.request(rid))
+                    .map(|req| {
+                        req.tasks.iter().any(|t| {
+                            matches!(
+                                st.task(*t).map(|r| &r.state),
+                                Some(crate::task::TaskState::Failed(_))
+                            )
+                        })
+                    })
+                    .unwrap_or(false)
+            })
+            .or_else(|| candidates.first())
+    } else {
+        candidates.first()
+    };
+    let victim = match chosen {
+        Some(slot) => (slot.task, slot.cores, slot.window.start <= now),
+        None => return (None, None), // nothing preemptible conflicts
+    };
+    let (victim_id, victim_cores, victim_was_running) = victim;
+
+    // Eject: release the victim's core + future link reservations and send
+    // the preemption notice over the link.
+    st.preempt_task(victim_id, now)
+        .expect("candidate came from the device timeline");
+    st.reserve_link_message(cfg, now, SlotKind::PreemptMsg, victim_id);
+
+    // Re-run the high-priority allocation.
+    let hp_window = retry(st, cfg, task, now);
+
+    // Attempt to reallocate the victim before its own deadline.
+    let t0 = Instant::now();
+    let reallocation = if sched.reallocate {
+        low_priority::allocate_single(st, cfg, victim_id, now)
+    } else {
+        None
+    };
+    let realloc_search = t0.elapsed();
+    if reallocation.is_none() {
+        st.fail_task(victim_id, FailReason::Preempted, now);
+    }
+
+    (
+        hp_window,
+        Some(PreemptionReport {
+            victim: victim_id,
+            victim_cores,
+            victim_was_running,
+            reallocation,
+            realloc_search,
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::high_priority;
+    use crate::task::{Allocation, DeviceId, FrameId, Priority, TaskSpec, TaskState};
+
+    fn setup() -> (SystemConfig, NetworkState, PatsScheduler) {
+        let cfg = SystemConfig::default();
+        let st = NetworkState::new(&cfg);
+        (cfg, st, PatsScheduler { preemption: true, reallocate: true, set_aware_victims: false })
+    }
+
+    fn register(
+        st: &mut NetworkState,
+        source: u32,
+        priority: Priority,
+        deadline: SimTime,
+    ) -> TaskId {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(0),
+            source: DeviceId(source),
+            priority,
+            deadline,
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        id
+    }
+
+    fn block_device(st: &mut NetworkState, dev: u32, id: TaskId, cores: u32, until_s: f64) {
+        st.commit_allocation(Allocation {
+            task: id,
+            device: DeviceId(dev),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(until_s)),
+            cores,
+            offloaded: false,
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn selects_farthest_deadline_victim() {
+        let (cfg, mut st, sched) = setup();
+        let near = register(&mut st, 0, Priority::Low, SimTime::from_secs_f64(20.0));
+        let far = register(&mut st, 0, Priority::Low, SimTime::from_secs_f64(40.0));
+        block_device(&mut st, 0, near, 2, 12.0);
+        block_device(&mut st, 0, far, 2, 12.0);
+        let hp = register(
+            &mut st,
+            0,
+            Priority::High,
+            SimTime::from_secs_f64(cfg.hp_deadline_s),
+        );
+        let (win, report) = preempt_and_retry(
+            &sched,
+            &mut st,
+            &cfg,
+            hp,
+            SimTime::ZERO,
+            high_priority::try_allocate,
+        );
+        assert!(win.is_some());
+        let report = report.unwrap();
+        assert_eq!(report.victim, far, "farthest deadline is selected");
+        assert_eq!(report.victim_cores, 2);
+        assert!(report.victim_was_running);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn victim_reallocated_on_idle_network() {
+        let (cfg, mut st, sched) = setup();
+        let victim = register(&mut st, 0, Priority::Low, SimTime::from_secs_f64(40.0));
+        block_device(&mut st, 0, victim, 4, 12.0);
+        let hp = register(
+            &mut st,
+            0,
+            Priority::High,
+            SimTime::from_secs_f64(cfg.hp_deadline_s),
+        );
+        let (win, report) = preempt_and_retry(
+            &sched,
+            &mut st,
+            &cfg,
+            hp,
+            SimTime::ZERO,
+            high_priority::try_allocate,
+        );
+        assert!(win.is_some());
+        let report = report.unwrap();
+        let realloc = report.reallocation.expect("an idle network must host the victim");
+        // The LP reallocator prefers the source device: after ejection the
+        // source has 3 free cores, so the victim re-lands locally at the
+        // minimum configuration (no new input transfer needed).
+        assert_eq!(realloc.device, DeviceId(0));
+        assert!(!realloc.offloaded);
+        assert_eq!(realloc.cores, 2);
+        assert_eq!(st.task(victim).unwrap().state, TaskState::Allocated);
+        assert_eq!(st.task(victim).unwrap().preemptions, 1);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn victim_fails_when_no_reallocation_possible() {
+        let (cfg, mut st, sched) = setup();
+        // Victim's deadline leaves no room to re-run a ~19 s slot.
+        let victim = register(&mut st, 0, Priority::Low, SimTime::from_secs_f64(13.0));
+        block_device(&mut st, 0, victim, 4, 12.0);
+        let hp = register(
+            &mut st,
+            0,
+            Priority::High,
+            SimTime::from_secs_f64(cfg.hp_deadline_s),
+        );
+        let (win, report) = preempt_and_retry(
+            &sched,
+            &mut st,
+            &cfg,
+            hp,
+            SimTime::ZERO,
+            high_priority::try_allocate,
+        );
+        assert!(win.is_some());
+        let report = report.unwrap();
+        assert!(report.reallocation.is_none());
+        assert_eq!(
+            st.task(victim).unwrap().state,
+            TaskState::Failed(FailReason::Preempted)
+        );
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn no_candidates_when_conflicts_are_high_priority() {
+        let (cfg, mut st, sched) = setup();
+        // Fill the device with non-preemptible HP tasks.
+        for _ in 0..4 {
+            let id = register(
+                &mut st,
+                0,
+                Priority::High,
+                SimTime::from_secs_f64(cfg.hp_deadline_s),
+            );
+            st.commit_allocation(Allocation {
+                task: id,
+                device: DeviceId(0),
+                window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(1.2)),
+                cores: 1,
+                offloaded: false,
+            })
+            .unwrap();
+        }
+        let hp = register(
+            &mut st,
+            0,
+            Priority::High,
+            SimTime::from_secs_f64(cfg.hp_deadline_s),
+        );
+        let (win, report) = preempt_and_retry(
+            &sched,
+            &mut st,
+            &cfg,
+            hp,
+            SimTime::ZERO,
+            high_priority::try_allocate,
+        );
+        assert!(win.is_none());
+        assert!(report.is_none(), "high-priority tasks are never victims");
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn no_reallocate_flag_fails_victim_immediately() {
+        let (cfg, mut st, _) = setup();
+        let sched = PatsScheduler { preemption: true, reallocate: false, set_aware_victims: false };
+        let victim = register(&mut st, 0, Priority::Low, SimTime::from_secs_f64(60.0));
+        block_device(&mut st, 0, victim, 4, 12.0);
+        let hp = register(
+            &mut st,
+            0,
+            Priority::High,
+            SimTime::from_secs_f64(cfg.hp_deadline_s),
+        );
+        let (_, report) = preempt_and_retry(
+            &sched,
+            &mut st,
+            &cfg,
+            hp,
+            SimTime::ZERO,
+            high_priority::try_allocate,
+        );
+        assert!(report.unwrap().reallocation.is_none());
+        assert_eq!(
+            st.task(victim).unwrap().state,
+            TaskState::Failed(FailReason::Preempted)
+        );
+    }
+
+    #[test]
+    fn preempt_message_reserved_on_link() {
+        let (cfg, mut st, sched) = setup();
+        let victim = register(&mut st, 0, Priority::Low, SimTime::from_secs_f64(60.0));
+        block_device(&mut st, 0, victim, 4, 12.0);
+        let hp = register(
+            &mut st,
+            0,
+            Priority::High,
+            SimTime::from_secs_f64(cfg.hp_deadline_s),
+        );
+        preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO, high_priority::try_allocate);
+        let preempts = st
+            .link
+            .slots()
+            .iter()
+            .filter(|s| s.kind == SlotKind::PreemptMsg)
+            .count();
+        assert_eq!(preempts, 1);
+    }
+}
+
+#[cfg(test)]
+mod set_aware_tests {
+    use super::*;
+    use crate::scheduler::high_priority;
+    use crate::task::{Allocation, DeviceId, FrameId, LpRequest, Priority, TaskSpec, Window};
+
+    /// Build the contention scene: a doomed set's task + a healthy task
+    /// with a farther deadline saturating device 0, plus a pending HP task.
+    fn scene() -> (SystemConfig, NetworkState, TaskId, TaskId, TaskId) {
+        let cfg = SystemConfig::default();
+        let mut st = NetworkState::new(&cfg);
+
+        // Doomed set: task A (allocated, deadline 30 s) + sibling B (failed).
+        let rid = st.fresh_request_id();
+        let a = st.fresh_task_id();
+        let b = st.fresh_task_id();
+        for (id, dl) in [(a, 30.0), (b, 30.0)] {
+            st.register_task(TaskSpec {
+                id,
+                frame: FrameId(1),
+                source: DeviceId(0),
+                priority: Priority::Low,
+                deadline: SimTime::from_secs_f64(dl),
+                spawn: SimTime::ZERO,
+                request: Some(rid),
+            });
+        }
+        st.register_request(LpRequest {
+            id: rid,
+            frame: FrameId(1),
+            source: DeviceId(0),
+            deadline: SimTime::from_secs_f64(30.0),
+            spawn: SimTime::ZERO,
+            tasks: vec![a, b],
+        });
+        st.fail_task(b, FailReason::NoResources, SimTime::ZERO);
+        st.commit_allocation(Allocation {
+            task: a,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+
+        // Healthy lone task with a FARTHER deadline (the paper's rule would
+        // pick this one and sink a completable frame).
+        let healthy = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id: healthy,
+            frame: FrameId(2),
+            source: DeviceId(0),
+            priority: Priority::Low,
+            deadline: SimTime::from_secs_f64(60.0),
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        st.commit_allocation(Allocation {
+            task: healthy,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+
+        let hp = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id: hp,
+            frame: FrameId(3),
+            source: DeviceId(0),
+            priority: Priority::High,
+            deadline: SimTime::from_secs_f64(cfg.hp_deadline_s),
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        (cfg, st, a, healthy, hp)
+    }
+
+    #[test]
+    fn baseline_rule_ejects_farthest_deadline() {
+        // The paper's rule picks the healthy lone task (deadline 60 s),
+        // sinking a completable frame.
+        let (cfg, mut st, _a, healthy, hp) = scene();
+        let sched =
+            PatsScheduler { preemption: true, reallocate: false, set_aware_victims: false };
+        let (win, report) = preempt_and_retry(
+            &sched,
+            &mut st,
+            &cfg,
+            hp,
+            SimTime::ZERO,
+            high_priority::try_allocate,
+        );
+        assert!(win.is_some());
+        assert_eq!(report.unwrap().victim, healthy);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn set_aware_rule_prefers_doomed_set() {
+        // §8 extension: the doomed set's task is ejected instead.
+        let (cfg, mut st, a, _healthy, hp) = scene();
+        let sched =
+            PatsScheduler { preemption: true, reallocate: false, set_aware_victims: true };
+        let (win, report) = preempt_and_retry(
+            &sched,
+            &mut st,
+            &cfg,
+            hp,
+            SimTime::ZERO,
+            high_priority::try_allocate,
+        );
+        assert!(win.is_some());
+        assert_eq!(report.unwrap().victim, a, "victim comes from the doomed set");
+        st.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,474 @@
+//! The controller's tracked view of the network (§3: "the controller's
+//! perception of network state is maintained by tracking placement
+//! decisions and the result of executed tasks").
+//!
+//! Owns the link timeline, one core timeline per device, and the registry
+//! of every task/request the controller has seen. All scheduler policies
+//! (the paper's scheduler and both workstealers) mutate network state only
+//! through this type, so the reservation invariants live in one place.
+
+use std::collections::HashMap;
+
+use crate::config::SystemConfig;
+use crate::error::{Error, Result};
+use crate::net::LinkModel;
+use crate::resources::{CoreTimeline, SlotKind, Timeline};
+use crate::task::{
+    Allocation, DeviceId, FailReason, LpRequest, Priority, RequestId, TaskId, TaskSpec,
+    TaskState, Window,
+};
+use crate::time::SimTime;
+
+/// Registry entry for one task.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub spec: TaskSpec,
+    pub state: TaskState,
+    pub allocation: Option<Allocation>,
+    /// How many times this task has been preempted.
+    pub preemptions: u32,
+}
+
+/// The controller's network state.
+pub struct NetworkState {
+    pub link: Timeline,
+    devices: Vec<CoreTimeline>,
+    tasks: HashMap<TaskId, TaskRecord>,
+    requests: HashMap<RequestId, LpRequest>,
+    next_task: u64,
+    next_request: u64,
+    pub link_model: LinkModel,
+}
+
+impl NetworkState {
+    pub fn new(cfg: &SystemConfig) -> NetworkState {
+        NetworkState {
+            link: Timeline::new(),
+            devices: (0..cfg.devices)
+                .map(|_| CoreTimeline::new(cfg.cores_per_device))
+                .collect(),
+            tasks: HashMap::new(),
+            requests: HashMap::new(),
+            next_task: 0,
+            next_request: 0,
+            link_model: LinkModel::new(cfg),
+        }
+    }
+
+    // ---- id allocation -------------------------------------------------
+
+    pub fn fresh_task_id(&mut self) -> TaskId {
+        let id = TaskId(self.next_task);
+        self.next_task += 1;
+        id
+    }
+
+    pub fn fresh_request_id(&mut self) -> RequestId {
+        let id = RequestId(self.next_request);
+        self.next_request += 1;
+        id
+    }
+
+    // ---- registry ------------------------------------------------------
+
+    pub fn register_task(&mut self, spec: TaskSpec) {
+        let id = spec.id;
+        let prev = self.tasks.insert(
+            id,
+            TaskRecord { spec, state: TaskState::Pending, allocation: None, preemptions: 0 },
+        );
+        assert!(prev.is_none(), "task {id:?} registered twice");
+    }
+
+    pub fn register_request(&mut self, req: LpRequest) {
+        let prev = self.requests.insert(req.id, req);
+        assert!(prev.is_none(), "request registered twice");
+    }
+
+    pub fn task(&self, id: TaskId) -> Option<&TaskRecord> {
+        self.tasks.get(&id)
+    }
+
+    pub fn task_mut(&mut self, id: TaskId) -> Option<&mut TaskRecord> {
+        self.tasks.get_mut(&id)
+    }
+
+    pub fn request(&self, id: RequestId) -> Option<&LpRequest> {
+        self.requests.get(&id)
+    }
+
+    pub fn tasks(&self) -> impl Iterator<Item = &TaskRecord> {
+        self.tasks.values()
+    }
+
+    pub fn requests(&self) -> impl Iterator<Item = &LpRequest> {
+        self.requests.values()
+    }
+
+    /// Total tasks currently holding reservations — the paper's search-time
+    /// driver ("proportional to the number of tasks allocated in the
+    /// network", §6.3).
+    pub fn active_allocations(&self) -> usize {
+        self.tasks
+            .values()
+            .filter(|r| r.state.is_active_allocation())
+            .count()
+    }
+
+    // ---- resources -----------------------------------------------------
+
+    pub fn device(&self, d: DeviceId) -> &CoreTimeline {
+        &self.devices[d.0 as usize]
+    }
+
+    pub fn device_mut(&mut self, d: DeviceId) -> &mut CoreTimeline {
+        &mut self.devices[d.0 as usize]
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device_ids(&self) -> impl Iterator<Item = DeviceId> {
+        (0..self.devices.len() as u32).map(DeviceId)
+    }
+
+    /// Union of completion time-points across every device in `(after,
+    /// until]`, ascending — the LP scheduler's search set (§4).
+    pub fn completion_points(&self, after: SimTime, until: SimTime) -> Vec<SimTime> {
+        let mut v: Vec<SimTime> = self
+            .devices
+            .iter()
+            .flat_map(|d| d.completion_points(after, until))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    // ---- allocation lifecycle -------------------------------------------
+
+    /// Commit a placement: reserve cores and record the allocation.
+    /// (Link slots are reserved separately by the policy, which knows which
+    /// messages the placement needs.)
+    pub fn commit_allocation(&mut self, alloc: Allocation) -> Result<()> {
+        let rec = self
+            .tasks
+            .get(&alloc.task)
+            .ok_or_else(|| Error::Invariant(format!("unknown task {:?}", alloc.task)))?;
+        let deadline = rec.spec.deadline;
+        let preemptible = rec.spec.priority == Priority::Low;
+        self.devices[alloc.device.0 as usize].reserve(
+            alloc.window,
+            alloc.cores,
+            alloc.task,
+            deadline,
+            preemptible,
+        )?;
+        let rec = self.tasks.get_mut(&alloc.task).unwrap();
+        rec.allocation = Some(alloc);
+        rec.state = TaskState::Allocated;
+        Ok(())
+    }
+
+    /// Mark a task running (its processing window began on the device).
+    pub fn mark_running(&mut self, id: TaskId) {
+        if let Some(rec) = self.tasks.get_mut(&id) {
+            debug_assert_eq!(rec.state, TaskState::Allocated, "{id:?}");
+            rec.state = TaskState::Running;
+        }
+    }
+
+    /// Apply a completion state-update: release remaining resources (§7.1 —
+    /// state updates exist precisely to purge completed tasks from the
+    /// controller's view).
+    pub fn complete_task(&mut self, id: TaskId, _now: SimTime) {
+        if let Some(rec) = self.tasks.get_mut(&id) {
+            rec.state = TaskState::Completed;
+            if let Some(alloc) = &rec.allocation {
+                let device = alloc.device;
+                self.devices[device.0 as usize].remove_task(id);
+            }
+        }
+    }
+
+    /// Terminal failure: release everything this task still holds. The
+    /// last allocation stays on the record so metrics can attribute the
+    /// failure (offloaded vs local, core config).
+    pub fn fail_task(&mut self, id: TaskId, reason: FailReason, now: SimTime) {
+        if let Some(rec) = self.tasks.get_mut(&id) {
+            rec.state = TaskState::Failed(reason);
+            if let Some(alloc) = rec.allocation.clone() {
+                self.devices[alloc.device.0 as usize].remove_task(id);
+                self.link.remove_owner_from(id, now);
+            }
+        }
+    }
+
+    /// Preempt a low-priority task: release its core reservation and future
+    /// link slots, mark it for reallocation, bump its counter. Returns its
+    /// previous allocation.
+    pub fn preempt_task(&mut self, id: TaskId, now: SimTime) -> Result<Allocation> {
+        let rec = self
+            .tasks
+            .get_mut(&id)
+            .ok_or_else(|| Error::Invariant(format!("preempting unknown task {id:?}")))?;
+        if rec.spec.priority != Priority::Low {
+            return Err(Error::Invariant(format!(
+                "preemption victim {id:?} is not low-priority"
+            )));
+        }
+        let alloc = rec
+            .allocation
+            .clone()
+            .ok_or_else(|| Error::Invariant(format!("preempting unallocated task {id:?}")))?;
+        rec.state = TaskState::PreemptedPendingRealloc;
+        rec.preemptions += 1;
+        self.devices[alloc.device.0 as usize].remove_task(id);
+        self.link.remove_owner_from(id, now);
+        Ok(alloc)
+    }
+
+    /// Forget finished bookkeeping older than `t` on every resource.
+    pub fn prune_before(&mut self, t: SimTime) {
+        self.link.prune_before(t);
+        for d in &mut self.devices {
+            d.prune_before(t);
+        }
+    }
+
+    /// Check every resource invariant (tests / debug builds).
+    pub fn check_invariants(&self) -> Result<()> {
+        self.link.check_invariants()?;
+        for d in &self.devices {
+            d.check_invariants()?;
+        }
+        // Every active allocation's reservation exists on its device.
+        for rec in self.tasks.values() {
+            if rec.state.is_active_allocation() {
+                let alloc = rec.allocation.as_ref().ok_or_else(|| {
+                    Error::Invariant(format!("{:?} active without allocation", rec.spec.id))
+                })?;
+                let found = self.devices[alloc.device.0 as usize]
+                    .slots()
+                    .iter()
+                    .any(|s| s.task == rec.spec.id);
+                if !found {
+                    return Err(Error::Invariant(format!(
+                        "{:?} active but no core reservation",
+                        rec.spec.id
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Reserve the earliest feasible link slot of `kind` for `task` at or
+    /// after `not_before`, using the current throughput estimate.
+    pub fn reserve_link_message(
+        &mut self,
+        cfg: &SystemConfig,
+        not_before: SimTime,
+        kind: SlotKind,
+        task: TaskId,
+    ) -> Window {
+        let dur = self.link_model.slot_duration(cfg, kind);
+        self.link.reserve_earliest(not_before, dur, kind, task)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> (SystemConfig, NetworkState) {
+        let cfg = SystemConfig::default();
+        let st = NetworkState::new(&cfg);
+        (cfg, st)
+    }
+
+    fn spec(st: &mut NetworkState, priority: Priority, deadline_ms: u64) -> TaskSpec {
+        let id = st.fresh_task_id();
+        TaskSpec {
+            id,
+            frame: crate::task::FrameId(0),
+            source: DeviceId(0),
+            priority,
+            deadline: SimTime::from_millis(deadline_ms),
+            spawn: SimTime::ZERO,
+            request: None,
+        }
+    }
+
+    fn win(a: u64, b: u64) -> Window {
+        Window::new(SimTime::from_millis(a), SimTime::from_millis(b))
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let (_, mut st) = state();
+        let a = st.fresh_task_id();
+        let b = st.fresh_task_id();
+        assert_ne!(a, b);
+        assert_ne!(st.fresh_request_id(), st.fresh_request_id());
+    }
+
+    #[test]
+    fn allocation_lifecycle() {
+        let (_, mut st) = state();
+        let s = spec(&mut st, Priority::Low, 20_000);
+        let id = s.id;
+        st.register_task(s);
+        st.commit_allocation(Allocation {
+            task: id,
+            device: DeviceId(1),
+            window: win(0, 10_000),
+            cores: 2,
+            offloaded: true,
+        })
+        .unwrap();
+        assert_eq!(st.task(id).unwrap().state, TaskState::Allocated);
+        assert_eq!(st.active_allocations(), 1);
+        assert_eq!(st.device(DeviceId(1)).usage_at(SimTime::from_millis(5_000)), 2);
+        st.mark_running(id);
+        st.complete_task(id, SimTime::from_millis(10_000));
+        assert_eq!(st.task(id).unwrap().state, TaskState::Completed);
+        assert_eq!(st.device(DeviceId(1)).usage_at(SimTime::from_millis(5_000)), 0);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn commit_rejects_overloaded_device() {
+        let (_, mut st) = state();
+        let s1 = spec(&mut st, Priority::Low, 20_000);
+        let s2 = spec(&mut st, Priority::Low, 20_000);
+        let (i1, i2) = (s1.id, s2.id);
+        st.register_task(s1);
+        st.register_task(s2);
+        st.commit_allocation(Allocation {
+            task: i1,
+            device: DeviceId(0),
+            window: win(0, 10_000),
+            cores: 4,
+            offloaded: false,
+        })
+        .unwrap();
+        let err = st.commit_allocation(Allocation {
+            task: i2,
+            device: DeviceId(0),
+            window: win(5_000, 15_000),
+            cores: 2,
+            offloaded: false,
+        });
+        assert!(err.is_err());
+        assert_eq!(st.task(i2).unwrap().state, TaskState::Pending);
+    }
+
+    #[test]
+    fn preemption_releases_resources_and_counts() {
+        let (_, mut st) = state();
+        let s = spec(&mut st, Priority::Low, 20_000);
+        let id = s.id;
+        st.register_task(s);
+        st.commit_allocation(Allocation {
+            task: id,
+            device: DeviceId(0),
+            window: win(0, 12_000),
+            cores: 4,
+            offloaded: false,
+        })
+        .unwrap();
+        // Future state-update slot that must be released on preemption.
+        let cfg = SystemConfig::default();
+        st.reserve_link_message(&cfg, SimTime::from_millis(12_000), SlotKind::StateUpdate, id);
+        assert_eq!(st.link.len(), 1);
+        let old = st.preempt_task(id, SimTime::from_millis(3_000)).unwrap();
+        assert_eq!(old.cores, 4);
+        assert_eq!(st.task(id).unwrap().state, TaskState::PreemptedPendingRealloc);
+        assert_eq!(st.task(id).unwrap().preemptions, 1);
+        assert_eq!(st.device(DeviceId(0)).usage_at(SimTime::from_millis(6_000)), 0);
+        assert_eq!(st.link.len(), 0, "future link slots released");
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempting_high_priority_is_an_invariant_violation() {
+        let (_, mut st) = state();
+        let s = spec(&mut st, Priority::High, 2_000);
+        let id = s.id;
+        st.register_task(s);
+        st.commit_allocation(Allocation {
+            task: id,
+            device: DeviceId(0),
+            window: win(0, 1_000),
+            cores: 1,
+            offloaded: false,
+        })
+        .unwrap();
+        assert!(st.preempt_task(id, SimTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn fail_task_releases_everything() {
+        let (cfg, mut st) = state();
+        let s = spec(&mut st, Priority::Low, 20_000);
+        let id = s.id;
+        st.register_task(s);
+        st.commit_allocation(Allocation {
+            task: id,
+            device: DeviceId(2),
+            window: win(1_000, 13_000),
+            cores: 2,
+            offloaded: true,
+        })
+        .unwrap();
+        st.reserve_link_message(&cfg, SimTime::from_millis(13_000), SlotKind::StateUpdate, id);
+        st.fail_task(id, FailReason::Violated, SimTime::from_millis(2_000));
+        assert_eq!(st.task(id).unwrap().state, TaskState::Failed(FailReason::Violated));
+        assert_eq!(st.device(DeviceId(2)).len(), 0);
+        assert_eq!(st.link.len(), 0);
+    }
+
+    #[test]
+    fn completion_points_union_devices() {
+        let (_, mut st) = state();
+        for (dev, end) in [(0u32, 5_000u64), (1, 7_000), (2, 5_000)] {
+            let s = spec(&mut st, Priority::Low, 20_000);
+            let id = s.id;
+            st.register_task(s);
+            st.commit_allocation(Allocation {
+                task: id,
+                device: DeviceId(dev),
+                window: win(0, end),
+                cores: 2,
+                offloaded: false,
+            })
+            .unwrap();
+        }
+        let pts = st.completion_points(SimTime::ZERO, SimTime::from_millis(10_000));
+        assert_eq!(
+            pts,
+            vec![SimTime::from_millis(5_000), SimTime::from_millis(7_000)],
+            "sorted and deduped"
+        );
+    }
+
+    #[test]
+    fn link_reservation_durations_use_estimator() {
+        let (cfg, mut st) = state();
+        let id = st.fresh_task_id();
+        let w = st.reserve_link_message(&cfg, SimTime::ZERO, SlotKind::HpAllocMsg, id);
+        let expected = st.link_model.slot_duration(&cfg, SlotKind::HpAllocMsg);
+        assert_eq!(w.duration(), expected);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn double_register_panics() {
+        let (_, mut st) = state();
+        let s = spec(&mut st, Priority::Low, 1_000);
+        st.register_task(s.clone());
+        st.register_task(s);
+    }
+}

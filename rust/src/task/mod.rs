@@ -1,0 +1,255 @@
+//! Task and request model.
+//!
+//! The paper's pipeline spawns two kinds of schedulable work per frame
+//! (§3): a single **high-priority** stage-2 classification task that must
+//! run on its source device within ~1 s, and — if stage 2 says "recyclable"
+//! — a **low-priority request** of 1–4 stage-3 DNN tasks, each of which may
+//! be offloaded and runs at a 2-core or 4-core horizontal-partitioning
+//! configuration.
+
+use crate::time::{SimDuration, SimTime};
+
+/// An edge device index (0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId(pub u32);
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dev{}", self.0)
+    }
+}
+
+/// A frame of the conveyor-belt pipeline, unique per (device, cycle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FrameId(pub u64);
+
+/// A schedulable task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskId(pub u64);
+
+/// A low-priority request (a *set* of 1–4 DNN tasks spawned together).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+/// Task priority class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Stage-2 classifier: local-only, ~0.98 s, may preempt.
+    High,
+    /// Stage-3 DNN: offloadable, 2/4-core, preemptible.
+    Low,
+}
+
+/// Horizontal-partitioning width for a low-priority task (§3.2: the system
+/// uses a two-core and a four-core scheme). High-priority tasks always use
+/// one core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CoreConfig {
+    Two,
+    Four,
+}
+
+impl CoreConfig {
+    pub fn cores(self) -> u32 {
+        match self {
+            CoreConfig::Two => 2,
+            CoreConfig::Four => 4,
+        }
+    }
+
+    /// The minimum viable configuration the LP scheduler starts from (§4).
+    pub const MIN: CoreConfig = CoreConfig::Two;
+
+    /// The next wider configuration, if any (the improvement pass).
+    pub fn upgrade(self) -> Option<CoreConfig> {
+        match self {
+            CoreConfig::Two => Some(CoreConfig::Four),
+            CoreConfig::Four => None,
+        }
+    }
+
+    pub fn from_cores(cores: u32) -> Option<CoreConfig> {
+        match cores {
+            2 => Some(CoreConfig::Two),
+            4 => Some(CoreConfig::Four),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for CoreConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-core", self.cores())
+    }
+}
+
+/// Immutable description of a task at spawn time.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub id: TaskId,
+    pub frame: FrameId,
+    /// Device whose pipeline generated this task.
+    pub source: DeviceId,
+    pub priority: Priority,
+    /// Absolute completion deadline.
+    pub deadline: SimTime,
+    /// When the task entered the controller.
+    pub spawn: SimTime,
+    /// The request this task belongs to (low-priority only).
+    pub request: Option<RequestId>,
+}
+
+/// Why a task ended without completing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// No feasible allocation before the deadline.
+    NoResources,
+    /// Preempted and not reallocated in time.
+    Preempted,
+    /// Arrived/overran its processing window and was terminated by the
+    /// device (§7.3 "task violation").
+    Violated,
+    /// Abandoned (e.g. the experiment ended, or its frame was dropped).
+    Cancelled,
+}
+
+/// Lifecycle state of a task.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskState {
+    /// Known to the controller, not yet placed.
+    Pending,
+    /// Resources reserved; waiting for its processing window.
+    Allocated,
+    /// Executing on a device.
+    Running,
+    /// Finished inside its window and deadline.
+    Completed,
+    /// Ejected by the preemption mechanism; may still be reallocated.
+    PreemptedPendingRealloc,
+    /// Terminal failure.
+    Failed(FailReason),
+}
+
+impl TaskState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TaskState::Completed | TaskState::Failed(_))
+    }
+
+    pub fn is_active_allocation(&self) -> bool {
+        matches!(self, TaskState::Allocated | TaskState::Running)
+    }
+}
+
+/// A half-open time window `[start, end)` on a resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl Window {
+    pub fn new(start: SimTime, end: SimTime) -> Window {
+        assert!(end >= start, "window end before start");
+        Window { start, end }
+    }
+
+    pub fn from_duration(start: SimTime, dur: SimDuration) -> Window {
+        Window { start, end: start + dur }
+    }
+
+    pub fn duration(&self) -> SimDuration {
+        self.end.since(self.start)
+    }
+
+    /// Half-open overlap test: [a, b) vs [c, d).
+    pub fn overlaps(&self, other: &Window) -> bool {
+        self.start < other.end && other.start < self.end
+    }
+
+    pub fn contains(&self, t: SimTime) -> bool {
+        self.start <= t && t < self.end
+    }
+}
+
+/// A committed placement for a task.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub task: TaskId,
+    /// Device the processing window is reserved on.
+    pub device: DeviceId,
+    pub window: Window,
+    /// Cores reserved (1 for high-priority).
+    pub cores: u32,
+    /// Whether the task runs away from its source device (an input transfer
+    /// was reserved on the link).
+    pub offloaded: bool,
+}
+
+/// A low-priority request: the set of DNN tasks spawned by one completed
+/// high-priority task. "For a low-priority request to be considered
+/// complete, all of these tasks must execute successfully within their
+/// request's deadline" (§4).
+#[derive(Debug, Clone)]
+pub struct LpRequest {
+    pub id: RequestId,
+    pub frame: FrameId,
+    pub source: DeviceId,
+    pub deadline: SimTime,
+    pub spawn: SimTime,
+    pub tasks: Vec<TaskId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_config_values() {
+        assert_eq!(CoreConfig::Two.cores(), 2);
+        assert_eq!(CoreConfig::Four.cores(), 4);
+        assert_eq!(CoreConfig::MIN, CoreConfig::Two);
+        assert_eq!(CoreConfig::Two.upgrade(), Some(CoreConfig::Four));
+        assert_eq!(CoreConfig::Four.upgrade(), None);
+        assert_eq!(CoreConfig::from_cores(2), Some(CoreConfig::Two));
+        assert_eq!(CoreConfig::from_cores(3), None);
+    }
+
+    #[test]
+    fn window_overlap_semantics() {
+        let a = Window::new(SimTime(10), SimTime(20));
+        let b = Window::new(SimTime(20), SimTime(30));
+        assert!(!a.overlaps(&b), "half-open windows sharing an endpoint do not overlap");
+        let c = Window::new(SimTime(19), SimTime(21));
+        assert!(a.overlaps(&c) && c.overlaps(&b));
+        assert!(a.contains(SimTime(10)));
+        assert!(!a.contains(SimTime(20)));
+    }
+
+    #[test]
+    fn window_duration() {
+        let w = Window::from_duration(SimTime(5), SimDuration(7));
+        assert_eq!(w.end, SimTime(12));
+        assert_eq!(w.duration(), SimDuration(7));
+    }
+
+    #[test]
+    #[should_panic(expected = "window end before start")]
+    fn inverted_window_panics() {
+        Window::new(SimTime(5), SimTime(4));
+    }
+
+    #[test]
+    fn terminal_states() {
+        assert!(TaskState::Completed.is_terminal());
+        assert!(TaskState::Failed(FailReason::Violated).is_terminal());
+        assert!(!TaskState::PreemptedPendingRealloc.is_terminal());
+        assert!(TaskState::Allocated.is_active_allocation());
+        assert!(!TaskState::Pending.is_active_allocation());
+    }
+
+    #[test]
+    fn display_impls() {
+        assert_eq!(format!("{}", DeviceId(2)), "dev2");
+        assert_eq!(format!("{}", CoreConfig::Four), "4-core");
+    }
+}

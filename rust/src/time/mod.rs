@@ -1,0 +1,355 @@
+//! Simulation time, clocks, and the NTP-style skew model.
+//!
+//! All scheduling state is kept in integer **microseconds** ([`SimTime`],
+//! [`SimDuration`]) so that reservation arithmetic is exact — the paper's
+//! smallest time windows are tens of milliseconds and its NTP sync error is
+//! 1–2 ms, both comfortably representable.
+
+use std::fmt;
+
+/// A point in simulated (or real, when driven by [`RealClock`]) time,
+/// in microseconds since experiment start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+/// A span of time in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimDuration(pub u64);
+
+pub const MICROS_PER_SEC: u64 = 1_000_000;
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    /// Far future sentinel (≈ 292 millennia).
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    /// From seconds (rounded to the nearest microsecond).
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        assert!(s >= 0.0 && s.is_finite(), "negative/NaN time {s}");
+        SimTime((s * MICROS_PER_SEC as f64).round() as u64)
+    }
+
+    /// From milliseconds.
+    pub fn from_millis(ms: u64) -> SimTime {
+        SimTime(ms * 1_000)
+    }
+
+    /// From microseconds.
+    pub fn from_micros(us: u64) -> SimTime {
+        SimTime(us)
+    }
+
+    /// As fractional seconds.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / MICROS_PER_SEC as f64
+    }
+
+    /// As microseconds.
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+
+    /// Saturating difference `self - earlier`.
+    pub fn since(self, earlier: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(earlier.0))
+    }
+
+    /// Checked addition of a duration.
+    pub fn checked_add(self, d: SimDuration) -> Option<SimTime> {
+        self.0.checked_add(d.0).map(SimTime)
+    }
+}
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    /// From seconds (rounded).
+    pub fn from_secs_f64(s: f64) -> SimDuration {
+        assert!(s >= 0.0 && s.is_finite(), "negative/NaN duration {s}");
+        SimDuration((s * MICROS_PER_SEC as f64).round() as u64)
+    }
+
+    /// From milliseconds.
+    pub fn from_millis(ms: u64) -> SimDuration {
+        SimDuration(ms * 1_000)
+    }
+
+    /// From microseconds.
+    pub fn from_micros(us: u64) -> SimDuration {
+        SimDuration(us)
+    }
+
+    /// As fractional seconds.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / MICROS_PER_SEC as f64
+    }
+
+    /// As fractional milliseconds.
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    /// As microseconds.
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+
+    /// Scale by a non-negative factor (rounded).
+    pub fn scale(self, factor: f64) -> SimDuration {
+        assert!(factor >= 0.0 && factor.is_finite());
+        SimDuration((self.0 as f64 * factor).round() as u64)
+    }
+}
+
+impl std::ops::Add<SimDuration> for SimTime {
+    type Output = SimTime;
+    fn add(self, d: SimDuration) -> SimTime {
+        SimTime(self.0 + d.0)
+    }
+}
+
+impl std::ops::AddAssign<SimDuration> for SimTime {
+    fn add_assign(&mut self, d: SimDuration) {
+        self.0 += d.0;
+    }
+}
+
+impl std::ops::Sub<SimDuration> for SimTime {
+    type Output = SimTime;
+    fn sub(self, d: SimDuration) -> SimTime {
+        SimTime(self.0.saturating_sub(d.0))
+    }
+}
+
+impl std::ops::Add for SimDuration {
+    type Output = SimDuration;
+    fn add(self, other: SimDuration) -> SimDuration {
+        SimDuration(self.0 + other.0)
+    }
+}
+
+impl std::ops::Sub for SimDuration {
+    type Output = SimDuration;
+    fn sub(self, other: SimDuration) -> SimDuration {
+        SimDuration(self.0.saturating_sub(other.0))
+    }
+}
+
+impl std::ops::Mul<u64> for SimDuration {
+    type Output = SimDuration;
+    fn mul(self, k: u64) -> SimDuration {
+        SimDuration(self.0 * k)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.6}s", self.as_secs_f64())
+    }
+}
+
+impl fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 < 1_000 {
+            write!(f, "{}µs", self.0)
+        } else if self.0 < MICROS_PER_SEC {
+            write!(f, "{:.3}ms", self.as_millis_f64())
+        } else {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        }
+    }
+}
+
+/// A source of "now". The coordinator and devices only ever read time through
+/// this trait, so the same code runs under the discrete-event simulator
+/// ([`VirtualClock`]) and live ([`RealClock`], used by `examples/serve_cluster`).
+pub trait Clock {
+    fn now(&self) -> SimTime;
+}
+
+/// Manually-advanced clock owned by the simulation event loop.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now: std::cell::Cell<u64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now: std::cell::Cell::new(0) }
+    }
+
+    /// Advance to `t`. Time never moves backwards; a regression is a
+    /// simulator bug and panics.
+    pub fn advance_to(&self, t: SimTime) {
+        assert!(
+            t.0 >= self.now.get(),
+            "virtual clock regression: {} -> {}",
+            self.now.get(),
+            t.0
+        );
+        self.now.set(t.0);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> SimTime {
+        SimTime(self.now.get())
+    }
+}
+
+/// Wall-clock time relative to construction.
+#[derive(Debug)]
+pub struct RealClock {
+    start: std::time::Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock { start: std::time::Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> SimTime {
+        SimTime(self.start.elapsed().as_micros() as u64)
+    }
+}
+
+/// Per-device clock-skew model.
+///
+/// The paper's edge devices synchronise to an NTP server on the controller;
+/// within one LAN, NTP holds slave clocks within 1–2 ms of the master (§7.1).
+/// Each device gets a fixed signed offset drawn uniformly from
+/// `[-max_skew, +max_skew]`; a device's *local* perception of a controller
+/// timestamp is `t + offset`.
+#[derive(Debug, Clone)]
+pub struct SkewModel {
+    /// Signed offsets in microseconds, one per device.
+    offsets: Vec<i64>,
+}
+
+impl SkewModel {
+    /// Draw offsets for `n` devices with the given maximum skew.
+    pub fn sample(n: usize, max_skew: SimDuration, rng: &mut crate::util::rng::Rng) -> SkewModel {
+        let max = max_skew.0 as i64;
+        let offsets = (0..n)
+            .map(|_| if max == 0 { 0 } else { rng.range_u64(0, 2 * max as u64) as i64 - max })
+            .collect();
+        SkewModel { offsets }
+    }
+
+    /// Perfectly synchronised model (for unit tests).
+    pub fn perfect(n: usize) -> SkewModel {
+        SkewModel { offsets: vec![0; n] }
+    }
+
+    /// The device-local reading of controller time `t`.
+    pub fn device_view(&self, device: usize, t: SimTime) -> SimTime {
+        let shifted = t.0 as i64 + self.offsets[device];
+        SimTime(shifted.max(0) as u64)
+    }
+
+    /// The raw signed offset of a device, µs.
+    pub fn offset_micros(&self, device: usize) -> i64 {
+        self.offsets[device]
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(SimTime::from_secs_f64(1.5).as_micros(), 1_500_000);
+        assert_eq!(SimDuration::from_millis(12).as_secs_f64(), 0.012);
+        assert_eq!(SimTime::from_micros(7).as_micros(), 7);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::from_millis(10) + SimDuration::from_millis(5);
+        assert_eq!(t, SimTime::from_millis(15));
+        assert_eq!(t.since(SimTime::from_millis(12)), SimDuration::from_millis(3));
+        // saturating
+        assert_eq!(SimTime::from_millis(1).since(SimTime::from_millis(5)), SimDuration::ZERO);
+        assert_eq!(
+            SimDuration::from_millis(10) - SimDuration::from_millis(4),
+            SimDuration::from_millis(6)
+        );
+    }
+
+    #[test]
+    fn duration_scale_rounds() {
+        assert_eq!(SimDuration(100).scale(0.5), SimDuration(50));
+        assert_eq!(SimDuration(3).scale(0.5), SimDuration(2)); // round-half-even via f64 round: 1.5 -> 2
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), SimTime::ZERO);
+        c.advance_to(SimTime::from_millis(3));
+        assert_eq!(c.now(), SimTime::from_millis(3));
+        c.advance_to(SimTime::from_millis(3)); // same time ok
+    }
+
+    #[test]
+    #[should_panic(expected = "regression")]
+    fn virtual_clock_rejects_regression() {
+        let c = VirtualClock::new();
+        c.advance_to(SimTime::from_millis(5));
+        c.advance_to(SimTime::from_millis(4));
+    }
+
+    #[test]
+    fn real_clock_monotone() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn skew_within_bounds() {
+        let mut rng = Rng::seed_from_u64(1);
+        let skew = SkewModel::sample(16, SimDuration::from_millis(2), &mut rng);
+        for d in 0..16 {
+            assert!(skew.offset_micros(d).abs() <= 2_000);
+        }
+        // At least one non-zero offset in 16 draws, overwhelmingly likely.
+        assert!((0..16).any(|d| skew.offset_micros(d) != 0));
+    }
+
+    #[test]
+    fn skew_view_shifts() {
+        let skew = SkewModel { offsets: vec![1000, -1000] };
+        let t = SimTime::from_millis(10);
+        assert_eq!(skew.device_view(0, t), SimTime::from_micros(10_000 + 1_000 - 0));
+        assert_eq!(skew.device_view(1, t), SimTime::from_micros(9_000));
+        // Clamp at zero.
+        assert_eq!(skew.device_view(1, SimTime::from_micros(500)), SimTime::ZERO);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(format!("{}", SimDuration::from_micros(500)), "500µs");
+        assert_eq!(format!("{}", SimDuration::from_millis(12)), "12.000ms");
+        assert_eq!(format!("{}", SimDuration::from_secs_f64(2.0)), "2.000s");
+    }
+}

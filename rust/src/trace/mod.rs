@@ -1,0 +1,322 @@
+//! Trace-file workload format and generators (§5).
+//!
+//! "Each entry in a trace file represents workload for four devices in a
+//! given frame. Where a device in a frame can have one of the following
+//! values: -1 (no object is detected), 0 (a high-priority task is generated
+//! but with no low-priority request afterward) and 1..4 (a high-priority
+//! task generated and a low-priority request with n number of DNN tasks is
+//! generated after it completes)."
+//!
+//! File format: one line per cycle, one integer per device, whitespace
+//! separated, `#` comments allowed.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Per-device workload value for one frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameLoad {
+    /// No object detected: the pipeline ends at stage 1.
+    NoObject,
+    /// Stage 2 runs but classifies "not recyclable": no stage-3 set.
+    HpOnly,
+    /// Stage 2 runs and spawns a low-priority request of `n` DNN tasks.
+    HpAndLp(u8),
+}
+
+impl FrameLoad {
+    pub fn from_value(v: i8) -> Result<FrameLoad> {
+        match v {
+            -1 => Ok(FrameLoad::NoObject),
+            0 => Ok(FrameLoad::HpOnly),
+            1..=4 => Ok(FrameLoad::HpAndLp(v as u8)),
+            other => Err(Error::Trace(format!("invalid trace value {other}"))),
+        }
+    }
+
+    pub fn value(self) -> i8 {
+        match self {
+            FrameLoad::NoObject => -1,
+            FrameLoad::HpOnly => 0,
+            FrameLoad::HpAndLp(n) => n as i8,
+        }
+    }
+
+    /// Does this frame generate a high-priority task?
+    pub fn spawns_hp(self) -> bool {
+        !matches!(self, FrameLoad::NoObject)
+    }
+
+    /// Number of low-priority DNN tasks the frame *can* generate.
+    pub fn lp_tasks(self) -> u8 {
+        match self {
+            FrameLoad::HpAndLp(n) => n,
+            _ => 0,
+        }
+    }
+}
+
+/// The workload distribution a trace is generated from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Distribution {
+    /// Every value in {-1, 0, 1, 2, 3, 4} equally likely — reproduces the
+    /// paper's Table-4 uniform expectations (HP ≈ 5/6 of device-frames,
+    /// E[LP] ≈ 10/6 per device-frame).
+    Uniform,
+    /// Devices predominantly generate `n` tasks (n in 1..=4), with the
+    /// network load increasing with n.
+    Weighted(u8),
+    /// The short smoke-test trace from Table 4 ("Network Slice", 96 frames).
+    NetworkSlice,
+}
+
+impl Distribution {
+    pub fn parse(s: &str) -> Result<Distribution> {
+        match s {
+            "uniform" => Ok(Distribution::Uniform),
+            "weighted1" => Ok(Distribution::Weighted(1)),
+            "weighted2" => Ok(Distribution::Weighted(2)),
+            "weighted3" => Ok(Distribution::Weighted(3)),
+            "weighted4" => Ok(Distribution::Weighted(4)),
+            "network-slice" => Ok(Distribution::NetworkSlice),
+            other => Err(Error::Trace(format!("unknown distribution {other:?}"))),
+        }
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            Distribution::Uniform => "uniform".into(),
+            Distribution::Weighted(n) => format!("weighted{n}"),
+            Distribution::NetworkSlice => "network-slice".into(),
+        }
+    }
+
+    /// Draw one frame value.
+    fn sample(self, rng: &mut Rng) -> FrameLoad {
+        match self {
+            Distribution::Uniform => {
+                FrameLoad::from_value(rng.range_u64(0, 5) as i8 - 1).unwrap()
+            }
+            Distribution::Weighted(n) => {
+                // P(no object) = 3 %, P(HP only) = 2 %; the remaining 95 %
+                // generate DNN sets with half the mass on the weighted count.
+                let mut weights = [0.03, 0.02, 0.0, 0.0, 0.0, 0.0];
+                for k in 1..=4u8 {
+                    weights[1 + k as usize] =
+                        if k == n { 0.95 * 0.5 } else { 0.95 * 0.5 / 3.0 };
+                }
+                FrameLoad::from_value(rng.choose_weighted(&weights) as i8 - 1).unwrap()
+            }
+            Distribution::NetworkSlice => Distribution::Weighted(3).sample(rng),
+        }
+    }
+}
+
+/// A complete workload trace: `cycles × devices` frame values.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// entries[cycle][device]
+    entries: Vec<Vec<FrameLoad>>,
+    devices: usize,
+}
+
+impl Trace {
+    /// Generate a trace of `total_frames` device-frames over `devices`
+    /// devices (the paper's 1296 frames over 4 devices = 324 cycles).
+    pub fn generate(dist: Distribution, devices: usize, total_frames: u64, seed: u64) -> Trace {
+        let total = match dist {
+            Distribution::NetworkSlice => 96,
+            _ => total_frames,
+        };
+        assert!(devices > 0);
+        let cycles = (total as usize).div_ceil(devices);
+        let mut rng = Rng::seed_from_u64(seed ^ 0x7ACE);
+        let entries = (0..cycles)
+            .map(|_| (0..devices).map(|_| dist.sample(&mut rng)).collect())
+            .collect();
+        Trace { entries, devices }
+    }
+
+    /// Parse from the text format.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut entries: Vec<Vec<FrameLoad>> = Vec::new();
+        let mut devices = 0usize;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let row: Result<Vec<FrameLoad>> = line
+                .split_whitespace()
+                .map(|tok| {
+                    tok.parse::<i8>()
+                        .map_err(|_| Error::Trace(format!("line {}: bad value {tok:?}", lineno + 1)))
+                        .and_then(FrameLoad::from_value)
+                })
+                .collect();
+            let row = row?;
+            if devices == 0 {
+                devices = row.len();
+            } else if row.len() != devices {
+                return Err(Error::Trace(format!(
+                    "line {}: expected {devices} values, got {}",
+                    lineno + 1,
+                    row.len()
+                )));
+            }
+            entries.push(row);
+        }
+        if entries.is_empty() {
+            return Err(Error::Trace("empty trace".into()));
+        }
+        Ok(Trace { entries, devices })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Trace> {
+        Trace::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Render to the text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# pats trace: one line per cycle, one value per device\n");
+        out.push_str("# -1 = no object, 0 = HP only, 1..4 = HP + n-task LP request\n");
+        for row in &self.entries {
+            let line: Vec<String> = row.iter().map(|v| v.value().to_string()).collect();
+            out.push_str(&line.join(" "));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn cycles(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Total device-frames.
+    pub fn total_frames(&self) -> usize {
+        self.entries.len() * self.devices
+    }
+
+    pub fn load_at(&self, cycle: usize, device: usize) -> FrameLoad {
+        self.entries[cycle][device]
+    }
+
+    /// Table-4 accounting: (potential LP tasks, potential HP tasks, frames).
+    pub fn potential_counts(&self) -> (u64, u64, u64) {
+        let mut lp = 0u64;
+        let mut hp = 0u64;
+        for row in &self.entries {
+            for v in row {
+                if v.spawns_hp() {
+                    hp += 1;
+                }
+                lp += v.lp_tasks() as u64;
+            }
+        }
+        (lp, hp, self.total_frames() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_load_values_roundtrip() {
+        for v in -1..=4i8 {
+            assert_eq!(FrameLoad::from_value(v).unwrap().value(), v);
+        }
+        assert!(FrameLoad::from_value(5).is_err());
+        assert!(FrameLoad::from_value(-2).is_err());
+    }
+
+    #[test]
+    fn spawn_semantics() {
+        assert!(!FrameLoad::NoObject.spawns_hp());
+        assert!(FrameLoad::HpOnly.spawns_hp());
+        assert_eq!(FrameLoad::HpOnly.lp_tasks(), 0);
+        assert_eq!(FrameLoad::HpAndLp(3).lp_tasks(), 3);
+    }
+
+    #[test]
+    fn uniform_matches_table4_expectations() {
+        // Paper Table 4 uniform: 1296 frames, 4320 potential HP (5/6),
+        // 8640 potential LP (10/6 per device-frame).
+        let t = Trace::generate(Distribution::Uniform, 4, 1296, 42);
+        assert_eq!(t.cycles(), 324);
+        assert_eq!(t.total_frames(), 1296);
+        let (lp, hp, frames) = t.potential_counts();
+        assert_eq!(frames, 1296);
+        let hp_expect = 1296.0 * 5.0 / 6.0;
+        let lp_expect = 1296.0 * 10.0 / 6.0;
+        assert!((hp as f64 - hp_expect).abs() < hp_expect * 0.05, "hp {hp}");
+        assert!((lp as f64 - lp_expect).abs() < lp_expect * 0.07, "lp {lp}");
+    }
+
+    #[test]
+    fn weighted_load_increases_with_n() {
+        let mut prev = 0u64;
+        for n in 1..=4u8 {
+            let t = Trace::generate(Distribution::Weighted(n), 4, 1296, 7);
+            let (lp, hp, _) = t.potential_counts();
+            assert!(lp > prev, "weighted{n} lp {lp} must exceed weighted{} {prev}", n - 1);
+            // HP rate ≈ 95 % of device-frames.
+            assert!((hp as f64 - 1296.0 * 0.95).abs() < 1296.0 * 0.05);
+            prev = lp;
+        }
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let t = Trace::generate(Distribution::Uniform, 4, 40, 3);
+        let text = t.to_text();
+        let parsed = Trace::parse(&text).unwrap();
+        assert_eq!(parsed.cycles(), t.cycles());
+        for c in 0..t.cycles() {
+            for d in 0..4 {
+                assert_eq!(parsed.load_at(c, d), t.load_at(c, d));
+            }
+        }
+    }
+
+    #[test]
+    fn parse_validates() {
+        assert!(Trace::parse("").is_err());
+        assert!(Trace::parse("1 2\n3").is_err(), "ragged rows rejected");
+        assert!(Trace::parse("1 9").is_err(), "out-of-range value rejected");
+        let t = Trace::parse("# comment\n-1 0 1 4\n").unwrap();
+        assert_eq!(t.devices(), 4);
+        assert_eq!(t.load_at(0, 3), FrameLoad::HpAndLp(4));
+    }
+
+    #[test]
+    fn generation_is_seeded() {
+        let a = Trace::generate(Distribution::Weighted(2), 4, 100, 9);
+        let b = Trace::generate(Distribution::Weighted(2), 4, 100, 9);
+        let c = Trace::generate(Distribution::Weighted(2), 4, 100, 10);
+        assert_eq!(a.to_text(), b.to_text());
+        assert_ne!(a.to_text(), c.to_text());
+    }
+
+    #[test]
+    fn network_slice_is_96_frames() {
+        let t = Trace::generate(Distribution::NetworkSlice, 4, 9999, 1);
+        assert_eq!(t.total_frames(), 96);
+    }
+
+    #[test]
+    fn distribution_parse_roundtrip() {
+        for name in ["uniform", "weighted1", "weighted4", "network-slice"] {
+            assert_eq!(Distribution::parse(name).unwrap().name(), name);
+        }
+        assert!(Distribution::parse("weighted9").is_err());
+    }
+}

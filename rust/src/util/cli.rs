@@ -1,0 +1,148 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Model: `pats <subcommand> [--flag] [--opt value | --opt=value] [positional…]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The subcommand name, if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding argv[0]). Flags listed in `known_flags`
+    /// are treated as boolean switches; any other `--name` consumes the next
+    /// token as its value (unless written `--name=value`).
+    pub fn parse(argv: &[String], known_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        // First non-flag token is the subcommand.
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some(eq) = name.find('=') {
+                    out.options
+                        .insert(name[..eq].to_string(), name[eq + 1..].to_string());
+                } else if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let value = it
+                        .next()
+                        .ok_or_else(|| format!("option --{name} expects a value"))?;
+                    out.options.insert(name.to_string(), value.clone());
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// True when `--flag` was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// Typed option with default.
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    /// String option with default.
+    pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    /// Option names that were provided but are not in `allowed` — typo guard.
+    pub fn unknown_options(&self, allowed: &[&str]) -> Vec<String> {
+        self.options
+            .keys()
+            .filter(|k| !allowed.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags_positionals() {
+        let a = Args::parse(
+            &argv(&["sim", "--frames", "100", "--verbose", "--out=x.json", "trace.txt"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("sim"));
+        assert_eq!(a.opt_u64("frames", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("out"), Some("x.json"));
+        assert_eq!(a.positional, vec!["trace.txt"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["run", "--frames"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(&argv(&["run"]), &[]).unwrap();
+        assert_eq!(a.opt_u64("frames", 1296).unwrap(), 1296);
+        assert_eq!(a.opt_f64("rate", 1.5).unwrap(), 1.5);
+        assert_eq!(a.opt_str("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn bad_typed_value_is_error() {
+        let a = Args::parse(&argv(&["run", "--frames", "abc"]), &[]).unwrap();
+        assert!(a.opt_u64("frames", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = Args::parse(&argv(&["run", "--framez", "7"]), &[]).unwrap();
+        assert_eq!(a.unknown_options(&["frames"]), vec!["framez".to_string()]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(&argv(&["--seed", "1"]), &[]).unwrap();
+        assert_eq!(a.command, None);
+        assert_eq!(a.opt("seed"), Some("1"));
+    }
+}

@@ -1,0 +1,57 @@
+//! Minimal `log` facade backend writing to stderr.
+//!
+//! Level is selected with `PATS_LOG` (error|warn|info|debug|trace), default
+//! `warn`. Install once with [`init`]; re-initialisation is a no-op.
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the stderr logger. Safe to call multiple times.
+pub fn init() {
+    let level = match std::env::var("PATS_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("info") => LevelFilter::Info,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Warn,
+    };
+    // Ignore AlreadyInit errors: tests may race to install.
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::warn!("logging smoke test");
+    }
+}

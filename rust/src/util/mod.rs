@@ -1,0 +1,14 @@
+//! Dependency-free substrates.
+//!
+//! The build environment is fully offline with a small vendored crate set, so
+//! the usual ecosystem crates (rand, serde, clap, criterion, proptest) are
+//! unavailable. Everything the system needs from them is implemented here,
+//! scoped to exactly what PATS uses.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;

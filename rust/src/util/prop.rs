@@ -1,0 +1,146 @@
+//! Randomized property-testing runner (proptest is unavailable offline).
+//!
+//! Usage (`no_run`: doctest binaries bypass the crate's rpath config and
+//! cannot locate the XLA runtime's libstdc++ at execution time):
+//!
+//! ```no_run
+//! use pats::util::prop::{run, Gen};
+//! run("sorted stays sorted", 200, |g: &mut Gen| {
+//!     let mut v = g.vec_u64(0, 100, 0..20);
+//!     v.sort_unstable();
+//!     for w in v.windows(2) { assert!(w[0] <= w[1]); }
+//! });
+//! ```
+//!
+//! Each case gets a derived seed; failures re-raise the panic annotated with
+//! the case seed so a failing case can be replayed with [`run_seeded`].
+
+use super::rng::Rng;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Base seed for deterministic CI runs; override with env `PATS_PROP_SEED`.
+fn base_seed() -> u64 {
+    std::env::var("PATS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED)
+}
+
+/// Default deterministic seed for CI runs.
+const DEFAULT_SEED: u64 = 0x5EED_0EDE;
+
+/// A generator handle passed to each property case.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    /// Underlying RNG for bespoke generation.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform u64 in `[lo, hi]`.
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vector of uniform u64s with random length drawn from `len`.
+    pub fn vec_u64(&mut self, lo: u64, hi: u64, len: Range<usize>) -> Vec<u64> {
+        let n = self.usize(len.start, len.end.saturating_sub(1).max(len.start));
+        (0..n).map(|_| self.u64(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+}
+
+/// Run `cases` random cases of `property` with the default base seed.
+/// Panics (propagating the inner assertion) on first failure, reporting the
+/// failing case seed.
+pub fn run<F: FnMut(&mut Gen)>(name: &str, cases: u32, property: F) {
+    run_with_seed(name, base_seed(), cases, property)
+}
+
+/// Replay a single case by seed (printed on failure).
+pub fn run_seeded<F: FnMut(&mut Gen)>(name: &str, case_seed: u64, mut property: F) {
+    let mut g = Gen { rng: Rng::seed_from_u64(case_seed) };
+    let result = catch_unwind(AssertUnwindSafe(|| property(&mut g)));
+    if let Err(payload) = result {
+        eprintln!("[prop] {name}: FAILED at seed {case_seed:#x}");
+        std::panic::resume_unwind(payload);
+    }
+}
+
+fn run_with_seed<F: FnMut(&mut Gen)>(name: &str, seed: u64, cases: u32, mut property: F) {
+    let mut master = Rng::seed_from_u64(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut g = Gen { rng: Rng::seed_from_u64(case_seed) };
+        let result = catch_unwind(AssertUnwindSafe(|| property(&mut g)));
+        if let Err(payload) = result {
+            eprintln!(
+                "[prop] {name}: case {case}/{cases} FAILED (replay with run_seeded(\"{name}\", {case_seed:#x}, ..))"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run("count", 50, |_g| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        run("bounds", 100, |g| {
+            let x = g.u64(5, 9);
+            assert!((5..=9).contains(&x));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_u64(0, 3, 0..8);
+            assert!(v.len() < 8);
+            assert!(v.iter().all(|&x| x <= 3));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "deliberate")]
+    fn failing_property_propagates_panic() {
+        run("fails", 10, |_g| panic!("deliberate"));
+    }
+
+    #[test]
+    fn replay_seed_is_deterministic() {
+        let mut first = Vec::new();
+        run_seeded("replay", 0xABCD, |g| first.push(g.u64(0, 1000)));
+        let mut second = Vec::new();
+        run_seeded("replay", 0xABCD, |g| second.push(g.u64(0, 1000)));
+        assert_eq!(first, second);
+    }
+}

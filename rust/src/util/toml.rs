@@ -1,0 +1,319 @@
+//! Minimal TOML-subset parser for configuration files.
+//!
+//! Supports the subset PATS configs use:
+//!
+//! * `[section]` and `[section.sub]` headers,
+//! * `key = value` with string, integer, float, boolean, and flat arrays,
+//! * `#` comments and blank lines.
+//!
+//! Not supported (by design): inline tables, array-of-tables, multi-line
+//! strings, datetimes.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar/array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`padding = 2` means 2.0).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key → value.
+///
+/// `[net]` + `bandwidth = 16.3` becomes key `"net.bandwidth"`.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    /// Parse a TOML-subset string.
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated section header", lineno + 1))
+                })?;
+                let name = name.trim();
+                if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                    return Err(Error::Config(format!(
+                        "line {}: bad section name {name:?}",
+                        lineno + 1
+                    )));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full_key, value);
+        }
+        Ok(Document { entries })
+    }
+
+    /// Parse a file.
+    pub fn load(path: &std::path::Path) -> Result<Document> {
+        Document::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Look up a dotted-path key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    /// All keys (sorted), for validation of unknown-key typos.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<Value, String> {
+    let text = text.trim();
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let items = split_top_level(inner)?;
+        return Ok(Value::Arr(
+            items
+                .into_iter()
+                .map(|s| parse_value(s.trim()))
+                .collect::<std::result::Result<Vec<_>, _>>()?,
+        ));
+    }
+    // Number: underscores allowed as separators.
+    let clean: String = text.chars().filter(|&c| c != '_').collect();
+    if clean.contains('.') || clean.contains('e') || clean.contains('E') {
+        clean
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| format!("bad float {text:?}"))
+    } else {
+        clean
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|_| format!("bad value {text:?}"))
+    }
+}
+
+fn unescape(s: &str) -> std::result::Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('\\') => out.push('\\'),
+                Some(other) => return Err(format!("bad escape \\{other}")),
+                None => return Err("dangling backslash".into()),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+/// Split an array body on commas not inside strings.
+fn split_top_level(s: &str) -> std::result::Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            '[' | ']' if !in_str => return Err("nested arrays unsupported".into()),
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Document::parse(
+            r#"
+# top comment
+title = "pats"   # trailing comment
+[net]
+bandwidth_mbps = 16.3
+halved = true
+[devices]
+count = 4
+cores = [4, 4, 4, 4]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("title"), Some("pats"));
+        assert_eq!(doc.get_f64("net.bandwidth_mbps"), Some(16.3));
+        assert_eq!(doc.get_bool("net.halved"), Some(true));
+        assert_eq!(doc.get_i64("devices.count"), Some(4));
+        let cores = doc.get("devices.cores").unwrap().as_arr().unwrap();
+        assert_eq!(cores.len(), 4);
+        assert_eq!(cores[0].as_i64(), Some(4));
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = Document::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Document::parse(r##"x = "a#b""##).unwrap();
+        assert_eq!(doc.get_str("x"), Some("a#b"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = Document::parse(r#"x = "a\nb\\c""#).unwrap();
+        assert_eq!(doc.get_str("x"), Some("a\nb\\c"));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        let err = Document::parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn bad_section_rejected() {
+        assert!(Document::parse("[bad section]").is_err());
+        assert!(Document::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = Document::parse("n = 1_296").unwrap();
+        assert_eq!(doc.get_i64("n"), Some(1296));
+    }
+
+    #[test]
+    fn string_array() {
+        let doc = Document::parse(r#"xs = ["a", "b,c"]"#).unwrap();
+        let xs = doc.get("xs").unwrap().as_arr().unwrap();
+        assert_eq!(xs[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn dotted_sections() {
+        let doc = Document::parse("[a.b]\nx = 1").unwrap();
+        assert_eq!(doc.get_i64("a.b.x"), Some(1));
+    }
+}

@@ -1,0 +1,696 @@
+//! Workstealer baselines (§5: "a decentralised workstealer in which each
+//! device maintains their own queue of generated low-priority tasks and must
+//! poll other edge devices for work and a centralised workstealer where edge
+//! devices generate low-priority tasks and post them to a centralised job
+//! queue on the controller which other edge devices can then steal from").
+//!
+//! Both are deliberately *myopic*: they place work on whatever cores are
+//! free *now*, never planning into the future — that is the property the
+//! paper contrasts with the time-slotted scheduler. They still pay real
+//! communication costs on the shared link (polls, input transfers), and the
+//! preemption variants evict the farthest-deadline running low-priority
+//! task when a local high-priority task finds no free core.
+//!
+//! Modelling note (documented deviation): the real decentralised stealer
+//! polls continuously; an event-driven simulation has no "continuously", so
+//! idle devices attempt steals whenever work is enqueued or a task ends —
+//! the closest event-driven equivalent of a tight polling loop.
+
+use std::collections::VecDeque;
+
+use crate::config::SystemConfig;
+use crate::resources::SlotKind;
+use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, PreemptionReport};
+use crate::state::NetworkState;
+use crate::task::{
+    Allocation, CoreConfig, DeviceId, FailReason, RequestId, TaskId, Window,
+};
+use crate::time::SimTime;
+use crate::util::rng::Rng;
+
+/// Queue topology variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// One job queue on the controller.
+    Central,
+    /// One queue per device; stealing requires polling.
+    Decentral,
+}
+
+/// A centralised or decentralised workstealer (± preemption).
+pub struct Workstealer {
+    pub mode: Mode,
+    pub preemption: bool,
+    /// Central queue (Central mode).
+    central_queue: VecDeque<TaskId>,
+    /// Per-device queues (Decentral mode).
+    device_queues: Vec<VecDeque<TaskId>>,
+    /// Random polling order.
+    rng: Rng,
+    /// Poll-loop period (seconds).
+    poll_interval_s: f64,
+}
+
+impl Workstealer {
+    pub fn new(mode: Mode, preemption: bool, cfg: &SystemConfig) -> Workstealer {
+        Workstealer {
+            mode,
+            preemption,
+            central_queue: VecDeque::new(),
+            device_queues: (0..cfg.devices).map(|_| VecDeque::new()).collect(),
+            rng: Rng::seed_from_u64(cfg.seed ^ 0x57EA1),
+            poll_interval_s: cfg.steal_poll_interval_s,
+        }
+    }
+
+    /// Total queued tasks (tests / metrics).
+    pub fn queued(&self) -> usize {
+        self.central_queue.len() + self.device_queues.iter().map(VecDeque::len).sum::<usize>()
+    }
+
+    fn enqueue(&mut self, task: TaskId, source: DeviceId) {
+        match self.mode {
+            Mode::Central => self.central_queue.push_back(task),
+            Mode::Decentral => self.device_queues[source.0 as usize].push_back(task),
+        }
+    }
+
+    /// Pop the next runnable task for `dev`, dropping expired entries.
+    ///
+    /// Decentral: own queue first, then poll other devices in random order,
+    /// paying one poll message per queried device (§6.1: "whenever the
+    /// decentralised workstealer queries for a job it must query multiple
+    /// devices in a random fashion until it finds a device with tasks").
+    fn next_task_for(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        dev: DeviceId,
+        now: SimTime,
+    ) -> Option<TaskId> {
+        match self.mode {
+            Mode::Central => pop_runnable(&mut self.central_queue, st, cfg, dev, now),
+            Mode::Decentral => {
+                if let Some(t) =
+                    pop_runnable(&mut self.device_queues[dev.0 as usize], st, cfg, dev, now)
+                {
+                    return Some(t);
+                }
+                let mut order: Vec<usize> = (0..self.device_queues.len())
+                    .filter(|&i| i != dev.0 as usize)
+                    .collect();
+                self.rng.shuffle(&mut order);
+                for i in order {
+                    // One poll message on the link per queried device.
+                    let poll_dur = st.link_model.slot_duration(cfg, SlotKind::PollMsg);
+                    let owner = self.device_queues[i]
+                        .front()
+                        .copied()
+                        .unwrap_or(TaskId(u64::MAX));
+                    st.link
+                        .reserve_earliest(now, poll_dur, SlotKind::PollMsg, owner);
+                    if let Some(t) = pop_runnable(&mut self.device_queues[i], st, cfg, dev, now)
+                    {
+                        return Some(t);
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Let `dev` pull and start work that fits right now.
+    ///
+    /// A device drains its *own* queue as long as cores are free, but
+    /// steals at most ONE remote task per wake-up: a real stealer pays a
+    /// poll/transfer round-trip per stolen task, so remote work trickles in
+    /// one task per idle event rather than saturating instantly.
+    fn dispatch_device(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        dev: DeviceId,
+        now: SimTime,
+    ) -> Vec<LpPlacement> {
+        let mut placements = Vec::new();
+        let mut stole_remote = false;
+        loop {
+            // Core availability *now*: the myopic horizon is one LP slot.
+            let probe = Window::from_duration(now, cfg.lp_slot(CoreConfig::MIN.cores()));
+            if !st.device(dev).fits(&probe, CoreConfig::MIN.cores()) {
+                break;
+            }
+            let Some(task) = self.next_task_for(st, cfg, dev, now) else {
+                break;
+            };
+            let remote = st.task(task).map(|r| r.spec.source != dev).unwrap_or(false);
+            if remote && stole_remote {
+                // Already used this wake-up's steal budget: put it back.
+                let source = st.task(task).unwrap().spec.source;
+                match self.mode {
+                    Mode::Central => self.central_queue.push_front(task),
+                    Mode::Decentral => {
+                        self.device_queues[source.0 as usize].push_front(task)
+                    }
+                }
+                break;
+            }
+            let queue_empty = self.queued() == 0;
+            match start_task(st, cfg, task, dev, now, queue_empty) {
+                Some(p) => {
+                    stole_remote |= remote;
+                    placements.push(p);
+                }
+                None => {
+                    // Couldn't start here after all (e.g. transfer pushed the
+                    // window past the deadline): terminal failure, matching
+                    // the stealers' rash semantics.
+                    st.fail_task(task, FailReason::NoResources, now);
+                }
+            }
+        }
+        placements
+    }
+
+    /// Try every device (source first — it needs no transfer).
+    fn dispatch_all(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        first: DeviceId,
+        now: SimTime,
+    ) -> Vec<LpPlacement> {
+        let mut placements = self.dispatch_device(st, cfg, first, now);
+        let others: Vec<DeviceId> = st.device_ids().filter(|&d| d != first).collect();
+        for d in others {
+            placements.extend(self.dispatch_device(st, cfg, d, now));
+        }
+        placements
+    }
+}
+
+/// Pop the first runnable queue entry.
+///
+/// Own tasks are handled *rashly* (§8: "the rash task placement decisions
+/// that the workstealing approaches are prone to"): any entry whose
+/// deadline has not passed is started, even when it can no longer finish —
+/// it dies as a violation at the deadline. Remote steals are different: a
+/// device will not pay the input transfer for a task that cannot complete,
+/// so stealing applies a best-case (four-core) feasibility check and skips
+/// infeasible entries, leaving them for their owner to burn down.
+fn pop_runnable(
+    queue: &mut VecDeque<TaskId>,
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    dev: DeviceId,
+    now: SimTime,
+) -> Option<TaskId> {
+    let mut idx = 0;
+    while idx < queue.len() {
+        let task = queue[idx];
+        let Some(rec) = st.task(task) else {
+            queue.remove(idx);
+            continue;
+        };
+        if rec.state.is_terminal() {
+            queue.remove(idx);
+            continue;
+        }
+        if now >= rec.spec.deadline {
+            queue.remove(idx);
+            st.fail_task(task, FailReason::NoResources, now);
+            continue;
+        }
+        let remote = rec.spec.source != dev;
+        if remote {
+            let xfer = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
+            let best_case = now + xfer + cfg.lp_slot(CoreConfig::Four.cores());
+            if best_case > rec.spec.deadline {
+                idx += 1; // not worth the transfer; leave it for its owner
+                continue;
+            }
+        }
+        queue.remove(idx);
+        return Some(task);
+    }
+    None
+}
+
+/// Start `task` on `dev` right now, reserving the input transfer when
+/// stolen across devices.
+///
+/// Core policy: the stealer defaults to the two-core configuration (Fig 8:
+/// workstealer allocations skew heavily to two cores) — two 2-core tasks
+/// complete within one frame period, so a device's own work drains just in
+/// time for its next stage-2 task. Only a task with no queued successor
+/// gets the four-core treatment.
+fn start_task(
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    dev: DeviceId,
+    now: SimTime,
+    queue_empty: bool,
+) -> Option<LpPlacement> {
+    let rec = st.task(task)?;
+    let source = rec.spec.source;
+    let deadline = rec.spec.deadline;
+    let offloaded = source != dev;
+
+    let (start, input_ready) = if offloaded {
+        let dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
+        let xfer_start = st.link.earliest_fit(now, dur);
+        let xfer_end = xfer_start + dur;
+        (xfer_end, Some((xfer_start, dur, xfer_end)))
+    } else {
+        (now, None)
+    };
+
+    if start >= deadline {
+        return None; // the transfer alone blew the deadline
+    }
+    // Core policy, myopic but time-aware:
+    //   · two cores by default (Fig 8: stealer allocations skew 2-core) —
+    //     two 2-core tasks drain within one frame period;
+    //   · if the task was picked up too late for a 2-core run to meet the
+    //     deadline, rush it at four cores;
+    //   · if even that cannot finish in time, start it anyway at two cores
+    //     with the window clipped at the deadline (the paper's "rash"
+    //     stealer behaviour) — the device terminates it there (violation).
+    let fits_deadline = |config: CoreConfig| start + cfg.lp_slot(config.cores()) <= deadline;
+    let mut order: Vec<CoreConfig> = Vec::new();
+    if queue_empty {
+        order.push(CoreConfig::Four);
+    }
+    if fits_deadline(CoreConfig::Two) {
+        order.push(CoreConfig::Two);
+        order.push(CoreConfig::Four);
+    } else {
+        order.push(CoreConfig::Four);
+        order.push(CoreConfig::Two);
+    }
+    let mut chosen = None;
+    for &config in &order {
+        let mut window = Window::from_duration(start, cfg.lp_slot(config.cores()));
+        window.end = window.end.min(deadline);
+        if st.device(dev).fits(&window, config.cores()) {
+            chosen = Some((config, window));
+            break;
+        }
+    }
+    let (config, window) = chosen?;
+
+    if let Some((xfer_start, dur, _)) = input_ready {
+        st.link
+            .reserve(xfer_start, dur, SlotKind::InputTransfer, task)
+            .expect("earliest_fit produced occupied transfer slot");
+    }
+    st.commit_allocation(Allocation {
+        task,
+        device: dev,
+        window,
+        cores: config.cores(),
+        offloaded,
+    })
+    .expect("fits() said the window was free");
+    // Completion status message back to the owner/controller.
+    st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
+    Some(LpPlacement {
+        task,
+        device: dev,
+        window,
+        cores: config.cores(),
+        offloaded,
+        input_ready: input_ready.map(|(_, _, end)| end),
+    })
+}
+
+impl Policy for Workstealer {
+    /// High-priority tasks run locally, immediately, or not at all. The
+    /// preemption variant evicts the farthest-deadline low-priority task
+    /// and requeues it (its "reallocation" is a later steal).
+    fn allocate_hp(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        task: TaskId,
+        now: SimTime,
+    ) -> HpOutcome {
+        let t0 = std::time::Instant::now();
+        let Some(rec) = st.task(task) else {
+            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+        };
+        let source = rec.spec.source;
+        let deadline = rec.spec.deadline;
+        let window = Window::from_duration(now, cfg.hp_slot());
+        if window.end <= deadline && st.device(source).fits(&window, 1) {
+            st.commit_allocation(Allocation { task, device: source, window, cores: 1, offloaded: false })
+                .expect("fits");
+            st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
+            return HpOutcome { window: Some(window), preemption: None, search: t0.elapsed() };
+        }
+        if !self.preemption || window.end > deadline {
+            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+        }
+        // Preemption: evict the farthest-deadline LP task on the device.
+        let victim = st
+            .device(source)
+            .preemption_candidates(&window)
+            .first()
+            .map(|s| (s.task, s.cores, s.window.start <= now));
+        let Some((victim_id, victim_cores, victim_was_running)) = victim else {
+            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+        };
+        st.preempt_task(victim_id, now).expect("candidate is allocated LP");
+        st.reserve_link_message(cfg, now, SlotKind::PreemptMsg, victim_id);
+        let victim_source = st.task(victim_id).unwrap().spec.source;
+        self.enqueue(victim_id, victim_source); // reallocation = a later steal
+        let window = if st.device(source).fits(&window, 1) {
+            st.commit_allocation(Allocation { task, device: source, window, cores: 1, offloaded: false })
+                .expect("fits after eviction");
+            st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
+            Some(window)
+        } else {
+            None
+        };
+        HpOutcome {
+            window,
+            preemption: Some(PreemptionReport {
+                victim: victim_id,
+                victim_cores,
+                victim_was_running,
+                reallocation: None, // decided later, when/if re-stolen
+                realloc_search: std::time::Duration::ZERO,
+            }),
+            search: t0.elapsed(),
+        }
+    }
+
+    /// Low-priority requests are split into tasks and queued; dispatch
+    /// happens at the next poll wake-up or task end.
+    fn allocate_lp(
+        &mut self,
+        st: &mut NetworkState,
+        _cfg: &SystemConfig,
+        request: RequestId,
+        _now: SimTime,
+    ) -> LpOutcome {
+        let t0 = std::time::Instant::now();
+        let Some(req) = st.request(request) else {
+            return LpOutcome { placements: Vec::new(), unallocated: Vec::new(), search: t0.elapsed() };
+        };
+        let tasks = req.tasks.clone();
+        let source = req.source;
+        for &task in &tasks {
+            self.enqueue(task, source);
+        }
+        // Queue-only: devices acquire work at their next poll wake-up or
+        // when one of their tasks ends (an idle device polls immediately).
+        // This is where the paper's REST + sequential-poll latency lives.
+        LpOutcome { placements: Vec::new(), unallocated: Vec::new(), search: t0.elapsed() }
+    }
+
+    /// A task ended: the freed device (and, transitively, any device — the
+    /// link is shared) tries to steal queued work.
+    fn on_task_end(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        task: TaskId,
+        now: SimTime,
+    ) -> Vec<LpPlacement> {
+        let dev = st
+            .task(task)
+            .and_then(|r| r.allocation.as_ref().map(|a| a.device))
+            .unwrap_or(DeviceId(0));
+        self.dispatch_all(st, cfg, dev, now)
+    }
+
+    fn poll(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        dev: DeviceId,
+        now: SimTime,
+    ) -> Vec<LpPlacement> {
+        self.dispatch_device(st, cfg, dev, now)
+    }
+
+    fn poll_interval(&self) -> Option<f64> {
+        Some(self.poll_interval_s)
+    }
+
+    fn name(&self) -> &'static str {
+        match (self.mode, self.preemption) {
+            (Mode::Central, true) => "central-workstealer+preemption",
+            (Mode::Central, false) => "central-workstealer",
+            (Mode::Decentral, true) => "decentral-workstealer+preemption",
+            (Mode::Decentral, false) => "decentral-workstealer",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{FrameId, LpRequest, Priority, TaskSpec, TaskState};
+    use crate::time::SimDuration;
+
+    fn setup(mode: Mode, preemption: bool) -> (SystemConfig, NetworkState, Workstealer) {
+        let cfg = SystemConfig::default();
+        let st = NetworkState::new(&cfg);
+        let ws = Workstealer::new(mode, preemption, &cfg);
+        (cfg, st, ws)
+    }
+
+    fn hp(st: &mut NetworkState, cfg: &SystemConfig, source: u32, now: SimTime) -> TaskId {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(0),
+            source: DeviceId(source),
+            priority: Priority::High,
+            deadline: now + SimDuration::from_secs_f64(cfg.hp_deadline_s),
+            spawn: now,
+            request: None,
+        });
+        id
+    }
+
+    fn lp_request(st: &mut NetworkState, source: u32, n: usize, deadline_s: f64) -> RequestId {
+        let rid = st.fresh_request_id();
+        let deadline = SimTime::from_secs_f64(deadline_s);
+        let mut tasks = Vec::new();
+        for _ in 0..n {
+            let id = st.fresh_task_id();
+            st.register_task(TaskSpec {
+                id,
+                frame: FrameId(1),
+                source: DeviceId(source),
+                priority: Priority::Low,
+                deadline,
+                spawn: SimTime::ZERO,
+                request: Some(rid),
+            });
+            tasks.push(id);
+        }
+        st.register_request(LpRequest {
+            id: rid,
+            frame: FrameId(1),
+            source: DeviceId(source),
+            deadline,
+            spawn: SimTime::ZERO,
+            tasks,
+        });
+        rid
+    }
+
+    /// Enqueue a request and run one poll wake-up per device (source first),
+    /// mirroring how the simulation drives the stealer.
+    fn enqueue_and_poll(
+        ws: &mut Workstealer,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        rid: RequestId,
+        now: SimTime,
+    ) -> Vec<LpPlacement> {
+        use crate::scheduler::Policy as _;
+        let out = ws.allocate_lp(st, cfg, rid, now);
+        assert!(out.placements.is_empty(), "enqueue-only: no immediate placements");
+        let source = st.request(rid).unwrap().source;
+        let mut placements = ws.poll(st, cfg, source, now);
+        let others: Vec<DeviceId> = st.device_ids().filter(|&d| d != source).collect();
+        for d in others {
+            placements.extend(ws.poll(st, cfg, d, now));
+        }
+        placements
+    }
+
+    #[test]
+    fn hp_runs_locally_and_immediately() {
+        let (cfg, mut st, mut ws) = setup(Mode::Central, false);
+        let id = hp(&mut st, &cfg, 1, SimTime::ZERO);
+        let out = ws.allocate_hp(&mut st, &cfg, id, SimTime::ZERO);
+        let w = out.window.expect("idle device");
+        assert_eq!(w.start, SimTime::ZERO, "no controller round-trip");
+        assert_eq!(st.task(id).unwrap().allocation.as_ref().unwrap().device, DeviceId(1));
+    }
+
+    #[test]
+    fn lp_single_task_runs_at_four_cores_on_source() {
+        let (cfg, mut st, mut ws) = setup(Mode::Central, false);
+        let rid = lp_request(&mut st, 0, 1, 18.86);
+        let placements = enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        assert_eq!(placements.len(), 1);
+        let p = &placements[0];
+        assert_eq!(p.device, DeviceId(0));
+        assert_eq!(p.cores, 4, "lone task with an empty queue: widest config");
+        assert!(!p.offloaded);
+    }
+
+    #[test]
+    fn overflow_is_stolen_with_transfer_cost() {
+        let (cfg, mut st, mut ws) = setup(Mode::Central, false);
+        let rid = lp_request(&mut st, 0, 3, 18.86);
+        let placements = enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        assert_eq!(placements.len(), 3, "idle network takes all three");
+        let stolen: Vec<_> = placements.iter().filter(|p| p.offloaded).collect();
+        assert!(!stolen.is_empty());
+        for p in &stolen {
+            assert!(p.input_ready.is_some());
+            assert!(p.window.start >= p.input_ready.unwrap());
+        }
+        let transfers = st
+            .link
+            .slots()
+            .iter()
+            .filter(|s| s.kind == SlotKind::InputTransfer)
+            .count();
+        assert_eq!(transfers, stolen.len());
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn decentral_polls_cost_link_time() {
+        let (cfg, mut st, mut ws) = setup(Mode::Decentral, false);
+        let rid = lp_request(&mut st, 0, 4, 18.86);
+        enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        let polls = st
+            .link
+            .slots()
+            .iter()
+            .filter(|s| s.kind == SlotKind::PollMsg)
+            .count();
+        assert!(polls > 0, "steals must pay polling messages");
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hp_preempts_when_device_full() {
+        let (cfg, mut st, mut ws) = setup(Mode::Central, true);
+        // Two LP tasks fill device 0 (2 + 2 cores).
+        let rid = lp_request(&mut st, 0, 2, 60.0);
+        let placements = enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        let local_cores: u32 = placements
+            .iter()
+            .filter(|p| p.device == DeviceId(0))
+            .map(|p| p.cores)
+            .sum();
+        assert_eq!(local_cores, 4, "device 0 is saturated");
+        let id = hp(&mut st, &cfg, 0, SimTime::from_millis(10));
+        let hp_out = ws.allocate_hp(&mut st, &cfg, id, SimTime::from_millis(10));
+        assert!(hp_out.allocated(), "preemption frees a core");
+        let report = hp_out.preemption.expect("preemption fired");
+        assert!(report.victim_was_running);
+        // The victim is back in a queue awaiting a future steal.
+        assert_eq!(ws.queued(), 1);
+        assert_eq!(
+            st.task(report.victim).unwrap().state,
+            TaskState::PreemptedPendingRealloc
+        );
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hp_fails_without_preemption_when_full() {
+        let (cfg, mut st, mut ws) = setup(Mode::Central, false);
+        let rid = lp_request(&mut st, 0, 2, 60.0);
+        let placements = enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        assert_eq!(placements.len(), 2);
+        let id = hp(&mut st, &cfg, 0, SimTime::from_millis(10));
+        let out = ws.allocate_hp(&mut st, &cfg, id, SimTime::from_millis(10));
+        assert!(!out.allocated());
+        assert!(out.preemption.is_none());
+    }
+
+    #[test]
+    fn task_end_triggers_steal_of_queued_work() {
+        let (cfg, mut st, mut ws) = setup(Mode::Central, false);
+        // Saturate all 4 devices: two 2-core tasks each.
+        for d in 0..4u32 {
+            let rid = lp_request(&mut st, d, 2, 120.0);
+            enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        }
+        // One more task has nowhere to run.
+        let rid = lp_request(&mut st, 0, 1, 120.0);
+        let out = enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        assert!(out.is_empty());
+        assert_eq!(ws.queued(), 1);
+        // A task on device 2 completes; the steal happens on task end.
+        let done = st
+            .tasks()
+            .find(|r| {
+                r.state.is_active_allocation()
+                    && r.allocation.as_ref().unwrap().device == DeviceId(2)
+            })
+            .map(|r| r.spec.id)
+            .unwrap();
+        let end = st.task(done).unwrap().allocation.as_ref().unwrap().window.end;
+        st.complete_task(done, end);
+        let placements = ws.on_task_end(&mut st, &cfg, done, end);
+        assert_eq!(placements.len(), 1);
+        assert_eq!(ws.queued(), 0);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn expired_queue_entries_are_failed() {
+        let (cfg, mut st, mut ws) = setup(Mode::Central, false);
+        // Fill the whole network so the task must queue.
+        for d in 0..4u32 {
+            let rid = lp_request(&mut st, d, 2, 120.0);
+            enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        }
+        let rid = lp_request(&mut st, 0, 1, 15.0); // tight deadline
+        let out = enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        assert!(out.is_empty());
+        let queued_task = st.request(rid).unwrap().tasks[0];
+        // Rash semantics: before the deadline the task is still handed out
+        // (even though it can no longer finish) ...
+        let now = SimTime::from_secs_f64(10.0);
+        let got = ws.next_task_for(&mut st, &cfg, DeviceId(0), now);
+        assert_eq!(got, Some(queued_task));
+        ws.enqueue(queued_task, DeviceId(0));
+        // ... but past the deadline the dequeue drops and fails it.
+        let late = SimTime::from_secs_f64(16.0);
+        let got = ws.next_task_for(&mut st, &cfg, DeviceId(0), late);
+        assert_eq!(got, None);
+        assert_eq!(
+            st.task(queued_task).unwrap().state,
+            TaskState::Failed(FailReason::NoResources)
+        );
+    }
+
+    #[test]
+    fn names() {
+        let cfg = SystemConfig::default();
+        assert_eq!(
+            Workstealer::new(Mode::Central, true, &cfg).name(),
+            "central-workstealer+preemption"
+        );
+        assert_eq!(
+            Workstealer::new(Mode::Decentral, false, &cfg).name(),
+            "decentral-workstealer"
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! Integration: the controller end-to-end — request admission, the serial
+//! job queue, policy interplay, preemption mid-flight, and state updates.
+
+use pats::config::SystemConfig;
+use pats::coordinator::Controller;
+use pats::scheduler::PatsScheduler;
+use pats::task::{DeviceId, FrameId, TaskState};
+use pats::time::{SimDuration, SimTime};
+use pats::workstealer::{Mode, Workstealer};
+
+fn sched_controller(preemption: bool) -> Controller<PatsScheduler> {
+    let mut cfg = SystemConfig::default();
+    cfg.preemption = preemption;
+    let policy = PatsScheduler::from_config(&cfg);
+    Controller::new(cfg, policy)
+}
+
+#[test]
+fn full_frame_flow_through_controller() {
+    let mut c = sched_controller(true);
+    let t0 = SimTime::from_millis(100);
+
+    // Stage 2.
+    let (hp, _dt, hp_out) = c.handle_hp_request(FrameId(0), DeviceId(0), t0);
+    let hp_win = hp_out.window.expect("idle network");
+    c.handle_state_update(hp, true, hp_win.end);
+    assert_eq!(c.state.task(hp).unwrap().state, TaskState::Completed);
+
+    // Stage 3: a 3-task set before the frame deadline.
+    let deadline = t0 + SimDuration::from_secs_f64(18.86);
+    let (rid, _dt, lp_out) =
+        c.handle_lp_request(FrameId(0), DeviceId(0), 3, deadline, hp_win.end);
+    assert!(lp_out.fully_allocated());
+    assert_eq!(lp_out.placements.len(), 3);
+    for p in &lp_out.placements {
+        assert!(p.window.start >= hp_win.end);
+        assert!(p.window.end <= deadline);
+        c.handle_state_update(p.task, true, p.window.end);
+    }
+    let req = c.state.request(rid).unwrap();
+    assert!(req
+        .tasks
+        .iter()
+        .all(|t| c.state.task(*t).unwrap().state == TaskState::Completed));
+    c.state.check_invariants().unwrap();
+}
+
+#[test]
+fn preemption_fires_through_controller_under_contention() {
+    let mut c = sched_controller(true);
+    let t0 = SimTime::from_millis(10);
+    let deadline = t0 + SimDuration::from_secs_f64(18.86);
+
+    // Saturate device 1 with its own 4-task set (2 local × 2 cores fill it).
+    let (_rid, _dt, lp_out) = c.handle_lp_request(FrameId(1), DeviceId(1), 4, deadline, t0);
+    let local: u32 = lp_out
+        .placements
+        .iter()
+        .filter(|p| p.device == DeviceId(1))
+        .map(|p| p.cores)
+        .sum();
+    assert_eq!(local, 4, "source device saturated");
+
+    // A stage-2 task on device 1 now needs preemption.
+    let t1 = t0 + SimDuration::from_millis(500);
+    let (hp, _dt, hp_out) = c.handle_hp_request(FrameId(2), DeviceId(1), t1);
+    assert!(hp_out.allocated());
+    let report = hp_out.preemption.expect("must preempt");
+    let victim = c.state.task(report.victim).unwrap();
+    // The victim either found a new home or failed terminally.
+    assert!(
+        victim.state == TaskState::Allocated
+            || victim.state == TaskState::Failed(pats::task::FailReason::Preempted),
+        "victim in {:?}",
+        victim.state
+    );
+    assert_eq!(c.state.task(hp).unwrap().state, TaskState::Allocated);
+    c.state.check_invariants().unwrap();
+}
+
+#[test]
+fn controller_queue_accumulates_under_burst() {
+    let mut c = sched_controller(false);
+    let t = SimTime::ZERO;
+    // Four simultaneous requests: each decision is pushed back by the
+    // serial overhead of those before it (§3.3 blocking sequential queue).
+    let mut decision_times = Vec::new();
+    for d in 0..4u32 {
+        let (_id, dt, _out) = c.handle_hp_request(FrameId(d as u64), DeviceId(d), t);
+        decision_times.push(dt);
+    }
+    for pair in decision_times.windows(2) {
+        assert!(pair[1] > pair[0], "decisions must serialise");
+    }
+    assert_eq!(c.jobs_processed, 4);
+}
+
+#[test]
+fn workstealer_policy_through_controller() {
+    let mut cfg = SystemConfig::default();
+    cfg.preemption = true;
+    let ws = Workstealer::new(Mode::Central, true, &cfg);
+    let mut c = Controller::new(cfg, ws);
+    let t0 = SimTime::from_millis(5);
+    let deadline = t0 + SimDuration::from_secs_f64(18.86);
+
+    // LP request enqueues (no immediate placements — poll-driven).
+    let (rid, _dt, lp_out) = c.handle_lp_request(FrameId(0), DeviceId(0), 2, deadline, t0);
+    assert!(lp_out.placements.is_empty());
+    assert_eq!(c.policy.queued(), 2);
+
+    // A poll on the source device pulls both tasks.
+    use pats::scheduler::Policy as _;
+    let cfg2 = c.cfg.clone();
+    let placements = c.policy.poll(&mut c.state, &cfg2, DeviceId(0), t0);
+    assert_eq!(placements.len(), 2);
+    assert_eq!(c.policy.queued(), 0);
+
+    // HP on the now-full device 0 must preempt and requeue the victim.
+    let t1 = t0 + SimDuration::from_millis(100);
+    let (_hp, _dt, hp_out) = c.handle_hp_request(FrameId(1), DeviceId(0), t1);
+    assert!(hp_out.allocated());
+    assert!(hp_out.preemption.is_some());
+    assert_eq!(c.policy.queued(), 1, "victim requeued for a later steal");
+    let _ = rid;
+    c.state.check_invariants().unwrap();
+}
+
+#[test]
+fn violation_update_releases_resources() {
+    let mut c = sched_controller(true);
+    let t0 = SimTime::ZERO;
+    let deadline = SimTime::from_secs_f64(18.86);
+    let (_rid, _dt, lp_out) = c.handle_lp_request(FrameId(0), DeviceId(2), 1, deadline, t0);
+    let p = &lp_out.placements[0];
+    // Device reports the task overran its window.
+    c.handle_state_update(p.task, false, p.window.end);
+    assert_eq!(
+        c.state.task(p.task).unwrap().state,
+        TaskState::Failed(pats::task::FailReason::Violated)
+    );
+    assert_eq!(c.state.device(p.device).len(), 0, "cores released");
+    c.state.check_invariants().unwrap();
+}
+
+#[test]
+fn hp_without_preemption_fails_cleanly_under_contention() {
+    let mut c = sched_controller(false);
+    let t0 = SimTime::ZERO;
+    let deadline = SimTime::from_secs_f64(18.86);
+    c.handle_lp_request(FrameId(0), DeviceId(3), 4, deadline, t0);
+    let t1 = t0 + SimDuration::from_millis(200);
+    let (hp, _dt, out) = c.handle_hp_request(FrameId(1), DeviceId(3), t1);
+    assert!(!out.allocated());
+    assert!(out.preemption.is_none());
+    // The request left no resource residue for the failed task.
+    assert!(c
+        .state
+        .device(DeviceId(3))
+        .slots()
+        .iter()
+        .all(|s| s.task != hp));
+    c.state.check_invariants().unwrap();
+}

@@ -1,0 +1,138 @@
+//! Integration: AOT artifacts → PJRT engine → horizontal partitioning.
+//!
+//! These tests require `make artifacts` to have run (they are skipped with
+//! a notice otherwise, so a fresh checkout still passes `cargo test`).
+//!
+//! The key assertion is the paper's §3.2 invariant end-to-end ACROSS THE
+//! LANGUAGE BOUNDARY: the Rust tile/stitch/pool pipeline over the per-tile
+//! HLO executables must agree with the monolithic single-executable CNN to
+//! float tolerance.
+
+use pats::runtime::{partition, Engine, Tensor};
+use pats::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Engine::load(&dir).expect("artifact load"))
+}
+
+fn random_frame(rng: &mut Rng) -> Tensor {
+    let data: Vec<f32> = (0..48 * 48 * 3).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    Tensor::new(vec![48, 48, 3], data)
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let Some(engine) = engine() else { return };
+    let names: Vec<&str> = engine.names().collect();
+    for required in [
+        "detector",
+        "classifier",
+        "cnn_full",
+        "head",
+        "block0_full",
+        "block0_tile2",
+        "block0_tile4",
+        "pool0",
+        "block2_tile4",
+        "pool2",
+    ] {
+        assert!(names.contains(&required), "missing artifact {required}");
+    }
+    assert_eq!(engine.platform(), "cpu");
+}
+
+#[test]
+fn detector_semantics() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::seed_from_u64(1);
+    let bg = random_frame(&mut rng);
+    // Identical frame ⇒ zero score.
+    let same = partition::run_detector(&engine, &bg, &bg).unwrap();
+    assert_eq!(same, 0.0);
+    // Perturbed frame ⇒ positive score.
+    let mut frame = bg.clone();
+    for v in frame.data.iter_mut().take(500) {
+        *v += 1.0;
+    }
+    let diff = partition::run_detector(&engine, &frame, &bg).unwrap();
+    assert!(diff > 0.0);
+}
+
+#[test]
+fn classifier_runs_and_is_deterministic() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::seed_from_u64(2);
+    let frame = random_frame(&mut rng);
+    let a = partition::run_classifier(&engine, &frame).unwrap();
+    let b = partition::run_classifier(&engine, &frame).unwrap();
+    assert_eq!(a, b);
+    assert!(a.is_finite());
+}
+
+#[test]
+fn partitioned_cnn_matches_monolithic() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::seed_from_u64(3);
+    let frame = random_frame(&mut rng);
+    let mono = engine.execute("cnn_full", &[&frame]).unwrap();
+    assert_eq!(mono.shape, vec![4]);
+    for tiles in [1usize, 2, 4] {
+        let out = partition::run_cnn(&engine, &frame, tiles).unwrap();
+        let diff = out.max_abs_diff(&mono);
+        assert!(
+            diff < 2e-4,
+            "tiles={tiles}: partitioned output diverges by {diff}"
+        );
+        assert_eq!(out.argmax(), mono.argmax(), "tiles={tiles}: class flipped");
+    }
+}
+
+#[test]
+fn partitioned_cnn_differs_across_inputs() {
+    let Some(engine) = engine() else { return };
+    // Two iid noise frames give near-identical global-average-pooled
+    // features; use structurally different frames instead.
+    let zeros = Tensor::zeros(&[48, 48, 3]);
+    let ones = Tensor::from_fn(&[48, 48, 3], |_| 1.0);
+    let a = partition::run_cnn(&engine, &zeros, 2).unwrap();
+    let b = partition::run_cnn(&engine, &ones, 2).unwrap();
+    assert!(a.max_abs_diff(&b) > 1e-3, "CNN must not be constant");
+}
+
+#[test]
+fn execute_validates_shapes() {
+    let Some(engine) = engine() else { return };
+    let bad = Tensor::zeros(&[4, 4, 3]);
+    assert!(engine.execute("cnn_full", &[&bad]).is_err());
+    let frame = Tensor::zeros(&[48, 48, 3]);
+    assert!(engine.execute("detector", &[&frame]).is_err(), "arity check");
+    assert!(engine.execute("nonexistent", &[&frame]).is_err());
+}
+
+#[test]
+fn full_pipeline_smoke() {
+    // Stage 1 → stage 2 → stage 3 over the real artifacts: the quickstart
+    // path exercised as a test.
+    let Some(engine) = engine() else { return };
+    let bg = Tensor::zeros(&[48, 48, 3]);
+    let mut frame = bg.clone();
+    for h in 10..30 {
+        for w in 10..30 {
+            for c in 0..3 {
+                frame.data[(h * 48 + w) * 3 + c] = 0.9;
+            }
+        }
+    }
+    let score = partition::run_detector(&engine, &frame, &bg).unwrap();
+    assert!(score > 0.01, "object must be detected");
+    let decision = partition::run_classifier(&engine, &frame).unwrap();
+    assert!(decision.is_finite());
+    let logits = partition::run_cnn(&engine, &frame, 4).unwrap();
+    assert_eq!(logits.shape, vec![4]);
+    assert!(logits.argmax() < 4);
+}

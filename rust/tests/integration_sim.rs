@@ -1,0 +1,206 @@
+//! Integration: full simulated scenarios at moderate scale, checking the
+//! paper's qualitative findings (§1) hold as *shapes*, plus accounting
+//! conservation and determinism across every policy.
+
+use pats::config::{BandwidthEstimator, Policy as PolicyKind, SystemConfig};
+use pats::metrics::ScenarioMetrics;
+use pats::sim::run_scenario;
+use pats::trace::{Distribution, Trace};
+
+fn run(cfg: &SystemConfig, dist: Distribution, label: &str) -> ScenarioMetrics {
+    let trace = Trace::generate(dist, cfg.devices, cfg.frames, cfg.seed);
+    run_scenario(cfg, &trace, label).metrics
+}
+
+fn mid_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.frames = 1296; // quarter of the paper scale: fast but stable
+    cfg
+}
+
+#[test]
+fn finding1_preemption_increases_frames_and_hp() {
+    // "Preemption leads to an overall increase in processed frames
+    //  end-to-end" + "Preemption allows 10-23% more high-priority tasks to
+    //  complete ... resulting in a 99% completion rate".
+    let mut cfg = mid_cfg();
+    cfg.preemption = true;
+    let with = run(&cfg, Distribution::Uniform, "UPS");
+    cfg.preemption = false;
+    let without = run(&cfg, Distribution::Uniform, "UNPS");
+
+    assert!(
+        with.hp_completion_pct() > 97.0,
+        "preemption HP completion {:.2} must be ~99%",
+        with.hp_completion_pct()
+    );
+    let hp_gain = with.hp_completion_pct() - without.hp_completion_pct();
+    assert!(
+        (8.0..=30.0).contains(&hp_gain),
+        "HP gain {hp_gain:.2} outside the paper's 10-23pp band (±tolerance)"
+    );
+    assert!(
+        with.frames_completed > without.frames_completed,
+        "preemption must net frame completions: {} vs {}",
+        with.frames_completed,
+        without.frames_completed
+    );
+}
+
+#[test]
+fn finding2_preemption_costs_lp_set_completion() {
+    // "The cost of preemption leads to ... less DNN tasks completing in
+    //  each late stage pipeline" (per-request completion drops).
+    let mut cfg = mid_cfg();
+    cfg.preemption = true;
+    let mut with = run(&cfg, Distribution::Uniform, "UPS");
+    cfg.preemption = false;
+    let mut without = run(&cfg, Distribution::Uniform, "UNPS");
+    assert!(
+        with.lp_per_request_pct() < without.lp_per_request_pct(),
+        "preemption per-request {:.2} must be below non-preemption {:.2}",
+        with.lp_per_request_pct(),
+        without.lp_per_request_pct()
+    );
+    // ... while GENERATING far more low-priority tasks (Table 2's shape).
+    assert!(
+        with.lp_generated as f64 > without.lp_generated as f64 * 1.1,
+        "preemption generates more LP: {} vs {}",
+        with.lp_generated,
+        without.lp_generated
+    );
+}
+
+#[test]
+fn finding3_scheduler_beats_workstealers() {
+    // "Schedulers outperform workstealers in processing constrained
+    //  pipeline applications under preemption conditions."
+    let mut cfg = mid_cfg();
+    cfg.preemption = true;
+    cfg.policy = PolicyKind::Scheduler;
+    let sched = run(&cfg, Distribution::Weighted(4), "WPS_4");
+    for policy in [PolicyKind::CentralWorkstealer, PolicyKind::DecentralWorkstealer] {
+        cfg.policy = policy;
+        let ws = run(&cfg, Distribution::Weighted(4), "ws");
+        assert!(
+            sched.frame_completion_pct() > ws.frame_completion_pct() + 3.0,
+            "{policy:?}: scheduler {:.2}% must clearly beat stealer {:.2}%",
+            sched.frame_completion_pct(),
+            ws.frame_completion_pct()
+        );
+    }
+}
+
+#[test]
+fn finding4_reallocation_rarely_succeeds() {
+    // Table 3: "when preemption occurs, it is extremely unlikely that the
+    // task will receive reallocation successfully."
+    let cfg = mid_cfg();
+    let m = run(&cfg, Distribution::Weighted(4), "WPS_4");
+    assert!(m.preemptions > 20, "weighted-4 must preempt ({})", m.preemptions);
+    let rate = m.realloc_success as f64 / m.preemptions as f64;
+    assert!(rate < 0.05, "reallocation success rate {rate:.3} must be near zero");
+}
+
+#[test]
+fn finding5_four_core_tasks_preempted_most() {
+    // Fig 7: "a task is more likely to experience preemption when it fully
+    // occupies the resources of a device" — per-capita, 4-core allocations
+    // are preempted at a higher rate than 2-core ones.
+    let cfg = mid_cfg();
+    let m = run(&cfg, Distribution::Uniform, "UPS");
+    let pre2 = *m.preempted_by_cores.get(&2).unwrap_or(&0) as f64;
+    let pre4 = *m.preempted_by_cores.get(&4).unwrap_or(&0) as f64;
+    let alloc2 = (m.core_alloc_local.get(&2).unwrap_or(&0)
+        + m.core_alloc_offloaded.get(&2).unwrap_or(&0)) as f64;
+    let alloc4 = (m.core_alloc_local.get(&4).unwrap_or(&0)
+        + m.core_alloc_offloaded.get(&4).unwrap_or(&0)) as f64;
+    assert!(alloc2 > 0.0 && alloc4 > 0.0);
+    let rate2 = pre2 / alloc2;
+    let rate4 = pre4 / alloc4;
+    assert!(
+        rate4 > rate2,
+        "4-core preemption rate {rate4:.4} must exceed 2-core {rate2:.4}"
+    );
+}
+
+#[test]
+fn load_increase_degrades_completion() {
+    // Fig 2b: completion is ~flat W1→W2 then drops through W3/W4.
+    let cfg = mid_cfg();
+    let w1 = run(&cfg, Distribution::Weighted(1), "W1").frame_completion_pct();
+    let w3 = run(&cfg, Distribution::Weighted(3), "W3").frame_completion_pct();
+    let w4 = run(&cfg, Distribution::Weighted(4), "W4").frame_completion_pct();
+    assert!(w1 > w3 && w3 > w4, "monotone degradation: {w1:.1} {w3:.1} {w4:.1}");
+}
+
+#[test]
+fn accounting_conserves_tasks_all_policies() {
+    let mut cfg = mid_cfg();
+    cfg.frames = 400;
+    for policy in [
+        PolicyKind::Scheduler,
+        PolicyKind::CentralWorkstealer,
+        PolicyKind::DecentralWorkstealer,
+    ] {
+        for preemption in [true, false] {
+            cfg.policy = policy;
+            cfg.preemption = preemption;
+            let m = run(&cfg, Distribution::Weighted(4), "x");
+            let accounted =
+                m.lp_completed + m.lp_failed_alloc + m.lp_failed_preempted + m.lp_violated;
+            assert_eq!(accounted, m.lp_generated, "{policy:?}/preempt={preemption}");
+            let hp_accounted = m.hp_completed + m.hp_failed_alloc + m.hp_violated;
+            assert_eq!(hp_accounted, m.hp_generated, "{policy:?}/preempt={preemption}");
+            assert!(m.frames_completed <= m.frames_total);
+        }
+    }
+}
+
+#[test]
+fn seeds_reproduce_and_differ() {
+    let mut cfg = mid_cfg();
+    cfg.frames = 400;
+    let a = run(&cfg, Distribution::Uniform, "a");
+    let b = run(&cfg, Distribution::Uniform, "b");
+    assert_eq!(a.frames_completed, b.frames_completed);
+    assert_eq!(a.preemptions, b.preemptions);
+    cfg.seed ^= 0xDEAD;
+    let c = run(&cfg, Distribution::Uniform, "c");
+    assert_ne!(
+        (a.frames_completed, a.lp_completed),
+        (c.frames_completed, c.lp_completed),
+        "different seed must perturb results"
+    );
+}
+
+#[test]
+fn bandwidth_estimator_ablation_comparable() {
+    // §7.3: EMA vs static throughput estimation are comparable.
+    let mut cfg = mid_cfg();
+    cfg.frames = 800;
+    cfg.bandwidth_estimator = BandwidthEstimator::Static;
+    let s = run(&cfg, Distribution::Weighted(3), "static");
+    cfg.bandwidth_estimator = BandwidthEstimator::Ema;
+    let e = run(&cfg, Distribution::Weighted(3), "ema");
+    let delta = (s.frame_completion_pct() - e.frame_completion_pct()).abs();
+    assert!(delta < 8.0, "estimators must be comparable (Δ {delta:.2}pp)");
+}
+
+#[test]
+fn no_preemption_scenarios_never_preempt() {
+    let mut cfg = mid_cfg();
+    cfg.frames = 400;
+    cfg.preemption = false;
+    for policy in [
+        PolicyKind::Scheduler,
+        PolicyKind::CentralWorkstealer,
+        PolicyKind::DecentralWorkstealer,
+    ] {
+        cfg.policy = policy;
+        let m = run(&cfg, Distribution::Weighted(4), "np");
+        assert_eq!(m.preemptions, 0, "{policy:?}");
+        assert_eq!(m.lp_failed_preempted, 0, "{policy:?}");
+        assert_eq!(m.hp_completed_via_preemption, 0, "{policy:?}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Randomized property tests on the scheduling policies: whatever request
+//! sequence arrives, the controller's resource invariants must hold and
+//! every committed allocation must respect the paper's rules.
+
+use pats::config::SystemConfig;
+use pats::coordinator::Controller;
+use pats::scheduler::{PatsScheduler, Policy};
+use pats::task::{DeviceId, FrameId, Priority, TaskState};
+use pats::time::{SimDuration, SimTime};
+use pats::util::prop::{run, Gen};
+use pats::workstealer::{Mode, Workstealer};
+
+/// Drive a random request mix through a policy; check global invariants
+/// after every step.
+fn drive<P: Policy>(g: &mut Gen, cfg: &SystemConfig, mut policy: P) {
+    let mut controller = Controller::new(cfg.clone(), policy_noop());
+    // We bypass Controller's policy (noop) and call the policy under test
+    // directly so we can interleave arbitrary events.
+    let st = &mut controller.state;
+    let mut now = SimTime::ZERO;
+    let mut live_hp = Vec::new();
+    let mut live_lp = Vec::new();
+
+    for step in 0..g.usize(5, 40) {
+        now = now + SimDuration::from_micros(g.u64(1, 3_000_000));
+        match g.usize(0, 9) {
+            // High-priority request (frequent).
+            0..=3 => {
+                let source = DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32);
+                let id = st.fresh_task_id();
+                st.register_task(pats::task::TaskSpec {
+                    id,
+                    frame: FrameId(step as u64),
+                    source,
+                    priority: Priority::High,
+                    deadline: now + SimDuration::from_secs_f64(cfg.hp_deadline_s),
+                    spawn: now,
+                    request: None,
+                });
+                let out = policy.allocate_hp(st, cfg, id, now);
+                if let Some(w) = out.window {
+                    live_hp.push(id);
+                    // HP rules: local to source, 1 core, inside deadline.
+                    let rec = st.task(id).unwrap();
+                    let alloc = rec.allocation.as_ref().unwrap();
+                    assert_eq!(alloc.device, source, "HP must stay on its source");
+                    assert_eq!(alloc.cores, 1);
+                    assert!(!alloc.offloaded);
+                    assert!(w.end <= rec.spec.deadline, "HP window exceeds deadline");
+                }
+                if let Some(report) = out.preemption {
+                    // Victims must be low-priority tasks.
+                    let victim = st.task(report.victim).unwrap();
+                    assert_eq!(victim.spec.priority, Priority::Low);
+                    assert!(victim.preemptions >= 1);
+                }
+            }
+            // Low-priority request.
+            4..=6 => {
+                let source = DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32);
+                let n = g.usize(1, 4);
+                let rid = st.fresh_request_id();
+                let deadline = now + SimDuration::from_secs_f64(cfg.frame_period_s);
+                let mut tasks = Vec::new();
+                for _ in 0..n {
+                    let id = st.fresh_task_id();
+                    st.register_task(pats::task::TaskSpec {
+                        id,
+                        frame: FrameId(step as u64),
+                        source,
+                        priority: Priority::Low,
+                        deadline,
+                        spawn: now,
+                        request: Some(rid),
+                    });
+                    tasks.push(id);
+                }
+                st.register_request(pats::task::LpRequest {
+                    id: rid,
+                    frame: FrameId(step as u64),
+                    source,
+                    deadline,
+                    spawn: now,
+                    tasks,
+                });
+                let out = policy.allocate_lp(st, cfg, rid, now);
+                for p in &out.placements {
+                    live_lp.push(p.task);
+                    // LP rules: 2 or 4 cores; window within the deadline
+                    // (the rash workstealer clips at the deadline instead).
+                    assert!(p.cores == 2 || p.cores == 4, "cores {}", p.cores);
+                    assert!(p.window.end <= deadline);
+                    let rec = st.task(p.task).unwrap();
+                    assert_eq!(rec.state, TaskState::Allocated);
+                    if p.offloaded {
+                        assert_ne!(rec.spec.source, p.device);
+                        assert!(p.input_ready.is_some());
+                        assert!(p.input_ready.unwrap() <= p.window.start);
+                    } else {
+                        assert_eq!(rec.spec.source, p.device);
+                    }
+                }
+            }
+            // Random completion of a live task.
+            7..=8 => {
+                let pool = if g.bool(0.5) && !live_hp.is_empty() {
+                    &mut live_hp
+                } else {
+                    &mut live_lp
+                };
+                if !pool.is_empty() {
+                    let idx = g.usize(0, pool.len() - 1);
+                    let id = pool.swap_remove(idx);
+                    if st.task(id).map(|r| r.state.is_active_allocation()) == Some(true) {
+                        st.complete_task(id, now);
+                        policy.on_task_end(st, cfg, id, now);
+                    }
+                }
+            }
+            // Poll tick (workstealers pull work).
+            _ => {
+                let dev = DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32);
+                for p in policy.poll(st, cfg, dev, now) {
+                    live_lp.push(p.task);
+                }
+            }
+        }
+        st.check_invariants().unwrap();
+
+        // Global: every device's peak usage within capacity at every
+        // reservation start (exhaustive step-function check).
+        for d in st.device_ids() {
+            let ct = st.device(d);
+            for s in ct.slots() {
+                assert!(
+                    ct.usage_at(s.window.start) <= ct.capacity(),
+                    "device {d} over capacity"
+                );
+            }
+        }
+    }
+}
+
+/// A policy that does nothing (placeholder inside the controller shell).
+fn policy_noop() -> PatsScheduler {
+    PatsScheduler { preemption: false, reallocate: false, set_aware_victims: false }
+}
+
+#[test]
+fn scheduler_with_preemption_invariants() {
+    run("scheduler+preemption", 60, |g| {
+        let cfg = SystemConfig::default();
+        drive(g, &cfg, PatsScheduler { preemption: true, reallocate: true, set_aware_victims: false });
+    });
+}
+
+#[test]
+fn scheduler_without_preemption_invariants() {
+    run("scheduler", 60, |g| {
+        let cfg = SystemConfig::default();
+        drive(g, &cfg, PatsScheduler { preemption: false, reallocate: false, set_aware_victims: false });
+    });
+}
+
+#[test]
+fn central_workstealer_invariants() {
+    run("central stealer", 40, |g| {
+        let cfg = SystemConfig::default();
+        let ws = Workstealer::new(Mode::Central, g.bool(0.5), &cfg);
+        drive(g, &cfg, ws);
+    });
+}
+
+#[test]
+fn decentral_workstealer_invariants() {
+    run("decentral stealer", 40, |g| {
+        let cfg = SystemConfig::default();
+        let ws = Workstealer::new(Mode::Decentral, g.bool(0.5), &cfg);
+        drive(g, &cfg, ws);
+    });
+}
+
+#[test]
+fn odd_topologies_hold_invariants() {
+    // The paper uses 4 devices × 4 cores, but nothing in the scheduler may
+    // assume it.
+    run("odd topologies", 30, |g| {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = g.usize(1, 7);
+        cfg.cores_per_device = g.u64(2, 8) as u32;
+        drive(g, &cfg, PatsScheduler { preemption: true, reallocate: true, set_aware_victims: false });
+    });
+}
