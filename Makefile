@@ -1,0 +1,28 @@
+# PATS build/verify entry points.
+#
+#   make verify     — tier-1 gate: release build + tests + format check
+#   make bench      — micro-benchmarks (writes BENCH_*.json)
+#   make artifacts  — AOT-compile the JAX model to HLO text (python layer)
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: verify build test fmt bench artifacts
+
+verify: build test fmt
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --check
+
+bench:
+	$(CARGO) bench --bench timeline
+	$(CARGO) bench --bench alloc
+
+artifacts:
+	$(PYTHON) python/compile/aot.py

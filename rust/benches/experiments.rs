@@ -1,10 +1,12 @@
 //! End-to-end experiment benchmark: every paper scenario at full scale
 //! (5184 device-frames), timed, followed by the complete figure/table
-//! report. `cargo bench --bench experiments` regenerates the paper's
-//! evaluation in one shot.
+//! report and a fleet-size sweep (4/64/256/1024 devices). `cargo bench
+//! --bench experiments` regenerates the paper's evaluation in one shot and
+//! records the costs to `BENCH_experiments.json`.
 
 use pats::config::SystemConfig;
-use pats::experiments::ExperimentSet;
+use pats::experiments::{fleet_scale, fleet_scale_json, fleet_scale_table, ExperimentSet};
+use pats::util::json::Json;
 
 fn main() {
     let cfg = SystemConfig::default();
@@ -14,6 +16,29 @@ fn main() {
     );
     let t0 = std::time::Instant::now();
     let mut set = ExperimentSet::run(&cfg);
-    println!("matrix complete in {:.2?}\n", t0.elapsed());
+    let matrix_wall = t0.elapsed();
+    println!("matrix complete in {matrix_wall:.2?}\n");
     println!("{}", set.render_all());
+
+    // Fleet sweep: the same scheduler from the paper's 4 devices up to a
+    // 1024-device fleet, under the configured arrival pattern.
+    let sizes = cfg.fleet.sweep_sizes.clone();
+    println!(
+        "\nrunning the fleet sweep at {sizes:?} devices × {} cycles ({} pattern) ...",
+        cfg.fleet.cycles,
+        cfg.fleet.pattern.name()
+    );
+    let t1 = std::time::Instant::now();
+    let mut rows = fleet_scale(&cfg, &sizes);
+    println!("fleet sweep complete in {:.2?}\n", t1.elapsed());
+    println!("{}", fleet_scale_table(&mut rows));
+
+    let doc = Json::obj()
+        .with("bench", "experiments")
+        .with("matrix_wall_ms", matrix_wall.as_secs_f64() * 1_000.0)
+        .with("fleet", fleet_scale_json(&mut rows));
+    match std::fs::write("BENCH_experiments.json", doc.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_experiments.json"),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
 }

@@ -11,7 +11,13 @@ fn main() {
         eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
         return;
     }
-    let engine = Engine::load(&dir).expect("load artifacts");
+    let engine = match Engine::load(&dir) {
+        Ok(engine) => engine,
+        Err(e) => {
+            eprintln!("SKIP: cannot load artifacts ({e}); build with --features xla");
+            return;
+        }
+    };
     println!("platform {}, {} executables", engine.platform(), engine.names().count());
 
     let frame = Tensor::from_fn(&[48, 48, 3], |i| ((i * 2_654_435_761) % 1000) as f32 / 1000.0);

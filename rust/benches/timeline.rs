@@ -1,9 +1,14 @@
 //! Reservation-calendar micro-benchmarks: the data structures under every
 //! scheduling decision (earliest-fit search, reservation insert, preemption
 //! candidate selection, completion-point enumeration) at increasing
-//! occupancy.
+//! occupancy, plus a fleet-size sweep (4 → 1024 devices) over the
+//! gap-indexed link calendar.
+//!
+//! Results are printed and recorded to `BENCH_timeline.json`, so the
+//! sublinear growth of `earliest_fit` + `reserve` in reserved-slot count is
+//! measurable across commits.
 
-use pats::bench::{bench_with_setup, section};
+use pats::bench::{bench_with_setup, section, write_json, BenchResult};
 use pats::resources::{CoreTimeline, SlotKind, Timeline};
 use pats::task::{TaskId, Window};
 use pats::time::{SimDuration, SimTime};
@@ -35,23 +40,30 @@ fn filled_cores(n: usize) -> CoreTimeline {
     ct
 }
 
+fn show(results: &mut Vec<BenchResult>, mut r: BenchResult) {
+    println!("{}", r.render());
+    results.push(r);
+}
+
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
     section("link timeline: earliest_fit");
     for n in [10usize, 100, 1_000, 10_000] {
         let tl = filled_timeline(n);
-        let mut r = bench_with_setup(
+        let r = bench_with_setup(
             &format!("earliest_fit/slots={n}"),
             50,
             2_000,
             || (),
             |_| tl.earliest_fit(SimTime::ZERO, SimDuration::from_micros(1_500)),
         );
-        println!("{}", r.render());
+        show(&mut results, r);
     }
 
     section("link timeline: reserve + remove");
     for n in [100usize, 1_000, 10_000] {
-        let mut r = bench_with_setup(
+        let r = bench_with_setup(
             &format!("reserve_remove/slots={n}"),
             10,
             400,
@@ -63,36 +75,74 @@ fn main() {
                 tl.remove_owner(TaskId(u64::MAX))
             },
         );
-        println!("{}", r.render());
+        show(&mut results, r);
+    }
+
+    // The fleet sweep models the shared link of an n-device fleet: ~16 live
+    // reservations per device, and one scheduling decision = one
+    // earliest-fit probe + one reserve + one owner removal. The acceptance
+    // criterion for the gap index is that this cost grows sublinearly in
+    // the reserved-slot count.
+    section("fleet sweep: earliest_fit + reserve + remove at 4/64/256/1024 devices");
+    for devices in [4usize, 64, 256, 1_024] {
+        let slots = devices * 16;
+        let r = bench_with_setup(
+            &format!("fleet_fit_reserve/devices={devices}/slots={slots}"),
+            5,
+            200,
+            || filled_timeline(slots),
+            |mut tl| {
+                // A mid-horizon probe, like a controller planning from "now".
+                let now = SimTime::from_micros(1_000 * slots as u64);
+                let dur = SimDuration::from_micros(1_500);
+                let start = tl.earliest_fit(now, dur);
+                tl.reserve(start, dur, SlotKind::LpAllocMsg, TaskId(u64::MAX)).unwrap();
+                tl.remove_owner(TaskId(u64::MAX))
+            },
+        );
+        show(&mut results, r);
     }
 
     section("core timeline: fits / preemption candidates / completion points");
     for n in [8usize, 64, 512] {
         let ct = filled_cores(n);
         let probe = Window::new(SimTime::from_secs_f64(1.0), SimTime::from_secs_f64(18.0));
-        let mut r = bench_with_setup(
+        let r = bench_with_setup(
             &format!("fits/slots={n}"),
             50,
             2_000,
             || (),
             |_| ct.fits(&probe, 1),
         );
-        println!("{}", r.render());
-        let mut r = bench_with_setup(
+        show(&mut results, r);
+        let r = bench_with_setup(
             &format!("preemption_candidates/slots={n}"),
             50,
             2_000,
             || (),
             |_| ct.preemption_candidates(&probe).len(),
         );
-        println!("{}", r.render());
-        let mut r = bench_with_setup(
+        show(&mut results, r);
+        let r = bench_with_setup(
             &format!("completion_points/slots={n}"),
             50,
             2_000,
             || (),
             |_| ct.completion_points(SimTime::ZERO, SimTime::from_secs_f64(1e6)).len(),
         );
-        println!("{}", r.render());
+        show(&mut results, r);
+        let r = bench_with_setup(
+            &format!("earliest_availability/slots={n}"),
+            50,
+            2_000,
+            || (),
+            |_| ct.earliest_availability(SimTime::from_secs_f64(1.0), 4),
+        );
+        show(&mut results, r);
+    }
+
+    match write_json("timeline", &mut results) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench JSON: {e}"),
     }
 }

@@ -4,13 +4,17 @@
 //! iteration. Used by the targets in `rust/benches/` (all `harness =
 //! false`).
 
+use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Result of one benchmark case.
 pub struct BenchResult {
+    /// Case name (e.g. `earliest_fit/slots=1024`).
     pub name: String,
+    /// Timed iterations.
     pub iters: u32,
     samples_ns: Summary,
 }
@@ -30,6 +34,18 @@ impl BenchResult {
 
     pub fn min_ns(&self) -> f64 {
         self.samples_ns.min()
+    }
+
+    /// Machine-readable record of this case.
+    pub fn to_json(&mut self) -> Json {
+        let (mean, p50, p99, min) = (self.mean_ns(), self.p50_ns(), self.p99_ns(), self.min_ns());
+        Json::obj()
+            .with("name", self.name.as_str())
+            .with("iters", u64::from(self.iters))
+            .with("mean_ns", mean)
+            .with("p50_ns", p50)
+            .with("p99_ns", p99)
+            .with("min_ns", min)
     }
 
     /// One aligned report line.
@@ -93,6 +109,19 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Persist bench results as `BENCH_<name>.json` in the current directory
+/// (the package root under `cargo bench`), so sweeps are comparable across
+/// commits. Returns the written path.
+pub fn write_json(bench_name: &str, results: &mut [BenchResult]) -> std::io::Result<PathBuf> {
+    let cases: Vec<Json> = results.iter_mut().map(BenchResult::to_json).collect();
+    let doc = Json::obj()
+        .with("bench", bench_name)
+        .with("results", Json::Arr(cases));
+    let path = PathBuf::from(format!("BENCH_{bench_name}.json"));
+    std::fs::write(&path, doc.to_string_pretty())?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,6 +154,17 @@ mod tests {
             |x| x * 2,
         );
         assert!(r.p50_ns() < 1_000_000.0, "p50 {} must be far below 2 ms", r.p50_ns());
+    }
+
+    #[test]
+    fn json_record_has_all_fields() {
+        let mut r = bench("j", 0, 5, || 1u64 + 1);
+        let j = r.to_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("j"));
+        assert_eq!(j.get("iters").and_then(Json::as_f64), Some(5.0));
+        for key in ["mean_ns", "p50_ns", "p99_ns", "min_ns"] {
+            assert!(j.get(key).and_then(Json::as_f64).is_some(), "missing {key}");
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::time::SimDuration;
+use crate::trace::{FleetPattern, FleetProfile};
 use crate::util::toml::Document;
 
 /// Which allocation policy drives the controller.
@@ -48,6 +49,50 @@ pub enum BandwidthEstimator {
     /// Exponential moving average over measured transfer times (the paper's
     /// §7.3 ablation).
     Ema,
+}
+
+/// Fleet-scale scenario shaping (`[fleet]`), consumed by
+/// `experiments::fleet_scale` and the `pats fleet` subcommand.
+///
+/// Single-scenario device counts keep coming from `topology.devices`; these
+/// fields shape the *generated workload* and the sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Frames per device in a fleet scenario (total device-frames =
+    /// `devices × cycles`).
+    pub cycles: usize,
+    /// Arrival pattern across the fleet.
+    pub pattern: FleetPattern,
+    /// Share (%) of active device-frames that spawn only the high-priority
+    /// stage — the priority-mix knob.
+    pub hp_only_pct: u8,
+    /// Dominant LP set size (1..=4) when a DNN set is spawned.
+    pub lp_weight: u8,
+    /// Device counts for the `fleet_scale` sweep.
+    pub sweep_sizes: Vec<usize>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            cycles: 8,
+            pattern: FleetPattern::Bursty { period_cycles: 16, duty_pct: 25 },
+            hp_only_pct: 20,
+            lp_weight: 2,
+            sweep_sizes: vec![4, 64, 256, 1024],
+        }
+    }
+}
+
+impl FleetConfig {
+    /// The trace-generator view of this configuration.
+    pub fn profile(&self) -> FleetProfile {
+        FleetProfile {
+            pattern: self.pattern,
+            hp_only_pct: self.hp_only_pct,
+            lp_weight: self.lp_weight,
+        }
+    }
 }
 
 /// Complete system configuration. Paper defaults throughout.
@@ -157,6 +202,10 @@ pub struct SystemConfig {
     /// average ... with a deviation of ~2.3 s", §8), which is what makes
     /// task violations a real failure mode on the testbed.
     pub lp_live_extra_s: f64,
+
+    // ---- fleet scale ----
+    /// Fleet-scale workload shaping (`[fleet]`).
+    pub fleet: FleetConfig,
 }
 
 impl Default for SystemConfig {
@@ -196,6 +245,7 @@ impl Default for SystemConfig {
             noise_frac: 0.4,
             lp_live_extra_s: 0.45,
             steal_poll_interval_s: 2.0,
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -245,6 +295,14 @@ impl SystemConfig {
             "sim.noise_frac",
             "sim.lp_live_extra_s",
             "sim.steal_poll_interval_s",
+            "fleet.cycles",
+            "fleet.pattern",
+            "fleet.period_cycles",
+            "fleet.duty_pct",
+            "fleet.hot_pct",
+            "fleet.hp_only_pct",
+            "fleet.lp_weight",
+            "fleet.sweep_sizes",
         ];
         for key in doc.keys() {
             if !KNOWN.contains(&key) {
@@ -334,6 +392,65 @@ impl SystemConfig {
         f64_field!("sim.noise_frac", noise_frac);
         f64_field!("sim.lp_live_extra_s", lp_live_extra_s);
         f64_field!("sim.steal_poll_interval_s", steal_poll_interval_s);
+        // Range-checked narrowing for the [fleet] integers: a plain `as`
+        // cast would wrap out-of-range TOML values into silently-valid ones
+        // before validate() ever sees them.
+        fn fleet_u8(v: i64, hi: i64, key: &str) -> Result<u8> {
+            if (0..=hi).contains(&v) {
+                Ok(v as u8)
+            } else {
+                Err(Error::Config(format!("{key} must be in 0..={hi}, got {v}")))
+            }
+        }
+        if let Some(v) = doc.get_i64("fleet.cycles") {
+            if v < 1 {
+                return Err(Error::Config(format!("fleet.cycles must be >= 1, got {v}")));
+            }
+            cfg.fleet.cycles = v as usize;
+        }
+        if let Some(v) = doc.get_str("fleet.pattern") {
+            cfg.fleet.pattern = FleetPattern::parse(v)?;
+        }
+        // Pattern parameters refine the named variant.
+        if let Some(v) = doc.get_i64("fleet.period_cycles") {
+            if !(1..=i64::from(u32::MAX)).contains(&v) {
+                return Err(Error::Config(format!(
+                    "fleet.period_cycles must be >= 1, got {v}"
+                )));
+            }
+            match &mut cfg.fleet.pattern {
+                FleetPattern::Bursty { period_cycles, .. }
+                | FleetPattern::Diurnal { period_cycles } => *period_cycles = v as u32,
+                _ => {}
+            }
+        }
+        if let Some(v) = doc.get_i64("fleet.duty_pct") {
+            let v = fleet_u8(v, 100, "fleet.duty_pct")?;
+            if let FleetPattern::Bursty { duty_pct, .. } = &mut cfg.fleet.pattern {
+                *duty_pct = v;
+            }
+        }
+        if let Some(v) = doc.get_i64("fleet.hot_pct") {
+            let v = fleet_u8(v, 100, "fleet.hot_pct")?;
+            if let FleetPattern::Hotspot { hot_pct } = &mut cfg.fleet.pattern {
+                *hot_pct = v;
+            }
+        }
+        if let Some(v) = doc.get_i64("fleet.hp_only_pct") {
+            cfg.fleet.hp_only_pct = fleet_u8(v, 100, "fleet.hp_only_pct")?;
+        }
+        if let Some(v) = doc.get_i64("fleet.lp_weight") {
+            cfg.fleet.lp_weight = fleet_u8(v, 4, "fleet.lp_weight")?;
+        }
+        if let Some(v) = doc.get("fleet.sweep_sizes").and_then(|v| v.as_arr()) {
+            let sizes: Option<Vec<usize>> = v
+                .iter()
+                .map(|x| x.as_i64().filter(|&n| n > 0).map(|n| n as usize))
+                .collect();
+            cfg.fleet.sweep_sizes = sizes.ok_or_else(|| {
+                Error::Config("fleet.sweep_sizes must be positive integers".into())
+            })?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -366,6 +483,40 @@ impl SystemConfig {
         if self.frame_period_s <= self.hp_proc_s {
             return Err(Error::Config(
                 "frame period must exceed high-priority processing time".into(),
+            ));
+        }
+        if self.fleet.cycles == 0 {
+            return Err(Error::Config("fleet.cycles must be >= 1".into()));
+        }
+        if !(1..=4).contains(&self.fleet.lp_weight) {
+            return Err(Error::Config("fleet.lp_weight must be in 1..=4".into()));
+        }
+        if self.fleet.hp_only_pct > 100 {
+            return Err(Error::Config("fleet.hp_only_pct must be in 0..=100".into()));
+        }
+        match self.fleet.pattern {
+            FleetPattern::Bursty { period_cycles, duty_pct } => {
+                if period_cycles == 0 || duty_pct > 100 {
+                    return Err(Error::Config(
+                        "fleet bursty pattern needs period >= 1 and duty in 0..=100".into(),
+                    ));
+                }
+            }
+            FleetPattern::Diurnal { period_cycles } => {
+                if period_cycles == 0 {
+                    return Err(Error::Config("fleet diurnal period must be >= 1".into()));
+                }
+            }
+            FleetPattern::Hotspot { hot_pct } => {
+                if hot_pct > 100 {
+                    return Err(Error::Config("fleet.hot_pct must be in 0..=100".into()));
+                }
+            }
+            FleetPattern::Steady => {}
+        }
+        if self.fleet.sweep_sizes.is_empty() || self.fleet.sweep_sizes.contains(&0) {
+            return Err(Error::Config(
+                "fleet.sweep_sizes must be a non-empty list of positive device counts".into(),
             ));
         }
         Ok(())
@@ -489,6 +640,69 @@ frames = 96
         assert!(c.validate().is_err());
         let mut c = SystemConfig::default();
         c.jitter_frac = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_defaults_and_overrides() {
+        let c = SystemConfig::default();
+        assert_eq!(c.fleet.cycles, 8);
+        assert_eq!(c.fleet.sweep_sizes, vec![4, 64, 256, 1024]);
+        assert_eq!(c.fleet.pattern.name(), "bursty");
+
+        let doc = crate::util::toml::Document::parse(
+            r#"
+[fleet]
+cycles = 12
+pattern = "hotspot"
+hot_pct = 25
+hp_only_pct = 50
+lp_weight = 4
+sweep_sizes = [8, 128]
+"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_document(&doc).unwrap();
+        assert_eq!(c.fleet.cycles, 12);
+        assert_eq!(c.fleet.pattern, FleetPattern::Hotspot { hot_pct: 25 });
+        assert_eq!(c.fleet.hp_only_pct, 50);
+        assert_eq!(c.fleet.lp_weight, 4);
+        assert_eq!(c.fleet.sweep_sizes, vec![8, 128]);
+        // The profile view carries the mix through to the generator.
+        assert_eq!(c.fleet.profile().lp_weight, 4);
+    }
+
+    #[test]
+    fn out_of_range_fleet_toml_rejected_not_wrapped() {
+        for snippet in [
+            "[fleet]\ncycles = -1",
+            "[fleet]\nduty_pct = 300",
+            "[fleet]\nhp_only_pct = 300",
+            "[fleet]\nhp_only_pct = -5",
+            "[fleet]\nlp_weight = 260",
+            "[fleet]\nsweep_sizes = [4, -64]",
+        ] {
+            let doc = crate::util::toml::Document::parse(snippet).unwrap();
+            assert!(
+                SystemConfig::from_document(&doc).is_err(),
+                "accepted {snippet:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_fleet_configs_rejected() {
+        let mut c = SystemConfig::default();
+        c.fleet.cycles = 0;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.fleet.lp_weight = 5;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.fleet.pattern = FleetPattern::Bursty { period_cycles: 0, duty_pct: 25 };
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.fleet.sweep_sizes = vec![4, 0];
         assert!(c.validate().is_err());
     }
 

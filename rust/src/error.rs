@@ -1,40 +1,66 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the build is offline, so `thiserror`
+//! is not available.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the PATS library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / value problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Trace-file parse problems.
-    #[error("trace error: {0}")]
     Trace(String),
 
     /// A scheduling request that cannot be satisfied (not a bug: the paper's
     /// algorithms legitimately fail to allocate under load).
-    #[error("allocation failed: {0}")]
     Allocation(String),
 
     /// Violation of an internal invariant — always a bug.
-    #[error("invariant violated: {0}")]
     Invariant(String),
 
     /// Artifact registry / PJRT runtime problems.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
-    /// XLA/PJRT errors from the `xla` crate.
-    #[error("xla error: {0}")]
+    /// XLA/PJRT errors from the optional `xla` backend.
     Xla(String),
 
     /// I/O errors.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Trace(m) => write!(f, "trace error: {m}"),
+            Error::Allocation(m) => write!(f, "allocation failed: {m}"),
+            Error::Invariant(m) => write!(f, "invariant violated: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -43,3 +69,24 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert_eq!(Error::Allocation("y".into()).to_string(), "allocation failed: y");
+        assert_eq!(Error::Invariant("z".into()).to_string(), "invariant violated: z");
+    }
+
+    #[test]
+    fn io_conversion_keeps_source() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(e.source().is_some());
+    }
+}

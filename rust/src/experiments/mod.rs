@@ -18,6 +18,7 @@ use std::fmt::Write as _;
 use crate::config::{Policy as PolicyKind, SystemConfig};
 use crate::metrics::ScenarioMetrics;
 use crate::sim::run_scenario;
+use crate::time::SimTime;
 use crate::trace::{Distribution, Trace};
 use crate::util::json::Json;
 
@@ -172,7 +173,7 @@ impl ExperimentSet {
                 traces.push((name, trace.potential_counts()));
             }
             let result = run_scenario(&cfg, &trace, sc.label);
-            log::info!("{}", result.metrics.label);
+            crate::log_info!("{}", result.metrics.label);
             results.push(result.metrics);
         }
         // Table 4 also lists the network-slice trace.
@@ -528,6 +529,101 @@ impl ExperimentSet {
     }
 }
 
+// ---- fleet-scale sweep (beyond the paper) ------------------------------
+
+/// One row of the fleet-scale sweep: the same workload shape run at a
+/// growing device count.
+pub struct FleetScaleRow {
+    /// Fleet size (devices).
+    pub devices: usize,
+    /// Wall-clock time the scenario took to simulate.
+    pub wall: std::time::Duration,
+    /// Virtual time at which the last event resolved.
+    pub virtual_end: SimTime,
+    /// Full per-scenario metrics (per-priority completion, latency, …).
+    pub metrics: ScenarioMetrics,
+}
+
+/// Run the fleet-scale sweep: one scenario per device count in `sizes`,
+/// each `base.fleet.cycles` frames per device, with the workload shaped by
+/// `base.fleet` (pattern + priority mix). The paper stops at 4 devices;
+/// this is the path that takes the same scheduler to 1024.
+pub fn fleet_scale(base: &SystemConfig, sizes: &[usize]) -> Vec<FleetScaleRow> {
+    let profile = base.fleet.profile();
+    sizes
+        .iter()
+        .map(|&devices| {
+            let mut cfg = base.clone();
+            cfg.devices = devices;
+            cfg.frames = (devices * base.fleet.cycles) as u64;
+            let trace = Trace::generate_fleet(&profile, devices, base.fleet.cycles, cfg.seed);
+            let label = format!(
+                "FLEET_{devices}x{}_{}",
+                base.fleet.cycles,
+                profile.pattern.name()
+            );
+            let result = run_scenario(&cfg, &trace, &label);
+            crate::log_info!(
+                "{label}: {} frames in {:.2?} wall",
+                result.metrics.frames_total,
+                result.elapsed
+            );
+            FleetScaleRow {
+                devices,
+                wall: result.elapsed,
+                virtual_end: result.virtual_end,
+                metrics: result.metrics,
+            }
+        })
+        .collect()
+}
+
+/// Markdown table for a fleet sweep: per-priority completion, preemption
+/// activity, controller latency, and simulation cost per fleet size.
+pub fn fleet_scale_table(rows: &mut [FleetScaleRow]) -> String {
+    let mut out = String::from(
+        "## Fleet scale — same scheduler, growing fleet\n\n\
+         | devices | device-frames | frame % | HP % | LP % | preemptions | \
+         hp alloc ms (mean/p99) | lp alloc ms (mean/p99) | virtual end | wall |\n\
+         |---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for row in rows.iter_mut() {
+        let frames = row.metrics.frames_total;
+        let frame_pct = row.metrics.frame_completion_pct();
+        let hp_pct = row.metrics.hp_completion_pct();
+        let lp_pct = row.metrics.lp_completion_pct();
+        let preemptions = row.metrics.preemptions;
+        let hp_mean = row.metrics.hp_alloc_ms.mean();
+        let hp_p99 = row.metrics.hp_alloc_ms.percentile(99.0);
+        let lp_mean = row.metrics.lp_alloc_ms.mean();
+        let lp_p99 = row.metrics.lp_alloc_ms.percentile(99.0);
+        let _ = writeln!(
+            out,
+            "| {} | {frames} | {frame_pct:.2} | {hp_pct:.2} | {lp_pct:.2} | {preemptions} | \
+             {hp_mean:.4}/{hp_p99:.4} | {lp_mean:.4}/{lp_p99:.4} | {} | {:.2?} |",
+            row.devices, row.virtual_end, row.wall,
+        );
+    }
+    out
+}
+
+/// Machine-readable dump of a fleet sweep.
+pub fn fleet_scale_json(rows: &mut [FleetScaleRow]) -> Json {
+    let mut arr = Vec::new();
+    for row in rows.iter_mut() {
+        let wall_ms = row.wall.as_secs_f64() * 1_000.0;
+        let virtual_end_s = row.virtual_end.as_secs_f64();
+        arr.push(
+            Json::obj()
+                .with("devices", row.devices)
+                .with("wall_ms", wall_ms)
+                .with("virtual_end_s", virtual_end_s)
+                .with("metrics", row.metrics.to_json()),
+        );
+    }
+    Json::obj().with("rows", Json::Arr(arr))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -592,5 +688,26 @@ mod tests {
         assert!(set.metrics("UPS").is_some());
         assert!(set.metrics("WPS_9").is_none());
         assert_eq!(set.metrics("UPS").unwrap().frames_total, 80);
+    }
+
+    #[test]
+    fn fleet_scale_sweep_reports_every_size() {
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.cycles = 2;
+        let mut rows = fleet_scale(&cfg, &[4, 8]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].devices, 4);
+        assert_eq!(rows[0].metrics.frames_total, 8);
+        assert_eq!(rows[1].metrics.frames_total, 16);
+        let table = fleet_scale_table(&mut rows);
+        assert!(table.contains("Fleet scale"));
+        assert!(table.contains("| 4 |"));
+        assert!(table.contains("| 8 |"));
+        let json = fleet_scale_json(&mut rows);
+        let Json::Arr(arr) = json.get("rows").unwrap() else {
+            panic!("rows not an array");
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("devices").and_then(Json::as_f64), Some(4.0));
     }
 }

@@ -27,13 +27,23 @@
 //!   master–worker orchestration.
 //! * [`device`] — edge-device model: inference managers, violations.
 //! * [`pipeline`] — the three-stage waste-classification pipeline lifecycle.
-//! * [`trace`] — trace-file workload format and generators.
+//! * [`trace`] — trace-file workload format and generators, including the
+//!   fleet-scale generator (4 → 1024 devices, bursty/diurnal/hotspot
+//!   arrival patterns, mixed priority ratios).
 //! * [`sim`] — discrete-event engine + scenario runner.
 //! * [`metrics`] — counters and report rendering for every figure/table.
-//! * [`runtime`] — PJRT (XLA) execution of AOT-compiled artifacts, plus the
-//!   Rust side of horizontal partitioning (tile/halo/stitch).
-//! * [`experiments`] — regenerates every table and figure in the paper.
+//! * [`runtime`] — PJRT (XLA) execution of AOT-compiled artifacts (behind
+//!   the `xla` feature), plus the Rust side of horizontal partitioning
+//!   (tile/halo/stitch).
+//! * [`experiments`] — regenerates every table and figure in the paper,
+//!   plus the fleet-size sweep (`experiments::fleet_scale`).
 //! * [`bench`] — micro-benchmark harness (offline criterion replacement).
+//!
+//! The resource calendars under `resources` are gap-indexed so scheduling
+//! decisions stay O(log n) at fleet scale; see ARCHITECTURE.md for the
+//! paper-section → module map and the dataflow of one frame.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod config;

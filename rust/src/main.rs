@@ -26,11 +26,14 @@ USAGE:
   pats experiments [--frames N] [--seed S] [--out DIR]
   pats sim --dist DIST [--policy P] [--no-preemption] [--set-aware-victims]
            [--frames N] [--seed S] [--trace FILE] [--config FILE]
+  pats fleet [--sizes N,N,...] [--cycles N] [--pattern PAT] [--seed S]
+             [--config FILE] [--out DIR]
   pats trace-gen --dist DIST [--frames N] [--seed S] [--out FILE]
   pats check [--artifacts DIR]
 
   DIST:   uniform | weighted1..4 | network-slice
   P:      scheduler | central-workstealer | decentral-workstealer
+  PAT:    steady | bursty | diurnal | hotspot
 ";
 
 fn main() -> ExitCode {
@@ -50,6 +53,7 @@ fn main() -> ExitCode {
     let result = match args.command.as_deref() {
         Some("experiments") => cmd_experiments(&args),
         Some("sim") => cmd_sim(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("trace-gen") => cmd_trace_gen(&args),
         Some("check") => cmd_check(&args),
         Some(other) => Err(format!("unknown subcommand {other:?}\n{USAGE}")),
@@ -131,6 +135,56 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
             result.virtual_end, result.elapsed
         );
     }
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<(), String> {
+    let mut cfg = base_config(args)?;
+    if let Some(p) = args.opt("pattern") {
+        cfg.fleet.pattern =
+            pats::trace::FleetPattern::parse(p).map_err(|e| e.to_string())?;
+    }
+    if let Some(c) = args.opt("cycles") {
+        cfg.fleet.cycles = c
+            .parse::<usize>()
+            .map_err(|_| format!("bad --cycles value {c:?}"))?;
+    }
+    let sizes: Vec<usize> = match args.opt("sizes") {
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad --sizes entry {s:?}"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => cfg.fleet.sweep_sizes.clone(),
+    };
+    if sizes.is_empty() || sizes.contains(&0) {
+        return Err("--sizes must be a comma list of positive device counts".into());
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+    eprintln!(
+        "running the fleet sweep at {sizes:?} devices × {} cycles ({} pattern) ...",
+        cfg.fleet.cycles,
+        cfg.fleet.pattern.name()
+    );
+    let t0 = std::time::Instant::now();
+    let mut rows = pats::experiments::fleet_scale(&cfg, &sizes);
+    eprintln!("done in {:.2?}", t0.elapsed());
+    let table = pats::experiments::fleet_scale_table(&mut rows);
+    println!("{table}");
+    let out_dir = PathBuf::from(args.opt_str("out", "results"));
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+    let md = out_dir.join("fleet_scale.md");
+    std::fs::write(&md, &table).map_err(|e| e.to_string())?;
+    let json = out_dir.join("fleet_scale.json");
+    std::fs::write(
+        &json,
+        pats::experiments::fleet_scale_json(&mut rows).to_string_pretty(),
+    )
+    .map_err(|e| e.to_string())?;
+    eprintln!("wrote {} and {}", md.display(), json.display());
     Ok(())
 }
 

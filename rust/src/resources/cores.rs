@@ -12,8 +12,11 @@ use crate::time::SimTime;
 /// One core reservation.
 #[derive(Debug, Clone)]
 pub struct CoreSlot {
+    /// Reserved processing window.
     pub window: Window,
+    /// Cores held throughout the window.
     pub cores: u32,
+    /// The owning task.
     pub task: TaskId,
     /// Absolute deadline of the owning task — cached here so preemption
     /// victim selection ("farthest deadline") needs no registry lookup.
@@ -81,6 +84,44 @@ impl CoreTimeline {
     /// Can `cores` more cores fit throughout `window`?
     pub fn fits(&self, window: &Window, cores: u32) -> bool {
         cores <= self.capacity && self.peak_usage_in(window) + cores <= self.capacity
+    }
+
+    /// Earliest instant `>= after` at which `cores` additional cores are
+    /// free — i.e. the earliest a reservation of that width could *start*
+    /// (it may still be interrupted later; use [`CoreTimeline::fits`] for a
+    /// full-window check). Returns `None` only when `cores` exceeds
+    /// capacity.
+    ///
+    /// This is the fleet-scale candidate pre-filter primitive: usage is a
+    /// step function that only decreases at reservation ends, so if
+    /// `earliest_availability(tp, cores) + slot` already misses a deadline,
+    /// no feasible window on this device exists and the scheduler can skip
+    /// it without paying the full placement search (see
+    /// `scheduler::low_priority`).
+    pub fn earliest_availability(&self, after: SimTime, cores: u32) -> Option<SimTime> {
+        if cores > self.capacity {
+            return None;
+        }
+        if self.usage_at(after) + cores <= self.capacity {
+            return Some(after);
+        }
+        // Usage only drops at reservation ends; probe them in time order.
+        let mut ends: Vec<SimTime> = self
+            .slots
+            .iter()
+            .map(|s| s.window.end)
+            .filter(|&e| e > after)
+            .collect();
+        ends.sort_unstable();
+        ends.dedup();
+        for e in ends {
+            if self.usage_at(e) + cores <= self.capacity {
+                return Some(e);
+            }
+        }
+        // Unreachable: past the last reservation end the usage is zero, and
+        // that end is always probed when `after` itself is over-committed.
+        None
     }
 
     /// Reserve `cores` cores for `task` over `window`.
@@ -286,5 +327,28 @@ mod tests {
     fn zero_duration_window_fits_anywhere_under_capacity() {
         let tl = CoreTimeline::new(4);
         assert!(tl.fits(&w(10, 10), 4));
+    }
+
+    #[test]
+    fn earliest_availability_tracks_release_points() {
+        let mut tl = CoreTimeline::new(4);
+        reserve(&mut tl, w(0, 100), 4, 1, 100);
+        reserve(&mut tl, w(100, 200), 2, 2, 200);
+        // Fully booked until 100: no room for even one core before then.
+        assert_eq!(tl.earliest_availability(t(10), 1), Some(t(100)));
+        // Two cores are free in [100, 200); four only after 200.
+        assert_eq!(tl.earliest_availability(t(10), 2), Some(t(100)));
+        assert_eq!(tl.earliest_availability(t(10), 3), Some(t(200)));
+        assert_eq!(tl.earliest_availability(t(10), 4), Some(t(200)));
+        // Idle point: immediately available.
+        assert_eq!(tl.earliest_availability(t(300), 4), Some(t(300)));
+        // Over capacity: never.
+        assert_eq!(tl.earliest_availability(t(0), 5), None);
+    }
+
+    #[test]
+    fn earliest_availability_on_empty_timeline() {
+        let tl = CoreTimeline::new(4);
+        assert_eq!(tl.earliest_availability(t(7), 4), Some(t(7)));
     }
 }

@@ -5,9 +5,13 @@
 //! cores** (additive — concurrent reservations as long as the core sum stays
 //! within capacity). Slots are variable-length and carry the padding the
 //! paper adds for run-time variation.
+//!
+//! The link calendar is gap-indexed for fleet scale — see [`Timeline`] for
+//! the design and `rust/tests/prop_timeline_equivalence.rs` for the
+//! behavioural proof against the seed's linear scan.
 
 mod cores;
 mod timeline;
 
-pub use cores::CoreTimeline;
-pub use timeline::{SlotKind, Timeline};
+pub use cores::{CoreSlot, CoreTimeline};
+pub use timeline::{Slot, SlotKind, Timeline};

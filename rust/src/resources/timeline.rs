@@ -1,8 +1,39 @@
 //! Exclusive-resource reservation timeline (the shared wireless link).
 //!
-//! Variable-length, non-overlapping, half-open slots kept sorted by start
-//! time. The controller reserves one slot per message: allocation messages,
-//! input transfers, state updates, preemption notices (§3.1).
+//! Variable-length, non-overlapping, half-open slots. The controller
+//! reserves one slot per message: allocation messages, input transfers,
+//! state updates, preemption notices (§3.1).
+//!
+//! # Fleet-scale storage
+//!
+//! The seed implementation kept a sorted `Vec<Slot>` and found free space
+//! with a linear gap scan — fine for the paper's four Raspberry Pis, but
+//! the shared link of a 1024-device fleet holds thousands of live
+//! reservations and the scan (plus the `Vec` insert memmove) made every
+//! scheduling decision O(n). This version is **gap-indexed**:
+//!
+//! * `slots` — a `BTreeMap` keyed by start time (starts are unique because
+//!   slots are non-overlapping and non-empty), giving O(log n)
+//!   insert/remove/neighbour lookup.
+//! * `gaps` — the exact complement of `slots` over `[0, u64::MAX)`
+//!   microseconds, also keyed by start. The final gap always ends at
+//!   `u64::MAX` (the open future).
+//! * `gaps_by_len` — gap starts bucketed by `⌊log₂(length)⌋`. A fit query
+//!   for duration `d` only has to consider the first gap after the query
+//!   point in each bucket `≥ ⌊log₂ d⌋`: buckets strictly above are
+//!   guaranteed to fit, and only the one ambiguous bucket (lengths within
+//!   2× of `d`) needs individual length checks.
+//! * `by_owner` — task → slot starts, so `remove_owner` touches only that
+//!   owner's slots instead of scanning the calendar.
+//!
+//! `earliest_fit` and `reserve` are O(log n) (plus the one ambiguous
+//! bucket, which is rarely populated in practice); `remove_owner` and
+//! `prune_before` are O(k log n) in the slots actually removed. The
+//! behavioural contract is identical to the linear implementation —
+//! `rust/tests/prop_timeline_equivalence.rs` checks every operation against
+//! a re-implementation of the seed's linear scan on random workloads.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::error::{Error, Result};
 use crate::task::{TaskId, Window};
@@ -28,22 +59,55 @@ pub enum SlotKind {
 /// One reserved slot.
 #[derive(Debug, Clone)]
 pub struct Slot {
+    /// The reserved half-open window.
     pub window: Window,
+    /// What the slot carries.
     pub kind: SlotKind,
     /// The task this slot serves.
     pub owner: TaskId,
 }
 
-/// A sorted, non-overlapping reservation calendar for an exclusive resource.
-#[derive(Debug, Clone, Default)]
+/// Bucket index for a gap of `len` microseconds: `⌊log₂ len⌋`.
+#[inline]
+fn len_class(len: u64) -> usize {
+    debug_assert!(len > 0, "zero-length gap has no bucket");
+    63 - len.leading_zeros() as usize
+}
+
+/// A sorted, non-overlapping reservation calendar for an exclusive
+/// resource, with a free-gap index for fleet-scale fit queries (see the
+/// module docs for the design).
+#[derive(Debug, Clone)]
 pub struct Timeline {
-    /// Sorted by `window.start`; pairwise non-overlapping.
-    slots: Vec<Slot>,
+    /// start → slot; starts are unique (slots are non-overlapping and
+    /// non-empty).
+    slots: BTreeMap<SimTime, Slot>,
+    /// Free-gap complement of `slots`: gap start (µs) → gap end (µs).
+    /// Tiles `[0, u64::MAX)` exactly; zero-length gaps are never stored.
+    gaps: BTreeMap<u64, u64>,
+    /// Gap starts bucketed by `len_class(gap length)`; 64 buckets.
+    gaps_by_len: Vec<BTreeSet<u64>>,
+    /// Owner → starts of its slots (insertion order).
+    by_owner: HashMap<TaskId, Vec<SimTime>>,
+}
+
+impl Default for Timeline {
+    fn default() -> Timeline {
+        Timeline::new()
+    }
 }
 
 impl Timeline {
+    /// An empty calendar: one free gap covering all of time.
     pub fn new() -> Timeline {
-        Timeline { slots: Vec::new() }
+        let mut tl = Timeline {
+            slots: BTreeMap::new(),
+            gaps: BTreeMap::new(),
+            gaps_by_len: vec![BTreeSet::new(); 64],
+            by_owner: HashMap::new(),
+        };
+        tl.gap_insert(0, u64::MAX);
+        tl
     }
 
     /// Number of reserved slots.
@@ -51,33 +115,109 @@ impl Timeline {
         self.slots.len()
     }
 
+    /// Is the calendar empty?
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }
 
-    /// Index of the first slot whose end is after `t` (binary search).
-    fn first_ending_after(&self, t: SimTime) -> usize {
-        // Slots are non-overlapping and sorted by start, hence also by end.
-        self.slots.partition_point(|s| s.window.end <= t)
+    // ---- gap index internals --------------------------------------------
+
+    fn gap_insert(&mut self, start: u64, end: u64) {
+        debug_assert!(end > start, "gap [{start}, {end}) is empty or inverted");
+        self.gaps.insert(start, end);
+        self.gaps_by_len[len_class(end - start)].insert(start);
     }
+
+    fn gap_remove(&mut self, start: u64) -> u64 {
+        let end = self.gaps.remove(&start).expect("gap index corrupt");
+        self.gaps_by_len[len_class(end - start)].remove(&start);
+        end
+    }
+
+    /// Return `[start, end)` to the free pool, coalescing with any
+    /// adjacent gaps.
+    fn release_window(&mut self, start: u64, end: u64) {
+        let mut lo = start;
+        let mut hi = end;
+        // A gap ending exactly at `start` merges from the left.
+        if let Some((&gs, &ge)) = self.gaps.range(..start).next_back() {
+            if ge == start {
+                self.gap_remove(gs);
+                lo = gs;
+            }
+        }
+        // A gap starting exactly at `end` merges from the right.
+        if self.gaps.contains_key(&end) {
+            hi = self.gap_remove(end);
+        }
+        self.gap_insert(lo, hi);
+    }
+
+    /// Remove the slot starting at `start` and free its window.
+    fn remove_slot(&mut self, start: SimTime) -> Slot {
+        let slot = self.slots.remove(&start).expect("slot index corrupt");
+        self.release_window(slot.window.start.0, slot.window.end.0);
+        slot
+    }
+
+    // ---- queries ---------------------------------------------------------
 
     /// Earliest start `>= not_before` where a slot of `dur` fits.
     ///
-    /// Linear scan over the gaps from the first relevant slot; the paper's
-    /// own complexity analysis is linear in allocated tasks (§6.3).
+    /// Answered from the gap index in O(log n): the gap containing
+    /// `not_before` is probed directly, then each length bucket that can
+    /// hold `dur` contributes its first gap after `not_before`. Only the
+    /// one ambiguous bucket (gap lengths within 2× of `dur`) needs
+    /// per-gap length checks.
     pub fn earliest_fit(&self, not_before: SimTime, dur: SimDuration) -> SimTime {
-        let mut candidate = not_before;
-        for slot in &self.slots[self.first_ending_after(not_before)..] {
-            let needed_end = candidate + dur;
-            if needed_end <= slot.window.start {
-                return candidate;
-            }
-            candidate = candidate.max(slot.window.end);
+        let nb = not_before.0;
+        let need = dur.0;
+        if need == 0 {
+            // Degenerate zero-length request: any instant not strictly
+            // inside a slot (matches the seed's linear implementation —
+            // a slot *boundary*, including a slot's own start, qualifies,
+            // so only slots beginning strictly before `not_before` can
+            // push the answer back).
+            return match self.slots.range(..not_before).next_back() {
+                Some((_, slot)) if slot.window.end.0 > nb => slot.window.end,
+                _ => not_before,
+            };
         }
-        candidate
+        // 1. The gap containing `not_before`, if any.
+        if let Some((&gs, &ge)) = self.gaps.range(..=nb).next_back() {
+            debug_assert!(gs <= nb);
+            if ge > nb && ge - nb >= need {
+                return not_before;
+            }
+        }
+        // 2. The earliest gap strictly after `not_before` that fits.
+        // Buckets above the ambiguous one are guaranteed fits, so their
+        // first in-range entry is their best candidate.
+        let min_class = len_class(need);
+        let mut best = u64::MAX;
+        for class in (min_class + 1)..64 {
+            if let Some(&gs) = self.gaps_by_len[class].range(nb + 1..).next() {
+                best = best.min(gs);
+            }
+        }
+        // The ambiguous bucket holds lengths in [2^min_class, 2^(min_class+1));
+        // check candidates until one fits or they can no longer improve.
+        for &gs in self.gaps_by_len[min_class].range(nb + 1..) {
+            if gs >= best {
+                break;
+            }
+            let ge = self.gaps[&gs];
+            if ge - gs >= need {
+                best = gs;
+                break;
+            }
+        }
+        debug_assert!(best < u64::MAX, "the trailing infinite gap always fits");
+        SimTime(best)
     }
 
-    /// Reserve `[start, start+dur)`. Fails on any overlap.
+    /// Reserve `[start, start+dur)`. Fails on any overlap, and on
+    /// zero-length requests (a zero-length slot reserves nothing).
     pub fn reserve(
         &mut self,
         start: SimTime,
@@ -85,23 +225,38 @@ impl Timeline {
         kind: SlotKind,
         owner: TaskId,
     ) -> Result<Window> {
+        if dur == SimDuration::ZERO {
+            return Err(Error::Allocation(format!(
+                "zero-duration link slot at {start:?} reserves nothing"
+            )));
+        }
         let window = Window::from_duration(start, dur);
-        let idx = self.slots.partition_point(|s| s.window.start < window.start);
-        // Check neighbour on each side (sufficient because non-overlapping).
-        if idx > 0 && self.slots[idx - 1].window.overlaps(&window) {
-            return Err(Error::Allocation(format!(
-                "link slot {:?} overlaps existing {:?}",
-                window, self.slots[idx - 1].window
-            )));
+        let (s, e) = (window.start.0, window.end.0);
+        match self.gaps.range(..=s).next_back().map(|(&gs, &ge)| (gs, ge)) {
+            Some((gs, ge)) if ge >= e => {
+                // The gap [gs, ge) contains [s, e): split it around the slot.
+                self.gap_remove(gs);
+                if gs < s {
+                    self.gap_insert(gs, s);
+                }
+                if e < ge {
+                    self.gap_insert(e, ge);
+                }
+                self.slots.insert(window.start, Slot { window, kind, owner });
+                self.by_owner.entry(owner).or_default().push(window.start);
+                Ok(window)
+            }
+            _ => {
+                let conflict = self
+                    .slots
+                    .range(..window.end)
+                    .next_back()
+                    .map(|(_, slot)| slot.window);
+                Err(Error::Allocation(format!(
+                    "link slot {window:?} overlaps existing {conflict:?}"
+                )))
+            }
         }
-        if idx < self.slots.len() && self.slots[idx].window.overlaps(&window) {
-            return Err(Error::Allocation(format!(
-                "link slot {:?} overlaps existing {:?}",
-                window, self.slots[idx].window
-            )));
-        }
-        self.slots.insert(idx, Slot { window, kind, owner });
-        Ok(window)
     }
 
     /// Convenience: earliest-fit then reserve. Returns the reserved window.
@@ -119,37 +274,85 @@ impl Timeline {
 
     /// Remove all slots owned by `task`; returns how many were removed.
     pub fn remove_owner(&mut self, task: TaskId) -> usize {
-        let before = self.slots.len();
-        self.slots.retain(|s| s.owner != task);
-        before - self.slots.len()
+        let starts = self.by_owner.remove(&task).unwrap_or_default();
+        for &s in &starts {
+            self.remove_slot(s);
+        }
+        starts.len()
     }
 
     /// Remove slots owned by `task` that start at or after `t` (keep already
     /// transmitted messages when cancelling a future allocation).
     pub fn remove_owner_from(&mut self, task: TaskId, t: SimTime) -> usize {
-        let before = self.slots.len();
-        self.slots.retain(|s| s.owner != task || s.window.start < t);
-        before - self.slots.len()
+        let mut removed = Vec::new();
+        let mut now_empty = false;
+        if let Some(starts) = self.by_owner.get_mut(&task) {
+            starts.retain(|&s| {
+                if s >= t {
+                    removed.push(s);
+                    false
+                } else {
+                    true
+                }
+            });
+            now_empty = starts.is_empty();
+        }
+        if now_empty {
+            self.by_owner.remove(&task);
+        }
+        for &s in &removed {
+            self.remove_slot(s);
+        }
+        removed.len()
     }
 
     /// Drop slots that ended at or before `t` (bookkeeping compaction).
     pub fn prune_before(&mut self, t: SimTime) -> usize {
-        let cut = self.first_ending_after(t);
-        self.slots.drain(..cut).count()
+        let mut n = 0;
+        loop {
+            let (start, owner) = match self.slots.first_key_value() {
+                Some((&start, slot)) if slot.window.end <= t => (start, slot.owner),
+                _ => break,
+            };
+            self.remove_slot(start);
+            let mut now_empty = false;
+            if let Some(starts) = self.by_owner.get_mut(&owner) {
+                if let Some(pos) = starts.iter().position(|&s| s == start) {
+                    starts.swap_remove(pos);
+                }
+                now_empty = starts.is_empty();
+            }
+            if now_empty {
+                self.by_owner.remove(&owner);
+            }
+            n += 1;
+        }
+        n
     }
 
-    /// All slots overlapping `window`.
+    /// All slots overlapping `window`, in start order.
     pub fn overlapping<'a>(&'a self, window: &'a Window) -> impl Iterator<Item = &'a Slot> {
-        let start = self.first_ending_after(window.start);
-        self.slots[start..]
-            .iter()
-            .take_while(move |s| s.window.start < window.end)
-            .filter(move |s| s.window.overlaps(window))
+        // The slot that begins at or before the window may still overlap it;
+        // everything else relevant begins inside the window.
+        let begin = match self.slots.range(..=window.start).next_back() {
+            Some((&s, slot)) if slot.window.end > window.start => s,
+            _ => window.start,
+        };
+        let end = window.end;
+        self.slots
+            .range(begin..)
+            .take_while(move |(&s, _)| s < end)
+            .map(|(_, slot)| slot)
+            .filter(move |slot| slot.window.overlaps(window))
     }
 
-    /// Iterate all slots (sorted).
-    pub fn slots(&self) -> &[Slot] {
-        &self.slots
+    /// All slots in start order.
+    ///
+    /// Materialised into a fresh `Vec`: the calendar is gap-indexed rather
+    /// than a flat vector. Intended for tests and diagnostics, not hot
+    /// paths.
+    pub fn slots(&self) -> Vec<Slot> {
+        self.slots.values().cloned().collect()
     }
 
     /// Total reserved time within `window`.
@@ -163,17 +366,87 @@ impl Timeline {
         total
     }
 
-    /// Debug invariant: sorted and non-overlapping.
+    /// Debug invariant: slots sorted and non-overlapping, and every index
+    /// (gaps, length buckets, owner map) exactly consistent with them.
     pub fn check_invariants(&self) -> Result<()> {
-        for pair in self.slots.windows(2) {
-            if pair[0].window.start > pair[1].window.start {
-                return Err(Error::Invariant("timeline not sorted".into()));
-            }
-            if pair[0].window.overlaps(&pair[1].window) {
+        // Slots: keyed by their own start, non-overlapping, non-empty.
+        let mut cursor = 0u64;
+        let mut checked_gaps = 0usize;
+        for (key, slot) in &self.slots {
+            if *key != slot.window.start {
                 return Err(Error::Invariant(format!(
-                    "timeline overlap: {:?} vs {:?}",
-                    pair[0].window, pair[1].window
+                    "slot keyed at {key:?} but starts at {:?}",
+                    slot.window.start
                 )));
+            }
+            if slot.window.end <= slot.window.start {
+                return Err(Error::Invariant(format!("empty slot {:?}", slot.window)));
+            }
+            let (s, e) = (slot.window.start.0, slot.window.end.0);
+            if s < cursor {
+                return Err(Error::Invariant(format!(
+                    "timeline overlap: slot {:?} begins before {cursor}",
+                    slot.window
+                )));
+            }
+            // The complement between `cursor` and this slot must be exactly
+            // one recorded gap (or nothing, when the slots touch).
+            if s > cursor {
+                if self.gaps.get(&cursor) != Some(&s) {
+                    return Err(Error::Invariant(format!(
+                        "missing/incorrect gap [{cursor}, {s})"
+                    )));
+                }
+                checked_gaps += 1;
+            }
+            cursor = e;
+        }
+        if self.gaps.get(&cursor) != Some(&u64::MAX) {
+            return Err(Error::Invariant(format!(
+                "missing trailing gap [{cursor}, MAX)"
+            )));
+        }
+        checked_gaps += 1;
+        if checked_gaps != self.gaps.len() {
+            return Err(Error::Invariant(format!(
+                "stray gaps: {} recorded, {checked_gaps} expected",
+                self.gaps.len()
+            )));
+        }
+        // Length buckets mirror the gap map exactly.
+        let bucketed: usize = self.gaps_by_len.iter().map(BTreeSet::len).sum();
+        if bucketed != self.gaps.len() {
+            return Err(Error::Invariant(format!(
+                "length buckets hold {bucketed} gaps, map holds {}",
+                self.gaps.len()
+            )));
+        }
+        for (&gs, &ge) in &self.gaps {
+            if !self.gaps_by_len[len_class(ge - gs)].contains(&gs) {
+                return Err(Error::Invariant(format!(
+                    "gap [{gs}, {ge}) missing from its length bucket"
+                )));
+            }
+        }
+        // Owner index: every entry names a live slot of that owner, and
+        // every slot is indexed exactly once.
+        let indexed: usize = self.by_owner.values().map(Vec::len).sum();
+        if indexed != self.slots.len() {
+            return Err(Error::Invariant(format!(
+                "owner index holds {indexed} starts, calendar holds {}",
+                self.slots.len()
+            )));
+        }
+        for (owner, starts) in &self.by_owner {
+            for s in starts {
+                match self.slots.get(s) {
+                    Some(slot) if slot.owner == *owner => {}
+                    _ => {
+                        return Err(Error::Invariant(format!(
+                            "owner index entry {owner:?}@{s:?} has no matching slot"
+                        )))
+                    }
+                }
             }
         }
         Ok(())
@@ -195,6 +468,7 @@ mod tests {
     fn empty_timeline_fits_immediately() {
         let tl = Timeline::new();
         assert_eq!(tl.earliest_fit(t(5), d(10)), t(5));
+        tl.check_invariants().unwrap();
     }
 
     #[test]
@@ -209,6 +483,7 @@ mod tests {
         assert_eq!(tl.earliest_fit(t(5), d(11)), t(40));
         // Start inside a slot: pushed to its end.
         assert_eq!(tl.earliest_fit(t(12), d(5)), t(20));
+        tl.check_invariants().unwrap();
     }
 
     #[test]
@@ -221,6 +496,26 @@ mod tests {
         assert!(tl.reserve(t(20), d(5), SlotKind::HpAllocMsg, TaskId(2)).is_ok());
         assert!(tl.reserve(t(5), d(5), SlotKind::HpAllocMsg, TaskId(3)).is_ok());
         tl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_rejects_zero_duration() {
+        let mut tl = Timeline::new();
+        assert!(tl.reserve(t(5), SimDuration::ZERO, SlotKind::PollMsg, TaskId(1)).is_err());
+        assert_eq!(tl.len(), 0);
+        tl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn earliest_fit_zero_duration_matches_linear_semantics() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(10), d(10), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        assert_eq!(tl.earliest_fit(t(5), SimDuration::ZERO), t(5));
+        // A slot's own start is a boundary, not "inside" — the seed's scan
+        // returns it unchanged.
+        assert_eq!(tl.earliest_fit(t(10), SimDuration::ZERO), t(10));
+        assert_eq!(tl.earliest_fit(t(12), SimDuration::ZERO), t(20));
+        assert_eq!(tl.earliest_fit(t(20), SimDuration::ZERO), t(20));
     }
 
     #[test]
@@ -243,6 +538,7 @@ mod tests {
         assert_eq!(tl.len(), 1);
         // Freed space is reusable.
         assert_eq!(tl.earliest_fit(t(0), d(5)), t(0));
+        tl.check_invariants().unwrap();
     }
 
     #[test]
@@ -253,6 +549,7 @@ mod tests {
         assert_eq!(tl.remove_owner_from(TaskId(1), t(8)), 1);
         assert_eq!(tl.len(), 1);
         assert_eq!(tl.slots()[0].window.start, t(0));
+        tl.check_invariants().unwrap();
     }
 
     #[test]
@@ -284,5 +581,54 @@ mod tests {
         tl.reserve(t(10), d(5), SlotKind::HpAllocMsg, TaskId(2)).unwrap();
         assert_eq!(tl.prune_before(t(9)), 1);
         assert_eq!(tl.len(), 1);
+        tl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn gaps_coalesce_on_release() {
+        let mut tl = Timeline::new();
+        // Three adjacent slots; removing the middle one must merge its
+        // window with nothing (neighbours reserved), removing the rest must
+        // coalesce back to the single infinite gap.
+        tl.reserve(t(0), d(10), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        tl.reserve(t(10), d(10), SlotKind::HpAllocMsg, TaskId(2)).unwrap();
+        tl.reserve(t(20), d(10), SlotKind::HpAllocMsg, TaskId(3)).unwrap();
+        tl.check_invariants().unwrap();
+        assert_eq!(tl.remove_owner(TaskId(2)), 1);
+        tl.check_invariants().unwrap();
+        // The freed middle is immediately reusable.
+        assert_eq!(tl.earliest_fit(t(0), d(10)), t(10));
+        assert_eq!(tl.remove_owner(TaskId(1)), 1);
+        tl.check_invariants().unwrap();
+        assert_eq!(tl.remove_owner(TaskId(3)), 1);
+        tl.check_invariants().unwrap();
+        assert!(tl.is_empty());
+        assert_eq!(tl.earliest_fit(t(0), d(1)), t(0));
+    }
+
+    #[test]
+    fn dense_calendar_fit_is_fast_path_correct() {
+        // 1 ms slots with 1 ms gaps: a request that outgrows every interior
+        // gap must land after the last slot (the seed bench's worst case).
+        let mut tl = Timeline::new();
+        for i in 0..1_000u64 {
+            tl.reserve(
+                SimTime::from_micros(2_000 * i),
+                SimDuration::from_millis(1),
+                SlotKind::StateUpdate,
+                TaskId(i),
+            )
+            .unwrap();
+        }
+        assert_eq!(
+            tl.earliest_fit(SimTime::ZERO, SimDuration::from_micros(1_500)),
+            SimTime::from_micros(2_000 * 999 + 1_000),
+        );
+        // A request that fits an interior gap takes the first one.
+        assert_eq!(
+            tl.earliest_fit(SimTime::ZERO, SimDuration::from_micros(900)),
+            SimTime::from_micros(1_000),
+        );
+        tl.check_invariants().unwrap();
     }
 }

@@ -12,10 +12,18 @@
 
 pub mod partition;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use crate::error::{Error, Result};
+
+pub use engine::Engine;
+
+/// Default artifact directory: `$PATS_ARTIFACTS` or `<repo>/artifacts`.
+fn artifacts_default_dir() -> PathBuf {
+    std::env::var("PATS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
 
 /// A dense f32 tensor (row-major), the only dtype the pipeline models use.
 #[derive(Debug, Clone, PartialEq)]
@@ -150,106 +158,175 @@ fn parse_shape_list(s: &str) -> Result<Vec<Vec<usize>>> {
     Ok(shapes)
 }
 
-/// The PJRT engine: compiled executables for every artifact.
-pub struct Engine {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    specs: HashMap<String, ArtifactSpec>,
-    dir: PathBuf,
-}
+/// The real PJRT engine, available with the `xla` feature.
+#[cfg(feature = "xla")]
+mod engine {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-impl Engine {
-    /// Default artifact directory: `$PATS_ARTIFACTS` or `<crate>/artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var("PATS_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    use super::{parse_manifest, ArtifactSpec, Tensor};
+    use crate::error::{Error, Result};
+
+    /// The PJRT engine: compiled executables for every artifact.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+        specs: HashMap<String, ArtifactSpec>,
+        dir: PathBuf,
     }
 
-    /// Load and compile every artifact listed in `<dir>/manifest.txt`.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
-            Error::Runtime(format!(
-                "cannot read {}/manifest.txt ({e}); run `make artifacts` first",
-                dir.display()
-            ))
-        })?;
-        let specs = parse_manifest(&manifest)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut executables = HashMap::new();
-        let mut spec_map = HashMap::new();
-        for spec in specs {
-            let path = dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str()
-                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            executables.insert(spec.name.clone(), exe);
-            spec_map.insert(spec.name.clone(), spec);
+    impl Engine {
+        /// Default artifact directory: `$PATS_ARTIFACTS` or `<repo>/artifacts`.
+        pub fn default_dir() -> PathBuf {
+            super::artifacts_default_dir()
         }
-        Ok(Engine { client, executables, specs: spec_map, dir: dir.to_path_buf() })
-    }
 
-    /// Artifact directory this engine was loaded from.
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Names of loaded executables.
-    pub fn names(&self) -> impl Iterator<Item = &str> {
-        self.specs.keys().map(String::as_str)
-    }
-
-    /// Spec of one artifact.
-    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.specs.get(name)
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute artifact `name` with the given inputs; returns the single
-    /// output tensor (all entry points are lowered with `return_tuple=True`
-    /// around one result).
-    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
-        let spec = self
-            .specs
-            .get(name)
-            .ok_or_else(|| Error::Runtime(format!("unknown artifact {name:?}")))?;
-        if inputs.len() != spec.input_shapes.len() {
-            return Err(Error::Runtime(format!(
-                "{name}: expected {} inputs, got {}",
-                spec.input_shapes.len(),
-                inputs.len()
-            )));
+        /// Load and compile every artifact listed in `<dir>/manifest.txt`.
+        pub fn load(dir: &Path) -> Result<Engine> {
+            let manifest = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+                Error::Runtime(format!(
+                    "cannot read {}/manifest.txt ({e}); run `make artifacts` first",
+                    dir.display()
+                ))
+            })?;
+            let specs = parse_manifest(&manifest)?;
+            let client = xla::PjRtClient::cpu()?;
+            let mut executables = HashMap::new();
+            let mut spec_map = HashMap::new();
+            for spec in specs {
+                let path = dir.join(&spec.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str()
+                        .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                executables.insert(spec.name.clone(), exe);
+                spec_map.insert(spec.name.clone(), spec);
+            }
+            Ok(Engine { client, executables, specs: spec_map, dir: dir.to_path_buf() })
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (tensor, want) in inputs.iter().zip(&spec.input_shapes) {
-            if &tensor.shape != want {
+
+        /// Artifact directory this engine was loaded from.
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// Names of loaded executables.
+        pub fn names(&self) -> impl Iterator<Item = &str> {
+            self.specs.keys().map(String::as_str)
+        }
+
+        /// Spec of one artifact.
+        pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+            self.specs.get(name)
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Execute artifact `name` with the given inputs; returns the single
+        /// output tensor (all entry points are lowered with
+        /// `return_tuple=True` around one result).
+        pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+            let spec = self
+                .specs
+                .get(name)
+                .ok_or_else(|| Error::Runtime(format!("unknown artifact {name:?}")))?;
+            if inputs.len() != spec.input_shapes.len() {
                 return Err(Error::Runtime(format!(
-                    "{name}: input shape {:?} != manifest {:?}",
-                    tensor.shape, want
+                    "{name}: expected {} inputs, got {}",
+                    spec.input_shapes.len(),
+                    inputs.len()
                 )));
             }
-            let dims: Vec<i64> = tensor.shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(&tensor.data).reshape(&dims)?);
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (tensor, want) in inputs.iter().zip(&spec.input_shapes) {
+                if &tensor.shape != want {
+                    return Err(Error::Runtime(format!(
+                        "{name}: input shape {:?} != manifest {:?}",
+                        tensor.shape, want
+                    )));
+                }
+                let dims: Vec<i64> = tensor.shape.iter().map(|&d| d as i64).collect();
+                literals.push(xla::Literal::vec1(&tensor.data).reshape(&dims)?);
+            }
+            let exe = &self.executables[name];
+            let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            let data = out.to_vec::<f32>()?;
+            if data.len() != spec.output_shape.iter().product::<usize>() {
+                return Err(Error::Runtime(format!(
+                    "{name}: output length {} != manifest shape {:?}",
+                    data.len(),
+                    spec.output_shape
+                )));
+            }
+            Ok(Tensor::new(spec.output_shape.clone(), data))
         }
-        let exe = &self.executables[name];
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let data = out.to_vec::<f32>()?;
-        if data.len() != spec.output_shape.iter().product::<usize>() {
-            return Err(Error::Runtime(format!(
-                "{name}: output length {} != manifest shape {:?}",
-                data.len(),
-                spec.output_shape
-            )));
+    }
+}
+
+/// Stub engine used when the crate is built without the `xla` feature (the
+/// default in the offline container). The API matches the real engine, but
+/// [`Engine::load`] always fails: the scheduling/simulation stack never
+/// executes inference, and the inference examples/tests skip when loading
+/// fails or the artifact directory is absent.
+#[cfg(not(feature = "xla"))]
+mod engine {
+    use std::path::{Path, PathBuf};
+
+    use super::{ArtifactSpec, Tensor};
+    use crate::error::{Error, Result};
+
+    /// Inference-engine stub (built without the `xla` feature).
+    pub struct Engine {
+        dir: PathBuf,
+    }
+
+    impl Engine {
+        /// Default artifact directory: `$PATS_ARTIFACTS` or `<repo>/artifacts`.
+        pub fn default_dir() -> PathBuf {
+            super::artifacts_default_dir()
         }
-        Ok(Tensor::new(spec.output_shape.clone(), data))
+
+        /// Always fails: PJRT execution requires the `xla` feature.
+        pub fn load(dir: &Path) -> Result<Engine> {
+            Err(Error::Runtime(format!(
+                "built without the `xla` feature: cannot load artifacts from {} \
+                 (scheduler/simulator paths do not need the inference engine)",
+                dir.display()
+            )))
+        }
+
+        /// Artifact directory this engine was loaded from.
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// Names of loaded executables (always empty in the stub).
+        pub fn names(&self) -> impl Iterator<Item = &str> {
+            std::iter::empty()
+        }
+
+        /// Spec of one artifact (always `None` in the stub).
+        pub fn spec(&self, _name: &str) -> Option<&ArtifactSpec> {
+            None
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Always fails: PJRT execution requires the `xla` feature.
+        pub fn execute(&self, name: &str, _inputs: &[&Tensor]) -> Result<Tensor> {
+            Err(Error::Runtime(format!(
+                "cannot execute {name:?}: built without the `xla` feature"
+            )))
+        }
     }
 }
 

@@ -73,8 +73,15 @@ pub fn try_allocate(
         return None; // cannot complete before the stage deadline
     }
 
-    // 3. Core-usage check on the source device.
-    if !st.device(source).fits(&window, HP_CORES) {
+    // 3. Core-usage check on the source device. Fleet-scale pre-filter
+    // first: if a core isn't free at t1 itself, the full-window peak scan
+    // cannot succeed either (peak usage ≥ usage at the window start), so
+    // saturated devices fail in one point probe before paying for `fits`.
+    let device = st.device(source);
+    if device.usage_at(window.start) + HP_CORES > device.capacity() {
+        return None;
+    }
+    if !device.fits(&window, HP_CORES) {
         return None;
     }
 

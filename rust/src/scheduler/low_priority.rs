@@ -30,6 +30,45 @@ use crate::task::{Allocation, CoreConfig, DeviceId, RequestId, TaskId, Window};
 use crate::time::SimTime;
 
 /// Allocate every task of a low-priority request.
+///
+/// # Example
+///
+/// ```no_run
+/// use pats::config::SystemConfig;
+/// use pats::scheduler::low_priority::allocate_request;
+/// use pats::state::NetworkState;
+/// use pats::task::{DeviceId, FrameId, LpRequest, Priority, TaskSpec};
+/// use pats::time::SimTime;
+///
+/// let cfg = SystemConfig::default();
+/// let mut st = NetworkState::new(&cfg);
+///
+/// // Register a one-task request from device 0 with the frame deadline.
+/// let rid = st.fresh_request_id();
+/// let task = st.fresh_task_id();
+/// let deadline = SimTime::from_secs_f64(cfg.frame_period_s);
+/// st.register_task(TaskSpec {
+///     id: task,
+///     frame: FrameId(0),
+///     source: DeviceId(0),
+///     priority: Priority::Low,
+///     deadline,
+///     spawn: SimTime::ZERO,
+///     request: Some(rid),
+/// });
+/// st.register_request(LpRequest {
+///     id: rid,
+///     frame: FrameId(0),
+///     source: DeviceId(0),
+///     deadline,
+///     spawn: SimTime::ZERO,
+///     tasks: vec![task],
+/// });
+///
+/// let outcome = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+/// assert!(outcome.fully_allocated());
+/// assert_eq!(outcome.placements[0].device, DeviceId(0));
+/// ```
 pub fn allocate_request(
     st: &mut NetworkState,
     cfg: &SystemConfig,
@@ -48,6 +87,47 @@ pub fn allocate_request(
 }
 
 /// Reallocate a single (preempted) task before its own deadline.
+///
+/// # Example
+///
+/// ```no_run
+/// use pats::config::SystemConfig;
+/// use pats::scheduler::low_priority::{allocate_request, allocate_single};
+/// use pats::state::NetworkState;
+/// use pats::task::{DeviceId, FrameId, LpRequest, Priority, TaskSpec};
+/// use pats::time::SimTime;
+///
+/// let cfg = SystemConfig::default();
+/// let mut st = NetworkState::new(&cfg);
+/// let rid = st.fresh_request_id();
+/// let task = st.fresh_task_id();
+/// let deadline = SimTime::from_secs_f64(cfg.frame_period_s);
+/// st.register_task(TaskSpec {
+///     id: task,
+///     frame: FrameId(0),
+///     source: DeviceId(0),
+///     priority: Priority::Low,
+///     deadline,
+///     spawn: SimTime::ZERO,
+///     request: Some(rid),
+/// });
+/// st.register_request(LpRequest {
+///     id: rid,
+///     frame: FrameId(0),
+///     source: DeviceId(0),
+///     deadline,
+///     spawn: SimTime::ZERO,
+///     tasks: vec![task],
+/// });
+/// allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+///
+/// // The preemption mechanism ejected the task; give it another chance.
+/// let now = SimTime::from_secs_f64(1.0);
+/// st.preempt_task(task, now).unwrap();
+/// let placement = allocate_single(&mut st, &cfg, task, now)
+///     .expect("an idle network can host the victim");
+/// assert!(placement.window.end <= deadline);
+/// ```
 pub fn allocate_single(
     st: &mut NetworkState,
     cfg: &SystemConfig,
@@ -80,9 +160,15 @@ fn allocate_tasks(
     }
 
     // Time points: "now" plus every completion of an existing reservation
-    // up to the request deadline.
+    // up to the request deadline. Fleet-scale trim: a window starting at
+    // `tp` is at least `tp + lp_slot(MIN)` long, so time points past
+    // `deadline - lp_slot(MIN)` can never host a placement — drop them
+    // instead of paying a full placement attempt that is doomed to fail
+    // (behaviour-identical: those attempts leave no state behind).
+    let latest_start = deadline - cfg.lp_slot(CoreConfig::MIN.cores());
     let mut time_points = vec![now];
     time_points.extend(st.completion_points(now, deadline));
+    time_points.retain(|&tp| tp <= latest_start);
 
     for tp in time_points {
         if unallocated.is_empty() {
@@ -161,18 +247,37 @@ fn try_place_min(
     }
 
     // 2b. Offload: remaining devices, most-idle first (even distribution).
-    let mut candidates: Vec<DeviceId> = st.device_ids().filter(|&d| d != source).collect();
-    candidates.sort_by_key(|&d| {
-        let horizon = Window::new(tp, deadline.max(tp));
+    //
+    // Fleet-scale pre-filter: a feasible start on a device requires `cores`
+    // free cores at that instant, so any feasible window ends no earlier
+    // than `earliest_availability(tp, cores) + slot`. Devices whose
+    // earliest availability already misses the deadline can never pass the
+    // `fits` check below — skip them up front so the placement search cost
+    // scales with *feasible* devices, not fleet size. The busy-time sort is
+    // only computed for survivors (same key as before, so the relative
+    // order among feasible devices — and therefore every placement — is
+    // unchanged).
+    let horizon = Window::new(tp, deadline.max(tp));
+    let mut candidates: Vec<(u64, u32)> = Vec::new();
+    for d in st.device_ids() {
+        if d == source {
+            continue;
+        }
+        match st.device(d).earliest_availability(tp, cores) {
+            Some(avail) if avail + slot <= deadline => {}
+            _ => continue,
+        }
         let busy: u64 = st
             .device(d)
             .overlapping(&horizon)
             .map(|s| s.window.duration().as_micros() * s.cores as u64)
             .sum();
-        (busy, d.0)
-    });
+        candidates.push((busy, d.0));
+    }
+    candidates.sort_unstable();
 
-    for dev in candidates {
+    for (_, dev) in candidates {
+        let dev = DeviceId(dev);
         // Reserve message, then the image transfer right after it; both are
         // rolled back if the device cannot host the window.
         let msg_w = match st.link.reserve(msg_start, msg_dur, SlotKind::LpAllocMsg, task) {
@@ -206,7 +311,11 @@ fn try_place_min(
             });
         }
         // Roll back the tentative message slot and try the next device.
-        st.link.remove_owner(task);
+        // Only slots from this attempt (start >= msg_start) are removed: a
+        // preempted task being reallocated still owns already-transmitted
+        // historical slots that `preempt_task` deliberately kept, and those
+        // all start before `now <= msg_start`.
+        st.link.remove_owner_from(task, msg_start);
     }
     None
 }

@@ -17,11 +17,15 @@ use crate::time::SimTime;
 /// One committed low-priority placement.
 #[derive(Debug, Clone)]
 pub struct LpPlacement {
+    /// The placed task.
     pub task: TaskId,
+    /// Device hosting the processing window.
     pub device: DeviceId,
     /// Processing window reserved on the device.
     pub window: Window,
+    /// Cores reserved (the partitioning width).
     pub cores: u32,
+    /// Whether the task runs away from its source device.
     pub offloaded: bool,
     /// End of the input-transfer slot (offloaded tasks only): the earliest
     /// moment the input is on the device.
@@ -31,6 +35,7 @@ pub struct LpPlacement {
 /// Report of one preemption invocation (drives Table 3 / Fig 7).
 #[derive(Debug, Clone)]
 pub struct PreemptionReport {
+    /// The ejected low-priority task.
     pub victim: TaskId,
     /// Core configuration the victim held when ejected (Fig 7).
     pub victim_cores: u32,
@@ -64,6 +69,7 @@ impl HpOutcome {
 /// Outcome of a low-priority request allocation.
 #[derive(Debug, Clone)]
 pub struct LpOutcome {
+    /// The committed placements, one per allocated task.
     pub placements: Vec<LpPlacement>,
     /// Tasks the policy could not place before the deadline.
     pub unallocated: Vec<TaskId>,
@@ -130,6 +136,38 @@ pub trait Policy {
 }
 
 /// The paper's preemption-aware time-slotted scheduler.
+///
+/// # Example
+///
+/// Drive it through the [`Policy`] interface, exactly as the coordinator
+/// does — a high-priority stage-2 task on an idle device allocates without
+/// preemption:
+///
+/// ```no_run
+/// use pats::config::SystemConfig;
+/// use pats::scheduler::{PatsScheduler, Policy};
+/// use pats::state::NetworkState;
+/// use pats::task::{DeviceId, FrameId, Priority, TaskSpec};
+/// use pats::time::{SimDuration, SimTime};
+///
+/// let cfg = SystemConfig::default();
+/// let mut st = NetworkState::new(&cfg);
+/// let mut sched = PatsScheduler::from_config(&cfg);
+///
+/// let id = st.fresh_task_id();
+/// st.register_task(TaskSpec {
+///     id,
+///     frame: FrameId(0),
+///     source: DeviceId(0),
+///     priority: Priority::High,
+///     deadline: SimTime::ZERO + SimDuration::from_secs_f64(cfg.hp_deadline_s),
+///     spawn: SimTime::ZERO,
+///     request: None,
+/// });
+/// let outcome = sched.allocate_hp(&mut st, &cfg, id, SimTime::ZERO);
+/// assert!(outcome.allocated());
+/// assert!(outcome.preemption.is_none());
+/// ```
 pub struct PatsScheduler {
     /// Preemption mechanism enabled (the paper's main toggle).
     pub preemption: bool,

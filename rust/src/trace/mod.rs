@@ -114,6 +114,106 @@ impl Distribution {
     }
 }
 
+/// Arrival-pattern shaping for fleet-scale traces.
+///
+/// The paper's testbed is four devices under a stationary distribution;
+/// real fleets are not stationary. These patterns modulate each device's
+/// per-cycle activity probability so the scheduler can be exercised under
+/// the load shapes that matter at 64–1024 devices: synchronized bursts,
+/// day/night swings, and skewed hot spots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetPattern {
+    /// Stationary load: every device is active with the base probability.
+    Steady,
+    /// Whole-fleet on/off bursts: active phases of `duty_pct` percent of
+    /// each `period_cycles`-cycle period, near-idle in between.
+    Bursty {
+        /// Burst period in cycles.
+        period_cycles: u32,
+        /// Share (%) of each period that is the on-phase.
+        duty_pct: u8,
+    },
+    /// Sinusoidal day/night intensity with the given period.
+    Diurnal {
+        /// Day length in cycles.
+        period_cycles: u32,
+    },
+    /// A fixed fraction of devices runs hot; the rest are mostly idle.
+    Hotspot {
+        /// Share (%) of devices that are hot.
+        hot_pct: u8,
+    },
+}
+
+impl FleetPattern {
+    /// Parse a pattern by name with default parameters
+    /// (`bursty`: 16-cycle period at 25 % duty; `diurnal`: 16-cycle day;
+    /// `hotspot`: 10 % hot devices).
+    pub fn parse(s: &str) -> Result<FleetPattern> {
+        match s {
+            "steady" => Ok(FleetPattern::Steady),
+            "bursty" => Ok(FleetPattern::Bursty { period_cycles: 16, duty_pct: 25 }),
+            "diurnal" => Ok(FleetPattern::Diurnal { period_cycles: 16 }),
+            "hotspot" => Ok(FleetPattern::Hotspot { hot_pct: 10 }),
+            other => Err(Error::Trace(format!("unknown fleet pattern {other:?}"))),
+        }
+    }
+
+    /// Pattern name (stable across parameterisations).
+    pub fn name(self) -> &'static str {
+        match self {
+            FleetPattern::Steady => "steady",
+            FleetPattern::Bursty { .. } => "bursty",
+            FleetPattern::Diurnal { .. } => "diurnal",
+            FleetPattern::Hotspot { .. } => "hotspot",
+        }
+    }
+
+    /// Activity probability of `(device, cycle)` given the fleet size and a
+    /// base probability.
+    fn activity(self, device: usize, devices: usize, cycle: usize, base: f64) -> f64 {
+        match self {
+            FleetPattern::Steady => base,
+            FleetPattern::Bursty { period_cycles, duty_pct } => {
+                let period = period_cycles.max(1) as usize;
+                let on = (period * duty_pct.min(100) as usize).div_ceil(100).max(1);
+                if cycle % period < on {
+                    base
+                } else {
+                    0.05
+                }
+            }
+            FleetPattern::Diurnal { period_cycles } => {
+                let period = period_cycles.max(1) as f64;
+                let phase = cycle as f64 / period * std::f64::consts::TAU;
+                base * 0.5 * (1.0 + phase.sin())
+            }
+            FleetPattern::Hotspot { hot_pct } => {
+                let hot = (devices * hot_pct.min(100) as usize / 100).max(1);
+                if device < hot {
+                    (base * 1.15).min(0.98)
+                } else {
+                    0.15
+                }
+            }
+        }
+    }
+}
+
+/// Workload shape of one fleet-scale scenario: an arrival pattern plus the
+/// priority mix of the frames it generates.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetProfile {
+    /// Arrival pattern across devices and cycles.
+    pub pattern: FleetPattern,
+    /// Share (%) of active device-frames that spawn only the high-priority
+    /// stage (no DNN set afterwards) — the priority-mix knob.
+    pub hp_only_pct: u8,
+    /// Dominant LP set size (1..=4) for frames that do spawn a DNN set;
+    /// half the probability mass lands here, the rest splits evenly.
+    pub lp_weight: u8,
+}
+
 /// A complete workload trace: `cycles × devices` frame values.
 #[derive(Debug, Clone)]
 pub struct Trace {
@@ -135,6 +235,52 @@ impl Trace {
         let mut rng = Rng::seed_from_u64(seed ^ 0x7ACE);
         let entries = (0..cycles)
             .map(|_| (0..devices).map(|_| dist.sample(&mut rng)).collect())
+            .collect();
+        Trace { entries, devices }
+    }
+
+    /// Generate a `devices × cycles` fleet trace shaped by `profile`.
+    ///
+    /// Unlike [`Trace::generate`] (which reproduces the paper's four-device
+    /// distributions), this scales to arbitrary device counts and
+    /// non-stationary arrival patterns. Deterministic in `seed`, and for
+    /// [`FleetPattern::Hotspot`] the hot devices are the lowest indices so
+    /// results are comparable across fleet sizes.
+    pub fn generate_fleet(
+        profile: &FleetProfile,
+        devices: usize,
+        cycles: usize,
+        seed: u64,
+    ) -> Trace {
+        assert!(devices > 0 && cycles > 0, "empty fleet trace");
+        assert!(
+            (1..=4).contains(&profile.lp_weight),
+            "lp_weight must be a valid set size (1..=4)"
+        );
+        /// Activity probability before pattern modulation (≈ the uniform
+        /// distribution's 5/6 active device-frames).
+        const BASE_ACTIVITY: f64 = 0.85;
+        let mut rng = Rng::seed_from_u64(seed ^ 0xF1EE7);
+        let hp_only_p = profile.hp_only_pct.min(100) as f64 / 100.0;
+        let mut set_weights = [0.0f64; 4];
+        for (i, w) in set_weights.iter_mut().enumerate() {
+            *w = if i + 1 == profile.lp_weight as usize { 0.5 } else { 0.5 / 3.0 };
+        }
+        let entries = (0..cycles)
+            .map(|cycle| {
+                (0..devices)
+                    .map(|device| {
+                        let p = profile.pattern.activity(device, devices, cycle, BASE_ACTIVITY);
+                        if !rng.chance(p) {
+                            FrameLoad::NoObject
+                        } else if rng.chance(hp_only_p) {
+                            FrameLoad::HpOnly
+                        } else {
+                            FrameLoad::HpAndLp(rng.choose_weighted(&set_weights) as u8 + 1)
+                        }
+                    })
+                    .collect()
+            })
             .collect();
         Trace { entries, devices }
     }
@@ -318,5 +464,89 @@ mod tests {
             assert_eq!(Distribution::parse(name).unwrap().name(), name);
         }
         assert!(Distribution::parse("weighted9").is_err());
+    }
+
+    fn profile(pattern: FleetPattern) -> FleetProfile {
+        FleetProfile { pattern, hp_only_pct: 20, lp_weight: 2 }
+    }
+
+    #[test]
+    fn fleet_pattern_parse_roundtrip() {
+        for name in ["steady", "bursty", "diurnal", "hotspot"] {
+            assert_eq!(FleetPattern::parse(name).unwrap().name(), name);
+        }
+        assert!(FleetPattern::parse("tsunami").is_err());
+    }
+
+    #[test]
+    fn fleet_trace_is_seeded_and_sized() {
+        let p = profile(FleetPattern::Steady);
+        let a = Trace::generate_fleet(&p, 64, 10, 1);
+        let b = Trace::generate_fleet(&p, 64, 10, 1);
+        let c = Trace::generate_fleet(&p, 64, 10, 2);
+        assert_eq!(a.devices(), 64);
+        assert_eq!(a.cycles(), 10);
+        assert_eq!(a.total_frames(), 640);
+        assert_eq!(a.to_text(), b.to_text());
+        assert_ne!(a.to_text(), c.to_text());
+    }
+
+    #[test]
+    fn bursty_off_phase_is_mostly_idle() {
+        let p = profile(FleetPattern::Bursty { period_cycles: 8, duty_pct: 25 });
+        let t = Trace::generate_fleet(&p, 32, 16, 7);
+        let active = |cycle: usize| {
+            (0..32).filter(|&d| t.load_at(cycle, d).spawns_hp()).count()
+        };
+        // On-phase cycles (0, 1 of each period) are busy; off-phase (4..8)
+        // are near-idle.
+        let on: usize = [0usize, 1, 8, 9].iter().map(|&c| active(c)).sum();
+        let off: usize = [4usize, 5, 6, 7, 12, 13].iter().map(|&c| active(c)).sum();
+        assert!(on > off * 3, "on {on} vs off {off}");
+    }
+
+    #[test]
+    fn hotspot_devices_run_hotter() {
+        let p = profile(FleetPattern::Hotspot { hot_pct: 10 });
+        let t = Trace::generate_fleet(&p, 100, 30, 3);
+        let hp_frames = |d: usize| {
+            (0..30).filter(|&c| t.load_at(c, d).spawns_hp()).count()
+        };
+        // 10 hot devices (lowest indices) vs the cold tail.
+        let hot: usize = (0..10).map(hp_frames).sum();
+        let cold_sample: usize = (10..20).map(hp_frames).sum();
+        assert!(hot > cold_sample * 2, "hot {hot} vs cold {cold_sample}");
+    }
+
+    #[test]
+    fn diurnal_intensity_varies_with_phase() {
+        let p = profile(FleetPattern::Diurnal { period_cycles: 16 });
+        let t = Trace::generate_fleet(&p, 64, 16, 11);
+        let active = |cycle: usize| {
+            (0..64).filter(|&d| t.load_at(cycle, d).spawns_hp()).count()
+        };
+        // Peak of the sine (cycle 4) vs trough (cycle 12).
+        assert!(active(4) > active(12) + 10, "peak {} trough {}", active(4), active(12));
+    }
+
+    #[test]
+    fn hp_only_ratio_steers_priority_mix() {
+        let lp_heavy = FleetProfile {
+            pattern: FleetPattern::Steady,
+            hp_only_pct: 0,
+            lp_weight: 4,
+        };
+        let hp_heavy = FleetProfile {
+            pattern: FleetPattern::Steady,
+            hp_only_pct: 100,
+            lp_weight: 1,
+        };
+        let a = Trace::generate_fleet(&lp_heavy, 32, 10, 5);
+        let b = Trace::generate_fleet(&hp_heavy, 32, 10, 5);
+        let (lp_a, hp_a, _) = a.potential_counts();
+        let (lp_b, hp_b, _) = b.potential_counts();
+        assert!(lp_a > 0 && hp_a > 0);
+        assert_eq!(lp_b, 0, "hp_only_pct=100 spawns no DNN sets");
+        assert!(hp_b > 0);
     }
 }

@@ -1,57 +1,145 @@
-//! Minimal `log` facade backend writing to stderr.
+//! Minimal in-tree stderr logger (the `log` facade crate is unavailable
+//! offline).
 //!
-//! Level is selected with `PATS_LOG` (error|warn|info|debug|trace), default
-//! `warn`. Install once with [`init`]; re-initialisation is a no-op.
+//! Level is selected with `PATS_LOG` (`error|warn|info|debug|trace|off`),
+//! default `warn`. Use the crate-root macros:
+//!
+//! ```no_run
+//! pats::util::logging::init();
+//! pats::log_info!("fleet sweep: {} devices", 256);
+//! ```
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
 
-struct StderrLogger;
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Unrecoverable problems.
+    Error = 1,
+    /// Suspicious but survivable conditions (the default threshold).
+    Warn = 2,
+    /// Progress reporting (experiment campaigns, fleet sweeps).
+    Info = 3,
+    /// Development diagnostics.
+    Debug = 4,
+    /// Very chatty tracing.
+    Trace = 5,
+}
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let tag = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{tag}] {}: {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+/// 0 = off; otherwise the numeric value of the maximum enabled [`Level`].
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
 
-/// Install the stderr logger. Safe to call multiple times.
+/// Install the threshold from `PATS_LOG`. Safe to call multiple times.
 pub fn init() {
     let level = match std::env::var("PATS_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("info") => LevelFilter::Info,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Warn,
+        Ok("error") => Level::Error as u8,
+        Ok("info") => Level::Info as u8,
+        Ok("debug") => Level::Debug as u8,
+        Ok("trace") => Level::Trace as u8,
+        Ok("off") => 0,
+        _ => Level::Warn as u8,
     };
-    // Ignore AlreadyInit errors: tests may race to install.
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    MAX_LEVEL.store(level, Ordering::Relaxed);
+}
+
+/// Override the threshold programmatically (`None` disables logging).
+pub fn set_max_level(level: Option<Level>) {
+    MAX_LEVEL.store(level.map_or(0, |l| l as u8), Ordering::Relaxed);
+}
+
+/// Would a record at `level` currently be emitted?
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record to stderr. Prefer the `log_*!` macros, which fill in the
+/// calling module as the target.
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {target}: {args}", level.tag());
+    }
+}
+
+/// Log at [`Level::Error`] from anywhere in the crate.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    /// One combined test: the threshold is process-global, so splitting
+    /// these assertions across tests would race under the parallel runner.
     #[test]
-    fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::warn!("logging smoke test");
+    fn init_and_thresholds() {
+        init();
+        init();
+        crate::log_warn!("logging smoke test");
+        set_max_level(Some(Level::Info));
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_max_level(None);
+        assert!(!enabled(Level::Error));
+        // Restore the default so other tests are unaffected.
+        set_max_level(Some(Level::Warn));
     }
 }

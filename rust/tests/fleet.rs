@@ -1,0 +1,78 @@
+//! Fleet-scale integration: large-fleet scenarios run to completion, stay
+//! internally consistent, and are deterministic under a fixed seed.
+
+use pats::config::SystemConfig;
+use pats::experiments::{fleet_scale, fleet_scale_table};
+use pats::metrics::ScenarioMetrics;
+use pats::sim::run_scenario;
+use pats::trace::{FleetPattern, FleetProfile, Trace};
+
+fn lp_accounted(m: &ScenarioMetrics) {
+    let accounted = m.lp_completed + m.lp_failed_alloc + m.lp_failed_preempted + m.lp_violated;
+    assert_eq!(accounted, m.lp_generated, "every LP task needs a terminal account");
+}
+
+#[test]
+fn fleet_sweep_runs_each_size_to_completion() {
+    let mut cfg = SystemConfig::default();
+    cfg.fleet.cycles = 2;
+    let mut rows = fleet_scale(&cfg, &[4, 32, 64]);
+    assert_eq!(rows.len(), 3);
+    for row in &rows {
+        assert_eq!(row.metrics.frames_total, (row.devices * 2) as u64);
+        assert!(row.metrics.hp_generated > 0, "{} devices: no HP load", row.devices);
+        lp_accounted(&row.metrics);
+    }
+    let table = fleet_scale_table(&mut rows);
+    for needle in ["| 4 |", "| 32 |", "| 64 |"] {
+        assert!(table.contains(needle), "missing row {needle}");
+    }
+}
+
+#[test]
+fn fleet_256_devices_is_deterministic() {
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 256;
+    cfg.fleet.cycles = 2;
+    cfg.frames = 512;
+    // A moderate mix keeps the debug-build test quick while still exercising
+    // offloads and contention at 256 devices.
+    let profile = FleetProfile {
+        pattern: FleetPattern::Diurnal { period_cycles: 16 },
+        hp_only_pct: 50,
+        lp_weight: 1,
+    };
+    let trace = Trace::generate_fleet(&profile, 256, 2, cfg.seed);
+    assert_eq!(trace.devices(), 256);
+    let a = run_scenario(&cfg, &trace, "fleet-256-a").metrics;
+    let b = run_scenario(&cfg, &trace, "fleet-256-b").metrics;
+    assert_eq!(a.frames_completed, b.frames_completed);
+    assert_eq!(a.hp_generated, b.hp_generated);
+    assert_eq!(a.hp_completed, b.hp_completed);
+    assert_eq!(a.lp_generated, b.lp_generated);
+    assert_eq!(a.lp_completed, b.lp_completed);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.lp_failed_alloc, b.lp_failed_alloc);
+    lp_accounted(&a);
+}
+
+#[test]
+fn hotspot_fleet_offloads_from_hot_devices() {
+    // A skewed fleet is exactly where offloading pays: hot devices generate
+    // more DNN sets than they can host and the scheduler spreads the
+    // overflow over the idle tail.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 16;
+    cfg.fleet.cycles = 4;
+    cfg.frames = 64;
+    let profile = FleetProfile {
+        pattern: FleetPattern::Hotspot { hot_pct: 20 },
+        hp_only_pct: 0,
+        lp_weight: 4,
+    };
+    let trace = Trace::generate_fleet(&profile, 16, 4, 7);
+    let m = run_scenario(&cfg, &trace, "hotspot-16").metrics;
+    assert!(m.lp_generated > 0);
+    assert!(m.lp_offloaded > 0, "hot devices must shed load to the cold tail");
+    lp_accounted(&m);
+}

