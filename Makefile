@@ -23,6 +23,7 @@ fmt:
 bench:
 	$(CARGO) bench --bench timeline
 	$(CARGO) bench --bench alloc
+	$(CARGO) bench --bench dynamics
 
 artifacts:
 	$(PYTHON) python/compile/aot.py

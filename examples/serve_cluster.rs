@@ -252,7 +252,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "stage-3 (DNN tasks): {stage3_done}/{stage3_total} within their windows | throughput {:.2} DNN/s",
         stage3_done as f64 / wall
     );
-    let mut sl = set_latency;
+    let sl = set_latency;
     println!(
         "end-to-end frame latency (full sets): mean {:.1} ms, p95 {:.1} ms",
         sl.mean(),

@@ -21,7 +21,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for preemption in [true, false] {
         cfg.preemption = preemption;
         let label = if preemption { "preemption" } else { "no-preemption" };
-        let mut result = run_scenario(&cfg, &trace, label);
+        let result = run_scenario(&cfg, &trace, label);
         println!("\n{}", result.metrics.render_text());
         println!(
             "  virtual time {} simulated in {:.0?} wall",

@@ -85,7 +85,7 @@ fn main() {
 
     section("high-priority allocation (Fig 9a)");
     for load in [0usize, 8, 32, 128] {
-        let mut r = bench_with_setup(
+        let r = bench_with_setup(
             &format!("hp_alloc/load={load}"),
             20,
             300,
@@ -101,7 +101,7 @@ fn main() {
 
     section("high-priority allocation with preemption firing (Fig 9b)");
     for load in [8usize, 32, 128] {
-        let mut r = bench_with_setup(
+        let r = bench_with_setup(
             &format!("hp_alloc_preempt/load={load}"),
             20,
             300,
@@ -140,7 +140,7 @@ fn main() {
 
     section("low-priority request allocation (Fig 10)");
     for (n, load) in [(1usize, 0usize), (4, 0), (1, 64), (4, 64), (4, 256)] {
-        let mut r = bench_with_setup(
+        let r = bench_with_setup(
             &format!("lp_alloc/tasks={n}/load={load}"),
             10,
             200,

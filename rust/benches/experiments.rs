@@ -15,7 +15,7 @@ fn main() {
         cfg.frames, cfg.seed
     );
     let t0 = std::time::Instant::now();
-    let mut set = ExperimentSet::run(&cfg);
+    let set = ExperimentSet::run(&cfg);
     let matrix_wall = t0.elapsed();
     println!("matrix complete in {matrix_wall:.2?}\n");
     println!("{}", set.render_all());
@@ -29,14 +29,14 @@ fn main() {
         cfg.fleet.pattern.name()
     );
     let t1 = std::time::Instant::now();
-    let mut rows = fleet_scale(&cfg, &sizes);
+    let rows = fleet_scale(&cfg, &sizes);
     println!("fleet sweep complete in {:.2?}\n", t1.elapsed());
-    println!("{}", fleet_scale_table(&mut rows));
+    println!("{}", fleet_scale_table(&rows));
 
     let doc = Json::obj()
         .with("bench", "experiments")
         .with("matrix_wall_ms", matrix_wall.as_secs_f64() * 1_000.0)
-        .with("fleet", fleet_scale_json(&mut rows));
+        .with("fleet", fleet_scale_json(&rows));
     match std::fs::write("BENCH_experiments.json", doc.to_string_pretty()) {
         Ok(()) => println!("wrote BENCH_experiments.json"),
         Err(e) => eprintln!("could not write bench JSON: {e}"),

@@ -24,22 +24,22 @@ fn main() {
     let bg = Tensor::zeros(&[48, 48, 3]);
 
     section("single executables");
-    let mut r = bench("detector", 3, 50, || {
+    let r = bench("detector", 3, 50, || {
         partition::run_detector(&engine, &frame, &bg).unwrap()
     });
     println!("{}", r.render());
-    let mut r = bench("classifier", 3, 50, || {
+    let r = bench("classifier", 3, 50, || {
         partition::run_classifier(&engine, &frame).unwrap()
     });
     println!("{}", r.render());
-    let mut r = bench("cnn_full (monolithic)", 3, 20, || {
+    let r = bench("cnn_full (monolithic)", 3, 20, || {
         engine.execute("cnn_full", &[&frame]).unwrap()
     });
     println!("{}", r.render());
 
     section("horizontal partitioning pipeline");
     for tiles in [1usize, 2, 4] {
-        let mut r = bench(&format!("run_cnn/tiles={tiles}"), 2, 15, || {
+        let r = bench(&format!("run_cnn/tiles={tiles}"), 2, 15, || {
             partition::run_cnn(&engine, &frame, tiles).unwrap()
         });
         println!("{}", r.render());
@@ -50,7 +50,7 @@ fn main() {
         let spec = engine.spec(&format!("block{block}_tile4")).unwrap().clone();
         let tile = Tensor::zeros(&spec.input_shapes[0]);
         let name = format!("block{block}_tile4");
-        let mut r = bench(&name, 3, 30, || engine.execute(&name, &[&tile]).unwrap());
+        let r = bench(&name, 3, 30, || engine.execute(&name, &[&tile]).unwrap());
         println!("{}", r.render());
     }
 }

@@ -40,7 +40,7 @@ fn filled_cores(n: usize) -> CoreTimeline {
     ct
 }
 
-fn show(results: &mut Vec<BenchResult>, mut r: BenchResult) {
+fn show(results: &mut Vec<BenchResult>, r: BenchResult) {
     println!("{}", r.render());
     results.push(r);
 }
@@ -141,7 +141,7 @@ fn main() {
         show(&mut results, r);
     }
 
-    match write_json("timeline", &mut results) {
+    match write_json("timeline", &results) {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\ncould not write bench JSON: {e}"),
     }

@@ -24,11 +24,11 @@ impl BenchResult {
         self.samples_ns.mean()
     }
 
-    pub fn p50_ns(&mut self) -> f64 {
+    pub fn p50_ns(&self) -> f64 {
         self.samples_ns.percentile(50.0)
     }
 
-    pub fn p99_ns(&mut self) -> f64 {
+    pub fn p99_ns(&self) -> f64 {
         self.samples_ns.percentile(99.0)
     }
 
@@ -37,7 +37,7 @@ impl BenchResult {
     }
 
     /// Machine-readable record of this case.
-    pub fn to_json(&mut self) -> Json {
+    pub fn to_json(&self) -> Json {
         let (mean, p50, p99, min) = (self.mean_ns(), self.p50_ns(), self.p99_ns(), self.min_ns());
         Json::obj()
             .with("name", self.name.as_str())
@@ -49,7 +49,7 @@ impl BenchResult {
     }
 
     /// One aligned report line.
-    pub fn render(&mut self) -> String {
+    pub fn render(&self) -> String {
         let (mean, p50, p99, min) =
             (self.mean_ns(), self.p50_ns(), self.p99_ns(), self.min_ns());
         format!(
@@ -112,8 +112,8 @@ pub fn section(title: &str) {
 /// Persist bench results as `BENCH_<name>.json` in the current directory
 /// (the package root under `cargo bench`), so sweeps are comparable across
 /// commits. Returns the written path.
-pub fn write_json(bench_name: &str, results: &mut [BenchResult]) -> std::io::Result<PathBuf> {
-    let cases: Vec<Json> = results.iter_mut().map(BenchResult::to_json).collect();
+pub fn write_json(bench_name: &str, results: &[BenchResult]) -> std::io::Result<PathBuf> {
+    let cases: Vec<Json> = results.iter().map(BenchResult::to_json).collect();
     let doc = Json::obj()
         .with("bench", bench_name)
         .with("results", Json::Arr(cases));
@@ -129,7 +129,7 @@ mod tests {
     #[test]
     fn bench_collects_samples() {
         let mut counter = 0u64;
-        let mut r = bench("spin", 2, 25, || {
+        let r = bench("spin", 2, 25, || {
             counter += 1;
             std::hint::black_box(counter)
         });
@@ -143,7 +143,7 @@ mod tests {
     #[test]
     fn setup_not_timed() {
         // A slow setup must not inflate the measured time.
-        let mut r = bench_with_setup(
+        let r = bench_with_setup(
             "setup-heavy",
             0,
             10,
@@ -158,7 +158,7 @@ mod tests {
 
     #[test]
     fn json_record_has_all_fields() {
-        let mut r = bench("j", 0, 5, || 1u64 + 1);
+        let r = bench("j", 0, 5, || 1u64 + 1);
         let j = r.to_json();
         assert_eq!(j.get("name").and_then(Json::as_str), Some("j"));
         assert_eq!(j.get("iters").and_then(Json::as_f64), Some(5.0));

@@ -14,10 +14,10 @@
 //! runner and the live `serve_cluster` example both drive it.
 
 use crate::config::SystemConfig;
-use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy};
-use crate::state::NetworkState;
+use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome};
+use crate::state::{DeviceHealth, NetworkState};
 use crate::task::{
-    DeviceId, FrameId, LpRequest, Priority, RequestId, TaskId, TaskSpec,
+    DeviceId, FailReason, FrameId, LpRequest, Priority, RequestId, TaskId, TaskSpec,
 };
 use crate::time::{SimDuration, SimTime};
 
@@ -29,11 +29,56 @@ pub enum JobClass {
     Low,
 }
 
+/// Missed-state-update failure detection (network-dynamics extension).
+///
+/// The controller's only liveness signal is the state-update stream (§3.1):
+/// a device with work in flight reports every completion. The detector
+/// tracks when each device was last heard from; a device whose silence
+/// exceeds `timeout` while it still holds allocations is declared failed.
+/// (In the discrete-event simulation the watchdog *check* is scheduled by
+/// the churn machinery; a live deployment would run it on a timer.)
+#[derive(Debug, Clone)]
+pub struct FailureDetector {
+    last_heard: Vec<SimTime>,
+    timeout: SimDuration,
+}
+
+impl FailureDetector {
+    /// A detector for `devices` devices declaring failure after `timeout`
+    /// of silence.
+    pub fn new(devices: usize, timeout: SimDuration) -> FailureDetector {
+        FailureDetector { last_heard: vec![SimTime::ZERO; devices], timeout }
+    }
+
+    /// A state-update (or any message) arrived from `d`.
+    pub fn record_update(&mut self, d: DeviceId, now: SimTime) {
+        let slot = &mut self.last_heard[d.0 as usize];
+        *slot = (*slot).max(now);
+    }
+
+    /// When silence from `d` becomes long enough to declare failure.
+    pub fn silence_deadline(&self, d: DeviceId) -> SimTime {
+        self.last_heard[d.0 as usize] + self.timeout
+    }
+
+    /// Has `d` been silent past the timeout?
+    pub fn is_overdue(&self, d: DeviceId, now: SimTime) -> bool {
+        now >= self.silence_deadline(d)
+    }
+
+    /// Treat `d` as alive as of `now` (rejoin administration).
+    pub fn reset(&mut self, d: DeviceId, now: SimTime) {
+        self.last_heard[d.0 as usize] = now;
+    }
+}
+
 /// The master node.
 pub struct Controller<P: Policy> {
     pub cfg: SystemConfig,
     pub state: NetworkState,
     pub policy: P,
+    /// Missed-state-update watchdog (network-dynamics extension).
+    pub detector: FailureDetector,
     /// The serial job queue is modelled by its busy horizon.
     busy_until: SimTime,
     /// Jobs admitted (for queue-pressure metrics).
@@ -43,7 +88,18 @@ pub struct Controller<P: Policy> {
 impl<P: Policy> Controller<P> {
     pub fn new(cfg: SystemConfig, policy: P) -> Controller<P> {
         let state = NetworkState::new(&cfg);
-        Controller { cfg, state, policy, busy_until: SimTime::ZERO, jobs_processed: 0 }
+        let detector = FailureDetector::new(
+            cfg.devices,
+            SimDuration::from_secs_f64(cfg.dynamics.detect_delay_s),
+        );
+        Controller {
+            cfg,
+            state,
+            policy,
+            detector,
+            busy_until: SimTime::ZERO,
+            jobs_processed: 0,
+        }
     }
 
     /// Admit a job arriving at `now`: it begins processing when the queue
@@ -127,6 +183,14 @@ impl<P: Policy> Controller<P> {
         now: SimTime,
     ) -> Vec<LpPlacement> {
         let decision_t = self.admit(now);
+        // Liveness: the update came from the hosting device.
+        if let Some(dev) = self
+            .state
+            .task(task)
+            .and_then(|r| r.allocation.as_ref().map(|a| a.device))
+        {
+            self.detector.record_update(dev, now);
+        }
         if completed {
             self.state.complete_task(task, decision_t);
         } else {
@@ -134,6 +198,44 @@ impl<P: Policy> Controller<P> {
                 .fail_task(task, crate::task::FailReason::Violated, decision_t);
         }
         self.policy.on_task_end(&mut self.state, &self.cfg, task, decision_t)
+    }
+
+    // ---- network dynamics (beyond the paper) ----------------------------
+
+    /// The missed-state-update watchdog declared `device` failed: mark it
+    /// down, reclaim its reservations, and re-plan its orphans through the
+    /// policy's rescue path. Orphans with no feasible rescue are failed
+    /// terminally with [`FailReason::DeviceLost`].
+    pub fn handle_device_failure(&mut self, device: DeviceId, now: SimTime) -> RescueOutcome {
+        let decision_t = self.admit(now);
+        let orphans = self.state.mark_device_down(device, decision_t);
+        let outcome =
+            self.policy
+                .rescue_orphans(&mut self.state, &self.cfg, &orphans, decision_t);
+        debug_assert_eq!(outcome.total(), orphans.len(), "every orphan is accounted for");
+        for &(task, _) in &outcome.lost {
+            self.state.fail_task(task, FailReason::DeviceLost, decision_t);
+        }
+        outcome
+    }
+
+    /// Administrative drain: `device` finishes its in-flight work but takes
+    /// nothing new (operator-initiated, so no detection latency applies).
+    pub fn handle_device_drain(&mut self, device: DeviceId, now: SimTime) {
+        let _ = self.admit(now);
+        self.state.set_device_health(device, DeviceHealth::Draining);
+    }
+
+    /// A device (re)joins the network empty and becomes schedulable.
+    pub fn handle_device_rejoin(&mut self, device: DeviceId, now: SimTime) {
+        let _ = self.admit(now);
+        self.state.set_device_health(device, DeviceHealth::Up);
+        self.detector.reset(device, now);
+    }
+
+    /// Is `device` overdue on its state updates (watchdog query)?
+    pub fn device_overdue(&self, device: DeviceId, now: SimTime) -> bool {
+        self.detector.is_overdue(device, now)
     }
 }
 
@@ -214,5 +316,74 @@ mod tests {
             c.state.task(id).unwrap().state,
             crate::task::TaskState::Failed(crate::task::FailReason::Violated)
         );
+    }
+
+    #[test]
+    fn detector_tracks_silence_per_device() {
+        let mut d = FailureDetector::new(3, SimDuration::from_secs_f64(1.0));
+        let t = SimTime::from_secs_f64(10.0);
+        d.record_update(DeviceId(1), t);
+        assert!(!d.is_overdue(DeviceId(1), SimTime::from_secs_f64(10.5)));
+        assert!(d.is_overdue(DeviceId(1), SimTime::from_secs_f64(11.0)));
+        assert_eq!(d.silence_deadline(DeviceId(1)), SimTime::from_secs_f64(11.0));
+        // Old updates never move the clock backwards.
+        d.record_update(DeviceId(1), SimTime::from_secs_f64(5.0));
+        assert_eq!(d.silence_deadline(DeviceId(1)), SimTime::from_secs_f64(11.0));
+        // Never-heard devices are overdue once the timeout passes zero.
+        assert!(d.is_overdue(DeviceId(0), SimTime::from_secs_f64(1.0)));
+        d.reset(DeviceId(0), SimTime::from_secs_f64(20.0));
+        assert!(!d.is_overdue(DeviceId(0), SimTime::from_secs_f64(20.5)));
+    }
+
+    #[test]
+    fn state_updates_feed_the_detector() {
+        let mut c = controller();
+        let (id, _, out) = c.handle_hp_request(FrameId(0), DeviceId(2), SimTime::ZERO);
+        let end = out.window.unwrap().end;
+        c.handle_state_update(id, true, end);
+        assert_eq!(c.detector.silence_deadline(DeviceId(2)), end + c.detector.timeout);
+    }
+
+    #[test]
+    fn device_failure_reclaims_and_accounts_every_orphan() {
+        let mut c = controller();
+        // An HP task allocated on device 0, then the device fails. With
+        // the paper's tight 1.5 s HP deadline and a 1 s detection delay the
+        // orphan is unsalvageable: it must be counted lost, never dropped.
+        let (id, _, out) = c.handle_hp_request(FrameId(0), DeviceId(0), SimTime::ZERO);
+        assert!(out.allocated());
+        let detect_at = SimTime::from_secs_f64(c.cfg.dynamics.detect_delay_s);
+        let outcome = c.handle_device_failure(DeviceId(0), detect_at);
+        assert_eq!(outcome.total(), 1);
+        assert_eq!(outcome.lost.len(), 1);
+        assert_eq!(
+            c.state.task(id).unwrap().state,
+            crate::task::TaskState::Failed(FailReason::DeviceLost)
+        );
+        // Reclamation: nothing survives on the dead device's calendar and
+        // no future link slot belongs to the orphan.
+        assert_eq!(c.state.device(DeviceId(0)).len(), 0);
+        assert!(c
+            .state
+            .link
+            .slots()
+            .iter()
+            .all(|s| s.owner != id || s.window.start < detect_at));
+        c.state.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn drain_and_rejoin_round_trip() {
+        let mut c = controller();
+        c.handle_device_drain(DeviceId(1), SimTime::ZERO);
+        assert!(!c.state.device_is_up(DeviceId(1)));
+        // An HP request for the draining device cannot be placed.
+        let (_, _, out) = c.handle_hp_request(FrameId(0), DeviceId(1), SimTime::ZERO);
+        assert!(!out.allocated());
+        c.handle_device_rejoin(DeviceId(1), SimTime::from_secs_f64(5.0));
+        assert!(c.state.device_is_up(DeviceId(1)));
+        let (_, _, out) =
+            c.handle_hp_request(FrameId(1), DeviceId(1), SimTime::from_secs_f64(5.0));
+        assert!(out.allocated());
     }
 }

@@ -29,15 +29,26 @@
 //! * [`pipeline`] — the three-stage waste-classification pipeline lifecycle.
 //! * [`trace`] — trace-file workload format and generators, including the
 //!   fleet-scale generator (4 → 1024 devices, bursty/diurnal/hotspot
-//!   arrival patterns, mixed priority ratios).
-//! * [`sim`] — discrete-event engine + scenario runner.
+//!   arrival patterns, mixed priority ratios) and the churn-script
+//!   generator (crash/drain/rejoin/link-degradation events).
+//! * [`sim`] — discrete-event engine + scenario runner, with an optional
+//!   scripted network-dynamics layer (`sim::run_scenario_dynamic`).
 //! * [`metrics`] — counters and report rendering for every figure/table.
 //! * [`runtime`] — PJRT (XLA) execution of AOT-compiled artifacts (behind
 //!   the `xla` feature), plus the Rust side of horizontal partitioning
 //!   (tile/halo/stitch).
 //! * [`experiments`] — regenerates every table and figure in the paper,
-//!   plus the fleet-size sweep (`experiments::fleet_scale`).
+//!   plus the fleet-size sweep (`experiments::fleet_scale`) and the churn
+//!   sweep (`experiments::dynamics`).
 //! * [`bench`] — micro-benchmark harness (offline criterion replacement).
+//!
+//! Beyond the paper's static testbed, the **network-dynamics subsystem**
+//! (EXPERIMENTS.md, ARCHITECTURE.md §Dynamics) crashes, drains, and rejoins
+//! devices mid-run: the coordinator detects failures from missed
+//! state-updates ([`coordinator::FailureDetector`]), reclaims the dead
+//! device's reservations ([`state::NetworkState::mark_device_down`]), and
+//! re-plans the orphans through the preemption-reallocation machinery
+//! ([`scheduler::rescue`]).
 //!
 //! The resource calendars under `resources` are gap-indexed so scheduling
 //! decisions stay O(log n) at fleet scale; see ARCHITECTURE.md for the

@@ -5,6 +5,9 @@
 //! * `experiments` — run the full scenario matrix and regenerate every
 //!   table/figure of the paper (markdown + JSON).
 //! * `sim`         — run one scenario and print its metrics.
+//! * `fleet`       — fleet-size sweep (beyond the paper).
+//! * `churn`       — network-dynamics sweep: crash/drain/rejoin devices and
+//!   degrade the link mid-run, compare all four policies (beyond the paper).
 //! * `trace-gen`   — generate a workload trace file.
 //! * `check`       — load the AOT artifacts and run one frame end-to-end
 //!   through the three-stage pipeline (PJRT smoke test).
@@ -27,6 +30,9 @@ USAGE:
   pats sim --dist DIST [--policy P] [--no-preemption] [--set-aware-victims]
            [--frames N] [--seed S] [--trace FILE] [--config FILE]
   pats fleet [--sizes N,N,...] [--cycles N] [--pattern PAT] [--seed S]
+             [--config FILE] [--out DIR]
+  pats churn [--devices N] [--cycles N] [--crash-pct P] [--drain-pct P]
+             [--detect-delay S] [--rejoin-after S] [--degrade F] [--seed S]
              [--config FILE] [--out DIR]
   pats trace-gen --dist DIST [--frames N] [--seed S] [--out FILE]
   pats check [--artifacts DIR]
@@ -54,6 +60,7 @@ fn main() -> ExitCode {
         Some("experiments") => cmd_experiments(&args),
         Some("sim") => cmd_sim(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("churn") => cmd_churn(&args),
         Some("trace-gen") => cmd_trace_gen(&args),
         Some("check") => cmd_check(&args),
         Some(other) => Err(format!("unknown subcommand {other:?}\n{USAGE}")),
@@ -88,7 +95,7 @@ fn cmd_experiments(args: &Args) -> Result<(), String> {
         cfg.frames
     );
     let t0 = std::time::Instant::now();
-    let mut set = ExperimentSet::run(&cfg);
+    let set = ExperimentSet::run(&cfg);
     eprintln!("done in {:.2?}", t0.elapsed());
     let report = set.render_all();
     println!("{report}");
@@ -125,7 +132,7 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
         cfg.policy.name(),
         if cfg.preemption { "+preemption" } else { "" }
     );
-    let mut result = run_scenario(&cfg, &trace, &label);
+    let result = run_scenario(&cfg, &trace, &label);
     if args.flag("json") {
         println!("{}", result.metrics.to_json().to_string_pretty());
     } else {
@@ -170,9 +177,9 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         cfg.fleet.pattern.name()
     );
     let t0 = std::time::Instant::now();
-    let mut rows = pats::experiments::fleet_scale(&cfg, &sizes);
+    let rows = pats::experiments::fleet_scale(&cfg, &sizes);
     eprintln!("done in {:.2?}", t0.elapsed());
-    let table = pats::experiments::fleet_scale_table(&mut rows);
+    let table = pats::experiments::fleet_scale_table(&rows);
     println!("{table}");
     let out_dir = PathBuf::from(args.opt_str("out", "results"));
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
@@ -181,7 +188,61 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
     let json = out_dir.join("fleet_scale.json");
     std::fs::write(
         &json,
-        pats::experiments::fleet_scale_json(&mut rows).to_string_pretty(),
+        pats::experiments::fleet_scale_json(&rows).to_string_pretty(),
+    )
+    .map_err(|e| e.to_string())?;
+    eprintln!("wrote {} and {}", md.display(), json.display());
+    Ok(())
+}
+
+fn cmd_churn(args: &Args) -> Result<(), String> {
+    let mut cfg = base_config(args)?;
+    if let Some(v) = args.opt("devices") {
+        cfg.dynamics.devices = v
+            .parse::<usize>()
+            .map_err(|_| format!("bad --devices value {v:?}"))?;
+    }
+    if let Some(v) = args.opt("cycles") {
+        cfg.dynamics.cycles = v
+            .parse::<usize>()
+            .map_err(|_| format!("bad --cycles value {v:?}"))?;
+    }
+    if let Some(v) = args.opt("crash-pct") {
+        cfg.dynamics.crash_pct = v
+            .parse::<u8>()
+            .map_err(|_| format!("bad --crash-pct value {v:?}"))?;
+    }
+    if let Some(v) = args.opt("drain-pct") {
+        cfg.dynamics.drain_pct = v
+            .parse::<u8>()
+            .map_err(|_| format!("bad --drain-pct value {v:?}"))?;
+    }
+    cfg.dynamics.detect_delay_s = args.opt_f64("detect-delay", cfg.dynamics.detect_delay_s)?;
+    cfg.dynamics.rejoin_after_s = args.opt_f64("rejoin-after", cfg.dynamics.rejoin_after_s)?;
+    cfg.dynamics.degrade_factor = args.opt_f64("degrade", cfg.dynamics.degrade_factor)?;
+    cfg.validate().map_err(|e| e.to_string())?;
+    eprintln!(
+        "running the churn sweep: {} devices × {} cycles, {}% crash / {}% drain, \
+         detect {}s ...",
+        cfg.dynamics.devices,
+        cfg.dynamics.cycles,
+        cfg.dynamics.crash_pct,
+        cfg.dynamics.drain_pct,
+        cfg.dynamics.detect_delay_s
+    );
+    let t0 = std::time::Instant::now();
+    let rows = pats::experiments::dynamics(&cfg);
+    eprintln!("done in {:.2?}", t0.elapsed());
+    let table = pats::experiments::dynamics_table(&rows);
+    println!("{table}");
+    let out_dir = PathBuf::from(args.opt_str("out", "results"));
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+    let md = out_dir.join("dynamics.md");
+    std::fs::write(&md, &table).map_err(|e| e.to_string())?;
+    let json = out_dir.join("dynamics.json");
+    std::fs::write(
+        &json,
+        pats::experiments::dynamics_json(&rows).to_string_pretty(),
     )
     .map_err(|e| e.to_string())?;
     eprintln!("wrote {} and {}", md.display(), json.display());

@@ -4,6 +4,7 @@
 //! module renders them into the paper's tables/figures and EXPERIMENTS.md.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
 use crate::task::FailReason;
 use crate::util::json::Json;
@@ -65,6 +66,35 @@ pub struct ScenarioMetrics {
     pub lp_alloc_ms: Summary,
     /// Preempted-victim reallocation time (ms).
     pub lp_realloc_ms: Summary,
+
+    // ---- network dynamics (beyond the paper: churn, failure, rescue) ----
+    /// Devices crashed by the churn script.
+    pub devices_crashed: u64,
+    /// Devices drained gracefully by the churn script.
+    pub devices_drained: u64,
+    /// Devices that rejoined after a crash.
+    pub devices_rejoined: u64,
+    /// Device failures the controller detected (missed state-updates).
+    pub failures_detected: u64,
+    /// Link degrade/restore events applied.
+    pub link_degrade_events: u64,
+    /// Frames never generated because their source device was down/draining.
+    pub frames_lost_churn: u64,
+    /// High-priority tasks orphaned by a detected device failure.
+    pub hp_orphaned: u64,
+    /// Orphaned high-priority tasks relocated onto a surviving device.
+    pub hp_rescued: u64,
+    /// Orphaned high-priority tasks lost to churn (no feasible rescue).
+    pub hp_lost_churn: u64,
+    /// Low-priority tasks orphaned by a detected device failure.
+    pub lp_orphaned: u64,
+    /// Orphaned low-priority tasks re-planned onto a surviving device.
+    pub lp_rescued: u64,
+    /// Orphaned low-priority tasks re-queued by a workstealer (their rescue
+    /// is a later steal).
+    pub lp_requeued_churn: u64,
+    /// Low-priority tasks lost to churn (terminal `DeviceLost`).
+    pub lp_lost_churn: u64,
 }
 
 impl ScenarioMetrics {
@@ -80,6 +110,7 @@ impl ScenarioMetrics {
             FailReason::Preempted => self.lp_failed_preempted += 1,
             FailReason::Violated => self.lp_violated += 1,
             FailReason::Cancelled => {}
+            FailReason::DeviceLost => self.lp_lost_churn += 1,
         }
     }
 
@@ -125,8 +156,23 @@ impl ScenarioMetrics {
     }
 
     /// Fig 5: mean per-request set completion percentage.
-    pub fn lp_per_request_pct(&mut self) -> f64 {
+    pub fn lp_per_request_pct(&self) -> f64 {
         self.lp_set_fractions.mean() * 100.0
+    }
+
+    /// Share (%) of orphaned high-priority tasks that were rescued.
+    pub fn hp_rescue_pct(&self) -> f64 {
+        pct(self.hp_rescued, self.hp_orphaned)
+    }
+
+    /// Total tasks orphaned by churn across both priorities.
+    pub fn tasks_orphaned(&self) -> u64 {
+        self.hp_orphaned + self.lp_orphaned
+    }
+
+    /// True when this run saw any churn at all.
+    pub fn saw_churn(&self) -> bool {
+        self.devices_crashed + self.devices_drained + self.link_degrade_events > 0
     }
 
     /// Fig 6: offloaded low-priority completion percentage.
@@ -135,7 +181,7 @@ impl ScenarioMetrics {
     }
 
     /// JSON export for EXPERIMENTS.md appendices / plotting.
-    pub fn to_json(&mut self) -> Json {
+    pub fn to_json(&self) -> Json {
         let preempted_by_cores: Vec<Json> = self
             .preempted_by_cores
             .iter()
@@ -208,16 +254,34 @@ impl ScenarioMetrics {
                     .with("lp_alloc_mean", self.lp_alloc_ms.mean())
                     .with("lp_realloc_mean", self.lp_realloc_ms.mean()),
             )
+            .with(
+                "dynamics",
+                Json::obj()
+                    .with("devices_crashed", self.devices_crashed)
+                    .with("devices_drained", self.devices_drained)
+                    .with("devices_rejoined", self.devices_rejoined)
+                    .with("failures_detected", self.failures_detected)
+                    .with("link_degrade_events", self.link_degrade_events)
+                    .with("frames_lost_churn", self.frames_lost_churn)
+                    .with("hp_orphaned", self.hp_orphaned)
+                    .with("hp_rescued", self.hp_rescued)
+                    .with("hp_rescue_pct", self.hp_rescue_pct())
+                    .with("hp_lost_churn", self.hp_lost_churn)
+                    .with("lp_orphaned", self.lp_orphaned)
+                    .with("lp_rescued", self.lp_rescued)
+                    .with("lp_requeued", self.lp_requeued_churn)
+                    .with("lp_lost_churn", self.lp_lost_churn),
+            )
     }
 
     /// One human-readable summary block.
-    pub fn render_text(&mut self) -> String {
+    pub fn render_text(&self) -> String {
         let pr = self.lp_per_request_pct();
         let ham = self.hp_alloc_ms.mean();
         let hpm = self.hp_preempt_path_ms.mean();
         let lam = self.lp_alloc_ms.mean();
         let lrm = self.lp_realloc_ms.mean();
-        format!(
+        let mut line = format!(
             "[{label}] frames {fc}/{ft} ({fp:.2}%) | HP {hc}/{hg} ({hp:.2}%, {hv:.2}% via preemption) | \
              LP {lc}/{lg} ({lp:.2}%, per-request {pr:.2}%, offloaded {op:.2}%) | \
              preemptions {pe} (realloc {rs}/{rf}) | \
@@ -242,7 +306,27 @@ impl ScenarioMetrics {
             hpm = hpm,
             lam = lam,
             lrm = lrm,
-        )
+        );
+        if self.saw_churn() {
+            let _ = write!(
+                line,
+                " | churn: crash {cr} drain {dr} rejoin {rj} | orphans HP {ho} \
+                 (rescued {hr}, lost {hl}) LP {lo} (rescued {lr}, requeued {lq}, lost {ll}) | \
+                 frames lost {fl}",
+                cr = self.devices_crashed,
+                dr = self.devices_drained,
+                rj = self.devices_rejoined,
+                ho = self.hp_orphaned,
+                hr = self.hp_rescued,
+                hl = self.hp_lost_churn,
+                lo = self.lp_orphaned,
+                lr = self.lp_rescued,
+                lq = self.lp_requeued_churn,
+                ll = self.lp_lost_churn,
+                fl = self.frames_lost_churn,
+            );
+        }
+        line
     }
 }
 
@@ -269,9 +353,11 @@ mod tests {
         m.record_lp_failure(&FailReason::Preempted);
         m.record_lp_failure(&FailReason::Violated);
         m.record_lp_failure(&FailReason::Cancelled);
+        m.record_lp_failure(&FailReason::DeviceLost);
         assert_eq!(m.lp_failed_alloc, 1);
         assert_eq!(m.lp_failed_preempted, 1);
         assert_eq!(m.lp_violated, 1);
+        assert_eq!(m.lp_lost_churn, 1);
     }
 
     #[test]
@@ -301,7 +387,9 @@ mod tests {
         let mut m = ScenarioMetrics::new("UPS");
         m.frames_total = 10;
         let j = m.to_json();
-        for key in ["label", "frames", "hp", "lp", "preemption", "core_alloc", "latency_ms"] {
+        for key in [
+            "label", "frames", "hp", "lp", "preemption", "core_alloc", "latency_ms", "dynamics",
+        ] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
         assert_eq!(j.get("label").and_then(Json::as_str), Some("UPS"));
@@ -309,7 +397,26 @@ mod tests {
 
     #[test]
     fn text_render_contains_label() {
-        let mut m = ScenarioMetrics::new("WPS_3");
+        let m = ScenarioMetrics::new("WPS_3");
         assert!(m.render_text().contains("WPS_3"));
+    }
+
+    #[test]
+    fn churn_summary_only_rendered_when_churn_happened() {
+        let mut m = ScenarioMetrics::new("DYN");
+        assert!(!m.saw_churn());
+        assert!(!m.render_text().contains("churn"));
+        m.devices_crashed = 2;
+        m.hp_orphaned = 3;
+        m.hp_rescued = 2;
+        m.hp_lost_churn = 1;
+        assert!(m.saw_churn());
+        let text = m.render_text();
+        assert!(text.contains("churn"), "{text}");
+        assert!((m.hp_rescue_pct() - 200.0 / 3.0).abs() < 1e-9);
+        assert_eq!(m.tasks_orphaned(), 3);
+        let j = m.to_json();
+        let dynamics = j.get("dynamics").unwrap();
+        assert_eq!(dynamics.get("hp_rescued").and_then(Json::as_f64), Some(2.0));
     }
 }

@@ -36,6 +36,11 @@ pub struct LinkModel {
     tracker: BandwidthTracker,
     /// Jitter fraction: σ of actual transfer time and padding of slots.
     jitter_frac: f64,
+    /// Throughput multiplier applied during a scripted degradation episode
+    /// (network-dynamics extension): 1.0 = nominal, 0.5 = half throughput.
+    /// Scales both reservation sizing and sampled transfers — the model is
+    /// that the physical link slowed down *and* the estimator tracked it.
+    degradation: f64,
 }
 
 impl LinkModel {
@@ -43,12 +48,24 @@ impl LinkModel {
         LinkModel {
             tracker: BandwidthTracker::new(cfg),
             jitter_frac: cfg.jitter_frac,
+            degradation: 1.0,
         }
+    }
+
+    /// Apply (or lift, with `factor == 1.0`) a link-throughput degradation.
+    pub fn set_degradation(&mut self, factor: f64) {
+        assert!(factor > 0.0 && factor <= 1.0, "degradation factor {factor}");
+        self.degradation = factor;
+    }
+
+    /// The throughput multiplier currently in force.
+    pub fn degradation(&self) -> f64 {
+        self.degradation
     }
 
     /// Raw (unpadded) expected transfer duration for `bytes`.
     pub fn raw_duration(&self, bytes: u64) -> SimDuration {
-        SimDuration::from_secs_f64(bytes as f64 / self.tracker.estimate_bps())
+        SimDuration::from_secs_f64(bytes as f64 / (self.tracker.estimate_bps() * self.degradation))
     }
 
     /// Slot duration the controller reserves: expected time plus jitter
@@ -78,9 +95,9 @@ impl LinkModel {
         self.tracker.observe(bytes, took);
     }
 
-    /// Current estimate, bytes/sec.
+    /// Current estimate, bytes/sec (after any active degradation).
     pub fn estimate_bps(&self) -> f64 {
-        self.tracker.estimate_bps()
+        self.tracker.estimate_bps() * self.degradation
     }
 }
 
@@ -153,6 +170,21 @@ mod tests {
         let mean = sum / n as f64;
         assert!((mean - raw).abs() < raw * 0.02, "mean {mean} vs raw {raw}");
         assert!(distinct.len() > 100);
+    }
+
+    #[test]
+    fn degradation_stretches_slots_and_restores() {
+        let c = cfg();
+        let mut link = LinkModel::new(&c);
+        let nominal = link.slot_duration(&c, SlotKind::InputTransfer);
+        link.set_degradation(0.5);
+        let degraded = link.slot_duration(&c, SlotKind::InputTransfer);
+        // Half throughput ⇒ double duration (µs rounding tolerance).
+        let ratio = degraded.as_secs_f64() / nominal.as_secs_f64();
+        assert!((ratio - 2.0).abs() < 1e-3, "ratio {ratio}");
+        assert_eq!(link.degradation(), 0.5);
+        link.set_degradation(1.0);
+        assert_eq!(link.slot_duration(&c, SlotKind::InputTransfer), nominal);
     }
 
     #[test]

@@ -192,6 +192,14 @@ impl CoreTimeline {
         v
     }
 
+    /// Drop every reservation (device failure reclamation: a dead device's
+    /// calendar must not keep phantom slots alive).
+    pub fn clear(&mut self) -> usize {
+        let n = self.slots.len();
+        self.slots.clear();
+        n
+    }
+
     /// Drop reservations ending at or before `t`.
     pub fn prune_before(&mut self, t: SimTime) -> usize {
         let before = self.slots.len();

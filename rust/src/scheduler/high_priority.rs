@@ -62,6 +62,12 @@ pub fn try_allocate(
     let source = rec.spec.source;
     let deadline = rec.spec.deadline;
 
+    // Network-dynamics: a draining/downed source device takes no new work
+    // (the paper's HP tasks are local-only, so there is nowhere else to go).
+    if !st.device_is_up(source) {
+        return None;
+    }
+
     // 1. Earliest feasible slot for the allocation message on the link.
     let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
     let msg_start = st.link.earliest_fit(now, msg_dur);

@@ -221,10 +221,14 @@ fn try_place_min(
     let msg_start = st.link.earliest_fit(now, msg_dur);
     let arrival = msg_start + msg_dur;
 
-    // 2a. Source device first (no image transfer).
+    // 2a. Source device first (no image transfer). A draining/downed source
+    // is skipped (network-dynamics): its work must be placed elsewhere.
     let local_start = arrival.max(tp);
     let local_window = Window::from_duration(local_start, slot);
-    if local_window.end <= deadline && st.device(source).fits(&local_window, cores) {
+    if st.device_is_up(source)
+        && local_window.end <= deadline
+        && st.device(source).fits(&local_window, cores)
+    {
         st.link
             .reserve(msg_start, msg_dur, SlotKind::LpAllocMsg, task)
             .expect("earliest_fit produced occupied lp-alloc slot");
@@ -260,7 +264,7 @@ fn try_place_min(
     let horizon = Window::new(tp, deadline.max(tp));
     let mut candidates: Vec<(u64, u32)> = Vec::new();
     for d in st.device_ids() {
-        if d == source {
+        if d == source || !st.device_is_up(d) {
             continue;
         }
         match st.device(d).earliest_availability(tp, cores) {

@@ -8,10 +8,11 @@
 pub mod high_priority;
 pub mod low_priority;
 pub mod preemption;
+pub mod rescue;
 
 use crate::config::SystemConfig;
 use crate::state::NetworkState;
-use crate::task::{DeviceId, RequestId, TaskId, Window};
+use crate::task::{DeviceId, Priority, RequestId, TaskId, Window};
 use crate::time::SimTime;
 
 /// One committed low-priority placement.
@@ -83,6 +84,47 @@ impl LpOutcome {
     }
 }
 
+/// One orphaned high-priority task relocated onto a surviving device
+/// (network-dynamics extension: the controller re-issues the allocation and
+/// re-sends the cached input, so the stage-2 task can complete elsewhere).
+#[derive(Debug, Clone)]
+pub struct HpRescue {
+    /// The rescued task.
+    pub task: TaskId,
+    /// The adoptive device.
+    pub device: DeviceId,
+    /// The relocated processing window.
+    pub window: Window,
+    /// Set when the rescue had to preempt a low-priority task to make room.
+    pub preemption: Option<PreemptionReport>,
+}
+
+/// Outcome of re-planning a failed device's orphans.
+#[derive(Debug, Clone, Default)]
+pub struct RescueOutcome {
+    /// High-priority orphans relocated onto surviving devices.
+    pub hp_rescued: Vec<HpRescue>,
+    /// Low-priority orphans re-planned through the reallocation path.
+    pub lp_rescued: Vec<LpPlacement>,
+    /// Low-priority orphans put back on a steal queue (workstealers only;
+    /// their "rescue" is a later steal).
+    pub lp_requeued: Vec<TaskId>,
+    /// Orphans with no feasible rescue; the coordinator fails these with
+    /// [`crate::task::FailReason::DeviceLost`].
+    pub lost: Vec<(TaskId, Priority)>,
+    /// Evictions fired by rescue attempts that still failed: the orphan is
+    /// in `lost`, but the victim was genuinely preempted (and possibly
+    /// reallocated — its placement must still be executed/accounted).
+    pub failed_rescue_evictions: Vec<PreemptionReport>,
+}
+
+impl RescueOutcome {
+    /// Total orphans this outcome accounts for.
+    pub fn total(&self) -> usize {
+        self.hp_rescued.len() + self.lp_rescued.len() + self.lp_requeued.len() + self.lost.len()
+    }
+}
+
 /// An allocation policy driven by the coordinator.
 pub trait Policy {
     /// A high-priority (stage-2) task request arrived at the controller.
@@ -129,6 +171,30 @@ pub trait Policy {
     /// Poll period in seconds, if this policy wants periodic wake-ups.
     fn poll_interval(&self) -> Option<f64> {
         None
+    }
+
+    /// A device was declared failed (network-dynamics extension). The
+    /// coordinator has already reclaimed its reservations and marked the
+    /// `orphans` (high-priority first, then by deadline) pending
+    /// reallocation; re-plan them. Orphans returned in
+    /// [`RescueOutcome::lost`] are failed with
+    /// [`crate::task::FailReason::DeviceLost`] by the coordinator.
+    ///
+    /// Default: a policy without rescue support loses every orphan.
+    fn rescue_orphans(
+        &mut self,
+        st: &mut NetworkState,
+        _cfg: &SystemConfig,
+        orphans: &[TaskId],
+        _now: SimTime,
+    ) -> RescueOutcome {
+        RescueOutcome {
+            lost: orphans
+                .iter()
+                .filter_map(|&t| st.task(t).map(|r| (t, r.spec.priority)))
+                .collect(),
+            ..RescueOutcome::default()
+        }
     }
 
     /// Human-readable policy name for reports.
@@ -216,6 +282,16 @@ impl Policy for PatsScheduler {
         _now: SimTime,
     ) -> Vec<LpPlacement> {
         Vec::new() // the scheduler plans ahead; nothing to do reactively
+    }
+
+    fn rescue_orphans(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        orphans: &[TaskId],
+        now: SimTime,
+    ) -> RescueOutcome {
+        rescue::rescue_all(self, st, cfg, orphans, now)
     }
 
     fn name(&self) -> &'static str {

@@ -35,6 +35,11 @@ pub fn preempt_and_retry(
         return (None, None);
     };
     let source = rec.spec.source;
+    // Network-dynamics: never evict a victim for a device that cannot take
+    // the high-priority task anyway (draining/down source).
+    if !st.device_is_up(source) {
+        return (None, None);
+    }
 
     // Reconstruct the conflicting processing window the failed attempt
     // wanted (same arithmetic as high_priority::try_allocate).

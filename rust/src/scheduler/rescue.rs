@@ -1,0 +1,450 @@
+//! Orphan rescue: failure recovery through the preemption machinery
+//! (network-dynamics extension, beyond the paper's static testbed).
+//!
+//! When the coordinator declares a device failed, every task it hosted is
+//! stripped of its reservations and marked `PreemptedPendingRealloc` —
+//! exactly the state a preemption victim is left in (§4). Rescue re-plans
+//! those orphans:
+//!
+//! * **Low-priority orphans** go through the *existing* reallocation path,
+//!   [`low_priority::allocate_single`], unchanged — the paper's machinery
+//!   for re-homing evicted tasks is precisely a re-homing mechanism.
+//! * **High-priority orphans** get first claim (they are handed over
+//!   HP-first by `NetworkState::mark_device_down`) and are *relocated*: the
+//!   controller re-issues the allocation message and re-sends the cached
+//!   input to an adoptive device. If no device has a free core, the rescue
+//!   may itself fire the preemption mechanism — evicting the
+//!   farthest-deadline low-priority task on the least-loaded candidate,
+//!   just as §4 does on the source device.
+//!
+//! Modelling assumption (documented in KNOWN_ISSUES.md): every task input
+//! crossed the AP-routed link when it was first scheduled, so the
+//! controller holds a cached copy and can re-send it. Without that
+//! assumption a crashed device's local tasks would be unrescuable — their
+//! input died with the device.
+
+use std::time::Instant;
+
+use crate::config::SystemConfig;
+use crate::resources::SlotKind;
+use crate::scheduler::high_priority::HP_CORES;
+use crate::scheduler::{
+    low_priority, HpRescue, PatsScheduler, PreemptionReport, RescueOutcome,
+};
+use crate::state::NetworkState;
+use crate::task::{Allocation, DeviceId, FailReason, Priority, TaskId, Window};
+use crate::time::SimTime;
+
+/// Result of one relocation attempt for a high-priority orphan.
+///
+/// `victim` is set when the preemption mechanism fired during the attempt —
+/// even if the retry still failed — so the caller can decide the victim's
+/// fate (reallocate like the scheduler, requeue like a workstealer).
+#[derive(Debug, Clone)]
+pub struct RelocationAttempt {
+    /// The committed adoptive placement, if any.
+    pub window: Option<(DeviceId, Window)>,
+    /// `(victim id, cores held, was running)` when an eviction happened.
+    pub victim: Option<(TaskId, u32, bool)>,
+}
+
+/// Re-plan every orphan of a failed device with the paper's scheduler:
+/// high-priority orphans are relocated (preemption-aware per the
+/// scheduler's flags), low-priority orphans go through the §4 reallocation
+/// path.
+pub fn rescue_all(
+    sched: &PatsScheduler,
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    orphans: &[TaskId],
+    now: SimTime,
+) -> RescueOutcome {
+    let mut out = RescueOutcome::default();
+    for &task in orphans {
+        let Some(rec) = st.task(task) else { continue };
+        if rec.state.is_terminal() {
+            continue;
+        }
+        let priority = rec.spec.priority;
+        match priority {
+            Priority::High => {
+                let attempt = relocate_hp(st, cfg, task, now, sched.preemption);
+                // Victim disposal mirrors §4: attempt reallocation, else a
+                // terminal `Preempted` failure.
+                let report = attempt.victim.map(|(victim, cores, was_running)| {
+                    let t0 = Instant::now();
+                    let reallocation = if sched.reallocate {
+                        low_priority::allocate_single(st, cfg, victim, now)
+                    } else {
+                        None
+                    };
+                    if reallocation.is_none() {
+                        st.fail_task(victim, FailReason::Preempted, now);
+                    }
+                    PreemptionReport {
+                        victim,
+                        victim_cores: cores,
+                        victim_was_running: was_running,
+                        reallocation,
+                        realloc_search: t0.elapsed(),
+                    }
+                });
+                match attempt.window {
+                    Some((device, window)) => out.hp_rescued.push(HpRescue {
+                        task,
+                        device,
+                        window,
+                        preemption: report,
+                    }),
+                    None => {
+                        // The orphan is lost, but any eviction (and the
+                        // victim's committed reallocation) really happened
+                        // and must reach the simulator/metrics.
+                        out.lost.push((task, Priority::High));
+                        out.failed_rescue_evictions.extend(report);
+                    }
+                }
+            }
+            Priority::Low => match low_priority::allocate_single(st, cfg, task, now) {
+                Some(p) => out.lp_rescued.push(p),
+                None => out.lost.push((task, Priority::Low)),
+            },
+        }
+    }
+    out
+}
+
+/// Relocate an orphaned high-priority task onto a surviving device.
+///
+/// The controller pays an allocation message plus an input re-transfer on
+/// the link, then searches the up devices least-loaded-first for a free
+/// core over the relocated window. With `allow_preemption`, a failed search
+/// continues with a single §4-style eviction: the farthest-deadline
+/// preemptible task on the least-loaded candidate device.
+pub fn relocate_hp(
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+    allow_preemption: bool,
+) -> RelocationAttempt {
+    let none = RelocationAttempt { window: None, victim: None };
+    let Some(rec) = st.task(task) else { return none };
+    let source = rec.spec.source;
+    let deadline = rec.spec.deadline;
+
+    // Link plan: allocation message, then the cached-input re-transfer.
+    // Both are computed before any reservation; the second `earliest_fit`
+    // starts after the first window ends, so they cannot overlap.
+    let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
+    let msg_start = st.link.earliest_fit(now, msg_dur);
+    let xfer_dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
+    let xfer_start = st.link.earliest_fit(msg_start + msg_dur, xfer_dur);
+    let window = Window::from_duration(xfer_start + xfer_dur, cfg.hp_slot());
+    if window.end > deadline {
+        return none; // detection latency already ate the deadline
+    }
+
+    // Candidate devices: up, never the (dead) source, least busy first.
+    let mut candidates: Vec<(u32, u32)> = st
+        .up_devices()
+        .filter(|&d| d != source)
+        .map(|d| (st.device(d).peak_usage_in(&window), d.0))
+        .collect();
+    candidates.sort_unstable();
+
+    // Reserve the link plan up front (rolled back if no device adopts);
+    // later link traffic (preempt notice, state update) must not steal it.
+    if st.link.reserve(msg_start, msg_dur, SlotKind::HpAllocMsg, task).is_err()
+        || st
+            .link
+            .reserve(xfer_start, xfer_dur, SlotKind::InputTransfer, task)
+            .is_err()
+    {
+        return none; // cannot happen single-threaded; stay silent-safe
+    }
+
+    // Pass 1: a free core somewhere.
+    for &(_, dev) in &candidates {
+        let dev = DeviceId(dev);
+        if st.device(dev).fits(&window, HP_CORES) {
+            commit(st, cfg, task, dev, window);
+            return RelocationAttempt { window: Some((dev, window)), victim: None };
+        }
+    }
+    if !allow_preemption {
+        st.link.remove_owner_from(task, msg_start);
+        return none;
+    }
+
+    // Pass 2: single-victim eviction on the least-loaded device that has a
+    // preemptible conflict (§4's farthest-deadline rule).
+    for &(_, dev) in &candidates {
+        let dev = DeviceId(dev);
+        let victim = st
+            .device(dev)
+            .preemption_candidates(&window)
+            .first()
+            .map(|s| (s.task, s.cores, s.window.start <= now));
+        let Some((victim_id, victim_cores, victim_was_running)) = victim else {
+            continue;
+        };
+        st.preempt_task(victim_id, now)
+            .expect("candidate came from the device timeline");
+        st.reserve_link_message(cfg, now, SlotKind::PreemptMsg, victim_id);
+        let victim = Some((victim_id, victim_cores, victim_was_running));
+        if st.device(dev).fits(&window, HP_CORES) {
+            commit(st, cfg, task, dev, window);
+            return RelocationAttempt { window: Some((dev, window)), victim };
+        }
+        // Eviction was not enough (an interior non-preemptible spike); the
+        // victim is already ejected — report it and give up, like §4's
+        // single-victim retry does.
+        st.link.remove_owner_from(task, msg_start);
+        return RelocationAttempt { window: None, victim };
+    }
+    st.link.remove_owner_from(task, msg_start);
+    none
+}
+
+/// Commit the adoptive placement plus its completion state-update.
+fn commit(
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    dev: DeviceId,
+    window: Window,
+) {
+    st.commit_allocation(Allocation {
+        task,
+        device: dev,
+        window,
+        cores: HP_CORES,
+        offloaded: true,
+    })
+    .expect("fits() said the adoptive window was free");
+    st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{FrameId, TaskSpec, TaskState};
+
+    fn setup(devices: usize) -> (SystemConfig, NetworkState) {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = devices;
+        (cfg.clone(), NetworkState::new(&cfg))
+    }
+
+    fn register(
+        st: &mut NetworkState,
+        source: u32,
+        priority: Priority,
+        deadline_s: f64,
+    ) -> TaskId {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(0),
+            source: DeviceId(source),
+            priority,
+            deadline: SimTime::from_secs_f64(deadline_s),
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        id
+    }
+
+    fn allocate_on(st: &mut NetworkState, id: TaskId, dev: u32, cores: u32, until_s: f64) {
+        st.commit_allocation(Allocation {
+            task: id,
+            device: DeviceId(dev),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(until_s)),
+            cores,
+            offloaded: false,
+        })
+        .unwrap();
+    }
+
+    fn sched(preemption: bool) -> PatsScheduler {
+        PatsScheduler { preemption, reallocate: true, set_aware_victims: false }
+    }
+
+    /// Device 0 hosts an HP task and crashes; devices 1 and 2 are saturated
+    /// with preemptible LP work. Only the preemption-aware rescue can
+    /// relocate the HP orphan.
+    fn crash_scene() -> (SystemConfig, NetworkState, TaskId) {
+        let (cfg, mut st) = setup(3);
+        let hp = register(&mut st, 0, Priority::High, 5.0);
+        allocate_on(&mut st, hp, 0, 1, 1.0);
+        for dev in 1..3u32 {
+            for _ in 0..2 {
+                let lp = register(&mut st, dev, Priority::Low, 60.0);
+                allocate_on(&mut st, lp, dev, 2, 17.0);
+            }
+        }
+        let now = SimTime::from_secs_f64(0.5);
+        let orphans = st.mark_device_down(DeviceId(0), now);
+        assert_eq!(orphans, vec![hp]);
+        (cfg, st, hp)
+    }
+
+    #[test]
+    fn hp_orphan_rescued_via_preemption_on_saturated_network() {
+        let (cfg, mut st, hp) = crash_scene();
+        let now = SimTime::from_secs_f64(0.5);
+        let s = sched(true);
+        let out = rescue_all(&s, &mut st, &cfg, &[hp], now);
+        assert_eq!(out.hp_rescued.len(), 1, "preemption frees a core somewhere");
+        assert!(out.lost.is_empty());
+        let r = &out.hp_rescued[0];
+        assert_eq!(r.task, hp);
+        assert_ne!(r.device, DeviceId(0), "never back onto the dead device");
+        assert!(r.window.end <= SimTime::from_secs_f64(5.0));
+        let report = r.preemption.as_ref().expect("saturation forces an eviction");
+        assert_eq!(report.victim_cores, 2);
+        assert_eq!(st.task(hp).unwrap().state, TaskState::Allocated);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hp_orphan_lost_without_preemption_on_saturated_network() {
+        let (cfg, mut st, hp) = crash_scene();
+        let now = SimTime::from_secs_f64(0.5);
+        let mut s = sched(false);
+        // Drive through the Policy entry point for coverage of the wiring.
+        let out = crate::scheduler::Policy::rescue_orphans(&mut s, &mut st, &cfg, &[hp], now);
+        assert!(out.hp_rescued.is_empty(), "no free core and no eviction allowed");
+        assert_eq!(out.lost, vec![(hp, Priority::High)]);
+        // No link residue from the failed attempt beyond pre-crash history.
+        assert_eq!(
+            st.link.slots().iter().filter(|s| s.owner == hp).count(),
+            0,
+            "failed rescue rolls its link plan back"
+        );
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hp_orphan_takes_free_core_without_preemption_when_available() {
+        let (cfg, mut st) = setup(3);
+        let hp = register(&mut st, 0, Priority::High, 5.0);
+        allocate_on(&mut st, hp, 0, 1, 1.0);
+        let now = SimTime::from_secs_f64(0.5);
+        st.mark_device_down(DeviceId(0), now);
+        let s = sched(false);
+        let out = rescue_all(&s, &mut st, &cfg, &[hp], now);
+        assert_eq!(out.hp_rescued.len(), 1, "idle network: no eviction needed");
+        assert!(out.hp_rescued[0].preemption.is_none());
+        // The rescue paid its link plan: alloc msg + input re-transfer +
+        // state update.
+        let kinds: Vec<SlotKind> = st
+            .link
+            .slots()
+            .iter()
+            .filter(|s| s.owner == hp)
+            .map(|s| s.kind)
+            .collect();
+        assert!(kinds.contains(&SlotKind::HpAllocMsg));
+        assert!(kinds.contains(&SlotKind::InputTransfer));
+        assert!(kinds.contains(&SlotKind::StateUpdate));
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lp_orphans_reallocate_and_respect_deadlines() {
+        let (cfg, mut st) = setup(3);
+        // Two LP tasks on device 0: one with plenty of slack, one doomed.
+        let roomy = register(&mut st, 0, Priority::Low, 60.0);
+        let doomed = register(&mut st, 0, Priority::Low, 10.0);
+        allocate_on(&mut st, roomy, 0, 2, 17.0);
+        allocate_on(&mut st, doomed, 0, 2, 10.0);
+        let now = SimTime::from_secs_f64(1.0);
+        let orphans = st.mark_device_down(DeviceId(0), now);
+        assert_eq!(orphans.len(), 2);
+        let s = sched(true);
+        let out = rescue_all(&s, &mut st, &cfg, &orphans, now);
+        assert_eq!(out.lp_rescued.len(), 1);
+        let p = &out.lp_rescued[0];
+        assert_eq!(p.task, roomy);
+        assert_ne!(p.device, DeviceId(0));
+        assert!(p.offloaded, "rescue away from the dead source pays a transfer");
+        assert_eq!(out.lost, vec![(doomed, Priority::Low)]);
+        st.check_invariants().unwrap();
+    }
+
+    /// Eviction fires but is not enough (a non-preemptible spike remains):
+    /// the orphan is lost, yet the victim's preemption — and its committed
+    /// reallocation — must surface through `failed_rescue_evictions`, not
+    /// vanish as a phantom allocation.
+    #[test]
+    fn failed_rescue_still_reports_its_eviction() {
+        let (cfg, mut st) = setup(3);
+        let hp = register(&mut st, 0, Priority::High, 5.0);
+        allocate_on(&mut st, hp, 0, 1, 1.0);
+        // Device 1: a preemptible LP early in the rescue window plus a
+        // non-preemptible 4-core spike later in it — evicting the LP still
+        // leaves no room.
+        let victim = register(&mut st, 1, Priority::Low, 60.0);
+        st.commit_allocation(Allocation {
+            task: victim,
+            device: DeviceId(1),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(0.9)),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+        let spike = register(&mut st, 1, Priority::High, 5.0);
+        st.commit_allocation(Allocation {
+            task: spike,
+            device: DeviceId(1),
+            window: Window::new(SimTime::from_secs_f64(1.0), SimTime::from_secs_f64(1.2)),
+            cores: 4,
+            offloaded: false,
+        })
+        .unwrap();
+        // Device 2: fully blocked by non-preemptible work.
+        let wall = register(&mut st, 2, Priority::High, 60.0);
+        st.commit_allocation(Allocation {
+            task: wall,
+            device: DeviceId(2),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
+            cores: 4,
+            offloaded: false,
+        })
+        .unwrap();
+        let now = SimTime::from_secs_f64(0.5);
+        st.mark_device_down(DeviceId(0), now);
+        let s = sched(true);
+        let out = rescue_all(&s, &mut st, &cfg, &[hp], now);
+        assert!(out.hp_rescued.is_empty());
+        assert_eq!(out.lost, vec![(hp, Priority::High)]);
+        assert_eq!(out.failed_rescue_evictions.len(), 1, "the eviction surfaces");
+        let report = &out.failed_rescue_evictions[0];
+        assert_eq!(report.victim, victim);
+        // The victim found a new home (device 1 again, after the spike):
+        // its committed placement is carried so the simulator can run it.
+        let realloc = report.reallocation.as_ref().expect("victim reallocates");
+        assert_eq!(st.task(victim).unwrap().state, TaskState::Allocated);
+        assert_eq!(
+            st.task(victim).unwrap().allocation.as_ref().unwrap().window,
+            realloc.window
+        );
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn past_deadline_hp_orphan_is_lost() {
+        let (cfg, mut st) = setup(2);
+        let hp = register(&mut st, 0, Priority::High, 1.5);
+        allocate_on(&mut st, hp, 0, 1, 1.2);
+        // Detection arrives after the deadline already passed.
+        let now = SimTime::from_secs_f64(2.0);
+        st.mark_device_down(DeviceId(0), now);
+        let s = sched(true);
+        let out = rescue_all(&s, &mut st, &cfg, &[hp], now);
+        assert!(out.hp_rescued.is_empty());
+        assert_eq!(out.lost, vec![(hp, Priority::High)]);
+    }
+}

@@ -20,7 +20,7 @@
 //! contention is preserved while bookkeeping stays exact.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::config::{Policy as PolicyKind, SystemConfig};
 use crate::coordinator::Controller;
@@ -28,11 +28,11 @@ use crate::device::{execute_in_window, ExecOutcome, ExecutionModel};
 use crate::metrics::ScenarioMetrics;
 use crate::pipeline::{FrameRecord, StartSchedule};
 use crate::resources::SlotKind;
-use crate::scheduler::{LpPlacement, PatsScheduler, Policy};
+use crate::scheduler::{HpRescue, LpPlacement, PatsScheduler, Policy, RescueOutcome};
 use crate::state::NetworkState;
-use crate::task::{DeviceId, FailReason, FrameId, TaskId, TaskState};
+use crate::task::{DeviceId, FailReason, FrameId, Priority, TaskId, TaskState};
 use crate::time::{SimDuration, SimTime, SkewModel};
-use crate::trace::Trace;
+use crate::trace::{ChurnEvent, ChurnScript, Trace};
 use crate::util::rng::Rng;
 use crate::workstealer::{Mode, Workstealer};
 
@@ -51,6 +51,11 @@ enum EventKind {
     LpRequest { frame_idx: usize },
     /// Workstealer poll-loop wake-up on one device.
     PollTick { device: DeviceId },
+    /// A scripted churn event (crash/drain/rejoin/link change) fires.
+    Churn { idx: usize },
+    /// The controller's missed-state-update watchdog declares a device
+    /// failed (scheduled `detect_delay_s` after its crash).
+    FailureDetected { device: DeviceId },
 }
 
 #[derive(Debug)]
@@ -88,32 +93,56 @@ pub struct SimResult {
 
 /// Run a scenario with the policy selected by `cfg.policy` / `cfg.preemption`.
 pub fn run_scenario(cfg: &SystemConfig, trace: &Trace, label: &str) -> SimResult {
+    run_scenario_dynamic(cfg, trace, &ChurnScript::none(), label)
+}
+
+/// Run a scenario under a scripted churn scenario (network-dynamics
+/// extension): devices crash, drain, and rejoin mid-run and the shared
+/// link may degrade. With an empty script this is exactly [`run_scenario`].
+pub fn run_scenario_dynamic(
+    cfg: &SystemConfig,
+    trace: &Trace,
+    churn: &ChurnScript,
+    label: &str,
+) -> SimResult {
     match cfg.policy {
         PolicyKind::Scheduler => {
             let policy = PatsScheduler::from_config(cfg);
-            run_with_policy(cfg, trace, label, policy)
+            run_with_policy_dynamic(cfg, trace, churn, label, policy)
         }
         PolicyKind::CentralWorkstealer => {
             let policy = Workstealer::new(Mode::Central, cfg.preemption, cfg);
-            run_with_policy(cfg, trace, label, policy)
+            run_with_policy_dynamic(cfg, trace, churn, label, policy)
         }
         PolicyKind::DecentralWorkstealer => {
             let policy = Workstealer::new(Mode::Decentral, cfg.preemption, cfg);
-            run_with_policy(cfg, trace, label, policy)
+            run_with_policy_dynamic(cfg, trace, churn, label, policy)
         }
     }
 }
 
-/// The simulation engine, generic over the policy.
+/// The simulation engine, generic over the policy (static network).
 pub fn run_with_policy<P: Policy>(
     cfg: &SystemConfig,
     trace: &Trace,
     label: &str,
     policy: P,
 ) -> SimResult {
+    run_with_policy_dynamic(cfg, trace, &ChurnScript::none(), label, policy)
+}
+
+/// The simulation engine, generic over the policy, with scripted churn.
+pub fn run_with_policy_dynamic<P: Policy>(
+    cfg: &SystemConfig,
+    trace: &Trace,
+    churn: &ChurnScript,
+    label: &str,
+    policy: P,
+) -> SimResult {
     let wall0 = std::time::Instant::now();
     let mut sim = Sim::new(cfg.clone(), trace, label, policy);
     sim.seed_frames(trace);
+    sim.seed_churn(churn);
     let virtual_end = sim.drain();
     sim.finalize(trace);
     SimResult { metrics: sim.metrics, elapsed: wall0.elapsed(), virtual_end }
@@ -137,6 +166,17 @@ struct Sim<P: Policy> {
     horizon: SimTime,
     /// Last time dead reservations were compacted away.
     last_prune: SimTime,
+    /// Scripted churn events, time-ascending (index = event id).
+    churn: Vec<(SimTime, ChurnEvent)>,
+    /// Ground truth: the device is physically dead right now (the
+    /// controller may not have noticed yet — that gap is the point).
+    physically_down: Vec<bool>,
+    /// Ground truth: the device is draining (samples no new frames).
+    draining: Vec<bool>,
+    /// Frames whose pipeline never ran because their device was down or
+    /// draining at spawn time (counted as lost-to-churn, not scheduled
+    /// failures).
+    skipped_frames: HashSet<usize>,
     metrics: ScenarioMetrics,
 }
 
@@ -150,6 +190,7 @@ impl<P: Policy> Sim<P> {
         let exec = ExecutionModel::new(&cfg);
         let rng = Rng::seed_from_u64(cfg.seed);
         let controller = Controller::new(cfg.clone(), policy);
+        let devices = cfg.devices;
         Sim {
             cfg,
             controller,
@@ -163,6 +204,10 @@ impl<P: Policy> Sim<P> {
             hp_used_preemption: HashMap::new(),
             horizon: SimTime::ZERO,
             last_prune: SimTime::ZERO,
+            churn: Vec::new(),
+            physically_down: vec![false; devices],
+            draining: vec![false; devices],
+            skipped_frames: HashSet::new(),
             metrics: ScenarioMetrics::new(label),
         }
     }
@@ -217,6 +262,27 @@ impl<P: Policy> Sim<P> {
         }
     }
 
+    /// Seed the scripted churn events.
+    fn seed_churn(&mut self, churn: &ChurnScript) {
+        // Fail fast on hand-built scripts that target devices outside the
+        // topology (generated scripts are sized correctly by construction).
+        for (at, ev) in churn.events() {
+            if let ChurnEvent::Crash(d) | ChurnEvent::Drain(d) | ChurnEvent::Rejoin(d) = ev {
+                assert!(
+                    (d.0 as usize) < self.cfg.devices,
+                    "churn event at {at} targets {d} outside the {}-device topology",
+                    self.cfg.devices
+                );
+            }
+        }
+        self.churn = churn.events().to_vec();
+        for (idx, (at, _)) in self.churn.iter().enumerate() {
+            self.seq += 1;
+            self.events
+                .push(Reverse(Event { at: *at, seq: self.seq, kind: EventKind::Churn { idx } }));
+        }
+    }
+
     /// Process events to exhaustion; returns the final virtual time.
     fn drain(&mut self) -> SimTime {
         let mut now = SimTime::ZERO;
@@ -239,19 +305,166 @@ impl<P: Policy> Sim<P> {
                 }
                 EventKind::LpRequest { frame_idx } => self.on_lp_request(frame_idx, now),
                 EventKind::PollTick { device } => self.on_poll_tick(device, now),
+                EventKind::Churn { idx } => self.on_churn(idx, now),
+                EventKind::FailureDetected { device } => self.on_failure_detected(device, now),
             }
         }
         now
     }
 
-    fn on_poll_tick(&mut self, device: DeviceId, now: SimTime) {
-        let placements =
-            self.controller
-                .policy
-                .poll(&mut self.controller.state, &self.cfg, device, now);
-        for p in placements {
+    /// Apply one scripted churn event.
+    fn on_churn(&mut self, idx: usize, now: SimTime) {
+        match self.churn[idx].1 {
+            ChurnEvent::Crash(d) => {
+                let i = d.0 as usize;
+                if self.physically_down[i] {
+                    return; // already dead
+                }
+                self.physically_down[i] = true;
+                self.metrics.devices_crashed += 1;
+                // The device falls silent; the controller's watchdog
+                // declares it failed one detection delay later.
+                let detect =
+                    now + SimDuration::from_secs_f64(self.cfg.dynamics.detect_delay_s);
+                self.push(detect, EventKind::FailureDetected { device: d });
+            }
+            ChurnEvent::Drain(d) => {
+                let i = d.0 as usize;
+                if self.draining[i] || self.physically_down[i] {
+                    return;
+                }
+                self.draining[i] = true;
+                self.metrics.devices_drained += 1;
+                self.controller.handle_device_drain(d, now);
+            }
+            ChurnEvent::Rejoin(d) => {
+                let i = d.0 as usize;
+                if !self.physically_down[i] && !self.draining[i] {
+                    return;
+                }
+                self.physically_down[i] = false;
+                self.draining[i] = false;
+                self.metrics.devices_rejoined += 1;
+                self.controller.handle_device_rejoin(d, now);
+                // No poll-tick restart: the train survives downtime (see
+                // on_poll_tick) — re-pushing here would double-schedule it.
+            }
+            ChurnEvent::DegradeLink { factor } => {
+                self.metrics.link_degrade_events += 1;
+                self.controller.state.link_model.set_degradation(factor);
+            }
+            ChurnEvent::RestoreLink => {
+                self.metrics.link_degrade_events += 1;
+                self.controller.state.link_model.set_degradation(1.0);
+            }
+        }
+    }
+
+    /// The controller's watchdog fires for a crashed device: confirm the
+    /// silence, reclaim, and rescue.
+    fn on_failure_detected(&mut self, device: DeviceId, now: SimTime) {
+        if !self.physically_down[device.0 as usize] {
+            return; // rejoined before the watchdog fired (guarded by config)
+        }
+        // Note: a *Draining* device can still crash — only an already-Down
+        // one is skipped, so its orphans are never left unaccounted.
+        if self.controller.state.device_health(device) == crate::state::DeviceHealth::Down {
+            return; // already declared down
+        }
+        debug_assert!(
+            self.controller.device_overdue(device, now),
+            "watchdog fired although the device was heard from after its crash"
+        );
+        self.metrics.failures_detected += 1;
+        let outcome: RescueOutcome = self.controller.handle_device_failure(device, now);
+
+        for rescue in outcome.hp_rescued {
+            self.metrics.hp_orphaned += 1;
+            self.metrics.hp_rescued += 1;
+            self.schedule_hp_rescue(&rescue);
+        }
+        for p in outcome.lp_rescued {
+            self.metrics.lp_orphaned += 1;
+            self.metrics.lp_rescued += 1;
             self.metrics.record_core_alloc(p.cores, p.offloaded);
             self.schedule_lp_placement(&p);
+        }
+        self.metrics.lp_orphaned += outcome.lp_requeued.len() as u64;
+        self.metrics.lp_requeued_churn += outcome.lp_requeued.len() as u64;
+        // Evictions fired by rescues that still failed: the eviction (and
+        // the victim's committed reallocation, if any) really happened.
+        for report in outcome.failed_rescue_evictions {
+            self.metrics
+                .lp_realloc_ms
+                .add(report.realloc_search.as_secs_f64() * 1_000.0);
+            self.metrics
+                .record_preemption(report.victim_cores, report.reallocation.is_some());
+            if let Some(p) = report.reallocation {
+                self.metrics.record_core_alloc(p.cores, p.offloaded);
+                self.schedule_lp_placement(&p);
+            }
+        }
+        for (task, priority) in outcome.lost {
+            match priority {
+                Priority::High => {
+                    self.metrics.hp_orphaned += 1;
+                    self.metrics.hp_lost_churn += 1;
+                    if let Some(fi) = self.task_frame.get(&task).copied() {
+                        self.frames[fi].on_hp_result(false);
+                    }
+                }
+                Priority::Low => {
+                    // Terminal accounting happens via the registry at
+                    // finalize (`FailReason::DeviceLost` → lp_lost_churn).
+                    self.metrics.lp_orphaned += 1;
+                }
+            }
+        }
+    }
+
+    /// Sample reality for a relocated high-priority orphan and schedule its
+    /// resolution (mirrors the fresh-allocation path in `on_hp_request`).
+    fn schedule_hp_rescue(&mut self, rescue: &HpRescue) {
+        self.hp_used_preemption
+            .insert(rescue.task, rescue.preemption.is_some());
+        if let Some(report) = &rescue.preemption {
+            self.metrics
+                .lp_realloc_ms
+                .add(report.realloc_search.as_secs_f64() * 1_000.0);
+            self.metrics
+                .record_preemption(report.victim_cores, report.reallocation.is_some());
+            if let Some(p) = report.reallocation.clone() {
+                self.metrics.record_core_alloc(p.cores, p.offloaded);
+                self.schedule_lp_placement(&p);
+            }
+        }
+        let gen = self.bump_gen(rescue.task);
+        let actual = self.exec.sample_hp(&mut self.rng);
+        match execute_in_window(&rescue.window, None, actual) {
+            ExecOutcome::Completed(t) => self.push(
+                t,
+                EventKind::TaskResolve { task: rescue.task, gen, completed: true },
+            ),
+            ExecOutcome::Violated => self.push(
+                rescue.window.end,
+                EventKind::TaskResolve { task: rescue.task, gen, completed: false },
+            ),
+        }
+    }
+
+    fn on_poll_tick(&mut self, device: DeviceId, now: SimTime) {
+        // A physically dead device does not poll, but its tick train keeps
+        // ticking through the downtime and resumes after a rejoin — killing
+        // and re-pushing trains across crash/rejoin would double-schedule.
+        if !self.physically_down[device.0 as usize] {
+            let placements =
+                self.controller
+                    .policy
+                    .poll(&mut self.controller.state, &self.cfg, device, now);
+            for p in placements {
+                self.metrics.record_core_alloc(p.cores, p.offloaded);
+                self.schedule_lp_placement(&p);
+            }
         }
         if let Some(iv) = self.controller.policy.poll_interval() {
             let next = now + SimDuration::from_secs_f64(iv);
@@ -261,7 +474,18 @@ impl<P: Policy> Sim<P> {
         }
     }
 
+    /// The frame's source device is gone (or leaving): its pipeline never
+    /// runs. Counted as lost-to-churn at finalize, not as a scheduler
+    /// failure.
+    fn device_gone(&self, device: DeviceId) -> bool {
+        self.physically_down[device.0 as usize] || self.draining[device.0 as usize]
+    }
+
     fn on_frame_start(&mut self, frame_idx: usize, now: SimTime) {
+        if self.device_gone(self.frames[frame_idx].device) {
+            self.skipped_frames.insert(frame_idx);
+            return;
+        }
         // Stage 1 (object detector) always runs locally: constant overhead.
         let t = now + SimDuration::from_secs_f64(self.cfg.stage1_s);
         self.push(t, EventKind::HpRequest { frame_idx });
@@ -272,6 +496,11 @@ impl<P: Policy> Sim<P> {
             let f = &self.frames[frame_idx];
             (f.id, f.device)
         };
+        // The device died mid-stage-1: the request is never issued.
+        if self.device_gone(device) {
+            self.skipped_frames.insert(frame_idx);
+            return;
+        }
         self.metrics.hp_generated += 1;
         let (task, _decision_t, outcome) =
             self.controller.handle_hp_request(frame_id, device, now);
@@ -325,6 +554,12 @@ impl<P: Policy> Sim<P> {
             let f = &self.frames[frame_idx];
             (f.id, f.device, f.load.lp_tasks(), f.deadline)
         };
+        // The device died between stage-2 completion and issuing the DNN
+        // request: the set is never spawned.
+        if self.device_gone(device) {
+            self.skipped_frames.insert(frame_idx);
+            return;
+        }
         debug_assert!(n > 0);
         self.metrics.lp_generated += n as u64;
         self.metrics.lp_sets_total += 1;
@@ -391,6 +626,14 @@ impl<P: Policy> Sim<P> {
         let Some(rec) = self.controller.state.task(task) else { return };
         if !rec.state.is_active_allocation() {
             return;
+        }
+        // The hosting device crashed mid-window: no result, no state-update.
+        // The task stays an active allocation until the controller's
+        // watchdog declares the device failed and orphans it.
+        if let Some(alloc) = &rec.allocation {
+            if self.physically_down[alloc.device.0 as usize] {
+                return;
+            }
         }
         let is_hp = rec.spec.priority == crate::task::Priority::High;
 
@@ -496,6 +739,12 @@ impl<P: Policy> Sim<P> {
         }
         self.metrics.frames_total = trace.total_frames() as u64;
         for f in &self.frames {
+            // Frames whose pipeline never ran because their device left the
+            // network are churn losses, not scheduling outcomes.
+            if self.skipped_frames.contains(&(f.id.0 as usize)) {
+                self.metrics.frames_lost_churn += 1;
+                continue;
+            }
             let hp_ok = match f.outcome(st, &by_frame[f.id.0 as usize]) {
                 FrameOutcome::Complete => true,
                 FrameOutcome::FailedHp => {
@@ -576,8 +825,8 @@ mod tests {
     fn scheduler_preemption_run_is_sane() {
         let cfg = small_cfg();
         let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
-        let mut result = run_scenario(&cfg, &trace, "test-ups");
-        let m = &mut result.metrics;
+        let result = run_scenario(&cfg, &trace, "test-ups");
+        let m = &result.metrics;
         assert_eq!(m.frames_total, 80);
         assert!(m.hp_generated > 0);
         // Preemption keeps HP completion very high (paper: 99 %).
@@ -654,6 +903,107 @@ mod tests {
         let m = run_scenario(&cfg, &trace, "idle").metrics;
         assert_eq!(m.frames_completed, 8);
         assert_eq!(m.hp_generated, 0);
+    }
+
+    fn crash_script() -> ChurnScript {
+        ChurnScript::from_events(vec![
+            (SimTime::from_secs_f64(30.0), ChurnEvent::Crash(DeviceId(1))),
+            (SimTime::from_secs_f64(100.0), ChurnEvent::Crash(DeviceId(2))),
+            (SimTime::from_secs_f64(60.0), ChurnEvent::DegradeLink { factor: 0.7 }),
+            (SimTime::from_secs_f64(90.0), ChurnEvent::RestoreLink),
+        ])
+    }
+
+    #[test]
+    fn churn_orphans_are_accounted_never_dropped() {
+        let mut cfg = small_cfg();
+        cfg.frames = 160;
+        let trace =
+            Trace::generate(Distribution::Weighted(3), cfg.devices, cfg.frames, cfg.seed);
+        let m = run_scenario_dynamic(&cfg, &trace, &crash_script(), "churn").metrics;
+        assert_eq!(m.devices_crashed, 2);
+        assert_eq!(m.failures_detected, 2);
+        assert_eq!(m.link_degrade_events, 2);
+        assert!(m.frames_lost_churn > 0, "dead devices stop sampling frames");
+        // Conservation: every generated task ends in exactly one terminal
+        // account, churn included — a crashed device's task completes
+        // elsewhere or is counted lost, never silently dropped.
+        assert_eq!(
+            m.hp_completed + m.hp_failed_alloc + m.hp_violated + m.hp_lost_churn,
+            m.hp_generated,
+            "HP conservation under churn"
+        );
+        assert_eq!(
+            m.lp_completed + m.lp_failed_alloc + m.lp_failed_preempted + m.lp_violated
+                + m.lp_lost_churn,
+            m.lp_generated,
+            "LP conservation under churn"
+        );
+        // Orphan bookkeeping is internally consistent.
+        assert_eq!(m.hp_orphaned, m.hp_rescued + m.hp_lost_churn);
+        assert_eq!(
+            m.lp_orphaned,
+            m.lp_rescued + m.lp_requeued_churn + m.lp_lost_churn
+        );
+        // Frame accounting covers the churn losses.
+        assert_eq!(
+            m.frames_completed + m.frames_failed_hp + m.frames_failed_lp + m.frames_lost_churn,
+            m.frames_total
+        );
+    }
+
+    #[test]
+    fn churn_run_is_deterministic() {
+        let mut cfg = small_cfg();
+        cfg.frames = 120;
+        let trace =
+            Trace::generate(Distribution::Weighted(2), cfg.devices, cfg.frames, cfg.seed);
+        let script = crash_script();
+        let a = run_scenario_dynamic(&cfg, &trace, &script, "a").metrics;
+        let b = run_scenario_dynamic(&cfg, &trace, &script, "b").metrics;
+        assert_eq!(a.frames_completed, b.frames_completed);
+        assert_eq!(a.frames_lost_churn, b.frames_lost_churn);
+        assert_eq!(a.hp_completed, b.hp_completed);
+        assert_eq!(a.hp_orphaned, b.hp_orphaned);
+        assert_eq!(a.hp_rescued, b.hp_rescued);
+        assert_eq!(a.lp_orphaned, b.lp_orphaned);
+        assert_eq!(a.lp_lost_churn, b.lp_lost_churn);
+        assert_eq!(a.preemptions, b.preemptions);
+    }
+
+    #[test]
+    fn empty_script_matches_static_run() {
+        let cfg = small_cfg();
+        let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+        let stat = run_scenario(&cfg, &trace, "static").metrics;
+        let dynamic =
+            run_scenario_dynamic(&cfg, &trace, &ChurnScript::none(), "dynamic").metrics;
+        assert_eq!(stat.frames_completed, dynamic.frames_completed);
+        assert_eq!(stat.hp_completed, dynamic.hp_completed);
+        assert_eq!(stat.lp_completed, dynamic.lp_completed);
+        assert!(!dynamic.saw_churn());
+    }
+
+    #[test]
+    fn drained_device_stops_sampling_but_finishes_work() {
+        let mut cfg = small_cfg();
+        cfg.frames = 120;
+        let trace =
+            Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+        let script = ChurnScript::from_events(vec![(
+            SimTime::from_secs_f64(25.0),
+            ChurnEvent::Drain(DeviceId(0)),
+        )]);
+        let m = run_scenario_dynamic(&cfg, &trace, &script, "drain").metrics;
+        assert_eq!(m.devices_drained, 1);
+        assert_eq!(m.devices_crashed, 0);
+        assert!(m.frames_lost_churn > 0, "the drained device samples no new frames");
+        // A drain orphans nothing: in-flight work finishes normally.
+        assert_eq!(m.tasks_orphaned(), 0);
+        assert_eq!(
+            m.lp_completed + m.lp_failed_alloc + m.lp_failed_preempted + m.lp_violated,
+            m.lp_generated
+        );
     }
 
     #[test]

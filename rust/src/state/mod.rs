@@ -29,10 +29,23 @@ pub struct TaskRecord {
     pub preemptions: u32,
 }
 
+/// The controller's view of one device's availability (network-dynamics
+/// extension; the paper's network is permanently `Up`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceHealth {
+    /// Schedulable: accepts new placements.
+    Up,
+    /// Leaving gracefully: finishes in-flight work, accepts nothing new.
+    Draining,
+    /// Declared failed: its reservations were reclaimed, its tasks orphaned.
+    Down,
+}
+
 /// The controller's network state.
 pub struct NetworkState {
     pub link: Timeline,
     devices: Vec<CoreTimeline>,
+    health: Vec<DeviceHealth>,
     tasks: HashMap<TaskId, TaskRecord>,
     requests: HashMap<RequestId, LpRequest>,
     next_task: u64,
@@ -47,6 +60,7 @@ impl NetworkState {
             devices: (0..cfg.devices)
                 .map(|_| CoreTimeline::new(cfg.cores_per_device))
                 .collect(),
+            health: vec![DeviceHealth::Up; cfg.devices],
             tasks: HashMap::new(),
             requests: HashMap::new(),
             next_task: 0,
@@ -133,6 +147,70 @@ impl NetworkState {
         (0..self.devices.len() as u32).map(DeviceId)
     }
 
+    // ---- device health (network-dynamics extension) --------------------
+
+    /// The controller's view of `d`'s availability.
+    pub fn device_health(&self, d: DeviceId) -> DeviceHealth {
+        self.health[d.0 as usize]
+    }
+
+    /// Set `d`'s availability (drain / rejoin administration). Failure
+    /// detection should go through [`NetworkState::mark_device_down`], which
+    /// also reclaims reservations.
+    pub fn set_device_health(&mut self, d: DeviceId, health: DeviceHealth) {
+        self.health[d.0 as usize] = health;
+    }
+
+    /// True when `d` may receive *new* placements.
+    pub fn device_is_up(&self, d: DeviceId) -> bool {
+        self.health[d.0 as usize] == DeviceHealth::Up
+    }
+
+    /// Devices currently accepting new placements.
+    pub fn up_devices(&self) -> impl Iterator<Item = DeviceId> + '_ {
+        (0..self.devices.len() as u32)
+            .map(DeviceId)
+            .filter(move |d| self.device_is_up(*d))
+    }
+
+    /// Declare `d` failed: mark it [`DeviceHealth::Down`], reclaim every
+    /// reservation it holds (core slots plus the orphans' future link
+    /// slots), and mark each orphaned task `PreemptedPendingRealloc` so the
+    /// policy can re-plan it through the preemption-reallocation path.
+    ///
+    /// Returns the orphans, high-priority first, then by ascending deadline
+    /// (the rescue claim order).
+    pub fn mark_device_down(&mut self, d: DeviceId, now: SimTime) -> Vec<TaskId> {
+        self.health[d.0 as usize] = DeviceHealth::Down;
+        let mut orphans: Vec<(bool, SimTime, TaskId)> = self
+            .tasks
+            .values()
+            .filter(|r| {
+                r.state.is_active_allocation()
+                    && r.allocation.as_ref().map(|a| a.device) == Some(d)
+            })
+            .map(|r| {
+                (
+                    r.spec.priority != Priority::High,
+                    r.spec.deadline,
+                    r.spec.id,
+                )
+            })
+            .collect();
+        orphans.sort_unstable_by_key(|&(low, deadline, id)| (low, deadline, id));
+        let orphans: Vec<TaskId> = orphans.into_iter().map(|(_, _, id)| id).collect();
+        for &id in &orphans {
+            let rec = self.tasks.get_mut(&id).expect("orphan came from the registry");
+            rec.state = TaskState::PreemptedPendingRealloc;
+            self.link.remove_owner_from(id, now);
+        }
+        // The dead device's whole calendar goes at once — every slot on it
+        // belonged to an orphan (completed/failed tasks already released
+        // theirs).
+        self.devices[d.0 as usize].clear();
+        orphans
+    }
+
     /// Union of completion time-points across every device in `(after,
     /// until]`, ascending — the LP scheduler's search set (§4).
     pub fn completion_points(&self, after: SimTime, until: SimTime) -> Vec<SimTime> {
@@ -152,6 +230,12 @@ impl NetworkState {
     /// (Link slots are reserved separately by the policy, which knows which
     /// messages the placement needs.)
     pub fn commit_allocation(&mut self, alloc: Allocation) -> Result<()> {
+        if !self.device_is_up(alloc.device) {
+            return Err(Error::Allocation(format!(
+                "placement on non-up device {}",
+                alloc.device
+            )));
+        }
         let rec = self
             .tasks
             .get(&alloc.task)
@@ -243,12 +327,19 @@ impl NetworkState {
         for d in &self.devices {
             d.check_invariants()?;
         }
-        // Every active allocation's reservation exists on its device.
+        // Every active allocation's reservation exists on its device, and
+        // that device is not one the controller has declared Down.
         for rec in self.tasks.values() {
             if rec.state.is_active_allocation() {
                 let alloc = rec.allocation.as_ref().ok_or_else(|| {
                     Error::Invariant(format!("{:?} active without allocation", rec.spec.id))
                 })?;
+                if self.device_health(alloc.device) == DeviceHealth::Down {
+                    return Err(Error::Invariant(format!(
+                        "{:?} active on downed device {}",
+                        rec.spec.id, alloc.device
+                    )));
+                }
                 let found = self.devices[alloc.device.0 as usize]
                     .slots()
                     .iter()
@@ -259,6 +350,15 @@ impl NetworkState {
                         rec.spec.id
                     )));
                 }
+            }
+        }
+        // A downed device's calendar must be fully reclaimed.
+        for (i, h) in self.health.iter().enumerate() {
+            if *h == DeviceHealth::Down && !self.devices[i].is_empty() {
+                return Err(Error::Invariant(format!(
+                    "downed dev{i} still holds {} core reservations",
+                    self.devices[i].len()
+                )));
             }
         }
         Ok(())
@@ -461,6 +561,111 @@ mod tests {
         let w = st.reserve_link_message(&cfg, SimTime::ZERO, SlotKind::HpAllocMsg, id);
         let expected = st.link_model.slot_duration(&cfg, SlotKind::HpAllocMsg);
         assert_eq!(w.duration(), expected);
+    }
+
+    #[test]
+    fn mark_device_down_orphans_and_reclaims() {
+        let (cfg, mut st) = state();
+        // HP task + LP task on device 1, LP task on device 2.
+        let hp = spec(&mut st, Priority::High, 3_000);
+        let lp1 = spec(&mut st, Priority::Low, 30_000);
+        let lp2 = spec(&mut st, Priority::Low, 20_000);
+        let (hp_id, lp1_id, lp2_id) = (hp.id, lp1.id, lp2.id);
+        for s in [hp, lp1, lp2] {
+            st.register_task(s);
+        }
+        st.commit_allocation(Allocation {
+            task: hp_id,
+            device: DeviceId(1),
+            window: win(0, 1_000),
+            cores: 1,
+            offloaded: false,
+        })
+        .unwrap();
+        st.commit_allocation(Allocation {
+            task: lp1_id,
+            device: DeviceId(1),
+            window: win(0, 17_000),
+            cores: 2,
+            offloaded: true,
+        })
+        .unwrap();
+        st.commit_allocation(Allocation {
+            task: lp2_id,
+            device: DeviceId(2),
+            window: win(0, 17_000),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+        // Future link slots for the device-1 tasks must be reclaimed.
+        st.reserve_link_message(&cfg, SimTime::from_millis(1_000), SlotKind::StateUpdate, hp_id);
+        st.reserve_link_message(&cfg, SimTime::from_millis(17_000), SlotKind::StateUpdate, lp1_id);
+        let link_before = st.link.len();
+
+        let orphans = st.mark_device_down(DeviceId(1), SimTime::from_millis(500));
+        assert_eq!(orphans, vec![hp_id, lp1_id], "HP first, survivor untouched");
+        assert_eq!(st.device_health(DeviceId(1)), DeviceHealth::Down);
+        assert!(!st.device_is_up(DeviceId(1)));
+        assert_eq!(st.device(DeviceId(1)).len(), 0, "core calendar reclaimed");
+        assert_eq!(st.link.len(), link_before - 2, "orphans' future link slots reclaimed");
+        for id in [hp_id, lp1_id] {
+            assert_eq!(st.task(id).unwrap().state, TaskState::PreemptedPendingRealloc);
+        }
+        // The untouched device keeps its reservation and the registry state.
+        assert_eq!(st.task(lp2_id).unwrap().state, TaskState::Allocated);
+        assert_eq!(st.device(DeviceId(2)).len(), 1);
+        // New placements on the downed device are rejected outright.
+        let late = spec(&mut st, Priority::Low, 40_000);
+        let late_id = late.id;
+        st.register_task(late);
+        assert!(st
+            .commit_allocation(Allocation {
+                task: late_id,
+                device: DeviceId(1),
+                window: win(20_000, 37_000),
+                cores: 2,
+                offloaded: true,
+            })
+            .is_err());
+        st.check_invariants().unwrap();
+        assert_eq!(st.up_devices().count(), st.num_devices() - 1);
+    }
+
+    #[test]
+    fn draining_devices_refuse_new_work_but_keep_old() {
+        let (_, mut st) = state();
+        let s = spec(&mut st, Priority::Low, 30_000);
+        let id = s.id;
+        st.register_task(s);
+        st.commit_allocation(Allocation {
+            task: id,
+            device: DeviceId(0),
+            window: win(0, 17_000),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+        st.set_device_health(DeviceId(0), DeviceHealth::Draining);
+        assert!(!st.device_is_up(DeviceId(0)));
+        // Existing reservation survives the drain.
+        assert_eq!(st.device(DeviceId(0)).len(), 1);
+        let s2 = spec(&mut st, Priority::Low, 40_000);
+        let id2 = s2.id;
+        st.register_task(s2);
+        assert!(st
+            .commit_allocation(Allocation {
+                task: id2,
+                device: DeviceId(0),
+                window: win(20_000, 37_000),
+                cores: 2,
+                offloaded: false,
+            })
+            .is_err());
+        // Rejoin makes it schedulable again.
+        st.set_device_health(DeviceId(0), DeviceHealth::Up);
+        assert!(st.device_is_up(DeviceId(0)));
+        st.check_invariants().unwrap();
     }
 
     #[test]

@@ -111,6 +111,9 @@ pub enum FailReason {
     Violated,
     /// Abandoned (e.g. the experiment ended, or its frame was dropped).
     Cancelled,
+    /// Orphaned by a device failure and not rescuable before its deadline
+    /// (network-dynamics extension, beyond the paper's static testbed).
+    DeviceLost,
 }
 
 /// Lifecycle state of a task.

@@ -13,6 +13,8 @@
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::task::DeviceId;
+use crate::time::{SimDuration, SimTime};
 use crate::util::rng::Rng;
 
 /// Per-device workload value for one frame.
@@ -212,6 +214,164 @@ pub struct FleetProfile {
     /// Dominant LP set size (1..=4) for frames that do spawn a DNN set;
     /// half the probability mass lands here, the rest splits evenly.
     pub lp_weight: u8,
+}
+
+// ---- network dynamics: scripted churn (beyond the paper) ----------------
+
+/// One scripted change to the network mid-run.
+///
+/// The paper's testbed is static; these events are the extension axis that
+/// exercises the preemption/reallocation machinery as a *failure-recovery*
+/// mechanism (see `scheduler`'s orphan rescue).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnEvent {
+    /// The device dies instantly: in-flight work is orphaned, no further
+    /// frames or state-updates are produced until (if ever) it rejoins.
+    Crash(DeviceId),
+    /// The device leaves gracefully: it finishes its in-flight work but
+    /// samples no new frames and accepts no new placements.
+    Drain(DeviceId),
+    /// A previously crashed device returns, empty, and becomes schedulable.
+    Rejoin(DeviceId),
+    /// The shared link's throughput drops to `factor` × nominal.
+    DegradeLink {
+        /// Throughput multiplier in `(0, 1]`.
+        factor: f64,
+    },
+    /// The shared link returns to nominal throughput.
+    RestoreLink,
+}
+
+/// Shape of a generated churn scenario — the trace-layer view of the
+/// `[dynamics]` config section (mirrors how [`FleetProfile`] views
+/// `[fleet]`).
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnProfile {
+    /// Share (%) of the fleet crashed during the churn window.
+    pub crash_pct: u8,
+    /// Share (%) of the fleet drained during the churn window.
+    pub drain_pct: u8,
+    /// Crashed devices rejoin this many seconds after their crash (0 = never).
+    pub rejoin_after_s: f64,
+    /// Churn window start, seconds.
+    pub churn_start_s: f64,
+    /// Churn window end, seconds.
+    pub churn_end_s: f64,
+    /// Link throughput multiplier during the degradation episode (1.0 = no
+    /// episode is scripted).
+    pub degrade_factor: f64,
+    /// Degradation episode start, seconds.
+    pub degrade_start_s: f64,
+    /// Degradation episode end, seconds.
+    pub degrade_end_s: f64,
+}
+
+/// A time-ordered script of churn events for one scenario run.
+///
+/// # Example
+///
+/// ```
+/// use pats::task::DeviceId;
+/// use pats::time::SimTime;
+/// use pats::trace::{ChurnEvent, ChurnScript};
+///
+/// let script = ChurnScript::from_events(vec![
+///     (SimTime::from_secs_f64(40.0), ChurnEvent::Rejoin(DeviceId(1))),
+///     (SimTime::from_secs_f64(10.0), ChurnEvent::Crash(DeviceId(1))),
+/// ]);
+/// // Events are sorted by time regardless of construction order.
+/// assert_eq!(script.events()[0].1, ChurnEvent::Crash(DeviceId(1)));
+/// assert_eq!(script.crashes(), 1);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct ChurnScript {
+    /// (fire time, event), ascending by time.
+    events: Vec<(SimTime, ChurnEvent)>,
+}
+
+impl ChurnScript {
+    /// An empty script: the static network of the paper.
+    pub fn none() -> ChurnScript {
+        ChurnScript::default()
+    }
+
+    /// Build from explicit events; sorts by time (stable, so same-instant
+    /// events keep their given order).
+    pub fn from_events(mut events: Vec<(SimTime, ChurnEvent)>) -> ChurnScript {
+        events.sort_by_key(|(t, _)| *t);
+        ChurnScript { events }
+    }
+
+    /// Generate a seeded script for `devices` devices from `profile`.
+    ///
+    /// Crash/drain victims are distinct devices drawn by shuffle; at least
+    /// one device always survives untouched so the network cannot vanish.
+    /// Crash and drain instants are uniform over the churn window, rejoins
+    /// (when enabled) follow each crash by `rejoin_after_s`, and a link
+    /// degradation episode is scripted when `degrade_factor < 1`.
+    pub fn generate(profile: &ChurnProfile, devices: usize, seed: u64) -> ChurnScript {
+        assert!(devices > 0, "empty network");
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC4A5);
+        let mut order: Vec<usize> = (0..devices).collect();
+        rng.shuffle(&mut order);
+        let n_crash = devices * profile.crash_pct.min(100) as usize / 100;
+        let n_drain = devices * profile.drain_pct.min(100) as usize / 100;
+        // Keep at least one untouched survivor.
+        let n_crash = n_crash.min(devices.saturating_sub(1));
+        let n_drain = n_drain.min(devices.saturating_sub(1) - n_crash);
+
+        let (lo, hi) = (profile.churn_start_s, profile.churn_end_s.max(profile.churn_start_s));
+        let mut events: Vec<(SimTime, ChurnEvent)> = Vec::new();
+        for &d in order.iter().take(n_crash) {
+            let at = SimTime::from_secs_f64(rng.range_f64(lo, hi));
+            let device = DeviceId(d as u32);
+            events.push((at, ChurnEvent::Crash(device)));
+            if profile.rejoin_after_s > 0.0 {
+                events.push((
+                    at + SimDuration::from_secs_f64(profile.rejoin_after_s),
+                    ChurnEvent::Rejoin(device),
+                ));
+            }
+        }
+        for &d in order.iter().skip(n_crash).take(n_drain) {
+            let at = SimTime::from_secs_f64(rng.range_f64(lo, hi));
+            events.push((at, ChurnEvent::Drain(DeviceId(d as u32))));
+        }
+        if profile.degrade_factor < 1.0 {
+            events.push((
+                SimTime::from_secs_f64(profile.degrade_start_s),
+                ChurnEvent::DegradeLink { factor: profile.degrade_factor },
+            ));
+            events.push((
+                SimTime::from_secs_f64(profile.degrade_end_s.max(profile.degrade_start_s)),
+                ChurnEvent::RestoreLink,
+            ));
+        }
+        ChurnScript::from_events(events)
+    }
+
+    /// The scripted events, ascending by fire time.
+    pub fn events(&self) -> &[(SimTime, ChurnEvent)] {
+        &self.events
+    }
+
+    /// Number of scripted events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing is scripted (the paper's static network).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of crash events in the script.
+    pub fn crashes(&self) -> u64 {
+        self.events
+            .iter()
+            .filter(|(_, e)| matches!(e, ChurnEvent::Crash(_)))
+            .count() as u64
+    }
 }
 
 /// A complete workload trace: `cycles × devices` frame values.
@@ -527,6 +687,93 @@ mod tests {
         };
         // Peak of the sine (cycle 4) vs trough (cycle 12).
         assert!(active(4) > active(12) + 10, "peak {} trough {}", active(4), active(12));
+    }
+
+    fn churn_profile() -> ChurnProfile {
+        ChurnProfile {
+            crash_pct: 25,
+            drain_pct: 25,
+            rejoin_after_s: 0.0,
+            churn_start_s: 10.0,
+            churn_end_s: 50.0,
+            degrade_factor: 1.0,
+            degrade_start_s: 0.0,
+            degrade_end_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn churn_script_is_seeded_and_sorted() {
+        let p = churn_profile();
+        let a = ChurnScript::generate(&p, 16, 3);
+        let b = ChurnScript::generate(&p, 16, 3);
+        let c = ChurnScript::generate(&p, 16, 4);
+        assert_eq!(a.events(), b.events());
+        assert_ne!(a.events(), c.events());
+        assert_eq!(a.crashes(), 4, "25 % of 16 devices crash");
+        assert!(a.events().windows(2).all(|w| w[0].0 <= w[1].0), "sorted by time");
+        for (t, _) in a.events() {
+            let s = t.as_secs_f64();
+            assert!((10.0..=50.0).contains(&s), "churn at {s} outside window");
+        }
+    }
+
+    #[test]
+    fn churn_victims_are_distinct_and_leave_a_survivor() {
+        let mut p = churn_profile();
+        p.crash_pct = 100; // clamped: someone must survive
+        p.drain_pct = 100;
+        let s = ChurnScript::generate(&p, 8, 1);
+        let mut touched = std::collections::BTreeSet::new();
+        for (_, e) in s.events() {
+            match e {
+                ChurnEvent::Crash(d) | ChurnEvent::Drain(d) => {
+                    assert!(touched.insert(d.0), "device {d} churned twice");
+                }
+                _ => {}
+            }
+        }
+        assert!(touched.len() < 8, "at least one device survives untouched");
+    }
+
+    #[test]
+    fn rejoins_follow_their_crash() {
+        let mut p = churn_profile();
+        p.drain_pct = 0;
+        p.rejoin_after_s = 30.0;
+        let s = ChurnScript::generate(&p, 8, 9);
+        let crashes: Vec<(SimTime, u32)> = s
+            .events()
+            .iter()
+            .filter_map(|(t, e)| match e {
+                ChurnEvent::Crash(d) => Some((*t, d.0)),
+                _ => None,
+            })
+            .collect();
+        assert!(!crashes.is_empty());
+        for (t, d) in crashes {
+            let rejoin = s
+                .events()
+                .iter()
+                .find(|(_, e)| *e == ChurnEvent::Rejoin(DeviceId(d)))
+                .unwrap_or_else(|| panic!("no rejoin for dev{d}"));
+            assert_eq!(rejoin.0, t + crate::time::SimDuration::from_secs_f64(30.0));
+        }
+    }
+
+    #[test]
+    fn degradation_episode_scripted_when_factor_below_one() {
+        let mut p = churn_profile();
+        p.crash_pct = 0;
+        p.drain_pct = 0;
+        p.degrade_factor = 0.5;
+        p.degrade_start_s = 20.0;
+        p.degrade_end_s = 35.0;
+        let s = ChurnScript::generate(&p, 4, 2);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.events()[0].1, ChurnEvent::DegradeLink { factor: 0.5 });
+        assert_eq!(s.events()[1].1, ChurnEvent::RestoreLink);
+        assert!(ChurnScript::none().is_empty());
     }
 
     #[test]

@@ -8,25 +8,22 @@
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
     samples: Vec<f64>,
-    sorted: bool,
 }
 
 impl Summary {
     /// Empty summary.
     pub fn new() -> Self {
-        Summary { samples: Vec::new(), sorted: true }
+        Summary { samples: Vec::new() }
     }
 
     /// Add one sample.
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
-        self.sorted = false;
     }
 
     /// Merge another summary into this one.
     pub fn merge(&mut self, other: &Summary) {
         self.samples.extend_from_slice(&other.samples);
-        self.sorted = false;
     }
 
     /// Number of samples.
@@ -71,28 +68,30 @@ impl Summary {
 
     /// Exact percentile by linear interpolation between closest ranks.
     /// `q` in [0, 100]. Returns 0.0 when empty.
-    pub fn percentile(&mut self, q: f64) -> f64 {
+    ///
+    /// Sorts a copy of the samples on each call so that reporting stays
+    /// `&self`; percentiles are only read a handful of times per run, so
+    /// the copy is far cheaper than infecting every report path with
+    /// `&mut self`.
+    pub fn percentile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
-        if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            self.sorted = true;
-        }
-        let n = self.samples.len();
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let n = sorted.len();
         if n == 1 {
-            return self.samples[0];
+            return sorted[0];
         }
         let rank = (q / 100.0) * (n as f64 - 1.0);
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
         let frac = rank - lo as f64;
-        self.samples[lo] * (1.0 - frac) + self.samples[hi.min(n - 1)] * frac
+        sorted[lo] * (1.0 - frac) + sorted[hi.min(n - 1)] * frac
     }
 
     /// Median (p50).
-    pub fn median(&mut self) -> f64 {
+    pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }
 
@@ -168,7 +167,7 @@ mod tests {
 
     #[test]
     fn empty_summary_is_zeroes() {
-        let mut s = Summary::new();
+        let s = Summary::new();
         assert_eq!(s.count(), 0);
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.std_dev(), 0.0);

@@ -20,10 +20,13 @@ use std::collections::VecDeque;
 
 use crate::config::SystemConfig;
 use crate::resources::SlotKind;
-use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, PreemptionReport};
+use crate::scheduler::rescue::relocate_hp;
+use crate::scheduler::{
+    HpOutcome, HpRescue, LpOutcome, LpPlacement, Policy, PreemptionReport, RescueOutcome,
+};
 use crate::state::NetworkState;
 use crate::task::{
-    Allocation, CoreConfig, DeviceId, FailReason, RequestId, TaskId, Window,
+    Allocation, CoreConfig, DeviceId, FailReason, Priority, RequestId, TaskId, Window,
 };
 use crate::time::SimTime;
 use crate::util::rng::Rng;
@@ -133,6 +136,10 @@ impl Workstealer {
         now: SimTime,
     ) -> Vec<LpPlacement> {
         let mut placements = Vec::new();
+        // Network-dynamics: a draining/downed device pulls no new work.
+        if !st.device_is_up(dev) {
+            return placements;
+        }
         let mut stole_remote = false;
         loop {
             // Core availability *now*: the myopic horizon is one LP slot.
@@ -342,6 +349,10 @@ impl Policy for Workstealer {
         };
         let source = rec.spec.source;
         let deadline = rec.spec.deadline;
+        // Network-dynamics: a draining/downed source takes no new work.
+        if !st.device_is_up(source) {
+            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+        }
         let window = Window::from_duration(now, cfg.hp_slot());
         if window.end <= deadline && st.device(source).fits(&window, 1) {
             st.commit_allocation(Allocation { task, device: source, window, cores: 1, offloaded: false })
@@ -438,6 +449,69 @@ impl Policy for Workstealer {
 
     fn poll_interval(&self) -> Option<f64> {
         Some(self.poll_interval_s)
+    }
+
+    /// Stealer-flavoured rescue: low-priority orphans go back on a queue
+    /// (their rescue is a later steal — mirroring how this policy already
+    /// treats preemption victims), high-priority orphans get one immediate
+    /// relocation attempt, with the preemption variant allowed to evict.
+    fn rescue_orphans(
+        &mut self,
+        st: &mut NetworkState,
+        cfg: &SystemConfig,
+        orphans: &[TaskId],
+        now: SimTime,
+    ) -> RescueOutcome {
+        let mut out = RescueOutcome::default();
+        for &task in orphans {
+            let Some(rec) = st.task(task) else { continue };
+            if rec.state.is_terminal() {
+                continue;
+            }
+            let (priority, source, deadline) =
+                (rec.spec.priority, rec.spec.source, rec.spec.deadline);
+            match priority {
+                Priority::Low => {
+                    if now >= deadline {
+                        out.lost.push((task, Priority::Low));
+                    } else {
+                        self.enqueue(task, source);
+                        out.lp_requeued.push(task);
+                    }
+                }
+                Priority::High => {
+                    let attempt = relocate_hp(st, cfg, task, now, self.preemption);
+                    let report = attempt.victim.map(|(victim, cores, was_running)| {
+                        // Like this policy's preemption path: the victim's
+                        // reallocation is a later steal.
+                        let victim_source = st.task(victim).unwrap().spec.source;
+                        self.enqueue(victim, victim_source);
+                        PreemptionReport {
+                            victim,
+                            victim_cores: cores,
+                            victim_was_running: was_running,
+                            reallocation: None,
+                            realloc_search: std::time::Duration::ZERO,
+                        }
+                    });
+                    match attempt.window {
+                        Some((device, window)) => out.hp_rescued.push(HpRescue {
+                            task,
+                            device,
+                            window,
+                            preemption: report,
+                        }),
+                        None => {
+                            // The orphan is lost; a fired eviction (victim
+                            // already requeued above) still counts.
+                            out.lost.push((task, Priority::High));
+                            out.failed_rescue_evictions.extend(report);
+                        }
+                    }
+                }
+            }
+        }
+        out
     }
 
     fn name(&self) -> &'static str {
@@ -679,6 +753,74 @@ mod tests {
             st.task(queued_task).unwrap().state,
             TaskState::Failed(FailReason::NoResources)
         );
+    }
+
+    #[test]
+    fn rescue_requeues_lp_and_relocates_hp() {
+        use crate::scheduler::Policy as _;
+        let (cfg, mut st, mut ws) = setup(Mode::Central, true);
+        // One HP + one LP task hosted on device 0 when it dies. The HP
+        // deadline leaves room for detection + relocation.
+        let hp_id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id: hp_id,
+            frame: FrameId(0),
+            source: DeviceId(0),
+            priority: Priority::High,
+            deadline: SimTime::from_secs_f64(5.0),
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        st.commit_allocation(Allocation {
+            task: hp_id,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(1.0)),
+            cores: 1,
+            offloaded: false,
+        })
+        .unwrap();
+        let rid = lp_request(&mut st, 0, 1, 60.0);
+        let lp_id = st.request(rid).unwrap().tasks[0];
+        st.commit_allocation(Allocation {
+            task: lp_id,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+        let now = SimTime::from_millis(500);
+        let orphans = st.mark_device_down(DeviceId(0), now);
+        assert_eq!(orphans, vec![hp_id, lp_id], "HP gets first claim");
+        let out = ws.rescue_orphans(&mut st, &cfg, &orphans, now);
+        // The HP orphan is adopted by an idle device immediately.
+        assert_eq!(out.hp_rescued.len(), 1);
+        assert_ne!(out.hp_rescued[0].device, DeviceId(0));
+        // The LP orphan waits on the queue for a future steal.
+        assert_eq!(out.lp_requeued, vec![lp_id]);
+        assert_eq!(ws.queued(), 1);
+        assert!(out.lost.is_empty());
+        // A subsequent poll on a live device picks the requeued orphan up.
+        let placements = ws.poll(&mut st, &cfg, DeviceId(1), now);
+        assert!(placements.iter().any(|p| p.task == lp_id));
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn downed_devices_pull_no_work() {
+        use crate::scheduler::Policy as _;
+        let (cfg, mut st, mut ws) = setup(Mode::Central, false);
+        st.mark_device_down(DeviceId(2), SimTime::ZERO);
+        let rid = lp_request(&mut st, 0, 4, 60.0);
+        let out = ws.allocate_lp(&mut st, &cfg, rid, SimTime::ZERO);
+        assert!(out.placements.is_empty());
+        // The downed device's poll is a no-op; its queue share stays put.
+        assert!(ws.poll(&mut st, &cfg, DeviceId(2), SimTime::ZERO).is_empty());
+        for rec in st.tasks() {
+            if let Some(alloc) = &rec.allocation {
+                assert_ne!(alloc.device, DeviceId(2));
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Network-dynamics integration: churn scenarios are deterministic, a
+//! crashed device's tasks are rescued or counted lost (never silently
+//! dropped), and failure detection reclaims every reservation the dead
+//! device held.
+
+use pats::config::SystemConfig;
+use pats::coordinator::Controller;
+use pats::metrics::ScenarioMetrics;
+use pats::scheduler::PatsScheduler;
+use pats::sim::run_scenario_dynamic;
+use pats::task::{DeviceId, FrameId, TaskState};
+use pats::time::{SimDuration, SimTime};
+use pats::trace::{ChurnEvent, ChurnScript, FleetPattern, FleetProfile, Trace};
+
+fn conserved(m: &ScenarioMetrics) {
+    assert_eq!(
+        m.hp_completed + m.hp_failed_alloc + m.hp_violated + m.hp_lost_churn,
+        m.hp_generated,
+        "HP conservation under churn"
+    );
+    assert_eq!(
+        m.lp_completed + m.lp_failed_alloc + m.lp_failed_preempted + m.lp_violated
+            + m.lp_lost_churn,
+        m.lp_generated,
+        "LP conservation under churn"
+    );
+    assert_eq!(m.hp_orphaned, m.hp_rescued + m.hp_lost_churn);
+    assert_eq!(m.lp_orphaned, m.lp_rescued + m.lp_requeued_churn + m.lp_lost_churn);
+    assert_eq!(
+        m.frames_completed + m.frames_failed_hp + m.frames_failed_lp + m.frames_lost_churn,
+        m.frames_total
+    );
+}
+
+#[test]
+fn seeded_churn_scenario_is_deterministic() {
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 16;
+    cfg.frames = 48; // 3 cycles over 16 devices
+    cfg.dynamics.detect_delay_s = 0.5;
+    let profile = FleetProfile {
+        pattern: FleetPattern::Steady,
+        hp_only_pct: 20,
+        lp_weight: 2,
+    };
+    let trace = Trace::generate_fleet(&profile, 16, 3, cfg.seed);
+    let churn = pats::trace::ChurnProfile {
+        crash_pct: 25,
+        drain_pct: 12,
+        rejoin_after_s: 0.0,
+        churn_start_s: 5.0,
+        churn_end_s: 40.0,
+        degrade_factor: 0.8,
+        degrade_start_s: 10.0,
+        degrade_end_s: 30.0,
+    };
+    let script = ChurnScript::generate(&churn, 16, cfg.seed);
+    assert!(script.crashes() > 0);
+    let a = run_scenario_dynamic(&cfg, &trace, &script, "churn-a").metrics;
+    let b = run_scenario_dynamic(&cfg, &trace, &script, "churn-b").metrics;
+    for (x, y) in [
+        (a.frames_completed, b.frames_completed),
+        (a.frames_lost_churn, b.frames_lost_churn),
+        (a.hp_generated, b.hp_generated),
+        (a.hp_completed, b.hp_completed),
+        (a.hp_orphaned, b.hp_orphaned),
+        (a.hp_rescued, b.hp_rescued),
+        (a.hp_lost_churn, b.hp_lost_churn),
+        (a.lp_generated, b.lp_generated),
+        (a.lp_completed, b.lp_completed),
+        (a.lp_orphaned, b.lp_orphaned),
+        (a.lp_lost_churn, b.lp_lost_churn),
+        (a.preemptions, b.preemptions),
+        (a.devices_crashed, b.devices_crashed),
+        (a.devices_drained, b.devices_drained),
+    ] {
+        assert_eq!(x, y, "counter differs between identical seeded runs");
+    }
+    conserved(&a);
+}
+
+/// A perfectly synchronised single-cycle scenario puts one HP task in
+/// flight on every device; crashing device 0 mid-window orphans exactly
+/// that task, and the idle survivors adopt it: the crashed device's HP task
+/// completes elsewhere — or is counted lost — never silently dropped.
+#[test]
+fn crashed_devices_hp_task_is_rescued_or_counted_lost() {
+    let mut cfg = SystemConfig::default();
+    cfg.frames = 4;
+    cfg.staggered_pairs = false;
+    cfg.max_start_offset_s = 0.0;
+    cfg.max_clock_skew = SimDuration::ZERO;
+    cfg.hp_deadline_s = 4.0; // leave room for detection + relocation
+    cfg.dynamics.detect_delay_s = 0.3;
+    let trace = Trace::parse("0 0 0 0\n").unwrap(); // HP-only, one cycle
+    let script = ChurnScript::from_events(vec![(
+        SimTime::from_secs_f64(0.5),
+        ChurnEvent::Crash(DeviceId(0)),
+    )]);
+    let m = run_scenario_dynamic(&cfg, &trace, &script, "hp-rescue").metrics;
+    assert_eq!(m.hp_generated, 4);
+    assert_eq!(m.devices_crashed, 1);
+    assert_eq!(m.failures_detected, 1);
+    assert_eq!(m.hp_orphaned, 1, "exactly the crashed device's stage-2 task");
+    assert_eq!(m.hp_rescued, 1, "three idle survivors: the orphan relocates");
+    assert_eq!(m.hp_lost_churn, 0);
+    conserved(&m);
+
+    // With detection arriving after the paper's tight deadline, the same
+    // orphan is unsalvageable — and still fully accounted.
+    cfg.hp_deadline_s = 1.5;
+    let m = run_scenario_dynamic(&cfg, &trace, &script, "hp-lost").metrics;
+    assert_eq!(m.hp_orphaned, 1);
+    assert_eq!(m.hp_rescued, 0, "1.5 s deadline minus detection leaves no room");
+    assert_eq!(m.hp_lost_churn, 1);
+    conserved(&m);
+}
+
+/// Controller-level reclamation property: after failure detection, no core
+/// slot on the dead device survives, and no orphan owns a future link slot.
+#[test]
+fn failure_detection_reclaims_every_dead_reservation() {
+    let mut cfg = SystemConfig::default();
+    cfg.hp_deadline_s = 4.0;
+    let policy = PatsScheduler::from_config(&cfg);
+    let mut c = Controller::new(cfg, policy);
+
+    // Load the network: one HP task per device, then a 4-task DNN set from
+    // device 0 so offloads land across the network.
+    for d in 0..4u32 {
+        let (_, _, out) = c.handle_hp_request(FrameId(d as u64), DeviceId(d), SimTime::ZERO);
+        assert!(out.allocated());
+    }
+    let deadline = SimTime::from_secs_f64(18.86);
+    let (_, _, lp_out) =
+        c.handle_lp_request(FrameId(0), DeviceId(0), 4, deadline, SimTime::from_millis(10));
+    assert!(lp_out.fully_allocated());
+    let victims: Vec<_> = lp_out
+        .placements
+        .iter()
+        .filter(|p| p.device == DeviceId(1))
+        .map(|p| p.task)
+        .collect();
+
+    let detect_at = SimTime::from_secs_f64(0.5);
+    let outcome = c.handle_device_failure(DeviceId(1), detect_at);
+    assert!(outcome.total() >= 1 + victims.len(), "HP + hosted LP tasks orphaned");
+
+    // 1. The dead device's core calendar is empty and stays unschedulable.
+    assert_eq!(c.state.device(DeviceId(1)).len(), 0);
+    assert!(!c.state.device_is_up(DeviceId(1)));
+
+    // 2. No surviving timeline slot — core or link — is owned by a task
+    //    that is (terminally) lost to the device failure.
+    for rec in c.state.tasks() {
+        if rec.state == TaskState::Failed(pats::task::FailReason::DeviceLost) {
+            let id = rec.spec.id;
+            for d in 0..4u32 {
+                assert!(
+                    c.state.device(DeviceId(d)).slots().iter().all(|s| s.task != id),
+                    "lost orphan {id:?} still holds cores on dev{d}"
+                );
+            }
+            assert!(
+                c.state
+                    .link
+                    .slots()
+                    .iter()
+                    .all(|s| s.owner != id || s.window.start < detect_at),
+                "lost orphan {id:?} still owns future link slots"
+            );
+        }
+    }
+
+    // 3. Rescued orphans hold reservations only on live devices.
+    for rescue in &outcome.hp_rescued {
+        assert_ne!(rescue.device, DeviceId(1));
+    }
+    for p in &outcome.lp_rescued {
+        assert_ne!(p.device, DeviceId(1));
+    }
+    c.state.check_invariants().unwrap();
+}
+
+/// The preemption-aware scheduler rescues orphans a no-preemption run must
+/// lose: on a saturated network a rescue needs an eviction.
+#[test]
+fn preemption_rescues_strictly_more_on_a_saturated_network() {
+    let run = |preemption: bool| {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 3;
+        cfg.hp_deadline_s = 5.0;
+        cfg.preemption = preemption;
+        let policy = PatsScheduler::from_config(&cfg);
+        let mut c = Controller::new(cfg, policy);
+        // Device 0 hosts an HP task; devices 1 and 2 are saturated with
+        // preemptible DNN work (two 2-core tasks each).
+        let (_, _, out) = c.handle_hp_request(FrameId(0), DeviceId(0), SimTime::ZERO);
+        assert!(out.allocated());
+        let deadline = SimTime::from_secs_f64(30.0);
+        for d in 1..3u32 {
+            let (_, _, lp) = c.handle_lp_request(
+                FrameId(d as u64),
+                DeviceId(d),
+                2,
+                deadline,
+                SimTime::from_millis(5),
+            );
+            assert!(lp.fully_allocated());
+        }
+        c.handle_device_failure(DeviceId(0), SimTime::from_secs_f64(0.5))
+    };
+    let with = run(true);
+    let without = run(false);
+    assert_eq!(with.hp_rescued.len(), 1, "eviction frees a core for the orphan");
+    assert!(with.lost.is_empty());
+    assert_eq!(without.hp_rescued.len(), 0, "no free core, no eviction allowed");
+    assert_eq!(without.lost.len(), 1);
+    assert!(
+        with.hp_rescued.len() > without.hp_rescued.len(),
+        "preemption-aware rescue strictly dominates"
+    );
+}

@@ -16,14 +16,14 @@ fn lp_accounted(m: &ScenarioMetrics) {
 fn fleet_sweep_runs_each_size_to_completion() {
     let mut cfg = SystemConfig::default();
     cfg.fleet.cycles = 2;
-    let mut rows = fleet_scale(&cfg, &[4, 32, 64]);
+    let rows = fleet_scale(&cfg, &[4, 32, 64]);
     assert_eq!(rows.len(), 3);
     for row in &rows {
         assert_eq!(row.metrics.frames_total, (row.devices * 2) as u64);
         assert!(row.metrics.hp_generated > 0, "{} devices: no HP load", row.devices);
         lp_accounted(&row.metrics);
     }
-    let table = fleet_scale_table(&mut rows);
+    let table = fleet_scale_table(&rows);
     for needle in ["| 4 |", "| 32 |", "| 64 |"] {
         assert!(table.contains(needle), "missing row {needle}");
     }

@@ -53,9 +53,9 @@ fn finding2_preemption_costs_lp_set_completion() {
     //  each late stage pipeline" (per-request completion drops).
     let mut cfg = mid_cfg();
     cfg.preemption = true;
-    let mut with = run(&cfg, Distribution::Uniform, "UPS");
+    let with = run(&cfg, Distribution::Uniform, "UPS");
     cfg.preemption = false;
-    let mut without = run(&cfg, Distribution::Uniform, "UNPS");
+    let without = run(&cfg, Distribution::Uniform, "UNPS");
     assert!(
         with.lp_per_request_pct() < without.lp_per_request_pct(),
         "preemption per-request {:.2} must be below non-preemption {:.2}",
