@@ -4,10 +4,18 @@
 
 use pats::bench::{bench_with_setup, section};
 use pats::config::SystemConfig;
+use pats::scheduler::plan::PlacementPlan;
 use pats::scheduler::{PatsScheduler, Policy};
 use pats::state::NetworkState;
 use pats::task::{Allocation, DeviceId, FrameId, LpRequest, Priority, TaskSpec, Window};
 use pats::time::SimTime;
+
+/// Commit one placement through the transactional planning layer.
+fn place(st: &mut NetworkState, alloc: Allocation) {
+    let mut plan = PlacementPlan::new(st);
+    plan.stage_placement(st, alloc).unwrap();
+    st.apply(plan).unwrap();
+}
 
 /// Build a network state pre-loaded with `load` low-priority allocations
 /// spread across devices (the paper's search-time driver, §6.3).
@@ -26,14 +34,13 @@ fn loaded_state(cfg: &SystemConfig, load: usize) -> NetworkState {
             spawn: SimTime::ZERO,
             request: None,
         });
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: id,
             device: dev,
             window: Window::from_duration(start, cfg.lp_slot(2)),
             cores: 2,
             offloaded: false,
-        })
-        .unwrap();
+        });
     }
     st
 }
@@ -118,14 +125,13 @@ fn main() {
                     spawn: SimTime::ZERO,
                     request: None,
                 });
-                st.commit_allocation(Allocation {
+                place(&mut st, Allocation {
                     task: blocker,
                     device: DeviceId(0),
                     window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
                     cores: 4,
                     offloaded: false,
-                })
-                .unwrap();
+                });
                 let task = hp_spec(&mut st, &cfg);
                 (st, task, PatsScheduler { preemption: true, reallocate: true, set_aware_victims: false })
             },

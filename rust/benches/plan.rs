@@ -1,0 +1,220 @@
+//! Transactional-plan admission throughput (writes `BENCH_plan.json`).
+//!
+//! The planning layer trades direct mutate-and-rollback for staged
+//! scratch-copy transactions; this bench tracks what that costs on the
+//! admission hot paths across the fleet sizes of the PR 1 sweep
+//! (`fleet.sweep_sizes`, default 4/64/256/1024 devices):
+//!
+//! * `lp_admit_batched` — one 4-task request admitted as ONE plan
+//!   (`allocate_request`), the production path.
+//! * `lp_admit_per_task` — the same four tasks admitted as four separate
+//!   single-task transactions (`allocate_single`), the shape of the
+//!   pre-plan path that re-read completion points between siblings. The
+//!   batched path should stay at or below this line.
+//! * `hp_admit` — the three-slot high-priority plan.
+//! * `plan_open_drop` — open a plan against a loaded state and drop it
+//!   untouched (the fixed floor a *rejected* candidate plan pays).
+
+use pats::bench::{bench_with_setup, section, write_json, BenchResult};
+use pats::config::SystemConfig;
+use pats::scheduler::plan::PlacementPlan;
+use pats::scheduler::{PatsScheduler, Policy};
+use pats::state::NetworkState;
+use pats::task::{Allocation, DeviceId, FrameId, LpRequest, Priority, RequestId, TaskId, TaskSpec, Window};
+use pats::time::{SimDuration, SimTime};
+
+/// A state with `devices` devices, pre-loaded with ~2 LP allocations per
+/// device plus their state-update link slots — the paper's search-time
+/// driver scaled to fleet size.
+fn loaded_state(devices: usize) -> (SystemConfig, NetworkState) {
+    let mut cfg = SystemConfig::default();
+    cfg.devices = devices;
+    let mut st = NetworkState::new(&cfg);
+    // Register everything first, then stage the whole pre-load as ONE plan:
+    // the link scratch is forked once instead of once per placement.
+    let mut specs = Vec::new();
+    for i in 0..devices * 2 {
+        let id = st.fresh_task_id();
+        let dev = DeviceId((i % devices) as u32);
+        let start = SimTime::from_secs_f64(25.0 + (i / devices) as f64 * 19.0);
+        let deadline = start + SimDuration::from_secs_f64(60.0);
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(i as u64),
+            source: dev,
+            priority: Priority::Low,
+            deadline,
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        specs.push((id, dev, start));
+    }
+    let update_dur = st.link_model.slot_duration(&cfg, pats::resources::SlotKind::StateUpdate);
+    let mut plan = PlacementPlan::new(&st);
+    for (id, dev, start) in specs {
+        plan.stage_placement(&st, Allocation {
+            task: id,
+            device: dev,
+            window: Window::from_duration(start, cfg.lp_slot(2)),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+        plan.stage_link_earliest(
+            &st,
+            start + cfg.lp_slot(2),
+            update_dur,
+            pats::resources::SlotKind::StateUpdate,
+            id,
+        );
+    }
+    st.apply(plan).unwrap();
+    (cfg, st)
+}
+
+fn lp_request(st: &mut NetworkState, n: usize) -> (RequestId, Vec<TaskId>) {
+    let rid = st.fresh_request_id();
+    let deadline = SimTime::from_secs_f64(18.86);
+    let mut tasks = Vec::new();
+    for _ in 0..n {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(u64::MAX),
+            source: DeviceId(0),
+            priority: Priority::Low,
+            deadline,
+            spawn: SimTime::ZERO,
+            request: Some(rid),
+        });
+        tasks.push(id);
+    }
+    st.register_request(LpRequest {
+        id: rid,
+        frame: FrameId(u64::MAX),
+        source: DeviceId(0),
+        deadline,
+        spawn: SimTime::ZERO,
+        tasks: tasks.clone(),
+    });
+    (rid, tasks)
+}
+
+fn hp_spec(st: &mut NetworkState, cfg: &SystemConfig) -> TaskId {
+    let id = st.fresh_task_id();
+    st.register_task(TaskSpec {
+        id,
+        frame: FrameId(u64::MAX - 1),
+        source: DeviceId(0),
+        priority: Priority::High,
+        deadline: SimTime::from_secs_f64(cfg.hp_deadline_s),
+        spawn: SimTime::ZERO,
+        request: None,
+    });
+    id
+}
+
+fn show(results: &mut Vec<BenchResult>, r: BenchResult) {
+    println!("{}", r.render());
+    results.push(r);
+}
+
+fn main() {
+    let sizes = SystemConfig::default().fleet.sweep_sizes.clone();
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    for &devices in &sizes {
+        section(&format!("admission at {devices} devices"));
+        // Per-iteration setup rebuilds the loaded fleet; keep wall time
+        // bounded at the big end of the sweep.
+        let (warmup, iters) = if devices >= 256 { (3u32, 40u32) } else { (10, 150) };
+
+        let r = bench_with_setup(
+            &format!("lp_admit_batched/devices={devices}"),
+            warmup,
+            iters,
+            || {
+                let (cfg, mut st) = loaded_state(devices);
+                let (rid, _) = lp_request(&mut st, 4);
+                (cfg, st, rid)
+            },
+            |(cfg, mut st, rid)| {
+                let mut sched = PatsScheduler::from_config(&cfg);
+                let out = sched.allocate_lp(&mut st, &cfg, rid, SimTime::ZERO);
+                assert!(out.fully_allocated(), "idle fleet must admit the set");
+                out
+            },
+        );
+        show(&mut results, r);
+
+        let r = bench_with_setup(
+            &format!("lp_admit_per_task/devices={devices}"),
+            warmup,
+            iters,
+            || {
+                let (cfg, mut st) = loaded_state(devices);
+                let (_, tasks) = lp_request(&mut st, 4);
+                (cfg, st, tasks)
+            },
+            |(cfg, mut st, tasks)| {
+                for &t in &tasks {
+                    let p = pats::scheduler::low_priority::allocate_single(
+                        &mut st,
+                        &cfg,
+                        t,
+                        SimTime::ZERO,
+                    );
+                    assert!(p.is_some());
+                }
+            },
+        );
+        show(&mut results, r);
+
+        let r = bench_with_setup(
+            &format!("hp_admit/devices={devices}"),
+            warmup,
+            iters,
+            || {
+                let (cfg, mut st) = loaded_state(devices);
+                let task = hp_spec(&mut st, &cfg);
+                (cfg, st, task)
+            },
+            |(cfg, mut st, task)| {
+                let mut sched = PatsScheduler::from_config(&cfg);
+                let out = sched.allocate_hp(&mut st, &cfg, task, SimTime::ZERO);
+                assert!(out.allocated());
+                out
+            },
+        );
+        show(&mut results, r);
+
+        let r = bench_with_setup(
+            &format!("plan_open_drop/devices={devices}"),
+            warmup,
+            iters * 2,
+            || loaded_state(devices),
+            |(cfg, st)| {
+                // The floor a rejected candidate pays: fork the link
+                // scratch with one staged slot, then drop everything.
+                let mut plan = PlacementPlan::new(&st);
+                let dur = st
+                    .link_model
+                    .slot_duration(&cfg, pats::resources::SlotKind::LpAllocMsg);
+                plan.stage_link_earliest(
+                    &st,
+                    SimTime::ZERO,
+                    dur,
+                    pats::resources::SlotKind::LpAllocMsg,
+                    TaskId(u64::MAX),
+                );
+                drop(plan);
+            },
+        );
+        show(&mut results, r);
+    }
+
+    match write_json("plan", &results) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench JSON: {e}"),
+    }
+}

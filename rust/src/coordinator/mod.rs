@@ -365,7 +365,7 @@ mod tests {
         assert_eq!(c.state.device(DeviceId(0)).len(), 0);
         assert!(c
             .state
-            .link
+            .link()
             .slots()
             .iter()
             .all(|s| s.owner != id || s.window.start < detect_at));

@@ -17,11 +17,16 @@
 //!   per-device CPU cores (variable-length slots, per the paper §3).
 //! * [`task`] — frames, pipeline stages, priorities, deadlines, partition
 //!   configurations, request sets.
-//! * [`state`] — the controller's tracked view of the network.
+//! * [`state`] — the controller's tracked view of the network. Placement
+//!   mutations go through one transactional door,
+//!   [`state::NetworkState::apply`].
 //! * [`scheduler`] — **the paper's contribution**: the high-priority
 //!   allocation algorithm (± preemption), the low-priority time-point search
 //!   with partial allocation and the improvement pass, and the preemption
-//!   mechanism with victim selection + reallocation.
+//!   mechanism with victim selection + reallocation — all built on
+//!   [`scheduler::plan`], the stage → validate → commit planning layer
+//!   (batched admission, candidate-plan search, atomicity by
+//!   construction).
 //! * [`workstealer`] — centralised and decentralised baselines (± preemption).
 //! * [`coordinator`] — the controller: job queue, message processing,
 //!   master–worker orchestration.

@@ -51,39 +51,66 @@ impl CoreTimeline {
         self.slots.is_empty()
     }
 
-    /// Peak core usage over `window` from existing reservations.
-    ///
-    /// Exact: evaluates usage at every reservation start within the window
-    /// (usage is a step function that only increases at starts). O(k²) in
-    /// the overlapping reservations, but k stays tiny (≤ a handful per
-    /// device after pruning); a sweep-line variant was measured ~4 % slower
-    /// at real workload sizes (EXPERIMENTS.md §Perf iteration 3).
-    pub fn peak_usage_in(&self, window: &Window) -> u32 {
-        let mut peak = self.usage_at(window.start);
+    /// The shared step-function evaluator behind every usage/fit query:
+    /// usage at instant `t`, optionally pretending `excluded`'s
+    /// reservations do not exist.
+    fn usage_at_excluding(&self, t: SimTime, excluded: Option<TaskId>) -> u32 {
+        self.slots
+            .iter()
+            .take_while(|s| s.window.start <= t)
+            .filter(|s| Some(s.task) != excluded && s.window.contains(t))
+            .map(|s| s.cores)
+            .sum()
+    }
+
+    /// Peak usage over `window`, optionally excluding one task: evaluated
+    /// at the window start and every reservation start inside the window
+    /// (usage is a step function that only increases at starts).
+    fn peak_usage_in_excluding(&self, window: &Window, excluded: Option<TaskId>) -> u32 {
+        let mut peak = self.usage_at_excluding(window.start, excluded);
         for s in &self.slots {
             if s.window.start >= window.end {
                 break;
             }
             if window.contains(s.window.start) {
-                peak = peak.max(self.usage_at(s.window.start));
+                peak = peak.max(self.usage_at_excluding(s.window.start, excluded));
             }
         }
         peak
     }
 
+    /// Peak core usage over `window` from existing reservations.
+    ///
+    /// Exact: evaluates usage at every reservation start within the window.
+    /// O(k²) in the overlapping reservations, but k stays tiny (≤ a
+    /// handful per device after pruning); a sweep-line variant was measured
+    /// ~4 % slower at real workload sizes (EXPERIMENTS.md §Perf iteration 3).
+    pub fn peak_usage_in(&self, window: &Window) -> u32 {
+        self.peak_usage_in_excluding(window, None)
+    }
+
     /// Core usage at one instant.
     pub fn usage_at(&self, t: SimTime) -> u32 {
-        self.slots
-            .iter()
-            .take_while(|s| s.window.start <= t)
-            .filter(|s| s.window.contains(t))
-            .map(|s| s.cores)
-            .sum()
+        self.usage_at_excluding(t, None)
     }
 
     /// Can `cores` more cores fit throughout `window`?
     pub fn fits(&self, window: &Window, cores: u32) -> bool {
         cores <= self.capacity && self.peak_usage_in(window) + cores <= self.capacity
+    }
+
+    /// Read-only eviction probe: would `cores` more cores fit throughout
+    /// `window` if `excluded`'s reservations were removed first?
+    ///
+    /// This answers "is this single eviction sufficient?" without mutating
+    /// anything — the candidate-plan searches (rescue, workstealer
+    /// preemption) use it to skip building plans for candidates whose
+    /// eviction cannot make room. Exact, not a heuristic: it shares the
+    /// step-function evaluator with [`CoreTimeline::fits`], minus the
+    /// excluded task's contribution.
+    pub fn fits_without(&self, window: &Window, cores: u32, excluded: TaskId) -> bool {
+        cores <= self.capacity
+            && self.peak_usage_in_excluding(window, Some(excluded)) + cores <= self.capacity
     }
 
     /// Earliest instant `>= after` at which `cores` additional cores are
@@ -278,6 +305,26 @@ mod tests {
         assert!(!tl.fits(&w(0, 100), 2));
         assert!(tl.fits(&w(100, 200), 4), "after release everything is free");
         assert!(!tl.fits(&w(0, 10), 5), "more than capacity never fits");
+    }
+
+    #[test]
+    fn fits_without_excludes_exactly_one_task() {
+        let mut tl = CoreTimeline::new(4);
+        reserve(&mut tl, w(0, 100), 2, 1, 100); // victim: 2 cores
+        reserve(&mut tl, w(40, 60), 2, 2, 60); // bystander spike: 2 cores
+        assert!(!tl.fits(&w(0, 100), 3), "full window cannot host 3 more cores");
+        // Without the victim, the spike still caps the window at 2 free.
+        assert!(tl.fits_without(&w(0, 100), 2, TaskId(1)));
+        assert!(!tl.fits_without(&w(0, 100), 3, TaskId(1)), "spike still blocks");
+        // Excluding the spike instead frees its slice only.
+        assert!(tl.fits_without(&w(40, 60), 2, TaskId(2)));
+        // Excluding an absent task degenerates to plain `fits`.
+        assert_eq!(
+            tl.fits_without(&w(0, 100), 1, TaskId(99)),
+            tl.fits(&w(0, 100), 1)
+        );
+        // Over capacity is never feasible, eviction or not.
+        assert!(!tl.fits_without(&w(0, 10), 5, TaskId(1)));
     }
 
     #[test]

@@ -281,6 +281,37 @@ impl Timeline {
         starts.len()
     }
 
+    /// Remove exactly the slot starting at `start` if it belongs to
+    /// `owner`; returns whether a slot was removed. The precise
+    /// counterpart of [`Timeline::remove_owner_from`] for rolling back one
+    /// known reservation without touching the owner's other slots (the
+    /// planning layer's tentative-attempt rollback).
+    pub fn release(&mut self, start: SimTime, owner: TaskId) -> bool {
+        match self.slots.get(&start) {
+            Some(slot) if slot.owner == owner => {}
+            _ => return false,
+        }
+        self.remove_slot(start);
+        self.forget_owner_start(owner, start);
+        true
+    }
+
+    /// Drop `start` from `owner`'s index entry, removing the entry when it
+    /// becomes empty — the single home of the by-owner bookkeeping shared
+    /// by [`Timeline::release`] and [`Timeline::prune_before`].
+    fn forget_owner_start(&mut self, owner: TaskId, start: SimTime) {
+        let mut now_empty = false;
+        if let Some(starts) = self.by_owner.get_mut(&owner) {
+            if let Some(pos) = starts.iter().position(|&s| s == start) {
+                starts.swap_remove(pos);
+            }
+            now_empty = starts.is_empty();
+        }
+        if now_empty {
+            self.by_owner.remove(&owner);
+        }
+    }
+
     /// Remove slots owned by `task` that start at or after `t` (keep already
     /// transmitted messages when cancelling a future allocation).
     pub fn remove_owner_from(&mut self, task: TaskId, t: SimTime) -> usize {
@@ -315,19 +346,31 @@ impl Timeline {
                 _ => break,
             };
             self.remove_slot(start);
-            let mut now_empty = false;
-            if let Some(starts) = self.by_owner.get_mut(&owner) {
-                if let Some(pos) = starts.iter().position(|&s| s == start) {
-                    starts.swap_remove(pos);
-                }
-                now_empty = starts.is_empty();
-            }
-            if now_empty {
-                self.by_owner.remove(&owner);
-            }
+            self.forget_owner_start(owner, start);
             n += 1;
         }
         n
+    }
+
+    /// Read-only probe: is `window` entirely free (no overlapping slot)?
+    ///
+    /// Answered from the gap index in O(log n): the window is free exactly
+    /// when one recorded gap contains it. Zero-length windows are free at
+    /// any slot boundary (consistent with the `earliest_fit` degenerate
+    /// case). The planning layer uses this to assert staged reservations
+    /// land where `earliest_fit` pointed, without a mutable borrow.
+    pub fn is_free(&self, window: &Window) -> bool {
+        let (s, e) = (window.start.0, window.end.0);
+        if s == e {
+            return match self.slots.range(..window.start).next_back() {
+                Some((_, slot)) => slot.window.end.0 <= s,
+                None => true,
+            };
+        }
+        match self.gaps.range(..=s).next_back() {
+            Some((&gs, &ge)) => gs <= s && e <= ge,
+            None => false,
+        }
     }
 
     /// All slots overlapping `window`, in start order.
@@ -542,6 +585,27 @@ mod tests {
     }
 
     #[test]
+    fn release_removes_exactly_one_owned_slot() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(0), d(5), SlotKind::LpAllocMsg, TaskId(1)).unwrap();
+        tl.reserve(t(10), d(5), SlotKind::PreemptMsg, TaskId(1)).unwrap();
+        tl.reserve(t(20), d(5), SlotKind::LpAllocMsg, TaskId(2)).unwrap();
+        // Wrong owner / empty start: refused, nothing changes.
+        assert!(!tl.release(t(0), TaskId(2)));
+        assert!(!tl.release(t(7), TaskId(1)));
+        assert_eq!(tl.len(), 3);
+        // Exact removal leaves the owner's other slots alone.
+        assert!(tl.release(t(0), TaskId(1)));
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl.slots()[0].window.start, t(10), "sibling slot survives");
+        assert_eq!(tl.earliest_fit(t(0), d(5)), t(0), "freed space is reusable");
+        tl.check_invariants().unwrap();
+        assert!(tl.release(t(10), TaskId(1)));
+        assert!(!tl.release(t(10), TaskId(1)), "second release is a no-op");
+        tl.check_invariants().unwrap();
+    }
+
+    #[test]
     fn remove_owner_from_keeps_past() {
         let mut tl = Timeline::new();
         tl.reserve(t(0), d(5), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
@@ -550,6 +614,29 @@ mod tests {
         assert_eq!(tl.len(), 1);
         assert_eq!(tl.slots()[0].window.start, t(0));
         tl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn is_free_matches_overlap_semantics() {
+        let mut tl = Timeline::new();
+        tl.reserve(t(10), d(10), SlotKind::HpAllocMsg, TaskId(1)).unwrap();
+        assert!(tl.is_free(&Window::new(t(0), t(10))), "touching is free (half-open)");
+        assert!(tl.is_free(&Window::new(t(20), t(25))));
+        assert!(!tl.is_free(&Window::new(t(5), t(11))));
+        assert!(!tl.is_free(&Window::new(t(12), t(15))));
+        assert!(!tl.is_free(&Window::new(t(19), t(30))));
+        // Zero-length windows: free at boundaries, not strictly inside.
+        assert!(tl.is_free(&Window::new(t(10), t(10))));
+        assert!(tl.is_free(&Window::new(t(20), t(20))));
+        assert!(!tl.is_free(&Window::new(t(15), t(15))));
+        // Agreement with the gap-driven earliest_fit on random probes.
+        for start in 0..30u64 {
+            for dur in 1..12u64 {
+                let free = tl.is_free(&Window::new(t(start), t(start + dur)));
+                let fit = tl.earliest_fit(t(start), d(dur)) == t(start);
+                assert_eq!(free, fit, "start={start} dur={dur}");
+            }
+        }
     }
 
     #[test]

@@ -11,11 +11,17 @@
 //! task is not allocated. If preemption is enabled and allocation is not
 //! possible the scheduler must generate a preemption request for the source
 //! device at this time-slot."
+//!
+//! The three slots the algorithm commits per task (allocation message →
+//! processing window → state update) are staged into one
+//! [`PlacementPlan`] and applied atomically; a failed attempt leaves zero
+//! residue by construction.
 
 use std::time::Instant;
 
 use crate::config::SystemConfig;
 use crate::resources::SlotKind;
+use crate::scheduler::plan::PlacementPlan;
 use crate::scheduler::{preemption, HpOutcome, PatsScheduler};
 use crate::state::NetworkState;
 use crate::task::{Allocation, TaskId, Window};
@@ -34,26 +40,30 @@ pub fn allocate(
     now: SimTime,
 ) -> HpOutcome {
     let t0 = Instant::now();
-    if let Some(window) = try_allocate(st, cfg, task, now) {
+    let mut plan = PlacementPlan::new(st);
+    if let Some(window) = stage_allocation(&mut plan, st, cfg, task, now) {
+        st.apply(plan).expect("freshly staged high-priority plan");
         return HpOutcome { window: Some(window), preemption: None, search: t0.elapsed() };
     }
+    // The failed plan is dropped here — nothing reached the network state.
     if !sched.preemption {
         return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
     }
-    // Preemption path: eject the farthest-deadline conflicting low-priority
-    // task on the source device, re-run the allocation, then try to
-    // reallocate the victim (§4).
+    // Preemption path: candidate-plan search over the conflicting
+    // low-priority tasks on the source device (§4 victim order), committing
+    // the first plan whose eviction makes the retry succeed.
     let search = t0.elapsed(); // Fig 9a measures the failed initial search
-    let (window, report) =
-        preemption::preempt_and_retry(sched, st, cfg, task, now, try_allocate);
+    let (window, report) = preemption::preempt_and_retry(sched, st, cfg, task, now);
     HpOutcome { window, preemption: report, search }
 }
 
-/// One shot of the §4 algorithm, committing all three slots on success:
-/// allocation message → processing window on the source device → state
-/// update. Returns the processing window.
-pub fn try_allocate(
-    st: &mut NetworkState,
+/// One shot of the §4 algorithm, staging all three slots into `plan` on
+/// success: allocation message → processing window on the source device →
+/// state update. Returns the processing window; on `None` the plan is
+/// unchanged.
+pub fn stage_allocation(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
     cfg: &SystemConfig,
     task: TaskId,
     now: SimTime,
@@ -68,9 +78,10 @@ pub fn try_allocate(
         return None;
     }
 
-    // 1. Earliest feasible slot for the allocation message on the link.
+    // 1. Earliest feasible slot for the allocation message on the link, as
+    // seen through the plan (staged evictions already freed their slots).
     let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
-    let msg_start = st.link.earliest_fit(now, msg_dur);
+    let msg_start = plan.link_view(st).earliest_fit(now, msg_dur);
     let t1 = msg_start + msg_dur; // expected arrival on the device
 
     // 2. Processing slot [t1, t2] with the benchmarked (padded) time.
@@ -83,7 +94,7 @@ pub fn try_allocate(
     // first: if a core isn't free at t1 itself, the full-window peak scan
     // cannot succeed either (peak usage ≥ usage at the window start), so
     // saturated devices fail in one point probe before paying for `fits`.
-    let device = st.device(source);
+    let device = plan.device_view(st, source);
     if device.usage_at(window.start) + HP_CORES > device.capacity() {
         return None;
     }
@@ -91,11 +102,10 @@ pub fn try_allocate(
         return None;
     }
 
-    // Commit: allocation message, processing reservation, state update.
-    st.link
-        .reserve(msg_start, msg_dur, SlotKind::HpAllocMsg, task)
+    // Stage: allocation message, processing reservation, state update.
+    plan.stage_link(st, msg_start, msg_dur, SlotKind::HpAllocMsg, task)
         .expect("earliest_fit produced occupied hp-alloc slot");
-    st.commit_allocation(Allocation {
+    plan.stage_placement(st, Allocation {
         task,
         device: source,
         window,
@@ -103,7 +113,8 @@ pub fn try_allocate(
         offloaded: false,
     })
     .expect("fits() said the window was free");
-    st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
+    let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
+    plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);
     Some(window)
 }
 
@@ -152,6 +163,19 @@ mod tests {
         id
     }
 
+    fn block_device(st: &mut NetworkState, dev: u32, id: TaskId, cores: u32, until_s: f64) {
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_placement(st, Allocation {
+            task: id,
+            device: DeviceId(dev),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(until_s)),
+            cores,
+            offloaded: false,
+        })
+        .unwrap();
+        st.apply(plan).unwrap();
+    }
+
     #[test]
     fn allocates_on_idle_device() {
         let (cfg, mut st, mut sched) = setup();
@@ -164,7 +188,7 @@ mod tests {
         assert!(w.start > SimTime::ZERO);
         assert_eq!(w.duration(), cfg.hp_slot());
         // Three artefacts: hp-alloc msg + state update on the link, 1 core on dev0.
-        assert_eq!(st.link.len(), 2);
+        assert_eq!(st.link().len(), 2);
         assert_eq!(st.device(DeviceId(0)).len(), 1);
         assert_eq!(st.task(id).unwrap().state, TaskState::Allocated);
         st.check_invariants().unwrap();
@@ -173,8 +197,7 @@ mod tests {
     #[test]
     fn always_local_to_source() {
         let (cfg, mut st, mut sched) = setup();
-        // Saturate device 2 with an HP-incompatible load? No: give task on dev2
-        // with free dev0 — must still go to dev2.
+        // Task on dev2 with free dev0 — must still go to dev2.
         let id = hp_task(&mut st, &cfg, 2, SimTime::ZERO);
         let out = crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
         assert!(out.allocated());
@@ -187,21 +210,14 @@ mod tests {
         let mut sched = PatsScheduler { preemption: false, reallocate: false, set_aware_victims: false };
         // Fill device 0 completely for a long time with an LP task.
         let blocker = lp_task(&mut st, 0, SimTime::from_secs_f64(60.0));
-        st.commit_allocation(Allocation {
-            task: blocker,
-            device: DeviceId(0),
-            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(30.0)),
-            cores: 4,
-            offloaded: false,
-        })
-        .unwrap();
+        block_device(&mut st, 0, blocker, 4, 30.0);
         let id = hp_task(&mut st, &cfg, 0, SimTime::ZERO);
         let out = crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
         assert!(!out.allocated());
         assert!(out.preemption.is_none());
         assert_eq!(st.task(id).unwrap().state, TaskState::Pending);
-        // No partial commits leaked.
-        assert_eq!(st.link.len(), 0);
+        // The dropped plan leaked nothing onto the link.
+        assert_eq!(st.link().len(), 0);
         st.check_invariants().unwrap();
     }
 
@@ -209,14 +225,7 @@ mod tests {
     fn preempts_when_enabled_and_full() {
         let (cfg, mut st, mut sched) = setup();
         let blocker = lp_task(&mut st, 0, SimTime::from_secs_f64(60.0));
-        st.commit_allocation(Allocation {
-            task: blocker,
-            device: DeviceId(0),
-            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(30.0)),
-            cores: 4,
-            offloaded: false,
-        })
-        .unwrap();
+        block_device(&mut st, 0, blocker, 4, 30.0);
         let id = hp_task(&mut st, &cfg, 0, SimTime::ZERO);
         let out = crate::scheduler::Policy::allocate_hp(&mut sched, &mut st, &cfg, id, SimTime::ZERO);
         assert!(out.allocated(), "preemption must free the core");

@@ -19,17 +19,35 @@
 //! time, checking if the allocated device can support increased resource
 //! usage. Finally, for each allocated task, the scheduler reserves a state
 //! update message on the network link."
+//!
+//! **Batched admission.** All tasks of a request are planned against one
+//! consistent snapshot: the whole time-point search stages its
+//! reservations into a single [`PlacementPlan`] (whose view reflects the
+//! siblings placed earlier in the same request) and commits once. The
+//! completion-point set is read exactly once per admission, through the
+//! plan view, instead of being re-derived from mutated network state
+//! between sibling placements.
 
 use std::time::Instant;
 
 use crate::config::SystemConfig;
 use crate::resources::SlotKind;
+use crate::scheduler::plan::PlacementPlan;
 use crate::scheduler::{LpOutcome, LpPlacement};
 use crate::state::NetworkState;
 use crate::task::{Allocation, CoreConfig, DeviceId, RequestId, TaskId, Window};
 use crate::time::SimTime;
 
-/// Allocate every task of a low-priority request.
+/// Shared parameters of one admission (a request's tasks share a source
+/// device, a deadline, and an admission instant).
+#[derive(Clone, Copy)]
+struct Admission {
+    source: DeviceId,
+    deadline: SimTime,
+    now: SimTime,
+}
+
+/// Allocate every task of a low-priority request in one transaction.
 ///
 /// # Example
 ///
@@ -80,13 +98,21 @@ pub fn allocate_request(
         return LpOutcome { placements: Vec::new(), unallocated: Vec::new(), search: t0.elapsed() };
     };
     let tasks = req.tasks.clone();
-    let source = req.source;
-    let deadline = req.deadline;
-    let (placements, unallocated) = allocate_tasks(st, cfg, &tasks, source, deadline, now);
+    let adm = Admission { source: req.source, deadline: req.deadline, now };
+    let mut plan = PlacementPlan::new(st);
+    let (placements, unallocated) = stage_tasks(&mut plan, st, cfg, &tasks, adm);
+    // Registry ops are staged iff a placement succeeded; a fully failed
+    // admission may still have forked (and fully unstaged) the link
+    // scratch, and installing that byte-identical clone would be a
+    // pointless version bump on the hot path.
+    if plan.has_ops() {
+        st.apply(plan).expect("freshly staged admission plan");
+    }
     LpOutcome { placements, unallocated, search: t0.elapsed() }
 }
 
-/// Reallocate a single (preempted) task before its own deadline.
+/// Reallocate a single (preempted) task before its own deadline, as one
+/// transaction of its own.
 ///
 /// # Example
 ///
@@ -134,40 +160,57 @@ pub fn allocate_single(
     task: TaskId,
     now: SimTime,
 ) -> Option<LpPlacement> {
+    let mut plan = PlacementPlan::new(st);
+    let placement = stage_single(&mut plan, st, cfg, task, now)?;
+    st.apply(plan).expect("freshly staged reallocation plan");
+    Some(placement)
+}
+
+/// Stage a single-task reallocation into an existing plan (the preemption
+/// mechanism and the rescue path compose this into their own
+/// transactions). Returns `None` — leaving the plan as it was found —
+/// when no placement before the task's deadline exists.
+pub fn stage_single(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+) -> Option<LpPlacement> {
     let rec = st.task(task)?;
-    let source = rec.spec.source;
-    let deadline = rec.spec.deadline;
-    let (placements, _) = allocate_tasks(st, cfg, &[task], source, deadline, now);
+    let adm = Admission { source: rec.spec.source, deadline: rec.spec.deadline, now };
+    let (placements, _) = stage_tasks(plan, st, cfg, &[task], adm);
     placements.into_iter().next()
 }
 
-/// The time-point search over a set of tasks sharing a source and deadline.
-fn allocate_tasks(
-    st: &mut NetworkState,
+/// The time-point search over a set of tasks sharing a source and deadline,
+/// staged entirely into `plan`.
+fn stage_tasks(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
     cfg: &SystemConfig,
     tasks: &[TaskId],
-    source: DeviceId,
-    deadline: SimTime,
-    now: SimTime,
+    adm: Admission,
 ) -> (Vec<LpPlacement>, Vec<TaskId>) {
     let mut unallocated: Vec<TaskId> = tasks.to_vec();
     let mut placements: Vec<LpPlacement> = Vec::new();
 
     // A request that arrives at or past its deadline cannot be placed at
     // all (live mode: the controller may be invoked late).
-    if now >= deadline {
+    if adm.now >= adm.deadline {
         return (placements, unallocated);
     }
 
     // Time points: "now" plus every completion of an existing reservation
-    // up to the request deadline. Fleet-scale trim: a window starting at
-    // `tp` is at least `tp + lp_slot(MIN)` long, so time points past
-    // `deadline - lp_slot(MIN)` can never host a placement — drop them
-    // instead of paying a full placement attempt that is doomed to fail
-    // (behaviour-identical: those attempts leave no state behind).
-    let latest_start = deadline - cfg.lp_slot(CoreConfig::MIN.cores());
-    let mut time_points = vec![now];
-    time_points.extend(st.completion_points(now, deadline));
+    // up to the request deadline, as seen through the plan (a staged
+    // eviction removes its completion point; a staged sibling adds its
+    // own). Fleet-scale trim: a window starting at `tp` is at least
+    // `tp + lp_slot(MIN)` long, so time points past `deadline -
+    // lp_slot(MIN)` can never host a placement — drop them instead of
+    // paying a full placement attempt that is doomed to fail.
+    let latest_start = adm.deadline - cfg.lp_slot(CoreConfig::MIN.cores());
+    let mut time_points = vec![adm.now];
+    time_points.extend(plan.completion_points(st, adm.now, adm.deadline));
     time_points.retain(|&tp| tp <= latest_start);
 
     for tp in time_points {
@@ -177,7 +220,7 @@ fn allocate_tasks(
         // Partial allocation pass at the minimum viable configuration.
         let mut placed_this_round: Vec<usize> = Vec::new();
         unallocated.retain(|&task| {
-            match try_place_min(st, cfg, task, source, tp, deadline, now) {
+            match stage_place_min(plan, st, cfg, task, adm, tp) {
                 Some(p) => {
                     placements.push(p);
                     placed_this_round.push(placements.len() - 1);
@@ -189,36 +232,37 @@ fn allocate_tasks(
         // Improvement pass: upgrade this round's placements to more cores
         // where the device can support the increased usage.
         for idx in placed_this_round {
-            let upgraded = try_improve(st, cfg, &placements[idx]);
+            let upgraded = stage_improve(plan, st, cfg, &placements[idx]);
             if let Some(p) = upgraded {
                 placements[idx] = p;
             }
             // State update message for the (possibly improved) allocation.
             let p = &placements[idx];
-            st.reserve_link_message(cfg, p.window.end, SlotKind::StateUpdate, p.task);
+            let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
+            plan.stage_link_earliest(st, p.window.end, update_dur, SlotKind::StateUpdate, p.task);
         }
     }
     (placements, unallocated)
 }
 
 /// Attempt a partial allocation of `task` at [`CoreConfig::MIN`] starting no
-/// earlier than time point `tp`. Commits link + core reservations on
-/// success; leaves no residue on failure.
-fn try_place_min(
-    st: &mut NetworkState,
+/// earlier than time point `tp`. Stages link + core reservations on
+/// success; leaves the plan untouched on failure.
+fn stage_place_min(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
     cfg: &SystemConfig,
     task: TaskId,
-    source: DeviceId,
+    adm: Admission,
     tp: SimTime,
-    deadline: SimTime,
-    now: SimTime,
 ) -> Option<LpPlacement> {
+    let Admission { source, deadline, now } = adm;
     let cores = CoreConfig::MIN.cores();
     let slot = cfg.lp_slot(CoreConfig::MIN.cores());
 
     // 1. Allocation message as early as possible.
     let msg_dur = st.link_model.slot_duration(cfg, SlotKind::LpAllocMsg);
-    let msg_start = st.link.earliest_fit(now, msg_dur);
+    let msg_start = plan.link_view(st).earliest_fit(now, msg_dur);
     let arrival = msg_start + msg_dur;
 
     // 2a. Source device first (no image transfer). A draining/downed source
@@ -227,12 +271,11 @@ fn try_place_min(
     let local_window = Window::from_duration(local_start, slot);
     if st.device_is_up(source)
         && local_window.end <= deadline
-        && st.device(source).fits(&local_window, cores)
+        && plan.device_view(st, source).fits(&local_window, cores)
     {
-        st.link
-            .reserve(msg_start, msg_dur, SlotKind::LpAllocMsg, task)
+        plan.stage_link(st, msg_start, msg_dur, SlotKind::LpAllocMsg, task)
             .expect("earliest_fit produced occupied lp-alloc slot");
-        st.commit_allocation(Allocation {
+        plan.stage_placement(st, Allocation {
             task,
             device: source,
             window: local_window,
@@ -267,12 +310,12 @@ fn try_place_min(
         if d == source || !st.device_is_up(d) {
             continue;
         }
-        match st.device(d).earliest_availability(tp, cores) {
+        let view = plan.device_view(st, d);
+        match view.earliest_availability(tp, cores) {
             Some(avail) if avail + slot <= deadline => {}
             _ => continue,
         }
-        let busy: u64 = st
-            .device(d)
+        let busy: u64 = view
             .overlapping(&horizon)
             .map(|s| s.window.duration().as_micros() * s.cores as u64)
             .sum();
@@ -280,54 +323,63 @@ fn try_place_min(
     }
     candidates.sort_unstable();
 
-    for (_, dev) in candidates {
-        let dev = DeviceId(dev);
-        // Reserve message, then the image transfer right after it; both are
-        // rolled back if the device cannot host the window.
-        let msg_w = match st.link.reserve(msg_start, msg_dur, SlotKind::LpAllocMsg, task) {
-            Ok(w) => w,
-            Err(_) => return None, // link changed under us — cannot happen single-threaded
-        };
-        let xfer_dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
-        let xfer_start = st.link.earliest_fit(msg_w.end, xfer_dur);
-        let xfer_end = xfer_start + xfer_dur;
-        let start = xfer_end.max(tp);
-        let window = Window::from_duration(start, slot);
-        if window.end <= deadline && st.device(dev).fits(&window, cores) {
-            st.link
-                .reserve(xfer_start, xfer_dur, SlotKind::InputTransfer, task)
-                .expect("earliest_fit produced occupied transfer slot");
-            st.commit_allocation(Allocation {
-                task,
-                device: dev,
-                window,
-                cores,
-                offloaded: true,
-            })
-            .expect("fits() said the offload window was free");
-            return Some(LpPlacement {
-                task,
-                device: dev,
-                window,
-                cores,
-                offloaded: true,
-                input_ready: Some(xfer_end),
-            });
-        }
-        // Roll back the tentative message slot and try the next device.
-        // Only slots from this attempt (start >= msg_start) are removed: a
-        // preempted task being reallocated still owns already-transmitted
-        // historical slots that `preempt_task` deliberately kept, and those
-        // all start before `now <= msg_start`.
-        st.link.remove_owner_from(task, msg_start);
+    if candidates.is_empty() {
+        return None;
     }
+    // The offload window is device-independent (message + transfer timing
+    // on the shared link fixes it), so stage the message once, compute the
+    // window once, and scan the candidates with read-only fit probes —
+    // the pre-plan code re-reserved and rolled back the identical message
+    // slot per candidate.
+    let Ok(msg_w) = plan.stage_link(st, msg_start, msg_dur, SlotKind::LpAllocMsg, task) else {
+        return None; // plan view changed under us — cannot happen single-threaded
+    };
+    let xfer_dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
+    let xfer_start = plan.link_view(st).earliest_fit(msg_w.end, xfer_dur);
+    let xfer_end = xfer_start + xfer_dur;
+    let start = xfer_end.max(tp);
+    let window = Window::from_duration(start, slot);
+    if window.end <= deadline {
+        for (_, dev) in candidates {
+            let dev = DeviceId(dev);
+            if plan.device_view(st, dev).fits(&window, cores) {
+                plan.stage_link(st, xfer_start, xfer_dur, SlotKind::InputTransfer, task)
+                    .expect("earliest_fit produced occupied transfer slot");
+                plan.stage_placement(st, Allocation {
+                    task,
+                    device: dev,
+                    window,
+                    cores,
+                    offloaded: true,
+                })
+                .expect("fits() said the offload window was free");
+                return Some(LpPlacement {
+                    task,
+                    device: dev,
+                    window,
+                    cores,
+                    offloaded: true,
+                    input_ready: Some(xfer_end),
+                });
+            }
+        }
+    }
+    // No candidate can host the window: unstage exactly the tentative
+    // message slot. Precise removal matters — a preemption victim being
+    // re-placed inside the same plan also owns its preempt-notice slot,
+    // which could start after `msg_start` under configs where the notice
+    // is larger than the allocation message; a remove-everything-
+    // from(msg_start) sweep would delete it.
+    let rolled_back = plan.unstage_link_at(task, msg_start);
+    debug_assert!(rolled_back, "the staged alloc msg starts at msg_start");
     None
 }
 
-/// The improvement pass: try to raise a placement to the next core
+/// The improvement pass: try to raise a staged placement to the next core
 /// configuration, shrinking its processing window.
-fn try_improve(
-    st: &mut NetworkState,
+fn stage_improve(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
     cfg: &SystemConfig,
     p: &LpPlacement,
 ) -> Option<LpPlacement> {
@@ -335,42 +387,20 @@ fn try_improve(
     let next = current.upgrade()?;
     let new_window = Window::from_duration(p.window.start, cfg.lp_slot(next.cores()));
     debug_assert!(new_window.end <= p.window.end, "upgrades must shrink the window");
-
-    // Re-reserve atomically: drop the old core slot, try the wider one,
-    // restore on failure.
-    let rec = st.task(p.task)?.clone();
-    let removed = st.device_mut(p.device).remove_task(p.task);
-    debug_assert_eq!(removed, 1);
-    let deadline = rec.spec.deadline;
-    let result = st.device_mut(p.device).reserve(
-        new_window,
-        next.cores(),
-        p.task,
-        deadline,
-        true,
-    );
-    match result {
-        Ok(()) => {
-            let alloc = Allocation {
-                task: p.task,
-                device: p.device,
-                window: new_window,
-                cores: next.cores(),
-                offloaded: p.offloaded,
-            };
-            st.task_mut(p.task).unwrap().allocation = Some(alloc);
-            Some(LpPlacement {
-                cores: next.cores(),
-                window: new_window,
-                ..p.clone()
-            })
-        }
-        Err(_) => {
-            st.device_mut(p.device)
-                .reserve(p.window, p.cores, p.task, deadline, true)
-                .expect("restoring the original reservation cannot fail");
-            None
-        }
+    let upgraded = Allocation {
+        task: p.task,
+        device: p.device,
+        window: new_window,
+        cores: next.cores(),
+        offloaded: p.offloaded,
+    };
+    match plan.restage_placement(st, upgraded) {
+        Ok(()) => Some(LpPlacement {
+            cores: next.cores(),
+            window: new_window,
+            ..p.clone()
+        }),
+        Err(_) => None, // the original staged reservation was restored
     }
 }
 
@@ -420,6 +450,12 @@ mod tests {
         rid
     }
 
+    fn place(st: &mut NetworkState, alloc: Allocation) {
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_placement(st, alloc).unwrap();
+        st.apply(plan).unwrap();
+    }
+
     #[test]
     fn single_task_gets_four_cores_locally() {
         // One DNN task on an idle network: placed at MIN then improved to
@@ -467,7 +503,7 @@ mod tests {
         assert!(p.input_ready.unwrap() <= p.window.start);
         // The transfer occupies the link.
         let transfers = st
-            .link
+            .link()
             .slots()
             .iter()
             .filter(|s| s.kind == SlotKind::InputTransfer)
@@ -496,7 +532,6 @@ mod tests {
     fn uses_future_time_points_when_now_is_full() {
         let (cfg, mut st) = setup();
         // Pre-fill every device's cores until t=8s.
-        let mut blockers = Vec::new();
         for d in 0..4u32 {
             let id = st.fresh_task_id();
             st.register_task(TaskSpec {
@@ -508,15 +543,13 @@ mod tests {
                 spawn: SimTime::ZERO,
                 request: None,
             });
-            st.commit_allocation(Allocation {
+            place(&mut st, Allocation {
                 task: id,
                 device: DeviceId(d),
                 window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(8.0)),
                 cores: 4,
                 offloaded: false,
-            })
-            .unwrap();
-            blockers.push(id);
+            });
         }
         // Deadline 30 s: the 2-core slot (≈19 s) fits only if it starts at
         // the t=8 s completion point.
@@ -537,7 +570,7 @@ mod tests {
         assert!(!out.fully_allocated());
         assert_eq!(out.unallocated.len(), 1);
         // No resource residue.
-        assert_eq!(st.link.len(), 0);
+        assert_eq!(st.link().len(), 0);
         assert_eq!(st.device(DeviceId(0)).len(), 0);
         st.check_invariants().unwrap();
     }
@@ -549,16 +582,15 @@ mod tests {
         let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
         assert!(out.fully_allocated());
         let updates = st
-            .link
+            .link()
             .slots()
             .iter()
             .filter(|s| s.kind == SlotKind::StateUpdate)
             .count();
         assert_eq!(updates, 2);
         for p in &out.placements {
-            let upd = st
-                .link
-                .slots()
+            let slots = st.link().slots();
+            let upd = slots
                 .iter()
                 .find(|s| s.kind == SlotKind::StateUpdate && s.owner == p.task)
                 .unwrap();
@@ -592,5 +624,43 @@ mod tests {
             assert_eq!(alloc.cores, p.cores);
             assert_eq!(alloc.device, p.device);
         }
+    }
+
+    #[test]
+    fn failed_admission_leaves_zero_residue_mid_request() {
+        // Three tasks, but the network only has room for two before the
+        // deadline: the committed plan contains exactly the two placements
+        // and their link slots — the failed third attempt staged nothing.
+        let (cfg, mut st) = setup();
+        // Choke every non-source device far past the deadline.
+        for d in 1..4u32 {
+            let id = st.fresh_task_id();
+            st.register_task(TaskSpec {
+                id,
+                frame: FrameId(9),
+                source: DeviceId(d),
+                priority: Priority::High,
+                deadline: SimTime::from_secs_f64(120.0),
+                spawn: SimTime::ZERO,
+                request: None,
+            });
+            place(&mut st, Allocation {
+                task: id,
+                device: DeviceId(d),
+                window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(60.0)),
+                cores: 4,
+                offloaded: false,
+            });
+        }
+        let rid = lp_request(&mut st, 0, 3, 18.86);
+        let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+        assert_eq!(out.placements.len(), 2, "source hosts two at 2 cores");
+        assert_eq!(out.unallocated.len(), 1);
+        // Link artefacts: one alloc msg + one state update per success, no
+        // transfer, nothing for the unallocated task.
+        let unplaced = out.unallocated[0];
+        assert!(st.link().slots().iter().all(|s| s.owner != unplaced));
+        assert_eq!(st.task(unplaced).unwrap().state, TaskState::Pending);
+        st.check_invariants().unwrap();
     }
 }

@@ -4,9 +4,17 @@
 //! time-slotted scheduler ([`PatsScheduler`]) implements it, and so do the
 //! two workstealer baselines (`crate::workstealer`), so every experiment
 //! runs the same event loop with a different policy plugged in.
+//!
+//! Every policy mutates the network through the transactional planning
+//! layer ([`plan::PlacementPlan`] + [`crate::state::NetworkState::apply`]):
+//! placements, link messages, and evictions are staged against a read-only
+//! snapshot and committed atomically — or dropped whole. See `plan` for
+//! the dataflow and ARCHITECTURE.md §Planning layer for which policy uses
+//! which plan operations.
 
 pub mod high_priority;
 pub mod low_priority;
+pub mod plan;
 pub mod preemption;
 pub mod rescue;
 
@@ -62,6 +70,7 @@ pub struct HpOutcome {
 }
 
 impl HpOutcome {
+    /// Did the high-priority task get its processing window?
     pub fn allocated(&self) -> bool {
         self.window.is_some()
     }
@@ -79,6 +88,7 @@ pub struct LpOutcome {
 }
 
 impl LpOutcome {
+    /// Did every task of the request get a placement?
     pub fn fully_allocated(&self) -> bool {
         self.unallocated.is_empty()
     }
@@ -110,12 +120,10 @@ pub struct RescueOutcome {
     /// their "rescue" is a later steal).
     pub lp_requeued: Vec<TaskId>,
     /// Orphans with no feasible rescue; the coordinator fails these with
-    /// [`crate::task::FailReason::DeviceLost`].
+    /// [`crate::task::FailReason::DeviceLost`]. A failed rescue commits
+    /// nothing — candidate plans that would not work are dropped, so there
+    /// is no such thing as an eviction fired by a failed rescue anymore.
     pub lost: Vec<(TaskId, Priority)>,
-    /// Evictions fired by rescue attempts that still failed: the orphan is
-    /// in `lost`, but the victim was genuinely preempted (and possibly
-    /// reallocated — its placement must still be executed/accounted).
-    pub failed_rescue_evictions: Vec<PreemptionReport>,
 }
 
 impl RescueOutcome {
@@ -244,6 +252,7 @@ pub struct PatsScheduler {
 }
 
 impl PatsScheduler {
+    /// Build the scheduler with the paper's toggles taken from `cfg`.
     pub fn from_config(cfg: &SystemConfig) -> PatsScheduler {
         PatsScheduler {
             preemption: cfg.preemption,

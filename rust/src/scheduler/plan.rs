@@ -1,0 +1,750 @@
+//! Transactional placement plans: the single stage → validate → commit
+//! path every allocation policy goes through.
+//!
+//! Historically each policy (§4 high-priority allocation, §4 low-priority
+//! allocation, the preemption mechanism, churn rescue, and both
+//! workstealers) hand-rolled its own sequence of core/link reservations
+//! against [`NetworkState`], and atomicity rested on ad-hoc "roll back what
+//! you reserved" discipline scattered across five files. A
+//! [`PlacementPlan`] replaces that discipline with construction-level
+//! safety:
+//!
+//! 1. **Stage.** The plan accumulates operations — link-slot reservations,
+//!    core-window reservations, preemption evictions, task-state
+//!    transitions — against a *read-only* `&NetworkState`. Resource effects
+//!    land in private copy-on-write scratch timelines inside the plan, so
+//!    later staged operations observe earlier ones (a staged eviction
+//!    frees the cores it releases, a staged message occupies the link),
+//!    while the real network state is never touched.
+//! 2. **Validate.** Every staging call self-validates against the plan's
+//!    view and returns `Err` without side effects on the *plan* when the
+//!    operation is infeasible; the builder can also drop a half-built plan
+//!    at any point. Either way the network state is untouched — a rejected
+//!    or dropped plan leaves zero residue *by construction* (property-
+//!    tested in `rust/tests/prop_plan_atomicity.rs`).
+//! 3. **Commit.** [`NetworkState::apply`] installs the whole plan
+//!    atomically: it re-validates the registry transitions, checks that
+//!    the state has not changed since the plan was created (a version
+//!    stamp), and only then swaps the scratch timelines in and applies the
+//!    task-state transitions. It rejects the plan whole on any mismatch.
+//!
+//! The separation also unlocks *candidate-plan search*: a policy can build
+//! several alternative plans against the same snapshot (e.g. the rescue
+//! path's top-K adoptive devices, or the preemption mechanism's candidate
+//! victims), compare their costs (fewest [`PlacementPlan::evictions`],
+//! then earliest finish), and commit only the winner — the losers evaporate
+//! without ever touching the network. PREMA-style predict-and-compare
+//! scheduling and batched admission both need exactly this shape.
+//!
+//! # Cost model
+//!
+//! A plan's scratch copies are created lazily, per resource, on the first
+//! *staged mutation* touching that resource: the shared link timeline is
+//! cloned once per plan that reserves a link slot, and each device
+//! timeline is cloned only if the plan stages work on it. Read-only
+//! queries ([`PlacementPlan::link_view`], [`PlacementPlan::device_view`])
+//! never clone — they delegate to the base state until a mutation forks
+//! the scratch copy. Committing is O(staged ops) plus moving the scratch
+//! copies into place; dropping a plan is just a deallocation.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::error::{Error, Result};
+use crate::resources::{CoreTimeline, SlotKind, Timeline};
+use crate::state::NetworkState;
+use crate::task::{Allocation, DeviceId, FailReason, Priority, TaskId, Window};
+use crate::time::{SimDuration, SimTime};
+
+/// One staged task-registry transition, replayed by [`NetworkState::apply`]
+/// after the resource scratch copies are installed.
+#[derive(Debug, Clone)]
+pub(crate) enum RegistryOp {
+    /// Record a committed placement: the task becomes `Allocated` and its
+    /// [`Allocation`] is written to the registry (the core reservation
+    /// itself already lives in the plan's scratch device timeline).
+    Place(Allocation),
+    /// A preemption eviction: the victim becomes `PreemptedPendingRealloc`
+    /// and its preemption counter is bumped (its core slot and future link
+    /// slots were already removed from the scratch copies).
+    Evict {
+        /// The evicted low-priority task.
+        task: TaskId,
+    },
+    /// Terminal failure staged inside the plan (a victim that could not be
+    /// re-placed fails with [`FailReason::Preempted`]).
+    Fail {
+        /// The failing task.
+        task: TaskId,
+        /// Why it failed.
+        reason: FailReason,
+        /// When the failure is recorded.
+        now: SimTime,
+    },
+}
+
+/// The dismantled parts of a plan, handed to [`NetworkState::apply`].
+pub(crate) struct PlanParts {
+    /// State version the plan was built against.
+    pub(crate) version: u64,
+    /// Scratch link timeline, if the plan staged any link operation.
+    pub(crate) link: Option<Timeline>,
+    /// Scratch device timelines, keyed by device index, for every device
+    /// the plan staged work on.
+    pub(crate) devices: HashMap<u32, CoreTimeline>,
+    /// Registry transitions in staging order.
+    pub(crate) registry: Vec<RegistryOp>,
+}
+
+/// A transactional batch of placement operations staged against a
+/// read-only view of the network (see the module docs for the dataflow).
+///
+/// # Example
+///
+/// Stage a one-core placement and commit it atomically:
+///
+/// ```no_run
+/// use pats::config::SystemConfig;
+/// use pats::scheduler::plan::PlacementPlan;
+/// use pats::state::NetworkState;
+/// use pats::task::{Allocation, DeviceId, FrameId, Priority, TaskSpec, Window};
+/// use pats::time::SimTime;
+///
+/// let cfg = SystemConfig::default();
+/// let mut st = NetworkState::new(&cfg);
+/// let id = st.fresh_task_id();
+/// st.register_task(TaskSpec {
+///     id,
+///     frame: FrameId(0),
+///     source: DeviceId(0),
+///     priority: Priority::Low,
+///     deadline: SimTime::from_secs_f64(60.0),
+///     spawn: SimTime::ZERO,
+///     request: None,
+/// });
+///
+/// let mut plan = PlacementPlan::new(&st);
+/// plan.stage_placement(
+///     &st,
+///     Allocation {
+///         task: id,
+///         device: DeviceId(0),
+///         window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
+///         cores: 2,
+///         offloaded: false,
+///     },
+/// )
+/// .unwrap();
+/// st.apply(plan).unwrap();
+/// ```
+#[derive(Debug, Clone)]
+pub struct PlacementPlan {
+    version: u64,
+    link: Option<Timeline>,
+    devices: HashMap<u32, CoreTimeline>,
+    registry: Vec<RegistryOp>,
+    /// Tasks with a staged `Place` op (O(1) duplicate rejection).
+    placed: HashSet<TaskId>,
+    /// Tasks with a staged `Evict` op (O(1) duplicate rejection and
+    /// re-placement permission checks).
+    evicted: HashSet<TaskId>,
+    evictions: u32,
+}
+
+impl PlacementPlan {
+    /// Open an empty plan against the current state snapshot. The plan is
+    /// only committable while the state's version is unchanged.
+    pub fn new(st: &NetworkState) -> PlacementPlan {
+        PlacementPlan {
+            version: st.version(),
+            link: None,
+            devices: HashMap::new(),
+            registry: Vec::new(),
+            placed: HashSet::new(),
+            evicted: HashSet::new(),
+            evictions: 0,
+        }
+    }
+
+    /// The state version this plan was staged against.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Number of staged operations (registry transitions).
+    pub fn len(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// True when the plan stages at least one registry transition — i.e.
+    /// committing it would change observable state. A plan may fork a
+    /// scratch copy and fully unstage it again (a failed admission); such
+    /// a plan is not `is_empty`, but committing it would be a no-op.
+    pub fn has_ops(&self) -> bool {
+        !self.registry.is_empty()
+    }
+
+    /// True when nothing has been staged (no registry transition and no
+    /// resource scratch was forked).
+    pub fn is_empty(&self) -> bool {
+        self.registry.is_empty() && self.link.is_none() && self.devices.is_empty()
+    }
+
+    /// Evictions staged so far — the primary component of a candidate
+    /// plan's cost (fewest evictions, then earliest finish).
+    pub fn evictions(&self) -> u32 {
+        self.evictions
+    }
+
+    // ---- views (never clone) --------------------------------------------
+
+    /// The plan's view of the link: the scratch copy when a link operation
+    /// was staged, the base state's timeline otherwise.
+    pub fn link_view<'a>(&'a self, st: &'a NetworkState) -> &'a Timeline {
+        self.link.as_ref().unwrap_or_else(|| st.link())
+    }
+
+    /// The plan's view of device `d`'s core calendar.
+    pub fn device_view<'a>(&'a self, st: &'a NetworkState, d: DeviceId) -> &'a CoreTimeline {
+        self.devices.get(&d.0).unwrap_or_else(|| st.device(d))
+    }
+
+    /// Union of completion time-points across every device in `(after,
+    /// until]`, ascending, as seen through the plan (§4: the low-priority
+    /// scheduler's search set). Staged evictions remove their completion
+    /// points; staged placements add theirs.
+    pub fn completion_points(
+        &self,
+        st: &NetworkState,
+        after: SimTime,
+        until: SimTime,
+    ) -> Vec<SimTime> {
+        let mut v: Vec<SimTime> = st
+            .device_ids()
+            .flat_map(|d| self.device_view(st, d).completion_points(after, until))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    // ---- scratch forks ---------------------------------------------------
+
+    fn link_scratch(&mut self, st: &NetworkState) -> &mut Timeline {
+        self.link.get_or_insert_with(|| st.link().clone())
+    }
+
+    fn device_scratch(&mut self, st: &NetworkState, d: DeviceId) -> &mut CoreTimeline {
+        self.devices
+            .entry(d.0)
+            .or_insert_with(|| st.device(d).clone())
+    }
+
+    /// Has this plan already staged an eviction of `task`?
+    fn evicted_in_plan(&self, task: TaskId) -> bool {
+        self.evicted.contains(&task)
+    }
+
+    // ---- staging ---------------------------------------------------------
+
+    /// Stage a link-slot reservation at an explicit start. Fails (leaving
+    /// the plan otherwise unchanged) when the slot overlaps the plan's view
+    /// of the link.
+    pub fn stage_link(
+        &mut self,
+        st: &NetworkState,
+        start: SimTime,
+        dur: SimDuration,
+        kind: SlotKind,
+        owner: TaskId,
+    ) -> Result<Window> {
+        self.link_scratch(st).reserve(start, dur, kind, owner)
+    }
+
+    /// Stage the earliest-fit link slot of `dur` at or after `not_before`.
+    pub fn stage_link_earliest(
+        &mut self,
+        st: &NetworkState,
+        not_before: SimTime,
+        dur: SimDuration,
+        kind: SlotKind,
+        owner: TaskId,
+    ) -> Window {
+        let start = self.link_view(st).earliest_fit(not_before, dur);
+        debug_assert!(
+            self.link_view(st).is_free(&Window::from_duration(start, dur)),
+            "earliest_fit and the is_free probe disagree"
+        );
+        self.stage_link(st, start, dur, kind, owner)
+            .expect("earliest_fit returned an occupied window")
+    }
+
+    /// Remove exactly the staged link slot of `owner` starting at `start` —
+    /// the precise rollback for one tentative reservation. Deliberately
+    /// the *only* unstage primitive: a sweep-style "remove everything from
+    /// t" rollback could collaterally delete the owner's other in-plan
+    /// slots (e.g. a preemption victim's notice staged earlier in the same
+    /// plan under configs where the notice outsizes the message).
+    pub fn unstage_link_at(&mut self, owner: TaskId, start: SimTime) -> bool {
+        match &mut self.link {
+            Some(link) => link.release(start, owner),
+            None => false,
+        }
+    }
+
+    /// Stage a core-window placement: validates the device is up, the task
+    /// does not already hold a live reservation (unless this plan evicted
+    /// it first), and the window fits the plan's view; reserves the cores
+    /// on the scratch calendar and records the `Allocated` registry
+    /// transition. A task placed earlier in the same plan must go through
+    /// [`PlacementPlan::restage_placement`] instead — a second `Place`
+    /// would leak the first staged reservation.
+    pub fn stage_placement(&mut self, st: &NetworkState, alloc: Allocation) -> Result<()> {
+        let rec = st
+            .task(alloc.task)
+            .ok_or_else(|| Error::Invariant(format!("placing unknown task {:?}", alloc.task)))?;
+        if !st.device_is_up(alloc.device) {
+            return Err(Error::Allocation(format!(
+                "placement on non-up device {}",
+                alloc.device
+            )));
+        }
+        if self.placed.contains(&alloc.task) {
+            return Err(Error::Invariant(format!(
+                "{:?} already staged in this plan; use restage_placement",
+                alloc.task
+            )));
+        }
+        if rec.state.is_active_allocation() && !self.evicted_in_plan(alloc.task) {
+            return Err(Error::Invariant(format!(
+                "{:?} already holds a live reservation; evict it first",
+                alloc.task
+            )));
+        }
+        let deadline = rec.spec.deadline;
+        let preemptible = rec.spec.priority == Priority::Low;
+        self.device_scratch(st, alloc.device).reserve(
+            alloc.window,
+            alloc.cores,
+            alloc.task,
+            deadline,
+            preemptible,
+        )?;
+        self.placed.insert(alloc.task);
+        self.registry.push(RegistryOp::Place(alloc));
+        Ok(())
+    }
+
+    /// Replace a placement staged earlier *in this plan* with a new window
+    /// and core width (the §4 improvement pass). On failure the original
+    /// staged reservation is restored and the plan is unchanged.
+    pub fn restage_placement(&mut self, st: &NetworkState, alloc: Allocation) -> Result<()> {
+        let idx = self
+            .registry
+            .iter()
+            .rposition(|op| matches!(op, RegistryOp::Place(a) if a.task == alloc.task))
+            .ok_or_else(|| {
+                Error::Invariant(format!("{:?} has no staged placement to improve", alloc.task))
+            })?;
+        let old = match &self.registry[idx] {
+            RegistryOp::Place(a) => a.clone(),
+            _ => unreachable!("rposition matched a Place op"),
+        };
+        if old.device != alloc.device {
+            return Err(Error::Invariant(
+                "restage_placement cannot move a placement across devices".into(),
+            ));
+        }
+        let rec = st
+            .task(alloc.task)
+            .ok_or_else(|| Error::Invariant(format!("improving unknown task {:?}", alloc.task)))?;
+        let deadline = rec.spec.deadline;
+        let preemptible = rec.spec.priority == Priority::Low;
+        let dev = self.device_scratch(st, alloc.device);
+        // Checked before any mutation: if the task holds more than the one
+        // staged reservation on this device (a pre-existing committed slot
+        // copied into the scratch), `remove_task` would silently destroy
+        // it — reject instead of relying on a debug-only assertion.
+        let existing = dev.slots().iter().filter(|s| s.task == alloc.task).count();
+        if existing != 1 {
+            return Err(Error::Invariant(format!(
+                "{:?} holds {existing} reservations on {}; restage_placement \
+                 requires exactly the staged one",
+                alloc.task, alloc.device
+            )));
+        }
+        let removed = dev.remove_task(alloc.task);
+        debug_assert_eq!(removed, 1, "exactly the staged reservation is replaced");
+        match dev.reserve(alloc.window, alloc.cores, alloc.task, deadline, preemptible) {
+            Ok(()) => {
+                self.registry[idx] = RegistryOp::Place(alloc);
+                Ok(())
+            }
+            Err(e) => {
+                dev.reserve(old.window, old.cores, old.task, deadline, preemptible)
+                    .expect("restoring the original staged reservation cannot fail");
+                Err(e)
+            }
+        }
+    }
+
+    /// Stage a preemption eviction: removes the victim's core reservation
+    /// and its future link slots from the plan's scratch copies and records
+    /// the `PreemptedPendingRealloc` transition. Returns the victim's
+    /// (still-registered) allocation for reporting.
+    pub fn stage_eviction(
+        &mut self,
+        st: &NetworkState,
+        victim: TaskId,
+        now: SimTime,
+    ) -> Result<Allocation> {
+        let rec = st
+            .task(victim)
+            .ok_or_else(|| Error::Invariant(format!("evicting unknown task {victim:?}")))?;
+        if rec.spec.priority != Priority::Low {
+            return Err(Error::Invariant(format!(
+                "eviction victim {victim:?} is not low-priority"
+            )));
+        }
+        // Terminal tasks keep their last allocation for metrics attribution,
+        // so the allocation check alone would let a Completed/Failed task be
+        // "evicted" back to life — require a live allocation explicitly.
+        if !rec.state.is_active_allocation() {
+            return Err(Error::Invariant(format!(
+                "eviction victim {victim:?} is not actively allocated ({:?})",
+                rec.state
+            )));
+        }
+        let alloc = rec.allocation.clone().ok_or_else(|| {
+            Error::Invariant(format!("evicting unallocated task {victim:?}"))
+        })?;
+        if self.evicted_in_plan(victim) {
+            return Err(Error::Invariant(format!("{victim:?} already evicted in this plan")));
+        }
+        self.device_scratch(st, alloc.device).remove_task(victim);
+        self.link_scratch(st).remove_owner_from(victim, now);
+        self.evicted.insert(victim);
+        self.registry.push(RegistryOp::Evict { task: victim });
+        self.evictions += 1;
+        Ok(alloc)
+    }
+
+    /// Stage a terminal failure for a task that holds no resources in the
+    /// plan's view (an evicted victim that could not be re-placed).
+    pub fn stage_fail(&mut self, task: TaskId, reason: FailReason, now: SimTime) {
+        self.registry.push(RegistryOp::Fail { task, reason, now });
+    }
+
+    /// Dismantle the plan for [`NetworkState::apply`].
+    pub(crate) fn into_parts(self) -> PlanParts {
+        PlanParts {
+            version: self.version,
+            link: self.link,
+            devices: self.devices,
+            registry: self.registry,
+        }
+    }
+}
+
+/// One candidate produced by [`search_candidates`].
+pub struct CandidatePlan<T> {
+    /// The fully staged, committable plan.
+    pub plan: PlacementPlan,
+    /// Cost key: `(evictions, finish)` — fewest evictions first, then the
+    /// earliest finish of the placement the plan commits.
+    pub cost: (u32, SimTime),
+    /// Builder-specific payload describing what the plan places.
+    pub payload: T,
+}
+
+/// Build candidate plans with `build` over `candidates` (already in
+/// preference order) and return the minimum-cost one: fewest evictions,
+/// then earliest finish, ties broken by candidate order. Losing candidates
+/// are dropped without touching the network — that is the point.
+///
+/// `build` returns `None` when no feasible plan exists for a candidate.
+/// `eviction_floor` is the smallest eviction count any candidate can
+/// possibly achieve (the caller usually knows it from a cheap read-only
+/// probe over the candidates); the search commits the first plan that
+/// reaches the floor instead of building provably-losing plans for the
+/// remaining candidates.
+///
+/// Contract caveat: the floor short-circuit takes the *first* plan at the
+/// floor in candidate order, which is the exact minimum only when every
+/// floor-reaching candidate shares the same finish — true for both
+/// current callers, whose finish is fixed by link timing before the
+/// device is chosen. A caller with per-candidate finishes should pass an
+/// unreachable floor (e.g. `0` when evictions are always needed) to force
+/// the full scan.
+pub fn search_candidates<C: Copy, T>(
+    candidates: &[C],
+    eviction_floor: u32,
+    mut build: impl FnMut(C) -> Option<CandidatePlan<T>>,
+) -> Option<CandidatePlan<T>> {
+    let mut best: Option<CandidatePlan<T>> = None;
+    for &c in candidates {
+        let Some(cand) = build(c) else { continue };
+        if cand.cost.0 <= eviction_floor {
+            return Some(cand); // unbeatable: at the floor, earliest in order
+        }
+        match &best {
+            Some(b) if b.cost <= cand.cost => {}
+            _ => best = Some(cand),
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::task::{FrameId, Priority, TaskSpec, TaskState};
+
+    fn state() -> (SystemConfig, NetworkState) {
+        let cfg = SystemConfig::default();
+        let st = NetworkState::new(&cfg);
+        (cfg, st)
+    }
+
+    fn register(st: &mut NetworkState, source: u32, priority: Priority, deadline_s: f64) -> TaskId {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(0),
+            source: DeviceId(source),
+            priority,
+            deadline: SimTime::from_secs_f64(deadline_s),
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        id
+    }
+
+    fn win(a_s: f64, b_s: f64) -> Window {
+        Window::new(SimTime::from_secs_f64(a_s), SimTime::from_secs_f64(b_s))
+    }
+
+    #[test]
+    fn staged_ops_are_invisible_until_apply() {
+        let (_, mut st) = state();
+        let id = register(&mut st, 0, Priority::Low, 60.0);
+        let before = st.fingerprint();
+        let mut plan = PlacementPlan::new(&st);
+        plan.stage_placement(
+            &st,
+            Allocation { task: id, device: DeviceId(0), window: win(0.0, 17.0), cores: 2, offloaded: false },
+        )
+        .unwrap();
+        plan.stage_link_earliest(
+            &st,
+            SimTime::ZERO,
+            SimDuration::from_millis(5),
+            SlotKind::LpAllocMsg,
+            id,
+        );
+        assert_eq!(st.fingerprint(), before, "staging never touches the state");
+        st.apply(plan).unwrap();
+        assert_ne!(st.fingerprint(), before);
+        assert_eq!(st.task(id).unwrap().state, TaskState::Allocated);
+        assert_eq!(st.device(DeviceId(0)).len(), 1);
+        assert_eq!(st.link().len(), 1);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dropped_plan_leaves_zero_residue() {
+        let (_, mut st) = state();
+        let id = register(&mut st, 1, Priority::Low, 60.0);
+        let before = st.fingerprint();
+        {
+            let mut plan = PlacementPlan::new(&st);
+            plan.stage_placement(
+                &st,
+                Allocation { task: id, device: DeviceId(1), window: win(0.0, 17.0), cores: 4, offloaded: false },
+            )
+            .unwrap();
+            // Dropped here.
+        }
+        assert_eq!(st.fingerprint(), before);
+    }
+
+    #[test]
+    fn staged_operations_see_each_other() {
+        let (_, mut st) = state();
+        let a = register(&mut st, 0, Priority::Low, 60.0);
+        let b = register(&mut st, 0, Priority::Low, 60.0);
+        let mut plan = PlacementPlan::new(&st);
+        plan.stage_placement(
+            &st,
+            Allocation { task: a, device: DeviceId(0), window: win(0.0, 17.0), cores: 4, offloaded: false },
+        )
+        .unwrap();
+        // The second placement must observe the first: the device is full.
+        let err = plan.stage_placement(
+            &st,
+            Allocation { task: b, device: DeviceId(0), window: win(5.0, 12.0), cores: 2, offloaded: false },
+        );
+        assert!(err.is_err(), "plan view must include staged reservations");
+        // And a staged link slot moves the next earliest fit.
+        let dur = SimDuration::from_millis(10);
+        let w1 = plan.stage_link_earliest(&st, SimTime::ZERO, dur, SlotKind::LpAllocMsg, a);
+        let w2 = plan.stage_link_earliest(&st, SimTime::ZERO, dur, SlotKind::LpAllocMsg, b);
+        assert_eq!(w1.start, SimTime::ZERO);
+        assert_eq!(w2.start, w1.end);
+    }
+
+    #[test]
+    fn eviction_frees_resources_inside_the_plan() {
+        let (cfg, mut st) = state();
+        let victim = register(&mut st, 0, Priority::Low, 60.0);
+        let mut setup = PlacementPlan::new(&st);
+        setup
+            .stage_placement(
+                &st,
+                Allocation { task: victim, device: DeviceId(0), window: win(0.0, 17.0), cores: 4, offloaded: false },
+            )
+            .unwrap();
+        setup.stage_link_earliest(
+            &st,
+            SimTime::from_secs_f64(17.0),
+            st.link_model.slot_duration(&cfg, SlotKind::StateUpdate),
+            SlotKind::StateUpdate,
+            victim,
+        );
+        st.apply(setup).unwrap();
+
+        let hp = register(&mut st, 0, Priority::High, 5.0);
+        let mut plan = PlacementPlan::new(&st);
+        assert!(!plan.device_view(&st, DeviceId(0)).fits(&win(0.0, 1.2), 1));
+        let old = plan.stage_eviction(&st, victim, SimTime::ZERO).unwrap();
+        assert_eq!(old.cores, 4);
+        assert!(plan.device_view(&st, DeviceId(0)).fits(&win(0.0, 1.2), 1));
+        assert_eq!(plan.link_view(&st).len(), 0, "victim's future link slot gone in-view");
+        assert_eq!(plan.evictions(), 1);
+        plan.stage_placement(
+            &st,
+            Allocation { task: hp, device: DeviceId(0), window: win(0.0, 1.2), cores: 1, offloaded: false },
+        )
+        .unwrap();
+        plan.stage_fail(victim, FailReason::Preempted, SimTime::ZERO);
+        st.apply(plan).unwrap();
+        assert_eq!(st.task(victim).unwrap().state, TaskState::Failed(FailReason::Preempted));
+        assert_eq!(st.task(victim).unwrap().preemptions, 1);
+        assert_eq!(st.task(hp).unwrap().state, TaskState::Allocated);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_plans_are_rejected_whole() {
+        let (_, mut st) = state();
+        let a = register(&mut st, 0, Priority::Low, 60.0);
+        let mut plan = PlacementPlan::new(&st);
+        plan.stage_placement(
+            &st,
+            Allocation { task: a, device: DeviceId(0), window: win(0.0, 17.0), cores: 2, offloaded: false },
+        )
+        .unwrap();
+        // The state moves on underneath the plan.
+        let _b = register(&mut st, 1, Priority::Low, 60.0);
+        let before = st.fingerprint();
+        assert!(st.apply(plan).is_err(), "stale plan must be rejected");
+        assert_eq!(st.fingerprint(), before, "rejection leaves zero residue");
+    }
+
+    #[test]
+    fn restage_placement_upgrades_or_restores() {
+        let (_, mut st) = state();
+        let a = register(&mut st, 0, Priority::Low, 60.0);
+        let blocker = register(&mut st, 0, Priority::Low, 60.0);
+        let mut plan = PlacementPlan::new(&st);
+        plan.stage_placement(
+            &st,
+            Allocation { task: a, device: DeviceId(0), window: win(0.0, 17.0), cores: 2, offloaded: false },
+        )
+        .unwrap();
+        // Upgrade succeeds on the idle device.
+        plan.restage_placement(
+            &st,
+            Allocation { task: a, device: DeviceId(0), window: win(0.0, 10.0), cores: 4, offloaded: false },
+        )
+        .unwrap();
+        // A sibling now occupies the rest; a further (invalid) widening fails
+        // and leaves the staged reservation intact.
+        plan.stage_placement(
+            &st,
+            Allocation { task: blocker, device: DeviceId(0), window: win(10.0, 27.0), cores: 4, offloaded: false },
+        )
+        .unwrap();
+        let err = plan.restage_placement(
+            &st,
+            Allocation { task: a, device: DeviceId(0), window: win(0.0, 12.0), cores: 4, offloaded: false },
+        );
+        assert!(err.is_err());
+        st.apply(plan).unwrap();
+        let alloc = st.task(a).unwrap().allocation.clone().unwrap();
+        assert_eq!(alloc.cores, 4);
+        assert_eq!(alloc.window, win(0.0, 10.0));
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unstage_link_keeps_history() {
+        let (_, mut st) = state();
+        let a = register(&mut st, 0, Priority::Low, 60.0);
+        // Historical base slot for `a`.
+        st.charge_link_message(SimTime::ZERO, SimDuration::from_millis(3), SlotKind::LpAllocMsg, a);
+        let mut plan = PlacementPlan::new(&st);
+        let w = plan.stage_link_earliest(
+            &st,
+            SimTime::from_secs_f64(1.0),
+            SimDuration::from_millis(3),
+            SlotKind::InputTransfer,
+            a,
+        );
+        assert!(plan.unstage_link_at(a, w.start));
+        assert!(!plan.unstage_link_at(a, w.start), "second unstage is a no-op");
+        assert_eq!(plan.link_view(&st).len(), 1, "historical slot survives");
+    }
+
+    #[test]
+    fn candidate_search_prefers_fewest_evictions_then_order() {
+        // Candidates 0/1/2: 2-eviction, 1-eviction, 1-eviction plans — the
+        // first 1-eviction candidate must win; a later 0-eviction candidate
+        // would short-circuit.
+        let (_, st) = state();
+        let costs = [2u32, 1, 1];
+        let picked = search_candidates(&[0usize, 1, 2], 0, |i| {
+            Some(CandidatePlan {
+                plan: PlacementPlan::new(&st),
+                cost: (costs[i], SimTime::ZERO),
+                payload: i,
+            })
+        })
+        .unwrap();
+        assert_eq!(picked.payload, 1);
+        let picked = search_candidates(&[0usize, 1, 2], 0, |i| {
+            let ev = [2u32, 0, 0][i];
+            Some(CandidatePlan {
+                plan: PlacementPlan::new(&st),
+                cost: (ev, SimTime::ZERO),
+                payload: i,
+            })
+        })
+        .unwrap();
+        assert_eq!(picked.payload, 1, "first floor-reaching candidate short-circuits");
+        // A caller-known floor of 1 stops the scan at the first 1-eviction
+        // plan instead of building the remaining (provably losing) ones.
+        let mut built = 0;
+        let picked = search_candidates(&[0usize, 1, 2], 1, |i| {
+            built += 1;
+            Some(CandidatePlan {
+                plan: PlacementPlan::new(&st),
+                cost: (1, SimTime::ZERO),
+                payload: i,
+            })
+        })
+        .unwrap();
+        assert_eq!(picked.payload, 0);
+        assert_eq!(built, 1, "floor short-circuit avoids losing builds");
+    }
+}

@@ -7,29 +7,44 @@
 //! the failed task and finally attempts to reallocate the preempted
 //! low-priority task by searching for a device can execute it before its
 //! deadline."
+//!
+//! The whole sequence — eviction, preemption notice, high-priority retry,
+//! victim reallocation (or terminal failure) — is staged into **one**
+//! [`PlacementPlan`] and committed atomically. Candidates are tried in the
+//! paper's victim order (farthest deadline; the §8 set-aware extension
+//! reorders doomed-set members to the front); a candidate whose eviction
+//! does not actually make the retry succeed is *dropped*, not committed,
+//! so a failed preemption attempt no longer ejects a victim for nothing —
+//! a semantic improvement the transactional layer makes free (see
+//! KNOWN_ISSUES.md).
 
 use std::time::Instant;
 
 use crate::config::SystemConfig;
 use crate::resources::SlotKind;
-use crate::scheduler::{low_priority, PatsScheduler, PreemptionReport};
+use crate::scheduler::plan::PlacementPlan;
+use crate::scheduler::{high_priority, low_priority, PatsScheduler, PreemptionReport};
 use crate::state::NetworkState;
 use crate::task::{FailReason, TaskId, Window};
 use crate::time::SimTime;
 
-/// Signature of the single-shot high-priority allocator being retried.
-pub type RetryFn = fn(&mut NetworkState, &SystemConfig, TaskId, SimTime) -> Option<Window>;
+/// How many candidate victims the plan search tries before giving up. The
+/// first candidate almost always suffices (its eviction conflicts with the
+/// processing window by construction); deeper candidates only matter when
+/// a non-preemptible spike sits inside the window.
+pub const MAX_VICTIM_CANDIDATES: usize = 4;
 
-/// Eject the farthest-deadline conflicting low-priority task on the source
-/// device, re-run the high-priority allocation, then try to reallocate the
-/// victim.
+/// Candidate-plan search over the §4 victim order: for each candidate,
+/// stage eviction + preemption notice + high-priority retry + victim
+/// reallocation into one plan, and commit the first plan whose retry
+/// succeeds (all candidate plans cost one eviction and finish at the same
+/// reconstructed window, so the paper's victim order is the tie-break).
 pub fn preempt_and_retry(
     sched: &PatsScheduler,
     st: &mut NetworkState,
     cfg: &SystemConfig,
     task: TaskId,
     now: SimTime,
-    retry: RetryFn,
 ) -> (Option<Window>, Option<PreemptionReport>) {
     let Some(rec) = st.task(task) else {
         return (None, None);
@@ -42,81 +57,95 @@ pub fn preempt_and_retry(
     }
 
     // Reconstruct the conflicting processing window the failed attempt
-    // wanted (same arithmetic as high_priority::try_allocate).
+    // wanted (same arithmetic as high_priority::stage_allocation).
     let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
-    let t1 = st.link.earliest_fit(now, msg_dur) + msg_dur;
+    let t1 = st.link().earliest_fit(now, msg_dur) + msg_dur;
     let window = Window::from_duration(t1, cfg.hp_slot());
 
-    // Select the victim: conflicting, preemptible, farthest deadline. With
-    // the §8 set-aware extension, a candidate whose request set is already
-    // doomed (a sibling terminally failed) is preferred — ejecting it
-    // cannot sink an otherwise-completable frame. Ties keep the
+    // Candidate victims: conflicting, preemptible, farthest deadline first.
+    // With the §8 set-aware extension, candidates whose request set is
+    // already doomed (a sibling terminally failed) are preferred — ejecting
+    // one cannot sink an otherwise-completable frame. Ties keep the
     // farthest-deadline order.
-    let candidates = st.device(source).preemption_candidates(&window);
-    let chosen = if sched.set_aware_victims {
-        candidates
-            .iter()
-            .find(|slot| {
-                st.task(slot.task)
-                    .and_then(|rec| rec.spec.request)
-                    .and_then(|rid| st.request(rid))
-                    .map(|req| {
-                        req.tasks.iter().any(|t| {
-                            matches!(
-                                st.task(*t).map(|r| &r.state),
-                                Some(crate::task::TaskState::Failed(_))
-                            )
-                        })
-                    })
-                    .unwrap_or(false)
-            })
-            .or_else(|| candidates.first())
-    } else {
-        candidates.first()
-    };
-    let victim = match chosen {
-        Some(slot) => (slot.task, slot.cores, slot.window.start <= now),
-        None => return (None, None), // nothing preemptible conflicts
-    };
-    let (victim_id, victim_cores, victim_was_running) = victim;
-
-    // Eject: release the victim's core + future link reservations and send
-    // the preemption notice over the link.
-    st.preempt_task(victim_id, now)
-        .expect("candidate came from the device timeline");
-    st.reserve_link_message(cfg, now, SlotKind::PreemptMsg, victim_id);
-
-    // Re-run the high-priority allocation.
-    let hp_window = retry(st, cfg, task, now);
-
-    // Attempt to reallocate the victim before its own deadline.
-    let t0 = Instant::now();
-    let reallocation = if sched.reallocate {
-        low_priority::allocate_single(st, cfg, victim_id, now)
-    } else {
-        None
-    };
-    let realloc_search = t0.elapsed();
-    if reallocation.is_none() {
-        st.fail_task(victim_id, FailReason::Preempted, now);
+    let mut ordered: Vec<(TaskId, u32, bool)> = st
+        .device(source)
+        .preemption_candidates(&window)
+        .iter()
+        .map(|slot| (slot.task, slot.cores, slot.window.start <= now))
+        .collect();
+    if sched.set_aware_victims {
+        ordered.sort_by_key(|&(victim, _, _)| !in_doomed_set(st, victim)); // stable
     }
 
-    (
-        hp_window,
-        Some(PreemptionReport {
-            victim: victim_id,
-            victim_cores,
-            victim_was_running,
-            reallocation,
-            realloc_search,
-        }),
-    )
+    // No `fits_without` pre-probe here, unlike the rescue/workstealer
+    // searches: the reconstructed `window` is only approximate for this
+    // path — the staged preempt notice occupies the link before the HP
+    // retry recomputes its message slot, which can shift the true window
+    // later (possibly past a spike the reconstructed window overlaps). A
+    // probe on the reconstructed window could wrongly discard a viable
+    // candidate, so each candidate gets the exact staged retry instead.
+    for &(victim_id, victim_cores, victim_was_running) in
+        ordered.iter().take(MAX_VICTIM_CANDIDATES)
+    {
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_eviction(st, victim_id, now)
+            .expect("candidate came from the device timeline");
+        let preempt_dur = st.link_model.slot_duration(cfg, SlotKind::PreemptMsg);
+        plan.stage_link_earliest(st, now, preempt_dur, SlotKind::PreemptMsg, victim_id);
+
+        // Re-run the high-priority allocation against the plan view.
+        let Some(hp_window) = high_priority::stage_allocation(&mut plan, st, cfg, task, now)
+        else {
+            continue; // eviction insufficient: drop the plan, zero residue
+        };
+
+        // Attempt to reallocate the victim before its own deadline, inside
+        // the same transaction.
+        let t0 = Instant::now();
+        let reallocation = if sched.reallocate {
+            low_priority::stage_single(&mut plan, st, cfg, victim_id, now)
+        } else {
+            None
+        };
+        let realloc_search = t0.elapsed();
+        if reallocation.is_none() {
+            plan.stage_fail(victim_id, FailReason::Preempted, now);
+        }
+        st.apply(plan).expect("freshly staged preemption plan");
+        return (
+            Some(hp_window),
+            Some(PreemptionReport {
+                victim: victim_id,
+                victim_cores,
+                victim_was_running,
+                reallocation,
+                realloc_search,
+            }),
+        );
+    }
+    (None, None) // nothing preemptible conflicts, or no eviction suffices
+}
+
+/// Is `victim` part of a request set that already has a terminally failed
+/// sibling (§8 set-aware victim selection)?
+fn in_doomed_set(st: &NetworkState, victim: TaskId) -> bool {
+    st.task(victim)
+        .and_then(|rec| rec.spec.request)
+        .and_then(|rid| st.request(rid))
+        .map(|req| {
+            req.tasks.iter().any(|t| {
+                matches!(
+                    st.task(*t).map(|r| &r.state),
+                    Some(crate::task::TaskState::Failed(_))
+                )
+            })
+        })
+        .unwrap_or(false)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::high_priority;
     use crate::task::{Allocation, DeviceId, FrameId, Priority, TaskSpec, TaskState};
 
     fn setup() -> (SystemConfig, NetworkState, PatsScheduler) {
@@ -144,15 +173,20 @@ mod tests {
         id
     }
 
+    fn place(st: &mut NetworkState, alloc: Allocation) {
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_placement(st, alloc).unwrap();
+        st.apply(plan).unwrap();
+    }
+
     fn block_device(st: &mut NetworkState, dev: u32, id: TaskId, cores: u32, until_s: f64) {
-        st.commit_allocation(Allocation {
+        place(st, Allocation {
             task: id,
             device: DeviceId(dev),
             window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(until_s)),
             cores,
             offloaded: false,
-        })
-        .unwrap();
+        });
     }
 
     #[test]
@@ -168,14 +202,7 @@ mod tests {
             Priority::High,
             SimTime::from_secs_f64(cfg.hp_deadline_s),
         );
-        let (win, report) = preempt_and_retry(
-            &sched,
-            &mut st,
-            &cfg,
-            hp,
-            SimTime::ZERO,
-            high_priority::try_allocate,
-        );
+        let (win, report) = preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
         assert!(win.is_some());
         let report = report.unwrap();
         assert_eq!(report.victim, far, "farthest deadline is selected");
@@ -195,14 +222,7 @@ mod tests {
             Priority::High,
             SimTime::from_secs_f64(cfg.hp_deadline_s),
         );
-        let (win, report) = preempt_and_retry(
-            &sched,
-            &mut st,
-            &cfg,
-            hp,
-            SimTime::ZERO,
-            high_priority::try_allocate,
-        );
+        let (win, report) = preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
         assert!(win.is_some());
         let report = report.unwrap();
         let realloc = report.reallocation.expect("an idle network must host the victim");
@@ -229,14 +249,7 @@ mod tests {
             Priority::High,
             SimTime::from_secs_f64(cfg.hp_deadline_s),
         );
-        let (win, report) = preempt_and_retry(
-            &sched,
-            &mut st,
-            &cfg,
-            hp,
-            SimTime::ZERO,
-            high_priority::try_allocate,
-        );
+        let (win, report) = preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
         assert!(win.is_some());
         let report = report.unwrap();
         assert!(report.reallocation.is_none());
@@ -258,14 +271,13 @@ mod tests {
                 Priority::High,
                 SimTime::from_secs_f64(cfg.hp_deadline_s),
             );
-            st.commit_allocation(Allocation {
+            place(&mut st, Allocation {
                 task: id,
                 device: DeviceId(0),
                 window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(1.2)),
                 cores: 1,
                 offloaded: false,
-            })
-            .unwrap();
+            });
         }
         let hp = register(
             &mut st,
@@ -273,14 +285,7 @@ mod tests {
             Priority::High,
             SimTime::from_secs_f64(cfg.hp_deadline_s),
         );
-        let (win, report) = preempt_and_retry(
-            &sched,
-            &mut st,
-            &cfg,
-            hp,
-            SimTime::ZERO,
-            high_priority::try_allocate,
-        );
+        let (win, report) = preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
         assert!(win.is_none());
         assert!(report.is_none(), "high-priority tasks are never victims");
         st.check_invariants().unwrap();
@@ -298,14 +303,7 @@ mod tests {
             Priority::High,
             SimTime::from_secs_f64(cfg.hp_deadline_s),
         );
-        let (_, report) = preempt_and_retry(
-            &sched,
-            &mut st,
-            &cfg,
-            hp,
-            SimTime::ZERO,
-            high_priority::try_allocate,
-        );
+        let (_, report) = preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
         assert!(report.unwrap().reallocation.is_none());
         assert_eq!(
             st.task(victim).unwrap().state,
@@ -324,22 +322,95 @@ mod tests {
             Priority::High,
             SimTime::from_secs_f64(cfg.hp_deadline_s),
         );
-        preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO, high_priority::try_allocate);
+        preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
         let preempts = st
-            .link
+            .link()
             .slots()
             .iter()
             .filter(|s| s.kind == SlotKind::PreemptMsg)
             .count();
         assert_eq!(preempts, 1);
     }
+
+    /// No conflicting task is preemptible: there are no candidates, the
+    /// search commits nothing, and the state is bit-identical.
+    #[test]
+    fn no_candidate_search_leaves_zero_residue() {
+        let (cfg, mut st, sched) = setup();
+        let wall = register(&mut st, 0, Priority::High, SimTime::from_secs_f64(60.0));
+        place(&mut st, Allocation {
+            task: wall,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(30.0)),
+            cores: 4,
+            offloaded: false,
+        });
+        let before = st.fingerprint();
+        let hp = register(
+            &mut st,
+            0,
+            Priority::High,
+            SimTime::from_secs_f64(cfg.hp_deadline_s),
+        );
+        let after_register = st.fingerprint();
+        let (win, report) = preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
+        assert!(win.is_none());
+        assert!(report.is_none());
+        assert_eq!(st.fingerprint(), after_register, "failed search leaves zero residue");
+        assert_ne!(before, after_register, "sanity: registration is visible");
+        st.check_invariants().unwrap();
+    }
+
+    /// A victim exists but evicting it cannot free the window (a
+    /// non-preemptible 4-core spike covers its tail): the candidate plan
+    /// must be dropped — no eviction, no preempt notice, no failed victim.
+    /// The pre-plan code ejected the victim anyway; that wart is retired.
+    #[test]
+    fn insufficient_eviction_commits_nothing() {
+        let (cfg, mut st, sched) = setup();
+        let victim = register(&mut st, 0, Priority::Low, SimTime::from_secs_f64(60.0));
+        place(&mut st, Allocation {
+            task: victim,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(0.5)),
+            cores: 2,
+            offloaded: false,
+        });
+        let spike = register(&mut st, 0, Priority::High, SimTime::from_secs_f64(60.0));
+        place(&mut st, Allocation {
+            task: spike,
+            device: DeviceId(0),
+            window: Window::new(SimTime::from_secs_f64(0.5), SimTime::from_secs_f64(1.4)),
+            cores: 4,
+            offloaded: false,
+        });
+        let hp = register(
+            &mut st,
+            0,
+            Priority::High,
+            SimTime::from_secs_f64(cfg.hp_deadline_s),
+        );
+        let after_register = st.fingerprint();
+        let (win, report) = preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
+        assert!(win.is_none(), "the spike blocks every candidate plan");
+        assert!(report.is_none(), "no eviction is committed for nothing");
+        assert_eq!(st.task(victim).unwrap().state, TaskState::Allocated);
+        assert_eq!(st.task(victim).unwrap().preemptions, 0);
+        assert_eq!(st.fingerprint(), after_register, "zero residue");
+        st.check_invariants().unwrap();
+    }
 }
 
 #[cfg(test)]
 mod set_aware_tests {
     use super::*;
-    use crate::scheduler::high_priority;
     use crate::task::{Allocation, DeviceId, FrameId, LpRequest, Priority, TaskSpec, Window};
+
+    fn place(st: &mut NetworkState, alloc: Allocation) {
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_placement(st, alloc).unwrap();
+        st.apply(plan).unwrap();
+    }
 
     /// Build the contention scene: a doomed set's task + a healthy task
     /// with a farther deadline saturating device 0, plus a pending HP task.
@@ -371,14 +442,13 @@ mod set_aware_tests {
             tasks: vec![a, b],
         });
         st.fail_task(b, FailReason::NoResources, SimTime::ZERO);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: a,
             device: DeviceId(0),
             window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
             cores: 2,
             offloaded: false,
-        })
-        .unwrap();
+        });
 
         // Healthy lone task with a FARTHER deadline (the paper's rule would
         // pick this one and sink a completable frame).
@@ -392,14 +462,13 @@ mod set_aware_tests {
             spawn: SimTime::ZERO,
             request: None,
         });
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: healthy,
             device: DeviceId(0),
             window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
             cores: 2,
             offloaded: false,
-        })
-        .unwrap();
+        });
 
         let hp = st.fresh_task_id();
         st.register_task(TaskSpec {
@@ -421,14 +490,7 @@ mod set_aware_tests {
         let (cfg, mut st, _a, healthy, hp) = scene();
         let sched =
             PatsScheduler { preemption: true, reallocate: false, set_aware_victims: false };
-        let (win, report) = preempt_and_retry(
-            &sched,
-            &mut st,
-            &cfg,
-            hp,
-            SimTime::ZERO,
-            high_priority::try_allocate,
-        );
+        let (win, report) = preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
         assert!(win.is_some());
         assert_eq!(report.unwrap().victim, healthy);
         st.check_invariants().unwrap();
@@ -440,14 +502,7 @@ mod set_aware_tests {
         let (cfg, mut st, a, _healthy, hp) = scene();
         let sched =
             PatsScheduler { preemption: true, reallocate: false, set_aware_victims: true };
-        let (win, report) = preempt_and_retry(
-            &sched,
-            &mut st,
-            &cfg,
-            hp,
-            SimTime::ZERO,
-            high_priority::try_allocate,
-        );
+        let (win, report) = preempt_and_retry(&sched, &mut st, &cfg, hp, SimTime::ZERO);
         assert!(win.is_some());
         assert_eq!(report.unwrap().victim, a, "victim comes from the doomed set");
         st.check_invariants().unwrap();

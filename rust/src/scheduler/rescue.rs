@@ -12,10 +12,19 @@
 //! * **High-priority orphans** get first claim (they are handed over
 //!   HP-first by `NetworkState::mark_device_down`) and are *relocated*: the
 //!   controller re-issues the allocation message and re-sends the cached
-//!   input to an adoptive device. If no device has a free core, the rescue
-//!   may itself fire the preemption mechanism — evicting the
-//!   farthest-deadline low-priority task on the least-loaded candidate,
-//!   just as §4 does on the source device.
+//!   input to an adoptive device.
+//!
+//! Relocation is a **candidate-plan search**: the link plan (allocation
+//! message + input re-transfer) is staged once, then a full
+//! [`PlacementPlan`] is built per candidate device — least-loaded first,
+//! up to [`RESCUE_TOP_K`] candidates — and the minimum-cost plan commits
+//! (fewest evictions, then earliest finish; every candidate finishes at
+//! the same link-determined window, so the cost order reduces to "a free
+//! core beats an eviction, then least-loaded order"). Losing candidates
+//! are dropped without touching the network, which means an eviction that
+//! would not actually make room is *never committed* — the pre-plan
+//! implementation ejected such victims and then gave up (see
+//! KNOWN_ISSUES.md for the retired wart).
 //!
 //! Modelling assumption (documented in KNOWN_ISSUES.md): every task input
 //! crossed the AP-routed link when it was first scheduled, so the
@@ -28,6 +37,7 @@ use std::time::Instant;
 use crate::config::SystemConfig;
 use crate::resources::SlotKind;
 use crate::scheduler::high_priority::HP_CORES;
+use crate::scheduler::plan::{search_candidates, CandidatePlan, PlacementPlan};
 use crate::scheduler::{
     low_priority, HpRescue, PatsScheduler, PreemptionReport, RescueOutcome,
 };
@@ -35,17 +45,34 @@ use crate::state::NetworkState;
 use crate::task::{Allocation, DeviceId, FailReason, Priority, TaskId, Window};
 use crate::time::SimTime;
 
-/// Result of one relocation attempt for a high-priority orphan.
-///
-/// `victim` is set when the preemption mechanism fired during the attempt —
-/// even if the retry still failed — so the caller can decide the victim's
-/// fate (reallocate like the scheduler, requeue like a workstealer).
+/// How many adoptive-device candidates the relocation search builds plans
+/// for. Candidates are least-loaded-first, so the cap trades a bounded
+/// amount of plan construction for fleet-scale rescue cost.
+pub const RESCUE_TOP_K: usize = 8;
+
+/// What a committed relocation did to make room, if anything.
 #[derive(Debug, Clone)]
-pub struct RelocationAttempt {
-    /// The committed adoptive placement, if any.
-    pub window: Option<(DeviceId, Window)>,
-    /// `(victim id, cores held, was running)` when an eviction happened.
-    pub victim: Option<(TaskId, u32, bool)>,
+pub struct Relocation {
+    /// The adoptive device.
+    pub device: DeviceId,
+    /// The relocated processing window.
+    pub window: Window,
+    /// The eviction the committed plan contained, if one was needed.
+    pub preemption: Option<PreemptionReport>,
+}
+
+/// How a relocation plan disposes of an eviction victim.
+#[derive(Debug, Clone, Copy)]
+pub enum VictimPolicy {
+    /// §4 disposal: stage a reallocation attempt in the same plan (when
+    /// `reallocate` is set), else stage a terminal `Preempted` failure.
+    Reallocate {
+        /// Attempt the reallocation (the scheduler's `reallocate` flag).
+        reallocate: bool,
+    },
+    /// Workstealer disposal: the victim is left `PreemptedPendingRealloc`
+    /// and the caller requeues it — its reallocation is a later steal.
+    Requeue,
 }
 
 /// Re-plan every orphan of a failed device with the paper's scheduler:
@@ -68,41 +95,18 @@ pub fn rescue_all(
         let priority = rec.spec.priority;
         match priority {
             Priority::High => {
-                let attempt = relocate_hp(st, cfg, task, now, sched.preemption);
-                // Victim disposal mirrors §4: attempt reallocation, else a
-                // terminal `Preempted` failure.
-                let report = attempt.victim.map(|(victim, cores, was_running)| {
-                    let t0 = Instant::now();
-                    let reallocation = if sched.reallocate {
-                        low_priority::allocate_single(st, cfg, victim, now)
-                    } else {
-                        None
-                    };
-                    if reallocation.is_none() {
-                        st.fail_task(victim, FailReason::Preempted, now);
-                    }
-                    PreemptionReport {
-                        victim,
-                        victim_cores: cores,
-                        victim_was_running: was_running,
-                        reallocation,
-                        realloc_search: t0.elapsed(),
-                    }
-                });
-                match attempt.window {
-                    Some((device, window)) => out.hp_rescued.push(HpRescue {
+                let disposal = VictimPolicy::Reallocate { reallocate: sched.reallocate };
+                match relocate_hp(st, cfg, task, now, sched.preemption, disposal) {
+                    Some(rel) => out.hp_rescued.push(HpRescue {
                         task,
-                        device,
-                        window,
-                        preemption: report,
+                        device: rel.device,
+                        window: rel.window,
+                        preemption: rel.preemption,
                     }),
-                    None => {
-                        // The orphan is lost, but any eviction (and the
-                        // victim's committed reallocation) really happened
-                        // and must reach the simulator/metrics.
-                        out.lost.push((task, Priority::High));
-                        out.failed_rescue_evictions.extend(report);
-                    }
+                    // No feasible candidate plan: the orphan is lost and —
+                    // because losing plans are dropped, not committed —
+                    // nothing else in the network changed.
+                    None => out.lost.push((task, Priority::High)),
                 }
             }
             Priority::Low => match low_priority::allocate_single(st, cfg, task, now) {
@@ -114,108 +118,161 @@ pub fn rescue_all(
     out
 }
 
-/// Relocate an orphaned high-priority task onto a surviving device.
+/// Relocate an orphaned high-priority task onto a surviving device via
+/// candidate-plan search (see the module docs).
 ///
-/// The controller pays an allocation message plus an input re-transfer on
-/// the link, then searches the up devices least-loaded-first for a free
-/// core over the relocated window. With `allow_preemption`, a failed search
-/// continues with a single §4-style eviction: the farthest-deadline
-/// preemptible task on the least-loaded candidate device.
+/// The committed plan pays an allocation message plus an input re-transfer
+/// on the link, the relocated processing window, its state update, and —
+/// only when no candidate has a free core and `allow_preemption` is set —
+/// a single §4-style eviction (farthest-deadline victim on the candidate
+/// device) with its preemption notice and victim disposal.
 pub fn relocate_hp(
     st: &mut NetworkState,
     cfg: &SystemConfig,
     task: TaskId,
     now: SimTime,
     allow_preemption: bool,
-) -> RelocationAttempt {
-    let none = RelocationAttempt { window: None, victim: None };
-    let Some(rec) = st.task(task) else { return none };
+    disposal: VictimPolicy,
+) -> Option<Relocation> {
+    let rec = st.task(task)?;
     let source = rec.spec.source;
     let deadline = rec.spec.deadline;
 
     // Link plan: allocation message, then the cached-input re-transfer.
-    // Both are computed before any reservation; the second `earliest_fit`
+    // Both are computed before any staging; the second `earliest_fit`
     // starts after the first window ends, so they cannot overlap.
     let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
-    let msg_start = st.link.earliest_fit(now, msg_dur);
+    let msg_start = st.link().earliest_fit(now, msg_dur);
     let xfer_dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
-    let xfer_start = st.link.earliest_fit(msg_start + msg_dur, xfer_dur);
+    let xfer_start = st.link().earliest_fit(msg_start + msg_dur, xfer_dur);
     let window = Window::from_duration(xfer_start + xfer_dur, cfg.hp_slot());
     if window.end > deadline {
-        return none; // detection latency already ate the deadline
+        return None; // detection latency already ate the deadline
     }
 
-    // Candidate devices: up, never the (dead) source, least busy first.
+    // Candidate devices: up, never the (dead) source, least busy over the
+    // relocated window first. The peak doubles as the feasibility
+    // pre-filter: `peak + 1 ≤ capacity` IS the free-core fit test.
     let mut candidates: Vec<(u32, u32)> = st
         .up_devices()
         .filter(|&d| d != source)
         .map(|d| (st.device(d).peak_usage_in(&window), d.0))
         .collect();
     candidates.sort_unstable();
+    candidates.truncate(RESCUE_TOP_K);
 
-    // Reserve the link plan up front (rolled back if no device adopts);
-    // later link traffic (preempt notice, state update) must not steal it.
-    if st.link.reserve(msg_start, msg_dur, SlotKind::HpAllocMsg, task).is_err()
-        || st
-            .link
-            .reserve(xfer_start, xfer_dur, SlotKind::InputTransfer, task)
-            .is_err()
+    // The link plan every candidate shares.
+    let mut base_plan = PlacementPlan::new(st);
+    base_plan
+        .stage_link(st, msg_start, msg_dur, SlotKind::HpAllocMsg, task)
+        .expect("earliest_fit produced occupied relocation msg slot");
+    base_plan
+        .stage_link(st, xfer_start, xfer_dur, SlotKind::InputTransfer, task)
+        .expect("sequential earliest_fit slots cannot overlap");
+
+    // Build one full candidate plan per device and keep the minimum-cost
+    // one: a free core (zero evictions) beats an eviction, ties fall back
+    // to least-loaded order; every candidate finishes at the same
+    // link-determined `window.end`. Losing plans are dropped unseen.
+    //
+    // Clone discipline: a zero-eviction candidate always wins (the search
+    // short-circuits on it), so it takes `base_plan` by move — no clone.
+    // Only eviction candidates pay a clone of the shared link scratch, and
+    // the eviction floor stops the search at the first feasible one (every
+    // candidate finishes at the same link-determined window, so later
+    // eviction plans are provably losing clones).
+    let eviction_floor = if candidates
+        .iter()
+        .any(|&(peak, d)| peak + HP_CORES <= st.device(DeviceId(d)).capacity())
     {
-        return none; // cannot happen single-threaded; stay silent-safe
-    }
-
-    // Pass 1: a free core somewhere.
-    for &(_, dev) in &candidates {
+        0
+    } else {
+        1
+    };
+    let mut base_plan = Some(base_plan);
+    let chosen = search_candidates(&candidates, eviction_floor, |(peak, dev)| {
         let dev = DeviceId(dev);
-        if st.device(dev).fits(&window, HP_CORES) {
-            commit(st, cfg, task, dev, window);
-            return RelocationAttempt { window: Some((dev, window)), victim: None };
+        if peak + HP_CORES <= st.device(dev).capacity() {
+            let mut plan = base_plan
+                .take()
+                .expect("a zero-eviction candidate commits immediately");
+            stage_adoption(&mut plan, st, cfg, task, dev, window);
+            return Some(CandidatePlan { plan, cost: (0, window.end), payload: (dev, None) });
         }
-    }
-    if !allow_preemption {
-        st.link.remove_owner_from(task, msg_start);
-        return none;
-    }
-
-    // Pass 2: single-victim eviction on the least-loaded device that has a
-    // preemptible conflict (§4's farthest-deadline rule).
-    for &(_, dev) in &candidates {
-        let dev = DeviceId(dev);
+        if !allow_preemption {
+            return None;
+        }
+        // §4's farthest-deadline victim on this device; a candidate whose
+        // eviction still leaves no room (an interior non-preemptible
+        // spike) is skipped by the read-only `fits_without` probe before a
+        // plan is even cloned for it.
         let victim = st
             .device(dev)
             .preemption_candidates(&window)
             .first()
-            .map(|s| (s.task, s.cores, s.window.start <= now));
-        let Some((victim_id, victim_cores, victim_was_running)) = victim else {
-            continue;
-        };
-        st.preempt_task(victim_id, now)
-            .expect("candidate came from the device timeline");
-        st.reserve_link_message(cfg, now, SlotKind::PreemptMsg, victim_id);
-        let victim = Some((victim_id, victim_cores, victim_was_running));
-        if st.device(dev).fits(&window, HP_CORES) {
-            commit(st, cfg, task, dev, window);
-            return RelocationAttempt { window: Some((dev, window)), victim };
+            .map(|s| (s.task, s.cores, s.window.start <= now))?;
+        let (victim_id, victim_cores, victim_was_running) = victim;
+        if !st.device(dev).fits_without(&window, HP_CORES, victim_id) {
+            return None;
         }
-        // Eviction was not enough (an interior non-preemptible spike); the
-        // victim is already ejected — report it and give up, like §4's
-        // single-victim retry does.
-        st.link.remove_owner_from(task, msg_start);
-        return RelocationAttempt { window: None, victim };
-    }
-    st.link.remove_owner_from(task, msg_start);
-    none
+        let mut plan = base_plan
+            .as_ref()
+            .expect("base_plan is only moved by the short-circuiting winner")
+            .clone();
+        plan.stage_eviction(st, victim_id, now)
+            .expect("candidate came from the device timeline");
+        let preempt_dur = st.link_model.slot_duration(cfg, SlotKind::PreemptMsg);
+        plan.stage_link_earliest(st, now, preempt_dur, SlotKind::PreemptMsg, victim_id);
+        debug_assert!(plan.device_view(st, dev).fits(&window, HP_CORES));
+        stage_adoption(&mut plan, st, cfg, task, dev, window);
+        Some(CandidatePlan {
+            plan,
+            cost: (1, window.end),
+            payload: (dev, Some((victim_id, victim_cores, victim_was_running))),
+        })
+    })?;
+
+    // Victim disposal is staged onto the winning plan only, inside the
+    // same transaction.
+    let CandidatePlan { mut plan, payload: (dev, victim), .. } = chosen;
+    let preemption = victim.map(|(victim_id, victim_cores, victim_was_running)| {
+        let (reallocation, realloc_search) = match disposal {
+            VictimPolicy::Reallocate { reallocate } => {
+                let t0 = Instant::now();
+                let realloc = if reallocate {
+                    low_priority::stage_single(&mut plan, st, cfg, victim_id, now)
+                } else {
+                    None
+                };
+                if realloc.is_none() {
+                    plan.stage_fail(victim_id, FailReason::Preempted, now);
+                }
+                (realloc, t0.elapsed())
+            }
+            VictimPolicy::Requeue => (None, std::time::Duration::ZERO),
+        };
+        PreemptionReport {
+            victim: victim_id,
+            victim_cores,
+            victim_was_running,
+            reallocation,
+            realloc_search,
+        }
+    });
+    st.apply(plan).expect("freshly staged relocation plan");
+    Some(Relocation { device: dev, window, preemption })
 }
 
-/// Commit the adoptive placement plus its completion state-update.
-fn commit(
-    st: &mut NetworkState,
+/// Stage the adoptive placement plus its completion state-update.
+fn stage_adoption(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
     cfg: &SystemConfig,
     task: TaskId,
     dev: DeviceId,
     window: Window,
 ) {
-    st.commit_allocation(Allocation {
+    plan.stage_placement(st, Allocation {
         task,
         device: dev,
         window,
@@ -223,7 +280,8 @@ fn commit(
         offloaded: true,
     })
     .expect("fits() said the adoptive window was free");
-    st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
+    let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
+    plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);
 }
 
 #[cfg(test)]
@@ -256,15 +314,20 @@ mod tests {
         id
     }
 
+    fn place(st: &mut NetworkState, alloc: Allocation) {
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_placement(st, alloc).unwrap();
+        st.apply(plan).unwrap();
+    }
+
     fn allocate_on(st: &mut NetworkState, id: TaskId, dev: u32, cores: u32, until_s: f64) {
-        st.commit_allocation(Allocation {
+        place(st, Allocation {
             task: id,
             device: DeviceId(dev),
             window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(until_s)),
             cores,
             offloaded: false,
-        })
-        .unwrap();
+        });
     }
 
     fn sched(preemption: bool) -> PatsScheduler {
@@ -313,16 +376,12 @@ mod tests {
         let (cfg, mut st, hp) = crash_scene();
         let now = SimTime::from_secs_f64(0.5);
         let mut s = sched(false);
+        let before = st.fingerprint();
         // Drive through the Policy entry point for coverage of the wiring.
         let out = crate::scheduler::Policy::rescue_orphans(&mut s, &mut st, &cfg, &[hp], now);
         assert!(out.hp_rescued.is_empty(), "no free core and no eviction allowed");
         assert_eq!(out.lost, vec![(hp, Priority::High)]);
-        // No link residue from the failed attempt beyond pre-crash history.
-        assert_eq!(
-            st.link.slots().iter().filter(|s| s.owner == hp).count(),
-            0,
-            "failed rescue rolls its link plan back"
-        );
+        assert_eq!(st.fingerprint(), before, "failed rescue leaves zero residue");
         st.check_invariants().unwrap();
     }
 
@@ -340,7 +399,7 @@ mod tests {
         // The rescue paid its link plan: alloc msg + input re-transfer +
         // state update.
         let kinds: Vec<SlotKind> = st
-            .link
+            .link()
             .slots()
             .iter()
             .filter(|s| s.owner == hp)
@@ -374,12 +433,13 @@ mod tests {
         st.check_invariants().unwrap();
     }
 
-    /// Eviction fires but is not enough (a non-preemptible spike remains):
-    /// the orphan is lost, yet the victim's preemption — and its committed
-    /// reallocation — must surface through `failed_rescue_evictions`, not
-    /// vanish as a phantom allocation.
+    /// An eviction that would not actually make room is never committed:
+    /// device 1's farthest-deadline victim sits next to a non-preemptible
+    /// 4-core spike, device 2 is walled off — the orphan is lost and the
+    /// would-be victim keeps running untouched (the pre-plan code ejected
+    /// it for nothing; that wart is retired).
     #[test]
-    fn failed_rescue_still_reports_its_eviction() {
+    fn insufficient_eviction_is_never_committed() {
         let (cfg, mut st) = setup(3);
         let hp = register(&mut st, 0, Priority::High, 5.0);
         allocate_on(&mut st, hp, 0, 1, 1.0);
@@ -387,50 +447,68 @@ mod tests {
         // non-preemptible 4-core spike later in it — evicting the LP still
         // leaves no room.
         let victim = register(&mut st, 1, Priority::Low, 60.0);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: victim,
             device: DeviceId(1),
             window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(0.9)),
             cores: 2,
             offloaded: false,
-        })
-        .unwrap();
+        });
         let spike = register(&mut st, 1, Priority::High, 5.0);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: spike,
             device: DeviceId(1),
             window: Window::new(SimTime::from_secs_f64(1.0), SimTime::from_secs_f64(1.2)),
             cores: 4,
             offloaded: false,
-        })
-        .unwrap();
+        });
         // Device 2: fully blocked by non-preemptible work.
         let wall = register(&mut st, 2, Priority::High, 60.0);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: wall,
             device: DeviceId(2),
             window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
             cores: 4,
             offloaded: false,
-        })
-        .unwrap();
+        });
         let now = SimTime::from_secs_f64(0.5);
         st.mark_device_down(DeviceId(0), now);
+        let before = st.fingerprint();
         let s = sched(true);
         let out = rescue_all(&s, &mut st, &cfg, &[hp], now);
         assert!(out.hp_rescued.is_empty());
         assert_eq!(out.lost, vec![(hp, Priority::High)]);
-        assert_eq!(out.failed_rescue_evictions.len(), 1, "the eviction surfaces");
-        let report = &out.failed_rescue_evictions[0];
-        assert_eq!(report.victim, victim);
-        // The victim found a new home (device 1 again, after the spike):
-        // its committed placement is carried so the simulator can run it.
-        let realloc = report.reallocation.as_ref().expect("victim reallocates");
-        assert_eq!(st.task(victim).unwrap().state, TaskState::Allocated);
         assert_eq!(
-            st.task(victim).unwrap().allocation.as_ref().unwrap().window,
-            realloc.window
+            st.task(victim).unwrap().state,
+            TaskState::Allocated,
+            "the would-be victim is untouched"
         );
+        assert_eq!(st.task(victim).unwrap().preemptions, 0);
+        assert_eq!(st.fingerprint(), before, "no candidate plan committed");
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn relocation_prefers_free_core_over_eviction() {
+        // Device 1 is busy but preemptible; device 2 has a free core. The
+        // candidate search must adopt on device 2 with zero evictions even
+        // though device 1 could be made to work by ejecting its LP task.
+        let (cfg, mut st) = setup(3);
+        let hp = register(&mut st, 0, Priority::High, 5.0);
+        allocate_on(&mut st, hp, 0, 1, 1.0);
+        let lp = register(&mut st, 1, Priority::Low, 60.0);
+        allocate_on(&mut st, lp, 1, 4, 17.0);
+        let bystander = register(&mut st, 2, Priority::Low, 60.0);
+        allocate_on(&mut st, bystander, 2, 2, 17.0);
+        let now = SimTime::from_secs_f64(0.5);
+        st.mark_device_down(DeviceId(0), now);
+        let s = sched(true);
+        let out = rescue_all(&s, &mut st, &cfg, &[hp], now);
+        assert_eq!(out.hp_rescued.len(), 1);
+        let r = &out.hp_rescued[0];
+        assert_eq!(r.device, DeviceId(2), "free core beats an eviction");
+        assert!(r.preemption.is_none());
+        assert_eq!(st.task(lp).unwrap().preemptions, 0);
         st.check_invariants().unwrap();
     }
 

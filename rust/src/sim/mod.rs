@@ -391,19 +391,9 @@ impl<P: Policy> Sim<P> {
         }
         self.metrics.lp_orphaned += outcome.lp_requeued.len() as u64;
         self.metrics.lp_requeued_churn += outcome.lp_requeued.len() as u64;
-        // Evictions fired by rescues that still failed: the eviction (and
-        // the victim's committed reallocation, if any) really happened.
-        for report in outcome.failed_rescue_evictions {
-            self.metrics
-                .lp_realloc_ms
-                .add(report.realloc_search.as_secs_f64() * 1_000.0);
-            self.metrics
-                .record_preemption(report.victim_cores, report.reallocation.is_some());
-            if let Some(p) = report.reallocation {
-                self.metrics.record_core_alloc(p.cores, p.offloaded);
-                self.schedule_lp_placement(&p);
-            }
-        }
+        // Note: failed rescues commit nothing under the transactional
+        // planning layer — a candidate plan whose eviction would not make
+        // room is dropped, so there are no phantom evictions to account.
         for (task, priority) in outcome.lost {
             match priority {
                 Priority::High => {
@@ -677,11 +667,14 @@ impl<P: Policy> Sim<P> {
         let st: &NetworkState = &self.controller.state;
 
         // Anything still queued/pending when the experiment ends never ran.
-        let lingering: Vec<TaskId> = st
+        // Sorted by id: registry iteration order is HashMap order, which
+        // must never leak into processing order.
+        let mut lingering: Vec<TaskId> = st
             .tasks()
             .filter(|r| !r.state.is_terminal())
             .map(|r| r.spec.id)
             .collect();
+        lingering.sort_unstable();
         for t in lingering {
             self.controller
                 .state
@@ -715,7 +708,14 @@ impl<P: Policy> Sim<P> {
         }
 
         // ---- per-request set fractions (Fig 5) --------------------------
-        for req in st.requests() {
+        // Key-sorted iteration: the fractions feed a floating-point mean,
+        // and float accumulation is order-sensitive in its last bits —
+        // folding in `HashMap` order made the summary fields differ between
+        // otherwise identical runs (the KNOWN_ISSUES.md determinism wart,
+        // now retired and locked in by `rust/tests/fleet.rs`).
+        let mut requests: Vec<&crate::task::LpRequest> = st.requests().collect();
+        requests.sort_unstable_by_key(|r| r.id);
+        for req in requests {
             let total = req.tasks.len() as f64;
             let done = req
                 .tasks

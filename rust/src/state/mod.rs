@@ -3,27 +3,38 @@
 //! decisions and the result of executed tasks").
 //!
 //! Owns the link timeline, one core timeline per device, and the registry
-//! of every task/request the controller has seen. All scheduler policies
-//! (the paper's scheduler and both workstealers) mutate network state only
-//! through this type, so the reservation invariants live in one place.
+//! of every task/request the controller has seen. Placement mutations go
+//! through exactly one door: policies stage operations into a
+//! [`crate::scheduler::plan::PlacementPlan`] against a read-only view and
+//! [`NetworkState::apply`] commits the whole plan atomically — or rejects
+//! it whole. The only other mutations are the task-lifecycle transitions
+//! (completion, failure, preemption, device health) that the coordinator
+//! drives from state-update messages, which live in this module so the
+//! reservation invariants stay in one place.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::fmt::Write as _;
 
 use crate::config::SystemConfig;
 use crate::error::{Error, Result};
 use crate::net::LinkModel;
 use crate::resources::{CoreTimeline, SlotKind, Timeline};
+use crate::scheduler::plan::{PlacementPlan, RegistryOp};
 use crate::task::{
     Allocation, DeviceId, FailReason, LpRequest, Priority, RequestId, TaskId, TaskSpec,
     TaskState, Window,
 };
-use crate::time::SimTime;
+use crate::time::{SimDuration, SimTime};
 
 /// Registry entry for one task.
 #[derive(Debug, Clone)]
 pub struct TaskRecord {
+    /// Immutable spawn-time description of the task.
     pub spec: TaskSpec,
+    /// Current lifecycle state.
     pub state: TaskState,
+    /// Latest committed placement, if any. Kept after terminal failure so
+    /// metrics can attribute the failure (offloaded vs local, core config).
     pub allocation: Option<Allocation>,
     /// How many times this task has been preempted.
     pub preemptions: u32,
@@ -43,17 +54,28 @@ pub enum DeviceHealth {
 
 /// The controller's network state.
 pub struct NetworkState {
-    pub link: Timeline,
+    link: Timeline,
     devices: Vec<CoreTimeline>,
     health: Vec<DeviceHealth>,
     tasks: HashMap<TaskId, TaskRecord>,
     requests: HashMap<RequestId, LpRequest>,
     next_task: u64,
     next_request: u64,
+    /// Mutation stamp over the placement-relevant state (resource
+    /// calendars, registries, device health): bumped by every
+    /// state-changing *method*, captured by plans at creation, and checked
+    /// by [`NetworkState::apply`] so a plan staged against an outdated
+    /// snapshot is rejected whole. The `link_model` estimator is
+    /// deliberately outside the stamp — staged slots store explicit
+    /// windows, so an estimator change (churn link degradation) affects
+    /// only *future* sizing, never the validity of already-staged slots.
+    version: u64,
+    /// Shared-link throughput estimator (message slot sizing).
     pub link_model: LinkModel,
 }
 
 impl NetworkState {
+    /// A fresh, empty view of the configured topology.
     pub fn new(cfg: &SystemConfig) -> NetworkState {
         NetworkState {
             link: Timeline::new(),
@@ -65,18 +87,30 @@ impl NetworkState {
             requests: HashMap::new(),
             next_task: 0,
             next_request: 0,
+            version: 0,
             link_model: LinkModel::new(cfg),
         }
     }
 
+    /// Current mutation stamp (see [`NetworkState::apply`]).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn touch(&mut self) {
+        self.version += 1;
+    }
+
     // ---- id allocation -------------------------------------------------
 
+    /// Mint the next task id.
     pub fn fresh_task_id(&mut self) -> TaskId {
         let id = TaskId(self.next_task);
         self.next_task += 1;
         id
     }
 
+    /// Mint the next request id.
     pub fn fresh_request_id(&mut self) -> RequestId {
         let id = RequestId(self.next_request);
         self.next_request += 1;
@@ -85,6 +119,7 @@ impl NetworkState {
 
     // ---- registry ------------------------------------------------------
 
+    /// Register a freshly spawned task. Panics if the id is already known.
     pub fn register_task(&mut self, spec: TaskSpec) {
         let id = spec.id;
         let prev = self.tasks.insert(
@@ -92,29 +127,45 @@ impl NetworkState {
             TaskRecord { spec, state: TaskState::Pending, allocation: None, preemptions: 0 },
         );
         assert!(prev.is_none(), "task {id:?} registered twice");
+        self.touch();
     }
 
+    /// Register a low-priority request set. Panics on duplicate ids.
     pub fn register_request(&mut self, req: LpRequest) {
         let prev = self.requests.insert(req.id, req);
         assert!(prev.is_none(), "request registered twice");
+        self.touch();
     }
 
+    /// Look up one task's record.
     pub fn task(&self, id: TaskId) -> Option<&TaskRecord> {
         self.tasks.get(&id)
     }
 
+    /// Mutable access to one task's record (coordinator bookkeeping).
+    /// Bumps the mutation version only when the task exists — a failed
+    /// lookup mutates nothing and must not invalidate open plans.
     pub fn task_mut(&mut self, id: TaskId) -> Option<&mut TaskRecord> {
+        if !self.tasks.contains_key(&id) {
+            return None;
+        }
+        self.touch();
         self.tasks.get_mut(&id)
     }
 
+    /// Look up one request.
     pub fn request(&self, id: RequestId) -> Option<&LpRequest> {
         self.requests.get(&id)
     }
 
+    /// Every registered task, in arbitrary order.
     pub fn tasks(&self) -> impl Iterator<Item = &TaskRecord> {
         self.tasks.values()
     }
 
+    /// Every registered request, in arbitrary order. Callers that fold
+    /// floating-point statistics over this iterator must sort by id first
+    /// (see `sim::finalize`) — `HashMap` order is not deterministic.
     pub fn requests(&self) -> impl Iterator<Item = &LpRequest> {
         self.requests.values()
     }
@@ -131,18 +182,23 @@ impl NetworkState {
 
     // ---- resources -----------------------------------------------------
 
+    /// Read-only view of the shared link calendar. All mutation goes
+    /// through [`NetworkState::apply`] (plans) or the lifecycle methods.
+    pub fn link(&self) -> &Timeline {
+        &self.link
+    }
+
+    /// Read-only view of device `d`'s core calendar.
     pub fn device(&self, d: DeviceId) -> &CoreTimeline {
         &self.devices[d.0 as usize]
     }
 
-    pub fn device_mut(&mut self, d: DeviceId) -> &mut CoreTimeline {
-        &mut self.devices[d.0 as usize]
-    }
-
+    /// Number of devices in the topology.
     pub fn num_devices(&self) -> usize {
         self.devices.len()
     }
 
+    /// Every device id, ascending.
     pub fn device_ids(&self) -> impl Iterator<Item = DeviceId> {
         (0..self.devices.len() as u32).map(DeviceId)
     }
@@ -159,6 +215,7 @@ impl NetworkState {
     /// also reclaims reservations.
     pub fn set_device_health(&mut self, d: DeviceId, health: DeviceHealth) {
         self.health[d.0 as usize] = health;
+        self.touch();
     }
 
     /// True when `d` may receive *new* placements.
@@ -208,58 +265,147 @@ impl NetworkState {
         // belonged to an orphan (completed/failed tasks already released
         // theirs).
         self.devices[d.0 as usize].clear();
+        self.touch();
         orphans
     }
 
-    /// Union of completion time-points across every device in `(after,
-    /// until]`, ascending — the LP scheduler's search set (§4).
-    pub fn completion_points(&self, after: SimTime, until: SimTime) -> Vec<SimTime> {
-        let mut v: Vec<SimTime> = self
-            .devices
-            .iter()
-            .flat_map(|d| d.completion_points(after, until))
-            .collect();
-        v.sort_unstable();
-        v.dedup();
-        v
+    // The §4 completion-point union lives on the plan view
+    // (`PlacementPlan::completion_points`), its only consumer — one
+    // implementation, no divergence risk. Per-device points remain on
+    // `CoreTimeline::completion_points`.
+
+    // ---- plan commit ----------------------------------------------------
+
+    /// Atomically commit a [`PlacementPlan`]: validate the whole plan, then
+    /// install its scratch resource timelines and replay its registry
+    /// transitions. On any validation failure the plan is rejected whole
+    /// and the state is untouched — every rejection happens before the
+    /// first mutation, and the atomicity property test compares state
+    /// fingerprints across rejections to prove zero residue.
+    ///
+    /// Rejection reasons:
+    /// * the plan was staged against an older state version (stale
+    ///   snapshot);
+    /// * a registry transition no longer validates (unknown task, downed
+    ///   target device, non-preemptible eviction victim).
+    pub fn apply(&mut self, plan: PlacementPlan) -> Result<()> {
+        let entry_version = self.version;
+        let parts = plan.into_parts();
+        let reject = |what: String| -> Result<()> { Err(Error::Invariant(what)) };
+        if parts.version != entry_version {
+            return reject(format!(
+                "stale plan: staged at v{}, state is at v{}",
+                parts.version, entry_version
+            ));
+        }
+        // Validation pass — read-only, so a failure anywhere rejects the
+        // plan whole with provably zero residue. Evictions and placements
+        // are checked in staging order so a victim evicted earlier in the
+        // plan may legally be re-placed later in it.
+        let mut evicted_so_far: HashSet<TaskId> = HashSet::new();
+        let mut placed_so_far: HashSet<TaskId> = HashSet::new();
+        for op in &parts.registry {
+            match op {
+                RegistryOp::Place(alloc) => {
+                    let Some(rec) = self.tasks.get(&alloc.task) else {
+                        return reject(format!("plan places unknown task {:?}", alloc.task));
+                    };
+                    if !self.device_is_up(alloc.device) {
+                        return reject(format!(
+                            "plan places {:?} on non-up device {}",
+                            alloc.task, alloc.device
+                        ));
+                    }
+                    if placed_so_far.contains(&alloc.task) {
+                        return reject(format!("plan places {:?} twice", alloc.task));
+                    }
+                    // A live reservation would survive as a leaked slot if
+                    // the registry allocation were overwritten.
+                    if rec.state.is_active_allocation()
+                        && !evicted_so_far.contains(&alloc.task)
+                    {
+                        return reject(format!(
+                            "plan places {:?} which already holds a live reservation",
+                            alloc.task
+                        ));
+                    }
+                    placed_so_far.insert(alloc.task);
+                }
+                RegistryOp::Evict { task } => match self.tasks.get(task) {
+                    None => return reject(format!("plan evicts unknown task {task:?}")),
+                    Some(rec) => {
+                        if rec.spec.priority != Priority::Low {
+                            return reject(format!("plan evicts non-preemptible {task:?}"));
+                        }
+                        // Terminal records keep their last allocation for
+                        // metrics, so require a live allocation — never
+                        // resurrect a Completed/Failed task.
+                        if !rec.state.is_active_allocation() {
+                            return reject(format!("plan evicts non-active {task:?}"));
+                        }
+                        if rec.allocation.is_none() {
+                            return reject(format!("plan evicts unallocated {task:?}"));
+                        }
+                        evicted_so_far.insert(*task);
+                    }
+                },
+                RegistryOp::Fail { task, .. } => {
+                    if !self.tasks.contains_key(task) {
+                        return reject(format!("plan fails unknown task {task:?}"));
+                    }
+                }
+            }
+        }
+        // Commit: install the scratch calendars, then replay the registry
+        // transitions in staging order.
+        if let Some(link) = parts.link {
+            self.link = link;
+        }
+        for (d, timeline) in parts.devices {
+            self.devices[d as usize] = timeline;
+        }
+        for op in parts.registry {
+            match op {
+                RegistryOp::Place(alloc) => {
+                    let rec = self.tasks.get_mut(&alloc.task).expect("validated above");
+                    rec.state = TaskState::Allocated;
+                    rec.allocation = Some(alloc);
+                }
+                RegistryOp::Evict { task } => {
+                    let rec = self.tasks.get_mut(&task).expect("validated above");
+                    rec.state = TaskState::PreemptedPendingRealloc;
+                    rec.preemptions += 1;
+                }
+                RegistryOp::Fail { task, reason, now } => {
+                    let rec = self.tasks.get_mut(&task).expect("validated above");
+                    rec.state = TaskState::Failed(reason);
+                    // An evicted victim holds no resources by now; sweep
+                    // anyway so `Fail` is safe for any staged sequence.
+                    // Inherited parity wart: the sweep also removes the
+                    // victim's own preempt-notice slot when the victim
+                    // fails in the same plan (start >= now) — exactly what
+                    // the pre-plan `fail_task` call did after reserving
+                    // the notice. Kept for seed equivalence.
+                    let device = rec.allocation.as_ref().map(|a| a.device);
+                    if let Some(d) = device {
+                        self.devices[d.0 as usize].remove_task(task);
+                        self.link.remove_owner_from(task, now);
+                    }
+                }
+            }
+        }
+        self.touch();
+        Ok(())
     }
 
     // ---- allocation lifecycle -------------------------------------------
-
-    /// Commit a placement: reserve cores and record the allocation.
-    /// (Link slots are reserved separately by the policy, which knows which
-    /// messages the placement needs.)
-    pub fn commit_allocation(&mut self, alloc: Allocation) -> Result<()> {
-        if !self.device_is_up(alloc.device) {
-            return Err(Error::Allocation(format!(
-                "placement on non-up device {}",
-                alloc.device
-            )));
-        }
-        let rec = self
-            .tasks
-            .get(&alloc.task)
-            .ok_or_else(|| Error::Invariant(format!("unknown task {:?}", alloc.task)))?;
-        let deadline = rec.spec.deadline;
-        let preemptible = rec.spec.priority == Priority::Low;
-        self.devices[alloc.device.0 as usize].reserve(
-            alloc.window,
-            alloc.cores,
-            alloc.task,
-            deadline,
-            preemptible,
-        )?;
-        let rec = self.tasks.get_mut(&alloc.task).unwrap();
-        rec.allocation = Some(alloc);
-        rec.state = TaskState::Allocated;
-        Ok(())
-    }
 
     /// Mark a task running (its processing window began on the device).
     pub fn mark_running(&mut self, id: TaskId) {
         if let Some(rec) = self.tasks.get_mut(&id) {
             debug_assert_eq!(rec.state, TaskState::Allocated, "{id:?}");
             rec.state = TaskState::Running;
+            self.touch();
         }
     }
 
@@ -269,10 +415,11 @@ impl NetworkState {
     pub fn complete_task(&mut self, id: TaskId, _now: SimTime) {
         if let Some(rec) = self.tasks.get_mut(&id) {
             rec.state = TaskState::Completed;
-            if let Some(alloc) = &rec.allocation {
-                let device = alloc.device;
-                self.devices[device.0 as usize].remove_task(id);
+            let device = rec.allocation.as_ref().map(|a| a.device);
+            if let Some(d) = device {
+                self.devices[d.0 as usize].remove_task(id);
             }
+            self.touch();
         }
     }
 
@@ -282,16 +429,25 @@ impl NetworkState {
     pub fn fail_task(&mut self, id: TaskId, reason: FailReason, now: SimTime) {
         if let Some(rec) = self.tasks.get_mut(&id) {
             rec.state = TaskState::Failed(reason);
-            if let Some(alloc) = rec.allocation.clone() {
-                self.devices[alloc.device.0 as usize].remove_task(id);
+            // Copy the device id out instead of cloning the whole
+            // `Allocation` — the borrow of `rec` ends here, freeing the
+            // resource timelines for mutation.
+            let device = rec.allocation.as_ref().map(|a| a.device);
+            if let Some(d) = device {
+                self.devices[d.0 as usize].remove_task(id);
                 self.link.remove_owner_from(id, now);
             }
+            self.touch();
         }
     }
 
     /// Preempt a low-priority task: release its core reservation and future
     /// link slots, mark it for reallocation, bump its counter. Returns its
     /// previous allocation.
+    ///
+    /// Policies stage evictions inside a plan
+    /// ([`PlacementPlan::stage_eviction`]); this direct lifecycle entry
+    /// point remains for tests and administrative tooling.
     pub fn preempt_task(&mut self, id: TaskId, now: SimTime) -> Result<Allocation> {
         let rec = self
             .tasks
@@ -304,13 +460,32 @@ impl NetworkState {
         }
         let alloc = rec
             .allocation
-            .clone()
+            .clone() // returned to the caller; the record keeps its copy
             .ok_or_else(|| Error::Invariant(format!("preempting unallocated task {id:?}")))?;
         rec.state = TaskState::PreemptedPendingRealloc;
         rec.preemptions += 1;
         self.devices[alloc.device.0 as usize].remove_task(id);
         self.link.remove_owner_from(id, now);
+        self.touch();
         Ok(alloc)
+    }
+
+    /// Record an unconditional bookkeeping message on the link (earliest
+    /// fit at or after `not_before`): workstealer polls and other costs
+    /// that are paid regardless of any placement outcome. Placement traffic
+    /// (allocation messages, transfers, state updates, preemption notices)
+    /// must be staged in a [`PlacementPlan`] instead, so it commits — or
+    /// vanishes — with the placement it belongs to.
+    pub fn charge_link_message(
+        &mut self,
+        not_before: SimTime,
+        dur: SimDuration,
+        kind: SlotKind,
+        owner: TaskId,
+    ) -> Window {
+        let w = self.link.reserve_earliest(not_before, dur, kind, owner);
+        self.touch();
+        w
     }
 
     /// Forget finished bookkeeping older than `t` on every resource.
@@ -319,6 +494,45 @@ impl NetworkState {
         for d in &mut self.devices {
             d.prune_before(t);
         }
+        self.touch();
+    }
+
+    /// Canonical dump of the observable state — link slots, core slots,
+    /// device health, and the task/request registries in id order. Two
+    /// states with equal fingerprints are operationally identical; the
+    /// atomicity property tests compare fingerprints to prove a rejected
+    /// or dropped plan left zero residue.
+    pub fn fingerprint(&self) -> String {
+        let mut out = String::new();
+        for s in self.link.slots() {
+            let _ = writeln!(out, "link {:?} {:?} {:?}", s.window, s.kind, s.owner);
+        }
+        for (i, d) in self.devices.iter().enumerate() {
+            let _ = writeln!(out, "dev{i} {:?}", self.health[i]);
+            for s in d.slots() {
+                let _ = writeln!(
+                    out,
+                    "dev{i} {:?} cores={} task={:?} dl={:?} pre={}",
+                    s.window, s.cores, s.task, s.deadline, s.preemptible
+                );
+            }
+        }
+        let mut task_ids: Vec<&TaskId> = self.tasks.keys().collect();
+        task_ids.sort_unstable();
+        for id in task_ids {
+            let r = &self.tasks[id];
+            let _ = writeln!(
+                out,
+                "task {:?} {:?} alloc={:?} preemptions={}",
+                id, r.state, r.allocation, r.preemptions
+            );
+        }
+        let mut req_ids: Vec<&RequestId> = self.requests.keys().collect();
+        req_ids.sort_unstable();
+        for id in req_ids {
+            let _ = writeln!(out, "req {:?} tasks={:?}", id, self.requests[id].tasks);
+        }
+        out
     }
 
     /// Check every resource invariant (tests / debug builds).
@@ -363,24 +577,12 @@ impl NetworkState {
         }
         Ok(())
     }
-
-    /// Reserve the earliest feasible link slot of `kind` for `task` at or
-    /// after `not_before`, using the current throughput estimate.
-    pub fn reserve_link_message(
-        &mut self,
-        cfg: &SystemConfig,
-        not_before: SimTime,
-        kind: SlotKind,
-        task: TaskId,
-    ) -> Window {
-        let dur = self.link_model.slot_duration(cfg, kind);
-        self.link.reserve_earliest(not_before, dur, kind, task)
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scheduler::plan::PlacementPlan;
 
     fn state() -> (SystemConfig, NetworkState) {
         let cfg = SystemConfig::default();
@@ -405,6 +607,19 @@ mod tests {
         Window::new(SimTime::from_millis(a), SimTime::from_millis(b))
     }
 
+    /// Commit one placement through the plan door (the only door).
+    fn place(st: &mut NetworkState, alloc: Allocation) -> Result<()> {
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_placement(st, alloc)?;
+        st.apply(plan)
+    }
+
+    /// Charge one state-update-sized message for `task` at `not_before`.
+    fn charge_update(st: &mut NetworkState, cfg: &SystemConfig, not_before: SimTime, task: TaskId) {
+        let dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
+        st.charge_link_message(not_before, dur, SlotKind::StateUpdate, task);
+    }
+
     #[test]
     fn ids_are_unique() {
         let (_, mut st) = state();
@@ -420,7 +635,7 @@ mod tests {
         let s = spec(&mut st, Priority::Low, 20_000);
         let id = s.id;
         st.register_task(s);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: id,
             device: DeviceId(1),
             window: win(0, 10_000),
@@ -439,14 +654,14 @@ mod tests {
     }
 
     #[test]
-    fn commit_rejects_overloaded_device() {
+    fn plan_rejects_overloaded_device() {
         let (_, mut st) = state();
         let s1 = spec(&mut st, Priority::Low, 20_000);
         let s2 = spec(&mut st, Priority::Low, 20_000);
         let (i1, i2) = (s1.id, s2.id);
         st.register_task(s1);
         st.register_task(s2);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: i1,
             device: DeviceId(0),
             window: win(0, 10_000),
@@ -454,7 +669,7 @@ mod tests {
             offloaded: false,
         })
         .unwrap();
-        let err = st.commit_allocation(Allocation {
+        let err = place(&mut st, Allocation {
             task: i2,
             device: DeviceId(0),
             window: win(5_000, 15_000),
@@ -463,15 +678,16 @@ mod tests {
         });
         assert!(err.is_err());
         assert_eq!(st.task(i2).unwrap().state, TaskState::Pending);
+        st.check_invariants().unwrap();
     }
 
     #[test]
     fn preemption_releases_resources_and_counts() {
-        let (_, mut st) = state();
+        let (cfg, mut st) = state();
         let s = spec(&mut st, Priority::Low, 20_000);
         let id = s.id;
         st.register_task(s);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: id,
             device: DeviceId(0),
             window: win(0, 12_000),
@@ -480,15 +696,14 @@ mod tests {
         })
         .unwrap();
         // Future state-update slot that must be released on preemption.
-        let cfg = SystemConfig::default();
-        st.reserve_link_message(&cfg, SimTime::from_millis(12_000), SlotKind::StateUpdate, id);
-        assert_eq!(st.link.len(), 1);
+        charge_update(&mut st, &cfg, SimTime::from_millis(12_000), id);
+        assert_eq!(st.link().len(), 1);
         let old = st.preempt_task(id, SimTime::from_millis(3_000)).unwrap();
         assert_eq!(old.cores, 4);
         assert_eq!(st.task(id).unwrap().state, TaskState::PreemptedPendingRealloc);
         assert_eq!(st.task(id).unwrap().preemptions, 1);
         assert_eq!(st.device(DeviceId(0)).usage_at(SimTime::from_millis(6_000)), 0);
-        assert_eq!(st.link.len(), 0, "future link slots released");
+        assert_eq!(st.link().len(), 0, "future link slots released");
         st.check_invariants().unwrap();
     }
 
@@ -498,7 +713,7 @@ mod tests {
         let s = spec(&mut st, Priority::High, 2_000);
         let id = s.id;
         st.register_task(s);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: id,
             device: DeviceId(0),
             window: win(0, 1_000),
@@ -507,6 +722,9 @@ mod tests {
         })
         .unwrap();
         assert!(st.preempt_task(id, SimTime::ZERO).is_err());
+        // The staged-eviction door enforces the same rule.
+        let mut plan = PlacementPlan::new(&st);
+        assert!(plan.stage_eviction(&st, id, SimTime::ZERO).is_err());
     }
 
     #[test]
@@ -515,7 +733,7 @@ mod tests {
         let s = spec(&mut st, Priority::Low, 20_000);
         let id = s.id;
         st.register_task(s);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: id,
             device: DeviceId(2),
             window: win(1_000, 13_000),
@@ -523,11 +741,11 @@ mod tests {
             offloaded: true,
         })
         .unwrap();
-        st.reserve_link_message(&cfg, SimTime::from_millis(13_000), SlotKind::StateUpdate, id);
+        charge_update(&mut st, &cfg, SimTime::from_millis(13_000), id);
         st.fail_task(id, FailReason::Violated, SimTime::from_millis(2_000));
         assert_eq!(st.task(id).unwrap().state, TaskState::Failed(FailReason::Violated));
         assert_eq!(st.device(DeviceId(2)).len(), 0);
-        assert_eq!(st.link.len(), 0);
+        assert_eq!(st.link().len(), 0);
     }
 
     #[test]
@@ -537,7 +755,7 @@ mod tests {
             let s = spec(&mut st, Priority::Low, 20_000);
             let id = s.id;
             st.register_task(s);
-            st.commit_allocation(Allocation {
+            place(&mut st, Allocation {
                 task: id,
                 device: DeviceId(dev),
                 window: win(0, end),
@@ -546,7 +764,9 @@ mod tests {
             })
             .unwrap();
         }
-        let pts = st.completion_points(SimTime::ZERO, SimTime::from_millis(10_000));
+        // The §4 search set is read through a (fresh) plan view.
+        let plan = PlacementPlan::new(&st);
+        let pts = plan.completion_points(&st, SimTime::ZERO, SimTime::from_millis(10_000));
         assert_eq!(
             pts,
             vec![SimTime::from_millis(5_000), SimTime::from_millis(7_000)],
@@ -555,12 +775,47 @@ mod tests {
     }
 
     #[test]
-    fn link_reservation_durations_use_estimator() {
+    fn charged_messages_occupy_the_link() {
         let (cfg, mut st) = state();
         let id = st.fresh_task_id();
-        let w = st.reserve_link_message(&cfg, SimTime::ZERO, SlotKind::HpAllocMsg, id);
-        let expected = st.link_model.slot_duration(&cfg, SlotKind::HpAllocMsg);
-        assert_eq!(w.duration(), expected);
+        let dur = st.link_model.slot_duration(&cfg, SlotKind::HpAllocMsg);
+        let w = st.charge_link_message(SimTime::ZERO, dur, SlotKind::HpAllocMsg, id);
+        assert_eq!(w.duration(), dur);
+        assert_eq!(st.link().len(), 1);
+    }
+
+    #[test]
+    fn apply_rejects_placement_on_downed_device() {
+        let (_, mut st) = state();
+        let s = spec(&mut st, Priority::Low, 40_000);
+        let id = s.id;
+        st.register_task(s);
+        // Stage against a live device, then down it before committing: the
+        // version check rejects the stale plan.
+        let mut plan = PlacementPlan::new(&st);
+        plan.stage_placement(&st, Allocation {
+            task: id,
+            device: DeviceId(1),
+            window: win(0, 17_000),
+            cores: 2,
+            offloaded: true,
+        })
+        .unwrap();
+        st.mark_device_down(DeviceId(1), SimTime::ZERO);
+        assert!(st.apply(plan).is_err());
+        assert_eq!(st.task(id).unwrap().state, TaskState::Pending);
+        // A fresh plan against the downed device fails at staging time.
+        let mut plan = PlacementPlan::new(&st);
+        assert!(plan
+            .stage_placement(&st, Allocation {
+                task: id,
+                device: DeviceId(1),
+                window: win(0, 17_000),
+                cores: 2,
+                offloaded: true,
+            })
+            .is_err());
+        st.check_invariants().unwrap();
     }
 
     #[test]
@@ -574,7 +829,7 @@ mod tests {
         for s in [hp, lp1, lp2] {
             st.register_task(s);
         }
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: hp_id,
             device: DeviceId(1),
             window: win(0, 1_000),
@@ -582,7 +837,7 @@ mod tests {
             offloaded: false,
         })
         .unwrap();
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: lp1_id,
             device: DeviceId(1),
             window: win(0, 17_000),
@@ -590,7 +845,7 @@ mod tests {
             offloaded: true,
         })
         .unwrap();
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: lp2_id,
             device: DeviceId(2),
             window: win(0, 17_000),
@@ -599,16 +854,16 @@ mod tests {
         })
         .unwrap();
         // Future link slots for the device-1 tasks must be reclaimed.
-        st.reserve_link_message(&cfg, SimTime::from_millis(1_000), SlotKind::StateUpdate, hp_id);
-        st.reserve_link_message(&cfg, SimTime::from_millis(17_000), SlotKind::StateUpdate, lp1_id);
-        let link_before = st.link.len();
+        charge_update(&mut st, &cfg, SimTime::from_millis(1_000), hp_id);
+        charge_update(&mut st, &cfg, SimTime::from_millis(17_000), lp1_id);
+        let link_before = st.link().len();
 
         let orphans = st.mark_device_down(DeviceId(1), SimTime::from_millis(500));
         assert_eq!(orphans, vec![hp_id, lp1_id], "HP first, survivor untouched");
         assert_eq!(st.device_health(DeviceId(1)), DeviceHealth::Down);
         assert!(!st.device_is_up(DeviceId(1)));
         assert_eq!(st.device(DeviceId(1)).len(), 0, "core calendar reclaimed");
-        assert_eq!(st.link.len(), link_before - 2, "orphans' future link slots reclaimed");
+        assert_eq!(st.link().len(), link_before - 2, "orphans' future link slots reclaimed");
         for id in [hp_id, lp1_id] {
             assert_eq!(st.task(id).unwrap().state, TaskState::PreemptedPendingRealloc);
         }
@@ -619,15 +874,14 @@ mod tests {
         let late = spec(&mut st, Priority::Low, 40_000);
         let late_id = late.id;
         st.register_task(late);
-        assert!(st
-            .commit_allocation(Allocation {
-                task: late_id,
-                device: DeviceId(1),
-                window: win(20_000, 37_000),
-                cores: 2,
-                offloaded: true,
-            })
-            .is_err());
+        assert!(place(&mut st, Allocation {
+            task: late_id,
+            device: DeviceId(1),
+            window: win(20_000, 37_000),
+            cores: 2,
+            offloaded: true,
+        })
+        .is_err());
         st.check_invariants().unwrap();
         assert_eq!(st.up_devices().count(), st.num_devices() - 1);
     }
@@ -638,7 +892,7 @@ mod tests {
         let s = spec(&mut st, Priority::Low, 30_000);
         let id = s.id;
         st.register_task(s);
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: id,
             device: DeviceId(0),
             window: win(0, 17_000),
@@ -653,19 +907,42 @@ mod tests {
         let s2 = spec(&mut st, Priority::Low, 40_000);
         let id2 = s2.id;
         st.register_task(s2);
-        assert!(st
-            .commit_allocation(Allocation {
-                task: id2,
-                device: DeviceId(0),
-                window: win(20_000, 37_000),
-                cores: 2,
-                offloaded: false,
-            })
-            .is_err());
+        assert!(place(&mut st, Allocation {
+            task: id2,
+            device: DeviceId(0),
+            window: win(20_000, 37_000),
+            cores: 2,
+            offloaded: false,
+        })
+        .is_err());
         // Rejoin makes it schedulable again.
         st.set_device_health(DeviceId(0), DeviceHealth::Up);
         assert!(st.device_is_up(DeviceId(0)));
         st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn version_advances_on_mutation_only() {
+        let (_, mut st) = state();
+        let v0 = st.version();
+        let s = spec(&mut st, Priority::Low, 20_000);
+        let id = s.id;
+        st.register_task(s);
+        assert!(st.version() > v0, "registration bumps the version");
+        let v1 = st.version();
+        let _ = st.task(id);
+        let _ = st.link();
+        let _ = st.fingerprint();
+        assert_eq!(st.version(), v1, "reads leave the version alone");
+        place(&mut st, Allocation {
+            task: id,
+            device: DeviceId(0),
+            window: win(0, 17_000),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+        assert!(st.version() > v1, "apply bumps the version");
     }
 
     #[test]

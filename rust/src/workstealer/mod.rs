@@ -11,6 +11,12 @@
 //! preemption variants evict the farthest-deadline running low-priority
 //! task when a local high-priority task finds no free core.
 //!
+//! Placements go through the same transactional door as the scheduler:
+//! each start/steal stages its transfer + core window + state update into a
+//! [`PlacementPlan`] and commits atomically (poll messages are the one
+//! exception — a poll is paid whether or not it finds work, so it is
+//! charged directly via [`NetworkState::charge_link_message`]).
+//!
 //! Modelling note (documented deviation): the real decentralised stealer
 //! polls continuously; an event-driven simulation has no "continuously", so
 //! idle devices attempt steals whenever work is enqueued or a task ends —
@@ -20,7 +26,8 @@ use std::collections::VecDeque;
 
 use crate::config::SystemConfig;
 use crate::resources::SlotKind;
-use crate::scheduler::rescue::relocate_hp;
+use crate::scheduler::plan::PlacementPlan;
+use crate::scheduler::rescue::{relocate_hp, VictimPolicy};
 use crate::scheduler::{
     HpOutcome, HpRescue, LpOutcome, LpPlacement, Policy, PreemptionReport, RescueOutcome,
 };
@@ -42,7 +49,10 @@ pub enum Mode {
 
 /// A centralised or decentralised workstealer (± preemption).
 pub struct Workstealer {
+    /// Queue topology.
     pub mode: Mode,
+    /// Evict the farthest-deadline LP task when a local HP task finds no
+    /// free core.
     pub preemption: bool,
     /// Central queue (Central mode).
     central_queue: VecDeque<TaskId>,
@@ -55,6 +65,7 @@ pub struct Workstealer {
 }
 
 impl Workstealer {
+    /// Build a stealer for the configured topology.
     pub fn new(mode: Mode, preemption: bool, cfg: &SystemConfig) -> Workstealer {
         Workstealer {
             mode,
@@ -104,14 +115,15 @@ impl Workstealer {
                     .collect();
                 self.rng.shuffle(&mut order);
                 for i in order {
-                    // One poll message on the link per queried device.
+                    // One poll message on the link per queried device —
+                    // paid whether or not the queue has work, so charged
+                    // directly rather than staged in a plan.
                     let poll_dur = st.link_model.slot_duration(cfg, SlotKind::PollMsg);
                     let owner = self.device_queues[i]
                         .front()
                         .copied()
                         .unwrap_or(TaskId(u64::MAX));
-                    st.link
-                        .reserve_earliest(now, poll_dur, SlotKind::PollMsg, owner);
+                    st.charge_link_message(now, poll_dur, SlotKind::PollMsg, owner);
                     if let Some(t) = pop_runnable(&mut self.device_queues[i], st, cfg, dev, now)
                     {
                         return Some(t);
@@ -243,8 +255,9 @@ fn pop_runnable(
     None
 }
 
-/// Start `task` on `dev` right now, reserving the input transfer when
-/// stolen across devices.
+/// Start `task` on `dev` right now, staging the input transfer (when
+/// stolen across devices), the core window, and the completion
+/// state-update into one committed plan.
 ///
 /// Core policy: the stealer defaults to the two-core configuration (Fig 8:
 /// workstealer allocations skew heavily to two cores) — two 2-core tasks
@@ -264,9 +277,10 @@ fn start_task(
     let deadline = rec.spec.deadline;
     let offloaded = source != dev;
 
+    let mut plan = PlacementPlan::new(st);
     let (start, input_ready) = if offloaded {
         let dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
-        let xfer_start = st.link.earliest_fit(now, dur);
+        let xfer_start = plan.link_view(st).earliest_fit(now, dur);
         let xfer_end = xfer_start + dur;
         (xfer_end, Some((xfer_start, dur, xfer_end)))
     } else {
@@ -308,11 +322,10 @@ fn start_task(
     let (config, window) = chosen?;
 
     if let Some((xfer_start, dur, _)) = input_ready {
-        st.link
-            .reserve(xfer_start, dur, SlotKind::InputTransfer, task)
+        plan.stage_link(st, xfer_start, dur, SlotKind::InputTransfer, task)
             .expect("earliest_fit produced occupied transfer slot");
     }
-    st.commit_allocation(Allocation {
+    plan.stage_placement(st, Allocation {
         task,
         device: dev,
         window,
@@ -321,7 +334,9 @@ fn start_task(
     })
     .expect("fits() said the window was free");
     // Completion status message back to the owner/controller.
-    st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
+    let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
+    plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);
+    st.apply(plan).expect("freshly staged steal plan");
     Some(LpPlacement {
         task,
         device: dev,
@@ -335,7 +350,9 @@ fn start_task(
 impl Policy for Workstealer {
     /// High-priority tasks run locally, immediately, or not at all. The
     /// preemption variant evicts the farthest-deadline low-priority task
-    /// and requeues it (its "reallocation" is a later steal).
+    /// and requeues it (its "reallocation" is a later steal) — but only
+    /// when the eviction actually frees the core: a candidate plan whose
+    /// eviction would not make room is dropped, not committed.
     fn allocate_hp(
         &mut self,
         st: &mut NetworkState,
@@ -354,16 +371,26 @@ impl Policy for Workstealer {
             return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
         }
         let window = Window::from_duration(now, cfg.hp_slot());
+        let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
         if window.end <= deadline && st.device(source).fits(&window, 1) {
-            st.commit_allocation(Allocation { task, device: source, window, cores: 1, offloaded: false })
-                .expect("fits");
-            st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
+            let mut plan = PlacementPlan::new(st);
+            plan.stage_placement(st, Allocation {
+                task,
+                device: source,
+                window,
+                cores: 1,
+                offloaded: false,
+            })
+            .expect("fits");
+            plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);
+            st.apply(plan).expect("freshly staged stealer hp plan");
             return HpOutcome { window: Some(window), preemption: None, search: t0.elapsed() };
         }
         if !self.preemption || window.end > deadline {
             return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
         }
-        // Preemption: evict the farthest-deadline LP task on the device.
+        // Preemption: evict the farthest-deadline LP task on the device —
+        // staged and committed together with the placement it enables.
         let victim = st
             .device(source)
             .preemption_candidates(&window)
@@ -372,20 +399,32 @@ impl Policy for Workstealer {
         let Some((victim_id, victim_cores, victim_was_running)) = victim else {
             return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
         };
-        st.preempt_task(victim_id, now).expect("candidate is allocated LP");
-        st.reserve_link_message(cfg, now, SlotKind::PreemptMsg, victim_id);
+        if !st.device(source).fits_without(&window, 1, victim_id) {
+            // Eviction insufficient (an interior non-preemptible spike):
+            // the read-only probe rejects it before any staging — no
+            // victim is ejected for nothing.
+            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+        }
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_eviction(st, victim_id, now)
+            .expect("candidate is allocated LP");
+        let preempt_dur = st.link_model.slot_duration(cfg, SlotKind::PreemptMsg);
+        plan.stage_link_earliest(st, now, preempt_dur, SlotKind::PreemptMsg, victim_id);
+        debug_assert!(plan.device_view(st, source).fits(&window, 1));
+        plan.stage_placement(st, Allocation {
+            task,
+            device: source,
+            window,
+            cores: 1,
+            offloaded: false,
+        })
+        .expect("fits after staged eviction");
+        plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);
+        st.apply(plan).expect("freshly staged stealer preemption plan");
         let victim_source = st.task(victim_id).unwrap().spec.source;
         self.enqueue(victim_id, victim_source); // reallocation = a later steal
-        let window = if st.device(source).fits(&window, 1) {
-            st.commit_allocation(Allocation { task, device: source, window, cores: 1, offloaded: false })
-                .expect("fits after eviction");
-            st.reserve_link_message(cfg, window.end, SlotKind::StateUpdate, task);
-            Some(window)
-        } else {
-            None
-        };
         HpOutcome {
-            window,
+            window: Some(window),
             preemption: Some(PreemptionReport {
                 victim: victim_id,
                 victim_cores,
@@ -453,8 +492,9 @@ impl Policy for Workstealer {
 
     /// Stealer-flavoured rescue: low-priority orphans go back on a queue
     /// (their rescue is a later steal — mirroring how this policy already
-    /// treats preemption victims), high-priority orphans get one immediate
-    /// relocation attempt, with the preemption variant allowed to evict.
+    /// treats preemption victims), high-priority orphans get one
+    /// candidate-plan relocation search, with the preemption variant
+    /// allowed to evict (the victim is requeued).
     fn rescue_orphans(
         &mut self,
         st: &mut NetworkState,
@@ -480,33 +520,27 @@ impl Policy for Workstealer {
                     }
                 }
                 Priority::High => {
-                    let attempt = relocate_hp(st, cfg, task, now, self.preemption);
-                    let report = attempt.victim.map(|(victim, cores, was_running)| {
-                        // Like this policy's preemption path: the victim's
-                        // reallocation is a later steal.
-                        let victim_source = st.task(victim).unwrap().spec.source;
-                        self.enqueue(victim, victim_source);
-                        PreemptionReport {
-                            victim,
-                            victim_cores: cores,
-                            victim_was_running: was_running,
-                            reallocation: None,
-                            realloc_search: std::time::Duration::ZERO,
+                    match relocate_hp(st, cfg, task, now, self.preemption, VictimPolicy::Requeue)
+                    {
+                        Some(rel) => {
+                            // Like this policy's preemption path: a
+                            // committed eviction's victim waits for a
+                            // later steal.
+                            if let Some(report) = &rel.preemption {
+                                let victim_source =
+                                    st.task(report.victim).unwrap().spec.source;
+                                self.enqueue(report.victim, victim_source);
+                            }
+                            out.hp_rescued.push(HpRescue {
+                                task,
+                                device: rel.device,
+                                window: rel.window,
+                                preemption: rel.preemption,
+                            });
                         }
-                    });
-                    match attempt.window {
-                        Some((device, window)) => out.hp_rescued.push(HpRescue {
-                            task,
-                            device,
-                            window,
-                            preemption: report,
-                        }),
-                        None => {
-                            // The orphan is lost; a fired eviction (victim
-                            // already requeued above) still counts.
-                            out.lost.push((task, Priority::High));
-                            out.failed_rescue_evictions.extend(report);
-                        }
+                        // A failed relocation commits nothing — no phantom
+                        // eviction to account for.
+                        None => out.lost.push((task, Priority::High)),
                     }
                 }
             }
@@ -535,6 +569,12 @@ mod tests {
         let st = NetworkState::new(&cfg);
         let ws = Workstealer::new(mode, preemption, &cfg);
         (cfg, st, ws)
+    }
+
+    fn place(st: &mut NetworkState, alloc: Allocation) {
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_placement(st, alloc).unwrap();
+        st.apply(plan).unwrap();
     }
 
     fn hp(st: &mut NetworkState, cfg: &SystemConfig, source: u32, now: SimTime) -> TaskId {
@@ -635,7 +675,7 @@ mod tests {
             assert!(p.window.start >= p.input_ready.unwrap());
         }
         let transfers = st
-            .link
+            .link()
             .slots()
             .iter()
             .filter(|s| s.kind == SlotKind::InputTransfer)
@@ -650,7 +690,7 @@ mod tests {
         let rid = lp_request(&mut st, 0, 4, 18.86);
         enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
         let polls = st
-            .link
+            .link()
             .slots()
             .iter()
             .filter(|s| s.kind == SlotKind::PollMsg)
@@ -695,6 +735,44 @@ mod tests {
         let out = ws.allocate_hp(&mut st, &cfg, id, SimTime::from_millis(10));
         assert!(!out.allocated());
         assert!(out.preemption.is_none());
+    }
+
+    #[test]
+    fn insufficient_eviction_leaves_victim_running() {
+        // The victim overlaps the start of the HP window, but a
+        // non-preemptible 4-core spike covers its tail: evicting the victim
+        // cannot free the window, so the candidate plan must be dropped —
+        // nothing is committed and the victim keeps running.
+        let (cfg, mut st, mut ws) = setup(Mode::Central, true);
+        let rid = lp_request(&mut st, 0, 1, 60.0);
+        let victim = st.request(rid).unwrap().tasks[0];
+        place(&mut st, Allocation {
+            task: victim,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(0.5)),
+            cores: 2,
+            offloaded: false,
+        });
+        let spike = hp(&mut st, &cfg, 0, SimTime::ZERO);
+        place(&mut st, Allocation {
+            task: spike,
+            device: DeviceId(0),
+            window: Window::new(SimTime::from_secs_f64(0.5), SimTime::from_secs_f64(1.4)),
+            cores: 4,
+            offloaded: false,
+        });
+        let id = hp(&mut st, &cfg, 0, SimTime::from_millis(10));
+        let after_register = st.fingerprint();
+        let out = ws.allocate_hp(&mut st, &cfg, id, SimTime::from_millis(10));
+        assert!(!out.allocated());
+        assert!(out.preemption.is_none());
+        assert_eq!(ws.queued(), 0, "no victim was ejected");
+        assert_eq!(
+            st.task(victim).unwrap().state,
+            TaskState::Allocated,
+            "the would-be victim is untouched"
+        );
+        assert_eq!(st.fingerprint(), after_register, "failed attempt leaves zero residue");
     }
 
     #[test]
@@ -771,24 +849,22 @@ mod tests {
             spawn: SimTime::ZERO,
             request: None,
         });
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: hp_id,
             device: DeviceId(0),
             window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(1.0)),
             cores: 1,
             offloaded: false,
-        })
-        .unwrap();
+        });
         let rid = lp_request(&mut st, 0, 1, 60.0);
         let lp_id = st.request(rid).unwrap().tasks[0];
-        st.commit_allocation(Allocation {
+        place(&mut st, Allocation {
             task: lp_id,
             device: DeviceId(0),
             window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
             cores: 2,
             offloaded: false,
-        })
-        .unwrap();
+        });
         let now = SimTime::from_millis(500);
         let orphans = st.mark_device_down(DeviceId(0), now);
         assert_eq!(orphans, vec![hp_id, lp_id], "HP gets first claim");

@@ -163,7 +163,7 @@ fn failure_detection_reclaims_every_dead_reservation() {
             }
             assert!(
                 c.state
-                    .link
+                    .link()
                     .slots()
                     .iter()
                     .all(|s| s.owner != id || s.window.start < detect_at),

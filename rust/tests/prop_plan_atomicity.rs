@@ -1,0 +1,534 @@
+//! Transactional-plan properties.
+//!
+//! 1. **Atomicity**: for random scenes and random plan scripts, a
+//!    validation failure injected at *every* stage index — and dropping
+//!    the plan afterwards — leaves the network state bit-identical
+//!    (fingerprint-equal) to the pre-plan state. This replaces the old
+//!    ad-hoc "no partial commits leaked" assertions that were scattered
+//!    across the policy files.
+//! 2. **Equivalence**: single-task plans reproduce the seed paths'
+//!    placements exactly on the paper's 4-device scenario — a direct
+//!    reimplementation of the pre-plan mutate-and-rollback algorithms run
+//!    on cloned resource timelines must pick the same device, window, and
+//!    core configuration as the plan-based code.
+//! 3. **Door enforcement**: no policy source file calls the raw mutation
+//!    APIs; every placement goes through `NetworkState::apply`.
+
+use pats::config::SystemConfig;
+use pats::resources::{CoreTimeline, SlotKind, Timeline};
+use pats::scheduler::high_priority::HP_CORES;
+use pats::scheduler::low_priority::allocate_single;
+use pats::scheduler::plan::PlacementPlan;
+use pats::scheduler::{PatsScheduler, Policy};
+use pats::state::NetworkState;
+use pats::task::{
+    Allocation, CoreConfig, DeviceId, FrameId, Priority, TaskId, TaskSpec, Window,
+};
+use pats::time::{SimDuration, SimTime};
+use pats::util::prop::{run, Gen};
+
+// ---------------------------------------------------------------------
+// Shared scene construction
+// ---------------------------------------------------------------------
+
+fn register(st: &mut NetworkState, source: u32, priority: Priority, deadline: SimTime) -> TaskId {
+    let id = st.fresh_task_id();
+    st.register_task(TaskSpec {
+        id,
+        frame: FrameId(0),
+        source: DeviceId(source),
+        priority,
+        deadline,
+        spawn: SimTime::ZERO,
+        request: None,
+    });
+    id
+}
+
+/// Pre-load a valid random scene: some tasks placed, some still pending.
+/// Returns (placed task ids, pending task ids).
+fn random_scene(g: &mut Gen, cfg: &SystemConfig, st: &mut NetworkState) -> (Vec<TaskId>, Vec<TaskId>) {
+    let mut placed = Vec::new();
+    let mut pending = Vec::new();
+    for _ in 0..g.usize(0, 8) {
+        let dev = g.u64(0, cfg.devices as u64 - 1) as u32;
+        let priority = if g.bool(0.25) { Priority::High } else { Priority::Low };
+        let deadline = SimTime::from_secs_f64(g.f64(10.0, 90.0));
+        let id = register(st, dev, priority, deadline);
+        let start = SimTime::from_secs_f64(g.f64(0.0, 20.0));
+        let dur = SimDuration::from_secs_f64(g.f64(0.5, 18.0));
+        let cores = *g.pick(&[1u32, 2, 4]);
+        let mut plan = PlacementPlan::new(st);
+        let staged = plan.stage_placement(
+            st,
+            Allocation {
+                task: id,
+                device: DeviceId(dev),
+                window: Window::from_duration(start, dur),
+                cores,
+                offloaded: false,
+            },
+        );
+        if staged.is_ok() {
+            st.apply(plan).unwrap();
+            placed.push(id);
+        } else {
+            pending.push(id);
+        }
+    }
+    for _ in 0..g.usize(1, 4) {
+        let dev = g.u64(0, cfg.devices as u64 - 1) as u32;
+        let deadline = SimTime::from_secs_f64(g.f64(10.0, 60.0));
+        pending.push(register(st, dev, Priority::Low, deadline));
+    }
+    (placed, pending)
+}
+
+// ---------------------------------------------------------------------
+// 1. Atomicity under injected validation failures
+// ---------------------------------------------------------------------
+
+/// One scripted staging operation.
+#[derive(Clone, Copy)]
+enum Op {
+    Place { task_idx: usize, dev: u32, start_s: f64, dur_s: f64, cores: u32 },
+    Link { task_idx: usize, not_before_s: f64, dur_ms: u64 },
+    Evict { task_idx: usize },
+}
+
+fn exec(op: Op, plan: &mut PlacementPlan, st: &NetworkState, tasks: &[TaskId]) {
+    match op {
+        Op::Place { task_idx, dev, start_s, dur_s, cores } => {
+            let _ = plan.stage_placement(
+                st,
+                Allocation {
+                    task: tasks[task_idx % tasks.len()],
+                    device: DeviceId(dev),
+                    window: Window::from_duration(
+                        SimTime::from_secs_f64(start_s),
+                        SimDuration::from_secs_f64(dur_s),
+                    ),
+                    cores,
+                    offloaded: false,
+                },
+            );
+        }
+        Op::Link { task_idx, not_before_s, dur_ms } => {
+            plan.stage_link_earliest(
+                st,
+                SimTime::from_secs_f64(not_before_s),
+                SimDuration::from_millis(dur_ms),
+                SlotKind::LpAllocMsg,
+                tasks[task_idx % tasks.len()],
+            );
+        }
+        Op::Evict { task_idx } => {
+            let _ = plan.stage_eviction(st, tasks[task_idx % tasks.len()], SimTime::ZERO);
+        }
+    }
+}
+
+/// Stage something guaranteed-invalid; assert it is rejected.
+fn inject_failure(g: &mut Gen, plan: &mut PlacementPlan, st: &NetworkState, tasks: &[TaskId]) {
+    match g.usize(0, 2) {
+        0 => {
+            // More cores than any device has.
+            let err = plan.stage_placement(
+                st,
+                Allocation {
+                    task: tasks[0],
+                    device: DeviceId(0),
+                    window: Window::from_duration(SimTime::ZERO, SimDuration::from_secs_f64(1.0)),
+                    cores: 99,
+                    offloaded: false,
+                },
+            );
+            assert!(err.is_err(), "99-core placement must be rejected at staging");
+        }
+        1 => {
+            // Evicting a task that does not exist.
+            let err = plan.stage_eviction(st, TaskId(u64::MAX - 7), SimTime::ZERO);
+            assert!(err.is_err(), "evicting an unknown task must be rejected");
+        }
+        _ => {
+            // A link slot colliding with an already-staged/placed one.
+            let w = plan.stage_link_earliest(
+                st,
+                SimTime::ZERO,
+                SimDuration::from_millis(5),
+                SlotKind::LpAllocMsg,
+                tasks[0],
+            );
+            let err = plan.stage_link(
+                st,
+                w.start,
+                SimDuration::from_millis(5),
+                SlotKind::LpAllocMsg,
+                tasks[0],
+            );
+            assert!(err.is_err(), "overlapping link slot must be rejected");
+            // Clean the probe slot back out so the script continues from
+            // where it was (unstaging is also part of the contract).
+            assert!(plan.unstage_link_at(tasks[0], w.start));
+        }
+    }
+}
+
+#[test]
+fn injected_failure_at_every_stage_index_leaves_state_bit_identical() {
+    run("plan atomicity", 40, |g| {
+        let cfg = SystemConfig::default();
+        let mut st = NetworkState::new(&cfg);
+        let (placed, pending) = random_scene(g, &cfg, &mut st);
+        let tasks: Vec<TaskId> = placed.iter().chain(pending.iter()).copied().collect();
+        if tasks.is_empty() {
+            return;
+        }
+        // A random plan script.
+        let n_ops = g.usize(1, 6);
+        let script: Vec<Op> = (0..n_ops)
+            .map(|_| match g.usize(0, 2) {
+                0 => Op::Place {
+                    task_idx: g.usize(0, tasks.len() - 1),
+                    dev: g.u64(0, cfg.devices as u64 - 1) as u32,
+                    start_s: g.f64(0.0, 30.0),
+                    dur_s: g.f64(0.5, 18.0),
+                    cores: *g.pick(&[1u32, 2, 4]),
+                },
+                1 => Op::Link {
+                    task_idx: g.usize(0, tasks.len() - 1),
+                    not_before_s: g.f64(0.0, 10.0),
+                    dur_ms: g.u64(1, 50),
+                },
+                _ => Op::Evict { task_idx: g.usize(0, tasks.len() - 1) },
+            })
+            .collect();
+
+        let before = st.fingerprint();
+        // Poison at every stage index (and past the end), then drop the
+        // plan: the state must be bit-identical every time.
+        for poison_at in 0..=script.len() {
+            let mut plan = PlacementPlan::new(&st);
+            for (i, &op) in script.iter().enumerate() {
+                if i == poison_at {
+                    inject_failure(g, &mut plan, &st, &tasks);
+                }
+                exec(op, &mut plan, &st, &tasks);
+            }
+            if poison_at == script.len() {
+                inject_failure(g, &mut plan, &st, &tasks);
+            }
+            assert_eq!(st.fingerprint(), before, "staging must never touch the state");
+            drop(plan);
+            assert_eq!(st.fingerprint(), before, "a dropped plan leaves zero residue");
+        }
+
+        // A stale plan is rejected whole.
+        let mut stale = PlacementPlan::new(&st);
+        for &op in &script {
+            exec(op, &mut stale, &st, &tasks);
+        }
+        register(&mut st, 0, Priority::Low, SimTime::from_secs_f64(30.0));
+        let poisoned_before = st.fingerprint();
+        assert!(st.apply(stale).is_err(), "stale plan must be rejected");
+        assert_eq!(st.fingerprint(), poisoned_before, "rejection leaves zero residue");
+
+        // And the same script, committed, keeps every resource invariant.
+        let mut plan = PlacementPlan::new(&st);
+        for &op in &script {
+            exec(op, &mut plan, &st, &tasks);
+        }
+        st.apply(plan).unwrap();
+        st.check_invariants().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------
+// 2. Seed-path equivalence on the paper's 4-device scenario
+// ---------------------------------------------------------------------
+
+/// Cloned resource view for the reference implementations: the seed's
+/// algorithms mutated `NetworkState` directly; the references run the very
+/// same mutation sequence against clones.
+struct RefNet {
+    link: Timeline,
+    devs: Vec<CoreTimeline>,
+}
+
+impl RefNet {
+    fn of(st: &NetworkState) -> RefNet {
+        RefNet {
+            link: st.link().clone(),
+            devs: st.device_ids().map(|d| st.device(d).clone()).collect(),
+        }
+    }
+}
+
+/// The seed's high-priority `try_allocate`, verbatim semantics: earliest
+/// allocation-message fit → window → capacity check → commit three slots.
+fn ref_hp_allocate(
+    net: &mut RefNet,
+    cfg: &SystemConfig,
+    st: &NetworkState,
+    source: DeviceId,
+    deadline: SimTime,
+    task: TaskId,
+    now: SimTime,
+) -> Option<Window> {
+    let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
+    let msg_start = net.link.earliest_fit(now, msg_dur);
+    let window = Window::from_duration(msg_start + msg_dur, cfg.hp_slot());
+    if window.end > deadline {
+        return None;
+    }
+    let dev = &net.devs[source.0 as usize];
+    if !dev.fits(&window, HP_CORES) {
+        return None;
+    }
+    net.link.reserve(msg_start, msg_dur, SlotKind::HpAllocMsg, task).unwrap();
+    net.devs[source.0 as usize]
+        .reserve(window, HP_CORES, task, deadline, false)
+        .unwrap();
+    let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
+    net.link
+        .reserve_earliest(window.end, update_dur, SlotKind::StateUpdate, task);
+    Some(window)
+}
+
+/// The seed's single-task low-priority path (`allocate_tasks` with one
+/// task): time-point search, source-first partial allocation at MIN,
+/// most-idle offload with mutate-and-rollback, then the improvement pass.
+#[allow(clippy::too_many_arguments)]
+fn ref_lp_single(
+    net: &mut RefNet,
+    cfg: &SystemConfig,
+    st: &NetworkState,
+    task: TaskId,
+    source: DeviceId,
+    deadline: SimTime,
+    now: SimTime,
+) -> Option<(DeviceId, Window, u32, bool)> {
+    if now >= deadline {
+        return None;
+    }
+    let cores = CoreConfig::MIN.cores();
+    let slot = cfg.lp_slot(cores);
+    let latest_start = deadline - slot;
+    let mut time_points = vec![now];
+    {
+        let mut pts: Vec<SimTime> = net
+            .devs
+            .iter()
+            .flat_map(|d| d.completion_points(now, deadline))
+            .collect();
+        pts.sort_unstable();
+        pts.dedup();
+        time_points.extend(pts);
+    }
+    time_points.retain(|&tp| tp <= latest_start);
+
+    for tp in time_points {
+        let msg_dur = st.link_model.slot_duration(cfg, SlotKind::LpAllocMsg);
+        let msg_start = net.link.earliest_fit(now, msg_dur);
+        let arrival = msg_start + msg_dur;
+
+        // Source first.
+        let local_window = Window::from_duration(arrival.max(tp), slot);
+        if local_window.end <= deadline && net.devs[source.0 as usize].fits(&local_window, cores)
+        {
+            net.link.reserve(msg_start, msg_dur, SlotKind::LpAllocMsg, task).unwrap();
+            net.devs[source.0 as usize]
+                .reserve(local_window, cores, task, deadline, true)
+                .unwrap();
+            return Some(finish_ref_lp(net, cfg, st, task, source, deadline, local_window, false));
+        }
+
+        // Offload: most-idle first.
+        let horizon = Window::new(tp, deadline.max(tp));
+        let mut candidates: Vec<(u64, u32)> = Vec::new();
+        for (i, dev) in net.devs.iter().enumerate() {
+            if i == source.0 as usize {
+                continue;
+            }
+            let busy: u64 = dev
+                .overlapping(&horizon)
+                .map(|s| s.window.duration().as_micros() * s.cores as u64)
+                .sum();
+            candidates.push((busy, i as u32));
+        }
+        candidates.sort_unstable();
+        for (_, d) in candidates {
+            let msg_w = net.link.reserve(msg_start, msg_dur, SlotKind::LpAllocMsg, task).unwrap();
+            let xfer_dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
+            let xfer_start = net.link.earliest_fit(msg_w.end, xfer_dur);
+            let window = Window::from_duration((xfer_start + xfer_dur).max(tp), slot);
+            if window.end <= deadline && net.devs[d as usize].fits(&window, cores) {
+                net.link
+                    .reserve(xfer_start, xfer_dur, SlotKind::InputTransfer, task)
+                    .unwrap();
+                net.devs[d as usize]
+                    .reserve(window, cores, task, deadline, true)
+                    .unwrap();
+                return Some(finish_ref_lp(
+                    net, cfg, st, task, DeviceId(d), deadline, window, true,
+                ));
+            }
+            net.link.remove_owner_from(task, msg_start);
+        }
+    }
+    None
+}
+
+/// The seed's improvement pass + state-update reservation.
+#[allow(clippy::too_many_arguments)]
+fn finish_ref_lp(
+    net: &mut RefNet,
+    cfg: &SystemConfig,
+    st: &NetworkState,
+    task: TaskId,
+    dev: DeviceId,
+    deadline: SimTime,
+    window: Window,
+    offloaded: bool,
+) -> (DeviceId, Window, u32, bool) {
+    let mut final_window = window;
+    let mut final_cores = CoreConfig::MIN.cores();
+    let next = CoreConfig::MIN.upgrade().unwrap();
+    let upgraded = Window::from_duration(window.start, cfg.lp_slot(next.cores()));
+    let d = &mut net.devs[dev.0 as usize];
+    d.remove_task(task);
+    if d.reserve(upgraded, next.cores(), task, deadline, true).is_ok() {
+        final_window = upgraded;
+        final_cores = next.cores();
+    } else {
+        d.reserve(window, CoreConfig::MIN.cores(), task, deadline, true)
+            .expect("restoring the original reservation cannot fail");
+    }
+    let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
+    net.link
+        .reserve_earliest(final_window.end, update_dur, SlotKind::StateUpdate, task);
+    (dev, final_window, final_cores, offloaded)
+}
+
+#[test]
+fn single_task_plans_reproduce_the_seed_paths_exactly() {
+    run("plan/seed equivalence", 60, |g| {
+        // The paper's 4-device scenario, randomly pre-loaded.
+        let cfg = SystemConfig::default();
+        let mut st = NetworkState::new(&cfg);
+        random_scene(g, &cfg, &mut st);
+
+        let now = SimTime::from_secs_f64(g.f64(0.0, 5.0));
+
+        // High-priority equivalence.
+        let hp_source = DeviceId(g.u64(0, 3) as u32);
+        let hp_deadline = now + SimDuration::from_secs_f64(cfg.hp_deadline_s);
+        let hp = register(&mut st, hp_source.0, Priority::High, hp_deadline);
+        let mut reference = RefNet::of(&st);
+        let expect =
+            ref_hp_allocate(&mut reference, &cfg, &st, hp_source, hp_deadline, hp, now);
+        let mut sched =
+            PatsScheduler { preemption: false, reallocate: false, set_aware_victims: false };
+        let got = sched.allocate_hp(&mut st, &cfg, hp, now);
+        assert_eq!(got.window, expect, "HP plan diverges from the seed path");
+
+        // Low-priority single-task equivalence (the §4 reallocation path).
+        let lp_source = DeviceId(g.u64(0, 3) as u32);
+        let lp_deadline = now + SimDuration::from_secs_f64(g.f64(6.0, 40.0));
+        let lp = register(&mut st, lp_source.0, Priority::Low, lp_deadline);
+        let mut reference = RefNet::of(&st);
+        let expect =
+            ref_lp_single(&mut reference, &cfg, &st, lp, lp_source, lp_deadline, now);
+        let got = allocate_single(&mut st, &cfg, lp, now)
+            .map(|p| (p.device, p.window, p.cores, p.offloaded));
+        assert_eq!(got, expect, "LP single-task plan diverges from the seed path");
+
+        // Both paths left a consistent state behind.
+        st.check_invariants().unwrap();
+
+        // And the committed resources match the reference's resources
+        // exactly (same slots on the link and every device).
+        if expect.is_some() {
+            let mut actual_link: Vec<String> = st
+                .link()
+                .slots()
+                .iter()
+                .map(|s| format!("{:?}{:?}{:?}", s.window, s.kind, s.owner))
+                .collect();
+            let mut expect_link: Vec<String> = reference
+                .link
+                .slots()
+                .iter()
+                .map(|s| format!("{:?}{:?}{:?}", s.window, s.kind, s.owner))
+                .collect();
+            actual_link.sort();
+            expect_link.sort();
+            assert_eq!(actual_link, expect_link, "link calendars diverge");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// 3. The plan door is the only door (grep-enforced)
+// ---------------------------------------------------------------------
+
+#[test]
+fn no_direct_mutation_calls_outside_the_plan_door() {
+    let root = env!("CARGO_MANIFEST_DIR");
+    // Policy + driver sources: everything that builds plans. The state
+    // module (which owns `apply` and the lifecycle methods) and the plan
+    // module (which mutates only its own scratch copies) are the
+    // sanctioned other side of the door.
+    let policy_sources = [
+        "rust/src/scheduler/mod.rs",
+        "rust/src/scheduler/high_priority.rs",
+        "rust/src/scheduler/low_priority.rs",
+        "rust/src/scheduler/preemption.rs",
+        "rust/src/scheduler/rescue.rs",
+        "rust/src/workstealer/mod.rs",
+        "rust/src/coordinator/mod.rs",
+        "rust/src/sim/mod.rs",
+    ];
+    // Raw mutation spellings that must not appear in policy code. The
+    // compiler already enforces most of this (the link timeline is a
+    // private field, `commit_allocation`/`reserve_link_message`/
+    // `device_mut` no longer exist); the grep keeps the door shut against
+    // reintroduction under the old names.
+    let forbidden = [
+        "commit_allocation",
+        "reserve_link_message",
+        "device_mut",
+        ".link.reserve",
+        "link_mut",
+        "reserve_earliest",
+    ];
+    for file in policy_sources {
+        let path = format!("{root}/{file}");
+        let src = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!("cannot read {path}: {e} (grep-enforced door test)")
+        });
+        for needle in forbidden {
+            assert!(
+                !src.contains(needle),
+                "{file} contains forbidden raw-mutation spelling `{needle}`; \
+                 stage the operation in a PlacementPlan and commit it via \
+                 NetworkState::apply instead"
+            );
+        }
+    }
+    // `charge_link_message` is the one sanctioned direct reservation — an
+    // unconditional bookkeeping cost (workstealer polls). It must appear
+    // in the workstealer and nowhere else among the policies.
+    let ws = std::fs::read_to_string(format!("{root}/rust/src/workstealer/mod.rs")).unwrap();
+    assert!(ws.contains("charge_link_message"), "polls pay their link cost");
+    for file in policy_sources {
+        if file.ends_with("workstealer/mod.rs") {
+            continue;
+        }
+        let src = std::fs::read_to_string(format!("{root}/{file}")).unwrap();
+        assert!(
+            !src.contains("charge_link_message"),
+            "{file}: charge_link_message is reserved for unconditional poll costs"
+        );
+    }
+}
