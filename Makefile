@@ -21,19 +21,18 @@ test:
 fmt:
 	$(CARGO) fmt --check
 
-# Clippy + rustc warnings are denied; `missing_docs` stays allow-listed
-# here because the crate-wide #![warn(missing_docs)] burn-down is
-# incremental (scheduler/* and state/ are clean; older modules are not
-# yet) — denying it would make the gate permanently red. Drop the -A once
-# the remaining modules are documented.
+# Clippy + rustc warnings are denied, `missing_docs` included: the
+# crate-wide #![warn(missing_docs)] burn-down is complete, so any new
+# undocumented public item fails the gate.
 lint:
-	$(CARGO) clippy --all-targets -- -D warnings -A missing-docs
+	$(CARGO) clippy --all-targets -- -D warnings
 
 bench:
 	$(CARGO) bench --bench timeline
 	$(CARGO) bench --bench alloc
 	$(CARGO) bench --bench plan
 	$(CARGO) bench --bench dynamics
+	$(CARGO) bench --bench fidelity
 
 artifacts:
 	$(PYTHON) python/compile/aot.py

@@ -1,0 +1,48 @@
+//! Multi-fidelity benchmark: the four-policy degradation sweep across the
+//! PR 1 fleet sizes (`fleet.sweep_sizes`, default 4/64/256/1024 devices),
+//! timed, with the full degradation census recorded to
+//! `BENCH_fidelity.json`. `cargo bench --bench fidelity` is the
+//! release-mode run behind the acceptance claim that enabling degradation
+//! never completes fewer frames than the paper's reject-or-fail behaviour.
+
+use pats::config::SystemConfig;
+use pats::experiments::{fidelity, fidelity_json, fidelity_table};
+use pats::util::json::Json;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let sizes = cfg.fleet.sweep_sizes.clone();
+    println!(
+        "running the fidelity sweep at {sizes:?} devices × {} cycles, {}% crash \
+         (seed {:#x}) ...",
+        cfg.fidelity.cycles, cfg.fidelity.crash_pct, cfg.seed
+    );
+    let t0 = std::time::Instant::now();
+    let rows = fidelity(&cfg, &sizes);
+    let wall = t0.elapsed();
+    println!("sweep complete in {wall:.2?}\n");
+    println!("{}", fidelity_table(&rows));
+
+    for &devices in &sizes {
+        let frames = |tag: &str| {
+            rows.iter()
+                .find(|r| r.label == format!("{tag}_{devices}"))
+                .map(|r| r.metrics.frames_completed)
+                .unwrap_or(0)
+        };
+        println!(
+            "{devices} devices: frames completed off {} vs full degradation {}",
+            frames("FID_OFF"),
+            frames("FID_FULL")
+        );
+    }
+
+    let doc = Json::obj()
+        .with("bench", "fidelity")
+        .with("sweep_wall_ms", wall.as_secs_f64() * 1_000.0)
+        .with("sweep", fidelity_json(&rows));
+    match std::fs::write("BENCH_fidelity.json", doc.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_fidelity.json"),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
+}

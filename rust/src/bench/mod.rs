@@ -20,18 +20,22 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Mean per-iteration time, nanoseconds.
     pub fn mean_ns(&self) -> f64 {
         self.samples_ns.mean()
     }
 
+    /// Median per-iteration time, nanoseconds.
     pub fn p50_ns(&self) -> f64 {
         self.samples_ns.percentile(50.0)
     }
 
+    /// 99th-percentile per-iteration time, nanoseconds.
     pub fn p99_ns(&self) -> f64 {
         self.samples_ns.percentile(99.0)
     }
 
+    /// Fastest iteration, nanoseconds.
     pub fn min_ns(&self) -> f64 {
         self.samples_ns.min()
     }

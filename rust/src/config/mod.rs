@@ -7,6 +7,7 @@
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::fidelity::{Catalog, FidelityConfig, Mode as FidelityMode, Variant};
 use crate::time::SimDuration;
 use crate::trace::{ChurnProfile, FleetPattern, FleetProfile};
 use crate::util::toml::Document;
@@ -23,6 +24,7 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// Parse a policy name (the `policy.policy` config key / `--policy`).
     pub fn parse(s: &str) -> Result<Policy> {
         match s {
             "scheduler" => Ok(Policy::Scheduler),
@@ -32,6 +34,7 @@ impl Policy {
         }
     }
 
+    /// Stable policy name for reports and round-tripping.
     pub fn name(self) -> &'static str {
         match self {
             Policy::Scheduler => "scheduler",
@@ -211,10 +214,15 @@ pub struct SystemConfig {
     pub hp_deadline_s: f64,
 
     // ---- message catalogue, bytes (§5) ----
+    /// High-priority allocation message size.
     pub msg_hp_alloc_bytes: u64,
+    /// Low-priority allocation message size.
     pub msg_lp_alloc_bytes: u64,
+    /// Task state-update message size.
     pub msg_state_update_bytes: u64,
+    /// Preemption-notice message size.
     pub msg_preempt_bytes: u64,
+    /// Offloaded-input image transfer size.
     pub msg_input_transfer_bytes: u64,
     /// Workstealer poll message (not in the paper's table; sized like a
     /// state update).
@@ -238,6 +246,7 @@ pub struct SystemConfig {
     pub ema_alpha: f64,
 
     // ---- policy ----
+    /// Which allocation policy drives the controller.
     pub policy: Policy,
     /// Whether the preemption mechanism is enabled.
     pub preemption: bool,
@@ -290,6 +299,10 @@ pub struct SystemConfig {
     // ---- network dynamics ----
     /// Churn / failure-recovery scenario shaping (`[dynamics]`).
     pub dynamics: DynamicsConfig,
+
+    // ---- multi-fidelity inference ----
+    /// Model-variant catalog + degradation gating (`[fidelity]`).
+    pub fidelity: FidelityConfig,
 }
 
 impl Default for SystemConfig {
@@ -331,6 +344,7 @@ impl Default for SystemConfig {
             steal_poll_interval_s: 2.0,
             fleet: FleetConfig::default(),
             dynamics: DynamicsConfig::default(),
+            fidelity: FidelityConfig::default(),
         }
     }
 }
@@ -400,6 +414,15 @@ impl SystemConfig {
             "dynamics.degrade_start_s",
             "dynamics.degrade_end_s",
             "dynamics.hp_deadline_s",
+            "fidelity.mode",
+            "fidelity.cycles",
+            "fidelity.crash_pct",
+            "fidelity.hp_time_factors",
+            "fidelity.hp_transfer_factors",
+            "fidelity.hp_accuracies",
+            "fidelity.lp_time_factors",
+            "fidelity.lp_transfer_factors",
+            "fidelity.lp_accuracies",
         ];
         for key in doc.keys() {
             if !KNOWN.contains(&key) {
@@ -581,6 +604,77 @@ impl SystemConfig {
                 *slot = v;
             }
         }
+        if let Some(v) = doc.get_str("fidelity.mode") {
+            cfg.fidelity.mode = FidelityMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_i64("fidelity.cycles") {
+            if v < 1 {
+                return Err(Error::Config(format!("fidelity.cycles must be >= 1, got {v}")));
+            }
+            cfg.fidelity.cycles = v as usize;
+        }
+        if let Some(v) = doc.get_i64("fidelity.crash_pct") {
+            cfg.fidelity.crash_pct = fleet_u8(v, 100, "fidelity.crash_pct")?;
+        }
+        // Variant lists: time factors + accuracies come as parallel arrays
+        // (index 0 must be the full-fidelity model), transfer factors are
+        // optional and default to 1.0 each.
+        fn f64_list(doc: &Document, key: &str) -> Result<Option<Vec<f64>>> {
+            let Some(value) = doc.get(key) else { return Ok(None) };
+            let arr = value
+                .as_arr()
+                .ok_or_else(|| Error::Config(format!("{key} must be an array of numbers")))?;
+            let list: Option<Vec<f64>> = arr.iter().map(|v| v.as_f64()).collect();
+            list.map(Some)
+                .ok_or_else(|| Error::Config(format!("{key} must be an array of numbers")))
+        }
+        fn variant_list(
+            doc: &Document,
+            stage: &str,
+            default: &[Variant],
+        ) -> Result<Vec<Variant>> {
+            let times = f64_list(doc, &format!("fidelity.{stage}_time_factors"))?;
+            let accs = f64_list(doc, &format!("fidelity.{stage}_accuracies"))?;
+            let transfers = f64_list(doc, &format!("fidelity.{stage}_transfer_factors"))?;
+            let (times, accs) = match (times, accs) {
+                (None, None) => {
+                    if transfers.is_some() {
+                        return Err(Error::Config(format!(
+                            "fidelity.{stage}_transfer_factors needs the matching \
+                             time-factor and accuracy lists"
+                        )));
+                    }
+                    return Ok(default.to_vec());
+                }
+                (Some(t), Some(a)) => (t, a),
+                _ => {
+                    return Err(Error::Config(format!(
+                        "fidelity.{stage}_time_factors and fidelity.{stage}_accuracies \
+                         must be given together"
+                    )))
+                }
+            };
+            let transfers = transfers.unwrap_or_else(|| vec![1.0; times.len()]);
+            if times.len() != accs.len() || times.len() != transfers.len() {
+                return Err(Error::Config(format!(
+                    "fidelity.{stage}_* lists must all have the same length"
+                )));
+            }
+            Ok(times
+                .into_iter()
+                .zip(transfers)
+                .zip(accs)
+                .map(|((time_factor, transfer_factor), accuracy)| Variant {
+                    time_factor,
+                    transfer_factor,
+                    accuracy,
+                })
+                .collect())
+        }
+        cfg.fidelity.catalog = Catalog {
+            hp: variant_list(doc, "hp", &cfg.fidelity.catalog.hp)?,
+            lp: variant_list(doc, "lp", &cfg.fidelity.catalog.lp)?,
+        };
         cfg.validate()?;
         Ok(cfg)
     }
@@ -685,6 +779,7 @@ impl SystemConfig {
                 "dynamics.hp_deadline_s must exceed the high-priority processing time".into(),
             ));
         }
+        self.fidelity.validate()?;
         Ok(())
     }
 
@@ -692,13 +787,29 @@ impl SystemConfig {
     /// "we use the standard deviation of performance tests for processing
     /// padding").
     pub fn hp_slot(&self) -> SimDuration {
-        SimDuration::from_secs_f64(self.hp_proc_s + self.hp_proc_std_s)
+        self.hp_slot_at(1.0)
+    }
+
+    /// Padded high-priority slot at a model-variant execution-time factor
+    /// (multi-fidelity extension). The benchmarked mean scales with the
+    /// variant; the σ padding does not (run-to-run noise is a property of
+    /// the device, not the model). `hp_slot_at(1.0)` is exactly
+    /// [`SystemConfig::hp_slot`], to the bit.
+    pub fn hp_slot_at(&self, time_factor: f64) -> SimDuration {
+        SimDuration::from_secs_f64(self.hp_proc_s * time_factor + self.hp_proc_std_s)
     }
 
     /// Processing duration (padded) of a low-priority task at `cores`.
     pub fn lp_slot(&self, cores: u32) -> SimDuration {
+        self.lp_slot_at(cores, 1.0)
+    }
+
+    /// Padded low-priority slot at `cores` and a model-variant
+    /// execution-time factor (multi-fidelity extension; see
+    /// [`SystemConfig::hp_slot_at`] for the padding convention).
+    pub fn lp_slot_at(&self, cores: u32, time_factor: f64) -> SimDuration {
         let base = self.lp_proc_s(cores);
-        SimDuration::from_secs_f64(base + self.lp_proc_std_s)
+        SimDuration::from_secs_f64(base * time_factor + self.lp_proc_std_s)
     }
 
     /// Unpadded benchmarked low-priority processing time at `cores`.
@@ -931,6 +1042,62 @@ hp_deadline_s = 3.0
         let mut c = SystemConfig::default();
         c.dynamics.churn_end_s = c.dynamics.churn_start_s - 1.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fidelity_defaults_and_overrides() {
+        use crate::fidelity::{Mode, VariantId};
+        let c = SystemConfig::default();
+        assert_eq!(c.fidelity.mode, Mode::Full);
+        assert!(c.fidelity.catalog.is_single_variant(), "paper-faithful default");
+        assert!(c.validate().is_ok());
+
+        let doc = crate::util::toml::Document::parse(
+            r#"
+[fidelity]
+mode = "admission-preemption"
+cycles = 6
+crash_pct = 10
+lp_time_factors = [1.0, 0.5]
+lp_accuracies = [1.0, 0.9]
+lp_transfer_factors = [1.0, 0.7]
+hp_time_factors = [1.0, 0.6]
+hp_accuracies = [1.0, 0.95]
+"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_document(&doc).unwrap();
+        assert_eq!(c.fidelity.mode, Mode::AdmissionPreemption);
+        assert_eq!(c.fidelity.cycles, 6);
+        assert_eq!(c.fidelity.crash_pct, 10);
+        assert_eq!(c.fidelity.catalog.lp.len(), 2);
+        assert_eq!(c.fidelity.catalog.lp_variant(VariantId(1)).time_factor, 0.5);
+        assert_eq!(c.fidelity.catalog.lp_variant(VariantId(1)).transfer_factor, 0.7);
+        assert_eq!(c.fidelity.catalog.hp_variant(VariantId(1)).transfer_factor, 1.0);
+        // The slot helpers scale the benchmarked mean, never the padding.
+        assert_eq!(c.lp_slot_at(2, 1.0), c.lp_slot(2));
+        assert!(c.lp_slot_at(2, 0.5) < c.lp_slot(2));
+        assert_eq!(c.hp_slot_at(1.0), c.hp_slot());
+    }
+
+    #[test]
+    fn invalid_fidelity_toml_rejected() {
+        for snippet in [
+            // Lists must come in matched pairs / lengths.
+            "[fidelity]\nlp_time_factors = [1.0, 0.5]",
+            "[fidelity]\nlp_time_factors = [1.0, 0.5]\nlp_accuracies = [1.0]",
+            "[fidelity]\nlp_transfer_factors = [1.0, 0.5]",
+            // Index 0 must be the full-fidelity model.
+            "[fidelity]\nlp_time_factors = [0.9, 0.5]\nlp_accuracies = [1.0, 0.9]",
+            // Accuracy must strictly decrease.
+            "[fidelity]\nlp_time_factors = [1.0, 0.5, 0.4]\nlp_accuracies = [1.0, 0.8, 0.9]",
+            "[fidelity]\nmode = \"sometimes\"",
+            "[fidelity]\ncycles = 0",
+            "[fidelity]\ncrash_pct = 300",
+        ] {
+            let doc = crate::util::toml::Document::parse(snippet).unwrap();
+            assert!(SystemConfig::from_document(&doc).is_err(), "accepted {snippet:?}");
+        }
     }
 
     #[test]

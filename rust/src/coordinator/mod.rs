@@ -25,7 +25,9 @@ use crate::time::{SimDuration, SimTime};
 /// overtake queued low-priority work of the same arrival window.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum JobClass {
+    /// High-priority (stage-2) requests.
     High,
+    /// Low-priority (stage-3) requests and bookkeeping.
     Low,
 }
 
@@ -74,8 +76,11 @@ impl FailureDetector {
 
 /// The master node.
 pub struct Controller<P: Policy> {
+    /// The system configuration the controller runs under.
     pub cfg: SystemConfig,
+    /// The controller's tracked view of the network.
     pub state: NetworkState,
+    /// The allocation policy in charge.
     pub policy: P,
     /// Missed-state-update watchdog (network-dynamics extension).
     pub detector: FailureDetector,
@@ -86,6 +91,7 @@ pub struct Controller<P: Policy> {
 }
 
 impl<P: Policy> Controller<P> {
+    /// A fresh controller over an empty network.
     pub fn new(cfg: SystemConfig, policy: P) -> Controller<P> {
         let state = NetworkState::new(&cfg);
         let detector = FailureDetector::new(

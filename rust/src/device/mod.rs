@@ -21,31 +21,54 @@ use crate::util::rng::Rng;
 pub struct ExecutionModel {
     hp_mean_s: f64,
     hp_sigma_s: f64,
-    lp_mean_2c_s: f64,
-    lp_mean_4c_s: f64,
+    lp_proc_2c_s: f64,
+    lp_proc_4c_s: f64,
+    lp_extra_s: f64,
     lp_sigma_s: f64,
 }
 
 impl ExecutionModel {
+    /// Build the sampler from the benchmarked means and σ in `cfg`.
     pub fn new(cfg: &SystemConfig) -> ExecutionModel {
         ExecutionModel {
             hp_mean_s: cfg.hp_proc_s,
             hp_sigma_s: cfg.hp_proc_std_s * cfg.noise_frac,
-            lp_mean_2c_s: cfg.lp_proc_2core_s + cfg.lp_live_extra_s,
-            lp_mean_4c_s: cfg.lp_proc_4core_s + cfg.lp_live_extra_s,
+            lp_proc_2c_s: cfg.lp_proc_2core_s,
+            lp_proc_4c_s: cfg.lp_proc_4core_s,
+            lp_extra_s: cfg.lp_live_extra_s,
             lp_sigma_s: cfg.lp_proc_std_s * cfg.noise_frac,
         }
     }
 
-    /// Actual duration of a high-priority (stage-2) execution.
+    /// Actual duration of a high-priority (stage-2) execution at full
+    /// fidelity.
     pub fn sample_hp(&self, rng: &mut Rng) -> SimDuration {
-        let s = rng.normal(self.hp_mean_s, self.hp_sigma_s);
-        SimDuration::from_secs_f64(s.max(self.hp_mean_s * 0.5))
+        self.sample_hp_at(1.0, rng)
     }
 
-    /// Actual duration of a low-priority DNN at `cores`.
+    /// Actual duration of a high-priority execution at a model variant's
+    /// execution-time factor (multi-fidelity extension). The benchmarked
+    /// mean scales with the variant; σ does not (run-to-run noise is a
+    /// device property). `sample_hp_at(1.0, …)` is bit-identical to
+    /// [`ExecutionModel::sample_hp`] and consumes the same RNG stream.
+    pub fn sample_hp_at(&self, time_factor: f64, rng: &mut Rng) -> SimDuration {
+        let mean = self.hp_mean_s * time_factor;
+        let s = rng.normal(mean, self.hp_sigma_s);
+        SimDuration::from_secs_f64(s.max(mean * 0.5))
+    }
+
+    /// Actual duration of a full-fidelity low-priority DNN at `cores`.
     pub fn sample_lp(&self, cores: u32, rng: &mut Rng) -> SimDuration {
-        let mean = if cores >= 4 { self.lp_mean_4c_s } else { self.lp_mean_2c_s };
+        self.sample_lp_at(cores, 1.0, rng)
+    }
+
+    /// Actual duration of a low-priority DNN at `cores` and a model
+    /// variant's execution-time factor. The variant scales the benchmarked
+    /// DNN mean only — the live-system slowdown (`lp_live_extra_s`,
+    /// middleware overhead) applies whole regardless of model size.
+    pub fn sample_lp_at(&self, cores: u32, time_factor: f64, rng: &mut Rng) -> SimDuration {
+        let proc = if cores >= 4 { self.lp_proc_4c_s } else { self.lp_proc_2c_s };
+        let mean = proc * time_factor + self.lp_extra_s;
         let s = rng.normal(mean, self.lp_sigma_s);
         SimDuration::from_secs_f64(s.max(mean * 0.5))
     }
@@ -152,6 +175,39 @@ mod tests {
             execute_in_window(&w, Some(SimTime::from_millis(10)), SimDuration::from_millis(90)),
             ExecOutcome::Completed(SimTime::from_millis(190))
         );
+    }
+
+    #[test]
+    fn full_fidelity_sampling_is_bit_identical() {
+        // The variant-aware samplers with factor 1.0 must consume the same
+        // RNG stream and produce the same bits as the paper-faithful ones —
+        // that is what keeps the single-variant default bit-identical.
+        let (_, m) = model();
+        let mut a = Rng::seed_from_u64(5);
+        let mut b = Rng::seed_from_u64(5);
+        for _ in 0..200 {
+            assert_eq!(m.sample_lp(2, &mut a), m.sample_lp_at(2, 1.0, &mut b));
+            assert_eq!(m.sample_hp(&mut a), m.sample_hp_at(1.0, &mut b));
+        }
+    }
+
+    #[test]
+    fn variant_scaling_shrinks_the_benchmarked_mean_only() {
+        let (cfg, m) = model();
+        let mut rng = Rng::seed_from_u64(9);
+        let n = 5_000;
+        let mut mean_at = |factor: f64| -> f64 {
+            (0..n)
+                .map(|_| m.sample_lp_at(2, factor, &mut rng).as_secs_f64())
+                .sum::<f64>()
+                / n as f64
+        };
+        let full = mean_at(1.0);
+        let half = mean_at(0.5);
+        // The live-extra middleware overhead applies whole at any variant.
+        let expect_half = cfg.lp_proc_2core_s * 0.5 + cfg.lp_live_extra_s;
+        assert!((half - expect_half).abs() < 0.05, "half-variant mean {half}");
+        assert!(half < full);
     }
 
     #[test]

@@ -16,18 +16,23 @@
 use std::fmt::Write as _;
 
 use crate::config::{Policy as PolicyKind, SystemConfig};
+use crate::fidelity::{Catalog, Mode as FidelityMode};
 use crate::metrics::ScenarioMetrics;
 use crate::sim::{run_scenario, run_scenario_dynamic};
 use crate::time::SimTime;
-use crate::trace::{ChurnScript, Distribution, FleetPattern, FleetProfile, Trace};
+use crate::trace::{ChurnProfile, ChurnScript, Distribution, FleetPattern, FleetProfile, Trace};
 use crate::util::json::Json;
 
 /// One experiment scenario (a row of the paper's Table 1).
 #[derive(Debug, Clone, Copy)]
 pub struct Scenario {
+    /// Table-1 scenario label.
     pub label: &'static str,
+    /// Workload distribution.
     pub dist: Distribution,
+    /// Allocation policy under test.
     pub policy: PolicyKind,
+    /// Whether the preemption mechanism is enabled.
     pub preemption: bool,
 }
 
@@ -145,6 +150,7 @@ fn fmt_paper(metric: &str, label: &str) -> String {
 
 /// All scenario results for one experiment campaign.
 pub struct ExperimentSet {
+    /// The base configuration every scenario ran from.
     pub cfg: SystemConfig,
     scenarios: Vec<Scenario>,
     results: Vec<ScenarioMetrics>,
@@ -186,10 +192,12 @@ impl ExperimentSet {
         self.scenarios.iter().position(|s| s.label == label)
     }
 
+    /// The metrics of the scenario labelled `label`, if it was run.
     pub fn metrics(&self, label: &str) -> Option<&ScenarioMetrics> {
         self.idx(label).map(|i| &self.results[i])
     }
 
+    /// Labels of every scenario in this campaign, in run order.
     pub fn labels(&self) -> Vec<&'static str> {
         self.scenarios.iter().map(|s| s.label).collect()
     }
@@ -754,6 +762,146 @@ pub fn dynamics_json(rows: &[DynamicsRow]) -> Json {
     Json::obj().with("rows", Json::Arr(arr))
 }
 
+// ---- multi-fidelity sweep (beyond the paper) ---------------------------
+
+/// One row of the fidelity sweep: one degradation policy run under the
+/// same workload, churn script, and variant catalog at one fleet size.
+pub struct FidelityRow {
+    /// Scenario label (`FID_<policy>_<devices>`).
+    pub label: String,
+    /// The degradation gating this row ran with.
+    pub mode: FidelityMode,
+    /// Fleet size (devices).
+    pub devices: usize,
+    /// Wall-clock time the scenario took to simulate.
+    pub wall: std::time::Duration,
+    /// Virtual time at which the last event resolved.
+    pub virtual_end: SimTime,
+    /// Full per-scenario metrics, including the degradation counters.
+    pub metrics: ScenarioMetrics,
+}
+
+/// The four-policy fidelity matrix: no degradation, admission-only,
+/// admission + preemption-victim reallocation, and everything including
+/// churn rescue.
+pub fn fidelity_matrix() -> Vec<(&'static str, FidelityMode)> {
+    vec![
+        ("FID_OFF", FidelityMode::Off),
+        ("FID_ADM", FidelityMode::Admission),
+        ("FID_PRE", FidelityMode::AdmissionPreemption),
+        ("FID_FULL", FidelityMode::Full),
+    ]
+}
+
+/// Run the fidelity sweep: every policy of [`fidelity_matrix`] on the same
+/// saturating fleet workload, the same crash script, and the same variant
+/// catalog, at each fleet size in `sizes`.
+///
+/// The workload is deliberately over-committed (steady arrivals, 4-task
+/// DNN sets) so the full-fidelity search genuinely fails often — that is
+/// where degradation has something to save. Crashes (`fidelity.crash_pct`)
+/// put pressure on the rescue path, and the scenario applies the relaxed
+/// `[dynamics]` HP deadline for the same reason the churn sweep does (see
+/// KNOWN_ISSUES.md). When the config's catalog is the paper-faithful
+/// single-variant default, the sweep substitutes [`Catalog::demo`] —
+/// a degradation sweep needs something to degrade to.
+pub fn fidelity(base: &SystemConfig, sizes: &[usize]) -> Vec<FidelityRow> {
+    let catalog = if base.fidelity.catalog.is_single_variant() {
+        Catalog::demo()
+    } else {
+        base.fidelity.catalog.clone()
+    };
+    let cycles = base.fidelity.cycles;
+    let profile = FleetProfile { pattern: FleetPattern::Steady, hp_only_pct: 10, lp_weight: 4 };
+    let mut rows = Vec::new();
+    for &devices in sizes {
+        let mut cfg = base.clone();
+        cfg.devices = devices;
+        cfg.frames = (devices * cycles) as u64;
+        cfg.hp_deadline_s = base.dynamics.hp_deadline_s;
+        cfg.fidelity.catalog = catalog.clone();
+        let trace = Trace::generate_fleet(&profile, devices, cycles, cfg.seed);
+        let horizon_s = cfg.frame_period_s * cycles as f64;
+        let churn = ChurnProfile::crash_only(
+            base.fidelity.crash_pct,
+            horizon_s * 0.2,
+            horizon_s * 0.8,
+        );
+        let script = ChurnScript::generate(&churn, devices, cfg.seed);
+        for (tag, mode) in fidelity_matrix() {
+            let mut c = cfg.clone();
+            c.fidelity.mode = mode;
+            let label = format!("{tag}_{devices}");
+            let result = run_scenario_dynamic(&c, &trace, &script, &label);
+            crate::log_info!("{}", result.metrics.render_text());
+            rows.push(FidelityRow {
+                label,
+                mode,
+                devices,
+                wall: result.elapsed,
+                virtual_end: result.virtual_end,
+                metrics: result.metrics,
+            });
+        }
+    }
+    rows
+}
+
+/// Markdown table for a fidelity sweep: completion, degraded-frame share,
+/// accuracy-weighted goodput, and the per-path degradation census.
+pub fn fidelity_table(rows: &[FidelityRow]) -> String {
+    let mut out = String::from(
+        "## Multi-fidelity — degrade the model, keep the frame\n\n\
+         | scenario | mode | frame % | degraded frames | accuracy goodput % | \
+         HP % | LP % | degradations (hp-adm/lp-adm/victim/rescue) | wall |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for row in rows {
+        let m = &row.metrics;
+        let _ = writeln!(
+            out,
+            "| {} | {} | {:.2} | {}/{} | {:.2} | {:.2} | {:.2} | {}/{}/{}/{} | {:.2?} |",
+            row.label,
+            row.mode.name(),
+            m.frame_completion_pct(),
+            m.frames_completed_degraded,
+            m.frames_completed,
+            m.accuracy_goodput_pct(),
+            m.hp_completion_pct(),
+            m.lp_completion_pct(),
+            m.degraded_hp_admission,
+            m.degraded_lp_admission,
+            m.degraded_victim_realloc,
+            m.degraded_rescue,
+            row.wall,
+        );
+    }
+    out.push_str(
+        "\nReading: every policy runs the identical workload, churn script, and \
+         variant catalog; `off` is the paper's reject-or-fail behaviour. Frames \
+         completed should only go up as more paths may degrade, while accuracy \
+         goodput shows what those extra frames cost in model quality.\n",
+    );
+    out
+}
+
+/// Machine-readable dump of a fidelity sweep.
+pub fn fidelity_json(rows: &[FidelityRow]) -> Json {
+    let mut arr = Vec::new();
+    for row in rows {
+        arr.push(
+            Json::obj()
+                .with("label", row.label.as_str())
+                .with("mode", row.mode.name())
+                .with("devices", row.devices)
+                .with("wall_ms", row.wall.as_secs_f64() * 1_000.0)
+                .with("virtual_end_s", row.virtual_end.as_secs_f64())
+                .with("metrics", row.metrics.to_json()),
+        );
+    }
+    Json::obj().with("rows", Json::Arr(arr))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -866,6 +1014,37 @@ mod tests {
             arr[0].get("label").and_then(Json::as_str),
             Some("DYN_PS")
         );
+    }
+
+    #[test]
+    fn fidelity_sweep_runs_all_four_policies_and_never_loses_frames() {
+        let mut cfg = SystemConfig::default();
+        cfg.fidelity.cycles = 2;
+        cfg.fidelity.crash_pct = 25;
+        let rows = fidelity(&cfg, &[4]);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].mode, FidelityMode::Off);
+        assert_eq!(rows[0].metrics.degradations(), 0, "off must never degrade");
+        let off_frames = rows[0].metrics.frames_completed;
+        for row in &rows {
+            assert!(
+                row.metrics.frames_completed >= off_frames,
+                "{}: degradation must not lose frames ({} < {off_frames})",
+                row.label,
+                row.metrics.frames_completed
+            );
+            // Accuracy goodput never exceeds the plain frame count.
+            assert!(row.metrics.accuracy_goodput <= row.metrics.frames_completed as f64 + 1e-9);
+        }
+        let table = fidelity_table(&rows);
+        assert!(table.contains("FID_OFF_4"));
+        assert!(table.contains("FID_FULL_4"));
+        let json = fidelity_json(&rows);
+        let Json::Arr(arr) = json.get("rows").unwrap() else {
+            panic!("rows not an array");
+        };
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].get("mode").and_then(Json::as_str), Some("off"));
     }
 
     #[test]

@@ -1,0 +1,402 @@
+//! Multi-fidelity inference: the model-variant catalog and the
+//! deadline-driven degradation policy (extension beyond the paper).
+//!
+//! The paper's scheduler has exactly two outcomes for a task that cannot
+//! make its deadline: reject it or fail it. The same authors' follow-up
+//! ("Accuracy vs Performance: an abstraction model for deadline constrained
+//! offloading at the mobile-edge") and the imprecise-computation line of
+//! work ("Scheduling Real-time Deep Learning Services as Imprecise
+//! Computations") add a third: run a **cheaper model variant** and keep the
+//! frame. This module owns the two pieces of that extension:
+//!
+//! * a [`Catalog`] of per-stage [`Variant`]s — execution-time factor,
+//!   input-transfer factor, and an accuracy proxy per variant, with index 0
+//!   always the paper-faithful full-fidelity model; and
+//! * a [`Mode`] gating which placement paths may degrade: high-priority
+//!   admission, batched low-priority admission, preemption-victim
+//!   reallocation, and churn rescue ([`DegradePath`]).
+//!
+//! The degradation *mechanism* lives in the schedulers: each path first
+//! runs the paper's full-fidelity algorithm unchanged, and only when that
+//! fails stages candidate plans across the permitted degraded variants in
+//! min-cost order — highest accuracy first, then fewest evictions, then
+//! earliest finish — committing the winner atomically through
+//! `NetworkState::apply` like every other placement. With the default
+//! single-variant catalog (or [`Mode::Off`]) no degraded candidate exists
+//! and every decision is bit-identical to the paper-faithful behaviour;
+//! `rust/tests/fidelity.rs` locks that equivalence in.
+//!
+//! The accuracy values are a *proxy*, not a measurement: the simulator has
+//! no dataset, so a variant's accuracy is whatever the catalog claims, and
+//! the accuracy-weighted goodput metric simply folds those claims over the
+//! completed frames (assumption documented in KNOWN_ISSUES.md).
+
+use crate::error::{Error, Result};
+
+/// Index of a model variant in the per-stage catalog list. `VariantId(0)`
+/// is always the full-fidelity (paper-faithful) model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct VariantId(pub u8);
+
+impl VariantId {
+    /// The full-fidelity model every task starts at.
+    pub const FULL: VariantId = VariantId(0);
+
+    /// True for any variant other than the full-fidelity model.
+    pub fn is_degraded(self) -> bool {
+        self.0 != 0
+    }
+}
+
+impl std::fmt::Display for VariantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_degraded() {
+            write!(f, "v{}", self.0)
+        } else {
+            write!(f, "full")
+        }
+    }
+}
+
+/// One model variant of a pipeline stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Variant {
+    /// Execution-time multiplier on the benchmarked processing mean
+    /// (1.0 = the paper's model; degraded variants are faster, `< 1`).
+    pub time_factor: f64,
+    /// Input-transfer multiplier on the benchmarked message size (a
+    /// degraded variant may take a down-scaled input, shrinking its
+    /// offload transfer).
+    pub transfer_factor: f64,
+    /// Accuracy proxy in `(0, 1]` (1.0 = the full model). See the module
+    /// docs for what "proxy" means here.
+    pub accuracy: f64,
+}
+
+impl Variant {
+    /// The paper-faithful full-fidelity variant.
+    pub fn full() -> Variant {
+        Variant { time_factor: 1.0, transfer_factor: 1.0, accuracy: 1.0 }
+    }
+}
+
+/// The per-stage variant lists. Index 0 of each list is the full-fidelity
+/// model; later entries are sorted by strictly decreasing accuracy, so
+/// index order *is* the degradation search order (highest accuracy first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Catalog {
+    /// Stage-2 (high-priority classifier) variants.
+    pub hp: Vec<Variant>,
+    /// Stage-3 (low-priority DNN) variants.
+    pub lp: Vec<Variant>,
+}
+
+impl Catalog {
+    /// The paper-faithful catalog: one full-fidelity variant per stage.
+    pub fn single() -> Catalog {
+        Catalog { hp: vec![Variant::full()], lp: vec![Variant::full()] }
+    }
+
+    /// A demonstration catalog with distilled/tiny variants, used by the
+    /// fidelity sweep when the config does not define its own variants.
+    pub fn demo() -> Catalog {
+        Catalog {
+            hp: vec![
+                Variant::full(),
+                Variant { time_factor: 0.5, transfer_factor: 1.0, accuracy: 0.9 },
+            ],
+            lp: vec![
+                Variant::full(),
+                Variant { time_factor: 0.6, transfer_factor: 0.8, accuracy: 0.92 },
+                Variant { time_factor: 0.35, transfer_factor: 0.6, accuracy: 0.8 },
+            ],
+        }
+    }
+
+    /// True when neither stage has a degraded variant (the paper-faithful
+    /// default — degradation can never fire).
+    pub fn is_single_variant(&self) -> bool {
+        self.hp.len() <= 1 && self.lp.len() <= 1
+    }
+
+    /// The high-priority variant for `v`. Panics on an id outside the
+    /// catalog — committed variants always come from this catalog.
+    pub fn hp_variant(&self, v: VariantId) -> &Variant {
+        &self.hp[v.0 as usize]
+    }
+
+    /// The low-priority variant for `v`.
+    pub fn lp_variant(&self, v: VariantId) -> &Variant {
+        &self.lp[v.0 as usize]
+    }
+
+    /// Degraded high-priority variant ids, highest accuracy first.
+    pub fn degraded_hp(&self) -> impl Iterator<Item = VariantId> {
+        (1..self.hp.len() as u8).map(VariantId)
+    }
+
+    /// Degraded low-priority variant ids, highest accuracy first.
+    pub fn degraded_lp(&self) -> impl Iterator<Item = VariantId> {
+        (1..self.lp.len() as u8).map(VariantId)
+    }
+
+    /// Check catalog invariants: index 0 is exactly the full-fidelity
+    /// model, every factor is in `(0, 1]`, and accuracy strictly decreases
+    /// along each list (so index order is the degradation search order).
+    pub fn validate(&self) -> Result<()> {
+        for (stage, list) in [("hp", &self.hp), ("lp", &self.lp)] {
+            if list.is_empty() {
+                return Err(Error::Config(format!(
+                    "fidelity.{stage}: the catalog needs at least the full-fidelity variant"
+                )));
+            }
+            if list[0] != Variant::full() {
+                return Err(Error::Config(format!(
+                    "fidelity.{stage}: variant 0 must be the full-fidelity model \
+                     (time 1.0, transfer 1.0, accuracy 1.0)"
+                )));
+            }
+            if list.len() > u8::MAX as usize {
+                return Err(Error::Config(format!(
+                    "fidelity.{stage}: at most {} variants",
+                    u8::MAX
+                )));
+            }
+            for (i, v) in list.iter().enumerate() {
+                for (what, x) in [
+                    ("time factor", v.time_factor),
+                    ("transfer factor", v.transfer_factor),
+                    ("accuracy", v.accuracy),
+                ] {
+                    if !(x > 0.0 && x <= 1.0) {
+                        return Err(Error::Config(format!(
+                            "fidelity.{stage} variant {i}: {what} {x} must be in (0, 1]"
+                        )));
+                    }
+                }
+            }
+            for pair in list.windows(2) {
+                if pair[1].accuracy >= pair[0].accuracy {
+                    return Err(Error::Config(format!(
+                        "fidelity.{stage}: accuracy must strictly decrease along the \
+                         catalog (it is the degradation search order)"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Which placement path is asking permission to degrade.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradePath {
+    /// §4 high-priority admission (after full fidelity and, when enabled,
+    /// full-fidelity preemption both failed).
+    HpAdmission,
+    /// §4 batched low-priority admission (tasks the full-fidelity
+    /// time-point search left unallocated).
+    LpAdmission,
+    /// Preemption-victim reallocation (a victim whose full-fidelity
+    /// re-placement fails would otherwise terminally fail `Preempted`).
+    VictimRealloc,
+    /// Churn rescue of a failed device's orphans (network-dynamics
+    /// extension).
+    Rescue,
+}
+
+/// Which placement paths may degrade — the knob behind the four-policy
+/// fidelity sweep (`pats fidelity`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// No degradation anywhere: the paper's reject-or-fail behaviour.
+    Off,
+    /// Only HP and LP admission may degrade.
+    Admission,
+    /// Admission plus preemption-victim reallocation.
+    AdmissionPreemption,
+    /// Every path: admission, victim reallocation, and churn rescue.
+    Full,
+}
+
+impl Mode {
+    /// Parse a mode name (the `fidelity.mode` config key).
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "off" => Ok(Mode::Off),
+            "admission" => Ok(Mode::Admission),
+            "admission-preemption" => Ok(Mode::AdmissionPreemption),
+            "full" => Ok(Mode::Full),
+            other => Err(Error::Config(format!("unknown fidelity mode {other:?}"))),
+        }
+    }
+
+    /// Stable mode name for reports and round-tripping.
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Off => "off",
+            Mode::Admission => "admission",
+            Mode::AdmissionPreemption => "admission-preemption",
+            Mode::Full => "full",
+        }
+    }
+
+    /// May `path` degrade under this mode?
+    pub fn allows(self, path: DegradePath) -> bool {
+        match self {
+            Mode::Off => false,
+            Mode::Admission => {
+                matches!(path, DegradePath::HpAdmission | DegradePath::LpAdmission)
+            }
+            Mode::AdmissionPreemption => !matches!(path, DegradePath::Rescue),
+            Mode::Full => true,
+        }
+    }
+}
+
+/// The `[fidelity]` config section: catalog, path gating, and the shape of
+/// the fidelity sweep scenario (`pats fidelity`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FidelityConfig {
+    /// Which placement paths may degrade.
+    pub mode: Mode,
+    /// The per-stage variant catalog. Defaults to the paper-faithful
+    /// single-variant catalog, under which no path can ever degrade.
+    pub catalog: Catalog,
+    /// Frames per device in a fidelity-sweep scenario.
+    pub cycles: usize,
+    /// Share (%) of the fleet crashed mid-run in a fidelity-sweep scenario
+    /// (pressure on the rescue degradation path).
+    pub crash_pct: u8,
+}
+
+impl Default for FidelityConfig {
+    fn default() -> Self {
+        FidelityConfig {
+            mode: Mode::Full,
+            catalog: Catalog::single(),
+            cycles: 4,
+            crash_pct: 25,
+        }
+    }
+}
+
+impl FidelityConfig {
+    /// May the high-priority stage degrade on `path`? Requires both the
+    /// mode's permission and an actual degraded HP variant to fall back to.
+    pub fn degrade_hp(&self, path: DegradePath) -> bool {
+        self.mode.allows(path) && self.catalog.hp.len() > 1
+    }
+
+    /// May the low-priority stage degrade on `path`?
+    pub fn degrade_lp(&self, path: DegradePath) -> bool {
+        self.mode.allows(path) && self.catalog.lp.len() > 1
+    }
+
+    /// Check the section's invariants.
+    pub fn validate(&self) -> Result<()> {
+        self.catalog.validate()?;
+        if self.cycles == 0 {
+            return Err(Error::Config("fidelity.cycles must be >= 1".into()));
+        }
+        if self.crash_pct > 100 {
+            return Err(Error::Config("fidelity.crash_pct must be in 0..=100".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_id_semantics() {
+        assert_eq!(VariantId::FULL, VariantId(0));
+        assert!(!VariantId::FULL.is_degraded());
+        assert!(VariantId(2).is_degraded());
+        assert_eq!(format!("{}", VariantId::FULL), "full");
+        assert_eq!(format!("{}", VariantId(3)), "v3");
+        assert_eq!(VariantId::default(), VariantId::FULL);
+    }
+
+    #[test]
+    fn single_catalog_is_paper_faithful() {
+        let c = Catalog::single();
+        assert!(c.is_single_variant());
+        assert!(c.validate().is_ok());
+        assert_eq!(c.degraded_hp().count(), 0);
+        assert_eq!(c.degraded_lp().count(), 0);
+        assert_eq!(c.hp_variant(VariantId::FULL).time_factor, 1.0);
+        assert_eq!(c.lp_variant(VariantId::FULL).accuracy, 1.0);
+    }
+
+    #[test]
+    fn demo_catalog_is_valid_and_ordered() {
+        let c = Catalog::demo();
+        assert!(!c.is_single_variant());
+        assert!(c.validate().is_ok());
+        let ids: Vec<VariantId> = c.degraded_lp().collect();
+        assert_eq!(ids, vec![VariantId(1), VariantId(2)]);
+        assert!(c.lp_variant(VariantId(1)).accuracy > c.lp_variant(VariantId(2)).accuracy);
+        assert!(c.lp_variant(VariantId(2)).time_factor < 1.0);
+    }
+
+    #[test]
+    fn catalog_validation_rejects_bad_shapes() {
+        let mut c = Catalog::demo();
+        c.lp[0].time_factor = 0.9; // index 0 must be the full model
+        assert!(c.validate().is_err());
+
+        let mut c = Catalog::demo();
+        c.lp[2].accuracy = 0.95; // accuracy must strictly decrease
+        assert!(c.validate().is_err());
+
+        let mut c = Catalog::demo();
+        c.hp[1].time_factor = 0.0; // factors live in (0, 1]
+        assert!(c.validate().is_err());
+
+        let mut c = Catalog::demo();
+        c.hp[1].accuracy = 1.5;
+        assert!(c.validate().is_err());
+
+        let c = Catalog { hp: Vec::new(), lp: vec![Variant::full()] };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn mode_parse_roundtrip_and_gating() {
+        for m in [Mode::Off, Mode::Admission, Mode::AdmissionPreemption, Mode::Full] {
+            assert_eq!(Mode::parse(m.name()).unwrap(), m);
+        }
+        assert!(Mode::parse("degrade-everything").is_err());
+
+        use DegradePath::*;
+        for p in [HpAdmission, LpAdmission, VictimRealloc, Rescue] {
+            assert!(!Mode::Off.allows(p));
+            assert!(Mode::Full.allows(p));
+        }
+        assert!(Mode::Admission.allows(HpAdmission));
+        assert!(Mode::Admission.allows(LpAdmission));
+        assert!(!Mode::Admission.allows(VictimRealloc));
+        assert!(!Mode::Admission.allows(Rescue));
+        assert!(Mode::AdmissionPreemption.allows(VictimRealloc));
+        assert!(!Mode::AdmissionPreemption.allows(Rescue));
+    }
+
+    #[test]
+    fn config_gating_needs_variants_and_mode() {
+        let mut f = FidelityConfig::default();
+        // Default: permissive mode but single-variant catalog — never fires.
+        assert!(!f.degrade_hp(DegradePath::HpAdmission));
+        assert!(!f.degrade_lp(DegradePath::LpAdmission));
+        f.catalog = Catalog::demo();
+        assert!(f.degrade_hp(DegradePath::HpAdmission));
+        assert!(f.degrade_lp(DegradePath::Rescue));
+        f.mode = Mode::Off;
+        assert!(!f.degrade_lp(DegradePath::LpAdmission));
+        assert!(f.validate().is_ok());
+        f.cycles = 0;
+        assert!(f.validate().is_err());
+    }
+}

@@ -17,6 +17,11 @@
 //!   per-device CPU cores (variable-length slots, per the paper §3).
 //! * [`task`] — frames, pipeline stages, priorities, deadlines, partition
 //!   configurations, request sets.
+//! * [`fidelity`] — the model-variant catalog and the deadline-driven
+//!   degradation policy (multi-fidelity inference, beyond the paper): when
+//!   a placement path cannot stage a full-fidelity placement before the
+//!   deadline, it searches candidate plans across permitted cheaper model
+//!   variants instead of failing the frame.
 //! * [`state`] — the controller's tracked view of the network. Placement
 //!   mutations go through one transactional door,
 //!   [`state::NetworkState::apply`].
@@ -67,6 +72,7 @@ pub mod coordinator;
 pub mod device;
 pub mod error;
 pub mod experiments;
+pub mod fidelity;
 pub mod metrics;
 pub mod net;
 pub mod pipeline;

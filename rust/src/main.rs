@@ -8,6 +8,9 @@
 //! * `fleet`       — fleet-size sweep (beyond the paper).
 //! * `churn`       — network-dynamics sweep: crash/drain/rejoin devices and
 //!   degrade the link mid-run, compare all four policies (beyond the paper).
+//! * `fidelity`    — multi-fidelity sweep: same workload under the four
+//!   degradation policies (off / admission / admission+preemption / full),
+//!   reporting frames saved and their accuracy cost (beyond the paper).
 //! * `trace-gen`   — generate a workload trace file.
 //! * `check`       — load the AOT artifacts and run one frame end-to-end
 //!   through the three-stage pipeline (PJRT smoke test).
@@ -33,6 +36,8 @@ USAGE:
              [--config FILE] [--out DIR]
   pats churn [--devices N] [--cycles N] [--crash-pct P] [--drain-pct P]
              [--detect-delay S] [--rejoin-after S] [--degrade F] [--seed S]
+             [--config FILE] [--out DIR]
+  pats fidelity [--sizes N,N,...] [--cycles N] [--crash-pct P] [--seed S]
              [--config FILE] [--out DIR]
   pats trace-gen --dist DIST [--frames N] [--seed S] [--out FILE]
   pats check [--artifacts DIR]
@@ -61,6 +66,7 @@ fn main() -> ExitCode {
         Some("sim") => cmd_sim(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("churn") => cmd_churn(&args),
+        Some("fidelity") => cmd_fidelity(&args),
         Some("trace-gen") => cmd_trace_gen(&args),
         Some("check") => cmd_check(&args),
         Some(other) => Err(format!("unknown subcommand {other:?}\n{USAGE}")),
@@ -73,6 +79,26 @@ fn main() -> ExitCode {
             ExitCode::FAILURE
         }
     }
+}
+
+/// Parse a `--sizes N,N,...` device-count list, defaulting to the config's
+/// `fleet.sweep_sizes` (shared by the `fleet` and `fidelity` sweeps).
+fn parse_sizes(args: &Args, cfg: &SystemConfig) -> Result<Vec<usize>, String> {
+    let sizes: Vec<usize> = match args.opt("sizes") {
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad --sizes entry {s:?}"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => cfg.fleet.sweep_sizes.clone(),
+    };
+    if sizes.is_empty() || sizes.contains(&0) {
+        return Err("--sizes must be a comma list of positive device counts".into());
+    }
+    Ok(sizes)
 }
 
 fn base_config(args: &Args) -> Result<SystemConfig, String> {
@@ -156,20 +182,7 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
             .parse::<usize>()
             .map_err(|_| format!("bad --cycles value {c:?}"))?;
     }
-    let sizes: Vec<usize> = match args.opt("sizes") {
-        Some(csv) => csv
-            .split(',')
-            .map(|s| {
-                s.trim()
-                    .parse::<usize>()
-                    .map_err(|_| format!("bad --sizes entry {s:?}"))
-            })
-            .collect::<Result<_, _>>()?,
-        None => cfg.fleet.sweep_sizes.clone(),
-    };
-    if sizes.is_empty() || sizes.contains(&0) {
-        return Err("--sizes must be a comma list of positive device counts".into());
-    }
+    let sizes = parse_sizes(args, &cfg)?;
     cfg.validate().map_err(|e| e.to_string())?;
     eprintln!(
         "running the fleet sweep at {sizes:?} devices × {} cycles ({} pattern) ...",
@@ -243,6 +256,44 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
     std::fs::write(
         &json,
         pats::experiments::dynamics_json(&rows).to_string_pretty(),
+    )
+    .map_err(|e| e.to_string())?;
+    eprintln!("wrote {} and {}", md.display(), json.display());
+    Ok(())
+}
+
+fn cmd_fidelity(args: &Args) -> Result<(), String> {
+    let mut cfg = base_config(args)?;
+    if let Some(v) = args.opt("cycles") {
+        cfg.fidelity.cycles = v
+            .parse::<usize>()
+            .map_err(|_| format!("bad --cycles value {v:?}"))?;
+    }
+    if let Some(v) = args.opt("crash-pct") {
+        cfg.fidelity.crash_pct = v
+            .parse::<u8>()
+            .map_err(|_| format!("bad --crash-pct value {v:?}"))?;
+    }
+    let sizes = parse_sizes(args, &cfg)?;
+    cfg.validate().map_err(|e| e.to_string())?;
+    eprintln!(
+        "running the fidelity sweep at {sizes:?} devices × {} cycles, {}% crash, \
+         4 degradation policies ...",
+        cfg.fidelity.cycles, cfg.fidelity.crash_pct
+    );
+    let t0 = std::time::Instant::now();
+    let rows = pats::experiments::fidelity(&cfg, &sizes);
+    eprintln!("done in {:.2?}", t0.elapsed());
+    let table = pats::experiments::fidelity_table(&rows);
+    println!("{table}");
+    let out_dir = PathBuf::from(args.opt_str("out", "results"));
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+    let md = out_dir.join("fidelity.md");
+    std::fs::write(&md, &table).map_err(|e| e.to_string())?;
+    let json = out_dir.join("fidelity.json");
+    std::fs::write(
+        &json,
+        pats::experiments::fidelity_json(&rows).to_string_pretty(),
     )
     .map_err(|e| e.to_string())?;
     eprintln!("wrote {} and {}", md.display(), json.display());

@@ -17,43 +17,63 @@ pub struct ScenarioMetrics {
     pub label: String,
 
     // ---- frames (Fig 2) ----
+    /// Frames the trace generated.
     pub frames_total: u64,
+    /// Frames whose every required stage completed in time.
     pub frames_completed: u64,
+    /// Frames sunk by their stage-2 task.
     pub frames_failed_hp: u64,
+    /// Frames sunk by their stage-3 set.
     pub frames_failed_lp: u64,
 
     // ---- high-priority tasks (Fig 3) ----
+    /// Stage-2 tasks spawned.
     pub hp_generated: u64,
+    /// Stage-2 tasks completed in time.
     pub hp_completed: u64,
     /// Completed only because preemption freed resources.
     pub hp_completed_via_preemption: u64,
+    /// Stage-2 tasks the policy could not place.
     pub hp_failed_alloc: u64,
+    /// Stage-2 tasks terminated by their device (overran the window).
     pub hp_violated: u64,
 
     // ---- low-priority tasks (Fig 4, 5, 6; Table 2) ----
+    /// Stage-3 DNN tasks spawned.
     pub lp_generated: u64,
+    /// Stage-3 tasks completed in time.
     pub lp_completed: u64,
+    /// Stage-3 tasks the policy could not place before their deadline.
     pub lp_failed_alloc: u64,
+    /// Stage-3 tasks preempted and never re-placed.
     pub lp_failed_preempted: u64,
+    /// Stage-3 tasks terminated by their device (overran the window).
     pub lp_violated: u64,
     /// Offloaded sub-population (Fig 6).
     pub lp_offloaded: u64,
+    /// Offloaded stage-3 tasks that completed.
     pub lp_offloaded_completed: u64,
     /// Per-request completion fractions (Fig 5).
     pub lp_set_fractions: Summary,
     /// Requests where the full set completed.
     pub lp_sets_completed: u64,
+    /// Requests spawned in total.
     pub lp_sets_total: u64,
 
     // ---- preemption (Fig 7, Table 3) ----
     /// Preempted-task counts keyed by the core config they held.
     pub preempted_by_cores: BTreeMap<u32, u64>,
+    /// Preemption evictions committed.
     pub preemptions: u64,
+    /// Evicted victims successfully re-placed.
     pub realloc_success: u64,
+    /// Evicted victims that could not be re-placed.
     pub realloc_failure: u64,
 
     // ---- core allocation census (Fig 8) ----
+    /// Local placements keyed by core width.
     pub core_alloc_local: BTreeMap<u32, u64>,
+    /// Offloaded placements keyed by core width.
     pub core_alloc_offloaded: BTreeMap<u32, u64>,
 
     // ---- controller latencies (Fig 9, 10) ----
@@ -93,17 +113,48 @@ pub struct ScenarioMetrics {
     /// Orphaned low-priority tasks re-queued by a workstealer (their rescue
     /// is a later steal).
     pub lp_requeued_churn: u64,
+    /// Of the workstealer requeues, how many went through the decentral
+    /// stealer's controller-side mirror queue because the home queue's
+    /// device is dead.
+    pub requeued_via_mirror: u64,
     /// Low-priority tasks lost to churn (terminal `DeviceLost`).
     pub lp_lost_churn: u64,
+
+    // ---- multi-fidelity degradation (beyond the paper) ----
+    /// High-priority tasks admitted at a degraded model variant (the §4
+    /// admission — and its preemption retry — could not place the full
+    /// model).
+    pub degraded_hp_admission: u64,
+    /// Low-priority tasks admitted at a degraded variant by the batched
+    /// time-point search.
+    pub degraded_lp_admission: u64,
+    /// Preemption victims re-placed at a degraded variant instead of
+    /// terminally failing `Preempted`.
+    pub degraded_victim_realloc: u64,
+    /// Churn orphans rescued at a degraded variant instead of being lost.
+    pub degraded_rescue: u64,
+    /// High-priority completions whose committed variant was degraded.
+    pub hp_completed_degraded: u64,
+    /// Low-priority completions whose committed variant was degraded.
+    pub lp_completed_degraded: u64,
+    /// Completed frames that contain at least one degraded task (the rest
+    /// of `frames_completed` finished at full fidelity).
+    pub frames_completed_degraded: u64,
+    /// Accuracy-weighted goodput: Σ over completed frames of the minimum
+    /// accuracy proxy across the frame's tasks (1.0 per full-fidelity
+    /// frame). A frame is as accurate as its least accurate stage.
+    pub accuracy_goodput: f64,
 }
 
 impl ScenarioMetrics {
+    /// Empty metrics for a scenario labelled `label`.
     pub fn new(label: &str) -> ScenarioMetrics {
         ScenarioMetrics { label: label.to_string(), ..Default::default() }
     }
 
     // ---- recording helpers -------------------------------------------------
 
+    /// Route one terminal low-priority failure to its counter.
     pub fn record_lp_failure(&mut self, reason: &FailReason) {
         match reason {
             FailReason::NoResources => self.lp_failed_alloc += 1,
@@ -114,6 +165,7 @@ impl ScenarioMetrics {
         }
     }
 
+    /// Record one committed placement in the Fig-8 census.
     pub fn record_core_alloc(&mut self, cores: u32, offloaded: bool) {
         let map = if offloaded {
             &mut self.core_alloc_offloaded
@@ -123,6 +175,7 @@ impl ScenarioMetrics {
         *map.entry(cores).or_insert(0) += 1;
     }
 
+    /// Record one committed preemption and its reallocation outcome.
     pub fn record_preemption(&mut self, victim_cores: u32, reallocated: bool) {
         self.preemptions += 1;
         *self.preempted_by_cores.entry(victim_cores).or_insert(0) += 1;
@@ -178,6 +231,32 @@ impl ScenarioMetrics {
     /// Fig 6: offloaded low-priority completion percentage.
     pub fn lp_offloaded_completion_pct(&self) -> f64 {
         pct(self.lp_offloaded_completed, self.lp_offloaded)
+    }
+
+    /// Total degraded placements committed, across every degradation path.
+    pub fn degradations(&self) -> u64 {
+        self.degraded_hp_admission
+            + self.degraded_lp_admission
+            + self.degraded_victim_realloc
+            + self.degraded_rescue
+    }
+
+    /// True when this run committed any degraded placement.
+    pub fn saw_degradation(&self) -> bool {
+        self.degradations() > 0
+    }
+
+    /// Accuracy-weighted goodput as a percentage of all frames: like
+    /// [`ScenarioMetrics::frame_completion_pct`] but each completed frame
+    /// counts its (minimum) accuracy proxy instead of 1. Equal to the frame
+    /// completion percentage exactly when nothing degraded.
+    pub fn accuracy_goodput_pct(&self) -> f64 {
+        if self.frames_total == 0 {
+            return 0.0;
+        }
+        // Same evaluation order as `pct`, so an all-full-fidelity run's
+        // goodput percentage is bit-identical to its frame completion.
+        self.accuracy_goodput / self.frames_total as f64 * 100.0
     }
 
     /// JSON export for EXPERIMENTS.md appendices / plotting.
@@ -270,7 +349,22 @@ impl ScenarioMetrics {
                     .with("lp_orphaned", self.lp_orphaned)
                     .with("lp_rescued", self.lp_rescued)
                     .with("lp_requeued", self.lp_requeued_churn)
+                    .with("requeued_via_mirror", self.requeued_via_mirror)
                     .with("lp_lost_churn", self.lp_lost_churn),
+            )
+            .with(
+                "fidelity",
+                Json::obj()
+                    .with("degraded_hp_admission", self.degraded_hp_admission)
+                    .with("degraded_lp_admission", self.degraded_lp_admission)
+                    .with("degraded_victim_realloc", self.degraded_victim_realloc)
+                    .with("degraded_rescue", self.degraded_rescue)
+                    .with("degradations", self.degradations())
+                    .with("hp_completed_degraded", self.hp_completed_degraded)
+                    .with("lp_completed_degraded", self.lp_completed_degraded)
+                    .with("frames_completed_degraded", self.frames_completed_degraded)
+                    .with("accuracy_goodput", self.accuracy_goodput)
+                    .with("accuracy_goodput_pct", self.accuracy_goodput_pct()),
             )
     }
 
@@ -324,6 +418,19 @@ impl ScenarioMetrics {
                 lq = self.lp_requeued_churn,
                 ll = self.lp_lost_churn,
                 fl = self.frames_lost_churn,
+            );
+        }
+        if self.saw_degradation() {
+            let _ = write!(
+                line,
+                " | fidelity: degraded adm hp {ah} lp {al}, victim {vr}, rescue {re} | \
+                 degraded frames {df} | accuracy goodput {ag:.2}%",
+                ah = self.degraded_hp_admission,
+                al = self.degraded_lp_admission,
+                vr = self.degraded_victim_realloc,
+                re = self.degraded_rescue,
+                df = self.frames_completed_degraded,
+                ag = self.accuracy_goodput_pct(),
             );
         }
         line
@@ -389,6 +496,7 @@ mod tests {
         let j = m.to_json();
         for key in [
             "label", "frames", "hp", "lp", "preemption", "core_alloc", "latency_ms", "dynamics",
+            "fidelity",
         ] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
@@ -399,6 +507,32 @@ mod tests {
     fn text_render_contains_label() {
         let m = ScenarioMetrics::new("WPS_3");
         assert!(m.render_text().contains("WPS_3"));
+    }
+
+    #[test]
+    fn fidelity_summary_only_rendered_when_degradation_happened() {
+        let mut m = ScenarioMetrics::new("FID");
+        m.frames_total = 10;
+        m.frames_completed = 8;
+        assert!(!m.saw_degradation());
+        assert!(!m.render_text().contains("fidelity"));
+        assert_eq!(m.accuracy_goodput_pct(), 0.0, "goodput is accumulated, not derived");
+        m.degraded_lp_admission = 3;
+        m.degraded_rescue = 1;
+        m.frames_completed_degraded = 2;
+        m.accuracy_goodput = 7.6; // 6 full frames + 2 at 0.8
+        assert_eq!(m.degradations(), 4);
+        assert!(m.saw_degradation());
+        assert!((m.accuracy_goodput_pct() - 76.0).abs() < 1e-9);
+        let text = m.render_text();
+        assert!(text.contains("fidelity"), "{text}");
+        let j = m.to_json();
+        let fid = j.get("fidelity").unwrap();
+        assert_eq!(fid.get("degradations").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(
+            fid.get("frames_completed_degraded").and_then(Json::as_f64),
+            Some(2.0)
+        );
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub struct LinkModel {
 }
 
 impl LinkModel {
+    /// Build the model from the configured throughput and jitter.
     pub fn new(cfg: &SystemConfig) -> LinkModel {
         LinkModel {
             tracker: BandwidthTracker::new(cfg),

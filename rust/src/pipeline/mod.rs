@@ -19,6 +19,7 @@ pub struct StartSchedule {
 }
 
 impl StartSchedule {
+    /// Draw the per-device offsets for the configured topology.
     pub fn sample(cfg: &SystemConfig, rng: &mut Rng) -> StartSchedule {
         let period = SimDuration::from_secs_f64(cfg.frame_period_s);
         let offsets = (0..cfg.devices)
@@ -42,6 +43,7 @@ impl StartSchedule {
         SimTime::ZERO + self.offsets[device.0 as usize] + self.period * cycle as u64
     }
 
+    /// The frame pipeline period.
     pub fn period(&self) -> SimDuration {
         self.period
     }
@@ -70,21 +72,30 @@ pub enum FrameFailure {
 /// Bookkeeping for one frame's walk through the pipeline.
 #[derive(Debug, Clone)]
 pub struct FrameRecord {
+    /// Unique frame id.
     pub id: FrameId,
+    /// Device whose conveyor belt sampled the frame.
     pub device: DeviceId,
+    /// Cycle index within the trace.
     pub cycle: usize,
+    /// The trace workload of this frame.
     pub load: FrameLoad,
+    /// When the device sampled the frame.
     pub start: SimTime,
     /// The pipeline deadline: everything must finish within the period.
     pub deadline: SimTime,
+    /// The stage-2 task, once spawned.
     pub hp_task: Option<TaskId>,
+    /// The stage-3 request, once spawned.
     pub lp_request: Option<RequestId>,
     /// Low-priority tasks still outstanding.
     pub lp_remaining: u32,
+    /// Current lifecycle status.
     pub status: FrameStatus,
 }
 
 impl FrameRecord {
+    /// A fresh record for one sampled frame.
     pub fn new(
         id: FrameId,
         device: DeviceId,
@@ -143,6 +154,7 @@ impl FrameRecord {
         }
     }
 
+    /// Did every stage the frame required complete in time?
     pub fn completed(&self) -> bool {
         self.status == FrameStatus::Completed
     }

@@ -34,19 +34,23 @@ pub struct CoreTimeline {
 }
 
 impl CoreTimeline {
+    /// An empty calendar for a device with `capacity` cores.
     pub fn new(capacity: u32) -> CoreTimeline {
         assert!(capacity > 0);
         CoreTimeline { capacity, slots: Vec::new() }
     }
 
+    /// Total cores of the device.
     pub fn capacity(&self) -> u32 {
         self.capacity
     }
 
+    /// Number of reservations on the calendar.
     pub fn len(&self) -> usize {
         self.slots.len()
     }
 
+    /// Is the calendar empty?
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }

@@ -28,16 +28,20 @@ fn artifacts_default_dir() -> PathBuf {
 /// A dense f32 tensor (row-major), the only dtype the pipeline models use.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major element storage.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Build from a shape and matching row-major data.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape, data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
@@ -48,10 +52,12 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data: (0..n).map(f).collect() }
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -87,9 +93,13 @@ impl Tensor {
 /// Parsed manifest entry for one artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Entry-point name (e.g. `cnn_full`).
     pub name: String,
+    /// HLO text file, relative to the artifact directory.
     pub file: String,
+    /// Expected input shapes, in argument order.
     pub input_shapes: Vec<Vec<usize>>,
+    /// Produced output shape.
     pub output_shape: Vec<usize>,
 }
 

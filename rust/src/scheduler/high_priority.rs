@@ -20,6 +20,7 @@
 use std::time::Instant;
 
 use crate::config::SystemConfig;
+use crate::fidelity::{DegradePath, VariantId};
 use crate::resources::SlotKind;
 use crate::scheduler::plan::PlacementPlan;
 use crate::scheduler::{preemption, HpOutcome, PatsScheduler};
@@ -31,7 +32,9 @@ use crate::time::SimTime;
 pub const HP_CORES: u32 = 1;
 
 /// Attempt the three-slot high-priority allocation; fire preemption if
-/// enabled and needed.
+/// enabled and needed, then — only after full fidelity has exhausted both —
+/// search the permitted degraded model variants (multi-fidelity extension;
+/// min-cost order: highest accuracy first, then fewest evictions).
 pub fn allocate(
     sched: &PatsScheduler,
     st: &mut NetworkState,
@@ -46,27 +49,64 @@ pub fn allocate(
         return HpOutcome { window: Some(window), preemption: None, search: t0.elapsed() };
     }
     // The failed plan is dropped here — nothing reached the network state.
-    if !sched.preemption {
-        return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
-    }
-    // Preemption path: candidate-plan search over the conflicting
-    // low-priority tasks on the source device (§4 victim order), committing
-    // the first plan whose eviction makes the retry succeed.
     let search = t0.elapsed(); // Fig 9a measures the failed initial search
-    let (window, report) = preemption::preempt_and_retry(sched, st, cfg, task, now);
-    HpOutcome { window, preemption: report, search }
+    if sched.preemption {
+        // Preemption path: candidate-plan search over the conflicting
+        // low-priority tasks on the source device (§4 victim order),
+        // committing the first plan whose eviction makes the retry succeed.
+        let (window, report) = preemption::preempt_and_retry(sched, st, cfg, task, now);
+        if window.is_some() {
+            return HpOutcome { window, preemption: report, search };
+        }
+    }
+    // Multi-fidelity fallback: the full-fidelity model cannot be placed at
+    // all. Try each permitted degraded variant, highest accuracy first —
+    // plain placement before preemption within a variant, so the cost order
+    // is (accuracy, evictions).
+    if cfg.fidelity.degrade_hp(DegradePath::HpAdmission) {
+        for v in cfg.fidelity.catalog.degraded_hp() {
+            let mut plan = PlacementPlan::new(st);
+            if let Some(window) = stage_allocation_at(&mut plan, st, cfg, task, now, v) {
+                st.apply(plan).expect("freshly staged degraded high-priority plan");
+                return HpOutcome { window: Some(window), preemption: None, search };
+            }
+            if sched.preemption {
+                let (window, report) =
+                    preemption::preempt_and_retry_at(sched, st, cfg, task, now, v);
+                if window.is_some() {
+                    return HpOutcome { window, preemption: report, search };
+                }
+            }
+        }
+    }
+    HpOutcome { window: None, preemption: None, search }
 }
 
-/// One shot of the §4 algorithm, staging all three slots into `plan` on
-/// success: allocation message → processing window on the source device →
-/// state update. Returns the processing window; on `None` the plan is
-/// unchanged.
+/// One shot of the §4 algorithm at the full-fidelity model. See
+/// [`stage_allocation_at`].
 pub fn stage_allocation(
     plan: &mut PlacementPlan,
     st: &NetworkState,
     cfg: &SystemConfig,
     task: TaskId,
     now: SimTime,
+) -> Option<Window> {
+    stage_allocation_at(plan, st, cfg, task, now, VariantId::FULL)
+}
+
+/// One shot of the §4 algorithm at an explicit model variant, staging all
+/// three slots into `plan` on success: allocation message → processing
+/// window on the source device → state update. Returns the processing
+/// window; on `None` the plan is unchanged. [`VariantId::FULL`] reproduces
+/// the paper's arithmetic bit-for-bit; a degraded variant shrinks the
+/// processing slot by its execution-time factor.
+pub fn stage_allocation_at(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+    variant: VariantId,
 ) -> Option<Window> {
     let rec = st.task(task)?;
     let source = rec.spec.source;
@@ -84,8 +124,10 @@ pub fn stage_allocation(
     let msg_start = plan.link_view(st).earliest_fit(now, msg_dur);
     let t1 = msg_start + msg_dur; // expected arrival on the device
 
-    // 2. Processing slot [t1, t2] with the benchmarked (padded) time.
-    let window = Window::from_duration(t1, cfg.hp_slot());
+    // 2. Processing slot [t1, t2] with the benchmarked (padded) time of the
+    // requested model variant.
+    let time_factor = cfg.fidelity.catalog.hp_variant(variant).time_factor;
+    let window = Window::from_duration(t1, cfg.hp_slot_at(time_factor));
     if window.end > deadline {
         return None; // cannot complete before the stage deadline
     }
@@ -105,13 +147,13 @@ pub fn stage_allocation(
     // Stage: allocation message, processing reservation, state update.
     plan.stage_link(st, msg_start, msg_dur, SlotKind::HpAllocMsg, task)
         .expect("earliest_fit produced occupied hp-alloc slot");
-    plan.stage_placement(st, Allocation {
+    plan.stage_placement_at(st, Allocation {
         task,
         device: source,
         window,
         cores: HP_CORES,
         offloaded: false,
-    })
+    }, variant)
     .expect("fits() said the window was free");
     let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
     plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);

@@ -31,6 +31,7 @@
 use std::time::Instant;
 
 use crate::config::SystemConfig;
+use crate::fidelity::{DegradePath, VariantId};
 use crate::resources::SlotKind;
 use crate::scheduler::plan::PlacementPlan;
 use crate::scheduler::{LpOutcome, LpPlacement};
@@ -45,6 +46,29 @@ struct Admission {
     source: DeviceId,
     deadline: SimTime,
     now: SimTime,
+}
+
+/// The slot/transfer sizing of one admission pass: the model variant it
+/// places tasks at. Every duration the time-point search reserves flows
+/// through here, so a degraded pass shrinks processing windows (and, for
+/// offloads, the input transfer) uniformly. [`VariantId::FULL`] reproduces
+/// the paper's arithmetic bit-for-bit.
+#[derive(Clone, Copy)]
+struct Sizing {
+    variant: VariantId,
+    time_factor: f64,
+    transfer_factor: f64,
+}
+
+impl Sizing {
+    fn of(cfg: &SystemConfig, variant: VariantId) -> Sizing {
+        let v = cfg.fidelity.catalog.lp_variant(variant);
+        Sizing { variant, time_factor: v.time_factor, transfer_factor: v.transfer_factor }
+    }
+
+    fn lp_slot(&self, cfg: &SystemConfig, cores: u32) -> crate::time::SimDuration {
+        cfg.lp_slot_at(cores, self.time_factor)
+    }
 }
 
 /// Allocate every task of a low-priority request in one transaction.
@@ -100,7 +124,23 @@ pub fn allocate_request(
     let tasks = req.tasks.clone();
     let adm = Admission { source: req.source, deadline: req.deadline, now };
     let mut plan = PlacementPlan::new(st);
-    let (placements, unallocated) = stage_tasks(&mut plan, st, cfg, &tasks, adm);
+    let (mut placements, mut unallocated) =
+        stage_tasks(&mut plan, st, cfg, &tasks, adm, Sizing::of(cfg, VariantId::FULL));
+    // Multi-fidelity fallback: tasks the paper's full-fidelity search could
+    // not place are retried across the permitted degraded variants, highest
+    // accuracy first, inside the SAME plan — the whole admission still
+    // commits (or fails) as one transaction.
+    if !unallocated.is_empty() && cfg.fidelity.degrade_lp(DegradePath::LpAdmission) {
+        for v in cfg.fidelity.catalog.degraded_lp() {
+            if unallocated.is_empty() {
+                break;
+            }
+            let (more, rest) =
+                stage_tasks(&mut plan, st, cfg, &unallocated, adm, Sizing::of(cfg, v));
+            placements.extend(more);
+            unallocated = rest;
+        }
+    }
     // Registry ops are staged iff a placement succeeded; a fully failed
     // admission may still have forked (and fully unstaged) the link
     // scratch, and installing that byte-identical clone would be a
@@ -177,20 +217,75 @@ pub fn stage_single(
     task: TaskId,
     now: SimTime,
 ) -> Option<LpPlacement> {
+    stage_single_at(plan, st, cfg, task, now, VariantId::FULL)
+}
+
+/// Stage a single-task reallocation at an explicit model variant
+/// (multi-fidelity extension). [`VariantId::FULL`] is exactly
+/// [`stage_single`].
+pub fn stage_single_at(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+    variant: VariantId,
+) -> Option<LpPlacement> {
     let rec = st.task(task)?;
     let adm = Admission { source: rec.spec.source, deadline: rec.spec.deadline, now };
-    let (placements, _) = stage_tasks(plan, st, cfg, &[task], adm);
+    let (placements, _) = stage_tasks(plan, st, cfg, &[task], adm, Sizing::of(cfg, variant));
     placements.into_iter().next()
 }
 
+/// Stage a single-task reallocation at the first degraded variant that
+/// fits, highest accuracy first. A failed variant attempt leaves the plan
+/// exactly as it was found, so losing variants stage nothing.
+pub fn stage_single_degraded(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+) -> Option<LpPlacement> {
+    for v in cfg.fidelity.catalog.degraded_lp() {
+        let p = stage_single_at(plan, st, cfg, task, now, v);
+        if p.is_some() {
+            return p;
+        }
+    }
+    None
+}
+
+/// The one full-then-degraded reallocation sequence every rescuing caller
+/// shares: stage at full fidelity first; only when that fails *and* the
+/// fidelity mode permits degradation on `path` (the caller's placement
+/// path — victim reallocation or churn rescue), fall back to the degraded
+/// variants, highest accuracy first.
+pub fn stage_single_with_fallback(
+    plan: &mut PlacementPlan,
+    st: &NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+    path: DegradePath,
+) -> Option<LpPlacement> {
+    let p = stage_single(plan, st, cfg, task, now);
+    if p.is_some() || !cfg.fidelity.degrade_lp(path) {
+        return p;
+    }
+    stage_single_degraded(plan, st, cfg, task, now)
+}
+
 /// The time-point search over a set of tasks sharing a source and deadline,
-/// staged entirely into `plan`.
+/// staged entirely into `plan`, with every duration sized by `sz` (the
+/// model variant of this pass).
 fn stage_tasks(
     plan: &mut PlacementPlan,
     st: &NetworkState,
     cfg: &SystemConfig,
     tasks: &[TaskId],
     adm: Admission,
+    sz: Sizing,
 ) -> (Vec<LpPlacement>, Vec<TaskId>) {
     let mut unallocated: Vec<TaskId> = tasks.to_vec();
     let mut placements: Vec<LpPlacement> = Vec::new();
@@ -208,7 +303,7 @@ fn stage_tasks(
     // `tp + lp_slot(MIN)` long, so time points past `deadline -
     // lp_slot(MIN)` can never host a placement — drop them instead of
     // paying a full placement attempt that is doomed to fail.
-    let latest_start = adm.deadline - cfg.lp_slot(CoreConfig::MIN.cores());
+    let latest_start = adm.deadline - sz.lp_slot(cfg, CoreConfig::MIN.cores());
     let mut time_points = vec![adm.now];
     time_points.extend(plan.completion_points(st, adm.now, adm.deadline));
     time_points.retain(|&tp| tp <= latest_start);
@@ -220,7 +315,7 @@ fn stage_tasks(
         // Partial allocation pass at the minimum viable configuration.
         let mut placed_this_round: Vec<usize> = Vec::new();
         unallocated.retain(|&task| {
-            match stage_place_min(plan, st, cfg, task, adm, tp) {
+            match stage_place_min(plan, st, cfg, task, adm, tp, sz) {
                 Some(p) => {
                     placements.push(p);
                     placed_this_round.push(placements.len() - 1);
@@ -232,7 +327,7 @@ fn stage_tasks(
         // Improvement pass: upgrade this round's placements to more cores
         // where the device can support the increased usage.
         for idx in placed_this_round {
-            let upgraded = stage_improve(plan, st, cfg, &placements[idx]);
+            let upgraded = stage_improve(plan, st, cfg, &placements[idx], sz);
             if let Some(p) = upgraded {
                 placements[idx] = p;
             }
@@ -246,8 +341,8 @@ fn stage_tasks(
 }
 
 /// Attempt a partial allocation of `task` at [`CoreConfig::MIN`] starting no
-/// earlier than time point `tp`. Stages link + core reservations on
-/// success; leaves the plan untouched on failure.
+/// earlier than time point `tp`, sized by `sz`. Stages link + core
+/// reservations on success; leaves the plan untouched on failure.
 fn stage_place_min(
     plan: &mut PlacementPlan,
     st: &NetworkState,
@@ -255,10 +350,11 @@ fn stage_place_min(
     task: TaskId,
     adm: Admission,
     tp: SimTime,
+    sz: Sizing,
 ) -> Option<LpPlacement> {
     let Admission { source, deadline, now } = adm;
     let cores = CoreConfig::MIN.cores();
-    let slot = cfg.lp_slot(CoreConfig::MIN.cores());
+    let slot = sz.lp_slot(cfg, CoreConfig::MIN.cores());
 
     // 1. Allocation message as early as possible.
     let msg_dur = st.link_model.slot_duration(cfg, SlotKind::LpAllocMsg);
@@ -275,13 +371,13 @@ fn stage_place_min(
     {
         plan.stage_link(st, msg_start, msg_dur, SlotKind::LpAllocMsg, task)
             .expect("earliest_fit produced occupied lp-alloc slot");
-        plan.stage_placement(st, Allocation {
+        plan.stage_placement_at(st, Allocation {
             task,
             device: source,
             window: local_window,
             cores,
             offloaded: false,
-        })
+        }, sz.variant)
         .expect("fits() said the local window was free");
         return Some(LpPlacement {
             task,
@@ -334,7 +430,13 @@ fn stage_place_min(
     let Ok(msg_w) = plan.stage_link(st, msg_start, msg_dur, SlotKind::LpAllocMsg, task) else {
         return None; // plan view changed under us — cannot happen single-threaded
     };
-    let xfer_dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
+    // Degraded variants may take a down-scaled input, shrinking the
+    // transfer; scale(1.0) is exact, so the full-fidelity pass is
+    // bit-identical to the pre-fidelity arithmetic.
+    let xfer_dur = st
+        .link_model
+        .slot_duration(cfg, SlotKind::InputTransfer)
+        .scale(sz.transfer_factor);
     let xfer_start = plan.link_view(st).earliest_fit(msg_w.end, xfer_dur);
     let xfer_end = xfer_start + xfer_dur;
     let start = xfer_end.max(tp);
@@ -345,13 +447,13 @@ fn stage_place_min(
             if plan.device_view(st, dev).fits(&window, cores) {
                 plan.stage_link(st, xfer_start, xfer_dur, SlotKind::InputTransfer, task)
                     .expect("earliest_fit produced occupied transfer slot");
-                plan.stage_placement(st, Allocation {
+                plan.stage_placement_at(st, Allocation {
                     task,
                     device: dev,
                     window,
                     cores,
                     offloaded: true,
-                })
+                }, sz.variant)
                 .expect("fits() said the offload window was free");
                 return Some(LpPlacement {
                     task,
@@ -376,16 +478,18 @@ fn stage_place_min(
 }
 
 /// The improvement pass: try to raise a staged placement to the next core
-/// configuration, shrinking its processing window.
+/// configuration, shrinking its processing window (at the same variant —
+/// an improvement changes resources, never the model).
 fn stage_improve(
     plan: &mut PlacementPlan,
     st: &NetworkState,
     cfg: &SystemConfig,
     p: &LpPlacement,
+    sz: Sizing,
 ) -> Option<LpPlacement> {
     let current = CoreConfig::from_cores(p.cores)?;
     let next = current.upgrade()?;
-    let new_window = Window::from_duration(p.window.start, cfg.lp_slot(next.cores()));
+    let new_window = Window::from_duration(p.window.start, sz.lp_slot(cfg, next.cores()));
     debug_assert!(new_window.end <= p.window.end, "upgrades must shrink the window");
     let upgraded = Allocation {
         task: p.task,

@@ -119,6 +119,11 @@ pub struct RescueOutcome {
     /// Low-priority orphans put back on a steal queue (workstealers only;
     /// their "rescue" is a later steal).
     pub lp_requeued: Vec<TaskId>,
+    /// Of the requeues this outcome performed (orphans and rescue-eviction
+    /// victims alike), how many had to go to the decentral stealer's
+    /// controller-side mirror queue because their home queue's device is
+    /// dead (see `crate::workstealer` module docs).
+    pub requeued_via_mirror: u64,
     /// Orphans with no feasible rescue; the coordinator fails these with
     /// [`crate::task::FailReason::DeviceLost`]. A failed rescue commits
     /// nothing — candidate plans that would not work are dropped, so there

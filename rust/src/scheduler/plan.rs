@@ -50,6 +50,7 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::error::{Error, Result};
+use crate::fidelity::VariantId;
 use crate::resources::{CoreTimeline, SlotKind, Timeline};
 use crate::state::NetworkState;
 use crate::task::{Allocation, DeviceId, FailReason, Priority, TaskId, Window};
@@ -59,10 +60,17 @@ use crate::time::{SimDuration, SimTime};
 /// after the resource scratch copies are installed.
 #[derive(Debug, Clone)]
 pub(crate) enum RegistryOp {
-    /// Record a committed placement: the task becomes `Allocated` and its
+    /// Record a committed placement: the task becomes `Allocated`, its
     /// [`Allocation`] is written to the registry (the core reservation
-    /// itself already lives in the plan's scratch device timeline).
-    Place(Allocation),
+    /// itself already lives in the plan's scratch device timeline), and its
+    /// committed model variant is recorded (multi-fidelity extension;
+    /// [`VariantId::FULL`] for every paper-faithful placement).
+    Place {
+        /// The committed placement.
+        alloc: Allocation,
+        /// The model variant the placement commits the task at.
+        variant: VariantId,
+    },
     /// A preemption eviction: the victim becomes `PreemptedPendingRealloc`
     /// and its preemption counter is bumped (its core slot and future link
     /// slots were already removed from the scratch copies).
@@ -291,14 +299,27 @@ impl PlacementPlan {
         }
     }
 
-    /// Stage a core-window placement: validates the device is up, the task
-    /// does not already hold a live reservation (unless this plan evicted
-    /// it first), and the window fits the plan's view; reserves the cores
-    /// on the scratch calendar and records the `Allocated` registry
-    /// transition. A task placed earlier in the same plan must go through
-    /// [`PlacementPlan::restage_placement`] instead — a second `Place`
-    /// would leak the first staged reservation.
+    /// Stage a core-window placement at the full-fidelity model variant —
+    /// the paper-faithful door every pre-fidelity caller uses. See
+    /// [`PlacementPlan::stage_placement_at`].
     pub fn stage_placement(&mut self, st: &NetworkState, alloc: Allocation) -> Result<()> {
+        self.stage_placement_at(st, alloc, VariantId::FULL)
+    }
+
+    /// Stage a core-window placement committing the task at `variant`:
+    /// validates the device is up, the task does not already hold a live
+    /// reservation (unless this plan evicted it first), and the window fits
+    /// the plan's view; reserves the cores on the scratch calendar and
+    /// records the `Allocated` registry transition (which also writes the
+    /// committed variant to the task record). A task placed earlier in the
+    /// same plan must go through [`PlacementPlan::restage_placement`]
+    /// instead — a second `Place` would leak the first staged reservation.
+    pub fn stage_placement_at(
+        &mut self,
+        st: &NetworkState,
+        alloc: Allocation,
+        variant: VariantId,
+    ) -> Result<()> {
         let rec = st
             .task(alloc.task)
             .ok_or_else(|| Error::Invariant(format!("placing unknown task {:?}", alloc.task)))?;
@@ -330,23 +351,25 @@ impl PlacementPlan {
             preemptible,
         )?;
         self.placed.insert(alloc.task);
-        self.registry.push(RegistryOp::Place(alloc));
+        self.registry.push(RegistryOp::Place { alloc, variant });
         Ok(())
     }
 
     /// Replace a placement staged earlier *in this plan* with a new window
-    /// and core width (the §4 improvement pass). On failure the original
-    /// staged reservation is restored and the plan is unchanged.
+    /// and core width (the §4 improvement pass); the committed variant is
+    /// preserved — an improvement changes resources, never the model. On
+    /// failure the original staged reservation is restored and the plan is
+    /// unchanged.
     pub fn restage_placement(&mut self, st: &NetworkState, alloc: Allocation) -> Result<()> {
         let idx = self
             .registry
             .iter()
-            .rposition(|op| matches!(op, RegistryOp::Place(a) if a.task == alloc.task))
+            .rposition(|op| matches!(op, RegistryOp::Place { alloc: a, .. } if a.task == alloc.task))
             .ok_or_else(|| {
                 Error::Invariant(format!("{:?} has no staged placement to improve", alloc.task))
             })?;
-        let old = match &self.registry[idx] {
-            RegistryOp::Place(a) => a.clone(),
+        let (old, variant) = match &self.registry[idx] {
+            RegistryOp::Place { alloc: a, variant } => (a.clone(), *variant),
             _ => unreachable!("rposition matched a Place op"),
         };
         if old.device != alloc.device {
@@ -376,7 +399,7 @@ impl PlacementPlan {
         debug_assert_eq!(removed, 1, "exactly the staged reservation is replaced");
         match dev.reserve(alloc.window, alloc.cores, alloc.task, deadline, preemptible) {
             Ok(()) => {
-                self.registry[idx] = RegistryOp::Place(alloc);
+                self.registry[idx] = RegistryOp::Place { alloc, variant };
                 Ok(())
             }
             Err(e) => {

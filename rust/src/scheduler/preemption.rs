@@ -21,6 +21,7 @@
 use std::time::Instant;
 
 use crate::config::SystemConfig;
+use crate::fidelity::{DegradePath, VariantId};
 use crate::resources::SlotKind;
 use crate::scheduler::plan::PlacementPlan;
 use crate::scheduler::{high_priority, low_priority, PatsScheduler, PreemptionReport};
@@ -46,6 +47,21 @@ pub fn preempt_and_retry(
     task: TaskId,
     now: SimTime,
 ) -> (Option<Window>, Option<PreemptionReport>) {
+    preempt_and_retry_at(sched, st, cfg, task, now, VariantId::FULL)
+}
+
+/// The candidate-victim search with the high-priority retry staged at an
+/// explicit model variant (multi-fidelity extension; the degraded
+/// high-priority admission fallback retries preemption per variant).
+/// [`VariantId::FULL`] is exactly [`preempt_and_retry`].
+pub fn preempt_and_retry_at(
+    sched: &PatsScheduler,
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    now: SimTime,
+    variant: VariantId,
+) -> (Option<Window>, Option<PreemptionReport>) {
     let Some(rec) = st.task(task) else {
         return (None, None);
     };
@@ -57,10 +73,11 @@ pub fn preempt_and_retry(
     }
 
     // Reconstruct the conflicting processing window the failed attempt
-    // wanted (same arithmetic as high_priority::stage_allocation).
+    // wanted (same arithmetic as high_priority::stage_allocation_at).
     let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
     let t1 = st.link().earliest_fit(now, msg_dur) + msg_dur;
-    let window = Window::from_duration(t1, cfg.hp_slot());
+    let time_factor = cfg.fidelity.catalog.hp_variant(variant).time_factor;
+    let window = Window::from_duration(t1, cfg.hp_slot_at(time_factor));
 
     // Candidate victims: conflicting, preemptible, farthest deadline first.
     // With the §8 set-aware extension, candidates whose request set is
@@ -94,16 +111,26 @@ pub fn preempt_and_retry(
         plan.stage_link_earliest(st, now, preempt_dur, SlotKind::PreemptMsg, victim_id);
 
         // Re-run the high-priority allocation against the plan view.
-        let Some(hp_window) = high_priority::stage_allocation(&mut plan, st, cfg, task, now)
+        let Some(hp_window) =
+            high_priority::stage_allocation_at(&mut plan, st, cfg, task, now, variant)
         else {
             continue; // eviction insufficient: drop the plan, zero residue
         };
 
         // Attempt to reallocate the victim before its own deadline, inside
-        // the same transaction.
+        // the same transaction — full fidelity first; when the mode permits
+        // it, a victim that cannot be re-placed at full fidelity is retried
+        // at the degraded variants instead of terminally failing.
         let t0 = Instant::now();
         let reallocation = if sched.reallocate {
-            low_priority::stage_single(&mut plan, st, cfg, victim_id, now)
+            low_priority::stage_single_with_fallback(
+                &mut plan,
+                st,
+                cfg,
+                victim_id,
+                now,
+                DegradePath::VictimRealloc,
+            )
         } else {
             None
         };

@@ -6,9 +6,11 @@
 //! exactly the state a preemption victim is left in (§4). Rescue re-plans
 //! those orphans:
 //!
-//! * **Low-priority orphans** go through the *existing* reallocation path,
-//!   [`low_priority::allocate_single`], unchanged — the paper's machinery
-//!   for re-homing evicted tasks is precisely a re-homing mechanism.
+//! * **Low-priority orphans** go through the *existing* reallocation path
+//!   ([`low_priority::stage_single_with_fallback`], the same staged search
+//!   `allocate_single` wraps) — the paper's machinery for re-homing
+//!   evicted tasks is precisely a re-homing mechanism. Degraded variants
+//!   are tried only when the fidelity mode permits rescue degradation.
 //! * **High-priority orphans** get first claim (they are handed over
 //!   HP-first by `NetworkState::mark_device_down`) and are *relocated*: the
 //!   controller re-issues the allocation message and re-sends the cached
@@ -35,6 +37,7 @@
 use std::time::Instant;
 
 use crate::config::SystemConfig;
+use crate::fidelity::{DegradePath, VariantId};
 use crate::resources::SlotKind;
 use crate::scheduler::high_priority::HP_CORES;
 use crate::scheduler::plan::{search_candidates, CandidatePlan, PlacementPlan};
@@ -96,7 +99,20 @@ pub fn rescue_all(
         match priority {
             Priority::High => {
                 let disposal = VictimPolicy::Reallocate { reallocate: sched.reallocate };
-                match relocate_hp(st, cfg, task, now, sched.preemption, disposal) {
+                let mut rel =
+                    relocate_hp(st, cfg, task, now, sched.preemption, disposal, VariantId::FULL);
+                // Multi-fidelity fallback: an orphan with no full-fidelity
+                // relocation is retried at the permitted degraded variants,
+                // highest accuracy first, before being declared lost.
+                if rel.is_none() && cfg.fidelity.degrade_hp(DegradePath::Rescue) {
+                    for v in cfg.fidelity.catalog.degraded_hp() {
+                        rel = relocate_hp(st, cfg, task, now, sched.preemption, disposal, v);
+                        if rel.is_some() {
+                            break;
+                        }
+                    }
+                }
+                match rel {
                     Some(rel) => out.hp_rescued.push(HpRescue {
                         task,
                         device: rel.device,
@@ -109,17 +125,32 @@ pub fn rescue_all(
                     None => out.lost.push((task, Priority::High)),
                 }
             }
-            Priority::Low => match low_priority::allocate_single(st, cfg, task, now) {
-                Some(p) => out.lp_rescued.push(p),
-                None => out.lost.push((task, Priority::Low)),
-            },
+            Priority::Low => {
+                let mut plan = PlacementPlan::new(st);
+                match low_priority::stage_single_with_fallback(
+                    &mut plan,
+                    st,
+                    cfg,
+                    task,
+                    now,
+                    DegradePath::Rescue,
+                ) {
+                    Some(p) => {
+                        st.apply(plan).expect("freshly staged rescue reallocation plan");
+                        out.lp_rescued.push(p);
+                    }
+                    None => out.lost.push((task, Priority::Low)),
+                }
+            }
         }
     }
     out
 }
 
 /// Relocate an orphaned high-priority task onto a surviving device via
-/// candidate-plan search (see the module docs).
+/// candidate-plan search (see the module docs), running it at `variant`
+/// ([`VariantId::FULL`] for the paper-faithful model; the rescue
+/// degradation fallback passes the degraded variants).
 ///
 /// The committed plan pays an allocation message plus an input re-transfer
 /// on the link, the relocated processing window, its state update, and —
@@ -133,19 +164,26 @@ pub fn relocate_hp(
     now: SimTime,
     allow_preemption: bool,
     disposal: VictimPolicy,
+    variant: VariantId,
 ) -> Option<Relocation> {
     let rec = st.task(task)?;
     let source = rec.spec.source;
     let deadline = rec.spec.deadline;
+    let vdef = *cfg.fidelity.catalog.hp_variant(variant);
 
-    // Link plan: allocation message, then the cached-input re-transfer.
+    // Link plan: allocation message, then the cached-input re-transfer
+    // (scaled by the variant's input size; scale(1.0) is exact, so the
+    // full-fidelity path is bit-identical to the pre-fidelity arithmetic).
     // Both are computed before any staging; the second `earliest_fit`
     // starts after the first window ends, so they cannot overlap.
     let msg_dur = st.link_model.slot_duration(cfg, SlotKind::HpAllocMsg);
     let msg_start = st.link().earliest_fit(now, msg_dur);
-    let xfer_dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
+    let xfer_dur = st
+        .link_model
+        .slot_duration(cfg, SlotKind::InputTransfer)
+        .scale(vdef.transfer_factor);
     let xfer_start = st.link().earliest_fit(msg_start + msg_dur, xfer_dur);
-    let window = Window::from_duration(xfer_start + xfer_dur, cfg.hp_slot());
+    let window = Window::from_duration(xfer_start + xfer_dur, cfg.hp_slot_at(vdef.time_factor));
     if window.end > deadline {
         return None; // detection latency already ate the deadline
     }
@@ -196,7 +234,7 @@ pub fn relocate_hp(
             let mut plan = base_plan
                 .take()
                 .expect("a zero-eviction candidate commits immediately");
-            stage_adoption(&mut plan, st, cfg, task, dev, window);
+            stage_adoption(&mut plan, st, cfg, task, dev, window, variant);
             return Some(CandidatePlan { plan, cost: (0, window.end), payload: (dev, None) });
         }
         if !allow_preemption {
@@ -224,7 +262,7 @@ pub fn relocate_hp(
         let preempt_dur = st.link_model.slot_duration(cfg, SlotKind::PreemptMsg);
         plan.stage_link_earliest(st, now, preempt_dur, SlotKind::PreemptMsg, victim_id);
         debug_assert!(plan.device_view(st, dev).fits(&window, HP_CORES));
-        stage_adoption(&mut plan, st, cfg, task, dev, window);
+        stage_adoption(&mut plan, st, cfg, task, dev, window, variant);
         Some(CandidatePlan {
             plan,
             cost: (1, window.end),
@@ -240,7 +278,14 @@ pub fn relocate_hp(
             VictimPolicy::Reallocate { reallocate } => {
                 let t0 = Instant::now();
                 let realloc = if reallocate {
-                    low_priority::stage_single(&mut plan, st, cfg, victim_id, now)
+                    low_priority::stage_single_with_fallback(
+                        &mut plan,
+                        st,
+                        cfg,
+                        victim_id,
+                        now,
+                        DegradePath::VictimRealloc,
+                    )
                 } else {
                     None
                 };
@@ -271,14 +316,15 @@ fn stage_adoption(
     task: TaskId,
     dev: DeviceId,
     window: Window,
+    variant: VariantId,
 ) {
-    plan.stage_placement(st, Allocation {
+    plan.stage_placement_at(st, Allocation {
         task,
         device: dev,
         window,
         cores: HP_CORES,
         offloaded: true,
-    })
+    }, variant)
     .expect("fits() said the adoptive window was free");
     let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
     plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);

@@ -84,6 +84,7 @@ impl Ord for Event {
 
 /// Result of one scenario run.
 pub struct SimResult {
+    /// Every counter the scenario produced.
     pub metrics: ScenarioMetrics,
     /// Wall-clock time the whole simulation took.
     pub elapsed: std::time::Duration,
@@ -215,6 +216,17 @@ impl<P: Policy> Sim<P> {
     fn push(&mut self, at: SimTime, kind: EventKind) {
         self.seq += 1;
         self.events.push(Reverse(Event { at, seq: self.seq, kind }));
+    }
+
+    /// The model variant `task` is currently committed at (multi-fidelity
+    /// extension; [`crate::fidelity::VariantId::FULL`] unless a degraded
+    /// placement committed).
+    fn task_variant(&self, task: TaskId) -> crate::fidelity::VariantId {
+        self.controller
+            .state
+            .task(task)
+            .map(|r| r.variant)
+            .unwrap_or_default()
     }
 
     /// Create all frame records + FrameStart events up front.
@@ -381,16 +393,23 @@ impl<P: Policy> Sim<P> {
         for rescue in outcome.hp_rescued {
             self.metrics.hp_orphaned += 1;
             self.metrics.hp_rescued += 1;
+            if self.task_variant(rescue.task).is_degraded() {
+                self.metrics.degraded_rescue += 1;
+            }
             self.schedule_hp_rescue(&rescue);
         }
         for p in outcome.lp_rescued {
             self.metrics.lp_orphaned += 1;
             self.metrics.lp_rescued += 1;
+            if self.task_variant(p.task).is_degraded() {
+                self.metrics.degraded_rescue += 1;
+            }
             self.metrics.record_core_alloc(p.cores, p.offloaded);
             self.schedule_lp_placement(&p);
         }
         self.metrics.lp_orphaned += outcome.lp_requeued.len() as u64;
         self.metrics.lp_requeued_churn += outcome.lp_requeued.len() as u64;
+        self.metrics.requeued_via_mirror += outcome.requeued_via_mirror;
         // Note: failed rescues commit nothing under the transactional
         // planning layer — a candidate plan whose eviction would not make
         // room is dropped, so there are no phantom evictions to account.
@@ -424,12 +443,21 @@ impl<P: Policy> Sim<P> {
             self.metrics
                 .record_preemption(report.victim_cores, report.reallocation.is_some());
             if let Some(p) = report.reallocation.clone() {
+                if self.task_variant(p.task).is_degraded() {
+                    self.metrics.degraded_victim_realloc += 1;
+                }
                 self.metrics.record_core_alloc(p.cores, p.offloaded);
                 self.schedule_lp_placement(&p);
             }
         }
         let gen = self.bump_gen(rescue.task);
-        let actual = self.exec.sample_hp(&mut self.rng);
+        let hp_factor = self
+            .cfg
+            .fidelity
+            .catalog
+            .hp_variant(self.task_variant(rescue.task))
+            .time_factor;
+        let actual = self.exec.sample_hp_at(hp_factor, &mut self.rng);
         match execute_in_window(&rescue.window, None, actual) {
             ExecOutcome::Completed(t) => self.push(
                 t,
@@ -506,6 +534,9 @@ impl<P: Policy> Sim<P> {
             self.metrics
                 .record_preemption(report.victim_cores, report.reallocation.is_some());
             if let Some(p) = report.reallocation.clone() {
+                if self.task_variant(p.task).is_degraded() {
+                    self.metrics.degraded_victim_realloc += 1;
+                }
                 self.metrics.record_core_alloc(p.cores, p.offloaded);
                 self.schedule_lp_placement(&p);
             }
@@ -518,7 +549,12 @@ impl<P: Policy> Sim<P> {
                 self.hp_used_preemption
                     .insert(task, outcome.preemption.is_some());
                 let gen = self.bump_gen(task);
-                let actual = self.exec.sample_hp(&mut self.rng);
+                let variant = self.task_variant(task);
+                if variant.is_degraded() {
+                    self.metrics.degraded_hp_admission += 1;
+                }
+                let hp_factor = self.cfg.fidelity.catalog.hp_variant(variant).time_factor;
+                let actual = self.exec.sample_hp_at(hp_factor, &mut self.rng);
                 match execute_in_window(&window, None, actual) {
                     ExecOutcome::Completed(t) => {
                         self.push(t, EventKind::TaskResolve { task, gen, completed: true })
@@ -565,6 +601,9 @@ impl<P: Policy> Sim<P> {
 
         let placements = outcome.placements.clone();
         for p in &placements {
+            if self.task_variant(p.task).is_degraded() {
+                self.metrics.degraded_lp_admission += 1;
+            }
             self.metrics.record_core_alloc(p.cores, p.offloaded);
             self.schedule_lp_placement(p);
         }
@@ -579,6 +618,14 @@ impl<P: Policy> Sim<P> {
     /// Sample reality for one LP placement and schedule its resolution.
     fn schedule_lp_placement(&mut self, p: &LpPlacement) {
         let gen = self.bump_gen(p.task);
+        // The committed model variant sizes both the transfer (smaller
+        // input) and the execution (faster model); factors are 1.0 — and
+        // every scale() exact — at full fidelity.
+        let vdef = *self
+            .cfg
+            .fidelity
+            .catalog
+            .lp_variant(self.task_variant(p.task));
         // Offloaded input: the transfer slot starts on schedule but its
         // actual duration is jittered — late arrival eats the window pad.
         let input_arrival = p.input_ready.map(|slot_end| {
@@ -586,16 +633,18 @@ impl<P: Policy> Sim<P> {
                 .controller
                 .state
                 .link_model
-                .slot_duration(&self.cfg, SlotKind::InputTransfer);
+                .slot_duration(&self.cfg, SlotKind::InputTransfer)
+                .scale(vdef.transfer_factor);
             let slot_start = slot_end - slot_dur;
-            let actual = self.controller.state.link_model.sample_transfer(
-                &self.cfg,
-                SlotKind::InputTransfer,
-                &mut self.rng,
-            );
+            let actual = self
+                .controller
+                .state
+                .link_model
+                .sample_transfer(&self.cfg, SlotKind::InputTransfer, &mut self.rng)
+                .scale(vdef.transfer_factor);
             slot_start + actual
         });
-        let actual = self.exec.sample_lp(p.cores, &mut self.rng);
+        let actual = self.exec.sample_lp_at(p.cores, vdef.time_factor, &mut self.rng);
         match execute_in_window(&p.window, input_arrival, actual) {
             ExecOutcome::Completed(t) => self.push(
                 t,
@@ -637,6 +686,9 @@ impl<P: Policy> Sim<P> {
         if is_hp {
             if completed {
                 self.metrics.hp_completed += 1;
+                if self.task_variant(task).is_degraded() {
+                    self.metrics.hp_completed_degraded += 1;
+                }
                 if self.hp_used_preemption.get(&task) == Some(&true) {
                     self.metrics.hp_completed_via_preemption += 1;
                 }
@@ -698,6 +750,9 @@ impl<P: Policy> Sim<P> {
             match &rec.state {
                 TaskState::Completed => {
                     self.metrics.lp_completed += 1;
+                    if rec.variant.is_degraded() {
+                        self.metrics.lp_completed_degraded += 1;
+                    }
                     if offloaded {
                         self.metrics.lp_offloaded_completed += 1;
                     }
@@ -758,6 +813,29 @@ impl<P: Policy> Sim<P> {
             };
             if hp_ok {
                 self.metrics.frames_completed += 1;
+                // Multi-fidelity accounting: a completed frame's accuracy is
+                // the minimum accuracy proxy across its tasks — a frame is
+                // as good as its least accurate stage. Full-fidelity (and
+                // detector-only) frames contribute exactly 1.0.
+                let mut accuracy = 1.0f64;
+                let mut degraded = false;
+                for t in &by_frame[f.id.0 as usize] {
+                    let Some(rec) = st.task(*t) else { continue };
+                    if rec.state != TaskState::Completed {
+                        continue;
+                    }
+                    let catalog = &self.cfg.fidelity.catalog;
+                    let a = match rec.spec.priority {
+                        Priority::High => catalog.hp_variant(rec.variant).accuracy,
+                        Priority::Low => catalog.lp_variant(rec.variant).accuracy,
+                    };
+                    accuracy = accuracy.min(a);
+                    degraded |= rec.variant.is_degraded();
+                }
+                self.metrics.accuracy_goodput += accuracy;
+                if degraded {
+                    self.metrics.frames_completed_degraded += 1;
+                }
             }
         }
     }

@@ -17,6 +17,7 @@ use std::fmt::Write as _;
 
 use crate::config::SystemConfig;
 use crate::error::{Error, Result};
+use crate::fidelity::VariantId;
 use crate::net::LinkModel;
 use crate::resources::{CoreTimeline, SlotKind, Timeline};
 use crate::scheduler::plan::{PlacementPlan, RegistryOp};
@@ -38,6 +39,10 @@ pub struct TaskRecord {
     pub allocation: Option<Allocation>,
     /// How many times this task has been preempted.
     pub preemptions: u32,
+    /// The model variant the latest committed placement runs the task at
+    /// (multi-fidelity extension; [`VariantId::FULL`] until a degraded
+    /// placement commits, and updated by every subsequent placement).
+    pub variant: VariantId,
 }
 
 /// The controller's view of one device's availability (network-dynamics
@@ -124,7 +129,13 @@ impl NetworkState {
         let id = spec.id;
         let prev = self.tasks.insert(
             id,
-            TaskRecord { spec, state: TaskState::Pending, allocation: None, preemptions: 0 },
+            TaskRecord {
+                spec,
+                state: TaskState::Pending,
+                allocation: None,
+                preemptions: 0,
+                variant: VariantId::FULL,
+            },
         );
         assert!(prev.is_none(), "task {id:?} registered twice");
         self.touch();
@@ -306,7 +317,7 @@ impl NetworkState {
         let mut placed_so_far: HashSet<TaskId> = HashSet::new();
         for op in &parts.registry {
             match op {
-                RegistryOp::Place(alloc) => {
+                RegistryOp::Place { alloc, .. } => {
                     let Some(rec) = self.tasks.get(&alloc.task) else {
                         return reject(format!("plan places unknown task {:?}", alloc.task));
                     };
@@ -366,10 +377,11 @@ impl NetworkState {
         }
         for op in parts.registry {
             match op {
-                RegistryOp::Place(alloc) => {
+                RegistryOp::Place { alloc, variant } => {
                     let rec = self.tasks.get_mut(&alloc.task).expect("validated above");
                     rec.state = TaskState::Allocated;
                     rec.allocation = Some(alloc);
+                    rec.variant = variant;
                 }
                 RegistryOp::Evict { task } => {
                     let rec = self.tasks.get_mut(&task).expect("validated above");
@@ -523,8 +535,8 @@ impl NetworkState {
             let r = &self.tasks[id];
             let _ = writeln!(
                 out,
-                "task {:?} {:?} alloc={:?} preemptions={}",
-                id, r.state, r.allocation, r.preemptions
+                "task {:?} {:?} alloc={:?} preemptions={} variant={:?}",
+                id, r.state, r.allocation, r.preemptions, r.variant
             );
         }
         let mut req_ids: Vec<&RequestId> = self.requests.keys().collect();

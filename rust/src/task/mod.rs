@@ -45,11 +45,14 @@ pub enum Priority {
 /// one core.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum CoreConfig {
+    /// Two cores (the minimum viable configuration).
     Two,
+    /// Four cores (a whole RPi2B).
     Four,
 }
 
 impl CoreConfig {
+    /// Number of cores this configuration occupies.
     pub fn cores(self) -> u32 {
         match self {
             CoreConfig::Two => 2,
@@ -68,6 +71,7 @@ impl CoreConfig {
         }
     }
 
+    /// The configuration reserving exactly `cores` cores, if one exists.
     pub fn from_cores(cores: u32) -> Option<CoreConfig> {
         match cores {
             2 => Some(CoreConfig::Two),
@@ -86,10 +90,13 @@ impl std::fmt::Display for CoreConfig {
 /// Immutable description of a task at spawn time.
 #[derive(Debug, Clone)]
 pub struct TaskSpec {
+    /// Unique task id.
     pub id: TaskId,
+    /// The frame whose pipeline spawned this task.
     pub frame: FrameId,
     /// Device whose pipeline generated this task.
     pub source: DeviceId,
+    /// Priority class (stage 2 = high, stage 3 = low).
     pub priority: Priority,
     /// Absolute completion deadline.
     pub deadline: SimTime,
@@ -134,10 +141,12 @@ pub enum TaskState {
 }
 
 impl TaskState {
+    /// Completed or failed — no further transitions.
     pub fn is_terminal(&self) -> bool {
         matches!(self, TaskState::Completed | TaskState::Failed(_))
     }
 
+    /// Holding a live resource reservation (allocated or running).
     pub fn is_active_allocation(&self) -> bool {
         matches!(self, TaskState::Allocated | TaskState::Running)
     }
@@ -146,20 +155,25 @@ impl TaskState {
 /// A half-open time window `[start, end)` on a resource.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Window {
+    /// Inclusive start instant.
     pub start: SimTime,
+    /// Exclusive end instant.
     pub end: SimTime,
 }
 
 impl Window {
+    /// Build `[start, end)`; panics when inverted.
     pub fn new(start: SimTime, end: SimTime) -> Window {
         assert!(end >= start, "window end before start");
         Window { start, end }
     }
 
+    /// Build `[start, start + dur)`.
     pub fn from_duration(start: SimTime, dur: SimDuration) -> Window {
         Window { start, end: start + dur }
     }
 
+    /// The window's length.
     pub fn duration(&self) -> SimDuration {
         self.end.since(self.start)
     }
@@ -169,6 +183,7 @@ impl Window {
         self.start < other.end && other.start < self.end
     }
 
+    /// Is `t` inside the half-open window?
     pub fn contains(&self, t: SimTime) -> bool {
         self.start <= t && t < self.end
     }
@@ -177,9 +192,11 @@ impl Window {
 /// A committed placement for a task.
 #[derive(Debug, Clone)]
 pub struct Allocation {
+    /// The placed task.
     pub task: TaskId,
     /// Device the processing window is reserved on.
     pub device: DeviceId,
+    /// The reserved processing window.
     pub window: Window,
     /// Cores reserved (1 for high-priority).
     pub cores: u32,
@@ -194,11 +211,17 @@ pub struct Allocation {
 /// request's deadline" (§4).
 #[derive(Debug, Clone)]
 pub struct LpRequest {
+    /// Unique request id.
     pub id: RequestId,
+    /// The frame whose completed stage-2 task spawned the set.
     pub frame: FrameId,
+    /// Device whose pipeline generated the request.
     pub source: DeviceId,
+    /// Absolute completion deadline of the whole set.
     pub deadline: SimTime,
+    /// When the request entered the controller.
     pub spawn: SimTime,
+    /// The DNN tasks of the set (1–4).
     pub tasks: Vec<TaskId>,
 }
 

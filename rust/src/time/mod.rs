@@ -16,9 +16,11 @@ pub struct SimTime(pub u64);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub struct SimDuration(pub u64);
 
+/// Microseconds per second (the crate's base time unit).
 pub const MICROS_PER_SEC: u64 = 1_000_000;
 
 impl SimTime {
+    /// The experiment start instant.
     pub const ZERO: SimTime = SimTime(0);
     /// Far future sentinel (≈ 292 millennia).
     pub const MAX: SimTime = SimTime(u64::MAX);
@@ -61,6 +63,7 @@ impl SimTime {
 }
 
 impl SimDuration {
+    /// The empty span.
     pub const ZERO: SimDuration = SimDuration(0);
 
     /// From seconds (rounded).
@@ -164,6 +167,7 @@ impl fmt::Display for SimDuration {
 /// this trait, so the same code runs under the discrete-event simulator
 /// ([`VirtualClock`]) and live ([`RealClock`], used by `examples/serve_cluster`).
 pub trait Clock {
+    /// The current instant.
     fn now(&self) -> SimTime;
 }
 
@@ -174,6 +178,7 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// A clock at time zero.
     pub fn new() -> Self {
         VirtualClock { now: std::cell::Cell::new(0) }
     }
@@ -204,6 +209,7 @@ pub struct RealClock {
 }
 
 impl RealClock {
+    /// Start counting from the current wall-clock instant.
     pub fn new() -> Self {
         RealClock { start: std::time::Instant::now() }
     }
@@ -260,10 +266,12 @@ impl SkewModel {
         self.offsets[device]
     }
 
+    /// Number of modelled devices.
     pub fn len(&self) -> usize {
         self.offsets.len()
     }
 
+    /// True when no devices are modelled.
     pub fn is_empty(&self) -> bool {
         self.offsets.is_empty()
     }

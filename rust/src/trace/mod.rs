@@ -29,6 +29,7 @@ pub enum FrameLoad {
 }
 
 impl FrameLoad {
+    /// Parse a trace-file value (−1, 0, or 1..=4).
     pub fn from_value(v: i8) -> Result<FrameLoad> {
         match v {
             -1 => Ok(FrameLoad::NoObject),
@@ -38,6 +39,7 @@ impl FrameLoad {
         }
     }
 
+    /// The trace-file value this load serialises to.
     pub fn value(self) -> i8 {
         match self {
             FrameLoad::NoObject => -1,
@@ -75,6 +77,7 @@ pub enum Distribution {
 }
 
 impl Distribution {
+    /// Parse a distribution name (`--dist`).
     pub fn parse(s: &str) -> Result<Distribution> {
         match s {
             "uniform" => Ok(Distribution::Uniform),
@@ -87,6 +90,7 @@ impl Distribution {
         }
     }
 
+    /// Stable distribution name for labels and round-tripping.
     pub fn name(self) -> String {
         match self {
             Distribution::Uniform => "uniform".into(),
@@ -264,6 +268,25 @@ pub struct ChurnProfile {
     pub degrade_start_s: f64,
     /// Degradation episode end, seconds.
     pub degrade_end_s: f64,
+}
+
+impl ChurnProfile {
+    /// A crash-only churn shape: `crash_pct` of the fleet crashes uniformly
+    /// inside `[start_s, end_s]`, nobody drains or rejoins, and the link
+    /// stays nominal. Used by the fidelity sweep, which needs orphans (the
+    /// rescue degradation path) without the full dynamics scenario.
+    pub fn crash_only(crash_pct: u8, start_s: f64, end_s: f64) -> ChurnProfile {
+        ChurnProfile {
+            crash_pct,
+            drain_pct: 0,
+            rejoin_after_s: 0.0,
+            churn_start_s: start_s,
+            churn_end_s: end_s,
+            degrade_factor: 1.0,
+            degrade_start_s: 0.0,
+            degrade_end_s: 0.0,
+        }
+    }
 }
 
 /// A time-ordered script of churn events for one scenario run.
@@ -498,10 +521,12 @@ impl Trace {
         out
     }
 
+    /// Number of cycles (trace lines).
     pub fn cycles(&self) -> usize {
         self.entries.len()
     }
 
+    /// Number of devices per cycle (trace columns).
     pub fn devices(&self) -> usize {
         self.devices
     }
@@ -511,6 +536,7 @@ impl Trace {
         self.entries.len() * self.devices
     }
 
+    /// The workload of `(cycle, device)`.
     pub fn load_at(&self, cycle: usize, device: usize) -> FrameLoad {
         self.entries[cycle][device]
     }

@@ -16,20 +16,27 @@ use crate::error::{Error, Result};
 /// A parsed scalar/array value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array of values.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// As a string, if this value is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// As an integer, if this value is one.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(x) => Some(*x),
@@ -44,12 +51,14 @@ impl Value {
             _ => None,
         }
     }
+    /// As a boolean, if this value is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// As an array, if this value is one.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -119,15 +128,19 @@ impl Document {
         self.entries.get(key)
     }
 
+    /// Look up a float (integer literals coerce).
     pub fn get_f64(&self, key: &str) -> Option<f64> {
         self.get(key).and_then(Value::as_f64)
     }
+    /// Look up an integer.
     pub fn get_i64(&self, key: &str) -> Option<i64> {
         self.get(key).and_then(Value::as_i64)
     }
+    /// Look up a boolean.
     pub fn get_bool(&self, key: &str) -> Option<bool> {
         self.get(key).and_then(Value::as_bool)
     }
+    /// Look up a string.
     pub fn get_str(&self, key: &str) -> Option<&str> {
         self.get(key).and_then(Value::as_str)
     }

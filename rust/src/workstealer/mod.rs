@@ -17,21 +17,37 @@
 //! exception — a poll is paid whether or not it finds work, so it is
 //! charged directly via [`NetworkState::charge_link_message`]).
 //!
+//! Multi-fidelity note: the stealers never *choose* a model variant — they
+//! are the dumb baselines. A task is always (re)started at its committed
+//! variant from the task record, which is [`crate::fidelity::VariantId::FULL`]
+//! for everything the stealers themselves admit.
+//!
 //! Modelling note (documented deviation): the real decentralised stealer
 //! polls continuously; an event-driven simulation has no "continuously", so
 //! idle devices attempt steals whenever work is enqueued or a task ends —
 //! the closest event-driven equivalent of a tight polling loop.
+//!
+//! Dead-queue note: in decentral mode a queue belongs to a physical device,
+//! so when that device is declared failed its queue dies with it. Tasks
+//! that would land on a dead device's queue (rescued orphans, eviction
+//! victims whose source has crashed) are routed to an explicit
+//! **controller-side mirror queue** instead, which every live device checks
+//! after its own queue and before polling peers — the controller already
+//! brokered the rescue, so the mirror check pays no extra poll message.
+//! This replaces the old modelling wart where live devices kept stealing
+//! from a physically-dead queue (see KNOWN_ISSUES.md).
 
 use std::collections::VecDeque;
 
 use crate::config::SystemConfig;
+use crate::fidelity::VariantId;
 use crate::resources::SlotKind;
 use crate::scheduler::plan::PlacementPlan;
 use crate::scheduler::rescue::{relocate_hp, VictimPolicy};
 use crate::scheduler::{
     HpOutcome, HpRescue, LpOutcome, LpPlacement, Policy, PreemptionReport, RescueOutcome,
 };
-use crate::state::NetworkState;
+use crate::state::{DeviceHealth, NetworkState};
 use crate::task::{
     Allocation, CoreConfig, DeviceId, FailReason, Priority, RequestId, TaskId, Window,
 };
@@ -58,6 +74,9 @@ pub struct Workstealer {
     central_queue: VecDeque<TaskId>,
     /// Per-device queues (Decentral mode).
     device_queues: Vec<VecDeque<TaskId>>,
+    /// Controller-side mirror queue (Decentral mode): holds tasks whose
+    /// home queue's device is Down (see the module docs).
+    mirror_queue: VecDeque<TaskId>,
     /// Random polling order.
     rng: Rng,
     /// Poll-loop period (seconds).
@@ -72,20 +91,54 @@ impl Workstealer {
             preemption,
             central_queue: VecDeque::new(),
             device_queues: (0..cfg.devices).map(|_| VecDeque::new()).collect(),
+            mirror_queue: VecDeque::new(),
             rng: Rng::seed_from_u64(cfg.seed ^ 0x57EA1),
             poll_interval_s: cfg.steal_poll_interval_s,
         }
     }
 
-    /// Total queued tasks (tests / metrics).
+    /// Total queued tasks (tests / metrics), mirror queue included.
     pub fn queued(&self) -> usize {
-        self.central_queue.len() + self.device_queues.iter().map(VecDeque::len).sum::<usize>()
+        self.central_queue.len()
+            + self.mirror_queue.len()
+            + self.device_queues.iter().map(VecDeque::len).sum::<usize>()
     }
 
-    fn enqueue(&mut self, task: TaskId, source: DeviceId) {
+    /// Tasks currently parked on the controller-side mirror queue.
+    pub fn mirrored(&self) -> usize {
+        self.mirror_queue.len()
+    }
+
+    /// Queue `task` for a later steal. In decentral mode a task whose home
+    /// device is Down goes to the controller-side mirror queue — the
+    /// physical queue died with the device. Returns whether the mirror was
+    /// used (the `requeued_via_mirror` metric).
+    fn enqueue(&mut self, st: &NetworkState, task: TaskId, source: DeviceId) -> bool {
         match self.mode {
             Mode::Central => self.central_queue.push_back(task),
-            Mode::Decentral => self.device_queues[source.0 as usize].push_back(task),
+            Mode::Decentral => {
+                if st.device_health(source) == DeviceHealth::Down {
+                    self.mirror_queue.push_back(task);
+                    return true;
+                }
+                self.device_queues[source.0 as usize].push_back(task);
+            }
+        }
+        false
+    }
+
+    /// Put a task back at the front of its queue (an unused steal), with
+    /// the same dead-queue routing as [`Workstealer::enqueue`].
+    fn requeue_front(&mut self, st: &NetworkState, task: TaskId, source: DeviceId) {
+        match self.mode {
+            Mode::Central => self.central_queue.push_front(task),
+            Mode::Decentral => {
+                if st.device_health(source) == DeviceHealth::Down {
+                    self.mirror_queue.push_front(task);
+                } else {
+                    self.device_queues[source.0 as usize].push_front(task);
+                }
+            }
         }
     }
 
@@ -108,6 +161,12 @@ impl Workstealer {
                 if let Some(t) =
                     pop_runnable(&mut self.device_queues[dev.0 as usize], st, cfg, dev, now)
                 {
+                    return Some(t);
+                }
+                // Controller-side mirror of dead devices' queues, checked
+                // before polling peers (no poll message: the controller
+                // already brokered these tasks during rescue).
+                if let Some(t) = pop_runnable(&mut self.mirror_queue, st, cfg, dev, now) {
                     return Some(t);
                 }
                 let mut order: Vec<usize> = (0..self.device_queues.len())
@@ -166,12 +225,7 @@ impl Workstealer {
             if remote && stole_remote {
                 // Already used this wake-up's steal budget: put it back.
                 let source = st.task(task).unwrap().spec.source;
-                match self.mode {
-                    Mode::Central => self.central_queue.push_front(task),
-                    Mode::Decentral => {
-                        self.device_queues[source.0 as usize].push_front(task)
-                    }
-                }
+                self.requeue_front(st, task, source);
                 break;
             }
             let queue_empty = self.queued() == 0;
@@ -242,8 +296,14 @@ fn pop_runnable(
         }
         let remote = rec.spec.source != dev;
         if remote {
-            let xfer = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
-            let best_case = now + xfer + cfg.lp_slot(CoreConfig::Four.cores());
+            // Best case at the task's committed model variant (the stealers
+            // never change variants — full fidelity for their own work).
+            let v = cfg.fidelity.catalog.lp_variant(rec.variant);
+            let xfer = st
+                .link_model
+                .slot_duration(cfg, SlotKind::InputTransfer)
+                .scale(v.transfer_factor);
+            let best_case = now + xfer + cfg.lp_slot_at(CoreConfig::Four.cores(), v.time_factor);
             if best_case > rec.spec.deadline {
                 idx += 1; // not worth the transfer; leave it for its owner
                 continue;
@@ -276,10 +336,17 @@ fn start_task(
     let source = rec.spec.source;
     let deadline = rec.spec.deadline;
     let offloaded = source != dev;
+    // The stealers (re)start a task at its committed model variant — they
+    // never degrade on their own (full fidelity for everything they admit).
+    let variant = rec.variant;
+    let vdef = *cfg.fidelity.catalog.lp_variant(variant);
 
     let mut plan = PlacementPlan::new(st);
     let (start, input_ready) = if offloaded {
-        let dur = st.link_model.slot_duration(cfg, SlotKind::InputTransfer);
+        let dur = st
+            .link_model
+            .slot_duration(cfg, SlotKind::InputTransfer)
+            .scale(vdef.transfer_factor);
         let xfer_start = plan.link_view(st).earliest_fit(now, dur);
         let xfer_end = xfer_start + dur;
         (xfer_end, Some((xfer_start, dur, xfer_end)))
@@ -298,7 +365,8 @@ fn start_task(
     //   · if even that cannot finish in time, start it anyway at two cores
     //     with the window clipped at the deadline (the paper's "rash"
     //     stealer behaviour) — the device terminates it there (violation).
-    let fits_deadline = |config: CoreConfig| start + cfg.lp_slot(config.cores()) <= deadline;
+    let fits_deadline =
+        |config: CoreConfig| start + cfg.lp_slot_at(config.cores(), vdef.time_factor) <= deadline;
     let mut order: Vec<CoreConfig> = Vec::new();
     if queue_empty {
         order.push(CoreConfig::Four);
@@ -312,7 +380,8 @@ fn start_task(
     }
     let mut chosen = None;
     for &config in &order {
-        let mut window = Window::from_duration(start, cfg.lp_slot(config.cores()));
+        let mut window =
+            Window::from_duration(start, cfg.lp_slot_at(config.cores(), vdef.time_factor));
         window.end = window.end.min(deadline);
         if st.device(dev).fits(&window, config.cores()) {
             chosen = Some((config, window));
@@ -325,13 +394,13 @@ fn start_task(
         plan.stage_link(st, xfer_start, dur, SlotKind::InputTransfer, task)
             .expect("earliest_fit produced occupied transfer slot");
     }
-    plan.stage_placement(st, Allocation {
+    plan.stage_placement_at(st, Allocation {
         task,
         device: dev,
         window,
         cores: config.cores(),
         offloaded,
-    })
+    }, variant)
     .expect("fits() said the window was free");
     // Completion status message back to the owner/controller.
     let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
@@ -422,7 +491,7 @@ impl Policy for Workstealer {
         plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);
         st.apply(plan).expect("freshly staged stealer preemption plan");
         let victim_source = st.task(victim_id).unwrap().spec.source;
-        self.enqueue(victim_id, victim_source); // reallocation = a later steal
+        self.enqueue(st, victim_id, victim_source); // reallocation = a later steal
         HpOutcome {
             window: Some(window),
             preemption: Some(PreemptionReport {
@@ -452,7 +521,7 @@ impl Policy for Workstealer {
         let tasks = req.tasks.clone();
         let source = req.source;
         for &task in &tasks {
-            self.enqueue(task, source);
+            self.enqueue(st, task, source);
         }
         // Queue-only: devices acquire work at their next poll wake-up or
         // when one of their tasks ends (an idle device polls immediately).
@@ -503,6 +572,24 @@ impl Policy for Workstealer {
         now: SimTime,
     ) -> RescueOutcome {
         let mut out = RescueOutcome::default();
+        // A failed device's physical queue died with it. Entries that were
+        // enqueued while it was still up (or between its crash and this
+        // detection) were never placed, so they are not orphans and the
+        // loop below never sees them — drain every Down device's queue
+        // into the controller-side mirror here instead. Idempotent: queues
+        // of up/draining devices are untouched, and an already-drained
+        // dead queue is empty.
+        if self.mode == Mode::Decentral {
+            for i in 0..self.device_queues.len() {
+                if st.device_health(DeviceId(i as u32)) != DeviceHealth::Down {
+                    continue;
+                }
+                while let Some(t) = self.device_queues[i].pop_front() {
+                    self.mirror_queue.push_back(t);
+                    out.requeued_via_mirror += 1;
+                }
+            }
+        }
         for &task in orphans {
             let Some(rec) = st.task(task) else { continue };
             if rec.state.is_terminal() {
@@ -515,13 +602,22 @@ impl Policy for Workstealer {
                     if now >= deadline {
                         out.lost.push((task, Priority::Low));
                     } else {
-                        self.enqueue(task, source);
+                        if self.enqueue(st, task, source) {
+                            out.requeued_via_mirror += 1;
+                        }
                         out.lp_requeued.push(task);
                     }
                 }
                 Priority::High => {
-                    match relocate_hp(st, cfg, task, now, self.preemption, VictimPolicy::Requeue)
-                    {
+                    match relocate_hp(
+                        st,
+                        cfg,
+                        task,
+                        now,
+                        self.preemption,
+                        VictimPolicy::Requeue,
+                        VariantId::FULL,
+                    ) {
                         Some(rel) => {
                             // Like this policy's preemption path: a
                             // committed eviction's victim waits for a
@@ -529,7 +625,9 @@ impl Policy for Workstealer {
                             if let Some(report) = &rel.preemption {
                                 let victim_source =
                                     st.task(report.victim).unwrap().spec.source;
-                                self.enqueue(report.victim, victim_source);
+                                if self.enqueue(st, report.victim, victim_source) {
+                                    out.requeued_via_mirror += 1;
+                                }
                             }
                             out.hp_rescued.push(HpRescue {
                                 task,
@@ -822,7 +920,7 @@ mod tests {
         let now = SimTime::from_secs_f64(10.0);
         let got = ws.next_task_for(&mut st, &cfg, DeviceId(0), now);
         assert_eq!(got, Some(queued_task));
-        ws.enqueue(queued_task, DeviceId(0));
+        ws.enqueue(&st, queued_task, DeviceId(0));
         // ... but past the deadline the dequeue drops and fails it.
         let late = SimTime::from_secs_f64(16.0);
         let got = ws.next_task_for(&mut st, &cfg, DeviceId(0), late);
@@ -880,6 +978,76 @@ mod tests {
         let placements = ws.poll(&mut st, &cfg, DeviceId(1), now);
         assert!(placements.iter().any(|p| p.task == lp_id));
         st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn decentral_rescue_routes_dead_queue_orphans_via_mirror() {
+        use crate::scheduler::Policy as _;
+        let (cfg, mut st, mut ws) = setup(Mode::Decentral, true);
+        // An LP task committed on (and sourced from) device 0, which dies.
+        let rid = lp_request(&mut st, 0, 1, 60.0);
+        let lp_id = st.request(rid).unwrap().tasks[0];
+        place(&mut st, Allocation {
+            task: lp_id,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
+            cores: 2,
+            offloaded: false,
+        });
+        // Plus a never-placed entry sitting on device 0's queue when it
+        // dies (enqueued while the device was still up): not an orphan,
+        // but its physical queue is gone — the rescue must drain it.
+        let queued_rid = lp_request(&mut st, 0, 1, 60.0);
+        let queued_id = st.request(queued_rid).unwrap().tasks[0];
+        ws.allocate_lp(&mut st, &cfg, queued_rid, SimTime::ZERO);
+        assert_eq!(ws.device_queues[0].len(), 1);
+
+        let now = SimTime::from_millis(500);
+        let orphans = st.mark_device_down(DeviceId(0), now);
+        assert_eq!(orphans, vec![lp_id]);
+        let out = ws.rescue_orphans(&mut st, &cfg, &orphans, now);
+        // The orphan is requeued — onto the controller-side mirror, not the
+        // dead device's physical queue — and the dead queue's backlog is
+        // drained into the mirror alongside it.
+        assert_eq!(out.lp_requeued, vec![lp_id], "only true orphans are rescue outcomes");
+        assert_eq!(out.requeued_via_mirror, 2, "orphan + drained backlog ⇒ mirror");
+        assert_eq!(ws.mirrored(), 2);
+        assert!(
+            ws.device_queues[0].is_empty(),
+            "nothing survives on a physically dead queue"
+        );
+        // Live devices' polls pick the mirrored tasks up (own queue →
+        // mirror → peers), paying the usual input transfer — one remote
+        // steal per wake-up, FIFO from the mirror (backlog first: it was
+        // drained before the orphan was requeued).
+        let first = ws.poll(&mut st, &cfg, DeviceId(1), now);
+        assert!(first.iter().any(|p| p.task == queued_id && p.offloaded));
+        assert_eq!(ws.mirrored(), 1, "one remote steal per wake-up");
+        let second = ws.poll(&mut st, &cfg, DeviceId(2), now);
+        assert!(second.iter().any(|p| p.task == lp_id && p.offloaded));
+        assert_eq!(ws.mirrored(), 0);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn central_rescue_never_uses_the_mirror() {
+        use crate::scheduler::Policy as _;
+        let (cfg, mut st, mut ws) = setup(Mode::Central, true);
+        let rid = lp_request(&mut st, 0, 1, 60.0);
+        let lp_id = st.request(rid).unwrap().tasks[0];
+        place(&mut st, Allocation {
+            task: lp_id,
+            device: DeviceId(0),
+            window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(17.0)),
+            cores: 2,
+            offloaded: false,
+        });
+        let now = SimTime::from_millis(500);
+        let orphans = st.mark_device_down(DeviceId(0), now);
+        let out = ws.rescue_orphans(&mut st, &cfg, &orphans, now);
+        assert_eq!(out.lp_requeued, vec![lp_id]);
+        assert_eq!(out.requeued_via_mirror, 0, "the central queue is already controller-side");
+        assert_eq!(ws.mirrored(), 0);
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Multi-fidelity integration properties.
+//!
+//! 1. **Strict opt-in**: with the `[fidelity]` defaults (single-variant
+//!    catalog) — or with variants present but `mode = off` — every scenario
+//!    metric is identical to the pre-fidelity behaviour, including the
+//!    float summaries to the bit.
+//! 2. **Degraded admission picks the highest feasible accuracy**: a
+//!    deterministic scene where the full model and the first degraded
+//!    variant both miss the deadline, but the second fits.
+//! 3. **Conservation**: under degradation *and* churn, every frame ends
+//!    exactly one of completed-at-a-variant (full or degraded), failed, or
+//!    lost-to-churn; tasks conserve the same way.
+//! 4. **Monotonicity**: the four-policy sweep never completes fewer frames
+//!    than the `off` policy at any fleet size, and degradation counters
+//!    route strictly by the paths each mode permits.
+
+use pats::config::SystemConfig;
+use pats::experiments::{fidelity, fidelity_matrix};
+use pats::fidelity::{Catalog, Mode, VariantId};
+use pats::metrics::ScenarioMetrics;
+use pats::scheduler::low_priority::allocate_request;
+use pats::scheduler::plan::PlacementPlan;
+use pats::sim::run_scenario;
+use pats::state::NetworkState;
+use pats::task::{
+    Allocation, DeviceId, FrameId, LpRequest, Priority, TaskId, TaskSpec, TaskState, Window,
+};
+use pats::time::SimTime;
+use pats::trace::{Distribution, Trace};
+
+fn assert_scenarios_identical(a: &ScenarioMetrics, b: &ScenarioMetrics, what: &str) {
+    assert_eq!(a.frames_completed, b.frames_completed, "{what}");
+    assert_eq!(a.frames_failed_hp, b.frames_failed_hp, "{what}");
+    assert_eq!(a.frames_failed_lp, b.frames_failed_lp, "{what}");
+    assert_eq!(a.hp_generated, b.hp_generated, "{what}");
+    assert_eq!(a.hp_completed, b.hp_completed, "{what}");
+    assert_eq!(a.hp_failed_alloc, b.hp_failed_alloc, "{what}");
+    assert_eq!(a.hp_violated, b.hp_violated, "{what}");
+    assert_eq!(a.lp_generated, b.lp_generated, "{what}");
+    assert_eq!(a.lp_completed, b.lp_completed, "{what}");
+    assert_eq!(a.lp_failed_alloc, b.lp_failed_alloc, "{what}");
+    assert_eq!(a.lp_failed_preempted, b.lp_failed_preempted, "{what}");
+    assert_eq!(a.lp_violated, b.lp_violated, "{what}");
+    assert_eq!(a.preemptions, b.preemptions, "{what}");
+    assert_eq!(a.realloc_success, b.realloc_success, "{what}");
+    assert_eq!(a.lp_offloaded, b.lp_offloaded, "{what}");
+    assert_eq!(
+        a.lp_set_fractions.mean().to_bits(),
+        b.lp_set_fractions.mean().to_bits(),
+        "{what}: float summaries must be bit-identical"
+    );
+}
+
+/// The single-variant default — and a multi-variant catalog under
+/// `mode = off` — reproduce the pre-fidelity placements bit-for-bit.
+#[test]
+fn single_variant_default_is_bit_identical_to_fidelity_off() {
+    let mut cfg = SystemConfig::default();
+    cfg.frames = 160;
+    let trace = Trace::generate(Distribution::Weighted(4), cfg.devices, cfg.frames, cfg.seed);
+
+    // The shipped default: permissive mode, single-variant catalog.
+    let baseline = run_scenario(&cfg, &trace, "default").metrics;
+    assert_eq!(baseline.degradations(), 0, "nothing to degrade to");
+    assert_eq!(baseline.frames_completed_degraded, 0);
+    assert_eq!(
+        baseline.accuracy_goodput_pct().to_bits(),
+        baseline.frame_completion_pct().to_bits(),
+        "full fidelity: goodput IS frame completion"
+    );
+
+    // Mode off, single catalog.
+    let mut off = cfg.clone();
+    off.fidelity.mode = Mode::Off;
+    let off = run_scenario(&off, &trace, "off").metrics;
+    assert_scenarios_identical(&baseline, &off, "mode=off vs default");
+
+    // Demo catalog but mode off: variants exist, nothing may use them.
+    let mut gated = cfg.clone();
+    gated.fidelity.catalog = Catalog::demo();
+    gated.fidelity.mode = Mode::Off;
+    let gated = run_scenario(&gated, &trace, "gated").metrics;
+    assert_eq!(gated.degradations(), 0);
+    assert_scenarios_identical(&baseline, &gated, "demo catalog + mode=off vs default");
+}
+
+fn register_lp(st: &mut NetworkState, source: u32, deadline_s: f64, rid: Option<u64>) -> TaskId {
+    let id = st.fresh_task_id();
+    st.register_task(TaskSpec {
+        id,
+        frame: FrameId(0),
+        source: DeviceId(source),
+        priority: Priority::Low,
+        deadline: SimTime::from_secs_f64(deadline_s),
+        spawn: SimTime::ZERO,
+        request: rid.map(pats::task::RequestId),
+    });
+    id
+}
+
+fn wall(st: &mut NetworkState, dev: u32, until_s: f64) {
+    let id = st.fresh_task_id();
+    st.register_task(TaskSpec {
+        id,
+        frame: FrameId(99),
+        source: DeviceId(dev),
+        priority: Priority::High,
+        deadline: SimTime::from_secs_f64(600.0),
+        spawn: SimTime::ZERO,
+        request: None,
+    });
+    let mut plan = PlacementPlan::new(st);
+    plan.stage_placement(st, Allocation {
+        task: id,
+        device: DeviceId(dev),
+        window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(until_s)),
+        cores: 4,
+        offloaded: false,
+    })
+    .unwrap();
+    st.apply(plan).unwrap();
+}
+
+/// Every device is walled off by non-preemptible work until t = 10 s and
+/// the request deadline is one frame period (18.86 s). The full model
+/// (slot ≈ 17.4 s) and the first degraded variant (slot ≈ 10.6 s) both
+/// miss the deadline from the t = 10 s completion point; the second
+/// degraded variant (slot ≈ 6.4 s) fits — the admission must commit it,
+/// and at nothing less accurate.
+#[test]
+fn degraded_admission_picks_the_highest_feasible_accuracy() {
+    let mut cfg = SystemConfig::default();
+    cfg.fidelity.catalog = Catalog::demo();
+    cfg.fidelity.mode = Mode::Admission;
+    let mut st = NetworkState::new(&cfg);
+    for d in 0..4 {
+        wall(&mut st, d, 10.0);
+    }
+    let rid = st.fresh_request_id();
+    let task = register_lp(&mut st, 0, 18.86, Some(rid.0));
+    st.register_request(LpRequest {
+        id: rid,
+        frame: FrameId(0),
+        source: DeviceId(0),
+        deadline: SimTime::from_secs_f64(18.86),
+        spawn: SimTime::ZERO,
+        tasks: vec![task],
+    });
+
+    let out = allocate_request(&mut st, &cfg, rid, SimTime::ZERO);
+    assert!(out.fully_allocated(), "the tiny variant must save the task");
+    let rec = st.task(task).unwrap();
+    assert_eq!(rec.state, TaskState::Allocated);
+    assert_eq!(
+        rec.variant,
+        VariantId(2),
+        "v1 cannot meet the deadline, v2 is the highest feasible accuracy"
+    );
+    let alloc = rec.allocation.as_ref().unwrap();
+    assert!(alloc.window.start >= SimTime::from_secs_f64(10.0));
+    assert!(alloc.window.end <= SimTime::from_secs_f64(18.86));
+    st.check_invariants().unwrap();
+
+    // The same scene under mode=off keeps the paper's behaviour: rejected.
+    let mut cfg_off = cfg.clone();
+    cfg_off.fidelity.mode = Mode::Off;
+    let mut st = NetworkState::new(&cfg_off);
+    for d in 0..4 {
+        wall(&mut st, d, 10.0);
+    }
+    let rid = st.fresh_request_id();
+    let task = register_lp(&mut st, 0, 18.86, Some(rid.0));
+    st.register_request(LpRequest {
+        id: rid,
+        frame: FrameId(0),
+        source: DeviceId(0),
+        deadline: SimTime::from_secs_f64(18.86),
+        spawn: SimTime::ZERO,
+        tasks: vec![task],
+    });
+    let out = allocate_request(&mut st, &cfg_off, rid, SimTime::ZERO);
+    assert!(!out.fully_allocated(), "off: reject-or-fail, as the paper does");
+    assert_eq!(st.task(task).unwrap().state, TaskState::Pending);
+}
+
+/// The four-policy sweep at two small fleet sizes: frames completed is
+/// monotone non-decreasing vs `off`, conservation holds under churn, and
+/// the degradation counters route by the paths each mode permits.
+#[test]
+fn fidelity_sweep_conserves_frames_and_routes_by_mode() {
+    let mut cfg = SystemConfig::default();
+    cfg.fidelity.cycles = 3;
+    cfg.fidelity.crash_pct = 25;
+    let sizes = [4usize, 8];
+    let rows = fidelity(&cfg, &sizes);
+    assert_eq!(rows.len(), sizes.len() * fidelity_matrix().len());
+
+    for &devices in &sizes {
+        let row = |tag: &str| {
+            rows.iter()
+                .find(|r| r.label == format!("{tag}_{devices}"))
+                .unwrap_or_else(|| panic!("missing {tag}_{devices}"))
+        };
+        let off = row("FID_OFF");
+        assert_eq!(off.metrics.degradations(), 0, "off never degrades");
+        assert_eq!(off.metrics.frames_completed_degraded, 0);
+
+        for r in [off, row("FID_ADM"), row("FID_PRE"), row("FID_FULL")] {
+            let m = &r.metrics;
+            // Frame conservation: completed (full + degraded are a split of
+            // completed), failed, or lost to churn — nothing else.
+            assert_eq!(
+                m.frames_completed + m.frames_failed_hp + m.frames_failed_lp
+                    + m.frames_lost_churn,
+                m.frames_total,
+                "{}: frame conservation",
+                r.label
+            );
+            assert!(m.frames_completed_degraded <= m.frames_completed, "{}", r.label);
+            // Task conservation, churn included.
+            assert_eq!(
+                m.hp_completed + m.hp_failed_alloc + m.hp_violated + m.hp_lost_churn,
+                m.hp_generated,
+                "{}: HP conservation",
+                r.label
+            );
+            assert_eq!(
+                m.lp_completed + m.lp_failed_alloc + m.lp_failed_preempted + m.lp_violated
+                    + m.lp_lost_churn,
+                m.lp_generated,
+                "{}: LP conservation",
+                r.label
+            );
+            // The accuracy proxy is in (0, 1] per frame.
+            assert!(m.accuracy_goodput <= m.frames_completed as f64 + 1e-9, "{}", r.label);
+            // Acceptance: degradation never completes fewer frames than the
+            // paper's reject-or-fail behaviour on the same scenario.
+            assert!(
+                m.frames_completed >= off.metrics.frames_completed,
+                "{}: {} < off's {}",
+                r.label,
+                m.frames_completed,
+                off.metrics.frames_completed
+            );
+        }
+        // Path gating: admission-only must not touch the victim or rescue
+        // paths; admission+preemption must not touch rescue.
+        let adm = &row("FID_ADM").metrics;
+        assert_eq!(adm.degraded_victim_realloc, 0, "admission-only gates victims");
+        assert_eq!(adm.degraded_rescue, 0, "admission-only gates rescue");
+        let pre = &row("FID_PRE").metrics;
+        assert_eq!(pre.degraded_rescue, 0, "admission+preemption gates rescue");
+    }
+
+    // Somewhere in the sweep the degraded paths must actually fire — an
+    // over-committed steady workload at 4-task sets leaves plenty of
+    // full-fidelity failures to save.
+    let total_degradations: u64 = rows.iter().map(|r| r.metrics.degradations()).sum();
+    assert!(total_degradations > 0, "the sweep never degraded anything");
+}
+
+/// Determinism: the same fidelity scenario twice gives identical metrics.
+#[test]
+fn fidelity_runs_are_deterministic() {
+    let mut cfg = SystemConfig::default();
+    cfg.fidelity.cycles = 2;
+    let a = fidelity(&cfg, &[4]);
+    let b = fidelity(&cfg, &[4]);
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.label, rb.label);
+        assert_scenarios_identical(&ra.metrics, &rb.metrics, &ra.label);
+        assert_eq!(ra.metrics.degradations(), rb.metrics.degradations(), "{}", ra.label);
+        assert_eq!(
+            ra.metrics.frames_completed_degraded,
+            rb.metrics.frames_completed_degraded,
+            "{}",
+            ra.label
+        );
+        assert_eq!(
+            ra.metrics.accuracy_goodput.to_bits(),
+            rb.metrics.accuracy_goodput.to_bits(),
+            "{}",
+            ra.label
+        );
+    }
+}

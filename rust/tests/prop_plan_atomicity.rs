@@ -15,6 +15,7 @@
 //!    APIs; every placement goes through `NetworkState::apply`.
 
 use pats::config::SystemConfig;
+use pats::fidelity::{Catalog, VariantId};
 use pats::resources::{CoreTimeline, SlotKind, Timeline};
 use pats::scheduler::high_priority::HP_CORES;
 use pats::scheduler::low_priority::allocate_single;
@@ -239,6 +240,96 @@ fn injected_failure_at_every_stage_index_leaves_state_bit_identical() {
             exec(op, &mut plan, &st, &tasks);
         }
         st.apply(plan).unwrap();
+        st.check_invariants().unwrap();
+    });
+}
+
+/// Variant-staging failure injection: degraded placements staged into a
+/// plan obey exactly the same atomicity contract as full-fidelity ones —
+/// a failed degraded staging call leaves the plan usable, a dropped plan
+/// with staged degraded placements leaves the state bit-identical, and a
+/// stale plan carrying degraded placements is rejected whole.
+#[test]
+fn rejected_degraded_plans_leave_state_bit_identical() {
+    run("degraded plan atomicity", 40, |g| {
+        let mut cfg = SystemConfig::default();
+        cfg.fidelity.catalog = Catalog::demo();
+        let mut st = NetworkState::new(&cfg);
+        let (placed, pending) = random_scene(g, &cfg, &mut st);
+        let tasks: Vec<TaskId> = placed.iter().chain(pending.iter()).copied().collect();
+        if tasks.is_empty() {
+            return;
+        }
+        let before = st.fingerprint();
+
+        // A plan mixing degraded placements with an injected failure,
+        // dropped: zero residue, bit-identical state.
+        {
+            let mut plan = PlacementPlan::new(&st);
+            for (i, &task) in tasks.iter().enumerate() {
+                let variant = VariantId((i % cfg.fidelity.catalog.lp.len()) as u8);
+                let factor = cfg.fidelity.catalog.lp_variant(variant).time_factor;
+                let _ = plan.stage_placement_at(
+                    &st,
+                    Allocation {
+                        task,
+                        device: DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32),
+                        window: Window::from_duration(
+                            SimTime::from_secs_f64(g.f64(0.0, 30.0)),
+                            cfg.lp_slot_at(2, factor),
+                        ),
+                        cores: 2,
+                        offloaded: false,
+                    },
+                    variant,
+                );
+            }
+            // An infeasible degraded placement must be rejected at staging
+            // without disturbing the plan's earlier staged ops.
+            let err = plan.stage_placement_at(
+                &st,
+                Allocation {
+                    task: tasks[0],
+                    device: DeviceId(0),
+                    window: Window::from_duration(SimTime::ZERO, cfg.lp_slot_at(2, 0.35)),
+                    cores: 99,
+                    offloaded: false,
+                },
+                VariantId(2),
+            );
+            assert!(err.is_err(), "99-core degraded placement must be rejected");
+            assert_eq!(st.fingerprint(), before, "staging never touches the state");
+            // Dropped here.
+        }
+        assert_eq!(st.fingerprint(), before, "dropped degraded plan leaves zero residue");
+
+        // A committable degraded plan staged against a snapshot that then
+        // moves on: rejected whole, bit-identical state.
+        let mut stale = PlacementPlan::new(&st);
+        let staged_any = tasks.iter().any(|&task| {
+            stale
+                .stage_placement_at(
+                    &st,
+                    Allocation {
+                        task,
+                        device: DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32),
+                        window: Window::from_duration(
+                            SimTime::from_secs_f64(g.f64(40.0, 60.0)),
+                            cfg.lp_slot_at(2, 0.6),
+                        ),
+                        cores: 2,
+                        offloaded: false,
+                    },
+                    VariantId(1),
+                )
+                .is_ok()
+        });
+        register(&mut st, 0, Priority::Low, SimTime::from_secs_f64(90.0));
+        let moved = st.fingerprint();
+        if staged_any {
+            assert!(st.apply(stale).is_err(), "stale degraded plan must be rejected");
+        }
+        assert_eq!(st.fingerprint(), moved, "rejection leaves zero residue");
         st.check_invariants().unwrap();
     });
 }
@@ -488,6 +579,9 @@ fn no_direct_mutation_calls_outside_the_plan_door() {
         "rust/src/workstealer/mod.rs",
         "rust/src/coordinator/mod.rs",
         "rust/src/sim/mod.rs",
+        // The multi-fidelity module defines catalog + gating only; the
+        // degraded placements it enables must flow through the same plans.
+        "rust/src/fidelity/mod.rs",
     ];
     // Raw mutation spellings that must not appear in policy code. The
     // compiler already enforces most of this (the link timeline is a
