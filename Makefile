@@ -1,14 +1,16 @@
 # PATS build/verify entry points.
 #
-#   make verify     — tier-1 gate: release build + tests + format check
-#   make lint       — clippy over every target, warnings denied
-#   make bench      — micro-benchmarks (writes BENCH_*.json)
-#   make artifacts  — AOT-compile the JAX model to HLO text (python layer)
+#   make verify      — tier-1 gate: release build + tests + format check
+#   make lint        — clippy over every target, warnings denied
+#   make bench       — micro-benchmarks (writes BENCH_*.json)
+#   make bench-build — compile every bench target without running (CI gate
+#                      so bench code cannot silently rot)
+#   make artifacts   — AOT-compile the JAX model to HLO text (python layer)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test fmt lint bench artifacts
+.PHONY: verify build test fmt lint bench bench-build artifacts
 
 verify: build test fmt
 
@@ -33,6 +35,10 @@ bench:
 	$(CARGO) bench --bench plan
 	$(CARGO) bench --bench dynamics
 	$(CARGO) bench --bench fidelity
+	$(CARGO) bench --bench shards
+
+bench-build:
+	$(CARGO) bench --no-run
 
 artifacts:
 	$(PYTHON) python/compile/aot.py

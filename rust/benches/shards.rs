@@ -1,0 +1,112 @@
+//! Sharded-control-plane benchmarks: the same 1024-device decision load
+//! at growing shard counts.
+//!
+//! Two claims are tracked across commits in `BENCH_shards.json`:
+//!
+//! * **Per-decision scheduling cost drops with shards.** Each shard owns
+//!   its own link-calendar partition and only its own devices' occupancy,
+//!   so one low-priority admission on a loaded plane touches a K-times
+//!   smaller calendar (`admit_after_sweep/*`).
+//! * **The end-to-end decision sweep parallelises.** Shards share no
+//!   mutable state, so a batch decision phase runs one shard per OS
+//!   thread (`std::thread::scope`); the 8-shard parallel sweep must beat
+//!   the single-shard serial sweep (`sweep_parallel/*` vs
+//!   `sweep_serial/shards=1`) — the first real wall-clock parallelism in
+//!   the codebase.
+
+use pats::bench::{bench_with_setup, section, write_json, BenchResult};
+use pats::config::SystemConfig;
+use pats::coordinator::ControlSurface as _;
+use pats::scheduler::PatsScheduler;
+use pats::shard::{ControlPlane, LpJob};
+use pats::task::{DeviceId, FrameId};
+use pats::time::SimTime;
+
+const DEVICES: usize = 1024;
+
+fn plane_and_jobs(shards: usize) -> (ControlPlane<PatsScheduler>, Vec<Vec<LpJob>>) {
+    let mut cfg = SystemConfig::default();
+    cfg.devices = DEVICES;
+    cfg.sharding.shards = shards;
+    let plane = ControlPlane::new(&cfg, PatsScheduler::from_config);
+    let deadline = SimTime::ZERO + cfg.frame_deadline();
+    let mut jobs = vec![Vec::new(); shards];
+    for d in 0..DEVICES as u32 {
+        jobs[plane.home_shard(DeviceId(d))].push(LpJob {
+            frame: FrameId(d as u64),
+            source: DeviceId(d),
+            n: 2,
+            deadline,
+            now: SimTime::ZERO,
+        });
+    }
+    (plane, jobs)
+}
+
+/// A plane whose calendars already hold one admitted request per device —
+/// the occupancy a mid-experiment decision sees.
+fn loaded_plane(shards: usize) -> (ControlPlane<PatsScheduler>, SimTime) {
+    let (mut plane, jobs) = plane_and_jobs(shards);
+    plane.lp_sweep(&jobs, false);
+    let cfg = SystemConfig::default();
+    (plane, SimTime::ZERO + cfg.frame_deadline())
+}
+
+fn show(results: &mut Vec<BenchResult>, r: BenchResult) {
+    println!("{}", r.render());
+    results.push(r);
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let shard_counts = [1usize, 2, 4, 8];
+
+    section("end-to-end decision sweep at 1024 devices: serial vs scoped threads");
+    for &k in &shard_counts {
+        let r = bench_with_setup(
+            &format!("sweep_serial/devices={DEVICES}/shards={k}"),
+            1,
+            8,
+            || plane_and_jobs(k),
+            |(mut plane, jobs)| plane.lp_sweep(&jobs, false).len(),
+        );
+        show(&mut results, r);
+        let r = bench_with_setup(
+            &format!("sweep_parallel/devices={DEVICES}/shards={k}"),
+            1,
+            8,
+            || plane_and_jobs(k),
+            |(mut plane, jobs)| plane.lp_sweep(&jobs, true).len(),
+        );
+        show(&mut results, r);
+    }
+
+    section("per-decision cost on a loaded plane (one admission, shard-local calendar)");
+    for &k in &shard_counts {
+        let r = bench_with_setup(
+            &format!("admit_after_sweep/devices={DEVICES}/shards={k}"),
+            1,
+            20,
+            || loaded_plane(k),
+            |(mut plane, deadline)| {
+                // One more request on an already-occupied fleet: the
+                // admission's link-message and completion-point searches
+                // run against the shard-local partition only.
+                let (_, _, out) = plane.handle_lp_request(
+                    FrameId(9_999),
+                    DeviceId(7),
+                    2,
+                    deadline,
+                    SimTime::ZERO,
+                );
+                out.placements.len()
+            },
+        );
+        show(&mut results, r);
+    }
+
+    match write_json("shards", &results) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench JSON: {e}"),
+    }
+}

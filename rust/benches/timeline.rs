@@ -103,6 +103,37 @@ fn main() {
         show(&mut results, r);
     }
 
+    // The gap index's documented worst case (KNOWN_ISSUES §gap index):
+    // gaps whose length shares the request's ⌊log₂⌋ bucket but still does
+    // not fit must be length-checked one by one, degrading toward a scan
+    // of that bucket. Here every interior gap is 1.2 ms against a 1.5 ms
+    // request (same class-10 bucket, 1024..2047 µs), so `earliest_fit`
+    // walks all of them before settling on the trailing gap — this case
+    // tracks the degradation across commits instead of leaving it
+    // anecdotal.
+    section("gap index: ambiguous length bucket (documented worst case)");
+    for n in [100usize, 1_000, 10_000] {
+        let mut tl = Timeline::new();
+        for i in 0..n {
+            // 800 µs slots at a 2 ms stride: every interior gap is 1.2 ms.
+            tl.reserve(
+                SimTime::from_micros(2_000 * i as u64),
+                SimDuration::from_micros(800),
+                SlotKind::StateUpdate,
+                TaskId(i as u64),
+            )
+            .unwrap();
+        }
+        let r = bench_with_setup(
+            &format!("ambiguous_bucket/gaps={n}"),
+            20,
+            1_000,
+            || (),
+            |_| tl.earliest_fit(SimTime::ZERO, SimDuration::from_micros(1_500)),
+        );
+        show(&mut results, r);
+    }
+
     section("core timeline: fits / preemption candidates / completion points");
     for n in [8usize, 64, 512] {
         let ct = filled_cores(n);

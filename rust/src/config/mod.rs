@@ -178,6 +178,33 @@ impl DynamicsConfig {
     }
 }
 
+/// Sharded-control-plane shaping (`[sharding]`), consumed by
+/// [`crate::shard::ControlPlane`], `experiments::shard_scale`, and the
+/// `pats shards` subcommand.
+///
+/// The paper's controller is one serial job queue; sharding partitions the
+/// fleet into `shards` shard-local controllers behind a router
+/// (extension beyond the paper). The default `shards = 1` is the paper's
+/// single controller and is bit-identical to the unsharded behaviour.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardingConfig {
+    /// Number of shard-local controllers the fleet is partitioned into.
+    /// 1 = the paper's single controller (bit-identical default).
+    pub shards: usize,
+    /// Maximum sibling shards probed (nearest-first) when the home shard
+    /// cannot admit a low-priority request before its deadline. 0 disables
+    /// cross-shard spill entirely.
+    pub spill_fanout: usize,
+    /// Shard counts for the `pats shards` sweep.
+    pub sweep_shards: Vec<usize>,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        ShardingConfig { shards: 1, spill_fanout: 2, sweep_shards: vec![1, 2, 4, 8] }
+    }
+}
+
 /// Complete system configuration. Paper defaults throughout.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -303,6 +330,10 @@ pub struct SystemConfig {
     // ---- multi-fidelity inference ----
     /// Model-variant catalog + degradation gating (`[fidelity]`).
     pub fidelity: FidelityConfig,
+
+    // ---- sharded control plane ----
+    /// Control-plane partitioning (`[sharding]`).
+    pub sharding: ShardingConfig,
 }
 
 impl Default for SystemConfig {
@@ -345,6 +376,7 @@ impl Default for SystemConfig {
             fleet: FleetConfig::default(),
             dynamics: DynamicsConfig::default(),
             fidelity: FidelityConfig::default(),
+            sharding: ShardingConfig::default(),
         }
     }
 }
@@ -423,6 +455,9 @@ impl SystemConfig {
             "fidelity.lp_time_factors",
             "fidelity.lp_transfer_factors",
             "fidelity.lp_accuracies",
+            "sharding.shards",
+            "sharding.spill_fanout",
+            "sharding.sweep_shards",
         ];
         for key in doc.keys() {
             if !KNOWN.contains(&key) {
@@ -675,6 +710,29 @@ impl SystemConfig {
             hp: variant_list(doc, "hp", &cfg.fidelity.catalog.hp)?,
             lp: variant_list(doc, "lp", &cfg.fidelity.catalog.lp)?,
         };
+        if let Some(v) = doc.get_i64("sharding.shards") {
+            if v < 1 {
+                return Err(Error::Config(format!("sharding.shards must be >= 1, got {v}")));
+            }
+            cfg.sharding.shards = v as usize;
+        }
+        if let Some(v) = doc.get_i64("sharding.spill_fanout") {
+            if v < 0 {
+                return Err(Error::Config(format!(
+                    "sharding.spill_fanout must be >= 0, got {v}"
+                )));
+            }
+            cfg.sharding.spill_fanout = v as usize;
+        }
+        if let Some(v) = doc.get("sharding.sweep_shards").and_then(|v| v.as_arr()) {
+            let counts: Option<Vec<usize>> = v
+                .iter()
+                .map(|x| x.as_i64().filter(|&n| n > 0).map(|n| n as usize))
+                .collect();
+            cfg.sharding.sweep_shards = counts.ok_or_else(|| {
+                Error::Config("sharding.sweep_shards must be positive integers".into())
+            })?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -780,6 +838,22 @@ impl SystemConfig {
             ));
         }
         self.fidelity.validate()?;
+        let sh = &self.sharding;
+        if sh.shards == 0 {
+            return Err(Error::Config("sharding.shards must be >= 1".into()));
+        }
+        if sh.shards > self.devices {
+            return Err(Error::Config(format!(
+                "sharding.shards ({}) must not exceed topology.devices ({}) — \
+                 every shard must own at least one device",
+                sh.shards, self.devices
+            )));
+        }
+        if sh.sweep_shards.is_empty() || sh.sweep_shards.contains(&0) {
+            return Err(Error::Config(
+                "sharding.sweep_shards must be a non-empty list of positive shard counts".into(),
+            ));
+        }
         Ok(())
     }
 
@@ -1094,6 +1168,52 @@ hp_accuracies = [1.0, 0.95]
             "[fidelity]\nmode = \"sometimes\"",
             "[fidelity]\ncycles = 0",
             "[fidelity]\ncrash_pct = 300",
+        ] {
+            let doc = crate::util::toml::Document::parse(snippet).unwrap();
+            assert!(SystemConfig::from_document(&doc).is_err(), "accepted {snippet:?}");
+        }
+    }
+
+    #[test]
+    fn sharding_defaults_and_overrides() {
+        let c = SystemConfig::default();
+        assert_eq!(c.sharding.shards, 1, "the paper's single controller");
+        assert_eq!(c.sharding.spill_fanout, 2);
+        assert_eq!(c.sharding.sweep_shards, vec![1, 2, 4, 8]);
+        assert!(c.validate().is_ok());
+
+        let doc = crate::util::toml::Document::parse(
+            r#"
+[topology]
+devices = 64
+[sharding]
+shards = 4
+spill_fanout = 3
+sweep_shards = [1, 4, 16]
+"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_document(&doc).unwrap();
+        assert_eq!(c.sharding.shards, 4);
+        assert_eq!(c.sharding.spill_fanout, 3);
+        assert_eq!(c.sharding.sweep_shards, vec![1, 4, 16]);
+    }
+
+    #[test]
+    fn invalid_sharding_configs_rejected() {
+        // More shards than devices: some shard would own no devices.
+        let mut c = SystemConfig::default();
+        c.sharding.shards = 8; // default topology has 4 devices
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.sharding.sweep_shards = vec![];
+        assert!(c.validate().is_err());
+        for snippet in [
+            "[sharding]\nshards = 0",
+            "[sharding]\nshards = -2",
+            "[sharding]\nspill_fanout = -1",
+            "[sharding]\nsweep_shards = [1, 0]",
+            "[topology]\ndevices = 4\n[sharding]\nshards = 16",
         ] {
             let doc = crate::util::toml::Document::parse(snippet).unwrap();
             assert!(SystemConfig::from_document(&doc).is_err(), "accepted {snippet:?}");

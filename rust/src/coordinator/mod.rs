@@ -14,12 +14,109 @@
 //! runner and the live `serve_cluster` example both drive it.
 
 use crate::config::SystemConfig;
+use crate::net::LinkModel;
 use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome};
-use crate::state::{DeviceHealth, NetworkState};
+use crate::shard::SpillStats;
+use crate::state::{DeviceHealth, NetworkState, TaskRecord};
 use crate::task::{
     DeviceId, FailReason, FrameId, LpRequest, Priority, RequestId, TaskId, TaskSpec,
 };
 use crate::time::{SimDuration, SimTime};
+
+/// The control-plane interface the simulation drives.
+///
+/// Implemented by the paper's single [`Controller`] and by the sharded
+/// [`crate::shard::ControlPlane`] (which routes each call to a shard-local
+/// controller). The simulation engine is generic over this trait, so a
+/// 1-shard plane can be proven bit-identical to the raw controller by
+/// running the *same* engine against both (`rust/tests/shards.rs`).
+pub trait ControlSurface {
+    /// Register and place a high-priority (stage-2) request from `source`.
+    fn handle_hp_request(
+        &mut self,
+        frame: FrameId,
+        source: DeviceId,
+        now: SimTime,
+    ) -> (TaskId, SimTime, HpOutcome);
+
+    /// Register and place a low-priority request of `n` DNN tasks.
+    fn handle_lp_request(
+        &mut self,
+        frame: FrameId,
+        source: DeviceId,
+        n: u8,
+        frame_deadline: SimTime,
+        now: SimTime,
+    ) -> (RequestId, SimTime, LpOutcome);
+
+    /// A device reported a task result (state update, §3.1).
+    fn handle_state_update(
+        &mut self,
+        task: TaskId,
+        completed: bool,
+        now: SimTime,
+    ) -> Vec<LpPlacement>;
+
+    /// The missed-state-update watchdog declared `device` failed.
+    fn handle_device_failure(&mut self, device: DeviceId, now: SimTime) -> RescueOutcome;
+
+    /// Administrative drain of `device`.
+    fn handle_device_drain(&mut self, device: DeviceId, now: SimTime);
+
+    /// `device` (re)joins the network empty.
+    fn handle_device_rejoin(&mut self, device: DeviceId, now: SimTime);
+
+    /// Is `device` overdue on its state updates (watchdog query)?
+    fn device_overdue(&self, device: DeviceId, now: SimTime) -> bool;
+
+    /// The controller-side availability view of `device`.
+    fn device_health(&self, device: DeviceId) -> DeviceHealth;
+
+    /// Poll-loop wake-up for `device` (workstealer policies).
+    fn poll(&mut self, device: DeviceId, now: SimTime) -> Vec<LpPlacement>;
+
+    /// Poll period in seconds, if the policy wants periodic wake-ups.
+    fn poll_interval(&self) -> Option<f64>;
+
+    /// Look up one task's record, wherever it is registered.
+    fn task(&self, id: TaskId) -> Option<&TaskRecord>;
+
+    /// Look up one request, wherever it is registered.
+    fn request(&self, id: RequestId) -> Option<&LpRequest>;
+
+    /// Terminal failure bookkeeping for `id`.
+    fn fail_task(&mut self, id: TaskId, reason: FailReason, now: SimTime);
+
+    /// Forget finished bookkeeping older than `t` on every resource.
+    fn prune_before(&mut self, t: SimTime);
+
+    /// The link model governing the partition that hosts `task` (the
+    /// single shared link for the raw controller).
+    fn link_model_of(&self, task: TaskId) -> &LinkModel;
+
+    /// Apply (or lift) a link-throughput degradation to every partition.
+    fn set_link_degradation(&mut self, factor: f64);
+
+    /// Ids of every registered task not yet in a terminal state
+    /// (end-of-run accounting), in arbitrary order.
+    fn nonterminal_task_ids(&self) -> Vec<TaskId>;
+
+    /// Every registered task record across every partition, in arbitrary
+    /// order (finalize-time census; counters folded over this must be
+    /// order-independent).
+    fn task_records(&self) -> Vec<&TaskRecord>;
+
+    /// Every registered request across every partition, ascending by id
+    /// (float summaries folded over requests are order-sensitive in their
+    /// last bits, so the order is part of the contract).
+    fn requests_by_id(&self) -> Vec<&LpRequest>;
+
+    /// Cross-shard spill counters (all-zero for the raw controller).
+    fn spill_stats(&self) -> SpillStats;
+
+    /// Canonical dump of the observable state (equivalence assertions).
+    fn fingerprint(&self) -> String;
+}
 
 /// Job priority classes in the controller queue: high-priority requests
 /// overtake queued low-priority work of the same arrival window.
@@ -242,6 +339,115 @@ impl<P: Policy> Controller<P> {
     /// Is `device` overdue on its state updates (watchdog query)?
     pub fn device_overdue(&self, device: DeviceId, now: SimTime) -> bool {
         self.detector.is_overdue(device, now)
+    }
+}
+
+impl<P: Policy> ControlSurface for Controller<P> {
+    fn handle_hp_request(
+        &mut self,
+        frame: FrameId,
+        source: DeviceId,
+        now: SimTime,
+    ) -> (TaskId, SimTime, HpOutcome) {
+        Controller::handle_hp_request(self, frame, source, now)
+    }
+
+    fn handle_lp_request(
+        &mut self,
+        frame: FrameId,
+        source: DeviceId,
+        n: u8,
+        frame_deadline: SimTime,
+        now: SimTime,
+    ) -> (RequestId, SimTime, LpOutcome) {
+        Controller::handle_lp_request(self, frame, source, n, frame_deadline, now)
+    }
+
+    fn handle_state_update(
+        &mut self,
+        task: TaskId,
+        completed: bool,
+        now: SimTime,
+    ) -> Vec<LpPlacement> {
+        Controller::handle_state_update(self, task, completed, now)
+    }
+
+    fn handle_device_failure(&mut self, device: DeviceId, now: SimTime) -> RescueOutcome {
+        Controller::handle_device_failure(self, device, now)
+    }
+
+    fn handle_device_drain(&mut self, device: DeviceId, now: SimTime) {
+        Controller::handle_device_drain(self, device, now);
+    }
+
+    fn handle_device_rejoin(&mut self, device: DeviceId, now: SimTime) {
+        Controller::handle_device_rejoin(self, device, now);
+    }
+
+    fn device_overdue(&self, device: DeviceId, now: SimTime) -> bool {
+        Controller::device_overdue(self, device, now)
+    }
+
+    fn device_health(&self, device: DeviceId) -> DeviceHealth {
+        self.state.device_health(device)
+    }
+
+    fn poll(&mut self, device: DeviceId, now: SimTime) -> Vec<LpPlacement> {
+        self.policy.poll(&mut self.state, &self.cfg, device, now)
+    }
+
+    fn poll_interval(&self) -> Option<f64> {
+        self.policy.poll_interval()
+    }
+
+    fn task(&self, id: TaskId) -> Option<&TaskRecord> {
+        self.state.task(id)
+    }
+
+    fn request(&self, id: RequestId) -> Option<&LpRequest> {
+        self.state.request(id)
+    }
+
+    fn fail_task(&mut self, id: TaskId, reason: FailReason, now: SimTime) {
+        self.state.fail_task(id, reason, now);
+    }
+
+    fn prune_before(&mut self, t: SimTime) {
+        self.state.prune_before(t);
+    }
+
+    fn link_model_of(&self, _task: TaskId) -> &LinkModel {
+        &self.state.link_model
+    }
+
+    fn set_link_degradation(&mut self, factor: f64) {
+        self.state.link_model.set_degradation(factor);
+    }
+
+    fn nonterminal_task_ids(&self) -> Vec<TaskId> {
+        self.state
+            .tasks()
+            .filter(|r| !r.state.is_terminal())
+            .map(|r| r.spec.id)
+            .collect()
+    }
+
+    fn task_records(&self) -> Vec<&TaskRecord> {
+        self.state.tasks().collect()
+    }
+
+    fn requests_by_id(&self) -> Vec<&LpRequest> {
+        let mut v: Vec<&LpRequest> = self.state.requests().collect();
+        v.sort_unstable_by_key(|r| r.id);
+        v
+    }
+
+    fn spill_stats(&self) -> SpillStats {
+        SpillStats::default()
+    }
+
+    fn fingerprint(&self) -> String {
+        self.state.fingerprint()
     }
 }
 

@@ -34,7 +34,13 @@
 //!   construction).
 //! * [`workstealer`] — centralised and decentralised baselines (± preemption).
 //! * [`coordinator`] — the controller: job queue, message processing,
-//!   master–worker orchestration.
+//!   master–worker orchestration, and the [`coordinator::ControlSurface`]
+//!   interface the simulation drives.
+//! * [`shard`] — the sharded control plane (beyond the paper): K
+//!   shard-local controllers behind a router, with cross-shard spill for
+//!   unadmittable low-priority requests and scoped-thread parallel
+//!   decision sweeps. `sharding.shards = 1` (default) is bit-identical to
+//!   the single controller.
 //! * [`device`] — edge-device model: inference managers, violations.
 //! * [`pipeline`] — the three-stage waste-classification pipeline lifecycle.
 //! * [`trace`] — trace-file workload format and generators, including the
@@ -79,6 +85,7 @@ pub mod pipeline;
 pub mod resources;
 pub mod runtime;
 pub mod scheduler;
+pub mod shard;
 pub mod sim;
 pub mod state;
 pub mod task;

@@ -11,6 +11,10 @@
 //! * `fidelity`    — multi-fidelity sweep: same workload under the four
 //!   degradation policies (off / admission / admission+preemption / full),
 //!   reporting frames saved and their accuracy cost (beyond the paper).
+//! * `shards`      — sharded-control-plane sweep: the identical hotspot
+//!   workload at growing shard counts, reporting completion, spill
+//!   counters, and the scoped-thread decision-phase speedup (beyond the
+//!   paper).
 //! * `trace-gen`   — generate a workload trace file.
 //! * `check`       — load the AOT artifacts and run one frame end-to-end
 //!   through the three-stage pipeline (PJRT smoke test).
@@ -39,6 +43,8 @@ USAGE:
              [--config FILE] [--out DIR]
   pats fidelity [--sizes N,N,...] [--cycles N] [--crash-pct P] [--seed S]
              [--config FILE] [--out DIR]
+  pats shards [--devices N] [--cycles N] [--shard-counts K,K,...]
+             [--spill-fanout F] [--seed S] [--config FILE] [--out DIR]
   pats trace-gen --dist DIST [--frames N] [--seed S] [--out FILE]
   pats check [--artifacts DIR]
 
@@ -67,6 +73,7 @@ fn main() -> ExitCode {
         Some("fleet") => cmd_fleet(&args),
         Some("churn") => cmd_churn(&args),
         Some("fidelity") => cmd_fidelity(&args),
+        Some("shards") => cmd_shards(&args),
         Some("trace-gen") => cmd_trace_gen(&args),
         Some("check") => cmd_check(&args),
         Some(other) => Err(format!("unknown subcommand {other:?}\n{USAGE}")),
@@ -294,6 +301,70 @@ fn cmd_fidelity(args: &Args) -> Result<(), String> {
     std::fs::write(
         &json,
         pats::experiments::fidelity_json(&rows).to_string_pretty(),
+    )
+    .map_err(|e| e.to_string())?;
+    eprintln!("wrote {} and {}", md.display(), json.display());
+    Ok(())
+}
+
+fn cmd_shards(args: &Args) -> Result<(), String> {
+    let mut cfg = base_config(args)?;
+    // The default 4-device paper topology has nothing to shard; the sweep
+    // wants a fleet. 256 devices keeps a laptop run comfortable — the
+    // 1024-device numbers live in `cargo bench --bench shards`.
+    cfg.devices = match args.opt("devices") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| format!("bad --devices value {v:?}"))?,
+        None => 256,
+    };
+    if let Some(v) = args.opt("cycles") {
+        cfg.fleet.cycles = v
+            .parse::<usize>()
+            .map_err(|_| format!("bad --cycles value {v:?}"))?;
+    }
+    if let Some(v) = args.opt("spill-fanout") {
+        cfg.sharding.spill_fanout = v
+            .parse::<usize>()
+            .map_err(|_| format!("bad --spill-fanout value {v:?}"))?;
+    }
+    let counts: Vec<usize> = match args.opt("shard-counts") {
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad --shard-counts entry {s:?}"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => cfg.sharding.sweep_shards.clone(),
+    };
+    if counts.is_empty() || counts.iter().any(|&k| k == 0 || k > cfg.devices) {
+        return Err(format!(
+            "--shard-counts must be positive and at most the device count ({})",
+            cfg.devices
+        ));
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+    eprintln!(
+        "running the shard sweep: {} devices × {} cycles at {counts:?} shards \
+         (spill fan-out {}) ...",
+        cfg.devices, cfg.fleet.cycles, cfg.sharding.spill_fanout
+    );
+    let t0 = std::time::Instant::now();
+    let rows = pats::experiments::shard_scale(&cfg, &counts);
+    let sweeps = pats::experiments::shard_decision_sweep(&cfg, &counts);
+    eprintln!("done in {:.2?}", t0.elapsed());
+    let table = pats::experiments::shard_scale_table(&rows, &sweeps);
+    println!("{table}");
+    let out_dir = PathBuf::from(args.opt_str("out", "results"));
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+    let md = out_dir.join("shards.md");
+    std::fs::write(&md, &table).map_err(|e| e.to_string())?;
+    let json = out_dir.join("shards.json");
+    std::fs::write(
+        &json,
+        pats::experiments::shard_scale_json(&rows, &sweeps).to_string_pretty(),
     )
     .map_err(|e| e.to_string())?;
     eprintln!("wrote {} and {}", md.display(), json.display());

@@ -120,6 +120,19 @@ pub struct ScenarioMetrics {
     /// Low-priority tasks lost to churn (terminal `DeviceLost`).
     pub lp_lost_churn: u64,
 
+    // ---- sharded control plane (beyond the paper) ----
+    /// Low-priority requests admitted by a sibling shard after their home
+    /// shard could place nothing before the deadline.
+    pub lp_requests_spilled: u64,
+    /// Low-priority tasks placed across a shard boundary by those spills.
+    pub lp_tasks_spilled: u64,
+    /// Sibling-shard probes performed (bounded per request by
+    /// `sharding.spill_fanout`).
+    pub lp_spill_attempts: u64,
+    /// Spilled requests no probed sibling could host — returned home
+    /// unplaced.
+    pub lp_spill_returned: u64,
+
     // ---- multi-fidelity degradation (beyond the paper) ----
     /// High-priority tasks admitted at a degraded model variant (the §4
     /// admission — and its preemption retry — could not place the full
@@ -231,6 +244,11 @@ impl ScenarioMetrics {
     /// Fig 6: offloaded low-priority completion percentage.
     pub fn lp_offloaded_completion_pct(&self) -> f64 {
         pct(self.lp_offloaded_completed, self.lp_offloaded)
+    }
+
+    /// True when this run performed any cross-shard spill traffic.
+    pub fn saw_spill(&self) -> bool {
+        self.lp_spill_attempts > 0
     }
 
     /// Total degraded placements committed, across every degradation path.
@@ -353,6 +371,14 @@ impl ScenarioMetrics {
                     .with("lp_lost_churn", self.lp_lost_churn),
             )
             .with(
+                "sharding",
+                Json::obj()
+                    .with("lp_requests_spilled", self.lp_requests_spilled)
+                    .with("lp_tasks_spilled", self.lp_tasks_spilled)
+                    .with("lp_spill_attempts", self.lp_spill_attempts)
+                    .with("lp_spill_returned", self.lp_spill_returned),
+            )
+            .with(
                 "fidelity",
                 Json::obj()
                     .with("degraded_hp_admission", self.degraded_hp_admission)
@@ -418,6 +444,16 @@ impl ScenarioMetrics {
                 lq = self.lp_requeued_churn,
                 ll = self.lp_lost_churn,
                 fl = self.frames_lost_churn,
+            );
+        }
+        if self.saw_spill() {
+            let _ = write!(
+                line,
+                " | spill: requests {rq} (tasks {tk}) attempts {at} returned {rt}",
+                rq = self.lp_requests_spilled,
+                tk = self.lp_tasks_spilled,
+                at = self.lp_spill_attempts,
+                rt = self.lp_spill_returned,
             );
         }
         if self.saw_degradation() {
@@ -496,7 +532,7 @@ mod tests {
         let j = m.to_json();
         for key in [
             "label", "frames", "hp", "lp", "preemption", "core_alloc", "latency_ms", "dynamics",
-            "fidelity",
+            "sharding", "fidelity",
         ] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
@@ -532,6 +568,30 @@ mod tests {
         assert_eq!(
             fid.get("frames_completed_degraded").and_then(Json::as_f64),
             Some(2.0)
+        );
+    }
+
+    #[test]
+    fn spill_summary_only_rendered_when_spill_happened() {
+        let mut m = ScenarioMetrics::new("SHARD");
+        assert!(!m.saw_spill());
+        assert!(!m.render_text().contains("spill"));
+        m.lp_spill_attempts = 3;
+        m.lp_requests_spilled = 2;
+        m.lp_tasks_spilled = 5;
+        m.lp_spill_returned = 1;
+        assert!(m.saw_spill());
+        let text = m.render_text();
+        assert!(text.contains("spill"), "{text}");
+        let j = m.to_json();
+        let sharding = j.get("sharding").unwrap();
+        assert_eq!(
+            sharding.get("lp_requests_spilled").and_then(Json::as_f64),
+            Some(2.0)
+        );
+        assert_eq!(
+            sharding.get("lp_spill_returned").and_then(Json::as_f64),
+            Some(1.0)
         );
     }
 

@@ -41,6 +41,12 @@ pub struct LinkModel {
     /// Scales both reservation sizing and sampled transfers — the model is
     /// that the physical link slowed down *and* the estimator tracked it.
     degradation: f64,
+    /// Static capacity fraction this model owns of the physically shared
+    /// medium (sharded-control-plane extension): each of K shards gets a
+    /// 1/K slice, so the plane never models more aggregate bandwidth than
+    /// the one 802.11n link provides. 1.0 = the whole link (unsharded
+    /// default). Fixed at plane construction; composes with `degradation`.
+    partition: f64,
 }
 
 impl LinkModel {
@@ -50,7 +56,24 @@ impl LinkModel {
             tracker: BandwidthTracker::new(cfg),
             jitter_frac: cfg.jitter_frac,
             degradation: 1.0,
+            partition: 1.0,
         }
+    }
+
+    /// Restrict this model to a static `fraction` of the shared medium's
+    /// capacity (sharded control plane: 1/K per shard). Multiplying by the
+    /// default 1.0 is exact, so an unsharded model is bit-identical.
+    pub fn set_partition(&mut self, fraction: f64) {
+        assert!(
+            fraction > 0.0 && fraction <= 1.0,
+            "link partition fraction {fraction}"
+        );
+        self.partition = fraction;
+    }
+
+    /// The static capacity fraction this model owns.
+    pub fn partition(&self) -> f64 {
+        self.partition
     }
 
     /// Apply (or lift, with `factor == 1.0`) a link-throughput degradation.
@@ -66,7 +89,9 @@ impl LinkModel {
 
     /// Raw (unpadded) expected transfer duration for `bytes`.
     pub fn raw_duration(&self, bytes: u64) -> SimDuration {
-        SimDuration::from_secs_f64(bytes as f64 / (self.tracker.estimate_bps() * self.degradation))
+        SimDuration::from_secs_f64(
+            bytes as f64 / (self.tracker.estimate_bps() * self.degradation * self.partition),
+        )
     }
 
     /// Slot duration the controller reserves: expected time plus jitter
@@ -96,9 +121,10 @@ impl LinkModel {
         self.tracker.observe(bytes, took);
     }
 
-    /// Current estimate, bytes/sec (after any active degradation).
+    /// Current estimate, bytes/sec (after any active degradation and the
+    /// static capacity partition).
     pub fn estimate_bps(&self) -> f64 {
-        self.tracker.estimate_bps() * self.degradation
+        self.tracker.estimate_bps() * self.degradation * self.partition
     }
 }
 
@@ -186,6 +212,27 @@ mod tests {
         assert_eq!(link.degradation(), 0.5);
         link.set_degradation(1.0);
         assert_eq!(link.slot_duration(&c, SlotKind::InputTransfer), nominal);
+    }
+
+    #[test]
+    fn partition_slices_capacity_and_composes_with_degradation() {
+        let c = cfg();
+        let mut link = LinkModel::new(&c);
+        let nominal = link.slot_duration(&c, SlotKind::InputTransfer);
+        assert_eq!(link.partition(), 1.0);
+        // A quarter of the medium ⇒ 4× the duration.
+        link.set_partition(0.25);
+        let sliced = link.slot_duration(&c, SlotKind::InputTransfer);
+        let ratio = sliced.as_secs_f64() / nominal.as_secs_f64();
+        assert!((ratio - 4.0).abs() < 1e-3, "ratio {ratio}");
+        // A degradation episode stacks on top of the static slice.
+        link.set_degradation(0.5);
+        let both = link.slot_duration(&c, SlotKind::InputTransfer);
+        let ratio = both.as_secs_f64() / nominal.as_secs_f64();
+        assert!((ratio - 8.0).abs() < 1e-3, "ratio {ratio}");
+        // Restoring the degradation leaves the partition in force.
+        link.set_degradation(1.0);
+        assert_eq!(link.slot_duration(&c, SlotKind::InputTransfer), sliced);
     }
 
     #[test]

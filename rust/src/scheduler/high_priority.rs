@@ -46,7 +46,12 @@ pub fn allocate(
     let mut plan = PlacementPlan::new(st);
     if let Some(window) = stage_allocation(&mut plan, st, cfg, task, now) {
         st.apply(plan).expect("freshly staged high-priority plan");
-        return HpOutcome { window: Some(window), preemption: None, search: t0.elapsed() };
+        return HpOutcome {
+            window: Some(window),
+            preemption: None,
+            requeued_via_mirror: 0,
+            search: t0.elapsed(),
+        };
     }
     // The failed plan is dropped here — nothing reached the network state.
     let search = t0.elapsed(); // Fig 9a measures the failed initial search
@@ -56,7 +61,7 @@ pub fn allocate(
         // committing the first plan whose eviction makes the retry succeed.
         let (window, report) = preemption::preempt_and_retry(sched, st, cfg, task, now);
         if window.is_some() {
-            return HpOutcome { window, preemption: report, search };
+            return HpOutcome { window, preemption: report, requeued_via_mirror: 0, search };
         }
     }
     // Multi-fidelity fallback: the full-fidelity model cannot be placed at
@@ -68,18 +73,23 @@ pub fn allocate(
             let mut plan = PlacementPlan::new(st);
             if let Some(window) = stage_allocation_at(&mut plan, st, cfg, task, now, v) {
                 st.apply(plan).expect("freshly staged degraded high-priority plan");
-                return HpOutcome { window: Some(window), preemption: None, search };
+                return HpOutcome {
+                    window: Some(window),
+                    preemption: None,
+                    requeued_via_mirror: 0,
+                    search,
+                };
             }
             if sched.preemption {
                 let (window, report) =
                     preemption::preempt_and_retry_at(sched, st, cfg, task, now, v);
                 if window.is_some() {
-                    return HpOutcome { window, preemption: report, search };
+                    return HpOutcome { window, preemption: report, requeued_via_mirror: 0, search };
                 }
             }
         }
     }
-    HpOutcome { window: None, preemption: None, search }
+    HpOutcome::unplaced(search)
 }
 
 /// One shot of the §4 algorithm at the full-fidelity model. See

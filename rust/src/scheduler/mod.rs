@@ -65,11 +65,23 @@ pub struct HpOutcome {
     pub window: Option<Window>,
     /// Set when the preemption mechanism had to fire to make room.
     pub preemption: Option<PreemptionReport>,
+    /// Of the requeues this admission performed (decentral-stealer
+    /// preemption victims), how many went to the controller-side mirror
+    /// queue because the victim's source device is dead — the last
+    /// mirror-queue route that used to go unmetered (see KNOWN_ISSUES
+    /// §Decentral-stealer dead queues). Always 0 for the scheduler.
+    pub requeued_via_mirror: u64,
     /// Wall-clock search time of the allocation itself (Fig 9a).
     pub search: std::time::Duration,
 }
 
 impl HpOutcome {
+    /// An admission that placed nothing: no window, no preemption, no
+    /// requeues — only the wall-clock cost of the failed search.
+    pub fn unplaced(search: std::time::Duration) -> HpOutcome {
+        HpOutcome { window: None, preemption: None, requeued_via_mirror: 0, search }
+    }
+
     /// Did the high-priority task get its processing window?
     pub fn allocated(&self) -> bool {
         self.window.is_some()

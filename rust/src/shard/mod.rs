@@ -1,0 +1,833 @@
+//! Sharded control plane (beyond the paper).
+//!
+//! The paper's controller is one serial job queue over four Raspberry Pis
+//! (§5); at fleet scale every admission, preemption, and rescue would
+//! serialise on one busy-horizon and one link calendar. This module
+//! partitions the fleet into K **shards**, each owning a shard-local
+//! [`Controller`] — its own [`NetworkState`] (core calendars of the
+//! devices it owns plus its own partition of link capacity), its own
+//! busy-horizon, failure detector, and [`Policy`] instance — behind a
+//! top-level [`ControlPlane`] router:
+//!
+//! * **Home routing.** Every device has a home shard (contiguous balanced
+//!   blocks); frames, state updates, polls, drains, rejoins, and failure
+//!   detections route to the home shard of the device they concern.
+//!   Preemption and churn rescue stay entirely shard-local: the §4
+//!   algorithms run unchanged *within* a shard.
+//! * **True link partition.** The 802.11n medium is physically one link,
+//!   so each shard's [`LinkModel`] is restricted to a static 1/K capacity
+//!   slice ([`LinkModel::set_partition`]): slots on a shard's calendar are
+//!   K× longer, and the plane never models more aggregate bandwidth than
+//!   the unsharded link. The slice is static — a shard cannot borrow idle
+//!   siblings' bandwidth (no statistical multiplexing; see
+//!   KNOWN_ISSUES.md).
+//! * **Cross-shard spill.** Only when the home shard admits **nothing** of
+//!   a low-priority request before its deadline does the router probe
+//!   sibling shards, nearest-first on the shard ring, bounded by
+//!   `sharding.spill_fanout`. The pending registrations travel with the
+//!   request ([`NetworkState::unregister_task`]); the first sibling that
+//!   places anything keeps it, and a request no sibling can host returns
+//!   home unplaced. High-priority tasks never spill — the paper pins them
+//!   to their source device, which only the home shard owns.
+//! * **Shard-local state masking.** Each shard's `NetworkState` is sized
+//!   for the whole fleet (global device ids work unchanged everywhere) but
+//!   every *foreign* device is marked [`DeviceHealth::Down`] at
+//!   construction, so the unchanged §4 searches simply never consider
+//!   them. Ids stay globally unique via strided minting
+//!   ([`NetworkState::set_id_scheme`]): shard s mints `s, s+K, s+2K, …`.
+//! * **Parallel decision sweeps.** Shards share no mutable state, so batch
+//!   decision phases can run one shard per OS thread
+//!   ([`ControlPlane::lp_sweep`] on `std::thread::scope`) — the
+//!   first real wall-clock parallelism in the codebase, exercised by
+//!   `cargo bench --bench shards` (`BENCH_shards.json`) and the
+//!   `pats shards` sweep.
+//!
+//! With `sharding.shards = 1` (the default) the plane is one shard, no
+//! call can spill, and behaviour is bit-identical to driving the raw
+//! [`Controller`] — proven end-to-end by `rust/tests/shards.rs`, which
+//! runs the same simulation engine against both via
+//! [`crate::coordinator::ControlSurface`].
+
+use std::collections::HashMap;
+
+use crate::config::SystemConfig;
+use crate::coordinator::{ControlSurface, Controller};
+use crate::error::{Error, Result};
+use crate::net::LinkModel;
+use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome};
+use crate::state::{DeviceHealth, TaskRecord};
+use crate::task::{DeviceId, FailReason, FrameId, LpRequest, RequestId, TaskId};
+use crate::time::SimTime;
+
+/// Cross-shard spill counters, reported by the `pats shards` sweep and
+/// folded into [`crate::metrics::ScenarioMetrics`] at finalize.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Low-priority requests admitted by a sibling shard after their home
+    /// shard could place nothing.
+    pub requests_spilled: u64,
+    /// Low-priority tasks placed across the shard boundary by those
+    /// spills.
+    pub tasks_spilled: u64,
+    /// Sibling-shard probes performed (≥ `requests_spilled`; bounded per
+    /// request by `sharding.spill_fanout`).
+    pub spill_attempts: u64,
+    /// Spilled requests no probed sibling could host either — they return
+    /// home unplaced and fail there.
+    pub requests_returned: u64,
+}
+
+impl SpillStats {
+    /// True when any cross-shard traffic happened.
+    pub fn any(&self) -> bool {
+        self.spill_attempts > 0
+    }
+}
+
+/// One admission job of a shard-local decision sweep
+/// ([`ControlPlane::lp_sweep`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LpJob {
+    /// Frame the request belongs to.
+    pub frame: FrameId,
+    /// Source device (must be owned by the shard the job is given to).
+    pub source: DeviceId,
+    /// DNN tasks in the request (1..=4).
+    pub n: u8,
+    /// Request deadline.
+    pub deadline: SimTime,
+    /// Arrival instant.
+    pub now: SimTime,
+}
+
+/// The sharded control plane: K shard-local controllers behind a router.
+/// See the module docs for the dataflow.
+pub struct ControlPlane<P: Policy> {
+    cfg: SystemConfig,
+    shards: Vec<Controller<P>>,
+    /// Global device index → home shard.
+    home: Vec<usize>,
+    /// Task id → the shard whose registry holds it (its minting shard,
+    /// unless the request spilled).
+    task_home: HashMap<TaskId, usize>,
+    /// Request id → the shard whose registry holds it.
+    request_home: HashMap<RequestId, usize>,
+    /// Effective spill bound: min(`sharding.spill_fanout`, K − 1).
+    spill_fanout: usize,
+    spill: SpillStats,
+}
+
+impl<P: Policy> ControlPlane<P> {
+    /// Partition `cfg.devices` into `cfg.sharding.shards` shard-local
+    /// controllers, building each shard's policy with `factory` (called
+    /// once per shard with the shared configuration).
+    pub fn new(cfg: &SystemConfig, mut factory: impl FnMut(&SystemConfig) -> P) -> ControlPlane<P> {
+        let k = cfg.sharding.shards;
+        let n = cfg.devices;
+        assert!(k >= 1, "a control plane needs at least one shard");
+        assert!(
+            k <= n,
+            "sharding.shards ({k}) must not exceed the device count ({n})"
+        );
+        // Contiguous balanced blocks: device d is owned by shard ⌊d·K/N⌋.
+        let home: Vec<usize> = (0..n).map(|d| d * k / n).collect();
+        let mut shards = Vec::with_capacity(k);
+        for s in 0..k {
+            let mut shard = Controller::new(cfg.clone(), factory(cfg));
+            shard.state.set_id_scheme(s as u64, k as u64);
+            // A true capacity partition: each shard owns a static 1/K
+            // slice of the one physically shared 802.11n medium, so the
+            // plane never models more aggregate bandwidth than the
+            // unsharded link (K = 1 multiplies by exactly 1.0 —
+            // bit-identical).
+            shard.state.link_model.set_partition(1.0 / k as f64);
+            // Mask every foreign device: the unchanged §4 searches skip
+            // non-Up devices, so a shard can only ever schedule onto the
+            // devices it owns.
+            for (d, &h) in home.iter().enumerate() {
+                if h != s {
+                    shard.state.set_device_health(DeviceId(d as u32), DeviceHealth::Down);
+                }
+            }
+            shards.push(shard);
+        }
+        ControlPlane {
+            cfg: cfg.clone(),
+            shards,
+            home,
+            task_home: HashMap::new(),
+            request_home: HashMap::new(),
+            spill_fanout: cfg.sharding.spill_fanout.min(k - 1),
+            spill: SpillStats::default(),
+        }
+    }
+
+    /// Number of shards in the plane.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The home shard of `device`.
+    pub fn home_shard(&self, device: DeviceId) -> usize {
+        self.home[device.0 as usize]
+    }
+
+    /// Read access to shard `s` (tests, experiments).
+    pub fn shard(&self, s: usize) -> &Controller<P> {
+        &self.shards[s]
+    }
+
+    /// Controller jobs processed across every shard.
+    pub fn jobs_processed(&self) -> u64 {
+        self.shards.iter().map(|c| c.jobs_processed).sum()
+    }
+
+    /// Cross-shard spill counters accumulated so far.
+    pub fn spill(&self) -> SpillStats {
+        self.spill
+    }
+
+    fn shard_of_task(&self, task: TaskId) -> Option<usize> {
+        self.task_home.get(&task).copied()
+    }
+
+    /// Sibling probe order for a spill from shard `h`: nearest-first on
+    /// the shard ring (distance 1 clockwise, distance 1 counter-clockwise,
+    /// distance 2 clockwise, …), bounded by the spill fan-out. O(fan-out):
+    /// the walk stops as soon as the bound is reached, and since the
+    /// fan-out is capped at K − 1 it ends before ring distances where
+    /// clockwise and counter-clockwise neighbours could repeat — the only
+    /// collision in range is `right == left` at distance K/2, checked
+    /// directly.
+    fn spill_order(&self, h: usize) -> Vec<usize> {
+        let k = self.shards.len();
+        let mut order: Vec<usize> = Vec::with_capacity(self.spill_fanout);
+        for d in 1..k {
+            if order.len() >= self.spill_fanout {
+                break;
+            }
+            let right = (h + d) % k;
+            order.push(right);
+            if order.len() >= self.spill_fanout {
+                break;
+            }
+            let left = (h + k - d) % k;
+            if left != right {
+                order.push(left);
+            }
+        }
+        order
+    }
+
+    /// Spill an un-admitted low-priority request from its home shard `h`
+    /// to sibling shards: the pending registrations travel with it;
+    /// the first sibling that places anything keeps the request, and a
+    /// request no sibling can host returns home unplaced.
+    fn spill_lp(
+        &mut self,
+        rid: RequestId,
+        h: usize,
+        decision_t: SimTime,
+        home_out: LpOutcome,
+    ) -> (RequestId, SimTime, LpOutcome) {
+        let order = self.spill_order(h);
+        if order.is_empty() {
+            return (rid, decision_t, home_out);
+        }
+        // Withdraw the pending registrations from the home shard; they are
+        // re-registered wherever the request ends up.
+        let req = self.shards[h].state.unregister_request(rid);
+        let tasks = req.tasks.clone();
+        let specs: Vec<crate::task::TaskSpec> = tasks
+            .iter()
+            .map(|&t| self.shards[h].state.unregister_task(t))
+            .collect();
+        let mut search = home_out.search;
+        for sib in order {
+            self.spill.spill_attempts += 1;
+            for spec in &specs {
+                self.shards[sib].state.register_task(spec.clone());
+            }
+            self.shards[sib].state.register_request(req.clone());
+            // The spilled job queues on the sibling controller's serial
+            // horizon like any other job, arriving once the home decision
+            // is made.
+            let sib_t = self.shards[sib].admit(decision_t);
+            let shard = &mut self.shards[sib];
+            let out = shard.policy.allocate_lp(&mut shard.state, &self.cfg, rid, sib_t);
+            search += out.search;
+            if !out.placements.is_empty() {
+                for &t in &tasks {
+                    self.task_home.insert(t, sib);
+                }
+                self.request_home.insert(rid, sib);
+                self.spill.requests_spilled += 1;
+                self.spill.tasks_spilled += out.placements.len() as u64;
+                let outcome = LpOutcome {
+                    placements: out.placements,
+                    unallocated: out.unallocated,
+                    search,
+                };
+                return (rid, sib_t, outcome);
+            }
+            // Nothing placed here either: the request moves on.
+            for &t in &tasks {
+                self.shards[sib].state.unregister_task(t);
+            }
+            self.shards[sib].state.unregister_request(rid);
+        }
+        // Every probe failed: the request returns home unplaced (its tasks
+        // fail there, exactly like an unsharded failed admission).
+        for spec in specs {
+            self.shards[h].state.register_task(spec);
+        }
+        self.shards[h].state.register_request(req);
+        self.spill.requests_returned += 1;
+        let outcome = LpOutcome { placements: Vec::new(), unallocated: tasks, search };
+        (rid, decision_t, outcome)
+    }
+
+    /// Run one batch of shard-local low-priority admissions per shard —
+    /// serially in shard order, or one shard per OS thread
+    /// (`std::thread::scope`) when `parallel` is set. Sound because shards
+    /// share no mutable state: each thread owns one `&mut Controller`.
+    /// Cross-shard spill deliberately does not apply here — a decision
+    /// sweep is the *shard-local* phase; spill is a router decision that
+    /// serialises between sweeps.
+    ///
+    /// Every job must be homed correctly: `jobs[s]` may only name source
+    /// devices owned by shard `s` (asserted in debug builds).
+    ///
+    /// Returns the per-shard `(request id, outcome)` lists in shard order.
+    pub fn lp_sweep(
+        &mut self,
+        jobs: &[Vec<LpJob>],
+        parallel: bool,
+    ) -> Vec<Vec<(RequestId, LpOutcome)>>
+    where
+        P: Send,
+    {
+        assert_eq!(jobs.len(), self.shards.len(), "one job batch per shard");
+        if cfg!(debug_assertions) {
+            for (s, batch) in jobs.iter().enumerate() {
+                for j in batch {
+                    debug_assert_eq!(
+                        self.home[j.source.0 as usize], s,
+                        "job sourced at {} handed to shard {s}, home is {}",
+                        j.source, self.home[j.source.0 as usize]
+                    );
+                }
+            }
+        }
+        fn run_batch<P: Policy>(
+            shard: &mut Controller<P>,
+            batch: &[LpJob],
+        ) -> Vec<(RequestId, LpOutcome)> {
+            batch
+                .iter()
+                .map(|j| {
+                    let (rid, _, out) =
+                        shard.handle_lp_request(j.frame, j.source, j.n, j.deadline, j.now);
+                    (rid, out)
+                })
+                .collect()
+        }
+        let results: Vec<Vec<(RequestId, LpOutcome)>> = if parallel {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter_mut()
+                    .zip(jobs)
+                    .map(|(shard, batch)| scope.spawn(move || run_batch(shard, batch)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|handle| handle.join().expect("shard sweep thread panicked"))
+                    .collect()
+            })
+        } else {
+            self.shards
+                .iter_mut()
+                .zip(jobs)
+                .map(|(shard, batch)| run_batch(shard, batch))
+                .collect()
+        };
+        // Fold the minted ids back into the router's home maps so the
+        // plane stays routable after a sweep.
+        for (s, batch) in results.iter().enumerate() {
+            for (rid, _) in batch {
+                self.request_home.insert(*rid, s);
+                if let Some(req) = self.shards[s].state.request(*rid) {
+                    for t in req.tasks.clone() {
+                        self.task_home.insert(t, s);
+                    }
+                }
+            }
+        }
+        results
+    }
+
+    /// Check every shard's state invariants plus the plane's own: each
+    /// task and request is registered in exactly one shard, that shard is
+    /// the one the router maps it to, and a request's tasks are colocated
+    /// with it — the "no frame lost or double-counted across spill
+    /// boundaries" property.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut task_seen: HashMap<TaskId, usize> = HashMap::new();
+        let mut req_seen: HashMap<RequestId, usize> = HashMap::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            shard.state.check_invariants()?;
+            for rec in shard.state.tasks() {
+                let id = rec.spec.id;
+                if let Some(prev) = task_seen.insert(id, s) {
+                    return Err(Error::Invariant(format!(
+                        "{id:?} registered in shards {prev} and {s}"
+                    )));
+                }
+                if self.task_home.get(&id) != Some(&s) {
+                    return Err(Error::Invariant(format!(
+                        "{id:?} lives in shard {s} but routes to {:?}",
+                        self.task_home.get(&id)
+                    )));
+                }
+            }
+            for req in shard.state.requests() {
+                if let Some(prev) = req_seen.insert(req.id, s) {
+                    return Err(Error::Invariant(format!(
+                        "{:?} registered in shards {prev} and {s}",
+                        req.id
+                    )));
+                }
+                if self.request_home.get(&req.id) != Some(&s) {
+                    return Err(Error::Invariant(format!(
+                        "{:?} lives in shard {s} but routes to {:?}",
+                        req.id,
+                        self.request_home.get(&req.id)
+                    )));
+                }
+                for t in &req.tasks {
+                    if shard.state.task(*t).is_none() {
+                        return Err(Error::Invariant(format!(
+                            "{:?} in shard {s} but its task {t:?} is not",
+                            req.id
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<P: Policy> ControlSurface for ControlPlane<P> {
+    fn handle_hp_request(
+        &mut self,
+        frame: FrameId,
+        source: DeviceId,
+        now: SimTime,
+    ) -> (TaskId, SimTime, HpOutcome) {
+        // High-priority tasks are pinned to their source device (§3.1), so
+        // they never spill: only the home shard owns that device.
+        let h = self.home_shard(source);
+        let (id, t, out) = self.shards[h].handle_hp_request(frame, source, now);
+        self.task_home.insert(id, h);
+        (id, t, out)
+    }
+
+    fn handle_lp_request(
+        &mut self,
+        frame: FrameId,
+        source: DeviceId,
+        n: u8,
+        frame_deadline: SimTime,
+        now: SimTime,
+    ) -> (RequestId, SimTime, LpOutcome) {
+        let h = self.home_shard(source);
+        let (rid, decision_t, out) =
+            self.shards[h].handle_lp_request(frame, source, n, frame_deadline, now);
+        self.request_home.insert(rid, h);
+        for t in self.shards[h].state.request(rid).expect("just registered").tasks.clone() {
+            self.task_home.insert(t, h);
+        }
+        // Spill only when the home shard placed *nothing* (a partial home
+        // admission keeps the request: its placements cannot move). A
+        // policy that defers placement (the workstealers report no
+        // unallocated tasks at admission) never spills.
+        if self.spill_fanout > 0 && out.placements.is_empty() && !out.unallocated.is_empty() {
+            return self.spill_lp(rid, h, decision_t, out);
+        }
+        (rid, decision_t, out)
+    }
+
+    fn handle_state_update(
+        &mut self,
+        task: TaskId,
+        completed: bool,
+        now: SimTime,
+    ) -> Vec<LpPlacement> {
+        let s = self.shard_of_task(task).expect("state update for unrouted task");
+        self.shards[s].handle_state_update(task, completed, now)
+    }
+
+    fn handle_device_failure(&mut self, device: DeviceId, now: SimTime) -> RescueOutcome {
+        // Failure detection, reclamation, and rescue stay shard-local:
+        // every task placed on `device` is registered in its home shard.
+        let h = self.home_shard(device);
+        self.shards[h].handle_device_failure(device, now)
+    }
+
+    fn handle_device_drain(&mut self, device: DeviceId, now: SimTime) {
+        let h = self.home_shard(device);
+        self.shards[h].handle_device_drain(device, now);
+    }
+
+    fn handle_device_rejoin(&mut self, device: DeviceId, now: SimTime) {
+        let h = self.home_shard(device);
+        self.shards[h].handle_device_rejoin(device, now);
+    }
+
+    fn device_overdue(&self, device: DeviceId, now: SimTime) -> bool {
+        self.shards[self.home_shard(device)].device_overdue(device, now)
+    }
+
+    fn device_health(&self, device: DeviceId) -> DeviceHealth {
+        self.shards[self.home_shard(device)].state.device_health(device)
+    }
+
+    fn poll(&mut self, device: DeviceId, now: SimTime) -> Vec<LpPlacement> {
+        let h = self.home_shard(device);
+        let shard = &mut self.shards[h];
+        shard.policy.poll(&mut shard.state, &self.cfg, device, now)
+    }
+
+    fn poll_interval(&self) -> Option<f64> {
+        self.shards[0].policy.poll_interval()
+    }
+
+    fn task(&self, id: TaskId) -> Option<&TaskRecord> {
+        self.shard_of_task(id).and_then(|s| self.shards[s].state.task(id))
+    }
+
+    fn request(&self, id: RequestId) -> Option<&LpRequest> {
+        self.request_home
+            .get(&id)
+            .and_then(|&s| self.shards[s].state.request(id))
+    }
+
+    fn fail_task(&mut self, id: TaskId, reason: FailReason, now: SimTime) {
+        if let Some(s) = self.shard_of_task(id) {
+            self.shards[s].state.fail_task(id, reason, now);
+        }
+    }
+
+    fn prune_before(&mut self, t: SimTime) {
+        for shard in &mut self.shards {
+            shard.state.prune_before(t);
+        }
+    }
+
+    fn link_model_of(&self, task: TaskId) -> &LinkModel {
+        // A task's traffic rides its hosting shard's link partition.
+        let s = self.shard_of_task(task).expect("link model for unrouted task");
+        &self.shards[s].state.link_model
+    }
+
+    fn set_link_degradation(&mut self, factor: f64) {
+        // The physical medium is shared: a degradation episode hits every
+        // shard's partition alike.
+        for shard in &mut self.shards {
+            shard.state.link_model.set_degradation(factor);
+        }
+    }
+
+    fn nonterminal_task_ids(&self) -> Vec<TaskId> {
+        self.shards
+            .iter()
+            .flat_map(|c| c.state.tasks())
+            .filter(|r| !r.state.is_terminal())
+            .map(|r| r.spec.id)
+            .collect()
+    }
+
+    fn task_records(&self) -> Vec<&TaskRecord> {
+        self.shards.iter().flat_map(|c| c.state.tasks()).collect()
+    }
+
+    fn requests_by_id(&self) -> Vec<&LpRequest> {
+        let mut v: Vec<&LpRequest> =
+            self.shards.iter().flat_map(|c| c.state.requests()).collect();
+        v.sort_unstable_by_key(|r| r.id);
+        v
+    }
+
+    fn spill_stats(&self) -> SpillStats {
+        self.spill
+    }
+
+    fn fingerprint(&self) -> String {
+        // One shard: exactly the raw controller's fingerprint, so the
+        // bit-identity tests compare the two directly.
+        if self.shards.len() == 1 {
+            return self.shards[0].state.fingerprint();
+        }
+        let mut out = String::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            out.push_str(&format!("== shard {s} ==\n"));
+            out.push_str(&shard.state.fingerprint());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::PatsScheduler;
+    use crate::time::SimDuration;
+
+    fn plane(devices: usize, shards: usize) -> ControlPlane<PatsScheduler> {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = devices;
+        cfg.sharding.shards = shards;
+        ControlPlane::new(&cfg, PatsScheduler::from_config)
+    }
+
+    #[test]
+    fn homes_are_contiguous_balanced_blocks() {
+        let p = plane(8, 4);
+        let homes: Vec<usize> =
+            (0..8).map(|d| p.home_shard(DeviceId(d as u32))).collect();
+        assert_eq!(homes, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        // Uneven split still covers every shard.
+        let p = plane(10, 4);
+        let homes: Vec<usize> =
+            (0..10).map(|d| p.home_shard(DeviceId(d as u32))).collect();
+        assert_eq!(*homes.first().unwrap(), 0);
+        assert_eq!(*homes.last().unwrap(), 3);
+        for w in homes.windows(2) {
+            assert!(w[1] == w[0] || w[1] == w[0] + 1, "blocks are contiguous");
+        }
+    }
+
+    #[test]
+    fn foreign_devices_are_masked_per_shard() {
+        let p = plane(8, 2);
+        for d in 0..8u32 {
+            let home = p.home_shard(DeviceId(d));
+            for s in 0..2 {
+                let up = p.shard(s).state.device_is_up(DeviceId(d));
+                assert_eq!(up, s == home, "dev{d} in shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn spill_order_is_nearest_first_and_bounded() {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 16;
+        cfg.sharding.shards = 8;
+        cfg.sharding.spill_fanout = 4;
+        let p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        assert_eq!(p.spill_order(0), vec![1, 7, 2, 6]);
+        assert_eq!(p.spill_order(3), vec![4, 2, 5, 1]);
+        // Fan-out caps at K − 1 even when configured higher.
+        cfg.sharding.spill_fanout = 99;
+        cfg.sharding.shards = 3;
+        let p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        assert_eq!(p.spill_order(0), vec![1, 2]);
+        // Spill disabled.
+        cfg.sharding.spill_fanout = 0;
+        let p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        assert!(p.spill_order(1).is_empty());
+    }
+
+    #[test]
+    fn hp_requests_stay_on_their_home_shard() {
+        let mut p = plane(8, 2);
+        let (id, _, out) = p.handle_hp_request(FrameId(0), DeviceId(6), SimTime::ZERO);
+        assert!(out.allocated());
+        let rec = p.task(id).expect("routed");
+        assert_eq!(rec.allocation.as_ref().unwrap().device, DeviceId(6));
+        // Registered in shard 1 (device 6's home) and nowhere else.
+        assert!(p.shard(1).state.task(id).is_some());
+        assert!(p.shard(0).state.task(id).is_none());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lp_request_spills_when_home_shard_is_saturated() {
+        // 2 shards × 2 devices. Saturate shard 0's devices, then issue a
+        // 1-task LP request from shard 0: the home admission places
+        // nothing, so the router spills it to shard 1.
+        let mut p = plane(4, 2);
+        let deadline = SimTime::from_secs_f64(18.86);
+        let long = SimTime::ZERO + SimDuration::from_secs_f64(600.0);
+        // Fill both shard-0 devices far past the request deadline with
+        // 4-core HP blockers (non-preemptible, so nothing can evict them).
+        for d in [0u32, 1] {
+            for _ in 0..4 {
+                let shard = &mut p.shards[0];
+                let id = shard.state.fresh_task_id();
+                shard.state.register_task(crate::task::TaskSpec {
+                    id,
+                    frame: FrameId(99),
+                    source: DeviceId(d),
+                    priority: crate::task::Priority::High,
+                    deadline: long,
+                    spawn: SimTime::ZERO,
+                    request: None,
+                });
+                p.task_home.insert(id, 0);
+                let shard = &mut p.shards[0];
+                let mut plan = crate::scheduler::plan::PlacementPlan::new(&shard.state);
+                plan.stage_placement(&shard.state, crate::task::Allocation {
+                    task: id,
+                    device: DeviceId(d),
+                    window: crate::task::Window::new(SimTime::ZERO, long),
+                    cores: 1,
+                    offloaded: false,
+                })
+                .unwrap();
+                shard.state.apply(plan).unwrap();
+            }
+        }
+        let (rid, _, out) =
+            p.handle_lp_request(FrameId(0), DeviceId(0), 1, deadline, SimTime::ZERO);
+        assert_eq!(out.placements.len(), 1, "the sibling shard hosts the request");
+        let placed_on = out.placements[0].device;
+        assert!(placed_on.0 >= 2, "placed on a shard-1 device, got {placed_on}");
+        assert!(out.placements[0].offloaded, "foreign source ⇒ offloaded");
+        // The registrations moved wholesale to the sibling.
+        assert!(p.shard(1).state.request(rid).is_some());
+        assert!(p.shard(0).state.request(rid).is_none());
+        let stats = p.spill();
+        assert_eq!(stats.requests_spilled, 1);
+        assert_eq!(stats.tasks_spilled, 1);
+        assert!(stats.spill_attempts >= 1);
+        assert_eq!(stats.requests_returned, 0);
+        p.check_invariants().unwrap();
+
+        // A completion state-update routes to the hosting shard.
+        let task = out.placements[0].task;
+        let end = out.placements[0].window.end;
+        p.handle_state_update(task, true, end);
+        assert_eq!(
+            p.task(task).unwrap().state,
+            crate::task::TaskState::Completed
+        );
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unspillable_request_returns_home_and_fails_there() {
+        // One device per shard, fanout 1, and *both* shards saturated: the
+        // spill probe fails and the request must return home intact.
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 2;
+        cfg.sharding.shards = 2;
+        cfg.sharding.spill_fanout = 1;
+        let mut p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        let long = SimTime::ZERO + SimDuration::from_secs_f64(600.0);
+        for (s, d) in [(0usize, 0u32), (1, 1)] {
+            for _ in 0..4 {
+                let shard = &mut p.shards[s];
+                let id = shard.state.fresh_task_id();
+                shard.state.register_task(crate::task::TaskSpec {
+                    id,
+                    frame: FrameId(99),
+                    source: DeviceId(d),
+                    priority: crate::task::Priority::High,
+                    deadline: long,
+                    spawn: SimTime::ZERO,
+                    request: None,
+                });
+                p.task_home.insert(id, s);
+                let shard = &mut p.shards[s];
+                let mut plan = crate::scheduler::plan::PlacementPlan::new(&shard.state);
+                plan.stage_placement(&shard.state, crate::task::Allocation {
+                    task: id,
+                    device: DeviceId(d),
+                    window: crate::task::Window::new(SimTime::ZERO, long),
+                    cores: 1,
+                    offloaded: false,
+                })
+                .unwrap();
+                shard.state.apply(plan).unwrap();
+            }
+        }
+        let deadline = SimTime::from_secs_f64(18.86);
+        let (rid, _, out) =
+            p.handle_lp_request(FrameId(0), DeviceId(0), 2, deadline, SimTime::ZERO);
+        assert!(out.placements.is_empty());
+        assert_eq!(out.unallocated.len(), 2);
+        // Home shard keeps the registrations; the sim fails them as usual.
+        assert!(p.shard(0).state.request(rid).is_some());
+        assert!(p.shard(1).state.request(rid).is_none());
+        let stats = p.spill();
+        assert_eq!(stats.requests_returned, 1);
+        assert_eq!(stats.requests_spilled, 0);
+        for t in out.unallocated {
+            p.fail_task(t, FailReason::NoResources, SimTime::ZERO);
+            assert!(p.task(t).unwrap().state.is_terminal());
+        }
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn strided_ids_never_collide_across_shards() {
+        let mut p = plane(8, 4);
+        let mut seen = std::collections::HashSet::new();
+        for d in 0..8u32 {
+            let (id, _, _) = p.handle_hp_request(FrameId(0), DeviceId(d), SimTime::ZERO);
+            assert!(seen.insert(id), "{id:?} minted twice");
+        }
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lp_sweep_serial_and_parallel_agree() {
+        let devices = 8;
+        let mk_jobs = |p: &ControlPlane<PatsScheduler>| -> Vec<Vec<LpJob>> {
+            let mut jobs = vec![Vec::new(); p.num_shards()];
+            for d in 0..devices as u32 {
+                jobs[p.home_shard(DeviceId(d))].push(LpJob {
+                    frame: FrameId(d as u64),
+                    source: DeviceId(d),
+                    n: 2,
+                    deadline: SimTime::from_secs_f64(18.86),
+                    now: SimTime::ZERO,
+                });
+            }
+            jobs
+        };
+        let mut serial = plane(devices, 4);
+        let jobs = mk_jobs(&serial);
+        let a = serial.lp_sweep(&jobs, false);
+        let mut par = plane(devices, 4);
+        let b = par.lp_sweep(&jobs, true);
+        // Shard-local decisions are independent, so threading cannot
+        // change them: identical placements shard by shard, and the final
+        // states are fingerprint-identical.
+        assert_eq!(a.len(), b.len());
+        for (sa, sb) in a.iter().zip(&b) {
+            assert_eq!(sa.len(), sb.len());
+            for ((ra, oa), (rb, ob)) in sa.iter().zip(sb) {
+                assert_eq!(ra, rb);
+                assert_eq!(oa.placements.len(), ob.placements.len());
+                for (pa, pb) in oa.placements.iter().zip(&ob.placements) {
+                    assert_eq!(pa.task, pb.task);
+                    assert_eq!(pa.device, pb.device);
+                    assert_eq!(pa.window, pb.window);
+                    assert_eq!(pa.cores, pb.cores);
+                }
+            }
+        }
+        assert_eq!(ControlSurface::fingerprint(&serial), ControlSurface::fingerprint(&par));
+        serial.check_invariants().unwrap();
+        par.check_invariants().unwrap();
+    }
+}

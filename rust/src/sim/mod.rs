@@ -23,13 +23,13 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::config::{Policy as PolicyKind, SystemConfig};
-use crate::coordinator::Controller;
+use crate::coordinator::{ControlSurface, Controller};
 use crate::device::{execute_in_window, ExecOutcome, ExecutionModel};
 use crate::metrics::ScenarioMetrics;
 use crate::pipeline::{FrameRecord, StartSchedule};
 use crate::resources::SlotKind;
 use crate::scheduler::{HpRescue, LpPlacement, PatsScheduler, Policy, RescueOutcome};
-use crate::state::NetworkState;
+use crate::shard::ControlPlane;
 use crate::task::{DeviceId, FailReason, FrameId, Priority, TaskId, TaskState};
 use crate::time::{SimDuration, SimTime, SkewModel};
 use crate::trace::{ChurnEvent, ChurnScript, Trace};
@@ -100,25 +100,42 @@ pub fn run_scenario(cfg: &SystemConfig, trace: &Trace, label: &str) -> SimResult
 /// Run a scenario under a scripted churn scenario (network-dynamics
 /// extension): devices crash, drain, and rejoin mid-run and the shared
 /// link may degrade. With an empty script this is exactly [`run_scenario`].
+///
+/// With `cfg.sharding.shards > 1` events route through a [`ControlPlane`];
+/// the default `shards = 1` drives the raw [`Controller`] directly, which
+/// skips the router's home-map bookkeeping and is bit-identical to a
+/// 1-shard plane (proven by `rust/tests/shards.rs`, which runs the same
+/// engine against both surfaces).
 pub fn run_scenario_dynamic(
     cfg: &SystemConfig,
     trace: &Trace,
     churn: &ChurnScript,
     label: &str,
 ) -> SimResult {
+    fn dispatch<P: Policy>(
+        cfg: &SystemConfig,
+        trace: &Trace,
+        churn: &ChurnScript,
+        label: &str,
+        factory: impl FnMut(&SystemConfig) -> P,
+    ) -> SimResult {
+        let mut factory = factory;
+        if cfg.sharding.shards == 1 {
+            let controller = Controller::new(cfg.clone(), factory(cfg));
+            run_with_surface_dynamic(cfg, trace, churn, label, controller).0
+        } else {
+            let plane = ControlPlane::new(cfg, factory);
+            run_with_surface_dynamic(cfg, trace, churn, label, plane).0
+        }
+    }
     match cfg.policy {
-        PolicyKind::Scheduler => {
-            let policy = PatsScheduler::from_config(cfg);
-            run_with_policy_dynamic(cfg, trace, churn, label, policy)
-        }
+        PolicyKind::Scheduler => dispatch(cfg, trace, churn, label, PatsScheduler::from_config),
         PolicyKind::CentralWorkstealer => {
-            let policy = Workstealer::new(Mode::Central, cfg.preemption, cfg);
-            run_with_policy_dynamic(cfg, trace, churn, label, policy)
+            dispatch(cfg, trace, churn, label, |c| Workstealer::new(Mode::Central, c.preemption, c))
         }
-        PolicyKind::DecentralWorkstealer => {
-            let policy = Workstealer::new(Mode::Decentral, cfg.preemption, cfg);
-            run_with_policy_dynamic(cfg, trace, churn, label, policy)
-        }
+        PolicyKind::DecentralWorkstealer => dispatch(cfg, trace, churn, label, |c| {
+            Workstealer::new(Mode::Decentral, c.preemption, c)
+        }),
     }
 }
 
@@ -132,7 +149,12 @@ pub fn run_with_policy<P: Policy>(
     run_with_policy_dynamic(cfg, trace, &ChurnScript::none(), label, policy)
 }
 
-/// The simulation engine, generic over the policy, with scripted churn.
+/// The simulation engine driving one raw [`Controller`] with `policy`,
+/// with scripted churn. This single-controller entry point ignores
+/// `[sharding]` (the sharded path needs one policy per shard — use
+/// [`run_scenario_dynamic`] or build a [`ControlPlane`] and call
+/// [`run_with_surface_dynamic`]); it is kept for policy-level tests and as
+/// the pre-shard reference in the sharding equivalence proof.
 pub fn run_with_policy_dynamic<P: Policy>(
     cfg: &SystemConfig,
     trace: &Trace,
@@ -140,18 +162,35 @@ pub fn run_with_policy_dynamic<P: Policy>(
     label: &str,
     policy: P,
 ) -> SimResult {
+    let controller = Controller::new(cfg.clone(), policy);
+    run_with_surface_dynamic(cfg, trace, churn, label, controller).0
+}
+
+/// The simulation engine, generic over the control surface (a raw
+/// [`Controller`] or a sharded [`ControlPlane`]), with scripted churn.
+/// Returns the result together with the surface so callers can inspect
+/// the final control-plane state (fingerprint equivalence tests, spill
+/// audits).
+pub fn run_with_surface_dynamic<S: ControlSurface>(
+    cfg: &SystemConfig,
+    trace: &Trace,
+    churn: &ChurnScript,
+    label: &str,
+    surface: S,
+) -> (SimResult, S) {
     let wall0 = std::time::Instant::now();
-    let mut sim = Sim::new(cfg.clone(), trace, label, policy);
+    let mut sim = Sim::new(cfg.clone(), trace, label, surface);
     sim.seed_frames(trace);
     sim.seed_churn(churn);
     let virtual_end = sim.drain();
     sim.finalize(trace);
-    SimResult { metrics: sim.metrics, elapsed: wall0.elapsed(), virtual_end }
+    let result = SimResult { metrics: sim.metrics, elapsed: wall0.elapsed(), virtual_end };
+    (result, sim.surface)
 }
 
-struct Sim<P: Policy> {
+struct Sim<S: ControlSurface> {
     cfg: SystemConfig,
-    controller: Controller<P>,
+    surface: S,
     exec: ExecutionModel,
     rng: Rng,
     events: BinaryHeap<Reverse<Event>>,
@@ -181,8 +220,8 @@ struct Sim<P: Policy> {
     metrics: ScenarioMetrics,
 }
 
-impl<P: Policy> Sim<P> {
-    fn new(cfg: SystemConfig, trace: &Trace, label: &str, policy: P) -> Sim<P> {
+impl<S: ControlSurface> Sim<S> {
+    fn new(cfg: SystemConfig, trace: &Trace, label: &str, surface: S) -> Sim<S> {
         assert_eq!(
             trace.devices(),
             cfg.devices,
@@ -190,11 +229,10 @@ impl<P: Policy> Sim<P> {
         );
         let exec = ExecutionModel::new(&cfg);
         let rng = Rng::seed_from_u64(cfg.seed);
-        let controller = Controller::new(cfg.clone(), policy);
         let devices = cfg.devices;
         Sim {
             cfg,
-            controller,
+            surface,
             exec,
             rng,
             events: BinaryHeap::new(),
@@ -222,11 +260,7 @@ impl<P: Policy> Sim<P> {
     /// extension; [`crate::fidelity::VariantId::FULL`] unless a degraded
     /// placement committed).
     fn task_variant(&self, task: TaskId) -> crate::fidelity::VariantId {
-        self.controller
-            .state
-            .task(task)
-            .map(|r| r.variant)
-            .unwrap_or_default()
+        self.surface.task(task).map(|r| r.variant).unwrap_or_default()
     }
 
     /// Create all frame records + FrameStart events up front.
@@ -260,7 +294,7 @@ impl<P: Policy> Sim<P> {
             }
         }
         // Workstealer poll loops: one staggered tick train per device.
-        if let Some(iv) = self.controller.policy.poll_interval() {
+        if let Some(iv) = self.surface.poll_interval() {
             let iv = SimDuration::from_secs_f64(iv);
             for d in 0..self.cfg.devices {
                 let offset = SimDuration::from_micros(
@@ -306,7 +340,7 @@ impl<P: Policy> Sim<P> {
             // time-point search only look forward from `now`), but leaving
             // it in place makes every link operation O(total history).
             if now.since(self.last_prune) > SimDuration::from_secs_f64(60.0) {
-                self.controller.state.prune_before(now);
+                self.surface.prune_before(now);
                 self.last_prune = now;
             }
             match ev.kind {
@@ -347,7 +381,7 @@ impl<P: Policy> Sim<P> {
                 }
                 self.draining[i] = true;
                 self.metrics.devices_drained += 1;
-                self.controller.handle_device_drain(d, now);
+                self.surface.handle_device_drain(d, now);
             }
             ChurnEvent::Rejoin(d) => {
                 let i = d.0 as usize;
@@ -357,17 +391,17 @@ impl<P: Policy> Sim<P> {
                 self.physically_down[i] = false;
                 self.draining[i] = false;
                 self.metrics.devices_rejoined += 1;
-                self.controller.handle_device_rejoin(d, now);
+                self.surface.handle_device_rejoin(d, now);
                 // No poll-tick restart: the train survives downtime (see
                 // on_poll_tick) — re-pushing here would double-schedule it.
             }
             ChurnEvent::DegradeLink { factor } => {
                 self.metrics.link_degrade_events += 1;
-                self.controller.state.link_model.set_degradation(factor);
+                self.surface.set_link_degradation(factor);
             }
             ChurnEvent::RestoreLink => {
                 self.metrics.link_degrade_events += 1;
-                self.controller.state.link_model.set_degradation(1.0);
+                self.surface.set_link_degradation(1.0);
             }
         }
     }
@@ -380,15 +414,15 @@ impl<P: Policy> Sim<P> {
         }
         // Note: a *Draining* device can still crash — only an already-Down
         // one is skipped, so its orphans are never left unaccounted.
-        if self.controller.state.device_health(device) == crate::state::DeviceHealth::Down {
+        if self.surface.device_health(device) == crate::state::DeviceHealth::Down {
             return; // already declared down
         }
         debug_assert!(
-            self.controller.device_overdue(device, now),
+            self.surface.device_overdue(device, now),
             "watchdog fired although the device was heard from after its crash"
         );
         self.metrics.failures_detected += 1;
-        let outcome: RescueOutcome = self.controller.handle_device_failure(device, now);
+        let outcome: RescueOutcome = self.surface.handle_device_failure(device, now);
 
         for rescue in outcome.hp_rescued {
             self.metrics.hp_orphaned += 1;
@@ -475,16 +509,13 @@ impl<P: Policy> Sim<P> {
         // ticking through the downtime and resumes after a rejoin — killing
         // and re-pushing trains across crash/rejoin would double-schedule.
         if !self.physically_down[device.0 as usize] {
-            let placements =
-                self.controller
-                    .policy
-                    .poll(&mut self.controller.state, &self.cfg, device, now);
+            let placements = self.surface.poll(device, now);
             for p in placements {
                 self.metrics.record_core_alloc(p.cores, p.offloaded);
                 self.schedule_lp_placement(&p);
             }
         }
-        if let Some(iv) = self.controller.policy.poll_interval() {
+        if let Some(iv) = self.surface.poll_interval() {
             let next = now + SimDuration::from_secs_f64(iv);
             if next <= self.horizon {
                 self.push(next, EventKind::PollTick { device });
@@ -521,8 +552,12 @@ impl<P: Policy> Sim<P> {
         }
         self.metrics.hp_generated += 1;
         let (task, _decision_t, outcome) =
-            self.controller.handle_hp_request(frame_id, device, now);
+            self.surface.handle_hp_request(frame_id, device, now);
         self.task_frame.insert(task, frame_idx);
+        // Decentral-stealer preemption victims whose source died earlier
+        // route to the controller-side mirror queue; the outcome carries
+        // the count (the last mirror route that used to go unmetered).
+        self.metrics.requeued_via_mirror += outcome.requeued_via_mirror;
 
         // Latency metrics (Fig 9a vs 9b).
         let ms = outcome.search.as_secs_f64() * 1_000.0;
@@ -567,9 +602,7 @@ impl<P: Policy> Sim<P> {
             }
             None => {
                 self.metrics.hp_failed_alloc += 1;
-                self.controller
-                    .state
-                    .fail_task(task, FailReason::NoResources, now);
+                self.surface.fail_task(task, FailReason::NoResources, now);
                 self.frames[frame_idx].on_hp_result(false);
             }
         }
@@ -590,9 +623,8 @@ impl<P: Policy> Sim<P> {
         self.metrics.lp_generated += n as u64;
         self.metrics.lp_sets_total += 1;
         let (rid, _decision_t, outcome) =
-            self.controller
-                .handle_lp_request(frame_id, device, n, deadline, now);
-        for t in &self.controller.state.request(rid).unwrap().tasks.clone() {
+            self.surface.handle_lp_request(frame_id, device, n, deadline, now);
+        for t in &self.surface.request(rid).unwrap().tasks.clone() {
             self.task_frame.insert(*t, frame_idx);
         }
         self.metrics
@@ -608,9 +640,7 @@ impl<P: Policy> Sim<P> {
             self.schedule_lp_placement(p);
         }
         for t in outcome.unallocated {
-            self.controller
-                .state
-                .fail_task(t, FailReason::NoResources, now);
+            self.surface.fail_task(t, FailReason::NoResources, now);
             // Frame status is derived from the registry at finalize time.
         }
     }
@@ -628,18 +658,14 @@ impl<P: Policy> Sim<P> {
             .lp_variant(self.task_variant(p.task));
         // Offloaded input: the transfer slot starts on schedule but its
         // actual duration is jittered — late arrival eats the window pad.
+        // The transfer rides the hosting shard's link partition.
         let input_arrival = p.input_ready.map(|slot_end| {
-            let slot_dur = self
-                .controller
-                .state
-                .link_model
+            let link = self.surface.link_model_of(p.task);
+            let slot_dur = link
                 .slot_duration(&self.cfg, SlotKind::InputTransfer)
                 .scale(vdef.transfer_factor);
             let slot_start = slot_end - slot_dur;
-            let actual = self
-                .controller
-                .state
-                .link_model
+            let actual = link
                 .sample_transfer(&self.cfg, SlotKind::InputTransfer, &mut self.rng)
                 .scale(vdef.transfer_factor);
             slot_start + actual
@@ -662,7 +688,7 @@ impl<P: Policy> Sim<P> {
         if self.gens.get(&task) != Some(&gen) {
             return;
         }
-        let Some(rec) = self.controller.state.task(task) else { return };
+        let Some(rec) = self.surface.task(task) else { return };
         if !rec.state.is_active_allocation() {
             return;
         }
@@ -676,7 +702,7 @@ impl<P: Policy> Sim<P> {
         }
         let is_hp = rec.spec.priority == crate::task::Priority::High;
 
-        let new_placements = self.controller.handle_state_update(task, completed, now);
+        let new_placements = self.surface.handle_state_update(task, completed, now);
         for p in new_placements {
             self.metrics.record_core_alloc(p.cores, p.offloaded);
             self.schedule_lp_placement(&p);
@@ -716,26 +742,17 @@ impl<P: Policy> Sim<P> {
 
     /// Derive frame/LP outcome metrics from the final registry state.
     fn finalize(&mut self, trace: &Trace) {
-        let st: &NetworkState = &self.controller.state;
-
         // Anything still queued/pending when the experiment ends never ran.
         // Sorted by id: registry iteration order is HashMap order, which
         // must never leak into processing order.
-        let mut lingering: Vec<TaskId> = st
-            .tasks()
-            .filter(|r| !r.state.is_terminal())
-            .map(|r| r.spec.id)
-            .collect();
+        let mut lingering: Vec<TaskId> = self.surface.nonterminal_task_ids();
         lingering.sort_unstable();
         for t in lingering {
-            self.controller
-                .state
-                .fail_task(t, FailReason::NoResources, SimTime::MAX);
+            self.surface.fail_task(t, FailReason::NoResources, SimTime::MAX);
         }
-        let st: &NetworkState = &self.controller.state;
 
         // ---- per-task LP counters + offloaded census -------------------
-        for rec in st.tasks() {
+        for rec in self.surface.task_records() {
             if rec.spec.priority != crate::task::Priority::Low {
                 continue;
             }
@@ -767,16 +784,18 @@ impl<P: Policy> Sim<P> {
         // and float accumulation is order-sensitive in its last bits —
         // folding in `HashMap` order made the summary fields differ between
         // otherwise identical runs (the KNOWN_ISSUES.md determinism wart,
-        // now retired and locked in by `rust/tests/fleet.rs`).
-        let mut requests: Vec<&crate::task::LpRequest> = st.requests().collect();
-        requests.sort_unstable_by_key(|r| r.id);
-        for req in requests {
+        // now retired and locked in by `rust/tests/fleet.rs`). The surface
+        // contract guarantees ascending-id order across every shard.
+        for req in self.surface.requests_by_id() {
             let total = req.tasks.len() as f64;
             let done = req
                 .tasks
                 .iter()
                 .filter(|t| {
-                    matches!(st.task(**t).map(|r| &r.state), Some(TaskState::Completed))
+                    matches!(
+                        self.surface.task(**t).map(|r| &r.state),
+                        Some(TaskState::Completed)
+                    )
                 })
                 .count() as f64;
             self.metrics.lp_set_fractions.add(done / total);
@@ -800,7 +819,7 @@ impl<P: Policy> Sim<P> {
                 self.metrics.frames_lost_churn += 1;
                 continue;
             }
-            let hp_ok = match f.outcome(st, &by_frame[f.id.0 as usize]) {
+            let hp_ok = match f.outcome(&self.surface, &by_frame[f.id.0 as usize]) {
                 FrameOutcome::Complete => true,
                 FrameOutcome::FailedHp => {
                     self.metrics.frames_failed_hp += 1;
@@ -820,7 +839,7 @@ impl<P: Policy> Sim<P> {
                 let mut accuracy = 1.0f64;
                 let mut degraded = false;
                 for t in &by_frame[f.id.0 as usize] {
-                    let Some(rec) = st.task(*t) else { continue };
+                    let Some(rec) = self.surface.task(*t) else { continue };
                     if rec.state != TaskState::Completed {
                         continue;
                     }
@@ -838,6 +857,13 @@ impl<P: Policy> Sim<P> {
                 }
             }
         }
+
+        // ---- cross-shard spill census (sharded control plane) ----------
+        let spill = self.surface.spill_stats();
+        self.metrics.lp_requests_spilled = spill.requests_spilled;
+        self.metrics.lp_tasks_spilled = spill.tasks_spilled;
+        self.metrics.lp_spill_attempts = spill.spill_attempts;
+        self.metrics.lp_spill_returned = spill.requests_returned;
     }
 }
 
@@ -850,7 +876,7 @@ enum FrameOutcome {
 
 impl FrameRecord {
     /// Derive this frame's outcome from its tasks' terminal states.
-    fn outcome(&self, st: &NetworkState, tasks: &[TaskId]) -> FrameOutcome {
+    fn outcome<S: ControlSurface>(&self, surface: &S, tasks: &[TaskId]) -> FrameOutcome {
         if !self.load.spawns_hp() {
             return FrameOutcome::Complete; // detector-only frame
         }
@@ -859,7 +885,7 @@ impl FrameRecord {
         let mut lp_total = 0u32;
         let mut lp_ok = 0u32;
         for task in tasks {
-            let Some(rec) = st.task(*task) else { continue };
+            let Some(rec) = surface.task(*task) else { continue };
             match rec.spec.priority {
                 crate::task::Priority::High => {
                     hp_seen = true;

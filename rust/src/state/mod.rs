@@ -66,6 +66,10 @@ pub struct NetworkState {
     requests: HashMap<RequestId, LpRequest>,
     next_task: u64,
     next_request: u64,
+    /// Id-minting stride (sharded-control-plane extension): a shard-local
+    /// state mints ids `base, base + stride, …` so K shard registries stay
+    /// globally collision-free without coordination. 1 = the dense default.
+    id_stride: u64,
     /// Mutation stamp over the placement-relevant state (resource
     /// calendars, registries, device health): bumped by every
     /// state-changing *method*, captured by plans at creation, and checked
@@ -92,6 +96,7 @@ impl NetworkState {
             requests: HashMap::new(),
             next_task: 0,
             next_request: 0,
+            id_stride: 1,
             version: 0,
             link_model: LinkModel::new(cfg),
         }
@@ -108,17 +113,35 @@ impl NetworkState {
 
     // ---- id allocation -------------------------------------------------
 
+    /// Partition the id space (sharded-control-plane extension): this
+    /// state mints task and request ids `base, base + stride, …` so K
+    /// shard-local registries mint globally unique ids without
+    /// coordination. `(0, 1)` is the dense default scheme. Must be called
+    /// before the first id is minted.
+    pub fn set_id_scheme(&mut self, base: u64, stride: u64) {
+        assert!(stride >= 1, "id stride must be >= 1");
+        assert!(base < stride, "id base {base} must be < stride {stride}");
+        assert!(
+            self.next_task == 0 && self.next_request == 0,
+            "the id scheme must be set before any id is minted"
+        );
+        self.next_task = base;
+        self.next_request = base;
+        self.id_stride = stride;
+        self.touch();
+    }
+
     /// Mint the next task id.
     pub fn fresh_task_id(&mut self) -> TaskId {
         let id = TaskId(self.next_task);
-        self.next_task += 1;
+        self.next_task += self.id_stride;
         id
     }
 
     /// Mint the next request id.
     pub fn fresh_request_id(&mut self) -> RequestId {
         let id = RequestId(self.next_request);
-        self.next_request += 1;
+        self.next_request += self.id_stride;
         id
     }
 
@@ -146,6 +169,34 @@ impl NetworkState {
         let prev = self.requests.insert(req.id, req);
         assert!(prev.is_none(), "request registered twice");
         self.touch();
+    }
+
+    /// Withdraw a still-pending registration (sharded-control-plane
+    /// extension: the spill router re-homes an unadmitted request onto a
+    /// sibling shard, so its registrations travel with it). Only legal for
+    /// records no scheduler has touched — the task must be `Pending` with
+    /// no allocation. Returns the spec so the caller can re-register it
+    /// elsewhere.
+    pub fn unregister_task(&mut self, id: TaskId) -> TaskSpec {
+        let rec = self.tasks.remove(&id).expect("unregistering unknown task");
+        assert_eq!(
+            rec.state,
+            TaskState::Pending,
+            "only pending tasks can be unregistered ({id:?} is {:?})",
+            rec.state
+        );
+        assert!(rec.allocation.is_none(), "{id:?} pending but allocated");
+        self.touch();
+        rec.spec
+    }
+
+    /// Withdraw a request registration (see
+    /// [`NetworkState::unregister_task`]); the request's task records are
+    /// withdrawn separately. Returns the record for re-registration.
+    pub fn unregister_request(&mut self, id: RequestId) -> LpRequest {
+        let req = self.requests.remove(&id).expect("unregistering unknown request");
+        self.touch();
+        req
     }
 
     /// Look up one task's record.
@@ -955,6 +1006,79 @@ mod tests {
         })
         .unwrap();
         assert!(st.version() > v1, "apply bumps the version");
+    }
+
+    #[test]
+    fn strided_id_schemes_are_disjoint() {
+        let cfg = SystemConfig::default();
+        let mut a = NetworkState::new(&cfg);
+        let mut b = NetworkState::new(&cfg);
+        a.set_id_scheme(0, 2);
+        b.set_id_scheme(1, 2);
+        let from_a: Vec<u64> = (0..4).map(|_| a.fresh_task_id().0).collect();
+        let from_b: Vec<u64> = (0..4).map(|_| b.fresh_task_id().0).collect();
+        assert_eq!(from_a, vec![0, 2, 4, 6]);
+        assert_eq!(from_b, vec![1, 3, 5, 7]);
+        assert_eq!(b.fresh_request_id(), crate::task::RequestId(1));
+        // The default scheme is dense — bit-identical to the unsharded
+        // behaviour.
+        let mut c = NetworkState::new(&cfg);
+        c.set_id_scheme(0, 1);
+        assert_eq!(c.fresh_task_id(), TaskId(0));
+        assert_eq!(c.fresh_task_id(), TaskId(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "before any id is minted")]
+    fn id_scheme_after_minting_panics() {
+        let (_, mut st) = state();
+        let _ = st.fresh_task_id();
+        st.set_id_scheme(0, 2);
+    }
+
+    #[test]
+    fn unregister_round_trips_pending_registrations() {
+        let (_, mut st) = state();
+        let s = spec(&mut st, Priority::Low, 20_000);
+        let id = s.id;
+        st.register_task(s);
+        let rid = st.fresh_request_id();
+        st.register_request(crate::task::LpRequest {
+            id: rid,
+            frame: crate::task::FrameId(0),
+            source: DeviceId(0),
+            deadline: SimTime::from_millis(20_000),
+            spawn: SimTime::ZERO,
+            tasks: vec![id],
+        });
+        let spec = st.unregister_task(id);
+        let req = st.unregister_request(rid);
+        assert!(st.task(id).is_none());
+        assert!(st.request(rid).is_none());
+        // The withdrawn records re-register unchanged (on another shard in
+        // the sharded plane; here on the same state).
+        st.register_task(spec);
+        st.register_request(req);
+        assert_eq!(st.task(id).unwrap().state, TaskState::Pending);
+        assert_eq!(st.request(rid).unwrap().tasks, vec![id]);
+    }
+
+    #[test]
+    #[should_panic(expected = "only pending tasks")]
+    fn unregister_allocated_task_panics() {
+        let (_, mut st) = state();
+        let s = spec(&mut st, Priority::Low, 20_000);
+        let id = s.id;
+        st.register_task(s);
+        place(&mut st, Allocation {
+            task: id,
+            device: DeviceId(0),
+            window: win(0, 10_000),
+            cores: 2,
+            offloaded: false,
+        })
+        .unwrap();
+        st.unregister_task(id);
     }
 
     #[test]

@@ -431,13 +431,13 @@ impl Policy for Workstealer {
     ) -> HpOutcome {
         let t0 = std::time::Instant::now();
         let Some(rec) = st.task(task) else {
-            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+            return HpOutcome::unplaced(t0.elapsed());
         };
         let source = rec.spec.source;
         let deadline = rec.spec.deadline;
         // Network-dynamics: a draining/downed source takes no new work.
         if !st.device_is_up(source) {
-            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+            return HpOutcome::unplaced(t0.elapsed());
         }
         let window = Window::from_duration(now, cfg.hp_slot());
         let update_dur = st.link_model.slot_duration(cfg, SlotKind::StateUpdate);
@@ -453,10 +453,15 @@ impl Policy for Workstealer {
             .expect("fits");
             plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);
             st.apply(plan).expect("freshly staged stealer hp plan");
-            return HpOutcome { window: Some(window), preemption: None, search: t0.elapsed() };
+            return HpOutcome {
+                window: Some(window),
+                preemption: None,
+                requeued_via_mirror: 0,
+                search: t0.elapsed(),
+            };
         }
         if !self.preemption || window.end > deadline {
-            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+            return HpOutcome::unplaced(t0.elapsed());
         }
         // Preemption: evict the farthest-deadline LP task on the device —
         // staged and committed together with the placement it enables.
@@ -466,13 +471,13 @@ impl Policy for Workstealer {
             .first()
             .map(|s| (s.task, s.cores, s.window.start <= now));
         let Some((victim_id, victim_cores, victim_was_running)) = victim else {
-            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+            return HpOutcome::unplaced(t0.elapsed());
         };
         if !st.device(source).fits_without(&window, 1, victim_id) {
             // Eviction insufficient (an interior non-preemptible spike):
             // the read-only probe rejects it before any staging — no
             // victim is ejected for nothing.
-            return HpOutcome { window: None, preemption: None, search: t0.elapsed() };
+            return HpOutcome::unplaced(t0.elapsed());
         }
         let mut plan = PlacementPlan::new(st);
         plan.stage_eviction(st, victim_id, now)
@@ -491,7 +496,12 @@ impl Policy for Workstealer {
         plan.stage_link_earliest(st, window.end, update_dur, SlotKind::StateUpdate, task);
         st.apply(plan).expect("freshly staged stealer preemption plan");
         let victim_source = st.task(victim_id).unwrap().spec.source;
-        self.enqueue(st, victim_id, victim_source); // reallocation = a later steal
+        // Reallocation = a later steal. A victim whose *source* died earlier
+        // routes to the controller-side mirror queue; the outcome carries
+        // the count so the simulation can meter this last mirror route
+        // (previously unmetered — see KNOWN_ISSUES §Decentral-stealer dead
+        // queues).
+        let via_mirror = self.enqueue(st, victim_id, victim_source);
         HpOutcome {
             window: Some(window),
             preemption: Some(PreemptionReport {
@@ -501,6 +511,7 @@ impl Policy for Workstealer {
                 reallocation: None, // decided later, when/if re-stolen
                 realloc_search: std::time::Duration::ZERO,
             }),
+            requeued_via_mirror: via_mirror as u64,
             search: t0.elapsed(),
         }
     }
@@ -1027,6 +1038,59 @@ mod tests {
         assert!(second.iter().any(|p| p.task == lp_id && p.offloaded));
         assert_eq!(ws.mirrored(), 0);
         st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stealer_preemption_victim_with_dead_source_is_metered_via_mirror() {
+        use crate::scheduler::Policy as _;
+        // A stolen LP task runs on device 1 while its *source* (device 0)
+        // dies. A later HP preemption on device 1 evicts it; the requeue
+        // must route to the controller-side mirror AND be counted on the
+        // HpOutcome — the last mirror route that used to go unmetered.
+        let (cfg, mut st, mut ws) = setup(Mode::Decentral, true);
+        let rid = lp_request(&mut st, 0, 2, 120.0);
+        for t in st.request(rid).unwrap().tasks.clone() {
+            place(&mut st, Allocation {
+                task: t,
+                device: DeviceId(1),
+                window: Window::new(SimTime::ZERO, SimTime::from_secs_f64(30.0)),
+                cores: 2,
+                offloaded: true,
+            });
+        }
+        // The source dies with nothing of its own allocated: no orphans, so
+        // the rescue path never sees (or meters) the future victim.
+        let orphans = st.mark_device_down(DeviceId(0), SimTime::from_millis(100));
+        assert!(orphans.is_empty());
+        let out = ws.rescue_orphans(&mut st, &cfg, &orphans, SimTime::from_millis(100));
+        assert_eq!(out.requeued_via_mirror, 0);
+
+        // Device 1 is saturated (2 + 2 cores): the HP task must preempt.
+        let id = hp(&mut st, &cfg, 1, SimTime::from_millis(200));
+        let hp_out = ws.allocate_hp(&mut st, &cfg, id, SimTime::from_millis(200));
+        assert!(hp_out.allocated(), "preemption frees a core");
+        let report = hp_out.preemption.as_ref().expect("preemption fired");
+        assert_eq!(
+            st.task(report.victim).unwrap().spec.source,
+            DeviceId(0),
+            "the victim's home queue died with its source"
+        );
+        assert_eq!(hp_out.requeued_via_mirror, 1, "the mirror route is metered now");
+        assert_eq!(ws.mirrored(), 1);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stealer_preemption_with_live_source_requeues_off_mirror() {
+        use crate::scheduler::Policy as _;
+        let (cfg, mut st, mut ws) = setup(Mode::Central, true);
+        let rid = lp_request(&mut st, 0, 2, 60.0);
+        enqueue_and_poll(&mut ws, &mut st, &cfg, rid, SimTime::ZERO);
+        let id = hp(&mut st, &cfg, 0, SimTime::from_millis(10));
+        let hp_out = ws.allocate_hp(&mut st, &cfg, id, SimTime::from_millis(10));
+        assert!(hp_out.allocated());
+        assert!(hp_out.preemption.is_some());
+        assert_eq!(hp_out.requeued_via_mirror, 0, "live source ⇒ ordinary requeue");
     }
 
     #[test]

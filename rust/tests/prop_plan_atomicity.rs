@@ -579,6 +579,10 @@ fn no_direct_mutation_calls_outside_the_plan_door() {
         "rust/src/workstealer/mod.rs",
         "rust/src/coordinator/mod.rs",
         "rust/src/sim/mod.rs",
+        // The shard router moves registrations between shard-local states
+        // and drives per-shard controllers; its mutations must flow
+        // through the same doors.
+        "rust/src/shard/mod.rs",
         // The multi-fidelity module defines catalog + gating only; the
         // degraded placements it enables must flow through the same plans.
         "rust/src/fidelity/mod.rs",
