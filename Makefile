@@ -1,6 +1,11 @@
 # PATS build/verify entry points.
 #
 #   make verify      — tier-1 gate: release build + tests + format check
+#                      (includes the engine-equivalence differential
+#                      harness at its default shards=1,4 × both-engines
+#                      sweep)
+#   make test-engines — the full differential matrix in one shot, the
+#                      local equivalent of CI's test-matrix job
 #   make lint        — clippy over every target, warnings denied
 #   make bench       — micro-benchmarks (writes BENCH_*.json)
 #   make bench-build — compile every bench target without running (CI gate
@@ -10,7 +15,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test fmt lint bench bench-build artifacts
+.PHONY: verify build test test-engines fmt lint bench bench-build artifacts
 
 verify: build test fmt
 
@@ -19,6 +24,11 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# The serial vs batched-parallel differential harness across the widest
+# shard sweep (CI runs the same harness one matrix cell at a time).
+test-engines:
+	PATS_EQ_SHARDS=1,2,4,8 PATS_EQ_ENGINE=both $(CARGO) test -q --test engine_equivalence
 
 fmt:
 	$(CARGO) fmt --check

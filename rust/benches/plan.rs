@@ -12,8 +12,15 @@
 //!   pre-plan path that re-read completion points between siblings. The
 //!   batched path should stay at or below this line.
 //! * `hp_admit` — the three-slot high-priority plan.
-//! * `plan_open_drop` — open a plan against a loaded state and drop it
-//!   untouched (the fixed floor a *rejected* candidate plan pays).
+//! * `plan_open_drop` — open a plan against a loaded state, fork the link
+//!   scratch, and drop it (the floor a *rejected* candidate plan pays when
+//!   the reuse pool is cold: a full link-calendar clone).
+//! * `plan_open_drop_pooled` — the same open-and-drop with the pool warmed
+//!   by an untimed fork in setup, so every timed fork is a pool hit and
+//!   rollback replaces the clone. Should sit measurably below
+//!   `plan_open_drop` at the big end of the sweep.
+//! * `link_clone_floor` — a bare `link().clone()`, the cost the pool
+//!   amortises away.
 
 use pats::bench::{bench_with_setup, section, write_json, BenchResult};
 use pats::config::SystemConfig;
@@ -209,6 +216,55 @@ fn main() {
                 );
                 drop(plan);
             },
+        );
+        show(&mut results, r);
+
+        let r = bench_with_setup(
+            &format!("plan_open_drop_pooled/devices={devices}"),
+            warmup,
+            iters * 2,
+            || {
+                let (cfg, st) = loaded_state(devices);
+                // Untimed warm-up fork: its rollback parks a scratch
+                // timeline in the thread-local pool keyed to this state,
+                // so the timed fork below is a pool hit.
+                let dur = st
+                    .link_model
+                    .slot_duration(&cfg, pats::resources::SlotKind::LpAllocMsg);
+                let mut plan = PlacementPlan::new(&st);
+                plan.stage_link_earliest(
+                    &st,
+                    SimTime::ZERO,
+                    dur,
+                    pats::resources::SlotKind::LpAllocMsg,
+                    TaskId(u64::MAX),
+                );
+                drop(plan);
+                (cfg, st)
+            },
+            |(cfg, st)| {
+                let mut plan = PlacementPlan::new(&st);
+                let dur = st
+                    .link_model
+                    .slot_duration(&cfg, pats::resources::SlotKind::LpAllocMsg);
+                plan.stage_link_earliest(
+                    &st,
+                    SimTime::ZERO,
+                    dur,
+                    pats::resources::SlotKind::LpAllocMsg,
+                    TaskId(u64::MAX),
+                );
+                drop(plan);
+            },
+        );
+        show(&mut results, r);
+
+        let r = bench_with_setup(
+            &format!("link_clone_floor/devices={devices}"),
+            warmup,
+            iters * 2,
+            || loaded_state(devices),
+            |(_cfg, st)| st.link().clone().len(),
         );
         show(&mut results, r);
     }

@@ -13,10 +13,16 @@
 //!   the single-shard serial sweep (`sweep_parallel/*` vs
 //!   `sweep_serial/shards=1`) — the first real wall-clock parallelism in
 //!   the codebase.
+//! * **The batched engine's sweep door scales too.** The parallel event
+//!   loop (`sharding.engine = parallel`) reaches shards through
+//!   `ControlSurface::{hp_sweep, lp_request_sweep}`; the
+//!   `surface_hp_sweep/*` and `surface_lp_sweep/*` rows time those exact
+//!   entry points on the 1024-device fixture so the engine's batch cost
+//!   is tracked at every shard count.
 
 use pats::bench::{bench_with_setup, section, write_json, BenchResult};
 use pats::config::SystemConfig;
-use pats::coordinator::ControlSurface as _;
+use pats::coordinator::{ControlSurface, HpSweepJob, LpSweepJob};
 use pats::scheduler::PatsScheduler;
 use pats::shard::{ControlPlane, LpJob};
 use pats::task::{DeviceId, FrameId};
@@ -77,6 +83,51 @@ fn main() {
             8,
             || plane_and_jobs(k),
             |(mut plane, jobs)| plane.lp_sweep(&jobs, true).len(),
+        );
+        show(&mut results, r);
+    }
+
+    section("batched-engine sweep doors (ControlSurface entry points)");
+    for &k in &shard_counts {
+        let r = bench_with_setup(
+            &format!("surface_hp_sweep/devices={DEVICES}/shards={k}"),
+            1,
+            8,
+            || {
+                let (plane, _) = plane_and_jobs(k);
+                let jobs: Vec<HpSweepJob> = (0..DEVICES as u32)
+                    .map(|d| HpSweepJob {
+                        frame: FrameId(d as u64),
+                        source: DeviceId(d),
+                        now: SimTime::ZERO,
+                    })
+                    .collect();
+                (plane, jobs)
+            },
+            |(mut plane, jobs)| ControlSurface::hp_sweep(&mut plane, &jobs).len(),
+        );
+        show(&mut results, r);
+
+        let r = bench_with_setup(
+            &format!("surface_lp_sweep/devices={DEVICES}/shards={k}"),
+            1,
+            8,
+            || {
+                let (plane, jobs) = plane_and_jobs(k);
+                let flat: Vec<LpSweepJob> = jobs
+                    .iter()
+                    .flatten()
+                    .map(|j| LpSweepJob {
+                        frame: j.frame,
+                        source: j.source,
+                        n: j.n,
+                        deadline: j.deadline,
+                        now: j.now,
+                    })
+                    .collect();
+                (plane, flat)
+            },
+            |(mut plane, jobs)| ControlSurface::lp_request_sweep(&mut plane, &jobs).len(),
         );
         show(&mut results, r);
     }

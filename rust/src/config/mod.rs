@@ -178,6 +178,45 @@ impl DynamicsConfig {
     }
 }
 
+/// Simulation event-loop engine (`sharding.engine`).
+///
+/// `Serial` is the reference discrete-event loop: one event at a time.
+/// `Parallel` batches adjacent admission events into decision sweeps so a
+/// sharded surface can run one shard per OS thread between barriers —
+/// bit-identical to `Serial` by construction (the batch cutoff keeps every
+/// decision effect strictly after the batch; proven end-to-end by
+/// `rust/tests/engine_equivalence.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// One event at a time (the reference engine).
+    #[default]
+    Serial,
+    /// Batched decision sweeps with shard-parallel execution.
+    Parallel,
+}
+
+impl EngineKind {
+    /// Parse a `sharding.engine` value.
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "serial" => Ok(EngineKind::Serial),
+            "parallel" => Ok(EngineKind::Parallel),
+            other => Err(Error::Config(format!(
+                "unknown engine {other:?} (expected \"serial\" or \"parallel\")"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EngineKind::Serial => "serial",
+            EngineKind::Parallel => "parallel",
+        })
+    }
+}
+
 /// Sharded-control-plane shaping (`[sharding]`), consumed by
 /// [`crate::shard::ControlPlane`], `experiments::shard_scale`, and the
 /// `pats shards` subcommand.
@@ -197,11 +236,21 @@ pub struct ShardingConfig {
     pub spill_fanout: usize,
     /// Shard counts for the `pats shards` sweep.
     pub sweep_shards: Vec<usize>,
+    /// Simulation event-loop engine (serial reference loop vs batched
+    /// decision sweeps). Orthogonal to `shards`: the parallel engine is
+    /// valid — and bit-identical — at any shard count, but only a
+    /// multi-shard plane gains wall-clock parallelism from it.
+    pub engine: EngineKind,
 }
 
 impl Default for ShardingConfig {
     fn default() -> Self {
-        ShardingConfig { shards: 1, spill_fanout: 2, sweep_shards: vec![1, 2, 4, 8] }
+        ShardingConfig {
+            shards: 1,
+            spill_fanout: 2,
+            sweep_shards: vec![1, 2, 4, 8],
+            engine: EngineKind::Serial,
+        }
     }
 }
 
@@ -458,6 +507,7 @@ impl SystemConfig {
             "sharding.shards",
             "sharding.spill_fanout",
             "sharding.sweep_shards",
+            "sharding.engine",
         ];
         for key in doc.keys() {
             if !KNOWN.contains(&key) {
@@ -732,6 +782,9 @@ impl SystemConfig {
             cfg.sharding.sweep_shards = counts.ok_or_else(|| {
                 Error::Config("sharding.sweep_shards must be positive integers".into())
             })?;
+        }
+        if let Some(v) = doc.get_str("sharding.engine") {
+            cfg.sharding.engine = EngineKind::parse(v)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -1197,6 +1250,21 @@ sweep_shards = [1, 4, 16]
         assert_eq!(c.sharding.shards, 4);
         assert_eq!(c.sharding.spill_fanout, 3);
         assert_eq!(c.sharding.sweep_shards, vec![1, 4, 16]);
+    }
+
+    #[test]
+    fn engine_defaults_parses_and_rejects() {
+        assert_eq!(SystemConfig::default().sharding.engine, EngineKind::Serial);
+        for (s, want) in [("serial", EngineKind::Serial), ("parallel", EngineKind::Parallel)] {
+            assert_eq!(EngineKind::parse(s).unwrap(), want);
+            assert_eq!(want.to_string(), s, "Display round-trips with parse");
+        }
+        assert!(EngineKind::parse("threads").is_err());
+        let doc = crate::util::toml::Document::parse("[sharding]\nengine = \"parallel\"").unwrap();
+        let c = SystemConfig::from_document(&doc).unwrap();
+        assert_eq!(c.sharding.engine, EngineKind::Parallel);
+        let doc = crate::util::toml::Document::parse("[sharding]\nengine = \"warp\"").unwrap();
+        assert!(SystemConfig::from_document(&doc).is_err());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! runner and the live `serve_cluster` example both drive it.
 
 use crate::config::SystemConfig;
+use crate::fidelity::VariantId;
 use crate::net::LinkModel;
 use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome};
 use crate::shard::SpillStats;
@@ -22,6 +23,68 @@ use crate::task::{
     DeviceId, FailReason, FrameId, LpRequest, Priority, RequestId, TaskId, TaskSpec,
 };
 use crate::time::{SimDuration, SimTime};
+
+/// One high-priority admission job inside a decision sweep (the batched
+/// engine's unit of work; see [`ControlSurface::hp_sweep`]).
+#[derive(Debug, Clone, Copy)]
+pub struct HpSweepJob {
+    /// The frame whose stage-2 task is being requested.
+    pub frame: FrameId,
+    /// The requesting device (HP tasks are pinned to it, §3.1).
+    pub source: DeviceId,
+    /// The event time the request arrives at the controller.
+    pub now: SimTime,
+}
+
+/// The decision a sweep produced for one [`HpSweepJob`], carrying
+/// everything the simulator needs to replay its side effects in the
+/// original event order. Variants are captured *at decision time*: a later
+/// decision in the same sweep may re-evict and re-place a reallocated
+/// victim, so live registry reads at apply time would see the wrong model.
+#[derive(Debug, Clone)]
+pub struct HpSweepDecision {
+    /// The task id minted for the request.
+    pub task: TaskId,
+    /// When the controller finished deciding (serial-queue horizon).
+    pub decision_t: SimTime,
+    /// The policy outcome (window, preemption report, wall-clock search).
+    pub outcome: HpOutcome,
+    /// The task's committed model variant at decision time.
+    pub variant: VariantId,
+    /// The preemption victim's reallocation variant at decision time, when
+    /// the outcome reallocated one.
+    pub realloc_variant: Option<VariantId>,
+}
+
+/// One low-priority admission job inside a decision sweep (see
+/// [`ControlSurface::lp_request_sweep`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LpSweepJob {
+    /// The frame whose DNN set is being requested.
+    pub frame: FrameId,
+    /// The requesting device.
+    pub source: DeviceId,
+    /// Number of DNN tasks in the set.
+    pub n: u8,
+    /// The frame deadline bounding every task in the set.
+    pub deadline: SimTime,
+    /// The event time the request arrives at the controller.
+    pub now: SimTime,
+}
+
+/// The decision a sweep produced for one [`LpSweepJob`].
+#[derive(Debug, Clone)]
+pub struct LpSweepDecision {
+    /// The request id minted for the set.
+    pub rid: RequestId,
+    /// When the controller finished deciding.
+    pub decision_t: SimTime,
+    /// The policy outcome (placements, unallocated tasks, search time).
+    pub outcome: LpOutcome,
+    /// Committed model variant per placement, aligned with
+    /// `outcome.placements`, captured at decision time.
+    pub variants: Vec<VariantId>,
+}
 
 /// The control-plane interface the simulation drives.
 ///
@@ -116,6 +179,76 @@ pub trait ControlSurface {
 
     /// Canonical dump of the observable state (equivalence assertions).
     fn fingerprint(&self) -> String;
+
+    /// Total number of live link-calendar slots across every partition
+    /// (compaction audits: the batched engine must keep this O(horizon)
+    /// via barrier-epoch pruning, never O(total history)).
+    fn link_slot_count(&self) -> usize;
+
+    /// True when a low-priority admission on this surface may take the
+    /// cross-shard spill path. Spill re-homes registrations *between*
+    /// shard states, so it must serialise through the router — the batched
+    /// engine only batches LP requests into sweeps when this is `false`.
+    fn spill_active(&self) -> bool {
+        false
+    }
+
+    /// Process one batch of high-priority admissions — a *decision sweep*,
+    /// the batched engine's unit of work. The default implementation
+    /// handles the jobs serially in order, which is by construction
+    /// bit-identical to the event-at-a-time engine; sharded surfaces
+    /// override it to run one shard's jobs per OS thread.
+    ///
+    /// Contract (what makes batching sound; see `sim`'s batched loop for
+    /// the ordering proof):
+    ///
+    /// * jobs are handled in slice order per shard, and every surface
+    ///   side effect of job `i` (including failing the task when no
+    ///   window was found — exactly what the serial engine does between
+    ///   events) lands before job `i+1` is handled on the same shard;
+    /// * each decision captures the committed model variants at decision
+    ///   time, so the simulator never needs a live registry read at apply
+    ///   time.
+    fn hp_sweep(&mut self, jobs: &[HpSweepJob]) -> Vec<HpSweepDecision> {
+        jobs.iter()
+            .map(|j| {
+                let (task, decision_t, outcome) =
+                    self.handle_hp_request(j.frame, j.source, j.now);
+                if outcome.window.is_none() {
+                    self.fail_task(task, FailReason::NoResources, j.now);
+                }
+                let variant = self.task(task).map(|r| r.variant).unwrap_or_default();
+                let realloc_variant = outcome.preemption.as_ref().and_then(|rep| {
+                    rep.reallocation
+                        .as_ref()
+                        .map(|p| self.task(p.task).map(|r| r.variant).unwrap_or_default())
+                });
+                HpSweepDecision { task, decision_t, outcome, variant, realloc_variant }
+            })
+            .collect()
+    }
+
+    /// Process one batch of low-priority admissions (see
+    /// [`ControlSurface::hp_sweep`] for the sweep contract). Only called
+    /// when [`ControlSurface::spill_active`] is `false`: spill re-homes a
+    /// request across shard states and must serialise through the router.
+    fn lp_request_sweep(&mut self, jobs: &[LpSweepJob]) -> Vec<LpSweepDecision> {
+        jobs.iter()
+            .map(|j| {
+                let (rid, decision_t, outcome) =
+                    self.handle_lp_request(j.frame, j.source, j.n, j.deadline, j.now);
+                for &t in &outcome.unallocated {
+                    self.fail_task(t, FailReason::NoResources, j.now);
+                }
+                let variants = outcome
+                    .placements
+                    .iter()
+                    .map(|p| self.task(p.task).map(|r| r.variant).unwrap_or_default())
+                    .collect();
+                LpSweepDecision { rid, decision_t, outcome, variants }
+            })
+            .collect()
+    }
 }
 
 /// Job priority classes in the controller queue: high-priority requests
@@ -448,6 +581,10 @@ impl<P: Policy> ControlSurface for Controller<P> {
 
     fn fingerprint(&self) -> String {
         self.state.fingerprint()
+    }
+
+    fn link_slot_count(&self) -> usize {
+        self.state.link().len()
     }
 }
 

@@ -44,7 +44,8 @@ USAGE:
   pats fidelity [--sizes N,N,...] [--cycles N] [--crash-pct P] [--seed S]
              [--config FILE] [--out DIR]
   pats shards [--devices N] [--cycles N] [--shard-counts K,K,...]
-             [--spill-fanout F] [--seed S] [--config FILE] [--out DIR]
+             [--spill-fanout F] [--engine serial|parallel] [--seed S]
+             [--config FILE] [--out DIR]
   pats trace-gen --dist DIST [--frames N] [--seed S] [--out FILE]
   pats check [--artifacts DIR]
 
@@ -328,6 +329,9 @@ fn cmd_shards(args: &Args) -> Result<(), String> {
             .parse::<usize>()
             .map_err(|_| format!("bad --spill-fanout value {v:?}"))?;
     }
+    if let Some(v) = args.opt("engine") {
+        cfg.sharding.engine = pats::config::EngineKind::parse(v).map_err(|e| e.to_string())?;
+    }
     let counts: Vec<usize> = match args.opt("shard-counts") {
         Some(csv) => csv
             .split(',')
@@ -348,8 +352,8 @@ fn cmd_shards(args: &Args) -> Result<(), String> {
     cfg.validate().map_err(|e| e.to_string())?;
     eprintln!(
         "running the shard sweep: {} devices × {} cycles at {counts:?} shards \
-         (spill fan-out {}) ...",
-        cfg.devices, cfg.fleet.cycles, cfg.sharding.spill_fanout
+         (spill fan-out {}, engine {}) ...",
+        cfg.devices, cfg.fleet.cycles, cfg.sharding.spill_fanout, cfg.sharding.engine
     );
     let t0 = std::time::Instant::now();
     let rows = pats::experiments::shard_scale(&cfg, &counts);

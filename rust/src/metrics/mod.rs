@@ -394,6 +394,19 @@ impl ScenarioMetrics {
             )
     }
 
+    /// [`ScenarioMetrics::to_json`] minus the `latency_ms` block — every
+    /// field that is a pure function of the virtual simulation, with the
+    /// wall-clock decision timings (the one nondeterministic input)
+    /// stripped. Two runs of the same scenario under the same engine and
+    /// seed must serialise to byte-identical strings of this
+    /// (`rust/tests/engine_equivalence.rs` determinism stress).
+    pub fn deterministic_json(&self) -> Json {
+        let Json::Obj(entries) = self.to_json() else {
+            unreachable!("to_json builds an object");
+        };
+        Json::Obj(entries.into_iter().filter(|(k, _)| k != "latency_ms").collect())
+    }
+
     /// One human-readable summary block.
     pub fn render_text(&self) -> String {
         let pr = self.lp_per_request_pct();

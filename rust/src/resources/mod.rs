@@ -11,6 +11,7 @@
 //! behavioural proof against the seed's linear scan.
 
 mod cores;
+pub(crate) mod pool;
 mod timeline;
 
 pub use cores::{CoreSlot, CoreTimeline};

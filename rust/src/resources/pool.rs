@@ -1,0 +1,98 @@
+//! Thread-local scratch-timeline pool for the planning layer.
+//!
+//! Candidate-plan search (rescue, preemption, degraded-variant retries)
+//! opens many [`super::Timeline`] scratch copies and drops most of them:
+//! every losing candidate used to pay a full link-calendar clone — the
+//! dominant placement cost named in KNOWN_ISSUES §Plan cost model. The
+//! pool turns that loser cost into an undo-log replay: a plan that rolls
+//! its scratch timeline back to the base state returns it here, and the
+//! next plan opened against the *same* base state borrows it instead of
+//! cloning.
+//!
+//! Keying and safety:
+//!
+//! * Entries are keyed by `(state uid, state version)`. The uid is minted
+//!   per [`crate::state::NetworkState`] from a process-wide counter and
+//!   the version is the state's mutation stamp, so a pooled timeline can
+//!   only ever be handed to a borrower whose base state has **bit-identical
+//!   link reservations** — a stale entry (the state mutated, or a
+//!   different state entirely) simply never matches and ages out.
+//! * The pool is thread-local. Shard decision sweeps run one shard per
+//!   scoped thread; each thread's searches only ever open plans against
+//!   that shard's state, so entries never cross shards and no locking is
+//!   needed.
+//! * Only *fully rolled back* timelines are returned (the plan layer
+//!   replays its undo log and verifies every step; on any rollback
+//!   failure the timeline is dropped, not pooled). Debug builds
+//!   additionally verify content equality against the live state on every
+//!   pool hit.
+
+use std::cell::RefCell;
+
+use super::Timeline;
+
+/// Entries kept per thread. Candidate searches hold at most a handful of
+/// live plans at once (`RESCUE_TOP_K` + the shared plan), so a small cap
+/// bounds memory without hurting the hit rate.
+const POOL_CAP: usize = 8;
+
+thread_local! {
+    static POOL: RefCell<Vec<(u64, u64, Timeline)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Borrow a pooled scratch timeline for the state identified by
+/// `(uid, version)`, if one is available.
+pub(crate) fn acquire(uid: u64, version: u64) -> Option<Timeline> {
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        let idx = pool.iter().position(|(u, v, _)| *u == uid && *v == version)?;
+        Some(pool.swap_remove(idx).2)
+    })
+}
+
+/// Return a fully rolled-back scratch timeline to the pool. Oldest entries
+/// are evicted beyond [`POOL_CAP`].
+pub(crate) fn release(uid: u64, version: u64, tl: Timeline) {
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        if pool.len() >= POOL_CAP {
+            pool.remove(0);
+        }
+        pool.push((uid, version, tl));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::SlotKind;
+    use crate::task::TaskId;
+    use crate::time::{SimDuration, SimTime};
+
+    #[test]
+    fn acquire_matches_key_exactly() {
+        let mut tl = Timeline::new();
+        tl.reserve(SimTime::ZERO, SimDuration::from_micros(5), SlotKind::PollMsg, TaskId(1))
+            .unwrap();
+        release(77, 3, tl.clone());
+        assert!(acquire(77, 4).is_none(), "version mismatch must miss");
+        assert!(acquire(78, 3).is_none(), "uid mismatch must miss");
+        let got = acquire(77, 3).expect("exact key must hit");
+        assert!(got.same_reservations(&tl));
+        assert!(acquire(77, 3).is_none(), "an entry is handed out once");
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        for i in 0..(POOL_CAP as u64 + 5) {
+            release(1000 + i, 0, Timeline::new());
+        }
+        // The oldest entries were evicted; the newest survive.
+        assert!(acquire(1000, 0).is_none());
+        assert!(acquire(1000 + POOL_CAP as u64 + 4, 0).is_some());
+        // Drain whatever remains so other tests see a clean pool.
+        for i in 0..(POOL_CAP as u64 + 5) {
+            let _ = acquire(1000 + i, 0);
+        }
+    }
+}

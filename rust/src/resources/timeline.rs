@@ -57,7 +57,7 @@ pub enum SlotKind {
 }
 
 /// One reserved slot.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Slot {
     /// The reserved half-open window.
     pub window: Window,
@@ -396,6 +396,37 @@ impl Timeline {
     /// paths.
     pub fn slots(&self) -> Vec<Slot> {
         self.slots.values().cloned().collect()
+    }
+
+    /// The slot starting exactly at `start`, if any. O(log n); the
+    /// planning layer snapshots a reservation here before releasing it so
+    /// the release can be rolled back precisely.
+    pub fn slot_at(&self, start: SimTime) -> Option<&Slot> {
+        self.slots.get(&start)
+    }
+
+    /// Snapshots of every slot `owner` holds that starts at or after `t`,
+    /// in start order — exactly the set [`Timeline::remove_owner_from`]
+    /// would remove. The planning layer captures these before staging an
+    /// eviction so the eviction can be rolled back.
+    pub fn owner_slots_from(&self, owner: TaskId, t: SimTime) -> Vec<Slot> {
+        let mut out: Vec<Slot> = match self.by_owner.get(&owner) {
+            Some(starts) => starts
+                .iter()
+                .filter(|&&s| s >= t)
+                .map(|s| self.slots[s].clone())
+                .collect(),
+            None => Vec::new(),
+        };
+        out.sort_by_key(|s| s.window.start);
+        out
+    }
+
+    /// True when both calendars hold exactly the same reservations
+    /// (slot-by-slot; the derived gap/owner indices are determined by the
+    /// slots). Debug instrumentation for the scratch-timeline pool.
+    pub fn same_reservations(&self, other: &Timeline) -> bool {
+        self.slots == other.slots
     }
 
     /// Total reserved time within `window`.

@@ -39,22 +39,132 @@
 //! # Cost model
 //!
 //! A plan's scratch copies are created lazily, per resource, on the first
-//! *staged mutation* touching that resource: the shared link timeline is
-//! cloned once per plan that reserves a link slot, and each device
-//! timeline is cloned only if the plan stages work on it. Read-only
-//! queries ([`PlacementPlan::link_view`], [`PlacementPlan::device_view`])
-//! never clone — they delegate to the base state until a mutation forks
-//! the scratch copy. Committing is O(staged ops) plus moving the scratch
-//! copies into place; dropping a plan is just a deallocation.
+//! *staged mutation* touching that resource: each device timeline is
+//! cloned only if the plan stages work on it, and read-only queries
+//! ([`PlacementPlan::link_view`], [`PlacementPlan::device_view`]) never
+//! clone — they delegate to the base state until a mutation forks the
+//! scratch copy. The shared link timeline — the fleet-sized calendar that
+//! used to cost one full clone per plan — goes through a *pooled* scratch
+//! ([`crate::resources::pool`]): the plan keeps an undo log of every
+//! staged link mutation, and when a plan is dropped uncommitted (every
+//! losing candidate in rescue/preemption search) the log is replayed LIFO
+//! to roll the scratch back to the base state, which is then returned to
+//! a thread-local pool keyed by `(state uid, state version)`. The next
+//! plan opened against the same snapshot borrows it instead of cloning,
+//! so an open-stage-drop cycle is O(staged ops) — independent of fleet
+//! size — after the first clone. Committing is O(staged ops) plus moving
+//! the scratch copies into place (winners bypass rollback entirely).
 
 use std::collections::{HashMap, HashSet};
 
 use crate::error::{Error, Result};
 use crate::fidelity::VariantId;
-use crate::resources::{CoreTimeline, SlotKind, Timeline};
+use crate::resources::{pool, CoreTimeline, Slot, SlotKind, Timeline};
 use crate::state::NetworkState;
 use crate::task::{Allocation, DeviceId, FailReason, Priority, TaskId, Window};
 use crate::time::{SimDuration, SimTime};
+
+/// Undo record for one staged link mutation. The scratch's undo log is
+/// replayed LIFO on drop to roll the timeline back to the base state
+/// before pooling it (see the module docs' cost model).
+#[derive(Debug, Clone)]
+enum LinkUndo {
+    /// Undo a staged reservation: release the slot `owner` holds at
+    /// `start`.
+    Release {
+        /// Start of the slot to release.
+        start: SimTime,
+        /// Owner the slot was reserved for.
+        owner: TaskId,
+    },
+    /// Undo a staged release/eviction: re-reserve the snapshotted slot.
+    Reserve(Slot),
+}
+
+/// The plan's lazily-forked, pooled scratch copy of the shared link
+/// timeline, plus the undo log that lets a dropped plan return the
+/// timeline to [`crate::resources::pool`] instead of deallocating it.
+#[derive(Debug, Clone, Default)]
+struct LinkScratch {
+    /// The forked timeline; `None` until the first staged link mutation.
+    tl: Option<Timeline>,
+    /// Staged link mutations in staging order (replayed in reverse).
+    undo: Vec<LinkUndo>,
+    /// Pool key `(state uid, state version)` of the base snapshot `tl`
+    /// was forked from; set exactly when `tl` is.
+    key: Option<(u64, u64)>,
+}
+
+impl LinkScratch {
+    /// True once a link mutation has forked the scratch copy.
+    fn started(&self) -> bool {
+        self.tl.is_some()
+    }
+
+    /// The forked timeline, if any (read-only).
+    fn view(&self) -> Option<&Timeline> {
+        self.tl.as_ref()
+    }
+
+    /// The forked timeline, forking on first use: borrow a pooled copy
+    /// rolled back to this exact `(uid, version)` snapshot when one
+    /// exists, clone the live calendar otherwise.
+    fn get_or_init(&mut self, st: &NetworkState) -> &mut Timeline {
+        if self.tl.is_none() {
+            let key = (st.uid(), st.version());
+            let tl = match pool::acquire(key.0, key.1) {
+                Some(tl) => {
+                    debug_assert!(
+                        tl.same_reservations(st.link()),
+                        "pooled timeline diverges from its base state"
+                    );
+                    tl
+                }
+                None => st.link().clone(),
+            };
+            self.tl = Some(tl);
+            self.key = Some(key);
+        }
+        self.tl.as_mut().expect("scratch was just initialised")
+    }
+
+    /// Move the timeline out for committing (no rollback, no pooling —
+    /// the committed scratch becomes the live calendar).
+    fn take(&mut self) -> Option<Timeline> {
+        self.undo.clear();
+        self.key = None;
+        self.tl.take()
+    }
+}
+
+impl Drop for LinkScratch {
+    fn drop(&mut self) {
+        let (Some(mut tl), Some((uid, version))) = (self.tl.take(), self.key.take()) else {
+            return;
+        };
+        // Roll the scratch back to the base snapshot by replaying the
+        // undo log newest-first. Every step must succeed (each undoes a
+        // mutation that provably happened); if one does not, the timeline
+        // is corrupt and must be dropped, never pooled — tracked through
+        // `ok` so release builds stay safe when the debug_assert is
+        // compiled out.
+        let mut ok = true;
+        for op in self.undo.drain(..).rev() {
+            match op {
+                LinkUndo::Release { start, owner } => ok &= tl.release(start, owner),
+                LinkUndo::Reserve(slot) => {
+                    ok &= tl
+                        .reserve(slot.window.start, slot.window.duration(), slot.kind, slot.owner)
+                        .is_ok();
+                }
+            }
+        }
+        debug_assert!(ok, "scratch-timeline rollback failed");
+        if ok {
+            pool::release(uid, version, tl);
+        }
+    }
+}
 
 /// One staged task-registry transition, replayed by [`NetworkState::apply`]
 /// after the resource scratch copies are installed.
@@ -147,7 +257,7 @@ pub(crate) struct PlanParts {
 #[derive(Debug, Clone)]
 pub struct PlacementPlan {
     version: u64,
-    link: Option<Timeline>,
+    link: LinkScratch,
     devices: HashMap<u32, CoreTimeline>,
     registry: Vec<RegistryOp>,
     /// Tasks with a staged `Place` op (O(1) duplicate rejection).
@@ -164,7 +274,7 @@ impl PlacementPlan {
     pub fn new(st: &NetworkState) -> PlacementPlan {
         PlacementPlan {
             version: st.version(),
-            link: None,
+            link: LinkScratch::default(),
             devices: HashMap::new(),
             registry: Vec::new(),
             placed: HashSet::new(),
@@ -194,7 +304,7 @@ impl PlacementPlan {
     /// True when nothing has been staged (no registry transition and no
     /// resource scratch was forked).
     pub fn is_empty(&self) -> bool {
-        self.registry.is_empty() && self.link.is_none() && self.devices.is_empty()
+        self.registry.is_empty() && !self.link.started() && self.devices.is_empty()
     }
 
     /// Evictions staged so far — the primary component of a candidate
@@ -208,7 +318,7 @@ impl PlacementPlan {
     /// The plan's view of the link: the scratch copy when a link operation
     /// was staged, the base state's timeline otherwise.
     pub fn link_view<'a>(&'a self, st: &'a NetworkState) -> &'a Timeline {
-        self.link.as_ref().unwrap_or_else(|| st.link())
+        self.link.view().unwrap_or_else(|| st.link())
     }
 
     /// The plan's view of device `d`'s core calendar.
@@ -238,7 +348,7 @@ impl PlacementPlan {
     // ---- scratch forks ---------------------------------------------------
 
     fn link_scratch(&mut self, st: &NetworkState) -> &mut Timeline {
-        self.link.get_or_insert_with(|| st.link().clone())
+        self.link.get_or_init(st)
     }
 
     fn device_scratch(&mut self, st: &NetworkState, d: DeviceId) -> &mut CoreTimeline {
@@ -265,7 +375,9 @@ impl PlacementPlan {
         kind: SlotKind,
         owner: TaskId,
     ) -> Result<Window> {
-        self.link_scratch(st).reserve(start, dur, kind, owner)
+        let w = self.link_scratch(st).reserve(start, dur, kind, owner)?;
+        self.link.undo.push(LinkUndo::Release { start: w.start, owner });
+        Ok(w)
     }
 
     /// Stage the earliest-fit link slot of `dur` at or after `not_before`.
@@ -293,10 +405,18 @@ impl PlacementPlan {
     /// slots (e.g. a preemption victim's notice staged earlier in the same
     /// plan under configs where the notice outsizes the message).
     pub fn unstage_link_at(&mut self, owner: TaskId, start: SimTime) -> bool {
-        match &mut self.link {
-            Some(link) => link.release(start, owner),
-            None => false,
+        let Some(link) = self.link.tl.as_mut() else {
+            return false;
+        };
+        // Snapshot before releasing so the release itself can be undone
+        // when the plan is dropped and its scratch rolled back.
+        let snap = link.slot_at(start).filter(|s| s.owner == owner).cloned();
+        let released = link.release(start, owner);
+        if released {
+            let snap = snap.expect("released slot must have been snapshotted");
+            self.link.undo.push(LinkUndo::Reserve(snap));
         }
+        released
     }
 
     /// Stage a core-window placement at the full-fidelity model variant —
@@ -444,7 +564,16 @@ impl PlacementPlan {
             return Err(Error::Invariant(format!("{victim:?} already evicted in this plan")));
         }
         self.device_scratch(st, alloc.device).remove_task(victim);
+        // Snapshot exactly the link slots the eviction removes so each can
+        // be re-reserved when a dropped plan rolls its scratch back.
+        let snaps = {
+            let link = self.link_scratch(st);
+            link.owner_slots_from(victim, now)
+        };
         self.link_scratch(st).remove_owner_from(victim, now);
+        self.link
+            .undo
+            .extend(snaps.into_iter().map(LinkUndo::Reserve));
         self.evicted.insert(victim);
         self.registry.push(RegistryOp::Evict { task: victim });
         self.evictions += 1;
@@ -457,13 +586,15 @@ impl PlacementPlan {
         self.registry.push(RegistryOp::Fail { task, reason, now });
     }
 
-    /// Dismantle the plan for [`NetworkState::apply`].
-    pub(crate) fn into_parts(self) -> PlanParts {
+    /// Dismantle the plan for [`NetworkState::apply`]. The link scratch is
+    /// moved out for committing (a committing plan's scratch becomes the
+    /// live calendar — it is never rolled back or pooled).
+    pub(crate) fn into_parts(mut self) -> PlanParts {
         PlanParts {
             version: self.version,
-            link: self.link,
-            devices: self.devices,
-            registry: self.registry,
+            link: self.link.take(),
+            devices: std::mem::take(&mut self.devices),
+            registry: std::mem::take(&mut self.registry),
         }
     }
 }
@@ -727,6 +858,104 @@ mod tests {
         assert!(plan.unstage_link_at(a, w.start));
         assert!(!plan.unstage_link_at(a, w.start), "second unstage is a no-op");
         assert_eq!(plan.link_view(&st).len(), 1, "historical slot survives");
+    }
+
+    #[test]
+    fn dropped_plan_returns_a_rolled_back_timeline_to_the_pool() {
+        let (_, mut st) = state();
+        let a = register(&mut st, 0, Priority::Low, 60.0);
+        let b = register(&mut st, 0, Priority::Low, 60.0);
+        // History on the live calendar so rollback has content to preserve.
+        st.charge_link_message(SimTime::ZERO, SimDuration::from_millis(3), SlotKind::LpAllocMsg, a);
+        let base = st.link().slots();
+        {
+            let mut plan = PlacementPlan::new(&st);
+            let w1 = plan.stage_link_earliest(
+                &st,
+                SimTime::from_secs_f64(1.0),
+                SimDuration::from_millis(3),
+                SlotKind::InputTransfer,
+                a,
+            );
+            plan.stage_link_earliest(
+                &st,
+                SimTime::from_secs_f64(2.0),
+                SimDuration::from_millis(5),
+                SlotKind::LpAllocMsg,
+                b,
+            );
+            assert!(plan.unstage_link_at(a, w1.start));
+            // Dropped here: the scratch must roll back to `base` and enter
+            // the pool (debug builds verify content equality on reuse).
+        }
+        // The next plan against the same snapshot borrows the pooled copy;
+        // its forked view must be exactly the base calendar.
+        let mut plan = PlacementPlan::new(&st);
+        let w = plan.stage_link_earliest(
+            &st,
+            SimTime::from_secs_f64(5.0),
+            SimDuration::from_millis(3),
+            SlotKind::InputTransfer,
+            b,
+        );
+        let mut want = base.clone();
+        let got = plan.link_view(&st).slots();
+        assert_eq!(got.len(), want.len() + 1);
+        assert!(got.iter().any(|s| s.window == w && s.owner == b));
+        want.retain(|s| !got.contains(s));
+        assert!(want.is_empty(), "pooled scratch lost base reservations");
+        plan.link_view(&st).check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dropped_eviction_plan_restores_victim_link_slots() {
+        let (cfg, mut st) = state();
+        let victim = register(&mut st, 0, Priority::Low, 60.0);
+        let mut setup = PlacementPlan::new(&st);
+        setup
+            .stage_placement(
+                &st,
+                Allocation {
+                    task: victim,
+                    device: DeviceId(0),
+                    window: win(0.0, 17.0),
+                    cores: 4,
+                    offloaded: false,
+                },
+            )
+            .unwrap();
+        setup.stage_link_earliest(
+            &st,
+            SimTime::from_secs_f64(17.0),
+            st.link_model.slot_duration(&cfg, SlotKind::StateUpdate),
+            SlotKind::StateUpdate,
+            victim,
+        );
+        st.apply(setup).unwrap();
+        let base = st.link().slots();
+        {
+            let mut plan = PlacementPlan::new(&st);
+            plan.stage_eviction(&st, victim, SimTime::ZERO).unwrap();
+            assert_eq!(plan.link_view(&st).len(), base.len() - 1);
+            // Dropped: the eviction's removed slot must be re-reserved
+            // before the scratch is pooled.
+        }
+        let plan = {
+            let mut p = PlacementPlan::new(&st);
+            p.stage_link_earliest(
+                &st,
+                SimTime::ZERO,
+                SimDuration::from_millis(1),
+                SlotKind::PollMsg,
+                victim,
+            );
+            p
+        };
+        let got = plan.link_view(&st).slots();
+        for s in &base {
+            assert!(got.contains(s), "victim slot {s:?} not restored by rollback");
+        }
+        plan.link_view(&st).check_invariants().unwrap();
     }
 
     #[test]

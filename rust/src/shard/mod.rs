@@ -36,11 +36,15 @@
 //!   them. Ids stay globally unique via strided minting
 //!   ([`NetworkState::set_id_scheme`]): shard s mints `s, s+K, s+2K, …`.
 //! * **Parallel decision sweeps.** Shards share no mutable state, so batch
-//!   decision phases can run one shard per OS thread
-//!   ([`ControlPlane::lp_sweep`] on `std::thread::scope`) — the
-//!   first real wall-clock parallelism in the codebase, exercised by
-//!   `cargo bench --bench shards` (`BENCH_shards.json`) and the
-//!   `pats shards` sweep.
+//!   decision phases run one shard per OS thread (`std::thread::scope`).
+//!   Two doors expose this: the standalone [`ControlPlane::lp_sweep`]
+//!   experiment/bench path, and the [`ControlSurface::hp_sweep`] /
+//!   [`ControlSurface::lp_request_sweep`] overrides driven by the batched
+//!   simulation engine (`sharding.engine = parallel`; ARCHITECTURE
+//!   §Parallel event loop documents the barrier protocol). Decisions come
+//!   back in the original event order and carry their decision-time
+//!   variants, so the engine's serial apply phase — and with it every
+//!   metric and fingerprint — is bit-identical to the serial event loop.
 //!
 //! With `sharding.shards = 1` (the default) the plane is one shard, no
 //! call can spill, and behaviour is bit-identical to driving the raw
@@ -51,7 +55,9 @@
 use std::collections::HashMap;
 
 use crate::config::SystemConfig;
-use crate::coordinator::{ControlSurface, Controller};
+use crate::coordinator::{
+    ControlSurface, Controller, HpSweepDecision, HpSweepJob, LpSweepDecision, LpSweepJob,
+};
 use crate::error::{Error, Result};
 use crate::net::LinkModel;
 use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome};
@@ -419,7 +425,7 @@ impl<P: Policy> ControlPlane<P> {
     }
 }
 
-impl<P: Policy> ControlSurface for ControlPlane<P> {
+impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
     fn handle_hp_request(
         &mut self,
         frame: FrameId,
@@ -576,6 +582,115 @@ impl<P: Policy> ControlSurface for ControlPlane<P> {
             out.push_str(&shard.state.fingerprint());
         }
         out
+    }
+
+    fn link_slot_count(&self) -> usize {
+        self.shards.iter().map(|c| c.state.link().len()).sum()
+    }
+
+    fn spill_active(&self) -> bool {
+        // `spill_fanout` is already clamped to min(config, K − 1), so a
+        // 1-shard plane reports inactive and stays batchable — exactly the
+        // configuration the bit-identity tests compare against the raw
+        // controller.
+        self.spill_fanout > 0
+    }
+
+    fn hp_sweep(&mut self, jobs: &[HpSweepJob]) -> Vec<HpSweepDecision> {
+        // Partition the batch by home shard, preserving slice order within
+        // each shard (the sweep contract), then run one shard per OS
+        // thread — sound because shards share no mutable state. HP tasks
+        // never spill, so the router is not involved mid-sweep.
+        let k = self.shards.len();
+        let mut idx: Vec<Vec<usize>> = vec![Vec::new(); k];
+        let mut per: Vec<Vec<HpSweepJob>> = vec![Vec::new(); k];
+        for (i, j) in jobs.iter().enumerate() {
+            let s = self.home[j.source.0 as usize];
+            idx[s].push(i);
+            per[s].push(*j);
+        }
+        let per_shard: Vec<Vec<HpSweepDecision>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter_mut()
+                .zip(&per)
+                .map(|(shard, batch)| scope.spawn(move || ControlSurface::hp_sweep(shard, batch)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|handle| handle.join().expect("shard sweep thread panicked"))
+                .collect()
+        });
+        // Scatter the decisions back to the original event order and fold
+        // the minted ids into the router's home maps.
+        let mut out: Vec<Option<HpSweepDecision>> = vec![None; jobs.len()];
+        for (s, decisions) in per_shard.into_iter().enumerate() {
+            for (d, &i) in decisions.into_iter().zip(&idx[s]) {
+                self.task_home.insert(d.task, s);
+                out[i] = Some(d);
+            }
+        }
+        out.into_iter().map(|d| d.expect("every sweep job decided")).collect()
+    }
+
+    fn lp_request_sweep(&mut self, jobs: &[LpSweepJob]) -> Vec<LpSweepDecision> {
+        // Spill re-homes registrations between shard states and must
+        // serialise through the router. The batched engine never batches
+        // LP requests while `spill_active()`, but stay correct (serial,
+        // spill-capable) if a caller sweeps anyway.
+        if self.spill_active() {
+            return jobs
+                .iter()
+                .map(|j| {
+                    let (rid, decision_t, outcome) =
+                        self.handle_lp_request(j.frame, j.source, j.n, j.deadline, j.now);
+                    for &t in &outcome.unallocated {
+                        self.fail_task(t, FailReason::NoResources, j.now);
+                    }
+                    let variants = outcome
+                        .placements
+                        .iter()
+                        .map(|p| self.task(p.task).map(|r| r.variant).unwrap_or_default())
+                        .collect();
+                    LpSweepDecision { rid, decision_t, outcome, variants }
+                })
+                .collect();
+        }
+        let k = self.shards.len();
+        let mut idx: Vec<Vec<usize>> = vec![Vec::new(); k];
+        let mut per: Vec<Vec<LpSweepJob>> = vec![Vec::new(); k];
+        for (i, j) in jobs.iter().enumerate() {
+            let s = self.home[j.source.0 as usize];
+            idx[s].push(i);
+            per[s].push(*j);
+        }
+        let per_shard: Vec<Vec<LpSweepDecision>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter_mut()
+                .zip(&per)
+                .map(|(shard, batch)| {
+                    scope.spawn(move || ControlSurface::lp_request_sweep(shard, batch))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|handle| handle.join().expect("shard sweep thread panicked"))
+                .collect()
+        });
+        let mut out: Vec<Option<LpSweepDecision>> = vec![None; jobs.len()];
+        for (s, decisions) in per_shard.into_iter().enumerate() {
+            for (d, &i) in decisions.into_iter().zip(&idx[s]) {
+                self.request_home.insert(d.rid, s);
+                if let Some(req) = self.shards[s].state.request(d.rid) {
+                    for t in req.tasks.clone() {
+                        self.task_home.insert(t, s);
+                    }
+                }
+                out[i] = Some(d);
+            }
+        }
+        out.into_iter().map(|d| d.expect("every sweep job decided")).collect()
     }
 }
 

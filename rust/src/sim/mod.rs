@@ -22,9 +22,12 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 
-use crate::config::{Policy as PolicyKind, SystemConfig};
-use crate::coordinator::{ControlSurface, Controller};
+use crate::config::{EngineKind, Policy as PolicyKind, SystemConfig};
+use crate::coordinator::{
+    ControlSurface, Controller, HpSweepDecision, HpSweepJob, LpSweepDecision, LpSweepJob,
+};
 use crate::device::{execute_in_window, ExecOutcome, ExecutionModel};
+use crate::fidelity::VariantId;
 use crate::metrics::ScenarioMetrics;
 use crate::pipeline::{FrameRecord, StartSchedule};
 use crate::resources::SlotKind;
@@ -112,7 +115,7 @@ pub fn run_scenario_dynamic(
     churn: &ChurnScript,
     label: &str,
 ) -> SimResult {
-    fn dispatch<P: Policy>(
+    fn dispatch<P: Policy + Send>(
         cfg: &SystemConfig,
         trace: &Trace,
         churn: &ChurnScript,
@@ -171,6 +174,12 @@ pub fn run_with_policy_dynamic<P: Policy>(
 /// Returns the result together with the surface so callers can inspect
 /// the final control-plane state (fingerprint equivalence tests, spill
 /// audits).
+///
+/// `cfg.sharding.engine` selects the event loop: `serial` processes one
+/// event at a time; `parallel` batches adjacent admission requests into
+/// decision sweeps ([`Sim::drain_batched`]) so a sharded surface can run
+/// one shard per OS thread between barriers. The two are bit-identical by
+/// construction (`rust/tests/engine_equivalence.rs`).
 pub fn run_with_surface_dynamic<S: ControlSurface>(
     cfg: &SystemConfig,
     trace: &Trace,
@@ -182,7 +191,10 @@ pub fn run_with_surface_dynamic<S: ControlSurface>(
     let mut sim = Sim::new(cfg.clone(), trace, label, surface);
     sim.seed_frames(trace);
     sim.seed_churn(churn);
-    let virtual_end = sim.drain();
+    let virtual_end = match cfg.sharding.engine {
+        EngineKind::Serial => sim.drain(),
+        EngineKind::Parallel => sim.drain_batched(),
+    };
     sim.finalize(trace);
     let result = SimResult { metrics: sim.metrics, elapsed: wall0.elapsed(), virtual_end };
     (result, sim.surface)
@@ -329,8 +341,12 @@ impl<S: ControlSurface> Sim<S> {
         }
     }
 
+    /// How often the event loops compact finished reservations.
+    const PRUNE_EVERY_S: f64 = 60.0;
+
     /// Process events to exhaustion; returns the final virtual time.
     fn drain(&mut self) -> SimTime {
+        let prune_every = SimDuration::from_secs_f64(Self::PRUNE_EVERY_S);
         let mut now = SimTime::ZERO;
         while let Some(Reverse(ev)) = self.events.pop() {
             debug_assert!(ev.at >= now, "event time regression");
@@ -339,23 +355,281 @@ impl<S: ControlSurface> Sim<S> {
             // cannot influence future decisions (earliest-fit and the
             // time-point search only look forward from `now`), but leaving
             // it in place makes every link operation O(total history).
-            if now.since(self.last_prune) > SimDuration::from_secs_f64(60.0) {
+            if now.since(self.last_prune) > prune_every {
+                self.surface.prune_before(now);
+                self.last_prune = now;
+            }
+            self.dispatch_event(ev.kind, now);
+        }
+        now
+    }
+
+    /// Handle one event exactly as the serial engine does (shared by both
+    /// event loops for every non-batched event kind).
+    fn dispatch_event(&mut self, kind: EventKind, now: SimTime) {
+        match kind {
+            EventKind::FrameStart { frame_idx } => self.on_frame_start(frame_idx, now),
+            EventKind::HpRequest { frame_idx } => self.on_hp_request(frame_idx, now),
+            EventKind::TaskResolve { task, gen, completed } => {
+                self.on_task_resolve(task, gen, completed, now)
+            }
+            EventKind::LpRequest { frame_idx } => self.on_lp_request(frame_idx, now),
+            EventKind::PollTick { device } => self.on_poll_tick(device, now),
+            EventKind::Churn { idx } => self.on_churn(idx, now),
+            EventKind::FailureDetected { device } => self.on_failure_detected(device, now),
+        }
+    }
+
+    /// Process events to exhaustion with *batched decision sweeps* — the
+    /// conservatively-synchronised parallel engine (`sharding.engine =
+    /// parallel`).
+    ///
+    /// A batch is a maximal run of consecutive same-kind admission events
+    /// (all HP requests or all LP requests) popped off the heap together
+    /// and handed to the surface as one sweep
+    /// ([`ControlSurface::hp_sweep`] / [`ControlSurface::lp_request_sweep`]);
+    /// a sharded surface runs the sweep one shard per OS thread. Everything
+    /// between two sweeps — and every other event kind — is a barrier.
+    ///
+    /// Why this is bit-identical to [`Sim::drain`] (the equivalence the
+    /// differential harness locks down):
+    ///
+    /// * **Cutoff.** An event joins a batch only while its arrival time
+    ///   precedes the *first* member's decision instant: the controller
+    ///   charges one `controller_overhead_s` per job
+    ///   ([`Controller::admit`]), so every side effect of any member lands
+    ///   at `decision_t ≥ first.at + overhead`, strictly after the last
+    ///   member's arrival — the serial engine could not have interleaved
+    ///   any produced event inside the batch either. Zero overhead
+    ///   degrades batches to size 1, so the batched loop simply routes
+    ///   through the serial handlers.
+    /// * **Order.** Jobs stay in heap (`(at, seq)`) order through the
+    ///   sweep; decisions come back in the same order and are applied
+    ///   serially, so every simulator-side push, RNG draw, and metric add
+    ///   happens in exactly the serial sequence. Surface-side, each shard
+    ///   handles its own jobs in that order; cross-shard interleavings
+    ///   commute because shards share no mutable state.
+    /// * **Guards.** Batch members are all admission events, so none of
+    ///   the state a member's pre-sweep guard reads (`device_gone`,
+    ///   churn flags) can change mid-batch. Decision-time model variants
+    ///   ride back in the sweep decisions because a later same-shard
+    ///   decision may re-evict a reallocated victim before apply time.
+    /// * **Prune barrier.** Compaction fires only between batches, at the
+    ///   epoch the serial engine would have pruned; a member that would
+    ///   have crossed the prune deadline ends the batch instead
+    ///   (`head.at.since(last_prune) > prune_every`).
+    ///
+    /// LP requests are swept only while the surface reports
+    /// [`ControlSurface::spill_active`] false: spill re-homes
+    /// registrations across shard states and must serialise through the
+    /// router.
+    fn drain_batched(&mut self) -> SimTime {
+        let overhead = SimDuration::from_secs_f64(self.cfg.controller_overhead_s);
+        let prune_every = SimDuration::from_secs_f64(Self::PRUNE_EVERY_S);
+        let mut now = SimTime::ZERO;
+        while let Some(Reverse(ev)) = self.events.pop() {
+            debug_assert!(ev.at >= now, "event time regression");
+            now = ev.at;
+            if now.since(self.last_prune) > prune_every {
                 self.surface.prune_before(now);
                 self.last_prune = now;
             }
             match ev.kind {
-                EventKind::FrameStart { frame_idx } => self.on_frame_start(frame_idx, now),
-                EventKind::HpRequest { frame_idx } => self.on_hp_request(frame_idx, now),
-                EventKind::TaskResolve { task, gen, completed } => {
-                    self.on_task_resolve(task, gen, completed, now)
+                EventKind::HpRequest { frame_idx } if overhead > SimDuration::ZERO => {
+                    let batch = self.collect_batch(frame_idx, now, overhead, prune_every, true);
+                    self.hp_batch(&batch);
                 }
-                EventKind::LpRequest { frame_idx } => self.on_lp_request(frame_idx, now),
-                EventKind::PollTick { device } => self.on_poll_tick(device, now),
-                EventKind::Churn { idx } => self.on_churn(idx, now),
-                EventKind::FailureDetected { device } => self.on_failure_detected(device, now),
+                EventKind::LpRequest { frame_idx }
+                    if overhead > SimDuration::ZERO && !self.surface.spill_active() =>
+                {
+                    let batch = self.collect_batch(frame_idx, now, overhead, prune_every, false);
+                    self.lp_batch(&batch);
+                }
+                kind => self.dispatch_event(kind, now),
             }
         }
         now
+    }
+
+    /// Pop the maximal batchable run headed by the admission event
+    /// `(first_frame, first_at)`: consecutive same-kind requests arriving
+    /// before the first decision instant (`first_at + overhead`) that
+    /// would not cross the prune deadline. Returns `(frame_idx, at)` in
+    /// heap order.
+    fn collect_batch(
+        &mut self,
+        first_frame: usize,
+        first_at: SimTime,
+        overhead: SimDuration,
+        prune_every: SimDuration,
+        hp: bool,
+    ) -> Vec<(usize, SimTime)> {
+        let mut batch = vec![(first_frame, first_at)];
+        while let Some(Reverse(head)) = self.events.peek() {
+            let same_kind = match head.kind {
+                EventKind::HpRequest { .. } => hp,
+                EventKind::LpRequest { .. } => !hp,
+                _ => false,
+            };
+            if !same_kind
+                || head.at.since(first_at) >= overhead
+                || head.at.since(self.last_prune) > prune_every
+            {
+                break;
+            }
+            let Some(Reverse(next)) = self.events.pop() else { break };
+            match next.kind {
+                EventKind::HpRequest { frame_idx } | EventKind::LpRequest { frame_idx } => {
+                    batch.push((frame_idx, next.at))
+                }
+                _ => unreachable!("peeked a batchable admission event"),
+            }
+        }
+        batch
+    }
+
+    /// Run one batch of HP requests as a single decision sweep: apply the
+    /// serial engine's pre-handler guards per member, sweep the surface,
+    /// then replay the simulator-side effects serially in event order.
+    fn hp_batch(&mut self, batch: &[(usize, SimTime)]) {
+        let mut jobs: Vec<HpSweepJob> = Vec::with_capacity(batch.len());
+        let mut meta: Vec<usize> = Vec::with_capacity(batch.len());
+        for &(frame_idx, at) in batch {
+            let (frame_id, device) = {
+                let f = &self.frames[frame_idx];
+                (f.id, f.device)
+            };
+            // The device died mid-stage-1: the request is never issued.
+            // Churn cannot fire mid-batch, so the guard state is exactly
+            // what the serial engine would have seen per event.
+            if self.device_gone(device) {
+                self.skipped_frames.insert(frame_idx);
+                continue;
+            }
+            self.metrics.hp_generated += 1;
+            jobs.push(HpSweepJob { frame: frame_id, source: device, now: at });
+            meta.push(frame_idx);
+        }
+        if jobs.is_empty() {
+            return;
+        }
+        let decisions = self.surface.hp_sweep(&jobs);
+        debug_assert_eq!(decisions.len(), meta.len(), "one decision per sweep job");
+        for (d, &frame_idx) in decisions.iter().zip(&meta) {
+            self.apply_hp_decision(d, frame_idx);
+        }
+    }
+
+    /// Replay the simulator-side effects of one swept HP decision —
+    /// the body of [`Sim::on_hp_request`] after its `handle_hp_request`
+    /// call, with registry reads replaced by the decision-time captures
+    /// (the sweep already performed the no-window `fail_task`).
+    fn apply_hp_decision(&mut self, d: &HpSweepDecision, frame_idx: usize) {
+        let task = d.task;
+        self.task_frame.insert(task, frame_idx);
+        let outcome = &d.outcome;
+        self.metrics.requeued_via_mirror += outcome.requeued_via_mirror;
+        let ms = outcome.search.as_secs_f64() * 1_000.0;
+        if let Some(report) = &outcome.preemption {
+            self.metrics.hp_preempt_path_ms.add(ms);
+            self.metrics
+                .lp_realloc_ms
+                .add(report.realloc_search.as_secs_f64() * 1_000.0);
+            self.metrics
+                .record_preemption(report.victim_cores, report.reallocation.is_some());
+            if let Some(p) = report.reallocation.clone() {
+                let variant = d.realloc_variant.unwrap_or_default();
+                if variant.is_degraded() {
+                    self.metrics.degraded_victim_realloc += 1;
+                }
+                self.metrics.record_core_alloc(p.cores, p.offloaded);
+                self.schedule_lp_placement_with(&p, variant);
+            }
+        } else {
+            self.metrics.hp_alloc_ms.add(ms);
+        }
+
+        match outcome.window {
+            Some(window) => {
+                self.hp_used_preemption
+                    .insert(task, outcome.preemption.is_some());
+                let gen = self.bump_gen(task);
+                let variant = d.variant;
+                if variant.is_degraded() {
+                    self.metrics.degraded_hp_admission += 1;
+                }
+                let hp_factor = self.cfg.fidelity.catalog.hp_variant(variant).time_factor;
+                let actual = self.exec.sample_hp_at(hp_factor, &mut self.rng);
+                match execute_in_window(&window, None, actual) {
+                    ExecOutcome::Completed(t) => {
+                        self.push(t, EventKind::TaskResolve { task, gen, completed: true })
+                    }
+                    ExecOutcome::Violated => self.push(
+                        window.end,
+                        EventKind::TaskResolve { task, gen, completed: false },
+                    ),
+                }
+            }
+            None => {
+                self.metrics.hp_failed_alloc += 1;
+                self.frames[frame_idx].on_hp_result(false);
+            }
+        }
+    }
+
+    /// Run one batch of LP requests as a single decision sweep (see
+    /// [`Sim::hp_batch`]).
+    fn lp_batch(&mut self, batch: &[(usize, SimTime)]) {
+        let mut jobs: Vec<LpSweepJob> = Vec::with_capacity(batch.len());
+        let mut meta: Vec<usize> = Vec::with_capacity(batch.len());
+        for &(frame_idx, at) in batch {
+            let (frame_id, device, n, deadline) = {
+                let f = &self.frames[frame_idx];
+                (f.id, f.device, f.load.lp_tasks(), f.deadline)
+            };
+            if self.device_gone(device) {
+                self.skipped_frames.insert(frame_idx);
+                continue;
+            }
+            debug_assert!(n > 0);
+            self.metrics.lp_generated += n as u64;
+            self.metrics.lp_sets_total += 1;
+            jobs.push(LpSweepJob { frame: frame_id, source: device, n, deadline, now: at });
+            meta.push(frame_idx);
+        }
+        if jobs.is_empty() {
+            return;
+        }
+        let decisions = self.surface.lp_request_sweep(&jobs);
+        debug_assert_eq!(decisions.len(), meta.len(), "one decision per sweep job");
+        for (d, &frame_idx) in decisions.iter().zip(&meta) {
+            self.apply_lp_decision(d, frame_idx);
+        }
+    }
+
+    /// Replay the simulator-side effects of one swept LP decision — the
+    /// body of [`Sim::on_lp_request`] after its `handle_lp_request` call
+    /// (the sweep already failed the unallocated tasks, in the order the
+    /// serial engine fails them).
+    fn apply_lp_decision(&mut self, d: &LpSweepDecision, frame_idx: usize) {
+        for t in &self.surface.request(d.rid).expect("request just registered").tasks.clone() {
+            self.task_frame.insert(*t, frame_idx);
+        }
+        self.metrics
+            .lp_alloc_ms
+            .add(d.outcome.search.as_secs_f64() * 1_000.0);
+        debug_assert_eq!(
+            d.variants.len(),
+            d.outcome.placements.len(),
+            "one decision-time variant per placement"
+        );
+        for (p, &variant) in d.outcome.placements.iter().zip(&d.variants) {
+            if variant.is_degraded() {
+                self.metrics.degraded_lp_admission += 1;
+            }
+            self.metrics.record_core_alloc(p.cores, p.offloaded);
+            self.schedule_lp_placement_with(p, variant);
+        }
     }
 
     /// Apply one scripted churn event.
@@ -645,17 +919,23 @@ impl<S: ControlSurface> Sim<S> {
         }
     }
 
-    /// Sample reality for one LP placement and schedule its resolution.
+    /// Sample reality for one LP placement and schedule its resolution,
+    /// reading the committed model variant live from the registry (serial
+    /// engine and non-batched paths; the batched engine supplies the
+    /// decision-time capture via [`Sim::schedule_lp_placement_with`]).
     fn schedule_lp_placement(&mut self, p: &LpPlacement) {
+        let variant = self.task_variant(p.task);
+        self.schedule_lp_placement_with(p, variant);
+    }
+
+    /// Sample reality for one LP placement committed at `variant` and
+    /// schedule its resolution.
+    fn schedule_lp_placement_with(&mut self, p: &LpPlacement, variant: VariantId) {
         let gen = self.bump_gen(p.task);
         // The committed model variant sizes both the transfer (smaller
         // input) and the execution (faster model); factors are 1.0 — and
         // every scale() exact — at full fidelity.
-        let vdef = *self
-            .cfg
-            .fidelity
-            .catalog
-            .lp_variant(self.task_variant(p.task));
+        let vdef = *self.cfg.fidelity.catalog.lp_variant(variant);
         // Offloaded input: the transfer slot starts on schedule but its
         // actual duration is jittered — late arrival eats the window pad.
         // The transfer rides the hosting shard's link partition.

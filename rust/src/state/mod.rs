@@ -14,6 +14,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::config::SystemConfig;
 use crate::error::{Error, Result};
@@ -79,9 +80,18 @@ pub struct NetworkState {
     /// windows, so an estimator change (churn link degradation) affects
     /// only *future* sizing, never the validity of already-staged slots.
     version: u64,
+    /// Process-unique identity of this state instance, minted at
+    /// construction. Together with `version` it keys the scratch-timeline
+    /// pool (`resources::pool`): a pooled timeline only ever matches the
+    /// exact state snapshot it was rolled back to.
+    uid: u64,
     /// Shared-link throughput estimator (message slot sizing).
     pub link_model: LinkModel,
 }
+
+/// Source of [`NetworkState`] uids; 0 is never minted so it can serve as
+/// a "no state" sentinel.
+static NEXT_STATE_UID: AtomicU64 = AtomicU64::new(1);
 
 impl NetworkState {
     /// A fresh, empty view of the configured topology.
@@ -98,6 +108,7 @@ impl NetworkState {
             next_request: 0,
             id_stride: 1,
             version: 0,
+            uid: NEXT_STATE_UID.fetch_add(1, Ordering::Relaxed),
             link_model: LinkModel::new(cfg),
         }
     }
@@ -105,6 +116,12 @@ impl NetworkState {
     /// Current mutation stamp (see [`NetworkState::apply`]).
     pub fn version(&self) -> u64 {
         self.version
+    }
+
+    /// Process-unique identity of this state instance (scratch-timeline
+    /// pool key; see the field docs).
+    pub fn uid(&self) -> u64 {
+        self.uid
     }
 
     fn touch(&mut self) {

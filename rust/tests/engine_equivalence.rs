@@ -1,0 +1,362 @@
+//! Differential harness for the two simulation engines: the serial
+//! reference event loop (`sharding.engine = serial`) and the batched
+//! parallel engine (`sharding.engine = parallel`) must be **bit-identical**
+//! on every scenario — same final network-state fingerprint, same summary
+//! counters, same exported JSON — at every shard count and policy.
+//!
+//! Parameterised by environment (used by the CI `test-matrix` job):
+//!
+//! * `PATS_EQ_SHARDS`: comma list of shard counts to test (default `1,4`).
+//!   Counts above a scenario's device count are skipped.
+//! * `PATS_EQ_ENGINE`: `serial` | `parallel` | `both` (default `both`).
+//!   With a single engine the harness still runs every scenario (invariant
+//!   smoke + determinism); with `both` it additionally asserts the
+//!   engine-vs-engine equivalence.
+
+use pats::config::{EngineKind, SystemConfig};
+use pats::coordinator::{ControlSurface, Controller};
+use pats::metrics::ScenarioMetrics;
+use pats::scheduler::{PatsScheduler, Policy};
+use pats::shard::ControlPlane;
+use pats::sim::run_with_surface_dynamic;
+use pats::task::DeviceId;
+use pats::time::SimTime;
+use pats::trace::{ChurnEvent, ChurnScript, Distribution, FleetPattern, FleetProfile, Trace};
+use pats::workstealer::{Mode, Workstealer};
+
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("PATS_EQ_SHARDS") {
+        Ok(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&k| k > 0)
+                    .unwrap_or_else(|| panic!("bad PATS_EQ_SHARDS entry {s:?}"))
+            })
+            .collect(),
+        Err(_) => vec![1, 4],
+    }
+}
+
+fn engines() -> Vec<EngineKind> {
+    match std::env::var("PATS_EQ_ENGINE").as_deref() {
+        Ok("serial") => vec![EngineKind::Serial],
+        Ok("parallel") => vec![EngineKind::Parallel],
+        Ok("both") | Err(_) => vec![EngineKind::Serial, EngineKind::Parallel],
+        Ok(other) => panic!("PATS_EQ_ENGINE must be serial|parallel|both, got {other:?}"),
+    }
+}
+
+/// The policies the differential runs sweep: the paper's scheduler and the
+/// polling central workstealer (a second, structurally different decision
+/// path: deferred placement + poll ticks).
+#[derive(Debug, Clone, Copy)]
+enum Pol {
+    Scheduler,
+    CentralWorkstealer,
+}
+
+struct RunOut {
+    metrics: ScenarioMetrics,
+    fingerprint: String,
+    link_slots: usize,
+}
+
+fn run_surface<P: Policy + Send>(
+    cfg: &SystemConfig,
+    trace: &Trace,
+    churn: &ChurnScript,
+    engine: EngineKind,
+    mut factory: impl FnMut(&SystemConfig) -> P,
+) -> RunOut {
+    let mut cfg = cfg.clone();
+    cfg.sharding.engine = engine;
+    if cfg.sharding.shards == 1 {
+        // The production dispatcher drives the raw controller at one shard;
+        // the harness does the same so both engines cover it.
+        let controller = Controller::new(cfg.clone(), factory(&cfg));
+        let (res, c) = run_with_surface_dynamic(&cfg, trace, churn, "eq", controller);
+        RunOut {
+            metrics: res.metrics,
+            fingerprint: ControlSurface::fingerprint(&c),
+            link_slots: c.link_slot_count(),
+        }
+    } else {
+        let plane = ControlPlane::new(&cfg, factory);
+        let (res, p) = run_with_surface_dynamic(&cfg, trace, churn, "eq", plane);
+        p.check_invariants().unwrap();
+        RunOut {
+            metrics: res.metrics,
+            fingerprint: ControlSurface::fingerprint(&p),
+            link_slots: p.link_slot_count(),
+        }
+    }
+}
+
+fn run_pol(
+    pol: Pol,
+    cfg: &SystemConfig,
+    trace: &Trace,
+    churn: &ChurnScript,
+    engine: EngineKind,
+) -> RunOut {
+    match pol {
+        Pol::Scheduler => run_surface(cfg, trace, churn, engine, PatsScheduler::from_config),
+        Pol::CentralWorkstealer => run_surface(cfg, trace, churn, engine, |c| {
+            Workstealer::new(Mode::Central, c.preemption, c)
+        }),
+    }
+}
+
+/// Every simulated counter must match to the bit between engines
+/// (wall-clock latency summaries excluded — they measure real time).
+fn assert_metrics_identical(a: &ScenarioMetrics, b: &ScenarioMetrics, ctx: &str) {
+    assert_eq!(a.frames_total, b.frames_total, "{ctx}");
+    assert_eq!(a.frames_completed, b.frames_completed, "{ctx}");
+    assert_eq!(a.frames_failed_hp, b.frames_failed_hp, "{ctx}");
+    assert_eq!(a.frames_failed_lp, b.frames_failed_lp, "{ctx}");
+    assert_eq!(a.frames_lost_churn, b.frames_lost_churn, "{ctx}");
+    assert_eq!(a.hp_generated, b.hp_generated, "{ctx}");
+    assert_eq!(a.hp_completed, b.hp_completed, "{ctx}");
+    assert_eq!(a.hp_completed_via_preemption, b.hp_completed_via_preemption, "{ctx}");
+    assert_eq!(a.hp_failed_alloc, b.hp_failed_alloc, "{ctx}");
+    assert_eq!(a.hp_violated, b.hp_violated, "{ctx}");
+    assert_eq!(a.hp_orphaned, b.hp_orphaned, "{ctx}");
+    assert_eq!(a.hp_rescued, b.hp_rescued, "{ctx}");
+    assert_eq!(a.hp_lost_churn, b.hp_lost_churn, "{ctx}");
+    assert_eq!(a.lp_generated, b.lp_generated, "{ctx}");
+    assert_eq!(a.lp_completed, b.lp_completed, "{ctx}");
+    assert_eq!(a.lp_failed_alloc, b.lp_failed_alloc, "{ctx}");
+    assert_eq!(a.lp_failed_preempted, b.lp_failed_preempted, "{ctx}");
+    assert_eq!(a.lp_violated, b.lp_violated, "{ctx}");
+    assert_eq!(a.lp_offloaded, b.lp_offloaded, "{ctx}");
+    assert_eq!(a.lp_offloaded_completed, b.lp_offloaded_completed, "{ctx}");
+    assert_eq!(a.lp_sets_completed, b.lp_sets_completed, "{ctx}");
+    assert_eq!(a.lp_sets_total, b.lp_sets_total, "{ctx}");
+    assert_eq!(a.preemptions, b.preemptions, "{ctx}");
+    assert_eq!(a.realloc_success, b.realloc_success, "{ctx}");
+    assert_eq!(a.realloc_failure, b.realloc_failure, "{ctx}");
+    assert_eq!(a.preempted_by_cores, b.preempted_by_cores, "{ctx}");
+    assert_eq!(a.core_alloc_local, b.core_alloc_local, "{ctx}");
+    assert_eq!(a.core_alloc_offloaded, b.core_alloc_offloaded, "{ctx}");
+    // Spill is router-serialised in both engines, so its counters match
+    // exactly too.
+    assert_eq!(a.lp_requests_spilled, b.lp_requests_spilled, "{ctx}");
+    assert_eq!(a.lp_tasks_spilled, b.lp_tasks_spilled, "{ctx}");
+    assert_eq!(a.lp_spill_attempts, b.lp_spill_attempts, "{ctx}");
+    assert_eq!(a.lp_spill_returned, b.lp_spill_returned, "{ctx}");
+    // Float summaries to the bit: identical decisions fold identical
+    // values in identical order.
+    assert_eq!(a.lp_set_fractions.count(), b.lp_set_fractions.count(), "{ctx}");
+    assert_eq!(
+        a.lp_set_fractions.mean().to_bits(),
+        b.lp_set_fractions.mean().to_bits(),
+        "set-fraction mean must be bit-identical ({ctx})"
+    );
+    assert_eq!(
+        a.lp_set_fractions.std_dev().to_bits(),
+        b.lp_set_fractions.std_dev().to_bits(),
+        "{ctx}"
+    );
+    assert_eq!(a.accuracy_goodput.to_bits(), b.accuracy_goodput.to_bits(), "{ctx}");
+    // The catch-all: every exported counter except the wall-clock block.
+    assert_eq!(
+        a.deterministic_json().to_string_pretty(),
+        b.deterministic_json().to_string_pretty(),
+        "deterministic JSON must be byte-identical ({ctx})"
+    );
+}
+
+/// Run the scenario under every selected engine at every selected shard
+/// count × spill fan-out × policy, and assert all engines agree.
+fn assert_engines_agree(
+    label: &str,
+    cfg_base: &SystemConfig,
+    trace: &Trace,
+    churn: &ChurnScript,
+    pols: &[Pol],
+) {
+    for &k in &shard_counts() {
+        if k > cfg_base.devices {
+            continue;
+        }
+        // Fan-out 2 (default) keeps LP admissions router-serialised at
+        // K > 1; fan-out 0 lets the parallel engine sweep them too — both
+        // paths must agree with the serial engine.
+        let fanouts: &[usize] = if k == 1 { &[2] } else { &[2, 0] };
+        for &fanout in fanouts {
+            for &pol in pols {
+                let mut cfg = cfg_base.clone();
+                cfg.sharding.shards = k;
+                cfg.sharding.spill_fanout = fanout;
+                let ctx = format!("{label}, shards={k}, fanout={fanout}, {pol:?}");
+                let runs: Vec<(EngineKind, RunOut)> = engines()
+                    .into_iter()
+                    .map(|e| (e, run_pol(pol, &cfg, trace, churn, e)))
+                    .collect();
+                let (e0, first) = &runs[0];
+                for (e, run) in &runs[1..] {
+                    assert_eq!(
+                        first.fingerprint, run.fingerprint,
+                        "engines {e0} vs {e} left different network states ({ctx})"
+                    );
+                    assert_metrics_identical(
+                        &first.metrics,
+                        &run.metrics,
+                        &format!("{ctx}, {e0} vs {e}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engines_agree_on_the_seed_scenario() {
+    // The paper's 4-device topology, uniform trace — the seed scenario.
+    let mut cfg = SystemConfig::default();
+    cfg.frames = 80;
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+    assert_engines_agree(
+        "seed",
+        &cfg,
+        &trace,
+        &ChurnScript::none(),
+        &[Pol::Scheduler, Pol::CentralWorkstealer],
+    );
+}
+
+#[test]
+fn engines_agree_under_churn() {
+    // Crash + drain + link degradation: barrier events (churn, failure
+    // detection, rescue) interleave with the batched admissions.
+    let mut cfg = SystemConfig::default();
+    cfg.frames = 120;
+    let trace = Trace::generate(Distribution::Weighted(3), cfg.devices, cfg.frames, cfg.seed);
+    let script = ChurnScript::from_events(vec![
+        (SimTime::from_secs_f64(30.0), ChurnEvent::Crash(DeviceId(1))),
+        (SimTime::from_secs_f64(45.0), ChurnEvent::Drain(DeviceId(2))),
+        (SimTime::from_secs_f64(60.0), ChurnEvent::DegradeLink { factor: 0.7 }),
+        (SimTime::from_secs_f64(90.0), ChurnEvent::RestoreLink),
+    ]);
+    assert_engines_agree(
+        "churn",
+        &cfg,
+        &trace,
+        &script,
+        &[Pol::Scheduler, Pol::CentralWorkstealer],
+    );
+}
+
+#[test]
+fn engines_agree_on_a_256_device_fleet() {
+    // Fleet scale: wide same-instant admission waves are where the batched
+    // engine actually forms large sweeps. Fan-out 0 so LP admissions ride
+    // the parallel sweep path at K > 1.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 256;
+    cfg.frames = 512;
+    cfg.sharding.spill_fanout = 0;
+    let profile = FleetProfile {
+        pattern: FleetPattern::Diurnal { period_cycles: 16 },
+        hp_only_pct: 50,
+        lp_weight: 1,
+    };
+    let trace = Trace::generate_fleet(&profile, 256, 2, cfg.seed);
+    for &k in &shard_counts() {
+        let mut cfg = cfg.clone();
+        cfg.sharding.shards = k;
+        let runs: Vec<(EngineKind, RunOut)> = engines()
+            .into_iter()
+            .map(|e| (e, run_pol(Pol::Scheduler, &cfg, &trace, &ChurnScript::none(), e)))
+            .collect();
+        let (e0, first) = &runs[0];
+        for (e, run) in &runs[1..] {
+            assert_eq!(
+                first.fingerprint, run.fingerprint,
+                "engines {e0} vs {e} left different network states (fleet256, shards={k})"
+            );
+            assert_metrics_identical(
+                &first.metrics,
+                &run.metrics,
+                &format!("fleet256, shards={k}, {e0} vs {e}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_parallel_runs_serialise_byte_identical_metrics() {
+    // Determinism stress: 16 repeats of the same churning scenario must
+    // serialise byte-identical deterministic JSON — no run-to-run drift
+    // from thread scheduling in the shard sweeps.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 16;
+    cfg.frames = 96;
+    let trace = Trace::generate(Distribution::Weighted(3), cfg.devices, cfg.frames, cfg.seed);
+    let script = ChurnScript::from_events(vec![
+        (SimTime::from_secs_f64(30.0), ChurnEvent::Crash(DeviceId(1))),
+        (SimTime::from_secs_f64(45.0), ChurnEvent::Crash(DeviceId(9))),
+        (SimTime::from_secs_f64(50.0), ChurnEvent::Drain(DeviceId(2))),
+        (SimTime::from_secs_f64(60.0), ChurnEvent::DegradeLink { factor: 0.7 }),
+        (SimTime::from_secs_f64(90.0), ChurnEvent::RestoreLink),
+    ]);
+    for engine in engines() {
+        for k in [4usize, 8] {
+            let mut cfg = cfg.clone();
+            cfg.sharding.shards = k;
+            let reference = run_pol(Pol::Scheduler, &cfg, &trace, &script, engine);
+            let ref_json = reference.metrics.deterministic_json().to_string_pretty();
+            assert!(!ref_json.is_empty());
+            for rep in 1..16 {
+                let run = run_pol(Pol::Scheduler, &cfg, &trace, &script, engine);
+                assert_eq!(
+                    reference.fingerprint, run.fingerprint,
+                    "repeat {rep} diverged ({engine}, shards={k})"
+                );
+                assert_eq!(
+                    ref_json,
+                    run.metrics.deterministic_json().to_string_pretty(),
+                    "repeat {rep} produced different JSON ({engine}, shards={k})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn barrier_epoch_pruning_keeps_the_link_calendar_bounded() {
+    // A long trace accumulates thousands of finished link reservations;
+    // both engines must compact at the 60 s prune epochs so the calendar
+    // stays O(active horizon), never O(total history). The batched engine
+    // prunes at batch barriers only — this is the regression test that the
+    // hoisted prune actually fires there.
+    let mut cfg = SystemConfig::default();
+    cfg.frames = 600; // 150 cycles ≈ 47 virtual minutes on 4 devices
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+    for engine in engines() {
+        for &k in &shard_counts() {
+            if k > cfg.devices {
+                continue;
+            }
+            let mut cfg = cfg.clone();
+            cfg.sharding.shards = k;
+            let run = run_pol(Pol::Scheduler, &cfg, &trace, &ChurnScript::none(), engine);
+            assert!(
+                run.metrics.hp_generated >= 500,
+                "the long trace must actually generate work"
+            );
+            // Unpruned, the calendar would hold several slots per frame
+            // (well over 2000 here); pruned it only covers the last prune
+            // epoch plus the live horizon.
+            assert!(
+                run.link_slots <= 400,
+                "link calendar grew to {} slots under {engine}, shards={k} — \
+                 prune_before is not firing",
+                run.link_slots
+            );
+        }
+    }
+}

@@ -1,7 +1,10 @@
 //! Randomized property tests on the reservation calendars — the data
 //! structures every scheduling decision rests on.
 
+use pats::config::SystemConfig;
 use pats::resources::{CoreTimeline, SlotKind, Timeline};
+use pats::scheduler::plan::PlacementPlan;
+use pats::state::NetworkState;
 use pats::task::{TaskId, Window};
 use pats::time::{SimDuration, SimTime};
 use pats::util::prop::{run, Gen};
@@ -164,5 +167,199 @@ fn preemption_candidates_ordering_property() {
         // All preemptible, deadlines non-increasing.
         assert!(cands.iter().all(|s| s.preemptible));
         assert!(cands.windows(2).all(|p| p[0].deadline >= p[1].deadline));
+    });
+}
+
+// ---------------------------------------------------------------------
+// Pooled scratch timelines (scheduler::plan + resources::pool)
+// ---------------------------------------------------------------------
+
+/// Build a network state with a handful of committed base link slots.
+/// Returns the state plus the `(owner, start)` handles of those slots so
+/// tests can also exercise unstaging *base* reservations through a plan.
+fn state_with_base_slots(g: &mut Gen) -> (NetworkState, Vec<(TaskId, SimTime)>) {
+    let cfg = SystemConfig::default();
+    let mut st = NetworkState::new(&cfg);
+    let mut base = Vec::new();
+    for i in 0..g.usize(1, 6) {
+        let owner = TaskId(900_000 + i as u64);
+        let not_before = SimTime::from_micros(g.u64(0, 50_000));
+        let dur = SimDuration::from_micros(g.u64(1, 5_000));
+        let w = st.charge_link_message(not_before, dur, random_kind(g), owner);
+        base.push((owner, w.start));
+    }
+    (st, base)
+}
+
+/// A plan whose scratch timeline came out of the reuse pool must be
+/// observationally identical to one built on a fresh `link().clone()`:
+/// same success/failure per staged op, same windows, same final slot set.
+/// The pool is warmed by opening, staging into, and dropping a first plan
+/// so the second plan's fork is a pool hit rather than a cold clone.
+#[test]
+fn pooled_scratch_timeline_matches_fresh_clone() {
+    run("pooled scratch ≡ fresh clone", 150, |g| {
+        let (st, base) = state_with_base_slots(g);
+        let pristine = st.link().clone();
+
+        // Warm the pool: stage a few throwaway ops, then drop the plan.
+        {
+            let mut warm = PlacementPlan::new(&st);
+            for i in 0..g.usize(1, 10) {
+                let _ = warm.stage_link_earliest(
+                    &st,
+                    SimTime::from_micros(g.u64(0, 40_000)),
+                    SimDuration::from_micros(g.u64(1, 4_000)),
+                    random_kind(g),
+                    TaskId(300_000 + i as u64),
+                );
+            }
+        }
+        assert!(
+            st.link().same_reservations(&pristine),
+            "dropping the warm plan must roll the calendar back"
+        );
+
+        // Second plan: its first fork should reuse the pooled timeline.
+        // Mirror every op onto an explicit fresh clone and compare.
+        let mut reference = st.link().clone();
+        let mut plan = PlacementPlan::new(&st);
+        let mut staged: Vec<(TaskId, SimTime)> = base.clone();
+        let first = TaskId(400_000);
+        let dur = SimDuration::from_micros(10);
+        let got = plan.stage_link_earliest(&st, SimTime::ZERO, dur, SlotKind::PollMsg, first);
+        let want = reference.reserve_earliest(SimTime::ZERO, dur, SlotKind::PollMsg, first);
+        assert_eq!(got, want);
+        staged.push((first, got.start));
+
+        for step in 0..g.usize(1, 40) {
+            match g.usize(0, 2) {
+                // Explicit-start stage: Result parity with Timeline::reserve.
+                0 => {
+                    let owner = TaskId(500_000 + step as u64);
+                    let start = SimTime::from_micros(g.u64(0, 80_000));
+                    let dur = SimDuration::from_micros(g.u64(1, 8_000));
+                    let kind = random_kind(g);
+                    let got = plan.stage_link(&st, start, dur, kind, owner);
+                    let want = reference.reserve(start, dur, kind, owner);
+                    assert_eq!(got.is_ok(), want.is_ok(), "stage_link parity at step {step}");
+                    if let Ok(w) = got {
+                        assert_eq!(w, want.unwrap());
+                        staged.push((owner, w.start));
+                    }
+                }
+                // Earliest-fit stage: exact window parity.
+                1 => {
+                    let owner = TaskId(600_000 + step as u64);
+                    let not_before = SimTime::from_micros(g.u64(0, 80_000));
+                    let dur = SimDuration::from_micros(g.u64(1, 8_000));
+                    let kind = random_kind(g);
+                    let got = plan.stage_link_earliest(&st, not_before, dur, kind, owner);
+                    let want = reference.reserve_earliest(not_before, dur, kind, owner);
+                    assert_eq!(got, want, "stage_link_earliest parity at step {step}");
+                    staged.push((owner, got.start));
+                }
+                // Unstage a random staged (or base) slot: bool parity with
+                // Timeline::release.
+                _ => {
+                    if staged.is_empty() {
+                        continue;
+                    }
+                    let idx = g.usize(0, staged.len() - 1);
+                    let (owner, start) = staged.swap_remove(idx);
+                    let got = plan.unstage_link_at(owner, start);
+                    let want = reference.release(start, owner);
+                    assert_eq!(got, want, "unstage parity at step {step}");
+                }
+            }
+            let view = plan.link_view(&st);
+            assert!(
+                view.same_reservations(&reference),
+                "pooled scratch diverged from fresh clone at step {step}"
+            );
+            view.check_invariants().unwrap();
+        }
+
+        // Dropping the plan must restore the committed calendar exactly.
+        drop(plan);
+        assert!(st.link().same_reservations(&pristine));
+        st.link().check_invariants().unwrap();
+    });
+}
+
+/// A timeline returned to the pool must leak nothing to its next
+/// borrower: after a heavily-staged plan is dropped, a new plan's view is
+/// exactly `base + its own ops`, and a state mutation between drop and
+/// reopen (version bump) must keep stale pool entries from surfacing.
+#[test]
+fn dropped_plan_leaks_nothing_to_the_next_borrower() {
+    run("pool leakage", 150, |g| {
+        let (mut st, _base) = state_with_base_slots(g);
+        let pristine = st.link().clone();
+
+        // Heavily stage, including some unstages, then drop without
+        // committing.
+        {
+            let mut plan = PlacementPlan::new(&st);
+            let mut mine = Vec::new();
+            for i in 0..g.usize(5, 25) {
+                let owner = TaskId(700_000 + i as u64);
+                let w = plan.stage_link_earliest(
+                    &st,
+                    SimTime::from_micros(g.u64(0, 60_000)),
+                    SimDuration::from_micros(g.u64(1, 6_000)),
+                    random_kind(g),
+                    owner,
+                );
+                mine.push((owner, w.start));
+            }
+            for _ in 0..g.usize(0, 5) {
+                let idx = g.usize(0, mine.len() - 1);
+                let (owner, start) = mine.swap_remove(idx);
+                assert!(plan.unstage_link_at(owner, start));
+            }
+        }
+        assert!(st.link().same_reservations(&pristine));
+
+        // Next borrower (pool hit): one probe op, nothing else visible.
+        {
+            let mut plan = PlacementPlan::new(&st);
+            let probe = TaskId(800_000);
+            let dur = SimDuration::from_micros(123);
+            let got = plan.stage_link_earliest(&st, SimTime::ZERO, dur, SlotKind::PollMsg, probe);
+            let mut want = pristine.clone();
+            let ww = want.reserve_earliest(SimTime::ZERO, dur, SlotKind::PollMsg, probe);
+            assert_eq!(got, ww);
+            assert!(
+                plan.link_view(&st).same_reservations(&want),
+                "dropped plan's ops leaked into the next borrower's view"
+            );
+        }
+
+        // Mutate the committed state: the version bump invalidates pooled
+        // timelines, so a fresh plan must see the new slot, never a stale
+        // pooled snapshot.
+        let extra = TaskId(810_000);
+        st.charge_link_message(
+            SimTime::ZERO,
+            SimDuration::from_micros(777),
+            SlotKind::StateUpdate,
+            extra,
+        );
+        let after = st.link().clone();
+        {
+            let mut plan = PlacementPlan::new(&st);
+            let probe = TaskId(820_000);
+            let dur = SimDuration::from_micros(55);
+            let got = plan.stage_link_earliest(&st, SimTime::ZERO, dur, SlotKind::PollMsg, probe);
+            let mut want = after.clone();
+            let ww = want.reserve_earliest(SimTime::ZERO, dur, SlotKind::PollMsg, probe);
+            assert_eq!(got, ww);
+            assert!(
+                plan.link_view(&st).same_reservations(&want),
+                "stale pooled timeline surfaced after a state version bump"
+            );
+        }
+        assert!(st.link().same_reservations(&after));
     });
 }
