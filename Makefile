@@ -3,9 +3,11 @@
 #   make verify      — tier-1 gate: release build + tests + format check
 #                      (includes the engine-equivalence differential
 #                      harness at its default shards=1,4 × both-engines
-#                      sweep)
+#                      sweep, plus the broker lease-invariant property
+#                      tests and the re-sharding conservation tests)
 #   make test-engines — the full differential matrix in one shot, the
-#                      local equivalent of CI's test-matrix job
+#                      local equivalent of CI's test-matrix job (both
+#                      broker axes: static split and broker+rebalance)
 #   make lint        — clippy over every target, warnings denied
 #   make bench       — micro-benchmarks (writes BENCH_*.json)
 #   make bench-build — compile every bench target without running (CI gate
@@ -26,9 +28,11 @@ test:
 	$(CARGO) test -q
 
 # The serial vs batched-parallel differential harness across the widest
-# shard sweep (CI runs the same harness one matrix cell at a time).
+# shard sweep, on both broker axes (CI runs the same harness one matrix
+# cell at a time).
 test-engines:
-	PATS_EQ_SHARDS=1,2,4,8 PATS_EQ_ENGINE=both $(CARGO) test -q --test engine_equivalence
+	PATS_EQ_SHARDS=1,2,4,8 PATS_EQ_ENGINE=both PATS_EQ_BROKER=off $(CARGO) test -q --test engine_equivalence
+	PATS_EQ_SHARDS=1,2,4,8 PATS_EQ_ENGINE=both PATS_EQ_BROKER=on $(CARGO) test -q --test engine_equivalence
 
 fmt:
 	$(CARGO) fmt --check

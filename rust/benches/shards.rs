@@ -31,9 +31,18 @@ use pats::time::SimTime;
 const DEVICES: usize = 1024;
 
 fn plane_and_jobs(shards: usize) -> (ControlPlane<PatsScheduler>, Vec<Vec<LpJob>>) {
+    plane_and_jobs_with_broker(shards, false)
+}
+
+fn plane_and_jobs_with_broker(
+    shards: usize,
+    broker: bool,
+) -> (ControlPlane<PatsScheduler>, Vec<Vec<LpJob>>) {
     let mut cfg = SystemConfig::default();
     cfg.devices = DEVICES;
     cfg.sharding.shards = shards;
+    cfg.sharding.broker.enabled = broker;
+    cfg.sharding.rebalance.enabled = broker;
     let plane = ControlPlane::new(&cfg, PatsScheduler::from_config);
     let deadline = SimTime::ZERO + cfg.frame_deadline();
     let mut jobs = vec![Vec::new(); shards];
@@ -143,6 +152,55 @@ fn main() {
                 // One more request on an already-occupied fleet: the
                 // admission's link-message and completion-point searches
                 // run against the shard-local partition only.
+                let (_, _, out) = plane.handle_lp_request(
+                    FrameId(9_999),
+                    DeviceId(7),
+                    2,
+                    deadline,
+                    SimTime::ZERO,
+                );
+                out.placements.len()
+            },
+        );
+        show(&mut results, r);
+    }
+
+    section("bandwidth broker: epoch cost and lease-aware admission");
+    for &k in &shard_counts {
+        // One full broker epoch (demand census + re-lease + rebalance scan)
+        // on a loaded plane — the cost added at each prune barrier.
+        let r = bench_with_setup(
+            &format!("broker_epoch/devices={DEVICES}/shards={k}"),
+            1,
+            20,
+            || {
+                let (mut plane, jobs) = plane_and_jobs_with_broker(k, true);
+                plane.lp_sweep(&jobs, false);
+                let cfg = SystemConfig::default();
+                (plane, SimTime::ZERO + cfg.frame_deadline())
+            },
+            |(mut plane, now)| {
+                ControlSurface::epoch(&mut plane, now);
+                plane.broker().epochs
+            },
+        );
+        show(&mut results, r);
+
+        // One admission after the broker has already re-leased: the spill
+        // ring is re-ranked by current lease instead of walked statically.
+        let r = bench_with_setup(
+            &format!("admit_after_epoch/devices={DEVICES}/shards={k}"),
+            1,
+            20,
+            || {
+                let (mut plane, jobs) = plane_and_jobs_with_broker(k, true);
+                plane.lp_sweep(&jobs, false);
+                let cfg = SystemConfig::default();
+                let deadline = SimTime::ZERO + cfg.frame_deadline();
+                ControlSurface::epoch(&mut plane, deadline);
+                (plane, deadline)
+            },
+            |(mut plane, deadline)| {
                 let (_, _, out) = plane.handle_lp_request(
                     FrameId(9_999),
                     DeviceId(7),

@@ -217,6 +217,66 @@ impl std::fmt::Display for EngineKind {
     }
 }
 
+/// Epoch-based bandwidth-broker shaping (`[sharding.broker]`), consumed by
+/// [`crate::shard::ControlPlane::epoch`].
+///
+/// The sharded plane historically pinned each shard to a static 1/K slice
+/// of the shared medium. The broker instead re-leases fractional link
+/// capacity demand-weighted at every prune epoch, under the hard invariant
+/// that the leases sum to ≤ 1.0× the physical medium. Default **off**:
+/// the plane keeps the static split and is bit-identical to the pre-broker
+/// behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BrokerConfig {
+    /// Enable demand-weighted link re-leasing at prune epochs.
+    pub enabled: bool,
+    /// Minimum lease fraction any shard is granted, so a momentarily idle
+    /// shard is never starved of bandwidth. Clamped to 1/K when K·floor
+    /// would exceed the physical medium. Must be in (0, 1].
+    pub floor: f64,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            enabled: false,
+            floor: 0.05,
+        }
+    }
+}
+
+/// Dynamic re-sharding shaping (`[sharding.rebalance]`), consumed by
+/// [`crate::shard::ControlPlane::epoch`].
+///
+/// Migrates boundary devices from a sustained-hot shard to the coldest
+/// sibling: hysteresis-gated (the skew must persist for `epochs`
+/// consecutive broker epochs) and quiescent-device-only (a device is never
+/// migrated while any non-terminal task references it). Default **off** ⇒
+/// the contiguous static homing of the original plane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalanceConfig {
+    /// Enable device migration between shards under sustained load skew.
+    pub enabled: bool,
+    /// Hot/cold demand ratio that counts as skew (≥ 1.0).
+    pub threshold: f64,
+    /// Consecutive skewed epochs required before a migration fires
+    /// (hysteresis; ≥ 1).
+    pub epochs: u32,
+    /// Maximum devices migrated per firing epoch (≥ 1).
+    pub max_moves: usize,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig {
+            enabled: false,
+            threshold: 1.5,
+            epochs: 3,
+            max_moves: 1,
+        }
+    }
+}
+
 /// Sharded-control-plane shaping (`[sharding]`), consumed by
 /// [`crate::shard::ControlPlane`], `experiments::shard_scale`, and the
 /// `pats shards` subcommand.
@@ -225,7 +285,7 @@ impl std::fmt::Display for EngineKind {
 /// fleet into `shards` shard-local controllers behind a router
 /// (extension beyond the paper). The default `shards = 1` is the paper's
 /// single controller and is bit-identical to the unsharded behaviour.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardingConfig {
     /// Number of shard-local controllers the fleet is partitioned into.
     /// 1 = the paper's single controller (bit-identical default).
@@ -241,6 +301,10 @@ pub struct ShardingConfig {
     /// valid — and bit-identical — at any shard count, but only a
     /// multi-shard plane gains wall-clock parallelism from it.
     pub engine: EngineKind,
+    /// Epoch-based bandwidth broker (`[sharding.broker]`).
+    pub broker: BrokerConfig,
+    /// Dynamic device re-sharding (`[sharding.rebalance]`).
+    pub rebalance: RebalanceConfig,
 }
 
 impl Default for ShardingConfig {
@@ -250,6 +314,8 @@ impl Default for ShardingConfig {
             spill_fanout: 2,
             sweep_shards: vec![1, 2, 4, 8],
             engine: EngineKind::Serial,
+            broker: BrokerConfig::default(),
+            rebalance: RebalanceConfig::default(),
         }
     }
 }
@@ -508,6 +574,12 @@ impl SystemConfig {
             "sharding.spill_fanout",
             "sharding.sweep_shards",
             "sharding.engine",
+            "sharding.broker.enabled",
+            "sharding.broker.floor",
+            "sharding.rebalance.enabled",
+            "sharding.rebalance.threshold",
+            "sharding.rebalance.epochs",
+            "sharding.rebalance.max_moves",
         ];
         for key in doc.keys() {
             if !KNOWN.contains(&key) {
@@ -786,6 +858,34 @@ impl SystemConfig {
         if let Some(v) = doc.get_str("sharding.engine") {
             cfg.sharding.engine = EngineKind::parse(v)?;
         }
+        if let Some(v) = doc.get_bool("sharding.broker.enabled") {
+            cfg.sharding.broker.enabled = v;
+        }
+        if let Some(v) = doc.get_f64("sharding.broker.floor") {
+            cfg.sharding.broker.floor = v;
+        }
+        if let Some(v) = doc.get_bool("sharding.rebalance.enabled") {
+            cfg.sharding.rebalance.enabled = v;
+        }
+        if let Some(v) = doc.get_f64("sharding.rebalance.threshold") {
+            cfg.sharding.rebalance.threshold = v;
+        }
+        if let Some(v) = doc.get_i64("sharding.rebalance.epochs") {
+            if v < 1 {
+                return Err(Error::Config(format!(
+                    "sharding.rebalance.epochs must be >= 1, got {v}"
+                )));
+            }
+            cfg.sharding.rebalance.epochs = v as u32;
+        }
+        if let Some(v) = doc.get_i64("sharding.rebalance.max_moves") {
+            if v < 1 {
+                return Err(Error::Config(format!(
+                    "sharding.rebalance.max_moves must be >= 1, got {v}"
+                )));
+            }
+            cfg.sharding.rebalance.max_moves = v as usize;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -906,6 +1006,23 @@ impl SystemConfig {
             return Err(Error::Config(
                 "sharding.sweep_shards must be a non-empty list of positive shard counts".into(),
             ));
+        }
+        if !(sh.broker.floor > 0.0 && sh.broker.floor <= 1.0) {
+            // NaN fails both comparisons and is rejected here too. A zero
+            // floor would let the broker lease a shard a 0-fraction
+            // partition, which LinkModel::set_partition rejects.
+            return Err(Error::Config("sharding.broker.floor must be in (0, 1]".into()));
+        }
+        if !(sh.rebalance.threshold >= 1.0) {
+            return Err(Error::Config(
+                "sharding.rebalance.threshold must be >= 1.0 (hot/cold demand ratio)".into(),
+            ));
+        }
+        if sh.rebalance.epochs == 0 {
+            return Err(Error::Config("sharding.rebalance.epochs must be >= 1".into()));
+        }
+        if sh.rebalance.max_moves == 0 {
+            return Err(Error::Config("sharding.rebalance.max_moves must be >= 1".into()));
         }
         Ok(())
     }
@@ -1282,6 +1399,60 @@ sweep_shards = [1, 4, 16]
             "[sharding]\nspill_fanout = -1",
             "[sharding]\nsweep_shards = [1, 0]",
             "[topology]\ndevices = 4\n[sharding]\nshards = 16",
+        ] {
+            let doc = crate::util::toml::Document::parse(snippet).unwrap();
+            assert!(SystemConfig::from_document(&doc).is_err(), "accepted {snippet:?}");
+        }
+    }
+
+    #[test]
+    fn broker_rebalance_defaults_and_overrides() {
+        // Both subsystems default off so the plane stays bit-identical to
+        // the static-split behaviour unless opted in.
+        let c = SystemConfig::default();
+        assert!(!c.sharding.broker.enabled);
+        assert_eq!(c.sharding.broker.floor, 0.05);
+        assert!(!c.sharding.rebalance.enabled);
+        assert_eq!(c.sharding.rebalance.threshold, 1.5);
+        assert_eq!(c.sharding.rebalance.epochs, 3);
+        assert_eq!(c.sharding.rebalance.max_moves, 1);
+
+        let doc = crate::util::toml::Document::parse(
+            r#"
+[topology]
+devices = 64
+[sharding]
+shards = 4
+[sharding.broker]
+enabled = true
+floor = 0.1
+[sharding.rebalance]
+enabled = true
+threshold = 2.0
+epochs = 5
+max_moves = 2
+"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_document(&doc).unwrap();
+        assert!(c.sharding.broker.enabled);
+        assert_eq!(c.sharding.broker.floor, 0.1);
+        assert!(c.sharding.rebalance.enabled);
+        assert_eq!(c.sharding.rebalance.threshold, 2.0);
+        assert_eq!(c.sharding.rebalance.epochs, 5);
+        assert_eq!(c.sharding.rebalance.max_moves, 2);
+    }
+
+    #[test]
+    fn invalid_broker_rebalance_configs_rejected() {
+        for snippet in [
+            "[sharding.broker]\nfloor = 0.0",
+            "[sharding.broker]\nfloor = -0.1",
+            "[sharding.broker]\nfloor = 1.5",
+            "[sharding.rebalance]\nthreshold = 0.5",
+            "[sharding.rebalance]\nepochs = 0",
+            "[sharding.rebalance]\nmax_moves = 0",
+            "[sharding.broker]\nfrobnicate = true",
         ] {
             let doc = crate::util::toml::Document::parse(snippet).unwrap();
             assert!(SystemConfig::from_document(&doc).is_err(), "accepted {snippet:?}");

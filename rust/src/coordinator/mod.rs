@@ -17,7 +17,7 @@ use crate::config::SystemConfig;
 use crate::fidelity::VariantId;
 use crate::net::LinkModel;
 use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome};
-use crate::shard::SpillStats;
+use crate::shard::{BrokerStats, SpillStats};
 use crate::state::{DeviceHealth, NetworkState, TaskRecord};
 use crate::task::{
     DeviceId, FailReason, FrameId, LpRequest, Priority, RequestId, TaskId, TaskSpec,
@@ -193,6 +193,19 @@ pub trait ControlSurface {
         false
     }
 
+    /// Batch-boundary epoch hook: the simulator calls this at every prune
+    /// barrier (both engines fire it at identical virtual instants, so
+    /// anything it does is engine-equivalent by construction). The sharded
+    /// plane runs its bandwidth broker and device re-sharding here; the
+    /// raw controller has nothing to re-lease and ignores it.
+    fn epoch(&mut self, _now: SimTime) {}
+
+    /// Bandwidth-broker / re-sharding counters (all-zero for the raw
+    /// controller and for a plane with the broker disabled).
+    fn broker_stats(&self) -> BrokerStats {
+        BrokerStats::default()
+    }
+
     /// Process one batch of high-priority admissions — a *decision sweep*,
     /// the batched engine's unit of work. The default implementation
     /// handles the jobs serially in order, which is by construction
@@ -301,6 +314,13 @@ impl FailureDetector {
     /// Treat `d` as alive as of `now` (rejoin administration).
     pub fn reset(&mut self, d: DeviceId, now: SimTime) {
         self.last_heard[d.0 as usize] = now;
+    }
+
+    /// When `d` was last heard from (device-migration handoff: the new
+    /// owning shard inherits the old shard's liveness view so migration
+    /// neither resets nor advances the failure clock).
+    pub fn last_heard(&self, d: DeviceId) -> SimTime {
+        self.last_heard[d.0 as usize]
     }
 }
 

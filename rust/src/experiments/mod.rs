@@ -819,7 +819,11 @@ pub fn shard_scale(base: &SystemConfig, shard_counts: &[usize]) -> Vec<ShardScal
             let mut cfg = base.clone();
             cfg.frames = (devices * cycles) as u64;
             cfg.sharding.shards = k;
-            let label = format!("SHARD_{k}x{devices}");
+            let label = if cfg.sharding.broker.enabled || cfg.sharding.rebalance.enabled {
+                format!("SHARD_{k}x{devices}_broker")
+            } else {
+                format!("SHARD_{k}x{devices}")
+            };
             let result = run_scenario(&cfg, &trace, &label);
             crate::log_info!("{}", result.metrics.render_text());
             ShardScaleRow {
@@ -890,14 +894,22 @@ pub fn shard_scale_table(rows: &[ShardScaleRow], sweeps: &[DecisionSweepRow]) ->
     let mut out = String::from(
         "## Sharded control plane — same workload, growing shard count\n\n\
          | shards | frame % | HP % | LP % | spilled req (tasks) | attempts | returned | \
-         lp alloc ms (mean/p99) | preemptions | wall |\n\
-         |---|---|---|---|---|---|---|---|---|---|\n",
+         broker ep/lease/migr/avoid | lp alloc ms (mean/p99) | preemptions | wall |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|\n",
     );
     for row in rows {
         let m = &row.metrics;
+        let broker = if m.saw_broker() {
+            format!(
+                "{}/{}/{}/{}",
+                m.broker_epochs, m.broker_leases_granted, m.devices_migrated, m.lp_spill_avoided
+            )
+        } else {
+            "off".to_string()
+        };
         let _ = writeln!(
             out,
-            "| {} | {:.2} | {:.2} | {:.2} | {} ({}) | {} | {} | {:.4}/{:.4} | {} | {:.2?} |",
+            "| {} | {:.2} | {:.2} | {:.2} | {} ({}) | {} | {} | {broker} | {:.4}/{:.4} | {} | {:.2?} |",
             row.shards,
             m.frame_completion_pct(),
             m.hp_completion_pct(),
@@ -916,11 +928,16 @@ pub fn shard_scale_table(rows: &[ShardScaleRow], sweeps: &[DecisionSweepRow]) ->
         "\nReading: every row runs the identical hotspot trace; spill counters \
          show requests the saturated home shard handed to a sibling (the \
          spill fan-out bound caps the probes). Per-decision link-calendar \
-         cost drops with the partition size, but each shard also owns only \
-         a static 1/K slice of the shared medium (transfer slots are K× \
-         longer), so completion reflects the locality-vs-utilisation trade: \
-         spill recovers hotspot overload, while transfer-bound work can \
-         degrade as K grows.\n",
+         cost drops with the partition size. With the broker **off** each \
+         shard owns a static 1/K slice of the shared medium (transfer slots \
+         are K× longer even on a silent medium), so completion reflects the \
+         locality-vs-utilisation trade. With `--broker` the epoch bandwidth \
+         broker re-leases idle siblings' capacity toward demand (Σ leases \
+         ≤ 1.0 of the physical medium, floor-protected) and sustained skew \
+         migrates quiescent boundary devices to colder shards — the broker \
+         column counts epochs/lease changes/migrations/spills avoided, and \
+         the hotspot rows should hold their throughput against the \
+         unsharded controller instead of paying the static-split tax.\n",
     );
     out.push_str(
         "\n### Decision-phase sweep — shard independence on scoped threads\n\n\
@@ -1291,6 +1308,40 @@ mod tests {
             panic!("decision_sweep not an array");
         };
         assert_eq!(ds.len(), 2);
+    }
+
+    #[test]
+    fn shard_sweep_with_broker_labels_rows_and_counts_epochs() {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 16;
+        // Enough cycles that the run crosses the 60 s prune barriers the
+        // broker epochs ride on (frame period 18.86 s).
+        cfg.fleet.cycles = 6;
+        cfg.sharding.broker.enabled = true;
+        cfg.sharding.rebalance.enabled = true;
+        let rows = shard_scale(&cfg, &[1, 4]);
+        assert_eq!(rows[0].metrics.label, "SHARD_1x16_broker");
+        // K=1 has nothing to re-lease: the broker must stay dormant so the
+        // row is bit-identical to the unsharded controller.
+        assert!(!rows[0].metrics.saw_broker());
+        // A multi-shard hotspot run long enough to cross prune barriers
+        // runs broker epochs.
+        assert_eq!(rows[1].metrics.label, "SHARD_4x16_broker");
+        assert!(rows[1].metrics.saw_broker(), "broker epochs at K=4");
+        let sweeps = shard_decision_sweep(&cfg, &[1, 4]);
+        let table = shard_scale_table(&rows, &sweeps);
+        assert!(table.contains("broker ep/lease/migr/avoid"));
+        assert!(table.contains("| off |"), "the K=1 row renders as broker-off");
+        // Conservation still holds with re-leasing + migration active.
+        for row in &rows {
+            let m = &row.metrics;
+            assert_eq!(
+                m.lp_completed + m.lp_failed_alloc + m.lp_failed_preempted + m.lp_violated,
+                m.lp_generated,
+                "{} shards: LP conservation under broker",
+                row.shards
+            );
+        }
     }
 
     #[test]

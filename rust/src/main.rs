@@ -44,8 +44,8 @@ USAGE:
   pats fidelity [--sizes N,N,...] [--cycles N] [--crash-pct P] [--seed S]
              [--config FILE] [--out DIR]
   pats shards [--devices N] [--cycles N] [--shard-counts K,K,...]
-             [--spill-fanout F] [--engine serial|parallel] [--seed S]
-             [--config FILE] [--out DIR]
+             [--spill-fanout F] [--engine serial|parallel] [--broker]
+             [--seed S] [--config FILE] [--out DIR]
   pats trace-gen --dist DIST [--frames N] [--seed S] [--out FILE]
   pats check [--artifacts DIR]
 
@@ -57,7 +57,7 @@ USAGE:
 fn main() -> ExitCode {
     pats::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&argv, &["no-preemption", "set-aware-victims", "json", "help"]) {
+    let args = match Args::parse(&argv, &["no-preemption", "set-aware-victims", "json", "broker", "help"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -332,6 +332,12 @@ fn cmd_shards(args: &Args) -> Result<(), String> {
     if let Some(v) = args.opt("engine") {
         cfg.sharding.engine = pats::config::EngineKind::parse(v).map_err(|e| e.to_string())?;
     }
+    if args.flag("broker") {
+        // Work-conserving mode: demand-weighted link re-leasing plus
+        // skew-triggered device migration (both default off).
+        cfg.sharding.broker.enabled = true;
+        cfg.sharding.rebalance.enabled = true;
+    }
     let counts: Vec<usize> = match args.opt("shard-counts") {
         Some(csv) => csv
             .split(',')
@@ -352,8 +358,12 @@ fn cmd_shards(args: &Args) -> Result<(), String> {
     cfg.validate().map_err(|e| e.to_string())?;
     eprintln!(
         "running the shard sweep: {} devices × {} cycles at {counts:?} shards \
-         (spill fan-out {}, engine {}) ...",
-        cfg.devices, cfg.fleet.cycles, cfg.sharding.spill_fanout, cfg.sharding.engine
+         (spill fan-out {}, engine {}, broker {}) ...",
+        cfg.devices,
+        cfg.fleet.cycles,
+        cfg.sharding.spill_fanout,
+        cfg.sharding.engine,
+        if cfg.sharding.broker.enabled { "on" } else { "off" }
     );
     let t0 = std::time::Instant::now();
     let rows = pats::experiments::shard_scale(&cfg, &counts);

@@ -133,6 +133,21 @@ pub struct ScenarioMetrics {
     /// unplaced.
     pub lp_spill_returned: u64,
 
+    // ---- bandwidth broker / re-sharding (beyond the paper) ----
+    /// Broker epochs executed (prune barriers where link leases were
+    /// recomputed).
+    pub broker_epochs: u64,
+    /// Lease changes applied (shard × epoch where the fraction moved).
+    pub broker_leases_granted: u64,
+    /// Floor clamps: shards whose demand share fell below the floor lease
+    /// and were topped up, summed over epochs.
+    pub broker_leases_clamped: u64,
+    /// Devices migrated between shards by dynamic re-sharding.
+    pub devices_migrated: u64,
+    /// Low-priority requests admitted at home on a broker-granted lease
+    /// above the static 1/K slice (spills avoided by re-leasing).
+    pub lp_spill_avoided: u64,
+
     // ---- multi-fidelity degradation (beyond the paper) ----
     /// High-priority tasks admitted at a degraded model variant (the §4
     /// admission — and its preemption retry — could not place the full
@@ -251,6 +266,13 @@ impl ScenarioMetrics {
         self.lp_spill_attempts > 0
     }
 
+    /// True when the bandwidth broker or re-sharding ever acted. Gates the
+    /// `broker` JSON block and text segment, so a broker-off run
+    /// serialises byte-identically to the pre-broker format.
+    pub fn saw_broker(&self) -> bool {
+        self.broker_epochs > 0 || self.devices_migrated > 0
+    }
+
     /// Total degraded placements committed, across every degradation path.
     pub fn degradations(&self) -> u64 {
         self.degraded_hp_admission
@@ -291,7 +313,7 @@ impl ScenarioMetrics {
         };
         let local = census(&self.core_alloc_local);
         let offl = census(&self.core_alloc_offloaded);
-        Json::obj()
+        let json = Json::obj()
             .with("label", self.label.as_str())
             .with(
                 "frames",
@@ -377,8 +399,23 @@ impl ScenarioMetrics {
                     .with("lp_tasks_spilled", self.lp_tasks_spilled)
                     .with("lp_spill_attempts", self.lp_spill_attempts)
                     .with("lp_spill_returned", self.lp_spill_returned),
+            );
+        // The broker block is conditional so a run with the broker off
+        // serialises byte-identically to the pre-broker JSON shape.
+        let json = if self.saw_broker() {
+            json.with(
+                "broker",
+                Json::obj()
+                    .with("epochs", self.broker_epochs)
+                    .with("leases_granted", self.broker_leases_granted)
+                    .with("leases_clamped", self.broker_leases_clamped)
+                    .with("devices_migrated", self.devices_migrated)
+                    .with("lp_spill_avoided", self.lp_spill_avoided),
             )
-            .with(
+        } else {
+            json
+        };
+        json.with(
                 "fidelity",
                 Json::obj()
                     .with("degraded_hp_admission", self.degraded_hp_admission)
@@ -469,6 +506,18 @@ impl ScenarioMetrics {
                 rt = self.lp_spill_returned,
             );
         }
+        if self.saw_broker() {
+            let _ = write!(
+                line,
+                " | broker: epochs {ep} leases {lg} (clamped {lc}) migrated {dm} \
+                 spill avoided {sa}",
+                ep = self.broker_epochs,
+                lg = self.broker_leases_granted,
+                lc = self.broker_leases_clamped,
+                dm = self.devices_migrated,
+                sa = self.lp_spill_avoided,
+            );
+        }
         if self.saw_degradation() {
             let _ = write!(
                 line,
@@ -556,6 +605,31 @@ mod tests {
     fn text_render_contains_label() {
         let m = ScenarioMetrics::new("WPS_3");
         assert!(m.render_text().contains("WPS_3"));
+    }
+
+    #[test]
+    fn broker_block_only_present_when_broker_acted() {
+        let mut m = ScenarioMetrics::new("BRK");
+        m.frames_total = 10;
+        // Broker off: neither the JSON block nor the text segment exists,
+        // so the output stays byte-identical to the pre-broker format.
+        assert!(!m.saw_broker());
+        assert!(m.to_json().get("broker").is_none());
+        assert!(!m.render_text().contains("broker"));
+        m.broker_epochs = 4;
+        m.broker_leases_granted = 6;
+        m.broker_leases_clamped = 2;
+        m.devices_migrated = 1;
+        m.lp_spill_avoided = 3;
+        assert!(m.saw_broker());
+        let j = m.to_json();
+        let b = j.get("broker").expect("broker block present");
+        assert_eq!(b.get("epochs").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(b.get("devices_migrated").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(b.get("lp_spill_avoided").and_then(Json::as_f64), Some(3.0));
+        let text = m.render_text();
+        assert!(text.contains("broker: epochs 4"));
+        assert!(text.contains("migrated 1"));
     }
 
     #[test]

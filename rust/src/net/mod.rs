@@ -41,11 +41,13 @@ pub struct LinkModel {
     /// Scales both reservation sizing and sampled transfers — the model is
     /// that the physical link slowed down *and* the estimator tracked it.
     degradation: f64,
-    /// Static capacity fraction this model owns of the physically shared
-    /// medium (sharded-control-plane extension): each of K shards gets a
-    /// 1/K slice, so the plane never models more aggregate bandwidth than
-    /// the one 802.11n link provides. 1.0 = the whole link (unsharded
-    /// default). Fixed at plane construction; composes with `degradation`.
+    /// Capacity fraction this model owns of the physically shared medium
+    /// (sharded-control-plane extension): the plane never models more
+    /// aggregate bandwidth than the one 802.11n link provides, so the K
+    /// shard fractions always sum to ≤ 1.0. 1.0 = the whole link
+    /// (unsharded default). Statically 1/K at plane construction; the
+    /// epoch bandwidth broker may re-lease it between decision sweeps
+    /// (demand-weighted, floor-protected). Composes with `degradation`.
     partition: f64,
 }
 
@@ -60,9 +62,16 @@ impl LinkModel {
         }
     }
 
-    /// Restrict this model to a static `fraction` of the shared medium's
-    /// capacity (sharded control plane: 1/K per shard). Multiplying by the
-    /// default 1.0 is exact, so an unsharded model is bit-identical.
+    /// Restrict this model to a `fraction` of the shared medium's capacity
+    /// (sharded control plane: statically 1/K per shard, or a broker
+    /// lease). Multiplying by the default 1.0 is exact, so an unsharded
+    /// model is bit-identical.
+    ///
+    /// Re-leasing mid-run is safe for committed reservations: staged link
+    /// slots store explicit windows, so changing the partition re-sizes
+    /// only *future* slot requests — it never moves or invalidates slots
+    /// already on a [`crate::resources::Timeline`] (the network-state
+    /// fingerprint is over those windows, and `prop_broker` locks this).
     pub fn set_partition(&mut self, fraction: f64) {
         assert!(
             fraction > 0.0 && fraction <= 1.0,
@@ -71,9 +80,19 @@ impl LinkModel {
         self.partition = fraction;
     }
 
-    /// The static capacity fraction this model owns.
+    /// The capacity fraction this model currently owns.
     pub fn partition(&self) -> f64 {
         self.partition
+    }
+
+    /// Raw expected transfer duration for `bytes` over the *whole*
+    /// physical medium, ignoring any shard partition (degradation still
+    /// applies — the physical link really is slower during an episode).
+    /// The bandwidth broker uses this to express per-shard demand in
+    /// partition-independent physical medium-seconds, so shards holding
+    /// different leases report comparable numbers.
+    pub fn physical_duration(&self, bytes: u64) -> SimDuration {
+        SimDuration::from_secs_f64(bytes as f64 / (self.tracker.estimate_bps() * self.degradation))
     }
 
     /// Apply (or lift, with `factor == 1.0`) a link-throughput degradation.
@@ -233,6 +252,24 @@ mod tests {
         // Restoring the degradation leaves the partition in force.
         link.set_degradation(1.0);
         assert_eq!(link.slot_duration(&c, SlotKind::InputTransfer), sliced);
+    }
+
+    #[test]
+    fn physical_duration_ignores_partition_but_tracks_degradation() {
+        let c = cfg();
+        let mut link = LinkModel::new(&c);
+        let whole = link.physical_duration(c.msg_input_transfer_bytes);
+        assert_eq!(whole, link.raw_duration(c.msg_input_transfer_bytes));
+        // A quarter lease stretches raw durations 4× but leaves the
+        // physical-medium view untouched — that's the broker's demand unit.
+        link.set_partition(0.25);
+        assert_eq!(link.physical_duration(c.msg_input_transfer_bytes), whole);
+        assert!(link.raw_duration(c.msg_input_transfer_bytes) > whole);
+        // Degradation is physical: both views slow down together.
+        link.set_degradation(0.5);
+        let degraded = link.physical_duration(c.msg_input_transfer_bytes);
+        let ratio = degraded.as_secs_f64() / whole.as_secs_f64();
+        assert!((ratio - 2.0).abs() < 1e-3, "ratio {ratio}");
     }
 
     #[test]

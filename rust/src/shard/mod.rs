@@ -15,12 +15,29 @@
 //!   Preemption and churn rescue stay entirely shard-local: the §4
 //!   algorithms run unchanged *within* a shard.
 //! * **True link partition.** The 802.11n medium is physically one link,
-//!   so each shard's [`LinkModel`] is restricted to a static 1/K capacity
-//!   slice ([`LinkModel::set_partition`]): slots on a shard's calendar are
-//!   K× longer, and the plane never models more aggregate bandwidth than
-//!   the unsharded link. The slice is static — a shard cannot borrow idle
-//!   siblings' bandwidth (no statistical multiplexing; see
-//!   KNOWN_ISSUES.md).
+//!   so each shard's [`LinkModel`] is restricted to a capacity slice
+//!   ([`LinkModel::set_partition`]) and the plane never models more
+//!   aggregate bandwidth than the unsharded link: the K slices always sum
+//!   to ≤ 1.0. The slices start at a static 1/K; with
+//!   `sharding.broker.enabled` the **bandwidth broker** re-leases them
+//!   demand-weighted at every prune epoch ([`ControlPlane::epoch`]) — each
+//!   shard's demand is its reserved link slot-time plus admission backlog
+//!   over the last epoch, expressed in partition-independent physical
+//!   medium-seconds, and every shard is guaranteed a configurable floor
+//!   lease so a momentarily idle shard is never starved. With the broker
+//!   off (default) the slice stays the static 1/K, bit-identical to the
+//!   pre-broker plane.
+//! * **Dynamic re-sharding.** With `sharding.rebalance.enabled`, sustained
+//!   demand skew (hot/cold ratio ≥ `threshold` for `epochs` consecutive
+//!   broker epochs — hysteresis) migrates up to `max_moves` boundary
+//!   devices from the hottest shard to the coldest. Only **quiescent**
+//!   devices move — no non-terminal task may reference the device as
+//!   source or placement target and its core calendar must be empty — so
+//!   the handoff is pure ownership transfer: health masks flip on both
+//!   shards, the router's home map is updated, and the failure detector's
+//!   liveness view travels with the device. A crash landing after a
+//!   migration routes to the *current* home shard and reclaims
+//!   reservations exactly once (`rust/tests/rebalance.rs`).
 //! * **Cross-shard spill.** Only when the home shard admits **nothing** of
 //!   a low-priority request before its deadline does the router probe
 //!   sibling shards, nearest-first on the shard ring, bounded by
@@ -62,7 +79,7 @@ use crate::error::{Error, Result};
 use crate::net::LinkModel;
 use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome};
 use crate::state::{DeviceHealth, TaskRecord};
-use crate::task::{DeviceId, FailReason, FrameId, LpRequest, RequestId, TaskId};
+use crate::task::{DeviceId, FailReason, FrameId, LpRequest, RequestId, TaskId, Window};
 use crate::time::SimTime;
 
 /// Cross-shard spill counters, reported by the `pats shards` sweep and
@@ -88,6 +105,66 @@ impl SpillStats {
     pub fn any(&self) -> bool {
         self.spill_attempts > 0
     }
+}
+
+/// Bandwidth-broker and re-sharding counters, reported by `pats shards
+/// --broker` and folded into [`crate::metrics::ScenarioMetrics`] at
+/// finalize. All-zero for the raw controller and for a plane with both
+/// subsystems disabled.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BrokerStats {
+    /// Broker epochs executed (prune barriers where leases were
+    /// recomputed).
+    pub epochs: u64,
+    /// Lease changes actually applied (a shard whose fraction moved by
+    /// more than float noise in one epoch).
+    pub leases_granted: u64,
+    /// Floor clamps: epochs × shards whose pure demand share fell below
+    /// the configured floor lease and were topped up to it.
+    pub leases_clamped: u64,
+    /// Devices migrated between shards by dynamic re-sharding.
+    pub devices_migrated: u64,
+    /// Low-priority requests the home shard admitted while holding a
+    /// broker-granted lease above its static 1/K slice — admissions that
+    /// would have had to spill (or fail) under the static split.
+    pub lp_spill_avoided: u64,
+}
+
+impl BrokerStats {
+    /// True when the broker or re-sharding ever acted.
+    pub fn any(&self) -> bool {
+        self.epochs > 0 || self.devices_migrated > 0
+    }
+}
+
+/// Demand-weighted lease fractions for one broker epoch: every shard gets
+/// at least `floor` (clamped to 1/K so K floors always fit the medium) and
+/// the remaining capacity is split proportionally to `demand`; with zero
+/// total demand the medium reverts to the even static split. The returned
+/// fractions are each in (0, 1] and sum to ≤ 1.0 — the physical-medium
+/// invariant `prop_broker` locks.
+pub fn compute_leases(demand: &[f64], floor: f64) -> Vec<f64> {
+    let k = demand.len();
+    assert!(k >= 1, "leases need at least one shard");
+    assert!(floor > 0.0 && floor <= 1.0, "floor lease {floor}");
+    let even = 1.0 / k as f64;
+    let floor = floor.min(even);
+    let total: f64 = demand.iter().sum();
+    if total <= 0.0 {
+        return vec![even; k];
+    }
+    let spare = 1.0 - floor * k as f64;
+    let mut leases: Vec<f64> =
+        demand.iter().map(|&w| (floor + spare * (w / total)).min(1.0)).collect();
+    // Mathematically the fractions sum to exactly 1.0; renormalise if
+    // float error nudged the sum over the physical medium.
+    let sum: f64 = leases.iter().sum();
+    if sum > 1.0 {
+        for lease in &mut leases {
+            *lease /= sum;
+        }
+    }
+    leases
 }
 
 /// One admission job of a shard-local decision sweep
@@ -121,6 +198,18 @@ pub struct ControlPlane<P: Policy> {
     /// Effective spill bound: min(`sharding.spill_fanout`, K − 1).
     spill_fanout: usize,
     spill: SpillStats,
+    /// Current lease fraction per shard (mirrors each shard's
+    /// [`LinkModel::partition`]); the static 1/K until the broker re-leases.
+    lease: Vec<f64>,
+    /// Admission backlog per shard since the last broker epoch: tasks the
+    /// shard could not place before their deadline (demand signal).
+    backlog: Vec<u64>,
+    /// When the last broker epoch ran (demand-measurement window start).
+    last_epoch: SimTime,
+    /// Consecutive broker epochs the hot/cold demand ratio exceeded the
+    /// re-sharding threshold (hysteresis counter).
+    skew_streak: u32,
+    broker: BrokerStats,
 }
 
 impl<P: Policy> ControlPlane<P> {
@@ -165,6 +254,11 @@ impl<P: Policy> ControlPlane<P> {
             request_home: HashMap::new(),
             spill_fanout: cfg.sharding.spill_fanout.min(k - 1),
             spill: SpillStats::default(),
+            lease: vec![1.0 / k as f64; k],
+            backlog: vec![0; k],
+            last_epoch: SimTime::ZERO,
+            skew_streak: 0,
+            broker: BrokerStats::default(),
         }
     }
 
@@ -193,36 +287,238 @@ impl<P: Policy> ControlPlane<P> {
         self.spill
     }
 
+    /// Broker and re-sharding counters accumulated so far.
+    pub fn broker(&self) -> BrokerStats {
+        self.broker
+    }
+
+    /// Current lease fraction per shard. Always sums to ≤ 1.0 of the
+    /// physical medium; the static 1/K split until the broker re-leases.
+    pub fn leases(&self) -> &[f64] {
+        &self.lease
+    }
+
+    /// Re-lease the link: set every shard's capacity fraction to
+    /// `leases[s]`. Enforces the physical-medium invariant (Σ ≤ 1.0, each
+    /// fraction in (0, 1] via [`LinkModel::set_partition`]); committed link
+    /// reservations are untouched — staged slots store explicit windows,
+    /// so a new lease re-sizes only future slot requests (`prop_broker`
+    /// fingerprint-checks this).
+    pub fn apply_leases(&mut self, leases: &[f64]) {
+        assert_eq!(leases.len(), self.shards.len(), "one lease per shard");
+        let sum: f64 = leases.iter().sum();
+        assert!(
+            sum <= 1.0 + 1e-9,
+            "leases oversubscribe the physical medium: {sum}"
+        );
+        for (s, &fraction) in leases.iter().enumerate() {
+            if (fraction - self.lease[s]).abs() > 1e-12 {
+                self.shards[s].state.link_model.set_partition(fraction);
+                self.lease[s] = fraction;
+            }
+        }
+    }
+
+    /// Per-shard link demand over `window`, in partition-independent
+    /// physical medium-seconds: reserved slot-time (scaled by the lease the
+    /// shard held while reserving) plus the admission backlog priced at the
+    /// physical input-transfer time.
+    fn shard_demand(&self, window: &Window) -> Vec<f64> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(s, shard)| {
+                let busy = shard.state.link().busy_time_in(window).as_secs_f64();
+                let per_task = shard
+                    .state
+                    .link_model
+                    .physical_duration(self.cfg.msg_input_transfer_bytes)
+                    .as_secs_f64();
+                busy * self.lease[s] + self.backlog[s] as f64 * per_task
+            })
+            .collect()
+    }
+
     fn shard_of_task(&self, task: TaskId) -> Option<usize> {
         self.task_home.get(&task).copied()
     }
 
-    /// Sibling probe order for a spill from shard `h`: nearest-first on
-    /// the shard ring (distance 1 clockwise, distance 1 counter-clockwise,
-    /// distance 2 clockwise, …), bounded by the spill fan-out. O(fan-out):
-    /// the walk stops as soon as the bound is reached, and since the
-    /// fan-out is capped at K − 1 it ends before ring distances where
-    /// clockwise and counter-clockwise neighbours could repeat — the only
-    /// collision in range is `right == left` at distance K/2, checked
-    /// directly.
+    /// Sibling probe order for a spill from shard `h`, bounded by the
+    /// spill fan-out. Nearest-first on the shard ring (distance 1
+    /// clockwise, distance 1 counter-clockwise, distance 2 clockwise, …);
+    /// with the bandwidth broker enabled the ring order is re-ranked by
+    /// each sibling's *current* lease (largest first, stable on ties), so
+    /// the router probes where the bandwidth actually is instead of
+    /// assuming the static 1/K slice. The only in-range ring collision is
+    /// `right == left` at distance K/2, checked directly.
     fn spill_order(&self, h: usize) -> Vec<usize> {
         let k = self.shards.len();
-        let mut order: Vec<usize> = Vec::with_capacity(self.spill_fanout);
+        let mut order: Vec<usize> = Vec::with_capacity(k.saturating_sub(1));
         for d in 1..k {
-            if order.len() >= self.spill_fanout {
-                break;
-            }
             let right = (h + d) % k;
             order.push(right);
-            if order.len() >= self.spill_fanout {
-                break;
-            }
             let left = (h + k - d) % k;
             if left != right {
                 order.push(left);
             }
         }
+        if self.cfg.sharding.broker.enabled {
+            // Stable: equal leases (e.g. right after construction) keep
+            // the nearest-first ring order, so broker-on degrades to the
+            // classic probe order until the first re-lease.
+            order.sort_by(|&a, &b| {
+                self.lease[b].partial_cmp(&self.lease[a]).expect("leases are never NaN")
+            });
+        }
+        order.truncate(self.spill_fanout);
         order
+    }
+
+    /// Is `d` (homed in shard `s`) safe to migrate? Quiescent means: Up,
+    /// empty core calendar, and no non-terminal task in the shard registry
+    /// referencing it as source or placement target — so ownership can
+    /// move as a pure health-mask + routing flip, with nothing in flight
+    /// to hand off.
+    fn quiescent(&self, s: usize, d: DeviceId) -> bool {
+        let shard = &self.shards[s];
+        if shard.state.device_health(d) != DeviceHealth::Up {
+            return false;
+        }
+        if !shard.state.device(d).is_empty() {
+            return false;
+        }
+        shard.state.tasks().all(|rec| {
+            rec.state.is_terminal()
+                || (rec.spec.source != d
+                    && rec.allocation.as_ref().map(|a| a.device) != Some(d))
+        })
+    }
+
+    /// Move ownership of `d` from shard `from` to shard `to`: flip the
+    /// health masks (the unchanged §4 searches immediately stop/start
+    /// considering it), update the router's home map, and hand the failure
+    /// detector's liveness view across so migration neither resets nor
+    /// advances the failure clock. Caller guarantees quiescence.
+    fn migrate_device(&mut self, d: DeviceId, from: usize, to: usize) {
+        debug_assert!(self.quiescent(from, d), "migrating a non-quiescent device");
+        let heard = self.shards[from].detector.last_heard(d);
+        self.shards[from].state.set_device_health(d, DeviceHealth::Down);
+        self.shards[to].state.set_device_health(d, DeviceHealth::Up);
+        self.shards[to].detector.record_update(d, heard);
+        self.home[d.0 as usize] = to;
+        self.broker.devices_migrated += 1;
+    }
+
+    /// Hysteresis-gated re-sharding: when the hot/cold demand ratio stays
+    /// ≥ `threshold` for `epochs` consecutive broker epochs, migrate up to
+    /// `max_moves` quiescent devices from the hottest shard to the coldest,
+    /// preferring devices nearest the cold shard's block (deterministic
+    /// tie-break on the lower id).
+    fn maybe_rebalance(&mut self, demand: &[f64]) {
+        let threshold = self.cfg.sharding.rebalance.threshold;
+        let epochs = self.cfg.sharding.rebalance.epochs;
+        let max_moves = self.cfg.sharding.rebalance.max_moves;
+        let k = self.shards.len();
+        let mut hot = 0;
+        let mut cold = 0;
+        for s in 1..k {
+            if demand[s] > demand[hot] {
+                hot = s;
+            }
+            if demand[s] < demand[cold] {
+                cold = s;
+            }
+        }
+        let skewed = hot != cold
+            && demand[hot] > 0.0
+            && (demand[cold] == 0.0 || demand[hot] / demand[cold] >= threshold);
+        if !skewed {
+            self.skew_streak = 0;
+            return;
+        }
+        self.skew_streak += 1;
+        if self.skew_streak < epochs {
+            return;
+        }
+        self.skew_streak = 0;
+        for _ in 0..max_moves {
+            // A shard must keep at least one device, and only quiescent
+            // devices may move.
+            let hot_owned = self.home.iter().filter(|&&h| h == hot).count();
+            if hot_owned <= 1 {
+                break;
+            }
+            let cold_ids: Vec<i64> = self
+                .home
+                .iter()
+                .enumerate()
+                .filter(|&(_, &h)| h == cold)
+                .map(|(d, _)| d as i64)
+                .collect();
+            let candidate = self
+                .home
+                .iter()
+                .enumerate()
+                .filter(|&(_, &h)| h == hot)
+                .map(|(d, _)| d)
+                .filter(|&d| self.quiescent(hot, DeviceId(d as u32)))
+                .min_by_key(|&d| {
+                    let dist = cold_ids
+                        .iter()
+                        .map(|&c| (d as i64 - c).abs())
+                        .min()
+                        .unwrap_or(i64::MAX);
+                    (dist, d)
+                });
+            match candidate {
+                Some(d) => self.migrate_device(DeviceId(d as u32), hot, cold),
+                None => break,
+            }
+        }
+    }
+
+    /// One broker epoch at `now` (driven by the simulator's prune
+    /// barriers through [`ControlSurface::epoch`]): measure per-shard link
+    /// demand over the window since the last epoch, re-lease the medium
+    /// demand-weighted (broker), and migrate devices under sustained skew
+    /// (rebalance). A 1-shard plane — or one with both subsystems
+    /// disabled — returns untouched, which is what keeps the default
+    /// configuration bit-identical to the static split.
+    fn run_epoch(&mut self, now: SimTime) {
+        let k = self.shards.len();
+        let broker_on = self.cfg.sharding.broker.enabled;
+        let rebalance_on = self.cfg.sharding.rebalance.enabled;
+        if k <= 1 || !(broker_on || rebalance_on) {
+            return;
+        }
+        let window = Window::new(self.last_epoch, now);
+        let demand = self.shard_demand(&window);
+        self.last_epoch = now;
+        for b in &mut self.backlog {
+            *b = 0;
+        }
+        if broker_on {
+            self.broker.epochs += 1;
+            let floor = self.cfg.sharding.broker.floor.min(1.0 / k as f64);
+            let total: f64 = demand.iter().sum();
+            if total > 0.0 {
+                for &w in &demand {
+                    if w / total < floor {
+                        self.broker.leases_clamped += 1;
+                    }
+                }
+            }
+            let leases = compute_leases(&demand, self.cfg.sharding.broker.floor);
+            for (s, &l) in leases.iter().enumerate() {
+                if (l - self.lease[s]).abs() > 1e-9 {
+                    self.broker.leases_granted += 1;
+                }
+            }
+            self.apply_leases(&leases);
+        }
+        if rebalance_on {
+            self.maybe_rebalance(&demand);
+        }
     }
 
     /// Spill an un-admitted low-priority request from its home shard `h`
@@ -361,13 +657,14 @@ impl<P: Policy> ControlPlane<P> {
         // Fold the minted ids back into the router's home maps so the
         // plane stays routable after a sweep.
         for (s, batch) in results.iter().enumerate() {
-            for (rid, _) in batch {
+            for (rid, out) in batch {
                 self.request_home.insert(*rid, s);
                 if let Some(req) = self.shards[s].state.request(*rid) {
                     for t in req.tasks.clone() {
                         self.task_home.insert(t, s);
                     }
                 }
+                self.backlog[s] += out.unallocated.len() as u64;
             }
         }
         results
@@ -437,6 +734,11 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
         let h = self.home_shard(source);
         let (id, t, out) = self.shards[h].handle_hp_request(frame, source, now);
         self.task_home.insert(id, h);
+        if out.window.is_none() {
+            // Unplaceable admission: part of the shard's demand signal for
+            // the next broker epoch.
+            self.backlog[h] += 1;
+        }
         (id, t, out)
     }
 
@@ -460,7 +762,22 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
         // policy that defers placement (the workstealers report no
         // unallocated tasks at admission) never spills.
         if self.spill_fanout > 0 && out.placements.is_empty() && !out.unallocated.is_empty() {
-            return self.spill_lp(rid, h, decision_t, out);
+            let (rid, t, out) = self.spill_lp(rid, h, decision_t, out);
+            // Whatever stayed unplaced is backlog demand for the shard the
+            // request ended up registered in.
+            let owner = self.request_home[&rid];
+            self.backlog[owner] += out.unallocated.len() as u64;
+            return (rid, t, out);
+        }
+        self.backlog[h] += out.unallocated.len() as u64;
+        if self.cfg.sharding.broker.enabled
+            && !out.placements.is_empty()
+            && self.lease[h] > 1.0 / self.shards.len() as f64 + 1e-9
+        {
+            // The home shard admitted while holding a broker-granted lease
+            // above its static slice — an admission that would have had to
+            // spill (or fail) under the static 1/K split.
+            self.broker.lp_spill_avoided += 1;
         }
         (rid, decision_t, out)
     }
@@ -570,6 +887,14 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
         self.spill
     }
 
+    fn epoch(&mut self, now: SimTime) {
+        self.run_epoch(now);
+    }
+
+    fn broker_stats(&self) -> BrokerStats {
+        self.broker
+    }
+
     fn fingerprint(&self) -> String {
         // One shard: exactly the raw controller's fingerprint, so the
         // bit-identity tests compare the two directly.
@@ -627,6 +952,9 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
         for (s, decisions) in per_shard.into_iter().enumerate() {
             for (d, &i) in decisions.into_iter().zip(&idx[s]) {
                 self.task_home.insert(d.task, s);
+                if d.outcome.window.is_none() {
+                    self.backlog[s] += 1;
+                }
                 out[i] = Some(d);
             }
         }
@@ -687,6 +1015,7 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
                         self.task_home.insert(t, s);
                     }
                 }
+                self.backlog[s] += d.outcome.unallocated.len() as u64;
                 out[i] = Some(d);
             }
         }
@@ -944,5 +1273,251 @@ mod tests {
         assert_eq!(ControlSurface::fingerprint(&serial), ControlSurface::fingerprint(&par));
         serial.check_invariants().unwrap();
         par.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lease_computation_is_floored_and_demand_weighted() {
+        // No demand: the medium reverts to the even static split.
+        assert_eq!(compute_leases(&[0.0, 0.0, 0.0, 0.0], 0.05), vec![0.25; 4]);
+        // Demand-weighted with the idle shard floored.
+        let leases = compute_leases(&[3.0, 1.0, 0.0], 0.1);
+        assert!(leases[0] > leases[1] && leases[1] > leases[2]);
+        assert!((leases[2] - 0.1).abs() < 1e-9, "idle shard floored: {leases:?}");
+        let sum: f64 = leases.iter().sum();
+        assert!(sum <= 1.0 + 1e-9 && sum > 0.99, "sum {sum}");
+        // A floor too big for K shards clamps to the even split.
+        let leases = compute_leases(&[5.0, 0.0], 0.9);
+        assert!((leases[1] - 0.5).abs() < 1e-9, "floor clamped to 1/K: {leases:?}");
+        // One shard: all demand ⇒ the whole medium.
+        assert!((compute_leases(&[7.0], 0.05)[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscribe")]
+    fn oversubscribed_leases_are_rejected() {
+        let mut p = plane(8, 2);
+        p.apply_leases(&[0.7, 0.7]);
+    }
+
+    #[test]
+    fn epoch_is_a_noop_when_disabled_or_unsharded() {
+        // Disabled (the default): leases and fingerprints stay untouched.
+        let mut p = plane(8, 4);
+        let before = ControlSurface::fingerprint(&p);
+        p.run_epoch(SimTime::from_secs_f64(60.0));
+        assert_eq!(ControlSurface::fingerprint(&p), before);
+        assert_eq!(p.leases(), &[0.25; 4]);
+        assert_eq!(p.broker(), BrokerStats::default());
+        // Enabled at K=1: nothing to re-lease, nothing to migrate.
+        let mut cfg = SystemConfig::default();
+        cfg.sharding.broker.enabled = true;
+        cfg.sharding.rebalance.enabled = true;
+        let mut p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        p.backlog[0] = 50;
+        p.run_epoch(SimTime::from_secs_f64(60.0));
+        assert_eq!(p.leases(), &[1.0]);
+        assert_eq!(p.broker(), BrokerStats::default());
+    }
+
+    #[test]
+    fn broker_releases_toward_backlogged_shard() {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 8;
+        cfg.sharding.shards = 2;
+        cfg.sharding.broker.enabled = true;
+        let mut p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        p.backlog[0] = 10;
+        p.run_epoch(SimTime::from_secs_f64(60.0));
+        let leases = p.leases().to_vec();
+        assert!(leases[0] > 0.5, "hot shard grew its lease: {leases:?}");
+        assert!((leases[1] - cfg.sharding.broker.floor).abs() < 1e-9, "idle shard floored");
+        assert!(leases.iter().sum::<f64>() <= 1.0 + 1e-9);
+        assert_eq!(p.shard(0).state.link_model.partition(), leases[0]);
+        assert_eq!(p.shard(1).state.link_model.partition(), leases[1]);
+        let stats = p.broker();
+        assert_eq!(stats.epochs, 1);
+        assert_eq!(stats.leases_granted, 2);
+        assert_eq!(stats.leases_clamped, 1, "the idle shard was topped up");
+        // Backlog is an epoch-scoped signal: consumed by the measurement.
+        assert_eq!(p.backlog, vec![0, 0]);
+        // A demand-free epoch reverts to the even split.
+        p.run_epoch(SimTime::from_secs_f64(120.0));
+        assert_eq!(p.leases(), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn lease_aware_spill_order_reranks_ring_by_current_lease() {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 16;
+        cfg.sharding.shards = 8;
+        cfg.sharding.spill_fanout = 4;
+        cfg.sharding.broker.enabled = true;
+        let mut p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        // Equal leases: stable sort keeps the nearest-first ring order.
+        assert_eq!(p.spill_order(0), vec![1, 7, 2, 6]);
+        // Skew the leases: the richest siblings are probed first.
+        let mut leases = vec![0.05; 8];
+        leases[6] = 0.4;
+        leases[2] = 0.2;
+        p.apply_leases(&leases);
+        assert_eq!(p.spill_order(0), vec![6, 2, 1, 7]);
+    }
+
+    #[test]
+    fn spill_probes_lease_rich_sibling_not_stale_ring_neighbour() {
+        // Regression for the spill/broker wart: the router used to walk
+        // the static nearest-first ring regardless of where the broker had
+        // moved the bandwidth. K=3, fanout=1: a spill from shard 0 probes
+        // exactly one sibling. Shard 1 (the ring-nearest) is saturated;
+        // shard 2 is idle and holds the lion's share of the medium. The
+        // lease-aware router must probe shard 2 and place there — the
+        // stale ring order would burn its single probe on shard 1 and fail
+        // the request.
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 6;
+        cfg.sharding.shards = 3;
+        cfg.sharding.spill_fanout = 1;
+        cfg.sharding.broker.enabled = true;
+        let mut p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        let long = SimTime::ZERO + SimDuration::from_secs_f64(600.0);
+        // Saturate shards 0 and 1 (devices 0,1 and 2,3) with 4-core
+        // non-preemptible HP blockers.
+        for (s, d) in [(0usize, 0u32), (0, 1), (1, 2), (1, 3)] {
+            for _ in 0..4 {
+                let shard = &mut p.shards[s];
+                let id = shard.state.fresh_task_id();
+                shard.state.register_task(crate::task::TaskSpec {
+                    id,
+                    frame: FrameId(99),
+                    source: DeviceId(d),
+                    priority: crate::task::Priority::High,
+                    deadline: long,
+                    spawn: SimTime::ZERO,
+                    request: None,
+                });
+                p.task_home.insert(id, s);
+                let shard = &mut p.shards[s];
+                let mut plan = crate::scheduler::plan::PlacementPlan::new(&shard.state);
+                plan.stage_placement(&shard.state, crate::task::Allocation {
+                    task: id,
+                    device: DeviceId(d),
+                    window: crate::task::Window::new(SimTime::ZERO, long),
+                    cores: 1,
+                    offloaded: false,
+                })
+                .unwrap();
+                shard.state.apply(plan).unwrap();
+            }
+        }
+        // The broker has moved the spare bandwidth to shard 2.
+        p.apply_leases(&[0.25, 0.05, 0.7]);
+        let (rid, _, out) =
+            p.handle_lp_request(FrameId(0), DeviceId(0), 1, SimTime::from_secs_f64(18.86), SimTime::ZERO);
+        assert_eq!(out.placements.len(), 1, "the lease-rich sibling hosts the request");
+        assert!(out.placements[0].device.0 >= 4, "placed on a shard-2 device");
+        assert!(p.shard(2).state.request(rid).is_some());
+        assert_eq!(p.spill().requests_returned, 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sustained_skew_migrates_a_quiescent_boundary_device() {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 4;
+        cfg.sharding.shards = 2;
+        cfg.sharding.rebalance.enabled = true; // hysteresis: 3 epochs
+        let mut p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        for e in 1..=2 {
+            p.backlog[0] = 10;
+            p.run_epoch(SimTime::from_secs_f64(60.0 * e as f64));
+            assert_eq!(p.home_shard(DeviceId(1)), 0, "hysteresis holds at epoch {e}");
+        }
+        // Third consecutive skewed epoch: the boundary device (nearest the
+        // cold block, deterministic tie-break) moves to the cold shard.
+        p.backlog[0] = 10;
+        p.run_epoch(SimTime::from_secs_f64(180.0));
+        assert_eq!(p.home_shard(DeviceId(1)), 1);
+        assert_eq!(p.home_shard(DeviceId(0)), 0, "one move per firing epoch");
+        assert!(p.shard(1).state.device_is_up(DeviceId(1)));
+        assert!(!p.shard(0).state.device_is_up(DeviceId(1)));
+        assert_eq!(p.broker().devices_migrated, 1);
+        p.check_invariants().unwrap();
+        // The migrated device now serves requests from its new shard.
+        let (id, _, out) = p.handle_hp_request(FrameId(0), DeviceId(1), SimTime::from_secs_f64(181.0));
+        assert!(out.allocated());
+        assert!(p.shard(1).state.task(id).is_some());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn skew_streak_resets_when_load_evens_out() {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 4;
+        cfg.sharding.shards = 2;
+        cfg.sharding.rebalance.enabled = true;
+        let mut p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        p.backlog[0] = 10;
+        p.run_epoch(SimTime::from_secs_f64(60.0));
+        p.backlog[0] = 10;
+        p.run_epoch(SimTime::from_secs_f64(120.0));
+        // Balanced epoch: the streak resets, so two more skewed epochs do
+        // not fire a migration.
+        p.run_epoch(SimTime::from_secs_f64(180.0));
+        for e in 4..=5 {
+            p.backlog[0] = 10;
+            p.run_epoch(SimTime::from_secs_f64(60.0 * e as f64));
+        }
+        assert_eq!(p.broker().devices_migrated, 0);
+        assert_eq!(p.home_shard(DeviceId(1)), 0);
+    }
+
+    #[test]
+    fn busy_devices_are_not_migrated() {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 4;
+        cfg.sharding.shards = 2;
+        cfg.sharding.rebalance.enabled = true;
+        let mut p: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        // Give both hot-shard devices in-flight HP work far in the future.
+        let long = SimTime::ZERO + SimDuration::from_secs_f64(600.0);
+        for d in [0u32, 1] {
+            let shard = &mut p.shards[0];
+            let id = shard.state.fresh_task_id();
+            shard.state.register_task(crate::task::TaskSpec {
+                id,
+                frame: FrameId(9),
+                source: DeviceId(d),
+                priority: crate::task::Priority::High,
+                deadline: long,
+                spawn: SimTime::ZERO,
+                request: None,
+            });
+            p.task_home.insert(id, 0);
+            let shard = &mut p.shards[0];
+            let mut plan = crate::scheduler::plan::PlacementPlan::new(&shard.state);
+            plan.stage_placement(&shard.state, crate::task::Allocation {
+                task: id,
+                device: DeviceId(d),
+                window: crate::task::Window::new(SimTime::ZERO, long),
+                cores: 1,
+                offloaded: false,
+            })
+            .unwrap();
+            shard.state.apply(plan).unwrap();
+        }
+        for e in 1..=4 {
+            p.backlog[0] = 10;
+            p.run_epoch(SimTime::from_secs_f64(60.0 * e as f64));
+        }
+        assert_eq!(p.broker().devices_migrated, 0, "no quiescent candidate");
+        assert!(!p.quiescent(0, DeviceId(1)));
+        p.check_invariants().unwrap();
     }
 }

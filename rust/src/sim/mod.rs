@@ -357,6 +357,12 @@ impl<S: ControlSurface> Sim<S> {
             // it in place makes every link operation O(total history).
             if now.since(self.last_prune) > prune_every {
                 self.surface.prune_before(now);
+                // Batch-boundary epoch: the sharded plane's bandwidth
+                // broker and re-sharding run here. Both engines fire it at
+                // identical virtual instants (the batched loop ends batches
+                // at prune deadlines), so the hook is engine-equivalent by
+                // construction.
+                self.surface.epoch(now);
                 self.last_prune = now;
             }
             self.dispatch_event(ev.kind, now);
@@ -432,6 +438,9 @@ impl<S: ControlSurface> Sim<S> {
             now = ev.at;
             if now.since(self.last_prune) > prune_every {
                 self.surface.prune_before(now);
+                // Same barrier-epoch hook as the serial loop — see
+                // `drain` for why the instants coincide.
+                self.surface.epoch(now);
                 self.last_prune = now;
             }
             match ev.kind {
@@ -1144,6 +1153,14 @@ impl<S: ControlSurface> Sim<S> {
         self.metrics.lp_tasks_spilled = spill.tasks_spilled;
         self.metrics.lp_spill_attempts = spill.spill_attempts;
         self.metrics.lp_spill_returned = spill.requests_returned;
+
+        // ---- bandwidth broker / re-sharding census ---------------------
+        let broker = self.surface.broker_stats();
+        self.metrics.broker_epochs = broker.epochs;
+        self.metrics.broker_leases_granted = broker.leases_granted;
+        self.metrics.broker_leases_clamped = broker.leases_clamped;
+        self.metrics.devices_migrated = broker.devices_migrated;
+        self.metrics.lp_spill_avoided = broker.lp_spill_avoided;
     }
 }
 

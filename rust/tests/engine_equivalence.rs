@@ -12,6 +12,11 @@
 //!   With a single engine the harness still runs every scenario (invariant
 //!   smoke + determinism); with `both` it additionally asserts the
 //!   engine-vs-engine equivalence.
+//! * `PATS_EQ_BROKER`: `on` | `off` (default `off`). With `on`, every
+//!   scenario also enables the bandwidth broker and the rebalancer, so the
+//!   whole differential suite re-runs with epoch re-leasing and device
+//!   migration active. (Broker-on coverage also runs unconditionally in the
+//!   dedicated tests below — the knob widens it to every scenario.)
 
 use pats::config::{EngineKind, SystemConfig};
 use pats::coordinator::{ControlSurface, Controller};
@@ -49,6 +54,14 @@ fn engines() -> Vec<EngineKind> {
     }
 }
 
+fn broker_from_env() -> bool {
+    match std::env::var("PATS_EQ_BROKER").as_deref() {
+        Ok("on") | Ok("1") => true,
+        Ok("off") | Ok("0") | Err(_) => false,
+        Ok(other) => panic!("PATS_EQ_BROKER must be on|off, got {other:?}"),
+    }
+}
+
 /// The policies the differential runs sweep: the paper's scheduler and the
 /// polling central workstealer (a second, structurally different decision
 /// path: deferred placement + poll ticks).
@@ -73,6 +86,10 @@ fn run_surface<P: Policy + Send>(
 ) -> RunOut {
     let mut cfg = cfg.clone();
     cfg.sharding.engine = engine;
+    if broker_from_env() {
+        cfg.sharding.broker.enabled = true;
+        cfg.sharding.rebalance.enabled = true;
+    }
     if cfg.sharding.shards == 1 {
         // The production dispatcher drives the raw controller at one shard;
         // the harness does the same so both engines cover it.
@@ -320,6 +337,128 @@ fn repeated_parallel_runs_serialise_byte_identical_metrics() {
                     ref_json,
                     run.metrics.deterministic_json().to_string_pretty(),
                     "repeat {rep} produced different JSON ({engine}, shards={k})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn engines_agree_with_broker_and_rebalance_on() {
+    // The broker epoch rides the prune barrier, which both engines hit at
+    // identical virtual instants — so re-leasing and migration must keep
+    // the engines bit-identical. Runs broker-on regardless of
+    // PATS_EQ_BROKER so local default runs cover it too.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 16;
+    cfg.frames = 96; // 6 cycles ≈ 113 virtual seconds: crosses prune barriers
+    cfg.sharding.broker.enabled = true;
+    cfg.sharding.rebalance.enabled = true;
+    let trace = Trace::generate(Distribution::Weighted(3), cfg.devices, cfg.frames, cfg.seed);
+    let script = ChurnScript::from_events(vec![
+        (SimTime::from_secs_f64(30.0), ChurnEvent::Crash(DeviceId(1))),
+        (SimTime::from_secs_f64(60.0), ChurnEvent::DegradeLink { factor: 0.7 }),
+        (SimTime::from_secs_f64(90.0), ChurnEvent::RestoreLink),
+    ]);
+    assert_engines_agree(
+        "broker-on",
+        &cfg,
+        &trace,
+        &script,
+        &[Pol::Scheduler, Pol::CentralWorkstealer],
+    );
+    // The differential above is not vacuous: at K > 1 the broker actually
+    // runs epochs on this scenario.
+    let mut cfg4 = cfg.clone();
+    cfg4.sharding.shards = 4;
+    let run = run_pol(Pol::Scheduler, &cfg4, &trace, &script, EngineKind::Serial);
+    assert!(run.metrics.broker_epochs > 0, "broker never acted at K=4");
+}
+
+#[test]
+fn broker_on_at_one_shard_is_bit_identical_to_the_unsharded_controller() {
+    // K=1 gives the broker nothing to re-lease and the rebalancer nowhere
+    // to move devices: the whole subsystem must go dormant, leaving the
+    // 1-shard plane bit-identical to the raw pre-shard controller.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 8;
+    cfg.frames = 96;
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+    let script = ChurnScript::from_events(vec![(
+        SimTime::from_secs_f64(40.0),
+        ChurnEvent::Crash(DeviceId(3)),
+    )]);
+    for engine in engines() {
+        let mut raw_cfg = cfg.clone();
+        raw_cfg.sharding.engine = engine;
+        let controller = Controller::new(raw_cfg.clone(), PatsScheduler::from_config(&raw_cfg));
+        let (raw_res, c) = run_with_surface_dynamic(&raw_cfg, &trace, &script, "raw", controller);
+
+        let mut plane_cfg = raw_cfg.clone();
+        plane_cfg.sharding.broker.enabled = true;
+        plane_cfg.sharding.rebalance.enabled = true;
+        let plane: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&plane_cfg, PatsScheduler::from_config);
+        let (plane_res, p) = run_with_surface_dynamic(&plane_cfg, &trace, &script, "k1", plane);
+        p.check_invariants().unwrap();
+
+        assert_eq!(
+            ControlSurface::fingerprint(&c),
+            ControlSurface::fingerprint(&p),
+            "broker-on 1-shard plane drifted from the raw controller ({engine})"
+        );
+        assert_metrics_identical(
+            &raw_res.metrics,
+            &plane_res.metrics,
+            &format!("broker-on K=1 vs raw, {engine}"),
+        );
+        assert_eq!(plane_res.metrics.broker_epochs, 0, "K=1 broker must stay dormant");
+        assert_eq!(plane_res.metrics.devices_migrated, 0);
+    }
+}
+
+#[test]
+fn repeated_broker_runs_serialise_byte_identical_metrics() {
+    // Determinism stress for the broker + rebalancer: 16 repeats of a
+    // churning hotspot scenario with re-leasing and migration active must
+    // serialise byte-identical deterministic JSON on both engines.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 16;
+    cfg.frames = 192; // 12 cycles ≈ 226 virtual seconds: several broker epochs
+    cfg.sharding.broker.enabled = true;
+    cfg.sharding.rebalance.enabled = true;
+    let profile = FleetProfile {
+        pattern: FleetPattern::Hotspot { hot_pct: 25 },
+        hp_only_pct: 0,
+        lp_weight: 4,
+    };
+    let trace = Trace::generate_fleet(&profile, cfg.devices, 12, cfg.seed);
+    let script = ChurnScript::from_events(vec![
+        (SimTime::from_secs_f64(70.0), ChurnEvent::Crash(DeviceId(2))),
+        (SimTime::from_secs_f64(100.0), ChurnEvent::Drain(DeviceId(11))),
+        (SimTime::from_secs_f64(140.0), ChurnEvent::DegradeLink { factor: 0.8 }),
+        (SimTime::from_secs_f64(180.0), ChurnEvent::RestoreLink),
+    ]);
+    for engine in engines() {
+        for k in [4usize, 8] {
+            let mut cfg = cfg.clone();
+            cfg.sharding.shards = k;
+            let reference = run_pol(Pol::Scheduler, &cfg, &trace, &script, engine);
+            assert!(
+                reference.metrics.broker_epochs > 0,
+                "broker never acted ({engine}, shards={k})"
+            );
+            let ref_json = reference.metrics.deterministic_json().to_string_pretty();
+            for rep in 1..16 {
+                let run = run_pol(Pol::Scheduler, &cfg, &trace, &script, engine);
+                assert_eq!(
+                    reference.fingerprint, run.fingerprint,
+                    "broker repeat {rep} diverged ({engine}, shards={k})"
+                );
+                assert_eq!(
+                    ref_json,
+                    run.metrics.deterministic_json().to_string_pretty(),
+                    "broker repeat {rep} produced different JSON ({engine}, shards={k})"
                 );
             }
         }

@@ -1,0 +1,182 @@
+//! Randomized property tests on the bandwidth broker: lease fractions
+//! never oversubscribe the physical medium, every shard keeps its floor,
+//! and re-leasing an in-use partition never disturbs committed link
+//! reservations (fingerprint-checked — `NetworkState::fingerprint` hashes
+//! the committed slot windows, which are stored as explicit instants and
+//! must therefore survive any partition change).
+
+use pats::config::SystemConfig;
+use pats::coordinator::ControlSurface;
+use pats::scheduler::PatsScheduler;
+use pats::shard::{compute_leases, ControlPlane};
+use pats::task::{DeviceId, FrameId};
+use pats::time::SimTime;
+use pats::util::prop::{run, Gen};
+
+fn random_demand(g: &mut Gen, k: usize) -> Vec<f64> {
+    (0..k)
+        .map(|_| if g.bool(0.25) { 0.0 } else { g.f64(0.0, 1.0e6) })
+        .collect()
+}
+
+#[test]
+fn leases_sum_to_at_most_one_and_respect_the_floor() {
+    run("lease invariants", 400, |g| {
+        let k = g.usize(1, 12);
+        let floor = g.f64(0.001, 1.0);
+        let demand = random_demand(g, k);
+        let leases = compute_leases(&demand, floor);
+        assert_eq!(leases.len(), k);
+        let sum: f64 = leases.iter().sum();
+        assert!(sum <= 1.0 + 1e-9, "leases {leases:?} oversubscribe: sum {sum}");
+        // The configured floor only fits K times if it is at most 1/K; the
+        // broker clamps it so K floors always tile the medium.
+        let eff_floor = floor.min(1.0 / k as f64);
+        for (s, &lease) in leases.iter().enumerate() {
+            assert!(lease.is_finite(), "shard {s} lease {lease} not finite");
+            assert!(
+                lease >= eff_floor - 1e-9,
+                "shard {s} lease {lease} starves the {eff_floor} floor"
+            );
+            assert!(lease > 0.0 && lease <= 1.0 + 1e-9, "shard {s} lease {lease}");
+        }
+    });
+}
+
+#[test]
+fn zero_demand_reverts_to_the_even_static_split() {
+    run("zero demand", 100, |g| {
+        let k = g.usize(1, 12);
+        let floor = g.f64(0.001, 1.0);
+        let leases = compute_leases(&vec![0.0; k], floor);
+        for &lease in &leases {
+            assert_eq!(lease.to_bits(), (1.0 / k as f64).to_bits());
+        }
+    });
+}
+
+#[test]
+fn lease_computation_is_deterministic() {
+    run("lease determinism", 100, |g| {
+        let k = g.usize(1, 12);
+        let floor = g.f64(0.001, 1.0);
+        let demand = random_demand(g, k);
+        let a = compute_leases(&demand, floor);
+        let b = compute_leases(&demand, floor);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "same demand, different leases");
+        }
+    });
+}
+
+/// Load a plane with a random mix of HP/LP admissions so its link
+/// calendars hold real committed reservations.
+fn random_workload(g: &mut Gen, plane: &mut ControlPlane<PatsScheduler>, cfg: &SystemConfig) {
+    let deadline = SimTime::ZERO + cfg.frame_deadline();
+    let requests = g.usize(1, 2 * cfg.devices);
+    for i in 0..requests {
+        let source = DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32);
+        if g.bool(0.3) {
+            let _ = ControlSurface::handle_hp_request(
+                plane,
+                FrameId(i as u64),
+                source,
+                SimTime::ZERO,
+            );
+        } else {
+            let n = g.u64(1, 4) as u8;
+            let _ = ControlSurface::handle_lp_request(
+                plane,
+                FrameId(i as u64),
+                source,
+                n,
+                deadline,
+                SimTime::ZERO,
+            );
+        }
+    }
+}
+
+#[test]
+fn re_leasing_an_in_use_partition_never_invalidates_committed_reservations() {
+    run("re-lease safety", 60, |g| {
+        let shards = *g.pick(&[2usize, 3, 4, 8]);
+        let mut cfg = SystemConfig::default();
+        cfg.devices = shards * g.usize(2, 4);
+        cfg.sharding.shards = shards;
+        cfg.sharding.broker.enabled = true;
+        let mut plane: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        random_workload(g, &mut plane, &cfg);
+        plane.check_invariants().unwrap();
+        let before = ControlSurface::fingerprint(&plane);
+
+        // A burst of arbitrary (valid) re-leases against the loaded plane.
+        for _ in 0..g.usize(1, 5) {
+            let leases = compute_leases(&random_demand(g, shards), g.f64(0.01, 1.0));
+            plane.apply_leases(&leases);
+            let sum: f64 = plane.leases().iter().sum();
+            assert!(sum <= 1.0 + 1e-9, "plane accepted oversubscribed leases");
+        }
+
+        assert_eq!(
+            ControlSurface::fingerprint(&plane),
+            before,
+            "re-leasing disturbed committed link reservations"
+        );
+        plane.check_invariants().unwrap();
+
+        // The re-leased plane still serves admissions cleanly.
+        let deadline = SimTime::ZERO + cfg.frame_deadline();
+        let _ = ControlSurface::handle_lp_request(
+            &mut plane,
+            FrameId(99_999),
+            DeviceId(0),
+            2,
+            deadline,
+            SimTime::ZERO,
+        );
+        plane.check_invariants().unwrap();
+    });
+}
+
+#[test]
+fn broker_epochs_keep_the_lease_invariant_under_random_traffic() {
+    run("epoch invariants", 40, |g| {
+        let shards = *g.pick(&[2usize, 4]);
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 4 * shards;
+        cfg.sharding.shards = shards;
+        cfg.sharding.broker.enabled = true;
+        cfg.sharding.rebalance.enabled = g.bool(0.5);
+        let floor = cfg.sharding.broker.floor;
+        let mut plane: ControlPlane<PatsScheduler> =
+            ControlPlane::new(&cfg, PatsScheduler::from_config);
+        let mut now = SimTime::ZERO;
+        for round in 0..g.usize(1, 4) {
+            let deadline = now + cfg.frame_deadline();
+            for i in 0..g.usize(1, cfg.devices) {
+                let source = DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32);
+                let _ = ControlSurface::handle_lp_request(
+                    &mut plane,
+                    FrameId((round * 1_000 + i) as u64),
+                    source,
+                    g.u64(1, 4) as u8,
+                    deadline,
+                    now,
+                );
+            }
+            now = now + pats::time::SimDuration::from_secs_f64(g.f64(1.0, 120.0));
+            ControlSurface::epoch(&mut plane, now);
+            let sum: f64 = plane.leases().iter().sum();
+            assert!(sum <= 1.0 + 1e-9, "epoch oversubscribed the medium: {sum}");
+            for (s, &lease) in plane.leases().iter().enumerate() {
+                assert!(
+                    lease >= floor.min(1.0 / shards as f64) - 1e-9,
+                    "epoch starved shard {s}: lease {lease}"
+                );
+            }
+        }
+        plane.check_invariants().unwrap();
+    });
+}

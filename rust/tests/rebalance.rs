@@ -1,0 +1,169 @@
+//! Dynamic re-sharding integration: a hotspot fleet with the broker and
+//! rebalancer enabled conserves every task and frame end-to-end, and a
+//! scripted migration hands a boundary device off cleanly — including a
+//! crash that lands *after* the device moved, which must be reclaimed by
+//! the new home shard exactly once.
+
+use pats::config::SystemConfig;
+use pats::coordinator::ControlSurface;
+use pats::scheduler::PatsScheduler;
+use pats::shard::ControlPlane;
+use pats::sim::run_with_surface_dynamic;
+use pats::task::{DeviceId, FrameId};
+use pats::time::SimTime;
+use pats::trace::{ChurnEvent, ChurnScript, FleetPattern, FleetProfile, Trace};
+
+/// A fleet where all the heat sits in shard 0: the hot block is the
+/// low-numbered quarter of the devices, which contiguous homing maps onto
+/// the first shard — sustained demand skew by construction.
+fn hotspot_cfg() -> (SystemConfig, Trace) {
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 16;
+    cfg.sharding.shards = 4;
+    cfg.sharding.broker.enabled = true;
+    cfg.sharding.rebalance.enabled = true;
+    let cycles = 24; // ~450 s of virtual time: crosses many 60 s prune barriers
+    cfg.frames = (cfg.devices * cycles) as u64;
+    let profile = FleetProfile {
+        pattern: FleetPattern::Hotspot { hot_pct: 25 },
+        hp_only_pct: 0,
+        lp_weight: 4,
+    };
+    let trace = Trace::generate_fleet(&profile, cfg.devices, cycles, cfg.seed);
+    (cfg, trace)
+}
+
+#[test]
+fn hotspot_run_with_broker_and_rebalance_conserves_every_task_and_frame() {
+    let (cfg, trace) = hotspot_cfg();
+    // Two mid-run crashes (one hot, one cold device) so reclamation and
+    // re-leasing overlap with live migrations.
+    let script = ChurnScript::from_events(vec![
+        (SimTime::from_secs_f64(130.0), ChurnEvent::Crash(DeviceId(2))),
+        (SimTime::from_secs_f64(200.0), ChurnEvent::Crash(DeviceId(13))),
+    ]);
+    let plane = ControlPlane::new(&cfg, PatsScheduler::from_config);
+    let (result, plane) = run_with_surface_dynamic(&cfg, &trace, &script, "hotspot", plane);
+    let m = &result.metrics;
+    plane.check_invariants().unwrap();
+    assert!(m.broker_epochs > 0, "a 450 s run must cross broker epochs");
+    assert!(m.lp_generated > 0);
+    // Conservation: re-leasing and migration move capacity and ownership
+    // around, but every generated task still lands in exactly one terminal
+    // account and every frame in exactly one bucket.
+    assert_eq!(
+        m.hp_completed + m.hp_failed_alloc + m.hp_violated + m.hp_lost_churn,
+        m.hp_generated,
+        "HP conservation under broker + rebalance"
+    );
+    assert_eq!(
+        m.lp_completed + m.lp_failed_alloc + m.lp_failed_preempted + m.lp_violated
+            + m.lp_lost_churn,
+        m.lp_generated,
+        "LP conservation under broker + rebalance"
+    );
+    assert_eq!(
+        m.frames_completed + m.frames_failed_hp + m.frames_failed_lp + m.frames_lost_churn,
+        m.frames_total,
+        "frame accounting under broker + rebalance"
+    );
+    // The per-shard registries stay disjoint and sum to the generated
+    // totals even after devices changed hands.
+    let mut total_tasks = 0u64;
+    let mut seen = std::collections::HashSet::new();
+    for s in 0..plane.num_shards() {
+        for rec in plane.shard(s).state.tasks() {
+            assert!(seen.insert(rec.spec.id), "{:?} in two shards", rec.spec.id);
+            total_tasks += 1;
+        }
+    }
+    assert_eq!(total_tasks, m.hp_generated + m.lp_generated);
+}
+
+#[test]
+fn sustained_skew_migrates_and_a_post_migration_crash_reclaims_exactly_once() {
+    // Scripted, fully deterministic version of the migration story:
+    // 2 shards x 2 devices, all demand on device 0 (shard 0), the
+    // boundary device 1 idle throughout.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 4;
+    cfg.sharding.shards = 2;
+    cfg.sharding.broker.enabled = true;
+    cfg.sharding.rebalance.enabled = true; // defaults: threshold 1.5, 3 epochs, 1 move
+    let mut plane: ControlPlane<PatsScheduler> =
+        ControlPlane::new(&cfg, PatsScheduler::from_config);
+    assert_eq!(plane.home_shard(DeviceId(1)), 0);
+    let t = SimTime::from_secs_f64;
+
+    // Three epochs of one-sided demand: HP traffic on device 0 only, so
+    // shard 0 is hot every epoch while device 1 stays quiescent.
+    for e in 1..=3u64 {
+        let now = t(70.0 * e as f64 - 10.0);
+        let _ = ControlSurface::handle_hp_request(&mut plane, FrameId(e), DeviceId(0), now);
+        ControlSurface::epoch(&mut plane, t(70.0 * e as f64));
+    }
+    assert_eq!(
+        plane.broker().devices_migrated,
+        1,
+        "three consecutive skewed epochs must fire exactly one migration"
+    );
+    assert_eq!(
+        plane.home_shard(DeviceId(1)),
+        1,
+        "the quiescent boundary device re-homes to the cold shard"
+    );
+    plane.check_invariants().unwrap();
+
+    // The migrated device serves traffic from its new shard, and only the
+    // new shard's registry holds the task.
+    let (task, _, out) =
+        ControlSurface::handle_hp_request(&mut plane, FrameId(100), DeviceId(1), t(215.0));
+    assert!(out.window.is_some(), "migrated device must be schedulable in its new shard");
+    assert!(plane.shard(1).state.tasks().any(|r| r.spec.id == task));
+    assert!(plane.shard(0).state.tasks().all(|r| r.spec.id != task));
+
+    // Crash the migrated device: the failure must route to its *current*
+    // home shard, which reclaims the orphan exactly once; the former home
+    // shard's state is untouched to the bit.
+    let before_old = plane.shard(0).state.fingerprint();
+    let rescue = ControlSurface::handle_device_failure(&mut plane, DeviceId(1), t(216.0));
+    assert_eq!(rescue.total(), 1, "exactly one orphan, accounted exactly once");
+    assert_eq!(
+        plane.shard(0).state.fingerprint(),
+        before_old,
+        "the former home shard must not double-reclaim a migrated device's crash"
+    );
+    plane.check_invariants().unwrap();
+    // Post-crash, every task is still registered in exactly one shard.
+    let mut seen = std::collections::HashSet::new();
+    for s in 0..plane.num_shards() {
+        for rec in plane.shard(s).state.tasks() {
+            assert!(seen.insert(rec.spec.id), "{:?} in two shards", rec.spec.id);
+        }
+    }
+}
+
+#[test]
+fn rebalance_alone_never_changes_the_static_lease_split() {
+    // `[sharding.rebalance]` without the broker: devices may migrate but
+    // the medium keeps the even 1/K split — the two subsystems are
+    // independently switchable.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 4;
+    cfg.sharding.shards = 2;
+    cfg.sharding.rebalance.enabled = true;
+    let mut plane: ControlPlane<PatsScheduler> =
+        ControlPlane::new(&cfg, PatsScheduler::from_config);
+    let t = SimTime::from_secs_f64;
+    for e in 1..=3u64 {
+        let now = t(70.0 * e as f64 - 10.0);
+        let _ = ControlSurface::handle_hp_request(&mut plane, FrameId(e), DeviceId(0), now);
+        ControlSurface::epoch(&mut plane, t(70.0 * e as f64));
+    }
+    assert_eq!(plane.broker().devices_migrated, 1);
+    assert_eq!(plane.broker().epochs, 0, "no broker: no lease epochs counted");
+    for &lease in plane.leases() {
+        assert_eq!(lease.to_bits(), 0.5f64.to_bits(), "lease split must stay static");
+    }
+    plane.check_invariants().unwrap();
+}

@@ -245,6 +245,43 @@ fn sharded_churn_rescue_stays_shard_local_and_accounted() {
 }
 
 #[test]
+fn broker_on_one_shard_plane_matches_raw_controller() {
+    // With one shard the broker and rebalancer must go fully dormant:
+    // enabling them at K=1 stays bit-identical to the raw pre-shard
+    // controller (which has no broker at all).
+    let mut cfg = SystemConfig::default();
+    cfg.frames = 80;
+    cfg.sharding.broker.enabled = true;
+    cfg.sharding.rebalance.enabled = true;
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+    assert_one_shard_equivalence(&cfg, &trace, &ChurnScript::none());
+}
+
+#[test]
+fn broker_off_run_keeps_the_static_split_and_exports_no_broker_block() {
+    // The default configuration must be indistinguishable from the
+    // pre-broker control plane: even static leases throughout, no broker
+    // counters in the metrics, no "broker" block in the exported JSON.
+    let (cfg, trace) = saturating_sharded_cfg(8, 4);
+    assert!(!cfg.sharding.broker.enabled && !cfg.sharding.rebalance.enabled);
+    let plane = ControlPlane::new(&cfg, PatsScheduler::from_config);
+    let (result, plane) =
+        run_with_surface_dynamic(&cfg, &trace, &ChurnScript::none(), "no-broker", plane);
+    let m = &result.metrics;
+    assert!(!m.saw_broker());
+    assert_eq!(m.broker_epochs, 0);
+    assert_eq!(m.devices_migrated, 0);
+    assert!(
+        !m.deterministic_json().to_string_pretty().contains("\"broker\""),
+        "broker-off JSON must not grow a broker block"
+    );
+    for &lease in plane.leases() {
+        assert_eq!(lease.to_bits(), 0.25f64.to_bits(), "static 1/K lease at K=4");
+    }
+    plane.check_invariants().unwrap();
+}
+
+#[test]
 fn scripted_call_sequence_matches_raw_controller_bit_for_bit() {
     // Controller-level (not sim-level) equivalence: drive both surfaces
     // through the identical scripted call sequence and compare state
