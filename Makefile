@@ -10,14 +10,19 @@
 #                      broker axes: static split and broker+rebalance)
 #   make lint        — clippy over every target, warnings denied
 #   make bench       — micro-benchmarks (writes BENCH_*.json)
+#   make bench-smoke — the same bench targets at CI-friendly reduced sizes
+#                      (PATS_BENCH_SMOKE=1); same BENCH_*.json row shapes,
+#                      used for the committed baselines
 #   make bench-build — compile every bench target without running (CI gate
 #                      so bench code cannot silently rot)
+#   make profile     — one profiled fleet sweep via `pats fleet --profile`
+#                      (per-phase wall-time breakdown on stderr)
 #   make artifacts   — AOT-compile the JAX model to HLO text (python layer)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test test-engines fmt lint bench bench-build artifacts
+.PHONY: verify build test test-engines fmt lint bench bench-smoke bench-build profile artifacts
 
 verify: build test fmt
 
@@ -50,9 +55,20 @@ bench:
 	$(CARGO) bench --bench dynamics
 	$(CARGO) bench --bench fidelity
 	$(CARGO) bench --bench shards
+	$(CARGO) bench --bench fleet
+
+# Reduced-size smoke profile: same rows, CI-friendly sizes. The committed
+# BENCH_*.json baselines come from this target.
+bench-smoke:
+	PATS_BENCH_SMOKE=1 $(CARGO) bench --bench shards
+	PATS_BENCH_SMOKE=1 $(CARGO) bench --bench fleet
 
 bench-build:
 	$(CARGO) bench --no-run
+
+# One profiled fleet sweep: per-phase wall-time breakdown on stderr.
+profile:
+	$(CARGO) run --release -- fleet --sizes 1024 --cycles 2 --profile
 
 artifacts:
 	$(PYTHON) python/compile/aot.py

@@ -1,0 +1,212 @@
+//! Fleet-scale benchmarks: the availability index against the direct
+//! O(N) scan, and the end-to-end 10k-device sweep.
+//!
+//! Two claims are tracked across commits:
+//!
+//! * **The availability index beats the direct scan at 1k+ devices**
+//!   (`BENCH_fleet.json`). The low-priority offload pre-filter and the
+//!   rescue candidate scan both ranked every up device per time-point;
+//!   the index answers the settled majority of the fleet in O(1) per
+//!   device, so candidate selection scales with the *busy* devices. Each
+//!   case runs twice — `index=off` is the legacy scan, `index=on` the
+//!   indexed door — on bit-identical fixtures.
+//! * **A 10k-device fleet sweep completes end-to-end**
+//!   (`BENCH_fleet10k.json`), with the profiler's per-phase breakdown
+//!   (event loop, planning layer, placement paths) attached so regressions
+//!   are attributable to a phase, not just a total.
+//!
+//! `PATS_BENCH_SMOKE=1` (`make bench-smoke`) shrinks the fleet sizes and
+//! iteration counts to a CI-friendly profile with the same row shapes.
+
+use pats::bench::{bench, bench_with_setup, section, smoke, write_json, BenchResult};
+use pats::config::SystemConfig;
+use pats::resources::avail;
+use pats::scheduler::plan::PlacementPlan;
+use pats::scheduler::{PatsScheduler, Policy};
+use pats::state::NetworkState;
+use pats::task::{Allocation, DeviceId, FrameId, LpRequest, Priority, TaskSpec, Window};
+use pats::time::{SimDuration, SimTime};
+use pats::util::profiler;
+
+/// Commit one placement through the transactional planning layer.
+fn place(st: &mut NetworkState, alloc: Allocation) {
+    let mut plan = PlacementPlan::new(st);
+    plan.stage_placement(st, alloc).unwrap();
+    st.apply(plan).unwrap();
+}
+
+/// A fleet-sized state with `load` low-priority allocations spread across
+/// the first `load` devices — the rest of the fleet is idle (settled), the
+/// occupancy profile the index exploits.
+fn loaded_fleet(devices: usize, load: usize) -> (SystemConfig, NetworkState) {
+    let mut cfg = SystemConfig::default();
+    cfg.devices = devices;
+    let mut st = NetworkState::new(&cfg);
+    for i in 0..load {
+        let id = st.fresh_task_id();
+        let dev = DeviceId((i % devices) as u32);
+        let start = SimTime::from_secs_f64(20.0 + (i / devices) as f64 * 18.0);
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(i as u64),
+            source: dev,
+            priority: Priority::Low,
+            deadline: start + SimDuration::from_secs_f64(60.0),
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        place(&mut st, Allocation {
+            task: id,
+            device: dev,
+            window: Window::from_duration(start, cfg.lp_slot(2)),
+            cores: 2,
+            offloaded: false,
+        });
+    }
+    (cfg, st)
+}
+
+fn lp_request(st: &mut NetworkState, n: usize) -> pats::task::RequestId {
+    let rid = st.fresh_request_id();
+    let deadline = SimTime::from_secs_f64(18.86);
+    let mut tasks = Vec::new();
+    for _ in 0..n {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: FrameId(998),
+            source: DeviceId(0),
+            priority: Priority::Low,
+            deadline,
+            spawn: SimTime::ZERO,
+            request: Some(rid),
+        });
+        tasks.push(id);
+    }
+    st.register_request(LpRequest {
+        id: rid,
+        frame: FrameId(998),
+        source: DeviceId(0),
+        deadline,
+        spawn: SimTime::ZERO,
+        tasks,
+    });
+    rid
+}
+
+fn show(results: &mut Vec<BenchResult>, r: BenchResult) {
+    println!("{}", r.render());
+    results.push(r);
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let sizes: &[usize] = if smoke() { &[256] } else { &[1_024, 10_240] };
+    let iters = if smoke() { 3 } else { 6 };
+
+    section("LP offload pre-filter: direct O(N) scan vs availability index");
+    for &devices in sizes {
+        // An eighth of the fleet is busy; the rest is settled — the index
+        // answers those without touching their calendars.
+        let load = devices / 8;
+        for index_on in [false, true] {
+            let tag = if index_on { "on" } else { "off" };
+            let r = bench_with_setup(
+                &format!("lp_admit/devices={devices}/index={tag}"),
+                1,
+                iters,
+                || {
+                    let (cfg, mut st) = loaded_fleet(devices, load);
+                    let rid = lp_request(&mut st, 4);
+                    let sched = PatsScheduler {
+                        preemption: true,
+                        reallocate: true,
+                        set_aware_victims: false,
+                    };
+                    (cfg, st, rid, sched)
+                },
+                |(cfg, mut st, rid, mut sched)| {
+                    avail::set_enabled(index_on);
+                    let out = sched.allocate_lp(&mut st, &cfg, rid, SimTime::ZERO);
+                    avail::set_enabled(true);
+                    assert!(!out.placements.is_empty(), "fleet has room for the set");
+                    out.placements.len()
+                },
+            );
+            show(&mut results, r);
+        }
+    }
+
+    section("rescue candidate scan: direct O(N) scan vs availability index");
+    for &devices in sizes {
+        let load = devices / 8;
+        for index_on in [false, true] {
+            let tag = if index_on { "on" } else { "off" };
+            let r = bench_with_setup(
+                &format!("rescue_scan/devices={devices}/index={tag}"),
+                1,
+                iters,
+                || loaded_fleet(devices, load).1,
+                |st| {
+                    avail::set_enabled(index_on);
+                    // Several windows per round, as rescue_all scans one
+                    // window per orphaned task.
+                    let mut total = 0usize;
+                    for w in 0..4u64 {
+                        let window = Window::new(
+                            SimTime::from_secs_f64(w as f64),
+                            SimTime::from_secs_f64(w as f64 + 5.0),
+                        );
+                        total += avail::rescue_candidates(&st, DeviceId(0), &window).len();
+                    }
+                    avail::set_enabled(true);
+                    total
+                },
+            );
+            show(&mut results, r);
+        }
+    }
+
+    avail::set_enabled(true);
+    match write_json("fleet", &results) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench JSON: {e}"),
+    }
+
+    // ---- the 10k-device sweep, profiled -------------------------------
+    // One full fleet_scale run through the real simulation engine; the
+    // profiler's per-phase breakdown lands in BENCH_fleet10k.json.
+    section("end-to-end fleet sweep with per-phase profile");
+    let mut sweep_results: Vec<BenchResult> = Vec::new();
+    let devices = if smoke() { 512 } else { 10_000 };
+    let mut cfg = SystemConfig::default();
+    cfg.fleet.cycles = 2;
+    profiler::enable(true);
+    profiler::reset();
+    let r = bench(
+        &format!("fleet_sweep/devices={devices}/cycles={}", cfg.fleet.cycles),
+        0,
+        1,
+        || {
+            let rows = pats::experiments::fleet_scale(&cfg, &[devices]);
+            let row = &rows[0];
+            assert_eq!(row.devices, devices);
+            assert!(row.metrics.frames_total > 0, "the sweep must complete end-to-end");
+            println!(
+                "  {} devices: {} frames, {} completed, wall {:.2?}, virtual end {}",
+                row.devices,
+                row.metrics.frames_total,
+                row.metrics.frames_completed,
+                row.wall,
+                row.virtual_end
+            );
+            row.metrics.frames_completed
+        },
+    );
+    show(&mut sweep_results, r);
+    match write_json("fleet10k", &sweep_results) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench JSON: {e}"),
+    }
+    profiler::enable(false);
+}

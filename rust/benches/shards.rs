@@ -20,7 +20,7 @@
 //!   entry points on the 1024-device fixture so the engine's batch cost
 //!   is tracked at every shard count.
 
-use pats::bench::{bench_with_setup, section, write_json, BenchResult};
+use pats::bench::{bench_with_setup, section, smoke, write_json, BenchResult};
 use pats::config::SystemConfig;
 use pats::coordinator::{ControlSurface, HpSweepJob, LpSweepJob};
 use pats::scheduler::PatsScheduler;
@@ -28,25 +28,30 @@ use pats::shard::{ControlPlane, LpJob};
 use pats::task::{DeviceId, FrameId};
 use pats::time::SimTime;
 
+/// Default fleet size; `PATS_BENCH_SMOKE` shrinks it (see `main`).
 const DEVICES: usize = 1024;
 
-fn plane_and_jobs(shards: usize) -> (ControlPlane<PatsScheduler>, Vec<Vec<LpJob>>) {
-    plane_and_jobs_with_broker(shards, false)
+fn plane_and_jobs(
+    devices: usize,
+    shards: usize,
+) -> (ControlPlane<PatsScheduler>, Vec<Vec<LpJob>>) {
+    plane_and_jobs_with_broker(devices, shards, false)
 }
 
 fn plane_and_jobs_with_broker(
+    devices: usize,
     shards: usize,
     broker: bool,
 ) -> (ControlPlane<PatsScheduler>, Vec<Vec<LpJob>>) {
     let mut cfg = SystemConfig::default();
-    cfg.devices = DEVICES;
+    cfg.devices = devices;
     cfg.sharding.shards = shards;
     cfg.sharding.broker.enabled = broker;
     cfg.sharding.rebalance.enabled = broker;
     let plane = ControlPlane::new(&cfg, PatsScheduler::from_config);
     let deadline = SimTime::ZERO + cfg.frame_deadline();
     let mut jobs = vec![Vec::new(); shards];
-    for d in 0..DEVICES as u32 {
+    for d in 0..devices as u32 {
         jobs[plane.home_shard(DeviceId(d))].push(LpJob {
             frame: FrameId(d as u64),
             source: DeviceId(d),
@@ -60,8 +65,8 @@ fn plane_and_jobs_with_broker(
 
 /// A plane whose calendars already hold one admitted request per device —
 /// the occupancy a mid-experiment decision sees.
-fn loaded_plane(shards: usize) -> (ControlPlane<PatsScheduler>, SimTime) {
-    let (mut plane, jobs) = plane_and_jobs(shards);
+fn loaded_plane(devices: usize, shards: usize) -> (ControlPlane<PatsScheduler>, SimTime) {
+    let (mut plane, jobs) = plane_and_jobs(devices, shards);
     plane.lp_sweep(&jobs, false);
     let cfg = SystemConfig::default();
     (plane, SimTime::ZERO + cfg.frame_deadline())
@@ -75,22 +80,25 @@ fn show(results: &mut Vec<BenchResult>, r: BenchResult) {
 fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
     let shard_counts = [1usize, 2, 4, 8];
+    let devices = if smoke() { 256 } else { DEVICES };
+    let iters = if smoke() { 3 } else { 8 };
+    let loaded_iters = if smoke() { 5 } else { 20 };
 
-    section("end-to-end decision sweep at 1024 devices: serial vs scoped threads");
+    section("end-to-end decision sweep: serial vs scoped threads");
     for &k in &shard_counts {
         let r = bench_with_setup(
-            &format!("sweep_serial/devices={DEVICES}/shards={k}"),
+            &format!("sweep_serial/devices={devices}/shards={k}"),
             1,
-            8,
-            || plane_and_jobs(k),
+            iters,
+            || plane_and_jobs(devices, k),
             |(mut plane, jobs)| plane.lp_sweep(&jobs, false).len(),
         );
         show(&mut results, r);
         let r = bench_with_setup(
-            &format!("sweep_parallel/devices={DEVICES}/shards={k}"),
+            &format!("sweep_parallel/devices={devices}/shards={k}"),
             1,
-            8,
-            || plane_and_jobs(k),
+            iters,
+            || plane_and_jobs(devices, k),
             |(mut plane, jobs)| plane.lp_sweep(&jobs, true).len(),
         );
         show(&mut results, r);
@@ -99,12 +107,12 @@ fn main() {
     section("batched-engine sweep doors (ControlSurface entry points)");
     for &k in &shard_counts {
         let r = bench_with_setup(
-            &format!("surface_hp_sweep/devices={DEVICES}/shards={k}"),
+            &format!("surface_hp_sweep/devices={devices}/shards={k}"),
             1,
-            8,
+            iters,
             || {
-                let (plane, _) = plane_and_jobs(k);
-                let jobs: Vec<HpSweepJob> = (0..DEVICES as u32)
+                let (plane, _) = plane_and_jobs(devices, k);
+                let jobs: Vec<HpSweepJob> = (0..devices as u32)
                     .map(|d| HpSweepJob {
                         frame: FrameId(d as u64),
                         source: DeviceId(d),
@@ -118,11 +126,11 @@ fn main() {
         show(&mut results, r);
 
         let r = bench_with_setup(
-            &format!("surface_lp_sweep/devices={DEVICES}/shards={k}"),
+            &format!("surface_lp_sweep/devices={devices}/shards={k}"),
             1,
-            8,
+            iters,
             || {
-                let (plane, jobs) = plane_and_jobs(k);
+                let (plane, jobs) = plane_and_jobs(devices, k);
                 let flat: Vec<LpSweepJob> = jobs
                     .iter()
                     .flatten()
@@ -144,10 +152,10 @@ fn main() {
     section("per-decision cost on a loaded plane (one admission, shard-local calendar)");
     for &k in &shard_counts {
         let r = bench_with_setup(
-            &format!("admit_after_sweep/devices={DEVICES}/shards={k}"),
+            &format!("admit_after_sweep/devices={devices}/shards={k}"),
             1,
-            20,
-            || loaded_plane(k),
+            loaded_iters,
+            || loaded_plane(devices, k),
             |(mut plane, deadline)| {
                 // One more request on an already-occupied fleet: the
                 // admission's link-message and completion-point searches
@@ -170,11 +178,11 @@ fn main() {
         // One full broker epoch (demand census + re-lease + rebalance scan)
         // on a loaded plane — the cost added at each prune barrier.
         let r = bench_with_setup(
-            &format!("broker_epoch/devices={DEVICES}/shards={k}"),
+            &format!("broker_epoch/devices={devices}/shards={k}"),
             1,
-            20,
+            loaded_iters,
             || {
-                let (mut plane, jobs) = plane_and_jobs_with_broker(k, true);
+                let (mut plane, jobs) = plane_and_jobs_with_broker(devices, k, true);
                 plane.lp_sweep(&jobs, false);
                 let cfg = SystemConfig::default();
                 (plane, SimTime::ZERO + cfg.frame_deadline())
@@ -189,11 +197,11 @@ fn main() {
         // One admission after the broker has already re-leased: the spill
         // ring is re-ranked by current lease instead of walked statically.
         let r = bench_with_setup(
-            &format!("admit_after_epoch/devices={DEVICES}/shards={k}"),
+            &format!("admit_after_epoch/devices={devices}/shards={k}"),
             1,
-            20,
+            loaded_iters,
             || {
-                let (mut plane, jobs) = plane_and_jobs_with_broker(k, true);
+                let (mut plane, jobs) = plane_and_jobs_with_broker(devices, k, true);
                 plane.lp_sweep(&jobs, false);
                 let cfg = SystemConfig::default();
                 let deadline = SimTime::ZERO + cfg.frame_deadline();
@@ -203,6 +211,39 @@ fn main() {
             |(mut plane, deadline)| {
                 let (_, _, out) = plane.handle_lp_request(
                     FrameId(9_999),
+                    DeviceId(7),
+                    2,
+                    deadline,
+                    SimTime::ZERO,
+                );
+                out.placements.len()
+            },
+        );
+        show(&mut results, r);
+    }
+
+    section("fleet scale: the 10k-device row");
+    // The availability index is what makes these complete in bench time:
+    // each shard's NetworkState is fleet-sized, so every admission's
+    // candidate pre-filter used to walk all 10k calendars.
+    let big = if smoke() { 1_024 } else { 10_240 };
+    for &k in &[8usize] {
+        let r = bench_with_setup(
+            &format!("sweep_parallel/devices={big}/shards={k}"),
+            0,
+            if smoke() { 2 } else { 4 },
+            || plane_and_jobs(big, k),
+            |(mut plane, jobs)| plane.lp_sweep(&jobs, true).len(),
+        );
+        show(&mut results, r);
+        let r = bench_with_setup(
+            &format!("admit_after_sweep/devices={big}/shards={k}"),
+            0,
+            if smoke() { 2 } else { 4 },
+            || loaded_plane(big, k),
+            |(mut plane, deadline)| {
+                let (_, _, out) = plane.handle_lp_request(
+                    FrameId(99_999),
                     DeviceId(7),
                     2,
                     deadline,

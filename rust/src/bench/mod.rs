@@ -8,7 +8,15 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::util::json::Json;
+use crate::util::profiler;
 use crate::util::stats::Summary;
+
+/// True when `PATS_BENCH_SMOKE` is set (to anything but `0`/empty):
+/// bench targets shrink their sizes/iterations to a CI-friendly smoke
+/// profile (`make bench-smoke`). Full-size runs leave it unset.
+pub fn smoke() -> bool {
+    std::env::var("PATS_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
 
 /// Result of one benchmark case.
 pub struct BenchResult {
@@ -118,9 +126,14 @@ pub fn section(title: &str) {
 /// commits. Returns the written path.
 pub fn write_json(bench_name: &str, results: &[BenchResult]) -> std::io::Result<PathBuf> {
     let cases: Vec<Json> = results.iter().map(BenchResult::to_json).collect();
-    let doc = Json::obj()
+    let mut doc = Json::obj()
         .with("bench", bench_name)
         .with("results", Json::Arr(cases));
+    // Per-phase breakdown rides along whenever the profiler collected
+    // anything during the run (bench targets enable it themselves).
+    if let Some(report) = profiler::report() {
+        doc = doc.with("profile", report.to_json());
+    }
     let path = PathBuf::from(format!("BENCH_{bench_name}.json"));
     std::fs::write(&path, doc.to_string_pretty())?;
     Ok(path)

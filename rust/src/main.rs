@@ -52,12 +52,18 @@ USAGE:
   DIST:   uniform | weighted1..4 | network-slice
   P:      scheduler | central-workstealer | decentral-workstealer
   PAT:    steady | bursty | diurnal | hotspot
+
+  --profile on any subcommand prints a per-phase wall-time breakdown
+  (event loop, planning layer, placement paths) to stderr on exit.
 ";
 
 fn main() -> ExitCode {
     pats::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&argv, &["no-preemption", "set-aware-victims", "json", "broker", "help"]) {
+    let args = match Args::parse(
+        &argv,
+        &["no-preemption", "set-aware-victims", "json", "broker", "profile", "help"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -67,6 +73,9 @@ fn main() -> ExitCode {
     if args.flag("help") || args.command.is_none() {
         println!("{USAGE}");
         return ExitCode::SUCCESS;
+    }
+    if args.flag("profile") {
+        pats::util::profiler::enable(true);
     }
     let result = match args.command.as_deref() {
         Some("experiments") => cmd_experiments(&args),
@@ -80,6 +89,9 @@ fn main() -> ExitCode {
         Some(other) => Err(format!("unknown subcommand {other:?}\n{USAGE}")),
         None => unreachable!(),
     };
+    if let Some(report) = pats::util::profiler::report() {
+        eprintln!("{}", report.render_text());
+    }
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {

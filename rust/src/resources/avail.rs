@@ -1,0 +1,437 @@
+//! Fleet-wide availability index: the O(feasible + log N) candidate
+//! pre-filter behind low-priority offload and churn rescue.
+//!
+//! The paper's LP scheduler and the rescue path both rank *every* up
+//! device per candidate time-point (`earliest_availability` /
+//! `peak_usage_in` per device), which is O(N) per time-point — the
+//! dominant controller cost at fleet scale, and fatally so in the sharded
+//! plane where each shard's `NetworkState` is fleet-sized with foreign
+//! devices masked `Down`. The profiler (`util::profiler`) is what exposed
+//! this; this module is what kills it.
+//!
+//! The index records, per up device, the latest reservation *end* on its
+//! core calendar ([`crate::resources::CoreTimeline::last_end`]), sorted by
+//! `(last_end, id)`. Windows are half-open, so every device whose
+//! `last_end <= t` is **settled** at `t`: usage is zero, any core count up
+//! to capacity is available immediately, and any window starting at or
+//! after `t` sees zero peak usage. A `partition_point` therefore splits the
+//! fleet into a settled prefix answered in O(1) per device — no calendar
+//! walk — and an active suffix that pays the exact per-device scan. Under
+//! the steady workloads the sweeps run, most of the fleet is settled at
+//! any instant, so candidate selection scales with the *busy* devices, not
+//! the fleet.
+//!
+//! Correctness is equivalence, not heuristics: the settled fast path emits
+//! exactly the tuple the direct scan would have computed (busy/peak are
+//! provably zero there), callers re-sort the merged candidates, and every
+//! consumer keeps a direct-scan fallback behind [`set_enabled`] that the
+//! equivalence harness (`PATS_EQ_INDEX`) and the property tests in this
+//! module hold bit-identical.
+//!
+//! Caching mirrors `resources::pool`: entries are keyed by the state's
+//! `(uid, version)` pair in a small thread-local cache. Every mutating
+//! `NetworkState` method bumps `version`, so invalidation is correct by
+//! construction — a stale index simply never matches again.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::state::NetworkState;
+use crate::task::{DeviceId, Window};
+use crate::time::SimTime;
+use crate::util::profiler::{self, Counter};
+
+/// Gates whether consumers (LP offload, rescue) use the index or the
+/// direct O(N) scan. On by default; the equivalence harness flips it via
+/// `PATS_EQ_INDEX` to prove both paths bit-identical.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Route candidate scans through the index (`true`, the default) or the
+/// direct per-device scan (`false`). Both produce bit-identical results;
+/// the toggle exists for differential testing and benchmarking.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is the availability index in use?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// One up device's entry in the index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexEntry {
+    /// Latest reservation end on the device's core calendar
+    /// ([`SimTime::ZERO`] for an empty calendar): the instant from which
+    /// the device is completely idle.
+    pub settled_at: SimTime,
+    /// The device id.
+    pub device: u32,
+    /// The device's core capacity (cached so the settled fast path needs
+    /// no state lookup).
+    pub capacity: u32,
+}
+
+/// Snapshot of every *up* device's settle point, sorted by
+/// `(settled_at, device)`.
+#[derive(Debug, Clone)]
+pub struct AvailabilityIndex {
+    entries: Vec<IndexEntry>,
+}
+
+impl AvailabilityIndex {
+    /// Build the index from a state snapshot: one entry per up device.
+    /// O(N log N); amortised away by the `(uid, version)` cache.
+    pub fn build(st: &NetworkState) -> AvailabilityIndex {
+        let mut entries: Vec<IndexEntry> = st
+            .up_devices()
+            .map(|d| {
+                let tl = st.device(d);
+                IndexEntry {
+                    settled_at: tl.last_end().unwrap_or(SimTime::ZERO),
+                    device: d.0,
+                    capacity: tl.capacity(),
+                }
+            })
+            .collect();
+        entries.sort_unstable_by_key(|e| (e.settled_at, e.device));
+        AvailabilityIndex { entries }
+    }
+
+    /// Every entry, sorted by `(settled_at, device)`.
+    pub fn entries(&self) -> &[IndexEntry] {
+        &self.entries
+    }
+
+    /// Number of up devices indexed.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the index empty (no up devices)?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Split into `(settled, active)` at time-point `t`: every device in
+    /// the settled prefix has `settled_at <= t` (idle from `t` on); the
+    /// active suffix still holds reservations ending after `t`. O(log N).
+    pub fn split_settled(&self, t: SimTime) -> (&[IndexEntry], &[IndexEntry]) {
+        let cut = self.entries.partition_point(|e| e.settled_at <= t);
+        self.entries.split_at(cut)
+    }
+}
+
+/// Thread-local cache entries kept. Sweeps interleave at most a few
+/// states per thread (one per shard the thread touches plus the global
+/// one), so a small cap bounds memory without hurting the hit rate —
+/// mirrors `resources::pool::POOL_CAP`.
+const CACHE_CAP: usize = 8;
+
+thread_local! {
+    static CACHE: RefCell<Vec<(u64, u64, Rc<AvailabilityIndex>)>> =
+        const { RefCell::new(Vec::new()) };
+}
+
+/// The availability index for `st`'s exact `(uid, version)` snapshot:
+/// served from the thread-local cache when this snapshot was indexed
+/// before, rebuilt (and cached, displacing any stale entry for the same
+/// state) otherwise. Always coherent — any state mutation bumps `version`,
+/// so a cached index can never describe anything but the live calendars.
+pub fn index_for(st: &NetworkState) -> Rc<AvailabilityIndex> {
+    let (uid, version) = (st.uid(), st.version());
+    if let Some(hit) = CACHE.with(|c| {
+        c.borrow()
+            .iter()
+            .find(|(u, v, _)| *u == uid && *v == version)
+            .map(|(_, _, idx)| Rc::clone(idx))
+    }) {
+        profiler::count(Counter::IndexHit, 1);
+        return hit;
+    }
+    profiler::count(Counter::IndexMiss, 1);
+    profiler::count(Counter::IndexBuild, 1);
+    let idx = Rc::new(AvailabilityIndex::build(st));
+    CACHE.with(|c| {
+        let mut cache = c.borrow_mut();
+        // A stale snapshot of the same state can never match again.
+        cache.retain(|(u, _, _)| *u != uid);
+        if cache.len() >= CACHE_CAP {
+            cache.remove(0);
+        }
+        cache.push((uid, version, Rc::clone(&idx)));
+    });
+    idx
+}
+
+/// Rescue candidate scan: `(peak_usage_in(window), device)` for every up
+/// device except `source`, in the exact tuples the direct scan produces
+/// (unsorted — the caller sorts and truncates). Settled devices
+/// (`settled_at <= window.start`) are emitted as `(0, d)` without touching
+/// their calendars; active devices pay the exact per-device peak scan.
+/// Falls back to the direct scan when the index is [disabled](set_enabled).
+pub fn rescue_candidates(
+    st: &NetworkState,
+    source: DeviceId,
+    window: &Window,
+) -> Vec<(u32, u32)> {
+    if !enabled() {
+        return rescue_candidates_direct(st, source, window);
+    }
+    let idx = index_for(st);
+    let (settled, active) = idx.split_settled(window.start);
+    profiler::count(Counter::DevicesSettled, settled.len() as u64);
+    profiler::count(Counter::DevicesScanned, active.len() as u64);
+    let mut out = Vec::with_capacity(idx.len().saturating_sub(1));
+    for e in settled {
+        if e.device != source.0 {
+            out.push((0, e.device));
+        }
+    }
+    for e in active {
+        if e.device != source.0 {
+            out.push((st.device(DeviceId(e.device)).peak_usage_in(window), e.device));
+        }
+    }
+    out
+}
+
+/// The legacy O(N) rescue scan the index replaces; kept as the
+/// differential baseline.
+fn rescue_candidates_direct(
+    st: &NetworkState,
+    source: DeviceId,
+    window: &Window,
+) -> Vec<(u32, u32)> {
+    st.up_devices()
+        .filter(|&d| d != source)
+        .map(|d| (st.device(d).peak_usage_in(window), d.0))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::scheduler::plan::PlacementPlan;
+    use crate::state::DeviceHealth;
+    use crate::task::{Allocation, DeviceId, FailReason, Priority, TaskId, TaskSpec};
+    use crate::time::SimDuration;
+    use crate::util::prop::{run, Gen};
+
+    fn t(ms: u64) -> SimTime {
+        SimTime::from_millis(ms)
+    }
+
+    fn place(st: &mut NetworkState, device: u32, start: u64, end: u64, cores: u32) -> TaskId {
+        let id = st.fresh_task_id();
+        st.register_task(TaskSpec {
+            id,
+            frame: crate::task::FrameId(0),
+            source: DeviceId(0),
+            priority: Priority::Low,
+            deadline: t(end),
+            spawn: SimTime::ZERO,
+            request: None,
+        });
+        let mut plan = PlacementPlan::new(st);
+        plan.stage_placement(st, Allocation {
+            task: id,
+            device: DeviceId(device),
+            window: Window::new(t(start), t(end)),
+            cores,
+            offloaded: false,
+        })
+        .expect("test placement fits");
+        st.apply(plan).expect("test placement commits");
+        id
+    }
+
+    #[test]
+    fn index_matches_state_and_splits_correctly() {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 6;
+        let mut st = NetworkState::new(&cfg);
+        place(&mut st, 1, 0, 500, 2);
+        place(&mut st, 3, 100, 900, 2);
+        st.mark_device_down(DeviceId(5), SimTime::ZERO);
+        let idx = AvailabilityIndex::build(&st);
+        // Only up devices; sorted by (settled_at, id); empty calendars at ZERO.
+        let devs: Vec<u32> = idx.entries().iter().map(|e| e.device).collect();
+        assert_eq!(devs, vec![0, 2, 4, 1, 3]);
+        assert_eq!(idx.entries()[3].settled_at, t(500));
+        assert_eq!(idx.entries()[4].settled_at, t(900));
+        assert_eq!(idx.len(), 5);
+        let (settled, active) = idx.split_settled(t(500));
+        assert_eq!(settled.len(), 4, "dev 1 settles exactly at its last end");
+        assert_eq!(active.len(), 1);
+        let (settled, active) = idx.split_settled(t(499));
+        assert_eq!((settled.len(), active.len()), (3, 2));
+        // The settled-device lemma, against the live calendars.
+        for e in idx.split_settled(t(600)).0 {
+            let d = st.device(DeviceId(e.device));
+            assert_eq!(d.usage_at(t(600)), 0);
+            assert_eq!(d.earliest_availability(t(600), e.capacity), Some(t(600)));
+            assert_eq!(d.peak_usage_in(&Window::new(t(600), t(5_000))), 0);
+        }
+    }
+
+    #[test]
+    fn cache_hits_same_snapshot_and_invalidates_on_version_bump() {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = 4;
+        let mut st = NetworkState::new(&cfg);
+        place(&mut st, 1, 0, 400, 2);
+        let a = index_for(&st);
+        let b = index_for(&st);
+        assert!(Rc::ptr_eq(&a, &b), "same (uid, version) must hit the cache");
+        // Any mutation bumps the version: the next lookup rebuilds.
+        st.set_device_health(DeviceId(3), DeviceHealth::Draining);
+        let c = index_for(&st);
+        assert!(!Rc::ptr_eq(&a, &c), "version bump must invalidate");
+        assert_eq!(c.len(), 3, "the drained device left the index");
+        // A different state never matches this one's entries.
+        let other = NetworkState::new(&cfg);
+        let d = index_for(&other);
+        assert!(!Rc::ptr_eq(&c, &d));
+        assert_eq!(d.len(), 4);
+    }
+
+    /// The heart of the bit-identity claim: under random place / complete /
+    /// fail / preempt / prune / churn sequences, the indexed rescue scan
+    /// equals the direct scan tuple-for-tuple, and every index entry agrees
+    /// with the live calendar it summarises.
+    #[test]
+    fn prop_indexed_scan_equals_direct_scan_under_random_ops() {
+        run("availability index ≡ direct scan", 120, |g: &mut Gen| {
+            let mut cfg = SystemConfig::default();
+            cfg.devices = g.usize(2, 10);
+            let mut st = NetworkState::new(&cfg);
+            let mut live: Vec<(TaskId, u32)> = Vec::new();
+            for _ in 0..g.usize(1, 40) {
+                match g.usize(0, 5) {
+                    0 | 1 => {
+                        let d = g.u64(0, cfg.devices as u64 - 1) as u32;
+                        if st.device_is_up(DeviceId(d)) {
+                            let start = g.u64(0, 2_000);
+                            let end = start + g.u64(1, 2_000);
+                            let cores = g.u64(1, 2) as u32;
+                            let tl = st.device(DeviceId(d));
+                            if tl.fits(&Window::new(t(start), t(end)), cores) {
+                                let id = place(&mut st, d, start, end, cores);
+                                live.push((id, d));
+                            }
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let (id, _) = live.swap_remove(g.usize(0, live.len() - 1));
+                            if g.bool(0.5) {
+                                st.complete_task(id, t(g.u64(0, 4_000)));
+                            } else {
+                                st.fail_task(id, FailReason::Violated, t(g.u64(0, 4_000)));
+                            }
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let (id, _) = live.swap_remove(g.usize(0, live.len() - 1));
+                            let _ = st.preempt_task(id, t(g.u64(0, 4_000)));
+                        }
+                    }
+                    4 => {
+                        st.prune_before(t(g.u64(0, 3_000)));
+                    }
+                    _ => {
+                        let d = DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32);
+                        match g.usize(0, 2) {
+                            0 => {
+                                st.mark_device_down(d, t(g.u64(0, 4_000)));
+                                live.retain(|&(_, dev)| dev != d.0);
+                            }
+                            1 => st.set_device_health(d, DeviceHealth::Up),
+                            _ => {
+                                if st.device(d).is_empty() {
+                                    st.set_device_health(d, DeviceHealth::Draining);
+                                }
+                            }
+                        }
+                    }
+                }
+                // Index entries agree with the live calendars.
+                let idx = AvailabilityIndex::build(&st);
+                assert_eq!(idx.len(), st.up_devices().count());
+                for e in idx.entries() {
+                    let tl = st.device(DeviceId(e.device));
+                    assert!(st.device_is_up(DeviceId(e.device)));
+                    assert_eq!(e.settled_at, tl.last_end().unwrap_or(SimTime::ZERO));
+                    assert_eq!(e.capacity, tl.capacity());
+                    assert_eq!(tl.usage_at(e.settled_at), 0, "settled ⇒ idle");
+                }
+                assert!(
+                    idx.entries()
+                        .windows(2)
+                        .all(|p| (p[0].settled_at, p[0].device) < (p[1].settled_at, p[1].device)),
+                    "sorted by (settled_at, device)"
+                );
+                // Indexed rescue scan ≡ direct scan after the caller's sort.
+                let source = DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32);
+                let ws = g.u64(0, 4_000);
+                let window = Window::new(t(ws), t(ws + g.u64(1, 2_000)));
+                let mut via_index = rescue_candidates(&st, source, &window);
+                let mut direct = rescue_candidates_direct(&st, source, &window);
+                via_index.sort_unstable();
+                direct.sort_unstable();
+                assert_eq!(via_index, direct, "indexed scan diverged from direct scan");
+            }
+        });
+    }
+
+    #[test]
+    fn cached_index_stays_coherent_across_random_mutation_interleavings() {
+        run("cache coherence", 80, |g: &mut Gen| {
+            let mut cfg = SystemConfig::default();
+            cfg.devices = g.usize(2, 6);
+            let mut st = NetworkState::new(&cfg);
+            for _ in 0..g.usize(1, 15) {
+                // Random mutation (or none — exercising repeated hits).
+                if g.bool(0.7) {
+                    let d = g.u64(0, cfg.devices as u64 - 1) as u32;
+                    if st.device_is_up(DeviceId(d)) {
+                        let start = g.u64(0, 1_000);
+                        let end = start + g.u64(1, 1_000);
+                        if st.device(DeviceId(d)).fits(&Window::new(t(start), t(end)), 1) {
+                            place(&mut st, d, start, end, 1);
+                        }
+                    } else {
+                        st.set_device_health(DeviceId(d), DeviceHealth::Up);
+                    }
+                }
+                // Whatever the cache serves must equal a fresh build.
+                let cached = index_for(&st);
+                let fresh = AvailabilityIndex::build(&st);
+                assert_eq!(cached.entries(), fresh.entries(), "stale index served");
+            }
+        });
+    }
+
+    #[test]
+    fn charge_link_message_invalidates_like_any_mutation() {
+        // The link calendar doesn't feed the index, but its mutations still
+        // bump the version — the index must simply rebuild to an equal
+        // value, never serve across a key change.
+        let cfg = SystemConfig::default();
+        let mut st = NetworkState::new(&cfg);
+        let a = index_for(&st);
+        st.charge_link_message(
+            SimTime::ZERO,
+            SimDuration::from_micros(10),
+            crate::resources::SlotKind::PollMsg,
+            TaskId(1),
+        );
+        let b = index_for(&st);
+        assert!(!Rc::ptr_eq(&a, &b));
+        assert_eq!(a.entries(), b.entries());
+    }
+}

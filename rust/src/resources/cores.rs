@@ -243,6 +243,22 @@ impl CoreTimeline {
         &self.slots
     }
 
+    /// The latest reservation *end* on the calendar, or `None` when empty.
+    ///
+    /// Windows are half-open, so at any instant `t >= last_end()` the
+    /// device is completely idle: `usage_at(t) == 0`,
+    /// `earliest_availability(t, c) == Some(t)` for every `c <= capacity`,
+    /// and `peak_usage_in(w) == 0` for any window starting at or after it.
+    /// The fleet-wide availability index keys on this to answer "which
+    /// devices are settled by time-point `t`" without walking calendars
+    /// (see `resources::avail`).
+    ///
+    /// Slots are sorted by *start*, so this scans all of them — O(k) in
+    /// the (post-prune, tiny) reservation count.
+    pub fn last_end(&self) -> Option<SimTime> {
+        self.slots.iter().map(|s| s.window.end).max()
+    }
+
     /// Debug invariant: sorted by start; capacity never exceeded at any
     /// reservation boundary.
     pub fn check_invariants(&self) -> Result<()> {
@@ -409,5 +425,23 @@ mod tests {
     fn earliest_availability_on_empty_timeline() {
         let tl = CoreTimeline::new(4);
         assert_eq!(tl.earliest_availability(t(7), 4), Some(t(7)));
+    }
+
+    #[test]
+    fn last_end_is_max_end_not_last_slot() {
+        let mut tl = CoreTimeline::new(8);
+        assert_eq!(tl.last_end(), None);
+        // A later-starting slot can end *earlier* — sort is by start.
+        reserve(&mut tl, w(0, 500), 2, 1, 500);
+        reserve(&mut tl, w(100, 200), 2, 2, 200);
+        assert_eq!(tl.last_end(), Some(t(500)));
+        // Past last_end the settled-device lemma holds.
+        assert_eq!(tl.usage_at(t(500)), 0, "half-open end");
+        assert_eq!(tl.earliest_availability(t(500), 8), Some(t(500)));
+        assert_eq!(tl.peak_usage_in(&w(500, 900)), 0);
+        tl.remove_task(TaskId(1));
+        assert_eq!(tl.last_end(), Some(t(200)));
+        tl.clear();
+        assert_eq!(tl.last_end(), None);
     }
 }

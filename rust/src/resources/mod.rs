@@ -10,6 +10,7 @@
 //! the design and `rust/tests/prop_timeline_equivalence.rs` for the
 //! behavioural proof against the seed's linear scan.
 
+pub mod avail;
 mod cores;
 pub(crate) mod pool;
 mod timeline;

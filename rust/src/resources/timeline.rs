@@ -398,6 +398,13 @@ impl Timeline {
         self.slots.values().cloned().collect()
     }
 
+    /// All slots in start order, borrowed straight from the calendar — the
+    /// allocation-free counterpart of [`Timeline::slots`] for paths
+    /// (fingerprints, invariant sweeps) that only walk the reservations.
+    pub fn slots_iter(&self) -> impl Iterator<Item = &Slot> {
+        self.slots.values()
+    }
+
     /// The slot starting exactly at `start`, if any. O(log n); the
     /// planning layer snapshots a reservation here before releasing it so
     /// the release can be rolled back precisely.
@@ -410,16 +417,26 @@ impl Timeline {
     /// would remove. The planning layer captures these before staging an
     /// eviction so the eviction can be rolled back.
     pub fn owner_slots_from(&self, owner: TaskId, t: SimTime) -> Vec<Slot> {
-        let mut out: Vec<Slot> = match self.by_owner.get(&owner) {
-            Some(starts) => starts
-                .iter()
-                .filter(|&&s| s >= t)
-                .map(|s| self.slots[s].clone())
-                .collect(),
-            None => Vec::new(),
-        };
-        out.sort_by_key(|s| s.window.start);
+        let mut out = Vec::new();
+        self.owner_slots_from_into(owner, t, &mut out);
         out
+    }
+
+    /// [`Timeline::owner_slots_from`] into a caller-supplied buffer: clears
+    /// `out`, then appends the snapshots in start order. Lets the planning
+    /// layer reuse one scratch `Vec` across eviction stagings instead of
+    /// allocating per victim.
+    pub fn owner_slots_from_into(&self, owner: TaskId, t: SimTime, out: &mut Vec<Slot>) {
+        out.clear();
+        if let Some(starts) = self.by_owner.get(&owner) {
+            out.extend(
+                starts
+                    .iter()
+                    .filter(|&&s| s >= t)
+                    .map(|s| self.slots[s].clone()),
+            );
+        }
+        out.sort_by_key(|s| s.window.start);
     }
 
     /// True when both calendars hold exactly the same reservations

@@ -27,6 +27,7 @@ use crate::scheduler::{preemption, HpOutcome, PatsScheduler};
 use crate::state::NetworkState;
 use crate::task::{Allocation, TaskId, Window};
 use crate::time::SimTime;
+use crate::util::profiler::{self, Phase};
 
 /// Cores a high-priority task occupies (§3.1: "only require one CPU core").
 pub const HP_CORES: u32 = 1;
@@ -42,6 +43,7 @@ pub fn allocate(
     task: TaskId,
     now: SimTime,
 ) -> HpOutcome {
+    let _scope = profiler::scope(Phase::PlaceHp);
     let t0 = Instant::now();
     let mut plan = PlacementPlan::new(st);
     if let Some(window) = stage_allocation(&mut plan, st, cfg, task, now) {

@@ -38,6 +38,7 @@ use crate::scheduler::{LpOutcome, LpPlacement};
 use crate::state::NetworkState;
 use crate::task::{Allocation, CoreConfig, DeviceId, RequestId, TaskId, Window};
 use crate::time::SimTime;
+use crate::util::profiler::{self, Phase};
 
 /// Shared parameters of one admission (a request's tasks share a source
 /// device, a deadline, and an admission instant).
@@ -117,6 +118,7 @@ pub fn allocate_request(
     request: RequestId,
     now: SimTime,
 ) -> LpOutcome {
+    let _scope = profiler::scope(Phase::PlaceLp);
     let t0 = Instant::now();
     let Some(req) = st.request(request) else {
         return LpOutcome { placements: Vec::new(), unallocated: Vec::new(), search: t0.elapsed() };
@@ -396,28 +398,13 @@ fn stage_place_min(
     // than `earliest_availability(tp, cores) + slot`. Devices whose
     // earliest availability already misses the deadline can never pass the
     // `fits` check below — skip them up front so the placement search cost
-    // scales with *feasible* devices, not fleet size. The busy-time sort is
-    // only computed for survivors (same key as before, so the relative
-    // order among feasible devices — and therefore every placement — is
-    // unchanged).
-    let horizon = Window::new(tp, deadline.max(tp));
-    let mut candidates: Vec<(u64, u32)> = Vec::new();
-    for d in st.device_ids() {
-        if d == source || !st.device_is_up(d) {
-            continue;
-        }
-        let view = plan.device_view(st, d);
-        match view.earliest_availability(tp, cores) {
-            Some(avail) if avail + slot <= deadline => {}
-            _ => continue,
-        }
-        let busy: u64 = view
-            .overlapping(&horizon)
-            .map(|s| s.window.duration().as_micros() * s.cores as u64)
-            .sum();
-        candidates.push((busy, d.0));
-    }
-    candidates.sort_unstable();
+    // scales with *feasible* devices, not fleet size. The scan goes through
+    // the plan's availability-index door: devices settled by `tp` are
+    // answered from the fleet-wide index without touching their calendars
+    // (bit-identical to the direct probe — see
+    // `PlacementPlan::offload_candidates`), so the per-time-point cost is
+    // O(active + feasible), not O(fleet).
+    let candidates = plan.offload_candidates(st, source, tp, deadline, slot, cores);
 
     if candidates.is_empty() {
         return None;

@@ -59,10 +59,11 @@ use std::collections::{HashMap, HashSet};
 
 use crate::error::{Error, Result};
 use crate::fidelity::VariantId;
-use crate::resources::{pool, CoreTimeline, Slot, SlotKind, Timeline};
+use crate::resources::{avail, pool, CoreTimeline, Slot, SlotKind, Timeline};
 use crate::state::NetworkState;
 use crate::task::{Allocation, DeviceId, FailReason, Priority, TaskId, Window};
 use crate::time::{SimDuration, SimTime};
+use crate::util::profiler::{self, Counter, Phase};
 
 /// Undo record for one staged link mutation. The scratch's undo log is
 /// replayed LIFO on drop to roll the timeline back to the base state
@@ -142,6 +143,7 @@ impl Drop for LinkScratch {
         let (Some(mut tl), Some((uid, version))) = (self.tl.take(), self.key.take()) else {
             return;
         };
+        let _scope = profiler::scope(Phase::PlanRollback);
         // Roll the scratch back to the base snapshot by replaying the
         // undo log newest-first. Every step must succeed (each undoes a
         // mutation that provably happened); if one does not, the timeline
@@ -272,6 +274,7 @@ impl PlacementPlan {
     /// Open an empty plan against the current state snapshot. The plan is
     /// only committable while the state's version is unchanged.
     pub fn new(st: &NetworkState) -> PlacementPlan {
+        let _scope = profiler::scope(Phase::PlanOpen);
         PlacementPlan {
             version: st.version(),
             link: LinkScratch::default(),
@@ -345,6 +348,115 @@ impl PlacementPlan {
         v
     }
 
+    /// Offload candidates for the low-priority time-point search (§4's
+    /// "distribute tasks evenly" scan): every up device other than
+    /// `source` whose earliest availability for `cores` cores at or after
+    /// `tp` still meets `deadline` with a processing slot of `slot`, keyed
+    /// by busy core-time within `[tp, deadline)` ascending (ties by device
+    /// id) — the caller's even-distribution preference order.
+    ///
+    /// Two implementations, proven equivalent:
+    ///
+    /// * **Direct** — the original O(fleet) scan probing every device's
+    ///   calendar through the plan view.
+    /// * **Indexed** (default; see [`crate::resources::avail`]) — consult
+    ///   the fleet-wide availability index. Devices *settled* by `tp`
+    ///   (last reservation already ended) are answered without touching
+    ///   their calendars: a settled up device has
+    ///   `earliest_availability(tp, cores) = tp` iff `cores ≤ capacity`,
+    ///   zero busy-time in the horizon (half-open windows), and therefore
+    ///   contributes exactly `(0, id)` iff `tp + slot <= deadline` — a
+    ///   condition shared by every settled device and hoisted out of the
+    ///   loop. Only *active* devices, plus devices forked inside this plan
+    ///   (whose scratch calendars the index cannot see), take the direct
+    ///   probe. The final sort makes the order independent of how the
+    ///   candidates were collected, so the result is bit-identical — the
+    ///   `avail` property tests and `rust/tests/engine_equivalence.rs`
+    ///   check this on random workloads.
+    pub fn offload_candidates(
+        &self,
+        st: &NetworkState,
+        source: DeviceId,
+        tp: SimTime,
+        deadline: SimTime,
+        slot: SimDuration,
+        cores: u32,
+    ) -> Vec<(u64, u32)> {
+        let horizon = Window::new(tp, deadline.max(tp));
+        let mut candidates: Vec<(u64, u32)> = Vec::new();
+        if avail::enabled() {
+            let idx = avail::index_for(st);
+            let (settled, active) = idx.split_settled(tp);
+            let settled_feasible = tp + slot <= deadline;
+            let mut n_settled = 0u64;
+            let mut n_scanned = 0u64;
+            for e in settled {
+                let d = DeviceId(e.device);
+                if d == source {
+                    continue;
+                }
+                if self.devices.contains_key(&e.device) {
+                    // Forked in this plan: the index describes the base
+                    // state, not the scratch — probe directly.
+                    n_scanned += 1;
+                    self.offload_probe(st, d, tp, deadline, slot, cores, &horizon, &mut candidates);
+                } else {
+                    n_settled += 1;
+                    if settled_feasible && cores <= e.capacity {
+                        candidates.push((0, e.device));
+                    }
+                }
+            }
+            for e in active {
+                let d = DeviceId(e.device);
+                if d == source {
+                    continue;
+                }
+                n_scanned += 1;
+                self.offload_probe(st, d, tp, deadline, slot, cores, &horizon, &mut candidates);
+            }
+            profiler::count(Counter::DevicesSettled, n_settled);
+            profiler::count(Counter::DevicesScanned, n_scanned);
+        } else {
+            for d in st.device_ids() {
+                if d == source || !st.device_is_up(d) {
+                    continue;
+                }
+                self.offload_probe(st, d, tp, deadline, slot, cores, &horizon, &mut candidates);
+            }
+        }
+        candidates.sort_unstable();
+        candidates
+    }
+
+    /// The per-device feasibility probe + busy-time key shared by both
+    /// [`PlacementPlan::offload_candidates`] implementations: skip the
+    /// device unless a `cores`-wide window of `slot` can still meet the
+    /// deadline, else push its busy core-time in the horizon.
+    #[allow(clippy::too_many_arguments)]
+    fn offload_probe(
+        &self,
+        st: &NetworkState,
+        d: DeviceId,
+        tp: SimTime,
+        deadline: SimTime,
+        slot: SimDuration,
+        cores: u32,
+        horizon: &Window,
+        out: &mut Vec<(u64, u32)>,
+    ) {
+        let view = self.device_view(st, d);
+        match view.earliest_availability(tp, cores) {
+            Some(avail) if avail + slot <= deadline => {}
+            _ => return,
+        }
+        let busy: u64 = view
+            .overlapping(horizon)
+            .map(|s| s.window.duration().as_micros() * s.cores as u64)
+            .sum();
+        out.push((busy, d.0));
+    }
+
     // ---- scratch forks ---------------------------------------------------
 
     fn link_scratch(&mut self, st: &NetworkState) -> &mut Timeline {
@@ -375,6 +487,7 @@ impl PlacementPlan {
         kind: SlotKind,
         owner: TaskId,
     ) -> Result<Window> {
+        let _scope = profiler::scope(Phase::PlanStage);
         let w = self.link_scratch(st).reserve(start, dur, kind, owner)?;
         self.link.undo.push(LinkUndo::Release { start: w.start, owner });
         Ok(w)
@@ -440,6 +553,7 @@ impl PlacementPlan {
         alloc: Allocation,
         variant: VariantId,
     ) -> Result<()> {
+        let _scope = profiler::scope(Phase::PlanStage);
         let rec = st
             .task(alloc.task)
             .ok_or_else(|| Error::Invariant(format!("placing unknown task {:?}", alloc.task)))?;
@@ -540,6 +654,7 @@ impl PlacementPlan {
         victim: TaskId,
         now: SimTime,
     ) -> Result<Allocation> {
+        let _scope = profiler::scope(Phase::PlanStage);
         let rec = st
             .task(victim)
             .ok_or_else(|| Error::Invariant(format!("evicting unknown task {victim:?}")))?;

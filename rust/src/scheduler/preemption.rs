@@ -28,6 +28,7 @@ use crate::scheduler::{high_priority, low_priority, PatsScheduler, PreemptionRep
 use crate::state::NetworkState;
 use crate::task::{FailReason, TaskId, Window};
 use crate::time::SimTime;
+use crate::util::profiler::{self, Phase};
 
 /// How many candidate victims the plan search tries before giving up. The
 /// first candidate almost always suffices (its eviction conflicts with the
@@ -62,6 +63,7 @@ pub fn preempt_and_retry_at(
     now: SimTime,
     variant: VariantId,
 ) -> (Option<Window>, Option<PreemptionReport>) {
+    let _scope = profiler::scope(Phase::PlacePreempt);
     let Some(rec) = st.task(task) else {
         return (None, None);
     };

@@ -38,7 +38,7 @@ use std::time::Instant;
 
 use crate::config::SystemConfig;
 use crate::fidelity::{DegradePath, VariantId};
-use crate::resources::SlotKind;
+use crate::resources::{avail, SlotKind};
 use crate::scheduler::high_priority::HP_CORES;
 use crate::scheduler::plan::{search_candidates, CandidatePlan, PlacementPlan};
 use crate::scheduler::{
@@ -47,6 +47,7 @@ use crate::scheduler::{
 use crate::state::NetworkState;
 use crate::task::{Allocation, DeviceId, FailReason, Priority, TaskId, Window};
 use crate::time::SimTime;
+use crate::util::profiler::{self, Phase};
 
 /// How many adoptive-device candidates the relocation search builds plans
 /// for. Candidates are least-loaded-first, so the cap trades a bounded
@@ -89,6 +90,7 @@ pub fn rescue_all(
     orphans: &[TaskId],
     now: SimTime,
 ) -> RescueOutcome {
+    let _scope = profiler::scope(Phase::PlaceRescue);
     let mut out = RescueOutcome::default();
     for &task in orphans {
         let Some(rec) = st.task(task) else { continue };
@@ -190,12 +192,11 @@ pub fn relocate_hp(
 
     // Candidate devices: up, never the (dead) source, least busy over the
     // relocated window first. The peak doubles as the feasibility
-    // pre-filter: `peak + 1 ≤ capacity` IS the free-core fit test.
-    let mut candidates: Vec<(u32, u32)> = st
-        .up_devices()
-        .filter(|&d| d != source)
-        .map(|d| (st.device(d).peak_usage_in(&window), d.0))
-        .collect();
+    // pre-filter: `peak + 1 ≤ capacity` IS the free-core fit test. The
+    // scan goes through the availability index — devices settled before
+    // the window trivially peak at 0 and are answered without touching
+    // their calendars (bit-identical; see `avail::rescue_candidates`).
+    let mut candidates: Vec<(u32, u32)> = avail::rescue_candidates(st, source, &window);
     candidates.sort_unstable();
     candidates.truncate(RESCUE_TOP_K);
 

@@ -81,6 +81,7 @@ use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome}
 use crate::state::{DeviceHealth, TaskRecord};
 use crate::task::{DeviceId, FailReason, FrameId, LpRequest, RequestId, TaskId, Window};
 use crate::time::SimTime;
+use crate::util::profiler::{self, Phase};
 
 /// Cross-shard spill counters, reported by the `pats shards` sweep and
 /// folded into [`crate::metrics::ScenarioMetrics`] at finalize.
@@ -491,6 +492,7 @@ impl<P: Policy> ControlPlane<P> {
         if k <= 1 || !(broker_on || rebalance_on) {
             return;
         }
+        let _scope = profiler::scope(Phase::BrokerEpoch);
         let window = Window::new(self.last_epoch, now);
         let demand = self.shard_demand(&window);
         self.last_epoch = now;
@@ -640,7 +642,15 @@ impl<P: Policy> ControlPlane<P> {
                     .shards
                     .iter_mut()
                     .zip(jobs)
-                    .map(|(shard, batch)| scope.spawn(move || run_batch(shard, batch)))
+                    .map(|(shard, batch)| {
+                        scope.spawn(move || {
+                            let r = run_batch(shard, batch);
+                            // Sweep threads die at the join barrier: fold
+                            // their phase totals into the global report now.
+                            profiler::flush_thread();
+                            r
+                        })
+                    })
                     .collect();
                 handles
                     .into_iter()
@@ -939,7 +949,13 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
                 .shards
                 .iter_mut()
                 .zip(&per)
-                .map(|(shard, batch)| scope.spawn(move || ControlSurface::hp_sweep(shard, batch)))
+                .map(|(shard, batch)| {
+                    scope.spawn(move || {
+                        let r = ControlSurface::hp_sweep(shard, batch);
+                        profiler::flush_thread();
+                        r
+                    })
+                })
                 .collect();
             handles
                 .into_iter()
@@ -998,7 +1014,11 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
                 .iter_mut()
                 .zip(&per)
                 .map(|(shard, batch)| {
-                    scope.spawn(move || ControlSurface::lp_request_sweep(shard, batch))
+                    scope.spawn(move || {
+                        let r = ControlSurface::lp_request_sweep(shard, batch);
+                        profiler::flush_thread();
+                        r
+                    })
                 })
                 .collect();
             handles

@@ -36,6 +36,7 @@ use crate::shard::ControlPlane;
 use crate::task::{DeviceId, FailReason, FrameId, Priority, TaskId, TaskState};
 use crate::time::{SimDuration, SimTime, SkewModel};
 use crate::trace::{ChurnEvent, ChurnScript, Trace};
+use crate::util::profiler::{self, Phase};
 use crate::util::rng::Rng;
 use crate::workstealer::{Mode, Workstealer};
 
@@ -346,6 +347,7 @@ impl<S: ControlSurface> Sim<S> {
 
     /// Process events to exhaustion; returns the final virtual time.
     fn drain(&mut self) -> SimTime {
+        let drain_scope = profiler::scope(Phase::Drain);
         let prune_every = SimDuration::from_secs_f64(Self::PRUNE_EVERY_S);
         let mut now = SimTime::ZERO;
         while let Some(Reverse(ev)) = self.events.pop() {
@@ -356,6 +358,7 @@ impl<S: ControlSurface> Sim<S> {
             // time-point search only look forward from `now`), but leaving
             // it in place makes every link operation O(total history).
             if now.since(self.last_prune) > prune_every {
+                let _epoch = profiler::scope(Phase::Epoch);
                 self.surface.prune_before(now);
                 // Batch-boundary epoch: the sharded plane's bandwidth
                 // broker and re-sharding run here. Both engines fire it at
@@ -367,6 +370,10 @@ impl<S: ControlSurface> Sim<S> {
             }
             self.dispatch_event(ev.kind, now);
         }
+        // Barrier: fold this thread's phase totals into the global report
+        // before the simulation result is assembled.
+        drop(drain_scope);
+        profiler::flush_thread();
         now
     }
 
@@ -375,14 +382,28 @@ impl<S: ControlSurface> Sim<S> {
     fn dispatch_event(&mut self, kind: EventKind, now: SimTime) {
         match kind {
             EventKind::FrameStart { frame_idx } => self.on_frame_start(frame_idx, now),
-            EventKind::HpRequest { frame_idx } => self.on_hp_request(frame_idx, now),
+            EventKind::HpRequest { frame_idx } => {
+                let _scope = profiler::scope(Phase::AdmitHp);
+                self.on_hp_request(frame_idx, now)
+            }
             EventKind::TaskResolve { task, gen, completed } => {
+                let _scope = profiler::scope(Phase::Resolve);
                 self.on_task_resolve(task, gen, completed, now)
             }
-            EventKind::LpRequest { frame_idx } => self.on_lp_request(frame_idx, now),
+            EventKind::LpRequest { frame_idx } => {
+                let _scope = profiler::scope(Phase::AdmitLp);
+                self.on_lp_request(frame_idx, now)
+            }
             EventKind::PollTick { device } => self.on_poll_tick(device, now),
-            EventKind::Churn { idx } => self.on_churn(idx, now),
-            EventKind::FailureDetected { device } => self.on_failure_detected(device, now),
+            EventKind::Churn { idx } => {
+                let _scope = profiler::scope(Phase::Churn);
+                self.on_churn(idx, now)
+            }
+            EventKind::FailureDetected { device } => {
+                // Failure detection is churn fallout: reclaim + rescue.
+                let _scope = profiler::scope(Phase::Churn);
+                self.on_failure_detected(device, now)
+            }
         }
     }
 
@@ -430,6 +451,7 @@ impl<S: ControlSurface> Sim<S> {
     /// registrations across shard states and must serialise through the
     /// router.
     fn drain_batched(&mut self) -> SimTime {
+        let drain_scope = profiler::scope(Phase::Drain);
         let overhead = SimDuration::from_secs_f64(self.cfg.controller_overhead_s);
         let prune_every = SimDuration::from_secs_f64(Self::PRUNE_EVERY_S);
         let mut now = SimTime::ZERO;
@@ -437,6 +459,7 @@ impl<S: ControlSurface> Sim<S> {
             debug_assert!(ev.at >= now, "event time regression");
             now = ev.at;
             if now.since(self.last_prune) > prune_every {
+                let _epoch = profiler::scope(Phase::Epoch);
                 self.surface.prune_before(now);
                 // Same barrier-epoch hook as the serial loop — see
                 // `drain` for why the instants coincide.
@@ -445,18 +468,24 @@ impl<S: ControlSurface> Sim<S> {
             }
             match ev.kind {
                 EventKind::HpRequest { frame_idx } if overhead > SimDuration::ZERO => {
+                    let _scope = profiler::scope(Phase::AdmitHp);
                     let batch = self.collect_batch(frame_idx, now, overhead, prune_every, true);
                     self.hp_batch(&batch);
                 }
                 EventKind::LpRequest { frame_idx }
                     if overhead > SimDuration::ZERO && !self.surface.spill_active() =>
                 {
+                    let _scope = profiler::scope(Phase::AdmitLp);
                     let batch = self.collect_batch(frame_idx, now, overhead, prune_every, false);
                     self.lp_batch(&batch);
                 }
                 kind => self.dispatch_event(kind, now),
             }
         }
+        // Barrier: fold this thread's phase totals into the global report
+        // (worker threads flush inside the sweep closures).
+        drop(drain_scope);
+        profiler::flush_thread();
         now
     }
 
@@ -621,8 +650,13 @@ impl<S: ControlSurface> Sim<S> {
     /// (the sweep already failed the unallocated tasks, in the order the
     /// serial engine fails them).
     fn apply_lp_decision(&mut self, d: &LpSweepDecision, frame_idx: usize) {
-        for t in &self.surface.request(d.rid).expect("request just registered").tasks.clone() {
-            self.task_frame.insert(*t, frame_idx);
+        // Index loop: re-fetching the request per task (n ≤ 4) keeps the
+        // registry borrow disjoint from the `task_frame` write without
+        // cloning the task list on every admission.
+        let n_tasks = self.surface.request(d.rid).expect("request just registered").tasks.len();
+        for i in 0..n_tasks {
+            let t = self.surface.request(d.rid).expect("request just registered").tasks[i];
+            self.task_frame.insert(t, frame_idx);
         }
         self.metrics
             .lp_alloc_ms
@@ -907,15 +941,20 @@ impl<S: ControlSurface> Sim<S> {
         self.metrics.lp_sets_total += 1;
         let (rid, _decision_t, outcome) =
             self.surface.handle_lp_request(frame_id, device, n, deadline, now);
-        for t in &self.surface.request(rid).unwrap().tasks.clone() {
-            self.task_frame.insert(*t, frame_idx);
+        // Index loop: see `apply_lp_decision` — avoids cloning the task
+        // list just to appease the borrow checker.
+        let n_tasks = self.surface.request(rid).unwrap().tasks.len();
+        for i in 0..n_tasks {
+            let t = self.surface.request(rid).unwrap().tasks[i];
+            self.task_frame.insert(t, frame_idx);
         }
         self.metrics
             .lp_alloc_ms
             .add(outcome.search.as_secs_f64() * 1_000.0);
 
-        let placements = outcome.placements.clone();
-        for p in &placements {
+        // `outcome` is owned: iterate the placements in place instead of
+        // cloning the vector per admission.
+        for p in &outcome.placements {
             if self.task_variant(p.task).is_degraded() {
                 self.metrics.degraded_lp_admission += 1;
             }

@@ -27,6 +27,7 @@ use crate::task::{
     TaskState, Window,
 };
 use crate::time::{SimDuration, SimTime};
+use crate::util::profiler::{self, Phase};
 
 /// Registry entry for one task.
 #[derive(Debug, Clone)]
@@ -381,6 +382,7 @@ impl NetworkState {
         // plan whole with provably zero residue. Evictions and placements
         // are checked in staging order so a victim evicted earlier in the
         // plan may legally be re-placed later in it.
+        let validate_scope = profiler::scope(Phase::PlanValidate);
         let mut evicted_so_far: HashSet<TaskId> = HashSet::new();
         let mut placed_so_far: HashSet<TaskId> = HashSet::new();
         for op in &parts.registry {
@@ -435,8 +437,10 @@ impl NetworkState {
                 }
             }
         }
+        drop(validate_scope);
         // Commit: install the scratch calendars, then replay the registry
         // transitions in staging order.
+        let _scope = profiler::scope(Phase::PlanCommit);
         if let Some(link) = parts.link {
             self.link = link;
         }
@@ -584,7 +588,7 @@ impl NetworkState {
     /// or dropped plan left zero residue.
     pub fn fingerprint(&self) -> String {
         let mut out = String::new();
-        for s in self.link.slots() {
+        for s in self.link.slots_iter() {
             let _ = writeln!(out, "link {:?} {:?} {:?}", s.window, s.kind, s.owner);
         }
         for (i, d) in self.devices.iter().enumerate() {

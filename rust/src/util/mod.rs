@@ -8,6 +8,7 @@
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod profiler;
 pub mod prop;
 pub mod rng;
 pub mod stats;

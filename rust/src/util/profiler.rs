@@ -1,0 +1,450 @@
+//! Lightweight in-tree phase profiler.
+//!
+//! Scoped wall-clock timers and counters with **per-thread accumulation**
+//! merged at barrier points, instrumenting the sim event loop
+//! (drain/admit/resolve/churn/epoch), the plan layer
+//! (open/stage/validate/commit/rollback), all four placement paths, and
+//! broker epochs. Results flow into every `BENCH_*.json` as a per-phase
+//! breakdown and behind the `--profile` flag on the `pats` subcommands.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Observability must not perturb the schedule.** The profiler only
+//!    ever reads the wall clock; nothing it measures feeds back into
+//!    simulation decisions, metrics, fingerprints, or any deterministic
+//!    output. The CI equivalence harness asserts profiler-on output is
+//!    byte-identical to profiler-off (`PATS_EQ_PROFILE`).
+//! 2. **Near-zero cost when disabled.** Instrumentation points compile to
+//!    one relaxed atomic load and a branch — no clock read, no thread-local
+//!    touch, no allocation. A single binary serves both modes, which is
+//!    what lets CI compare them byte-for-byte.
+//! 3. **No cross-thread contention on the hot path.** Samples accumulate
+//!    into flat thread-local arrays; [`flush_thread`] merges them into the
+//!    global totals at barrier points (end of a sim drain, end of each
+//!    scoped shard-sweep thread), where a mutex is amortised over an
+//!    entire batch.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Globally gates every instrumentation point. Defaults to off.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// One instrumented phase of the pipeline.
+///
+/// `Drain` is *inclusive*: it wraps one whole event-loop drain, so the
+/// admit/resolve/churn/epoch phases it dispatches are nested inside it and
+/// the per-phase totals do not sum to wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    /// One full event-loop drain (inclusive of the nested phases).
+    Drain,
+    /// High-priority admission event dispatch.
+    AdmitHp,
+    /// Low-priority admission event dispatch.
+    AdmitLp,
+    /// Task-completion (resolve) event dispatch.
+    Resolve,
+    /// Churn event dispatch (crash/drain/rejoin/degrade).
+    Churn,
+    /// Prune + broker barrier work at the 60 s epoch boundary.
+    Epoch,
+    /// Opening a placement plan against a state snapshot.
+    PlanOpen,
+    /// Staging reservations/evictions into an open plan.
+    PlanStage,
+    /// Validating a plan against its base state in `NetworkState::apply`.
+    PlanValidate,
+    /// Committing a validated plan in `NetworkState::apply`.
+    PlanCommit,
+    /// Rolling an abandoned plan's link scratch back to the base state.
+    PlanRollback,
+    /// High-priority placement path (`high_priority::allocate`).
+    PlaceHp,
+    /// Low-priority placement path (`low_priority::allocate_request`).
+    PlaceLp,
+    /// Preemption path (`preemption::preempt_and_retry_at`).
+    PlacePreempt,
+    /// Churn-rescue path (`rescue::rescue_all`).
+    PlaceRescue,
+    /// Bandwidth-broker / rebalance epoch (`shard::ControlPlane::run_epoch`).
+    BrokerEpoch,
+}
+
+impl Phase {
+    /// Every phase, in display order. Indexes the flat accumulators.
+    pub const ALL: [Phase; 16] = [
+        Phase::Drain,
+        Phase::AdmitHp,
+        Phase::AdmitLp,
+        Phase::Resolve,
+        Phase::Churn,
+        Phase::Epoch,
+        Phase::PlanOpen,
+        Phase::PlanStage,
+        Phase::PlanValidate,
+        Phase::PlanCommit,
+        Phase::PlanRollback,
+        Phase::PlaceHp,
+        Phase::PlaceLp,
+        Phase::PlacePreempt,
+        Phase::PlaceRescue,
+        Phase::BrokerEpoch,
+    ];
+
+    /// Stable snake_case name (used in JSON and text reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Drain => "drain",
+            Phase::AdmitHp => "admit_hp",
+            Phase::AdmitLp => "admit_lp",
+            Phase::Resolve => "resolve",
+            Phase::Churn => "churn",
+            Phase::Epoch => "epoch",
+            Phase::PlanOpen => "plan_open",
+            Phase::PlanStage => "plan_stage",
+            Phase::PlanValidate => "plan_validate",
+            Phase::PlanCommit => "plan_commit",
+            Phase::PlanRollback => "plan_rollback",
+            Phase::PlaceHp => "place_hp",
+            Phase::PlaceLp => "place_lp",
+            Phase::PlacePreempt => "place_preempt",
+            Phase::PlaceRescue => "place_rescue",
+            Phase::BrokerEpoch => "broker_epoch",
+        }
+    }
+}
+
+/// One instrumented event counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Availability-index cache hits (reused for the same `(uid, version)`).
+    IndexHit,
+    /// Availability-index cache misses (stale or absent entry).
+    IndexMiss,
+    /// Availability-index full rebuilds.
+    IndexBuild,
+    /// Candidate devices answered from the settled prefix of the index
+    /// (no per-device calendar walk needed).
+    DevicesSettled,
+    /// Candidate devices that paid the direct per-device calendar scan.
+    DevicesScanned,
+}
+
+impl Counter {
+    /// Every counter, in display order. Indexes the flat accumulators.
+    pub const ALL: [Counter; 5] = [
+        Counter::IndexHit,
+        Counter::IndexMiss,
+        Counter::IndexBuild,
+        Counter::DevicesSettled,
+        Counter::DevicesScanned,
+    ];
+
+    /// Stable snake_case name (used in JSON and text reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::IndexHit => "index_hit",
+            Counter::IndexMiss => "index_miss",
+            Counter::IndexBuild => "index_build",
+            Counter::DevicesSettled => "devices_settled",
+            Counter::DevicesScanned => "devices_scanned",
+        }
+    }
+}
+
+const N_PHASES: usize = Phase::ALL.len();
+const N_COUNTERS: usize = Counter::ALL.len();
+
+/// Flat per-thread (and, merged, global) accumulator.
+#[derive(Debug, Clone)]
+struct Totals {
+    ns: [u64; N_PHASES],
+    calls: [u64; N_PHASES],
+    counters: [u64; N_COUNTERS],
+}
+
+impl Totals {
+    const fn zero() -> Totals {
+        Totals { ns: [0; N_PHASES], calls: [0; N_PHASES], counters: [0; N_COUNTERS] }
+    }
+
+    fn is_zero(&self) -> bool {
+        self.calls.iter().all(|&c| c == 0) && self.counters.iter().all(|&c| c == 0)
+    }
+
+    fn merge(&mut self, other: &Totals) {
+        for i in 0..N_PHASES {
+            self.ns[i] += other.ns[i];
+            self.calls[i] += other.calls[i];
+        }
+        for i in 0..N_COUNTERS {
+            self.counters[i] += other.counters[i];
+        }
+    }
+}
+
+static GLOBAL: Mutex<Totals> = Mutex::new(Totals::zero());
+
+thread_local! {
+    static LOCAL: RefCell<Totals> = const { RefCell::new(Totals::zero()) };
+}
+
+/// Turn the profiler on or off. Off (the default) reduces every
+/// instrumentation point to one relaxed atomic load and a branch.
+pub fn enable(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is the profiler currently enabled?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Zero the global totals and this thread's local accumulator (other
+/// threads' unflushed samples are untouched; flush them first).
+pub fn reset() {
+    *GLOBAL.lock().unwrap() = Totals::zero();
+    LOCAL.with(|l| *l.borrow_mut() = Totals::zero());
+}
+
+/// RAII guard returned by [`scope`]: adds the elapsed time to its phase on
+/// drop. Holds nothing (and never reads the clock) when the profiler is
+/// disabled.
+#[must_use = "the scope guard measures until dropped"]
+pub struct ScopeGuard {
+    live: Option<(Phase, Instant)>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        if let Some((phase, start)) = self.live.take() {
+            let ns = start.elapsed().as_nanos() as u64;
+            LOCAL.with(|l| {
+                let mut t = l.borrow_mut();
+                t.ns[phase as usize] += ns;
+                t.calls[phase as usize] += 1;
+            });
+        }
+    }
+}
+
+/// Time a phase for the lifetime of the returned guard.
+#[inline]
+pub fn scope(phase: Phase) -> ScopeGuard {
+    if !enabled() {
+        return ScopeGuard { live: None };
+    }
+    ScopeGuard { live: Some((phase, Instant::now())) }
+}
+
+/// Add `n` to a counter.
+#[inline]
+pub fn count(counter: Counter, n: u64) {
+    if !enabled() {
+        return;
+    }
+    LOCAL.with(|l| l.borrow_mut().counters[counter as usize] += n);
+}
+
+/// Merge this thread's accumulator into the global totals and zero it.
+/// Called at barrier points: the end of a sim drain and the end of every
+/// scoped shard-sweep thread (scoped threads die after the sweep, so their
+/// samples would otherwise be lost).
+pub fn flush_thread() {
+    if !enabled() {
+        return;
+    }
+    LOCAL.with(|l| {
+        let mut t = l.borrow_mut();
+        if t.is_zero() {
+            return;
+        }
+        GLOBAL.lock().unwrap().merge(&t);
+        *t = Totals::zero();
+    });
+}
+
+/// One phase's merged totals in a [`ProfileReport`].
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    /// Which phase.
+    pub phase: Phase,
+    /// Times the phase was entered.
+    pub calls: u64,
+    /// Total nanoseconds across all calls (wall clock, all threads summed).
+    pub total_ns: u64,
+}
+
+impl PhaseStat {
+    /// Mean microseconds per call.
+    pub fn mean_us(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.calls as f64 / 1_000.0
+        }
+    }
+}
+
+/// A merged snapshot of every non-empty phase and counter.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// Per-phase totals (only phases with at least one call).
+    pub phases: Vec<PhaseStat>,
+    /// `(name, value)` for every non-zero counter.
+    pub counters: Vec<(&'static str, u64)>,
+}
+
+impl ProfileReport {
+    /// JSON shape attached to `BENCH_*.json` documents:
+    /// `{"phases": {name: {calls, total_ms, mean_us}}, "counters": {name: n}}`.
+    pub fn to_json(&self) -> Json {
+        let mut phases = Json::obj();
+        for p in &self.phases {
+            phases = phases.with(
+                p.phase.name(),
+                Json::obj()
+                    .with("calls", p.calls)
+                    .with("total_ms", p.total_ns as f64 / 1_000_000.0)
+                    .with("mean_us", p.mean_us()),
+            );
+        }
+        let mut counters = Json::obj();
+        for &(name, n) in &self.counters {
+            counters = counters.with(name, n);
+        }
+        Json::obj().with("phases", phases).with("counters", counters)
+    }
+
+    /// Human-readable table for `--profile` output.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from(
+            "phase breakdown (drain is inclusive of nested phases)\n\
+             phase              calls      total_ms      mean_us\n",
+        );
+        for p in &self.phases {
+            let _ = writeln!(
+                out,
+                "{:<18} {:>7} {:>13.3} {:>12.3}",
+                p.phase.name(),
+                p.calls,
+                p.total_ns as f64 / 1_000_000.0,
+                p.mean_us(),
+            );
+        }
+        if !self.counters.is_empty() {
+            out.push_str("counters\n");
+            for &(name, n) in &self.counters {
+                let _ = writeln!(out, "{name:<18} {n:>7}");
+            }
+        }
+        out
+    }
+}
+
+/// Flush this thread, then snapshot the merged global totals. Returns
+/// `None` when the profiler is disabled or nothing was recorded.
+pub fn report() -> Option<ProfileReport> {
+    if !enabled() {
+        return None;
+    }
+    flush_thread();
+    let g = GLOBAL.lock().unwrap();
+    if g.is_zero() {
+        return None;
+    }
+    let phases = Phase::ALL
+        .iter()
+        .filter(|&&p| g.calls[p as usize] > 0)
+        .map(|&p| PhaseStat { phase: p, calls: g.calls[p as usize], total_ns: g.ns[p as usize] })
+        .collect();
+    let counters = Counter::ALL
+        .iter()
+        .filter(|&&c| g.counters[c as usize] > 0)
+        .map(|&c| (c.name(), g.counters[c as usize]))
+        .collect();
+    Some(ProfileReport { phases, counters })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The profiler is process-global; this single test exercises the whole
+    // lifecycle serially to avoid cross-test interference.
+    #[test]
+    fn lifecycle_disabled_enabled_flush_report() {
+        // Disabled: scopes and counters are inert, report is None.
+        enable(false);
+        {
+            let _g = scope(Phase::PlaceLp);
+            count(Counter::IndexHit, 3);
+        }
+        assert!(report().is_none());
+
+        // Enabled: samples accumulate thread-locally, merge on flush.
+        enable(true);
+        reset();
+        {
+            let _g = scope(Phase::PlaceLp);
+            count(Counter::IndexHit, 3);
+        }
+        {
+            let _g = scope(Phase::PlaceLp);
+        }
+        count(Counter::DevicesSettled, 10);
+        // A scoped thread flushes its own samples before dying.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = scope(Phase::PlaceHp);
+                drop(_g);
+                flush_thread();
+            });
+        });
+        let r = report().expect("samples were recorded");
+        let lp = r.phases.iter().find(|p| p.phase == Phase::PlaceLp).unwrap();
+        assert_eq!(lp.calls, 2);
+        let hp = r.phases.iter().find(|p| p.phase == Phase::PlaceHp).unwrap();
+        assert_eq!(hp.calls, 1, "scoped-thread samples survive the flush");
+        assert!(r.counters.contains(&("index_hit", 3)));
+        assert!(r.counters.contains(&("devices_settled", 10)));
+        assert!(r.phases.iter().all(|p| p.calls > 0), "empty phases elided");
+
+        // JSON + text render every recorded phase.
+        let j = r.to_json();
+        let text = r.render_text();
+        for p in &r.phases {
+            assert!(j.get("phases").unwrap().get(p.phase.name()).is_some());
+            assert!(text.contains(p.phase.name()));
+        }
+        assert_eq!(
+            j.get("counters").unwrap().get("index_hit").and_then(Json::as_f64),
+            Some(3.0)
+        );
+
+        // Reset empties the totals again.
+        reset();
+        assert!(report().is_none());
+        enable(false);
+    }
+
+    #[test]
+    fn names_are_unique_and_stable() {
+        let mut names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Phase::ALL.len());
+        let mut cnames: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        cnames.sort_unstable();
+        cnames.dedup();
+        assert_eq!(cnames.len(), Counter::ALL.len());
+    }
+}

@@ -17,6 +17,15 @@
 //!   whole differential suite re-runs with epoch re-leasing and device
 //!   migration active. (Broker-on coverage also runs unconditionally in the
 //!   dedicated tests below — the knob widens it to every scenario.)
+//! * `PATS_EQ_INDEX`: `on` | `off` (unset = leave the default, which is
+//!   on). With `off` the whole suite re-runs on the direct O(N) candidate
+//!   scans instead of the availability index — the two paths must be
+//!   bit-identical (also asserted head-to-head in the dedicated test
+//!   below).
+//! * `PATS_EQ_PROFILE`: `on` | `off` (unset = leave the default, which is
+//!   off). With `on` the whole suite runs with the phase profiler
+//!   collecting — profiling must never change a simulated bit (also
+//!   asserted head-to-head in the dedicated test below).
 
 use pats::config::{EngineKind, SystemConfig};
 use pats::coordinator::{ControlSurface, Controller};
@@ -62,6 +71,28 @@ fn broker_from_env() -> bool {
     }
 }
 
+/// `PATS_EQ_INDEX`: `Some(on?)` when set, `None` to leave the process-wide
+/// default untouched (so the dedicated toggle test below owns the switch
+/// in default local runs).
+fn index_from_env() -> Option<bool> {
+    match std::env::var("PATS_EQ_INDEX").as_deref() {
+        Ok("on") | Ok("1") => Some(true),
+        Ok("off") | Ok("0") => Some(false),
+        Err(_) => None,
+        Ok(other) => panic!("PATS_EQ_INDEX must be on|off, got {other:?}"),
+    }
+}
+
+/// `PATS_EQ_PROFILE`: same convention as [`index_from_env`].
+fn profile_from_env() -> Option<bool> {
+    match std::env::var("PATS_EQ_PROFILE").as_deref() {
+        Ok("on") | Ok("1") => Some(true),
+        Ok("off") | Ok("0") => Some(false),
+        Err(_) => None,
+        Ok(other) => panic!("PATS_EQ_PROFILE must be on|off, got {other:?}"),
+    }
+}
+
 /// The policies the differential runs sweep: the paper's scheduler and the
 /// polling central workstealer (a second, structurally different decision
 /// path: deferred placement + poll ticks).
@@ -89,6 +120,12 @@ fn run_surface<P: Policy + Send>(
     if broker_from_env() {
         cfg.sharding.broker.enabled = true;
         cfg.sharding.rebalance.enabled = true;
+    }
+    if let Some(on) = index_from_env() {
+        pats::resources::avail::set_enabled(on);
+    }
+    if let Some(on) = profile_from_env() {
+        pats::util::profiler::enable(on);
     }
     if cfg.sharding.shards == 1 {
         // The production dispatcher drives the raw controller at one shard;
@@ -302,6 +339,74 @@ fn engines_agree_on_a_256_device_fleet() {
             );
         }
     }
+}
+
+#[test]
+fn availability_index_is_bit_identical_to_the_direct_scan() {
+    // The availability index (resources::avail) is a pure pre-filter: the
+    // indexed offload and rescue scans must leave the exact network state
+    // and counters the direct O(N) scans produce, on the scheduler and at
+    // shard counts where each shard's state is fleet-sized. A concurrent
+    // test flipping the same process-wide toggle can only ever make the
+    // two legs *more* alike, so the assertion is race-free.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 32;
+    cfg.frames = 192;
+    let trace = Trace::generate(Distribution::Weighted(3), cfg.devices, cfg.frames, cfg.seed);
+    let script = ChurnScript::from_events(vec![
+        (SimTime::from_secs_f64(30.0), ChurnEvent::Crash(DeviceId(1))),
+        (SimTime::from_secs_f64(60.0), ChurnEvent::Crash(DeviceId(17))),
+    ]);
+    for k in [1usize, 4] {
+        let mut cfg = cfg.clone();
+        cfg.sharding.shards = k;
+        pats::resources::avail::set_enabled(false);
+        let direct = run_pol(Pol::Scheduler, &cfg, &trace, &script, EngineKind::Serial);
+        pats::resources::avail::set_enabled(true);
+        let indexed = run_pol(Pol::Scheduler, &cfg, &trace, &script, EngineKind::Serial);
+        assert_eq!(
+            direct.fingerprint, indexed.fingerprint,
+            "index on vs off left different network states (shards={k})"
+        );
+        assert_metrics_identical(
+            &direct.metrics,
+            &indexed.metrics,
+            &format!("index on vs off, shards={k}"),
+        );
+        // The scenario actually exercises the scans it compares.
+        assert!(indexed.metrics.lp_generated > 0 && indexed.metrics.failures_detected > 0);
+    }
+    // Restore the suite-wide setting.
+    pats::resources::avail::set_enabled(index_from_env().unwrap_or(true));
+}
+
+#[test]
+fn profiler_on_output_is_byte_identical_to_profiler_off() {
+    // The profiler reads wall clocks and thread-local counters only — it
+    // must never change a simulated bit. Deterministic JSON and the state
+    // fingerprint are compared byte-for-byte across the toggle.
+    let mut cfg = SystemConfig::default();
+    cfg.frames = 120;
+    let trace = Trace::generate(Distribution::Weighted(2), cfg.devices, cfg.frames, cfg.seed);
+    pats::util::profiler::enable(false);
+    let off = run_pol(Pol::Scheduler, &cfg, &trace, &ChurnScript::none(), EngineKind::Serial);
+    pats::util::profiler::enable(true);
+    let on = run_pol(Pol::Scheduler, &cfg, &trace, &ChurnScript::none(), EngineKind::Serial);
+    assert!(
+        pats::util::profiler::report().is_some(),
+        "the profiled run must have collected phase data"
+    );
+    pats::util::profiler::enable(profile_from_env().unwrap_or(false));
+    assert_eq!(
+        off.fingerprint, on.fingerprint,
+        "profiling changed the final network state"
+    );
+    assert_metrics_identical(&off.metrics, &on.metrics, "profiler on vs off");
+    assert_eq!(
+        off.metrics.deterministic_json().to_string_pretty(),
+        on.metrics.deterministic_json().to_string_pretty(),
+        "profiler on vs off must serialise byte-identical JSON"
+    );
 }
 
 #[test]

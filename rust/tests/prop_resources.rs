@@ -1,11 +1,14 @@
 //! Randomized property tests on the reservation calendars — the data
 //! structures every scheduling decision rests on.
 
+use std::rc::Rc;
+
 use pats::config::SystemConfig;
+use pats::resources::avail;
 use pats::resources::{CoreTimeline, SlotKind, Timeline};
 use pats::scheduler::plan::PlacementPlan;
-use pats::state::NetworkState;
-use pats::task::{TaskId, Window};
+use pats::state::{DeviceHealth, NetworkState};
+use pats::task::{Allocation, DeviceId, FailReason, FrameId, Priority, TaskId, TaskSpec, Window};
 use pats::time::{SimDuration, SimTime};
 use pats::util::prop::{run, Gen};
 
@@ -361,5 +364,180 @@ fn dropped_plan_leaks_nothing_to_the_next_borrower() {
             );
         }
         assert!(st.link().same_reservations(&after));
+    });
+}
+
+// ---------------------------------------------------------------------
+// Availability index (resources::avail)
+// ---------------------------------------------------------------------
+
+fn t_ms(ms: u64) -> SimTime {
+    SimTime::from_millis(ms)
+}
+
+/// Commit one placement through the plan door — the only public write path
+/// onto a device's core calendar.
+fn commit_placement(
+    st: &mut NetworkState,
+    device: u32,
+    start: u64,
+    end: u64,
+    cores: u32,
+) -> TaskId {
+    let id = st.fresh_task_id();
+    st.register_task(TaskSpec {
+        id,
+        frame: FrameId(0),
+        source: DeviceId(0),
+        priority: Priority::Low,
+        deadline: t_ms(end),
+        spawn: SimTime::ZERO,
+        request: None,
+    });
+    let mut plan = PlacementPlan::new(st);
+    plan.stage_placement(
+        st,
+        Allocation {
+            task: id,
+            device: DeviceId(device),
+            window: Window::new(t_ms(start), t_ms(end)),
+            cores,
+            offloaded: false,
+        },
+    )
+    .expect("test placement fits");
+    st.apply(plan).expect("test placement commits");
+    id
+}
+
+/// The settled-device lemma the availability index's fast path rests on:
+/// once a calendar's last reservation has ended (windows are half-open),
+/// the device is completely idle — zero usage, immediate availability at
+/// full capacity, zero peak over any later window — under arbitrary
+/// reserve/remove sequences.
+#[test]
+fn settled_device_lemma_holds_under_random_ops() {
+    run("settled-device lemma", 250, |g| {
+        let capacity = g.u64(1, 8) as u32;
+        let mut ct = CoreTimeline::new(capacity);
+        let mut live: Vec<TaskId> = Vec::new();
+        for step in 0..g.usize(1, 30) {
+            if g.bool(0.7) {
+                let start = SimTime::from_micros(g.u64(0, 50_000));
+                let dur = SimDuration::from_micros(g.u64(1, 20_000));
+                let w = Window::from_duration(start, dur);
+                let cores = g.u64(1, capacity as u64) as u32;
+                let id = TaskId(step as u64);
+                if ct.reserve(w, cores, id, w.end, true).is_ok() {
+                    live.push(id);
+                }
+            } else if !live.is_empty() {
+                let idx = g.usize(0, live.len() - 1);
+                assert_eq!(ct.remove_task(live.swap_remove(idx)), 1);
+            }
+            let settle = ct.last_end().unwrap_or(SimTime::ZERO);
+            for off in [0u64, 1, 1_000, 100_000] {
+                let t = SimTime::from_micros(settle.as_micros() + off);
+                assert_eq!(ct.usage_at(t), 0, "settled at {settle}, usage at {t} nonzero");
+                assert_eq!(
+                    ct.earliest_availability(t, capacity),
+                    Some(t),
+                    "settled device must be available at full capacity immediately"
+                );
+                let horizon = SimTime::from_micros(t.as_micros() + g.u64(1, 50_000));
+                assert_eq!(
+                    ct.peak_usage_in(&Window::new(t, horizon)),
+                    0,
+                    "settled device must show zero peak over any later window"
+                );
+            }
+        }
+    });
+}
+
+/// `avail::index_for` must serve the same `Rc` for an unchanged snapshot,
+/// rebuild after ANY `NetworkState` mutation (the `(uid, version)` cache
+/// key makes stale entries unreachable), and — with the index enabled, its
+/// process default — produce rescue candidates tuple-identical to the
+/// direct per-device scan recomputed from the public state API.
+#[test]
+fn availability_index_cache_invalidates_and_matches_direct_scan() {
+    run("index_for ≡ public-API direct scan", 100, |g| {
+        let mut cfg = SystemConfig::default();
+        cfg.devices = g.usize(2, 8);
+        let mut st = NetworkState::new(&cfg);
+        let mut live: Vec<(TaskId, u32)> = Vec::new();
+        for step in 0..g.usize(1, 20) {
+            // One random public-API mutation.
+            match g.usize(0, 4) {
+                0 | 1 => {
+                    let d = g.u64(0, cfg.devices as u64 - 1) as u32;
+                    if st.device_is_up(DeviceId(d)) {
+                        let start = g.u64(0, 2_000);
+                        let end = start + g.u64(1, 2_000);
+                        let cores = g.u64(1, 2) as u32;
+                        let w = Window::new(t_ms(start), t_ms(end));
+                        if st.device(DeviceId(d)).fits(&w, cores) {
+                            let id = commit_placement(&mut st, d, start, end, cores);
+                            live.push((id, d));
+                        }
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let (id, _) = live.swap_remove(g.usize(0, live.len() - 1));
+                        if g.bool(0.5) {
+                            st.complete_task(id, t_ms(g.u64(0, 4_000)));
+                        } else {
+                            st.fail_task(id, FailReason::Violated, t_ms(g.u64(0, 4_000)));
+                        }
+                    }
+                }
+                3 => {
+                    let d = DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32);
+                    if st.device_is_up(d) && g.bool(0.3) {
+                        st.mark_device_down(d, t_ms(g.u64(0, 4_000)));
+                        live.retain(|&(_, dev)| dev != d.0);
+                    } else {
+                        st.set_device_health(d, DeviceHealth::Up);
+                    }
+                }
+                _ => st.prune_before(t_ms(g.u64(0, 3_000))),
+            }
+
+            // Unchanged snapshot ⇒ cache hit (the very same Rc).
+            let a = avail::index_for(&st);
+            let b = avail::index_for(&st);
+            assert!(Rc::ptr_eq(&a, &b), "same (uid, version) must be a cache hit");
+
+            // Any mutation — even one that never touches a device calendar —
+            // bumps the version and forces a rebuild to an equal-value index.
+            let v = st.version();
+            st.charge_link_message(
+                SimTime::ZERO,
+                SimDuration::from_micros(1 + step as u64),
+                SlotKind::PollMsg,
+                TaskId(5_000_000 + step as u64),
+            );
+            assert!(st.version() > v, "every mutating method bumps the version");
+            let c = avail::index_for(&st);
+            assert!(!Rc::ptr_eq(&a, &c), "version bump must invalidate the cache");
+            assert_eq!(a.entries(), c.entries(), "a link charge changes no device calendar");
+
+            // Indexed rescue candidates ≡ the direct scan recomputed from
+            // the public state API (same multiset of (peak, device) tuples).
+            let source = DeviceId(g.u64(0, cfg.devices as u64 - 1) as u32);
+            let ws = g.u64(0, 4_000);
+            let window = Window::new(t_ms(ws), t_ms(ws + g.u64(1, 2_000)));
+            let mut indexed = avail::rescue_candidates(&st, source, &window);
+            let mut direct: Vec<(u32, u32)> = st
+                .up_devices()
+                .filter(|&d| d != source)
+                .map(|d| (st.device(d).peak_usage_in(&window), d.0))
+                .collect();
+            indexed.sort_unstable();
+            direct.sort_unstable();
+            assert_eq!(indexed, direct, "indexed scan diverged from the direct scan");
+        }
     });
 }
