@@ -17,12 +17,15 @@
 #                      so bench code cannot silently rot)
 #   make profile     — one profiled fleet sweep via `pats fleet --profile`
 #                      (per-phase wall-time breakdown on stderr)
+#   make trace       — one traced seed run via `pats sim --trace`
+#                      (deadline-miss attribution on stderr, Chrome +
+#                      JSONL trace files under results/)
 #   make artifacts   — AOT-compile the JAX model to HLO text (python layer)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test test-engines fmt lint bench bench-smoke bench-build profile artifacts
+.PHONY: verify build test test-engines fmt lint bench bench-smoke bench-build profile trace artifacts
 
 verify: build test fmt
 
@@ -56,12 +59,14 @@ bench:
 	$(CARGO) bench --bench fidelity
 	$(CARGO) bench --bench shards
 	$(CARGO) bench --bench fleet
+	$(CARGO) bench --bench obs
 
 # Reduced-size smoke profile: same rows, CI-friendly sizes. The committed
 # BENCH_*.json baselines come from this target.
 bench-smoke:
 	PATS_BENCH_SMOKE=1 $(CARGO) bench --bench shards
 	PATS_BENCH_SMOKE=1 $(CARGO) bench --bench fleet
+	PATS_BENCH_SMOKE=1 $(CARGO) bench --bench obs
 
 bench-build:
 	$(CARGO) bench --no-run
@@ -69,6 +74,13 @@ bench-build:
 # One profiled fleet sweep: per-phase wall-time breakdown on stderr.
 profile:
 	$(CARGO) run --release -- fleet --sizes 1024 --cycles 2 --profile
+
+# One traced seed run: lifecycle flight recorder armed, deadline-miss
+# attribution printed to stderr, Chrome about://tracing JSON + JSONL
+# written next to each other under results/.
+trace:
+	mkdir -p results
+	$(CARGO) run --release -- sim --dist uniform --trace results/trace.json --trace-summary
 
 artifacts:
 	$(PYTHON) python/compile/aot.py

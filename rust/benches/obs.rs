@@ -1,0 +1,77 @@
+//! Flight-recorder benchmarks: what tracing costs when it is off, when it
+//! is on, and what the JSONL serializer sustains.
+//!
+//! Three claims are tracked across commits in `BENCH_obs.json`:
+//!
+//! * **Off is free.** The recorder is checked once per run at `Sim`
+//!   construction, not per event, so `trace_off_floor/*` is the plain
+//!   simulation wall clock — any regression here is recorder cost leaking
+//!   into untraced runs.
+//! * **On is bounded.** `trace_on_overhead/*` runs the identical scenario
+//!   with the recorder armed (emit into the thread-local ring, barrier
+//!   flushes, canonical sort, decomposition and histogram fold) — the gap
+//!   to the floor row is the full price of `--trace`.
+//! * **Export scales with the journal.** `export_jsonl/*` serializes a
+//!   retained run to its line-per-event form.
+
+use pats::bench::{bench, bench_with_setup, section, smoke, write_json, BenchResult};
+use pats::config::SystemConfig;
+use pats::obs;
+use pats::sim::run_scenario;
+use pats::trace::{Distribution, Trace};
+
+fn fixture(frames: u64) -> (SystemConfig, Trace) {
+    let mut cfg = SystemConfig::default();
+    cfg.frames = frames;
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+    (cfg, trace)
+}
+
+fn show(results: &mut Vec<BenchResult>, r: BenchResult) {
+    println!("{}", r.render());
+    results.push(r);
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let frames = if smoke() { 40 } else { 400 };
+    let iters = if smoke() { 2 } else { 6 };
+    let (cfg, trace) = fixture(frames);
+
+    section("recorder cost on the seed scenario");
+    obs::enable(false);
+    let r = bench(&format!("trace_off_floor/frames={frames}"), 1, iters, || {
+        run_scenario(&cfg, &trace, "off").metrics.frames_completed
+    });
+    show(&mut results, r);
+    let r = bench(&format!("trace_on_overhead/frames={frames}"), 1, iters, || {
+        obs::enable(true);
+        let out = run_scenario(&cfg, &trace, "on");
+        obs::enable(false);
+        // Drop the retained run so repeated iterations do not accumulate
+        // journals in the recorder's process-wide store.
+        let _ = obs::take_recorded();
+        out.metrics.frames_completed
+    });
+    show(&mut results, r);
+
+    section("JSONL export throughput");
+    let r = bench_with_setup(
+        &format!("export_jsonl/frames={frames}"),
+        0,
+        iters,
+        || {
+            obs::enable(true);
+            let _ = run_scenario(&cfg, &trace, "export");
+            obs::enable(false);
+            obs::take_recorded()
+        },
+        |runs| obs::export::jsonl(&runs).len(),
+    );
+    show(&mut results, r);
+
+    match write_json("obs", &results) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench JSON: {e}"),
+    }
+}

@@ -320,6 +320,24 @@ impl Default for ShardingConfig {
     }
 }
 
+/// Flight-recorder shaping (`[obs]`), consumed by [`crate::sim`] when
+/// tracing is armed (`crate::obs::enable`). With the recorder off (the
+/// default) this section changes nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Bound on the per-thread unflushed event ring (events). Events past
+    /// the bound between two barrier flushes are counted as dropped instead
+    /// of stored (≥ 1; the default holds every event of the stock
+    /// scenarios).
+    pub ring_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { ring_capacity: crate::obs::DEFAULT_RING_CAPACITY }
+    }
+}
+
 /// Complete system configuration. Paper defaults throughout.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -449,6 +467,10 @@ pub struct SystemConfig {
     // ---- sharded control plane ----
     /// Control-plane partitioning (`[sharding]`).
     pub sharding: ShardingConfig,
+
+    // ---- observability ----
+    /// Task-lifecycle flight recorder (`[obs]`).
+    pub obs: ObsConfig,
 }
 
 impl Default for SystemConfig {
@@ -492,6 +514,7 @@ impl Default for SystemConfig {
             dynamics: DynamicsConfig::default(),
             fidelity: FidelityConfig::default(),
             sharding: ShardingConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -580,6 +603,7 @@ impl SystemConfig {
             "sharding.rebalance.threshold",
             "sharding.rebalance.epochs",
             "sharding.rebalance.max_moves",
+            "obs.ring_capacity",
         ];
         for key in doc.keys() {
             if !KNOWN.contains(&key) {
@@ -886,6 +910,12 @@ impl SystemConfig {
             }
             cfg.sharding.rebalance.max_moves = v as usize;
         }
+        if let Some(v) = doc.get_i64("obs.ring_capacity") {
+            if v < 1 {
+                return Err(Error::Config(format!("obs.ring_capacity must be >= 1, got {v}")));
+            }
+            cfg.obs.ring_capacity = v as usize;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -1024,6 +1054,9 @@ impl SystemConfig {
         if sh.rebalance.max_moves == 0 {
             return Err(Error::Config("sharding.rebalance.max_moves must be >= 1".into()));
         }
+        if self.obs.ring_capacity == 0 {
+            return Err(Error::Config("obs.ring_capacity must be >= 1".into()));
+        }
         Ok(())
     }
 
@@ -1149,6 +1182,22 @@ frames = 96
     fn unknown_key_rejected() {
         let doc = crate::util::toml::Document::parse("[net]\nthroughputt = 1.0").unwrap();
         assert!(SystemConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn obs_ring_capacity_parses_and_rejects_zero() {
+        let c = SystemConfig::default();
+        assert_eq!(c.obs.ring_capacity, crate::obs::DEFAULT_RING_CAPACITY);
+
+        let doc = crate::util::toml::Document::parse("[obs]\nring_capacity = 4096").unwrap();
+        let c = SystemConfig::from_document(&doc).unwrap();
+        assert_eq!(c.obs.ring_capacity, 4096);
+
+        let doc = crate::util::toml::Document::parse("[obs]\nring_capacity = 0").unwrap();
+        assert!(SystemConfig::from_document(&doc).is_err());
+        let mut c = SystemConfig::default();
+        c.obs.ring_capacity = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -206,6 +206,13 @@ pub trait ControlSurface {
         BrokerStats::default()
     }
 
+    /// Arm (or disarm, with `None`) the flight recorder for this surface's
+    /// surface-local events. The simulator emits every task-lifecycle
+    /// transition it can see itself; the only surface-local transitions are
+    /// the sharded plane's cross-shard spills and device migrations, so the
+    /// raw controller ignores the hook.
+    fn set_trace_run(&mut self, _run: Option<u64>) {}
+
     /// Process one batch of high-priority admissions — a *decision sweep*,
     /// the batched engine's unit of work. The default implementation
     /// handles the jobs serially in order, which is by construction

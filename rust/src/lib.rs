@@ -50,6 +50,11 @@
 //! * [`sim`] — discrete-event engine + scenario runner, with an optional
 //!   scripted network-dynamics layer (`sim::run_scenario_dynamic`).
 //! * [`metrics`] — counters and report rendering for every figure/table.
+//! * [`obs`] — the deterministic task-lifecycle flight recorder: virtual-
+//!   time [`obs::TraceEvent`] journals (bit-identical across engines and
+//!   shard counts), per-class SLO latency decomposition, deadline-miss
+//!   attribution, and JSONL / Chrome `about://tracing` export
+//!   (`--trace` / `--trace-summary` on every subcommand).
 //! * [`runtime`] — PJRT (XLA) execution of AOT-compiled artifacts (behind
 //!   the `xla` feature), plus the Rust side of horizontal partitioning
 //!   (tile/halo/stitch).
@@ -81,6 +86,7 @@ pub mod experiments;
 pub mod fidelity;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod pipeline;
 pub mod resources;
 pub mod runtime;

@@ -35,7 +35,7 @@ pats — preemption-aware task scheduling for edge DNN offloading
 USAGE:
   pats experiments [--frames N] [--seed S] [--out DIR]
   pats sim --dist DIST [--policy P] [--no-preemption] [--set-aware-victims]
-           [--frames N] [--seed S] [--trace FILE] [--config FILE]
+           [--frames N] [--seed S] [--workload FILE] [--config FILE]
   pats fleet [--sizes N,N,...] [--cycles N] [--pattern PAT] [--seed S]
              [--config FILE] [--out DIR]
   pats churn [--devices N] [--cycles N] [--crash-pct P] [--drain-pct P]
@@ -55,6 +55,12 @@ USAGE:
 
   --profile on any subcommand prints a per-phase wall-time breakdown
   (event loop, planning layer, placement paths) to stderr on exit.
+  --trace PATH on any subcommand records every task-lifecycle transition
+  and writes a Chrome about://tracing document to PATH plus a JSONL
+  stream next to it (.json swapped to .jsonl) on exit.
+  --trace-summary on any subcommand records the same journal and prints
+  each run's latency decomposition (p50/p99/p999 per class) and
+  deadline-miss attribution to stderr on exit.
 ";
 
 fn main() -> ExitCode {
@@ -62,7 +68,15 @@ fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(
         &argv,
-        &["no-preemption", "set-aware-victims", "json", "broker", "profile", "help"],
+        &[
+            "no-preemption",
+            "set-aware-victims",
+            "json",
+            "broker",
+            "profile",
+            "trace-summary",
+            "help",
+        ],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -76,6 +90,11 @@ fn main() -> ExitCode {
     }
     if args.flag("profile") {
         pats::util::profiler::enable(true);
+    }
+    let trace_out = args.opt("trace").map(str::to_string);
+    let trace_summary = args.flag("trace-summary");
+    if trace_out.is_some() || trace_summary {
+        pats::obs::enable(true);
     }
     let result = match args.command.as_deref() {
         Some("experiments") => cmd_experiments(&args),
@@ -91,6 +110,21 @@ fn main() -> ExitCode {
     };
     if let Some(report) = pats::util::profiler::report() {
         eprintln!("{}", report.render_text());
+    }
+    if trace_out.is_some() || trace_summary {
+        let runs = pats::obs::take_recorded();
+        if trace_summary {
+            for run in &runs {
+                eprintln!("--- trace summary [{}] ---", run.label);
+                eprint!("{}", run.summary);
+            }
+        }
+        if let Some(path) = &trace_out {
+            match pats::obs::export::write_files(path, &runs) {
+                Ok((chrome, jsonl)) => eprintln!("wrote {chrome} and {jsonl}"),
+                Err(e) => eprintln!("error: writing trace {path}: {e}"),
+            }
+        }
     }
     match result {
         Ok(()) => ExitCode::SUCCESS,
@@ -165,7 +199,7 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
     if args.flag("set-aware-victims") {
         cfg.set_aware_victims = true; // §8 future-work extension
     }
-    let trace = match args.opt("trace") {
+    let trace = match args.opt("workload") {
         Some(path) => Trace::load(std::path::Path::new(path)).map_err(|e| e.to_string())?,
         None => {
             let dist = Distribution::parse(args.opt_str("dist", "uniform"))

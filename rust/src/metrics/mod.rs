@@ -172,6 +172,12 @@ pub struct ScenarioMetrics {
     /// accuracy proxy across the frame's tasks (1.0 per full-fidelity
     /// frame). A frame is as accurate as its least accurate stage.
     pub accuracy_goodput: f64,
+
+    // ---- flight recorder (beyond the paper: observability) ----
+    /// Journal-derived statistics — per-class SLO histograms and
+    /// deadline-miss attribution. `None` unless the run was traced, so an
+    /// untraced run serialises byte-identically to the pre-recorder format.
+    pub trace: Option<crate::obs::TraceStats>,
 }
 
 impl ScenarioMetrics {
@@ -415,33 +421,47 @@ impl ScenarioMetrics {
         } else {
             json
         };
-        json.with(
-                "fidelity",
-                Json::obj()
-                    .with("degraded_hp_admission", self.degraded_hp_admission)
-                    .with("degraded_lp_admission", self.degraded_lp_admission)
-                    .with("degraded_victim_realloc", self.degraded_victim_realloc)
-                    .with("degraded_rescue", self.degraded_rescue)
-                    .with("degradations", self.degradations())
-                    .with("hp_completed_degraded", self.hp_completed_degraded)
-                    .with("lp_completed_degraded", self.lp_completed_degraded)
-                    .with("frames_completed_degraded", self.frames_completed_degraded)
-                    .with("accuracy_goodput", self.accuracy_goodput)
-                    .with("accuracy_goodput_pct", self.accuracy_goodput_pct()),
-            )
+        let json = json.with(
+            "fidelity",
+            Json::obj()
+                .with("degraded_hp_admission", self.degraded_hp_admission)
+                .with("degraded_lp_admission", self.degraded_lp_admission)
+                .with("degraded_victim_realloc", self.degraded_victim_realloc)
+                .with("degraded_rescue", self.degraded_rescue)
+                .with("degradations", self.degradations())
+                .with("hp_completed_degraded", self.hp_completed_degraded)
+                .with("lp_completed_degraded", self.lp_completed_degraded)
+                .with("frames_completed_degraded", self.frames_completed_degraded)
+                .with("accuracy_goodput", self.accuracy_goodput)
+                .with("accuracy_goodput_pct", self.accuracy_goodput_pct()),
+        );
+        // The trace block exists only on traced runs, so tracing off keeps
+        // the JSON shape byte-identical to the pre-recorder format. Its
+        // contents are pure virtual time, so it stays in
+        // [`ScenarioMetrics::deterministic_json`].
+        match &self.trace {
+            Some(t) => json.with("trace", t.to_json()),
+            None => json,
+        }
     }
 
-    /// [`ScenarioMetrics::to_json`] minus the `latency_ms` block — every
-    /// field that is a pure function of the virtual simulation, with the
-    /// wall-clock decision timings (the one nondeterministic input)
-    /// stripped. Two runs of the same scenario under the same engine and
-    /// seed must serialise to byte-identical strings of this
-    /// (`rust/tests/engine_equivalence.rs` determinism stress).
+    /// Keys [`ScenarioMetrics::deterministic_json`] strips, at any nesting
+    /// depth: every block that derives from the wall clock. Add a key here
+    /// when introducing a new wall-clock measurement; everything else in
+    /// [`ScenarioMetrics::to_json`] must be a pure function of the virtual
+    /// simulation.
+    pub const WALL_CLOCK_KEYS: &'static [&'static str] = &["latency_ms"];
+
+    /// [`ScenarioMetrics::to_json`] minus the wall-clock blocks
+    /// ([`ScenarioMetrics::WALL_CLOCK_KEYS`], stripped structurally at
+    /// every depth via [`Json::without_keys`] so a refactor that nests a
+    /// denied key cannot silently re-admit wall time). Two runs of the same
+    /// scenario under the same engine and seed must serialise to
+    /// byte-identical strings of this
+    /// (`rust/tests/engine_equivalence.rs` determinism stress). The `trace`
+    /// block is pure virtual time and is deliberately **not** stripped.
     pub fn deterministic_json(&self) -> Json {
-        let Json::Obj(entries) = self.to_json() else {
-            unreachable!("to_json builds an object");
-        };
-        Json::Obj(entries.into_iter().filter(|(k, _)| k != "latency_ms").collect())
+        self.to_json().without_keys(Self::WALL_CLOCK_KEYS)
     }
 
     /// One human-readable summary block.
@@ -530,6 +550,9 @@ impl ScenarioMetrics {
                 df = self.frames_completed_degraded,
                 ag = self.accuracy_goodput_pct(),
             );
+        }
+        if let Some(t) = &self.trace {
+            let _ = write!(line, "\n{}", t.render_text().trim_end());
         }
         line
     }
@@ -680,6 +703,51 @@ mod tests {
             sharding.get("lp_spill_returned").and_then(Json::as_f64),
             Some(1.0)
         );
+    }
+
+    #[test]
+    fn trace_block_only_present_when_run_was_traced() {
+        use crate::obs::{MissComponent, TraceStats};
+        let mut m = ScenarioMetrics::new("TRC");
+        m.frames_total = 10;
+        // Untraced: no block, no text segment — byte-identical to the
+        // pre-recorder serialisation.
+        assert!(m.to_json().get("trace").is_none());
+        assert!(!m.render_text().contains("flight recorder"));
+        let mut stats = TraceStats { events: 42, dropped: 1, ..TraceStats::default() };
+        stats.miss.blame(MissComponent::Preempt);
+        m.trace = Some(stats);
+        let j = m.to_json();
+        let t = j.get("trace").expect("trace block present");
+        assert_eq!(t.get("events").and_then(Json::as_f64), Some(42.0));
+        assert_eq!(
+            t.get("miss_attribution").and_then(|a| a.get("preempt")).and_then(Json::as_f64),
+            Some(1.0)
+        );
+        let text = m.render_text();
+        assert!(text.contains("flight recorder: 42 events"), "{text}");
+        assert!(text.contains("deadline-miss attribution: 1 frames"), "{text}");
+        // The trace block is pure virtual time: it must survive the
+        // deterministic projection.
+        assert!(m.deterministic_json().get("trace").is_some());
+    }
+
+    #[test]
+    fn deterministic_json_strips_wall_clock_keys_at_any_depth() {
+        let mut m = ScenarioMetrics::new("DET");
+        m.hp_alloc_ms.add(1.25);
+        let full = m.to_json();
+        assert!(full.get("latency_ms").is_some());
+        let det = m.deterministic_json();
+        assert!(det.get("latency_ms").is_none());
+        // Structural guarantee: the deny-list acts at every nesting depth,
+        // so re-homing the block under another key cannot re-admit it.
+        let nested = Json::obj()
+            .with("outer", Json::obj().with("latency_ms", 9.0f64).with("keep", 1u64))
+            .without_keys(ScenarioMetrics::WALL_CLOCK_KEYS);
+        let outer = nested.get("outer").unwrap();
+        assert!(outer.get("latency_ms").is_none());
+        assert!(outer.get("keep").is_some());
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Journal export: JSONL (one event per line) and Chrome `about://tracing`.
+//!
+//! Both formats are pure functions of the canonical journal — virtual
+//! timestamps only, insertion-ordered keys, no wall clock — so exported
+//! traces are byte-diffable across engines and shard counts, exactly like
+//! the journals they serialise. `--trace out.json` on any `pats` subcommand
+//! writes the Chrome document to the given path and the JSONL stream next
+//! to it (extension swapped to `.jsonl`).
+
+use super::{fail_reason_name, Cause, RecordedRun, TraceEvent, TraceEventKind};
+use crate::task::Priority;
+use crate::util::json::Json;
+
+/// Stable snake_case name of an event kind (JSONL `ev` field, Chrome event
+/// name). The exhaustive match *is* the JSONL serializer's variant
+/// coverage; the `obs_door` test greps it.
+pub fn kind_str(kind: TraceEventKind) -> &'static str {
+    match kind {
+        TraceEventKind::Admit => "admit",
+        TraceEventKind::Spill => "spill",
+        TraceEventKind::Preempt => "preempt",
+        TraceEventKind::Evict => "evict",
+        TraceEventKind::Place => "place",
+        TraceEventKind::Rescue => "rescue",
+        TraceEventKind::Degrade => "degrade",
+        TraceEventKind::Migrate => "migrate",
+        TraceEventKind::TransferStart => "transfer_start",
+        TraceEventKind::TransferEnd => "transfer_end",
+        TraceEventKind::ExecStart => "exec_start",
+        TraceEventKind::ExecEnd => "exec_end",
+        TraceEventKind::Complete => "complete",
+        TraceEventKind::Fail => "fail",
+    }
+}
+
+/// Chrome trace category for an event kind. The exhaustive match *is* the
+/// Chrome exporter's variant coverage; the `obs_door` test greps it.
+pub fn chrome_cat(kind: TraceEventKind) -> &'static str {
+    match kind {
+        TraceEventKind::Admit => "lifecycle",
+        TraceEventKind::Place => "lifecycle",
+        TraceEventKind::Preempt => "lifecycle",
+        TraceEventKind::Degrade => "lifecycle",
+        TraceEventKind::Complete => "lifecycle",
+        TraceEventKind::Fail => "lifecycle",
+        TraceEventKind::TransferStart => "transfer",
+        TraceEventKind::TransferEnd => "transfer",
+        TraceEventKind::ExecStart => "exec",
+        TraceEventKind::ExecEnd => "exec",
+        TraceEventKind::Evict => "churn",
+        TraceEventKind::Rescue => "churn",
+        TraceEventKind::Spill => "shard",
+        TraceEventKind::Migrate => "shard",
+    }
+}
+
+fn class_str(c: Priority) -> &'static str {
+    match c {
+        Priority::High => "hp",
+        Priority::Low => "lp",
+    }
+}
+
+fn cause_json(c: &Cause) -> Option<Json> {
+    match *c {
+        Cause::None => None,
+        Cause::PreemptedBy(t) => Some(Json::obj().with("preempted_by", t.0)),
+        Cause::DeviceDown(d) => Some(Json::obj().with("device_down", u64::from(d.0))),
+        Cause::Spilled { from, to } => {
+            Some(Json::obj().with("spill_from", from).with("spill_to", to))
+        }
+        Cause::Migrated { from, to } => {
+            Some(Json::obj().with("migrate_from", from).with("migrate_to", to))
+        }
+        Cause::Failed(r) => Some(Json::obj().with("fail", fail_reason_name(r))),
+    }
+}
+
+fn event_json(label: &str, ev: &TraceEvent) -> Json {
+    let mut j = Json::obj()
+        .with("run", label)
+        .with("ev", kind_str(ev.kind))
+        .with("at_us", ev.at.0);
+    if let Some(t) = ev.task {
+        j = j.with("task", t.0);
+    }
+    if let Some(d) = ev.device {
+        j = j.with("device", u64::from(d.0));
+    }
+    if let Some(v) = ev.variant {
+        j = j.with("variant", u64::from(v.0));
+    }
+    if let Some(c) = ev.class {
+        j = j.with("class", class_str(c));
+    }
+    if let Some(c) = cause_json(&ev.cause) {
+        j = j.with("cause", c);
+    }
+    j
+}
+
+/// Serialise every run as JSONL: one compact object per event, runs
+/// concatenated in finish order, each line tagged with its run label.
+pub fn jsonl(runs: &[RecordedRun]) -> String {
+    let mut out = String::new();
+    for run in runs {
+        for ev in &run.journal.events {
+            out.push_str(&event_json(&run.label, ev).to_string_compact());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Serialise every run as one Chrome `about://tracing` document: instant
+/// events (`"ph": "i"`, thread scope), `ts` in virtual microseconds, one
+/// `pid` per run, `tid` = device (0 for device-less events).
+pub fn chrome(runs: &[RecordedRun]) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    for (run_idx, run) in runs.iter().enumerate() {
+        for ev in &run.journal.events {
+            let mut args = Json::obj();
+            if let Some(t) = ev.task {
+                args = args.with("task", t.0);
+            }
+            if let Some(v) = ev.variant {
+                args = args.with("variant", u64::from(v.0));
+            }
+            if let Some(c) = ev.class {
+                args = args.with("class", class_str(c));
+            }
+            if let Some(c) = cause_json(&ev.cause) {
+                args = args.with("cause", c);
+            }
+            events.push(
+                Json::obj()
+                    .with("name", kind_str(ev.kind))
+                    .with("cat", chrome_cat(ev.kind))
+                    .with("ph", "i")
+                    .with("ts", ev.at.0)
+                    .with("pid", run_idx)
+                    .with("tid", ev.device.map_or(0, |d| u64::from(d.0)))
+                    .with("s", "t")
+                    .with("args", args),
+            );
+        }
+    }
+    Json::obj().with("traceEvents", events).to_string_compact()
+}
+
+/// Write both export formats for `--trace PATH`: the Chrome document to
+/// `path`, the JSONL stream to `path` with its `.json` extension swapped to
+/// `.jsonl` (appended when `path` has a different extension). Returns the
+/// two written paths `(chrome, jsonl)`.
+pub fn write_files(path: &str, runs: &[RecordedRun]) -> std::io::Result<(String, String)> {
+    let jsonl_path = match path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.jsonl"),
+        None => format!("{path}.jsonl"),
+    };
+    std::fs::write(path, chrome(runs))?;
+    std::fs::write(&jsonl_path, jsonl(runs))?;
+    Ok((path.to_string(), jsonl_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceJournal;
+    use crate::task::{DeviceId, FailReason, TaskId};
+    use crate::time::SimTime;
+
+    fn sample_runs() -> Vec<RecordedRun> {
+        let journal = TraceJournal {
+            events: vec![
+                TraceEvent::new(SimTime(10), TraceEventKind::Admit)
+                    .task(TaskId(1))
+                    .class(Priority::High),
+                TraceEvent::new(SimTime(20), TraceEventKind::Place)
+                    .task(TaskId(1))
+                    .device(DeviceId(2)),
+                TraceEvent::new(SimTime(30), TraceEventKind::Fail)
+                    .task(TaskId(1))
+                    .cause(Cause::Failed(FailReason::Violated)),
+            ],
+            dropped: 0,
+        };
+        vec![RecordedRun { label: "seed".into(), journal, summary: String::new() }]
+    }
+
+    #[test]
+    fn kind_names_and_categories_cover_every_variant() {
+        let mut names: Vec<&str> = TraceEventKind::ALL.iter().map(|&k| kind_str(k)).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), TraceEventKind::ALL.len(), "kind names are unique");
+        for &k in &TraceEventKind::ALL {
+            assert!(!chrome_cat(k).is_empty());
+        }
+    }
+
+    #[test]
+    fn jsonl_is_one_tagged_line_per_event() {
+        let runs = sample_runs();
+        let out = jsonl(&runs);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("{\"run\":\"seed\",\"ev\":\"admit\",\"at_us\":10"));
+        assert!(lines[0].contains("\"class\":\"hp\""));
+        assert!(lines[1].contains("\"device\":2"));
+        assert!(lines[2].contains("\"cause\":{\"fail\":\"violated\"}"));
+    }
+
+    #[test]
+    fn chrome_document_wraps_instant_events() {
+        let runs = sample_runs();
+        let out = chrome(&runs);
+        assert!(out.starts_with("{\"traceEvents\":["));
+        assert!(out.contains("\"ph\":\"i\""));
+        assert!(out.contains("\"name\":\"place\""));
+        assert!(out.contains("\"cat\":\"lifecycle\""));
+        assert!(out.contains("\"tid\":2"), "tid is the device");
+    }
+
+    #[test]
+    fn write_files_swaps_the_extension() {
+        let dir = std::env::temp_dir().join("pats_obs_export_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let path = path.to_str().unwrap();
+        let (chrome_path, jsonl_path) = write_files(path, &sample_runs()).unwrap();
+        assert!(chrome_path.ends_with("trace.json"));
+        assert!(jsonl_path.ends_with("trace.jsonl"));
+        assert!(std::fs::read_to_string(&chrome_path).unwrap().contains("traceEvents"));
+        assert_eq!(std::fs::read_to_string(&jsonl_path).unwrap().lines().count(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,923 @@
+//! Deterministic task-lifecycle flight recorder.
+//!
+//! Every task transition (admit / place / transfer / exec / preempt / evict
+//! / rescue / degrade / spill / migrate / complete / fail) is recorded as a
+//! [`TraceEvent`] carrying **virtual** timestamps, device, variant, and a
+//! causal tag (who preempted whom, which churn event orphaned it). Events
+//! accumulate in a bounded thread-local ring that is merged into a global
+//! journal at the same barrier points the phase profiler flushes at; a
+//! canonical stable sort on `(virtual time, task, kind, device)` makes the
+//! final journal **bit-identical across engines and shard counts** — the
+//! engine-equivalence harness diffs whole journals, which is strictly
+//! sharper than the metrics fingerprint.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Observability must not perturb the schedule.** Events carry only
+//!    virtual time and simulation identities — never the wall clock — so a
+//!    journal is a diffable artifact. With tracing off, every output byte
+//!    is identical to a build that never heard of this module
+//!    (`PATS_EQ_TRACE` in the equivalence harness).
+//! 2. **Near-zero cost when disabled.** The recorder is armed per run:
+//!    [`crate::sim::Sim`] captures a run id at construction only when
+//!    [`enabled`] is set, and every emission site is gated on that
+//!    `Option` — disabled runs never touch a thread-local or allocate.
+//! 3. **Concurrent runs do not interfere.** Events are tagged with their
+//!    run id; [`take_run`] extracts exactly one run's events, so parallel
+//!    tests (and the sweep subcommands) each get their own journal.
+//!
+//! On top of the journal this module derives the per-task latency
+//! decomposition (admission wait, link wait, compute, preemption stall,
+//! rescue overhead) folded into mergeable [`LogHistogram`]s per priority
+//! class, and the deadline-miss attribution that blames every missed frame
+//! on its dominant latency component (`--trace-summary`). Export to JSONL
+//! and Chrome `about://tracing` lives in [`export`].
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::fidelity::VariantId;
+use crate::task::{DeviceId, FailReason, Priority, TaskId};
+use crate::time::SimTime;
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+
+/// Default bound on the unflushed thread-local event ring (events).
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 20;
+
+/// Globally arms the recorder. Defaults to off; checked once per run at
+/// [`crate::sim::Sim`] construction, not per event.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Monotonic run-id source; `0` is never a valid run.
+static NEXT_RUN: AtomicU64 = AtomicU64::new(1);
+
+/// Bound on the unflushed thread-local ring, in events.
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAPACITY);
+
+/// Merged journal: `(run, event)` in emission order, all runs interleaved.
+static GLOBAL: Mutex<Vec<(u64, TraceEvent)>> = Mutex::new(Vec::new());
+
+/// Merged per-run dropped-event counts.
+static DROPPED: Mutex<Vec<(u64, u64)>> = Mutex::new(Vec::new());
+
+/// Finished runs retained for CLI export / `--trace-summary`.
+static RECORDED: Mutex<Vec<RecordedRun>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL: RefCell<LocalRing> = const {
+        RefCell::new(LocalRing { events: Vec::new(), dropped: Vec::new() })
+    };
+}
+
+/// Unflushed per-thread event ring.
+struct LocalRing {
+    events: Vec<(u64, TraceEvent)>,
+    dropped: Vec<(u64, u64)>,
+}
+
+/// What happened to a task (one lifecycle transition).
+///
+/// The discriminant order is the canonical same-instant sort rank: at one
+/// virtual instant a task is admitted before it can spill, a victim is
+/// preempted/evicted before the replacement placement lands, placement
+/// precedes transfer, transfer precedes execution, and terminal states come
+/// last.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum TraceEventKind {
+    /// Task entered the controller (carries the priority class).
+    Admit,
+    /// Admission routed to a sibling shard (cause names both shards).
+    Spill,
+    /// Victim ejected by the preemption mechanism (cause names the
+    /// beneficiary).
+    Preempt,
+    /// Reservation orphaned by a device failure (cause names the device).
+    Evict,
+    /// A committed placement (initial, reallocation, or rescue target).
+    Place,
+    /// Orphan re-placed through the churn-rescue path.
+    Rescue,
+    /// Placed at a degraded model variant (fidelity catalog).
+    Degrade,
+    /// Device ownership moved between shards (task-less; cause names both
+    /// shards).
+    Migrate,
+    /// Input transfer reserved on the link started.
+    TransferStart,
+    /// Input transfer finished arriving at the execution device.
+    TransferEnd,
+    /// Processing window opened on the device.
+    ExecStart,
+    /// Processing window closed on the device.
+    ExecEnd,
+    /// Task completed inside its window and deadline.
+    Complete,
+    /// Terminal failure (cause carries the [`FailReason`]).
+    Fail,
+}
+
+impl TraceEventKind {
+    /// Every kind, in canonical rank order.
+    pub const ALL: [TraceEventKind; 14] = [
+        TraceEventKind::Admit,
+        TraceEventKind::Spill,
+        TraceEventKind::Preempt,
+        TraceEventKind::Evict,
+        TraceEventKind::Place,
+        TraceEventKind::Rescue,
+        TraceEventKind::Degrade,
+        TraceEventKind::Migrate,
+        TraceEventKind::TransferStart,
+        TraceEventKind::TransferEnd,
+        TraceEventKind::ExecStart,
+        TraceEventKind::ExecEnd,
+        TraceEventKind::Complete,
+        TraceEventKind::Fail,
+    ];
+
+    /// Canonical same-instant sort rank.
+    pub fn rank(self) -> u8 {
+        self as u8
+    }
+}
+
+/// Causal tag attached to a [`TraceEvent`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cause {
+    /// No cause recorded.
+    None,
+    /// Ejected to make room for this beneficiary task.
+    PreemptedBy(TaskId),
+    /// Orphaned by this device going down.
+    DeviceDown(DeviceId),
+    /// Admission spilled from one shard to a sibling.
+    Spilled {
+        /// Shard that could not place the request locally.
+        from: usize,
+        /// Sibling shard that accepted it.
+        to: usize,
+    },
+    /// Device ownership migrated between shards (rebalancer).
+    Migrated {
+        /// Shard that gave the device up.
+        from: usize,
+        /// Shard that now owns it.
+        to: usize,
+    },
+    /// Terminal failure reason.
+    Failed(FailReason),
+}
+
+/// Stable snake_case name for a [`FailReason`] (JSONL / Chrome `args`).
+pub fn fail_reason_name(r: FailReason) -> &'static str {
+    match r {
+        FailReason::NoResources => "no_resources",
+        FailReason::Preempted => "preempted",
+        FailReason::Violated => "violated",
+        FailReason::Cancelled => "cancelled",
+        FailReason::DeviceLost => "device_lost",
+    }
+}
+
+/// One recorded lifecycle transition. All timestamps are virtual.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual instant of the transition.
+    pub at: SimTime,
+    /// What happened.
+    pub kind: TraceEventKind,
+    /// The task it happened to (`None` for task-less events like
+    /// [`TraceEventKind::Migrate`]).
+    pub task: Option<TaskId>,
+    /// Device involved (execution device for placements, failed device for
+    /// evictions, migrated device for migrations).
+    pub device: Option<DeviceId>,
+    /// Model variant chosen (degraded placements).
+    pub variant: Option<VariantId>,
+    /// Priority class (set on [`TraceEventKind::Admit`] only).
+    pub class: Option<Priority>,
+    /// Causal tag.
+    pub cause: Cause,
+}
+
+impl TraceEvent {
+    /// A bare event at `at` of `kind`; attach identities with the builder
+    /// methods.
+    pub fn new(at: SimTime, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent {
+            at,
+            kind,
+            task: None,
+            device: None,
+            variant: None,
+            class: None,
+            cause: Cause::None,
+        }
+    }
+
+    /// Attach the task.
+    pub fn task(mut self, t: TaskId) -> TraceEvent {
+        self.task = Some(t);
+        self
+    }
+
+    /// Attach the device.
+    pub fn device(mut self, d: DeviceId) -> TraceEvent {
+        self.device = Some(d);
+        self
+    }
+
+    /// Attach the model variant.
+    pub fn variant(mut self, v: VariantId) -> TraceEvent {
+        self.variant = Some(v);
+        self
+    }
+
+    /// Attach the priority class.
+    pub fn class(mut self, c: Priority) -> TraceEvent {
+        self.class = Some(c);
+        self
+    }
+
+    /// Attach the causal tag.
+    pub fn cause(mut self, c: Cause) -> TraceEvent {
+        self.cause = c;
+        self
+    }
+
+    /// Canonical journal order: virtual time, then task (task-less events
+    /// last), then same-instant kind rank, then device. Emission order
+    /// breaks the remaining ties via the stable sort in [`take_run`].
+    fn canonical_key(&self) -> (u64, u64, u8, u64) {
+        (
+            self.at.0,
+            self.task.map_or(u64::MAX, |t| t.0),
+            self.kind.rank(),
+            self.device.map_or(u64::MAX, |d| u64::from(d.0)),
+        )
+    }
+}
+
+/// Arm or disarm the recorder. Runs capture the flag once at construction,
+/// so flipping it mid-run does not tear a journal.
+pub fn enable(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is the recorder currently armed?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Allocate a fresh run id. Every emission is tagged with it and
+/// [`take_run`] extracts exactly that run's events.
+pub fn begin_run() -> u64 {
+    NEXT_RUN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Bound the unflushed thread-local ring (events). Events past the bound
+/// between two barrier flushes are counted, not stored (drop-newest).
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAP.store(cap.max(1), Ordering::Relaxed);
+}
+
+/// Record one event for `run`. Drop-newest past the ring bound: the event
+/// is counted in the run's `dropped` tally instead of stored.
+pub fn emit(run: u64, ev: TraceEvent) {
+    let cap = RING_CAP.load(Ordering::Relaxed);
+    LOCAL.with(|l| {
+        let mut ring = l.borrow_mut();
+        if ring.events.len() >= cap {
+            match ring.dropped.iter_mut().find(|(r, _)| *r == run) {
+                Some((_, n)) => *n += 1,
+                None => ring.dropped.push((run, 1)),
+            }
+        } else {
+            ring.events.push((run, ev));
+        }
+    });
+}
+
+/// Merge this thread's ring into the global journal and empty it. Called at
+/// the same barrier points the profiler flushes at (end of a sim drain);
+/// unconditional so a run's tail is never stranded in a dying thread.
+pub fn flush_thread() {
+    LOCAL.with(|l| {
+        let mut ring = l.borrow_mut();
+        if ring.events.is_empty() && ring.dropped.is_empty() {
+            return;
+        }
+        GLOBAL.lock().unwrap().append(&mut ring.events);
+        let mut dropped = DROPPED.lock().unwrap();
+        for (run, n) in ring.dropped.drain(..) {
+            match dropped.iter_mut().find(|(r, _)| *r == run) {
+                Some((_, total)) => *total += n,
+                None => dropped.push((run, n)),
+            }
+        }
+    });
+}
+
+/// One finished run's journal: canonically ordered events plus the count of
+/// events the ring bound dropped.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceJournal {
+    /// Events in canonical order (see [`TraceEvent::canonical_key`]).
+    pub events: Vec<TraceEvent>,
+    /// Events dropped by the ring bound (not in `events`).
+    pub dropped: u64,
+}
+
+/// Extract one run's events from the global journal (other runs are left in
+/// place) and canonically sort them. Flush this thread first.
+pub fn take_run(run: u64) -> TraceJournal {
+    flush_thread();
+    let mut events = Vec::new();
+    {
+        let mut g = GLOBAL.lock().unwrap();
+        let mut rest = Vec::with_capacity(g.len());
+        for (r, ev) in g.drain(..) {
+            if r == run {
+                events.push(ev);
+            } else {
+                rest.push((r, ev));
+            }
+        }
+        *g = rest;
+    }
+    let dropped = {
+        let mut d = DROPPED.lock().unwrap();
+        match d.iter().position(|(r, _)| *r == run) {
+            Some(i) => d.swap_remove(i).1,
+            None => 0,
+        }
+    };
+    // Stable: emission order (already engine-deterministic — decisions are
+    // applied on the main sim thread in both engines) breaks residual ties.
+    events.sort_by_key(TraceEvent::canonical_key);
+    TraceJournal { events, dropped }
+}
+
+/// A finished run retained for CLI export (`--trace`) and
+/// `--trace-summary`.
+#[derive(Debug, Clone)]
+pub struct RecordedRun {
+    /// Scenario label (from `ScenarioMetrics`).
+    pub label: String,
+    /// The run's canonical journal.
+    pub journal: TraceJournal,
+    /// Rendered `--trace-summary` text for the run.
+    pub summary: String,
+}
+
+/// Retain a finished run for CLI export / summary printing.
+pub fn record_run(label: &str, journal: &TraceJournal, summary: String) {
+    RECORDED.lock().unwrap().push(RecordedRun {
+        label: label.to_string(),
+        journal: journal.clone(),
+        summary,
+    });
+}
+
+/// Drain every retained run (in finish order).
+pub fn take_recorded() -> Vec<RecordedRun> {
+    std::mem::take(&mut *RECORDED.lock().unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// Latency decomposition + deadline-miss attribution
+// ---------------------------------------------------------------------------
+
+/// Per-task latency decomposition, integer virtual microseconds.
+///
+/// The lanes partition a task's life: time from admission to first
+/// placement, link time for input transfers, device compute time, stall
+/// between a preemption and the re-placement, and churn-rescue overhead
+/// between an eviction and the rescue placement.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TaskLatency {
+    /// Admit → first Place (or → terminal, for tasks never placed).
+    pub admission_wait_us: u64,
+    /// Σ TransferStart → TransferEnd.
+    pub link_wait_us: u64,
+    /// Σ ExecStart → ExecEnd.
+    pub compute_us: u64,
+    /// Σ Preempt → next Place.
+    pub preempt_stall_us: u64,
+    /// Σ Evict → next Rescue/Place.
+    pub rescue_overhead_us: u64,
+    /// Admit → terminal (Complete or Fail); 0 for censored tasks.
+    pub total_us: u64,
+    /// Reached [`TraceEventKind::Complete`].
+    pub completed: bool,
+}
+
+impl TaskLatency {
+    /// Sum another task's lanes into this one (frame-level attribution).
+    pub fn accumulate(&mut self, o: &TaskLatency) {
+        self.admission_wait_us += o.admission_wait_us;
+        self.link_wait_us += o.link_wait_us;
+        self.compute_us += o.compute_us;
+        self.preempt_stall_us += o.preempt_stall_us;
+        self.rescue_overhead_us += o.rescue_overhead_us;
+        self.total_us += o.total_us;
+    }
+
+    /// The dominant lane. Ties break in fixed lane order (admission, link,
+    /// compute, preempt, rescue), so attribution is deterministic; an
+    /// all-zero decomposition blames admission.
+    pub fn dominant(&self) -> MissComponent {
+        let lanes = [
+            (self.admission_wait_us, MissComponent::Admission),
+            (self.link_wait_us, MissComponent::Link),
+            (self.compute_us, MissComponent::Compute),
+            (self.preempt_stall_us, MissComponent::Preempt),
+            (self.rescue_overhead_us, MissComponent::Rescue),
+        ];
+        let mut best = lanes[0];
+        for &lane in &lanes[1..] {
+            if lane.0 > best.0 {
+                best = lane;
+            }
+        }
+        best.1
+    }
+}
+
+/// The latency lane a missed frame is blamed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MissComponent {
+    /// Admission wait dominated.
+    Admission,
+    /// Link (input transfer) time dominated.
+    Link,
+    /// Device compute time dominated.
+    Compute,
+    /// Preemption stall dominated.
+    Preempt,
+    /// Churn-rescue overhead dominated.
+    Rescue,
+}
+
+impl MissComponent {
+    /// Stable snake_case name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MissComponent::Admission => "admission",
+            MissComponent::Link => "link",
+            MissComponent::Compute => "compute",
+            MissComponent::Preempt => "preempt",
+            MissComponent::Rescue => "rescue",
+        }
+    }
+}
+
+/// One task's class and decomposed lanes.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskTrace {
+    /// Priority class from the Admit event.
+    pub class: Priority,
+    /// Decomposed latency lanes.
+    pub lat: TaskLatency,
+}
+
+/// Fold a canonical journal into per-task decompositions. Tasks without an
+/// Admit event are ignored; tasks whose terminal event sits at
+/// [`SimTime::MAX`] (failed by finalize after the horizon) keep their lane
+/// sums but record no admission/total time (censored).
+pub fn decompose(events: &[TraceEvent]) -> BTreeMap<TaskId, TaskTrace> {
+    struct Lane {
+        class: Priority,
+        admit_at: SimTime,
+        placed: bool,
+        stall: Option<(bool, SimTime)>, // (is_evict, since)
+        transfer_open: Option<SimTime>,
+        exec_open: Option<SimTime>,
+        terminal_at: Option<SimTime>,
+        lat: TaskLatency,
+    }
+    let mut lanes: BTreeMap<TaskId, Lane> = BTreeMap::new();
+    for ev in events {
+        let Some(task) = ev.task else { continue };
+        if ev.kind == TraceEventKind::Admit {
+            lanes.entry(task).or_insert(Lane {
+                class: ev.class.unwrap_or(Priority::Low),
+                admit_at: ev.at,
+                placed: false,
+                stall: None,
+                transfer_open: None,
+                exec_open: None,
+                terminal_at: None,
+                lat: TaskLatency::default(),
+            });
+            continue;
+        }
+        let Some(lane) = lanes.get_mut(&task) else { continue };
+        match ev.kind {
+            TraceEventKind::Place | TraceEventKind::Rescue => {
+                if let Some((is_evict, since)) = lane.stall.take() {
+                    let us = ev.at.since(since).0;
+                    if is_evict {
+                        lane.lat.rescue_overhead_us += us;
+                    } else {
+                        lane.lat.preempt_stall_us += us;
+                    }
+                } else if !lane.placed && ev.kind == TraceEventKind::Place {
+                    lane.lat.admission_wait_us = ev.at.since(lane.admit_at).0;
+                }
+                if ev.kind == TraceEventKind::Place {
+                    lane.placed = true;
+                }
+            }
+            TraceEventKind::Preempt => lane.stall = Some((false, ev.at)),
+            TraceEventKind::Evict => lane.stall = Some((true, ev.at)),
+            TraceEventKind::TransferStart => lane.transfer_open = Some(ev.at),
+            TraceEventKind::TransferEnd => {
+                if let Some(since) = lane.transfer_open.take() {
+                    lane.lat.link_wait_us += ev.at.since(since).0;
+                }
+            }
+            TraceEventKind::ExecStart => lane.exec_open = Some(ev.at),
+            TraceEventKind::ExecEnd => {
+                if let Some(since) = lane.exec_open.take() {
+                    lane.lat.compute_us += ev.at.since(since).0;
+                }
+            }
+            TraceEventKind::Complete | TraceEventKind::Fail => {
+                lane.terminal_at = Some(ev.at);
+                lane.lat.completed = ev.kind == TraceEventKind::Complete;
+            }
+            TraceEventKind::Admit
+            | TraceEventKind::Spill
+            | TraceEventKind::Degrade
+            | TraceEventKind::Migrate => {}
+        }
+    }
+    lanes
+        .into_iter()
+        .map(|(task, mut lane)| {
+            if let Some(end) = lane.terminal_at {
+                if end != SimTime::MAX {
+                    lane.lat.total_us = end.since(lane.admit_at).0;
+                    if !lane.placed {
+                        lane.lat.admission_wait_us = lane.lat.total_us;
+                    }
+                }
+            }
+            (task, TaskTrace { class: lane.class, lat: lane.lat })
+        })
+        .collect()
+}
+
+/// Per-class latency decomposition folded into log-bucketed histograms.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ClassLatency {
+    /// Tasks of this class observed (one Admit each).
+    pub tasks: u64,
+    /// Tasks that reached Complete.
+    pub completed: u64,
+    /// Admit → first Place.
+    pub admission_wait: LogHistogram,
+    /// Σ input-transfer time.
+    pub link_wait: LogHistogram,
+    /// Σ device compute time.
+    pub compute: LogHistogram,
+    /// Σ preemption stall.
+    pub preempt_stall: LogHistogram,
+    /// Σ churn-rescue overhead.
+    pub rescue_overhead: LogHistogram,
+    /// Admit → terminal.
+    pub total: LogHistogram,
+}
+
+impl ClassLatency {
+    fn record(&mut self, lat: &TaskLatency) {
+        self.tasks += 1;
+        if lat.completed {
+            self.completed += 1;
+        }
+        self.admission_wait.record(lat.admission_wait_us);
+        self.link_wait.record(lat.link_wait_us);
+        self.compute.record(lat.compute_us);
+        self.preempt_stall.record(lat.preempt_stall_us);
+        self.rescue_overhead.record(lat.rescue_overhead_us);
+        self.total.record(lat.total_us);
+    }
+
+    fn hist_json(h: &LogHistogram) -> Json {
+        Json::obj()
+            .with("count", h.count())
+            .with("p50_ms", h.percentile_us(50.0) as f64 / 1_000.0)
+            .with("p99_ms", h.percentile_us(99.0) as f64 / 1_000.0)
+            .with("p999_ms", h.percentile_us(99.9) as f64 / 1_000.0)
+    }
+
+    /// Stable JSON shape (all values derived from integer virtual time).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("tasks", self.tasks)
+            .with("completed", self.completed)
+            .with("admission_wait", Self::hist_json(&self.admission_wait))
+            .with("link_wait", Self::hist_json(&self.link_wait))
+            .with("compute", Self::hist_json(&self.compute))
+            .with("preempt_stall", Self::hist_json(&self.preempt_stall))
+            .with("rescue_overhead", Self::hist_json(&self.rescue_overhead))
+            .with("total", Self::hist_json(&self.total))
+    }
+}
+
+/// Deadline-miss attribution: every missed frame blamed on exactly one
+/// dominant latency lane.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MissAttribution {
+    /// Missed frames attributed (Σ of the lanes below).
+    pub frames: u64,
+    /// Admission wait dominated.
+    pub admission: u64,
+    /// Link time dominated.
+    pub link: u64,
+    /// Compute time dominated.
+    pub compute: u64,
+    /// Preemption stall dominated.
+    pub preempt: u64,
+    /// Rescue overhead dominated.
+    pub rescue: u64,
+}
+
+impl MissAttribution {
+    /// Blame one missed frame on `c`.
+    pub fn blame(&mut self, c: MissComponent) {
+        self.frames += 1;
+        match c {
+            MissComponent::Admission => self.admission += 1,
+            MissComponent::Link => self.link += 1,
+            MissComponent::Compute => self.compute += 1,
+            MissComponent::Preempt => self.preempt += 1,
+            MissComponent::Rescue => self.rescue += 1,
+        }
+    }
+
+    /// Stable JSON shape.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("frames", self.frames)
+            .with("admission", self.admission)
+            .with("link", self.link)
+            .with("compute", self.compute)
+            .with("preempt", self.preempt)
+            .with("rescue", self.rescue)
+    }
+}
+
+/// Journal-derived statistics attached to `ScenarioMetrics` when tracing is
+/// on: per-class SLO histograms plus deadline-miss attribution. Everything
+/// here is derived from integer virtual time — it participates in the
+/// deterministic differential (unlike wall-clock blocks).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TraceStats {
+    /// Events in the run's journal.
+    pub events: u64,
+    /// Events dropped by the ring bound.
+    pub dropped: u64,
+    /// High-priority class decomposition.
+    pub hp: ClassLatency,
+    /// Low-priority class decomposition.
+    pub lp: ClassLatency,
+    /// Deadline-miss attribution (filled by the sim's finalize, which owns
+    /// the frame → task map).
+    pub miss: MissAttribution,
+}
+
+impl TraceStats {
+    /// Fold a journal's per-task decomposition into per-class histograms.
+    /// `miss` starts empty; the caller attributes frames via
+    /// [`MissAttribution::blame`].
+    pub fn build(journal: &TraceJournal, per_task: &BTreeMap<TaskId, TaskTrace>) -> TraceStats {
+        let mut stats = TraceStats {
+            events: journal.events.len() as u64,
+            dropped: journal.dropped,
+            ..TraceStats::default()
+        };
+        for t in per_task.values() {
+            match t.class {
+                Priority::High => stats.hp.record(&t.lat),
+                Priority::Low => stats.lp.record(&t.lat),
+            }
+        }
+        stats
+    }
+
+    /// Stable JSON shape for the `trace` block of `ScenarioMetrics`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("events", self.events)
+            .with("dropped", self.dropped)
+            .with("hp", self.hp.to_json())
+            .with("lp", self.lp.to_json())
+            .with("miss_attribution", self.miss.to_json())
+    }
+
+    /// Human-readable summary (`--trace-summary`, metrics text report).
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "flight recorder: {} events ({} dropped by the ring bound)",
+            self.events, self.dropped
+        );
+        let _ = writeln!(
+            out,
+            "{:<6} {:>7} {:>9} {:>10} {:>10} {:>10}",
+            "class", "tasks", "done", "p50_ms", "p99_ms", "p999_ms"
+        );
+        for (name, c) in [("hp", &self.hp), ("lp", &self.lp)] {
+            let _ = writeln!(
+                out,
+                "{:<6} {:>7} {:>9} {:>10.3} {:>10.3} {:>10.3}",
+                name,
+                c.tasks,
+                c.completed,
+                c.total.percentile_us(50.0) as f64 / 1_000.0,
+                c.total.percentile_us(99.0) as f64 / 1_000.0,
+                c.total.percentile_us(99.9) as f64 / 1_000.0,
+            );
+            let _ = writeln!(
+                out,
+                "       p99 by lane: admission {:.3} ms, link {:.3} ms, compute {:.3} ms, \
+                 preempt {:.3} ms, rescue {:.3} ms",
+                c.admission_wait.percentile_us(99.0) as f64 / 1_000.0,
+                c.link_wait.percentile_us(99.0) as f64 / 1_000.0,
+                c.compute.percentile_us(99.0) as f64 / 1_000.0,
+                c.preempt_stall.percentile_us(99.0) as f64 / 1_000.0,
+                c.rescue_overhead.percentile_us(99.0) as f64 / 1_000.0,
+            );
+        }
+        let m = &self.miss;
+        let _ = writeln!(
+            out,
+            "deadline-miss attribution: {} frames — admission {}, link {}, compute {}, \
+             preempt {}, rescue {}",
+            m.frames, m.admission, m.link, m.compute, m.preempt, m.rescue
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: u64, kind: TraceEventKind, task: u64) -> TraceEvent {
+        TraceEvent::new(SimTime(at), kind).task(TaskId(task))
+    }
+
+    #[test]
+    fn ranks_follow_declaration_order() {
+        for (i, k) in TraceEventKind::ALL.iter().enumerate() {
+            assert_eq!(k.rank() as usize, i);
+        }
+    }
+
+    #[test]
+    fn take_run_isolates_runs_and_sorts_canonically() {
+        let a = begin_run();
+        let b = begin_run();
+        // Emit out of time order, interleaved across runs.
+        emit(a, ev(20, TraceEventKind::Place, 1));
+        emit(b, ev(5, TraceEventKind::Admit, 9).class(Priority::Low));
+        emit(a, ev(10, TraceEventKind::Admit, 1).class(Priority::High));
+        emit(a, ev(20, TraceEventKind::Preempt, 1));
+        let ja = take_run(a);
+        assert_eq!(ja.dropped, 0);
+        let kinds: Vec<_> = ja.events.iter().map(|e| e.kind).collect();
+        // Canonical: time first, then same-instant rank (Preempt < Place).
+        assert_eq!(
+            kinds,
+            vec![TraceEventKind::Admit, TraceEventKind::Preempt, TraceEventKind::Place]
+        );
+        let jb = take_run(b);
+        assert_eq!(jb.events.len(), 1, "run b's event survived run a's take");
+        assert_eq!(jb.events[0].task, Some(TaskId(9)));
+    }
+
+    #[test]
+    fn ring_bound_drops_newest_and_counts() {
+        let run = begin_run();
+        let old = RING_CAP.load(Ordering::Relaxed);
+        // The bound applies to the whole unflushed thread ring, so flush
+        // first to start from an empty ring.
+        flush_thread();
+        set_ring_capacity(2);
+        emit(run, ev(1, TraceEventKind::Admit, 1));
+        emit(run, ev(2, TraceEventKind::Place, 1));
+        emit(run, ev(3, TraceEventKind::Complete, 1));
+        set_ring_capacity(old);
+        let j = take_run(run);
+        assert_eq!(j.events.len(), 2);
+        assert_eq!(j.dropped, 1, "third event dropped, not stored");
+    }
+
+    #[test]
+    fn decompose_splits_the_latency_lanes() {
+        let t = TaskId(7);
+        let events = vec![
+            TraceEvent::new(SimTime(100), TraceEventKind::Admit).task(t).class(Priority::Low),
+            TraceEvent::new(SimTime(150), TraceEventKind::Place).task(t).device(DeviceId(2)),
+            TraceEvent::new(SimTime(150), TraceEventKind::TransferStart).task(t),
+            TraceEvent::new(SimTime(190), TraceEventKind::TransferEnd).task(t),
+            TraceEvent::new(SimTime(200), TraceEventKind::Preempt)
+                .task(t)
+                .cause(Cause::PreemptedBy(TaskId(8))),
+            TraceEvent::new(SimTime(260), TraceEventKind::Place).task(t).device(DeviceId(3)),
+            TraceEvent::new(SimTime(300), TraceEventKind::ExecStart).task(t),
+            TraceEvent::new(SimTime(420), TraceEventKind::ExecEnd).task(t),
+            TraceEvent::new(SimTime(420), TraceEventKind::Complete).task(t),
+        ];
+        let per_task = decompose(&events);
+        let lat = per_task[&t].lat;
+        assert_eq!(per_task[&t].class, Priority::Low);
+        assert_eq!(lat.admission_wait_us, 50);
+        assert_eq!(lat.link_wait_us, 40);
+        assert_eq!(lat.preempt_stall_us, 60);
+        assert_eq!(lat.compute_us, 120);
+        assert_eq!(lat.rescue_overhead_us, 0);
+        assert_eq!(lat.total_us, 320);
+        assert!(lat.completed);
+    }
+
+    #[test]
+    fn decompose_evict_rescue_and_never_placed() {
+        let a = TaskId(1);
+        let b = TaskId(2);
+        let events = vec![
+            TraceEvent::new(SimTime(0), TraceEventKind::Admit).task(a).class(Priority::Low),
+            TraceEvent::new(SimTime(10), TraceEventKind::Place).task(a),
+            TraceEvent::new(SimTime(50), TraceEventKind::Evict)
+                .task(a)
+                .cause(Cause::DeviceDown(DeviceId(0))),
+            TraceEvent::new(SimTime(80), TraceEventKind::Rescue).task(a).device(DeviceId(1)),
+            TraceEvent::new(SimTime(200), TraceEventKind::Fail)
+                .task(a)
+                .cause(Cause::Failed(FailReason::Violated)),
+            // b is admitted and fails without ever being placed: its whole
+            // life is admission wait.
+            TraceEvent::new(SimTime(0), TraceEventKind::Admit).task(b).class(Priority::High),
+            TraceEvent::new(SimTime(70), TraceEventKind::Fail)
+                .task(b)
+                .cause(Cause::Failed(FailReason::NoResources)),
+        ];
+        let per_task = decompose(&events);
+        assert_eq!(per_task[&a].lat.rescue_overhead_us, 30);
+        assert!(!per_task[&a].lat.completed);
+        assert_eq!(per_task[&b].lat.admission_wait_us, 70);
+        assert_eq!(per_task[&b].lat.dominant(), MissComponent::Admission);
+    }
+
+    #[test]
+    fn dominant_breaks_ties_in_lane_order() {
+        let mut lat = TaskLatency { link_wait_us: 5, compute_us: 5, ..TaskLatency::default() };
+        assert_eq!(lat.dominant(), MissComponent::Link, "earlier lane wins the tie");
+        lat.compute_us = 6;
+        assert_eq!(lat.dominant(), MissComponent::Compute);
+        assert_eq!(TaskLatency::default().dominant(), MissComponent::Admission);
+    }
+
+    #[test]
+    fn stats_fold_and_attribution_serialise() {
+        let t = TaskId(3);
+        let journal = TraceJournal {
+            events: vec![
+                TraceEvent::new(SimTime(0), TraceEventKind::Admit).task(t).class(Priority::High),
+                TraceEvent::new(SimTime(1_000), TraceEventKind::Place).task(t),
+                TraceEvent::new(SimTime(5_000), TraceEventKind::Complete).task(t),
+            ],
+            dropped: 2,
+        };
+        let per_task = decompose(&journal.events);
+        let mut stats = TraceStats::build(&journal, &per_task);
+        stats.miss.blame(MissComponent::Link);
+        assert_eq!(stats.events, 3);
+        assert_eq!(stats.dropped, 2);
+        assert_eq!(stats.hp.tasks, 1);
+        assert_eq!(stats.hp.completed, 1);
+        assert_eq!(stats.lp.tasks, 0);
+        let j = stats.to_json();
+        assert_eq!(j.get("events").and_then(Json::as_f64), Some(3.0));
+        let hp = j.get("hp").expect("hp block");
+        assert!(hp.get("total").and_then(|t| t.get("p99_ms")).is_some());
+        assert_eq!(
+            j.get("miss_attribution").and_then(|m| m.get("link")).and_then(Json::as_f64),
+            Some(1.0)
+        );
+        let text = stats.render_text();
+        assert!(text.contains("deadline-miss attribution: 1 frames"));
+        assert!(text.contains("flight recorder: 3 events"));
+    }
+}

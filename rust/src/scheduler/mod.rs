@@ -53,6 +53,11 @@ pub struct PreemptionReport {
     pub victim_was_running: bool,
     /// Reallocation attempt result (Table 3).
     pub reallocation: Option<LpPlacement>,
+    /// Whether the victim was terminally failed by this preemption (it
+    /// could neither be reallocated nor requeued). Distinguishes the two
+    /// `reallocation == None` outcomes — a requeued stealer/rescue victim
+    /// vs a `FailReason::Preempted` death — for the flight recorder.
+    pub victim_failed: bool,
     /// Wall-clock time of the reallocation search (component of the
     /// paper's Fig 9b "reallocation time").
     pub realloc_search: std::time::Duration,

@@ -147,6 +147,7 @@ pub fn preempt_and_retry_at(
                 victim: victim_id,
                 victim_cores,
                 victim_was_running,
+                victim_failed: reallocation.is_none(),
                 reallocation,
                 realloc_search,
             }),

@@ -275,7 +275,7 @@ pub fn relocate_hp(
     // same transaction.
     let CandidatePlan { mut plan, payload: (dev, victim), .. } = chosen;
     let preemption = victim.map(|(victim_id, victim_cores, victim_was_running)| {
-        let (reallocation, realloc_search) = match disposal {
+        let (reallocation, victim_failed, realloc_search) = match disposal {
             VictimPolicy::Reallocate { reallocate } => {
                 let t0 = Instant::now();
                 let realloc = if reallocate {
@@ -293,14 +293,17 @@ pub fn relocate_hp(
                 if realloc.is_none() {
                     plan.stage_fail(victim_id, FailReason::Preempted, now);
                 }
-                (realloc, t0.elapsed())
+                let failed = realloc.is_none();
+                (realloc, failed, t0.elapsed())
             }
-            VictimPolicy::Requeue => (None, std::time::Duration::ZERO),
+            // A requeued victim lives on in the stealer queue.
+            VictimPolicy::Requeue => (None, false, std::time::Duration::ZERO),
         };
         PreemptionReport {
             victim: victim_id,
             victim_cores,
             victim_was_running,
+            victim_failed,
             reallocation,
             realloc_search,
         }

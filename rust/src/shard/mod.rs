@@ -77,6 +77,7 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::net::LinkModel;
+use crate::obs;
 use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome};
 use crate::state::{DeviceHealth, TaskRecord};
 use crate::task::{DeviceId, FailReason, FrameId, LpRequest, RequestId, TaskId, Window};
@@ -211,6 +212,11 @@ pub struct ControlPlane<P: Policy> {
     /// re-sharding threshold (hysteresis counter).
     skew_streak: u32,
     broker: BrokerStats,
+    /// Flight-recorder run id the simulator armed
+    /// ([`ControlSurface::set_trace_run`]). The plane's surface-local
+    /// transitions — cross-shard spills and device migrations — are the
+    /// only events the simulator cannot see from outside.
+    trace_run: Option<u64>,
 }
 
 impl<P: Policy> ControlPlane<P> {
@@ -260,6 +266,15 @@ impl<P: Policy> ControlPlane<P> {
             last_epoch: SimTime::ZERO,
             skew_streak: 0,
             broker: BrokerStats::default(),
+            trace_run: None,
+        }
+    }
+
+    /// Record one surface-local flight-recorder event (no-op unless the
+    /// simulator armed tracing for this run).
+    fn trace(&self, ev: obs::TraceEvent) {
+        if let Some(run) = self.trace_run {
+            obs::emit(run, ev);
         }
     }
 
@@ -408,6 +423,13 @@ impl<P: Policy> ControlPlane<P> {
         self.shards[to].detector.record_update(d, heard);
         self.home[d.0 as usize] = to;
         self.broker.devices_migrated += 1;
+        // Migrations only fire inside `run_epoch`, after it stamped
+        // `last_epoch` with the epoch instant — the event time is exact.
+        self.trace(
+            obs::TraceEvent::new(self.last_epoch, obs::TraceEventKind::Migrate)
+                .device(d)
+                .cause(obs::Cause::Migrated { from, to }),
+        );
     }
 
     /// Hysteresis-gated re-sharding: when the hot/cold demand ratio stays
@@ -567,6 +589,13 @@ impl<P: Policy> ControlPlane<P> {
                 self.request_home.insert(rid, sib);
                 self.spill.requests_spilled += 1;
                 self.spill.tasks_spilled += out.placements.len() as u64;
+                for p in &out.placements {
+                    self.trace(
+                        obs::TraceEvent::new(sib_t, obs::TraceEventKind::Spill)
+                            .task(p.task)
+                            .cause(obs::Cause::Spilled { from: h, to: sib }),
+                    );
+                }
                 let outcome = LpOutcome {
                     placements: out.placements,
                     unallocated: out.unallocated,
@@ -903,6 +932,10 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
 
     fn broker_stats(&self) -> BrokerStats {
         self.broker
+    }
+
+    fn set_trace_run(&mut self, run: Option<u64>) {
+        self.trace_run = run;
     }
 
     fn fingerprint(&self) -> String {

@@ -29,6 +29,7 @@ use crate::coordinator::{
 use crate::device::{execute_in_window, ExecOutcome, ExecutionModel};
 use crate::fidelity::VariantId;
 use crate::metrics::ScenarioMetrics;
+use crate::obs::{self, Cause, TaskLatency, TraceEvent, TraceEventKind, TraceJournal, TraceStats};
 use crate::pipeline::{FrameRecord, StartSchedule};
 use crate::resources::SlotKind;
 use crate::scheduler::{HpRescue, LpPlacement, PatsScheduler, Policy, RescueOutcome};
@@ -94,6 +95,10 @@ pub struct SimResult {
     pub elapsed: std::time::Duration,
     /// Virtual time at which the last event resolved.
     pub virtual_end: SimTime,
+    /// The flight-recorder journal, when tracing was armed for this run
+    /// (`None` otherwise). Canonically ordered: bit-identical across
+    /// engines and shard counts.
+    pub trace: Option<TraceJournal>,
 }
 
 /// Run a scenario with the policy selected by `cfg.policy` / `cfg.preemption`.
@@ -197,7 +202,12 @@ pub fn run_with_surface_dynamic<S: ControlSurface>(
         EngineKind::Parallel => sim.drain_batched(),
     };
     sim.finalize(trace);
-    let result = SimResult { metrics: sim.metrics, elapsed: wall0.elapsed(), virtual_end };
+    let result = SimResult {
+        metrics: sim.metrics,
+        elapsed: wall0.elapsed(),
+        virtual_end,
+        trace: sim.trace_journal,
+    };
     (result, sim.surface)
 }
 
@@ -230,6 +240,12 @@ struct Sim<S: ControlSurface> {
     /// draining at spawn time (counted as lost-to-churn, not scheduled
     /// failures).
     skipped_frames: HashSet<usize>,
+    /// Flight-recorder run id, captured once at construction when the
+    /// recorder is armed. Every emission site is gated on this `Option`,
+    /// so a disarmed run never touches the recorder.
+    trace_run: Option<u64>,
+    /// The run's journal, extracted by `finalize`.
+    trace_journal: Option<TraceJournal>,
     metrics: ScenarioMetrics,
 }
 
@@ -243,6 +259,12 @@ impl<S: ControlSurface> Sim<S> {
         let exec = ExecutionModel::new(&cfg);
         let rng = Rng::seed_from_u64(cfg.seed);
         let devices = cfg.devices;
+        let trace_run = obs::enabled().then(obs::begin_run);
+        let mut surface = surface;
+        if trace_run.is_some() {
+            obs::set_ring_capacity(cfg.obs.ring_capacity);
+            surface.set_trace_run(trace_run);
+        }
         Sim {
             cfg,
             surface,
@@ -260,7 +282,17 @@ impl<S: ControlSurface> Sim<S> {
             physically_down: vec![false; devices],
             draining: vec![false; devices],
             skipped_frames: HashSet::new(),
+            trace_run,
+            trace_journal: None,
             metrics: ScenarioMetrics::new(label),
+        }
+    }
+
+    /// Record one flight-recorder event (no-op unless tracing was armed at
+    /// construction).
+    fn trace(&self, ev: TraceEvent) {
+        if let Some(run) = self.trace_run {
+            obs::emit(run, ev);
         }
     }
 
@@ -371,9 +403,11 @@ impl<S: ControlSurface> Sim<S> {
             self.dispatch_event(ev.kind, now);
         }
         // Barrier: fold this thread's phase totals into the global report
-        // before the simulation result is assembled.
+        // before the simulation result is assembled. The flight recorder
+        // flushes at the same barrier.
         drop(drain_scope);
         profiler::flush_thread();
+        obs::flush_thread();
         now
     }
 
@@ -483,9 +517,13 @@ impl<S: ControlSurface> Sim<S> {
             }
         }
         // Barrier: fold this thread's phase totals into the global report
-        // (worker threads flush inside the sweep closures).
+        // (worker threads flush inside the sweep closures). The flight
+        // recorder flushes here too; it has nothing thread-local to lose in
+        // the workers — every emission happens on this thread (decisions
+        // are applied serially) or router-side between sweeps.
         drop(drain_scope);
         profiler::flush_thread();
+        obs::flush_thread();
         now
     }
 
@@ -531,7 +569,7 @@ impl<S: ControlSurface> Sim<S> {
     /// then replay the simulator-side effects serially in event order.
     fn hp_batch(&mut self, batch: &[(usize, SimTime)]) {
         let mut jobs: Vec<HpSweepJob> = Vec::with_capacity(batch.len());
-        let mut meta: Vec<usize> = Vec::with_capacity(batch.len());
+        let mut meta: Vec<(usize, SimTime)> = Vec::with_capacity(batch.len());
         for &(frame_idx, at) in batch {
             let (frame_id, device) = {
                 let f = &self.frames[frame_idx];
@@ -546,25 +584,31 @@ impl<S: ControlSurface> Sim<S> {
             }
             self.metrics.hp_generated += 1;
             jobs.push(HpSweepJob { frame: frame_id, source: device, now: at });
-            meta.push(frame_idx);
+            meta.push((frame_idx, at));
         }
         if jobs.is_empty() {
             return;
         }
         let decisions = self.surface.hp_sweep(&jobs);
         debug_assert_eq!(decisions.len(), meta.len(), "one decision per sweep job");
-        for (d, &frame_idx) in decisions.iter().zip(&meta) {
-            self.apply_hp_decision(d, frame_idx);
+        for (d, &(frame_idx, at)) in decisions.iter().zip(&meta) {
+            self.apply_hp_decision(d, frame_idx, at);
         }
     }
 
     /// Replay the simulator-side effects of one swept HP decision —
     /// the body of [`Sim::on_hp_request`] after its `handle_hp_request`
     /// call, with registry reads replaced by the decision-time captures
-    /// (the sweep already performed the no-window `fail_task`).
-    fn apply_hp_decision(&mut self, d: &HpSweepDecision, frame_idx: usize) {
+    /// (the sweep already performed the no-window `fail_task`). `at` is the
+    /// request's arrival instant (the serial engine's `now`).
+    fn apply_hp_decision(&mut self, d: &HpSweepDecision, frame_idx: usize, at: SimTime) {
         let task = d.task;
         self.task_frame.insert(task, frame_idx);
+        self.trace(
+            TraceEvent::new(at, TraceEventKind::Admit)
+                .task(task)
+                .class(Priority::High),
+        );
         let outcome = &d.outcome;
         self.metrics.requeued_via_mirror += outcome.requeued_via_mirror;
         let ms = outcome.search.as_secs_f64() * 1_000.0;
@@ -575,13 +619,24 @@ impl<S: ControlSurface> Sim<S> {
                 .add(report.realloc_search.as_secs_f64() * 1_000.0);
             self.metrics
                 .record_preemption(report.victim_cores, report.reallocation.is_some());
+            self.trace(
+                TraceEvent::new(d.decision_t, TraceEventKind::Preempt)
+                    .task(report.victim)
+                    .cause(Cause::PreemptedBy(task)),
+            );
             if let Some(p) = report.reallocation.clone() {
                 let variant = d.realloc_variant.unwrap_or_default();
                 if variant.is_degraded() {
                     self.metrics.degraded_victim_realloc += 1;
                 }
                 self.metrics.record_core_alloc(p.cores, p.offloaded);
-                self.schedule_lp_placement_with(&p, variant);
+                self.schedule_lp_placement_with(&p, variant, d.decision_t);
+            } else if report.victim_failed {
+                self.trace(
+                    TraceEvent::new(d.decision_t, TraceEventKind::Fail)
+                        .task(report.victim)
+                        .cause(Cause::Failed(FailReason::Preempted)),
+                );
             }
         } else {
             self.metrics.hp_alloc_ms.add(ms);
@@ -593,8 +648,18 @@ impl<S: ControlSurface> Sim<S> {
                     .insert(task, outcome.preemption.is_some());
                 let gen = self.bump_gen(task);
                 let variant = d.variant;
+                self.trace(
+                    TraceEvent::new(d.decision_t, TraceEventKind::Place)
+                        .task(task)
+                        .device(self.frames[frame_idx].device),
+                );
                 if variant.is_degraded() {
                     self.metrics.degraded_hp_admission += 1;
+                    self.trace(
+                        TraceEvent::new(d.decision_t, TraceEventKind::Degrade)
+                            .task(task)
+                            .variant(variant),
+                    );
                 }
                 let hp_factor = self.cfg.fidelity.catalog.hp_variant(variant).time_factor;
                 let actual = self.exec.sample_hp_at(hp_factor, &mut self.rng);
@@ -610,6 +675,11 @@ impl<S: ControlSurface> Sim<S> {
             }
             None => {
                 self.metrics.hp_failed_alloc += 1;
+                self.trace(
+                    TraceEvent::new(at, TraceEventKind::Fail)
+                        .task(task)
+                        .cause(Cause::Failed(FailReason::NoResources)),
+                );
                 self.frames[frame_idx].on_hp_result(false);
             }
         }
@@ -619,7 +689,7 @@ impl<S: ControlSurface> Sim<S> {
     /// [`Sim::hp_batch`]).
     fn lp_batch(&mut self, batch: &[(usize, SimTime)]) {
         let mut jobs: Vec<LpSweepJob> = Vec::with_capacity(batch.len());
-        let mut meta: Vec<usize> = Vec::with_capacity(batch.len());
+        let mut meta: Vec<(usize, SimTime)> = Vec::with_capacity(batch.len());
         for &(frame_idx, at) in batch {
             let (frame_id, device, n, deadline) = {
                 let f = &self.frames[frame_idx];
@@ -633,23 +703,24 @@ impl<S: ControlSurface> Sim<S> {
             self.metrics.lp_generated += n as u64;
             self.metrics.lp_sets_total += 1;
             jobs.push(LpSweepJob { frame: frame_id, source: device, n, deadline, now: at });
-            meta.push(frame_idx);
+            meta.push((frame_idx, at));
         }
         if jobs.is_empty() {
             return;
         }
         let decisions = self.surface.lp_request_sweep(&jobs);
         debug_assert_eq!(decisions.len(), meta.len(), "one decision per sweep job");
-        for (d, &frame_idx) in decisions.iter().zip(&meta) {
-            self.apply_lp_decision(d, frame_idx);
+        for (d, &(frame_idx, at)) in decisions.iter().zip(&meta) {
+            self.apply_lp_decision(d, frame_idx, at);
         }
     }
 
     /// Replay the simulator-side effects of one swept LP decision — the
     /// body of [`Sim::on_lp_request`] after its `handle_lp_request` call
     /// (the sweep already failed the unallocated tasks, in the order the
-    /// serial engine fails them).
-    fn apply_lp_decision(&mut self, d: &LpSweepDecision, frame_idx: usize) {
+    /// serial engine fails them). `at` is the request's arrival instant
+    /// (the serial engine's `now`).
+    fn apply_lp_decision(&mut self, d: &LpSweepDecision, frame_idx: usize, at: SimTime) {
         // Index loop: re-fetching the request per task (n ≤ 4) keeps the
         // registry borrow disjoint from the `task_frame` write without
         // cloning the task list on every admission.
@@ -657,6 +728,11 @@ impl<S: ControlSurface> Sim<S> {
         for i in 0..n_tasks {
             let t = self.surface.request(d.rid).expect("request just registered").tasks[i];
             self.task_frame.insert(t, frame_idx);
+            self.trace(
+                TraceEvent::new(at, TraceEventKind::Admit)
+                    .task(t)
+                    .class(Priority::Low),
+            );
         }
         self.metrics
             .lp_alloc_ms
@@ -671,7 +747,14 @@ impl<S: ControlSurface> Sim<S> {
                 self.metrics.degraded_lp_admission += 1;
             }
             self.metrics.record_core_alloc(p.cores, p.offloaded);
-            self.schedule_lp_placement_with(p, variant);
+            self.schedule_lp_placement_with(p, variant, d.decision_t);
+        }
+        for &t in &d.outcome.unallocated {
+            self.trace(
+                TraceEvent::new(at, TraceEventKind::Fail)
+                    .task(t)
+                    .cause(Cause::Failed(FailReason::NoResources)),
+            );
         }
     }
 
@@ -747,7 +830,12 @@ impl<S: ControlSurface> Sim<S> {
             if self.task_variant(rescue.task).is_degraded() {
                 self.metrics.degraded_rescue += 1;
             }
-            self.schedule_hp_rescue(&rescue);
+            self.trace(
+                TraceEvent::new(now, TraceEventKind::Evict)
+                    .task(rescue.task)
+                    .cause(Cause::DeviceDown(device)),
+            );
+            self.schedule_hp_rescue(&rescue, now);
         }
         for p in outcome.lp_rescued {
             self.metrics.lp_orphaned += 1;
@@ -755,8 +843,22 @@ impl<S: ControlSurface> Sim<S> {
             if self.task_variant(p.task).is_degraded() {
                 self.metrics.degraded_rescue += 1;
             }
+            self.trace(
+                TraceEvent::new(now, TraceEventKind::Evict)
+                    .task(p.task)
+                    .cause(Cause::DeviceDown(device)),
+            );
             self.metrics.record_core_alloc(p.cores, p.offloaded);
-            self.schedule_lp_placement(&p);
+            self.schedule_lp_placement(&p, now);
+        }
+        for &t in &outcome.lp_requeued {
+            // Requeued orphans re-enter a steal queue: their lifecycle
+            // resumes at the next steal's Place (or ends at finalize).
+            self.trace(
+                TraceEvent::new(now, TraceEventKind::Evict)
+                    .task(t)
+                    .cause(Cause::DeviceDown(device)),
+            );
         }
         self.metrics.lp_orphaned += outcome.lp_requeued.len() as u64;
         self.metrics.lp_requeued_churn += outcome.lp_requeued.len() as u64;
@@ -765,6 +867,16 @@ impl<S: ControlSurface> Sim<S> {
         // planning layer — a candidate plan whose eviction would not make
         // room is dropped, so there are no phantom evictions to account.
         for (task, priority) in outcome.lost {
+            self.trace(
+                TraceEvent::new(now, TraceEventKind::Evict)
+                    .task(task)
+                    .cause(Cause::DeviceDown(device)),
+            );
+            self.trace(
+                TraceEvent::new(now, TraceEventKind::Fail)
+                    .task(task)
+                    .cause(Cause::Failed(FailReason::DeviceLost)),
+            );
             match priority {
                 Priority::High => {
                     self.metrics.hp_orphaned += 1;
@@ -784,7 +896,13 @@ impl<S: ControlSurface> Sim<S> {
 
     /// Sample reality for a relocated high-priority orphan and schedule its
     /// resolution (mirrors the fresh-allocation path in `on_hp_request`).
-    fn schedule_hp_rescue(&mut self, rescue: &HpRescue) {
+    /// `now` is the failure-detection instant the rescue committed at.
+    fn schedule_hp_rescue(&mut self, rescue: &HpRescue, now: SimTime) {
+        self.trace(
+            TraceEvent::new(now, TraceEventKind::Rescue)
+                .task(rescue.task)
+                .device(rescue.device),
+        );
         self.hp_used_preemption
             .insert(rescue.task, rescue.preemption.is_some());
         if let Some(report) = &rescue.preemption {
@@ -793,12 +911,23 @@ impl<S: ControlSurface> Sim<S> {
                 .add(report.realloc_search.as_secs_f64() * 1_000.0);
             self.metrics
                 .record_preemption(report.victim_cores, report.reallocation.is_some());
+            self.trace(
+                TraceEvent::new(now, TraceEventKind::Preempt)
+                    .task(report.victim)
+                    .cause(Cause::PreemptedBy(rescue.task)),
+            );
             if let Some(p) = report.reallocation.clone() {
                 if self.task_variant(p.task).is_degraded() {
                     self.metrics.degraded_victim_realloc += 1;
                 }
                 self.metrics.record_core_alloc(p.cores, p.offloaded);
-                self.schedule_lp_placement(&p);
+                self.schedule_lp_placement(&p, now);
+            } else if report.victim_failed {
+                self.trace(
+                    TraceEvent::new(now, TraceEventKind::Fail)
+                        .task(report.victim)
+                        .cause(Cause::Failed(FailReason::Preempted)),
+                );
             }
         }
         let gen = self.bump_gen(rescue.task);
@@ -829,7 +958,7 @@ impl<S: ControlSurface> Sim<S> {
             let placements = self.surface.poll(device, now);
             for p in placements {
                 self.metrics.record_core_alloc(p.cores, p.offloaded);
-                self.schedule_lp_placement(&p);
+                self.schedule_lp_placement(&p, now);
             }
         }
         if let Some(iv) = self.surface.poll_interval() {
@@ -868,9 +997,14 @@ impl<S: ControlSurface> Sim<S> {
             return;
         }
         self.metrics.hp_generated += 1;
-        let (task, _decision_t, outcome) =
+        let (task, decision_t, outcome) =
             self.surface.handle_hp_request(frame_id, device, now);
         self.task_frame.insert(task, frame_idx);
+        self.trace(
+            TraceEvent::new(now, TraceEventKind::Admit)
+                .task(task)
+                .class(Priority::High),
+        );
         // Decentral-stealer preemption victims whose source died earlier
         // route to the controller-side mirror queue; the outcome carries
         // the count (the last mirror route that used to go unmetered).
@@ -885,12 +1019,23 @@ impl<S: ControlSurface> Sim<S> {
                 .add(report.realloc_search.as_secs_f64() * 1_000.0);
             self.metrics
                 .record_preemption(report.victim_cores, report.reallocation.is_some());
+            self.trace(
+                TraceEvent::new(decision_t, TraceEventKind::Preempt)
+                    .task(report.victim)
+                    .cause(Cause::PreemptedBy(task)),
+            );
             if let Some(p) = report.reallocation.clone() {
                 if self.task_variant(p.task).is_degraded() {
                     self.metrics.degraded_victim_realloc += 1;
                 }
                 self.metrics.record_core_alloc(p.cores, p.offloaded);
-                self.schedule_lp_placement(&p);
+                self.schedule_lp_placement(&p, decision_t);
+            } else if report.victim_failed {
+                self.trace(
+                    TraceEvent::new(decision_t, TraceEventKind::Fail)
+                        .task(report.victim)
+                        .cause(Cause::Failed(FailReason::Preempted)),
+                );
             }
         } else {
             self.metrics.hp_alloc_ms.add(ms);
@@ -902,8 +1047,18 @@ impl<S: ControlSurface> Sim<S> {
                     .insert(task, outcome.preemption.is_some());
                 let gen = self.bump_gen(task);
                 let variant = self.task_variant(task);
+                self.trace(
+                    TraceEvent::new(decision_t, TraceEventKind::Place)
+                        .task(task)
+                        .device(device),
+                );
                 if variant.is_degraded() {
                     self.metrics.degraded_hp_admission += 1;
+                    self.trace(
+                        TraceEvent::new(decision_t, TraceEventKind::Degrade)
+                            .task(task)
+                            .variant(variant),
+                    );
                 }
                 let hp_factor = self.cfg.fidelity.catalog.hp_variant(variant).time_factor;
                 let actual = self.exec.sample_hp_at(hp_factor, &mut self.rng);
@@ -920,6 +1075,11 @@ impl<S: ControlSurface> Sim<S> {
             None => {
                 self.metrics.hp_failed_alloc += 1;
                 self.surface.fail_task(task, FailReason::NoResources, now);
+                self.trace(
+                    TraceEvent::new(now, TraceEventKind::Fail)
+                        .task(task)
+                        .cause(Cause::Failed(FailReason::NoResources)),
+                );
                 self.frames[frame_idx].on_hp_result(false);
             }
         }
@@ -939,7 +1099,7 @@ impl<S: ControlSurface> Sim<S> {
         debug_assert!(n > 0);
         self.metrics.lp_generated += n as u64;
         self.metrics.lp_sets_total += 1;
-        let (rid, _decision_t, outcome) =
+        let (rid, decision_t, outcome) =
             self.surface.handle_lp_request(frame_id, device, n, deadline, now);
         // Index loop: see `apply_lp_decision` — avoids cloning the task
         // list just to appease the borrow checker.
@@ -947,6 +1107,11 @@ impl<S: ControlSurface> Sim<S> {
         for i in 0..n_tasks {
             let t = self.surface.request(rid).unwrap().tasks[i];
             self.task_frame.insert(t, frame_idx);
+            self.trace(
+                TraceEvent::new(now, TraceEventKind::Admit)
+                    .task(t)
+                    .class(Priority::Low),
+            );
         }
         self.metrics
             .lp_alloc_ms
@@ -959,10 +1124,15 @@ impl<S: ControlSurface> Sim<S> {
                 self.metrics.degraded_lp_admission += 1;
             }
             self.metrics.record_core_alloc(p.cores, p.offloaded);
-            self.schedule_lp_placement(p);
+            self.schedule_lp_placement(p, decision_t);
         }
         for t in outcome.unallocated {
             self.surface.fail_task(t, FailReason::NoResources, now);
+            self.trace(
+                TraceEvent::new(now, TraceEventKind::Fail)
+                    .task(t)
+                    .cause(Cause::Failed(FailReason::NoResources)),
+            );
             // Frame status is derived from the registry at finalize time.
         }
     }
@@ -971,14 +1141,27 @@ impl<S: ControlSurface> Sim<S> {
     /// reading the committed model variant live from the registry (serial
     /// engine and non-batched paths; the batched engine supplies the
     /// decision-time capture via [`Sim::schedule_lp_placement_with`]).
-    fn schedule_lp_placement(&mut self, p: &LpPlacement) {
+    fn schedule_lp_placement(&mut self, p: &LpPlacement, t: SimTime) {
         let variant = self.task_variant(p.task);
-        self.schedule_lp_placement_with(p, variant);
+        self.schedule_lp_placement_with(p, variant, t);
     }
 
     /// Sample reality for one LP placement committed at `variant` and
-    /// schedule its resolution.
-    fn schedule_lp_placement_with(&mut self, p: &LpPlacement, variant: VariantId) {
+    /// schedule its resolution. `t` is the commit (decision) instant the
+    /// flight recorder stamps the placement with.
+    fn schedule_lp_placement_with(&mut self, p: &LpPlacement, variant: VariantId, t: SimTime) {
+        self.trace(
+            TraceEvent::new(t, TraceEventKind::Place)
+                .task(p.task)
+                .device(p.device),
+        );
+        if variant.is_degraded() {
+            self.trace(
+                TraceEvent::new(t, TraceEventKind::Degrade)
+                    .task(p.task)
+                    .variant(variant),
+            );
+        }
         let gen = self.bump_gen(p.task);
         // The committed model variant sizes both the transfer (smaller
         // input) and the execution (faster model); factors are 1.0 — and
@@ -986,7 +1169,10 @@ impl<S: ControlSurface> Sim<S> {
         let vdef = *self.cfg.fidelity.catalog.lp_variant(variant);
         // Offloaded input: the transfer slot starts on schedule but its
         // actual duration is jittered — late arrival eats the window pad.
-        // The transfer rides the hosting shard's link partition.
+        // The transfer rides the hosting shard's link partition. The
+        // recorder run id is copied out so the closure keeps its disjoint
+        // field captures (a `self` method call would borrow all of it).
+        let trace_run = self.trace_run;
         let input_arrival = p.input_ready.map(|slot_end| {
             let link = self.surface.link_model_of(p.task);
             let slot_dur = link
@@ -996,6 +1182,17 @@ impl<S: ControlSurface> Sim<S> {
             let actual = link
                 .sample_transfer(&self.cfg, SlotKind::InputTransfer, &mut self.rng)
                 .scale(vdef.transfer_factor);
+            if let Some(run) = trace_run {
+                obs::emit(
+                    run,
+                    TraceEvent::new(slot_start, TraceEventKind::TransferStart).task(p.task),
+                );
+                obs::emit(
+                    run,
+                    TraceEvent::new(slot_start + actual, TraceEventKind::TransferEnd)
+                        .task(p.task),
+                );
+            }
             slot_start + actual
         });
         let actual = self.exec.sample_lp_at(p.cores, vdef.time_factor, &mut self.rng);
@@ -1029,11 +1226,25 @@ impl<S: ControlSurface> Sim<S> {
             }
         }
         let is_hp = rec.spec.priority == crate::task::Priority::High;
+        // Execution is only known real at resolve time (stale events bailed
+        // above): reconstruct the exec span from the live allocation.
+        let exec_span = rec.allocation.as_ref().map(|a| (a.window.start, a.device));
+        if let Some((start, dev)) = exec_span {
+            self.trace(TraceEvent::new(start, TraceEventKind::ExecStart).task(task).device(dev));
+            self.trace(TraceEvent::new(now, TraceEventKind::ExecEnd).task(task).device(dev));
+        }
+        self.trace(if completed {
+            TraceEvent::new(now, TraceEventKind::Complete).task(task)
+        } else {
+            TraceEvent::new(now, TraceEventKind::Fail)
+                .task(task)
+                .cause(Cause::Failed(FailReason::Violated))
+        });
 
         let new_placements = self.surface.handle_state_update(task, completed, now);
         for p in new_placements {
             self.metrics.record_core_alloc(p.cores, p.offloaded);
-            self.schedule_lp_placement(&p);
+            self.schedule_lp_placement(&p, now);
         }
 
         let frame_idx = self.task_frame.get(&task).copied();
@@ -1076,6 +1287,13 @@ impl<S: ControlSurface> Sim<S> {
         let mut lingering: Vec<TaskId> = self.surface.nonterminal_task_ids();
         lingering.sort_unstable();
         for t in lingering {
+            // The sentinel terminal instant marks the task censored in the
+            // latency decomposition (`obs::decompose`).
+            self.trace(
+                TraceEvent::new(SimTime::MAX, TraceEventKind::Fail)
+                    .task(t)
+                    .cause(Cause::Failed(FailReason::NoResources)),
+            );
             self.surface.fail_task(t, FailReason::NoResources, SimTime::MAX);
         }
 
@@ -1132,6 +1350,17 @@ impl<S: ControlSurface> Sim<S> {
             }
         }
 
+        // ---- flight-recorder fold ---------------------------------------
+        // Extract the run's journal before the frame loop so each missed
+        // frame can be blamed on its tasks' dominant latency lane.
+        let mut traced = self.trace_run.map(|run| {
+            obs::flush_thread();
+            let journal = obs::take_run(run);
+            let per_task = obs::decompose(&journal.events);
+            let stats = TraceStats::build(&journal, &per_task);
+            (journal, per_task, stats)
+        });
+
         // ---- frame outcomes (Fig 2) -------------------------------------
         // Perf: invert task_frame once (frame → tasks) instead of scanning
         // the whole map per frame (which is O(frames × tasks)).
@@ -1147,7 +1376,23 @@ impl<S: ControlSurface> Sim<S> {
                 self.metrics.frames_lost_churn += 1;
                 continue;
             }
-            let hp_ok = match f.outcome(&self.surface, &by_frame[f.id.0 as usize]) {
+            let outcome = f.outcome(&self.surface, &by_frame[f.id.0 as usize]);
+            // Deadline-miss attribution: blame the missed frame on the
+            // dominant lane of its tasks' summed decompositions (a frame
+            // with no recorded components blames admission — its tasks
+            // never got anywhere).
+            if let Some((_, per_task, stats)) = traced.as_mut() {
+                if !matches!(outcome, FrameOutcome::Complete) {
+                    let mut sum = TaskLatency::default();
+                    for t in &by_frame[f.id.0 as usize] {
+                        if let Some(tt) = per_task.get(t) {
+                            sum.accumulate(&tt.lat);
+                        }
+                    }
+                    stats.miss.blame(sum.dominant());
+                }
+            }
+            let hp_ok = match outcome {
                 FrameOutcome::Complete => true,
                 FrameOutcome::FailedHp => {
                     self.metrics.frames_failed_hp += 1;
@@ -1200,10 +1445,18 @@ impl<S: ControlSurface> Sim<S> {
         self.metrics.broker_leases_clamped = broker.leases_clamped;
         self.metrics.devices_migrated = broker.devices_migrated;
         self.metrics.lp_spill_avoided = broker.lp_spill_avoided;
+
+        // ---- flight-recorder publication -------------------------------
+        if let Some((journal, _, stats)) = traced {
+            obs::record_run(&self.metrics.label, &journal, stats.render_text());
+            self.metrics.trace = Some(stats);
+            self.trace_journal = Some(journal);
+        }
     }
 }
 
 /// Final outcome of one frame, derived from the task registry.
+#[derive(Clone, Copy)]
 enum FrameOutcome {
     Complete,
     FailedHp,

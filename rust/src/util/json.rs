@@ -74,6 +74,27 @@ impl Json {
         }
     }
 
+    /// Recursively drop every object entry whose key is in `deny`, at any
+    /// nesting depth (arrays are traversed too). Used to make wall-clock
+    /// exclusion structural in `ScenarioMetrics::deterministic_json`: a
+    /// denied key is stripped wherever a future refactor moves it, so it
+    /// cannot silently re-enter the differential harness.
+    pub fn without_keys(self, deny: &[&str]) -> Json {
+        match self {
+            Json::Obj(entries) => Json::Obj(
+                entries
+                    .into_iter()
+                    .filter(|(k, _)| !deny.contains(&k.as_str()))
+                    .map(|(k, v)| (k, v.without_keys(deny)))
+                    .collect(),
+            ),
+            Json::Arr(items) => {
+                Json::Arr(items.into_iter().map(|v| v.without_keys(deny)).collect())
+            }
+            other => other,
+        }
+    }
+
     /// Serialize compactly.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
@@ -263,5 +284,28 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::obj().to_string_pretty(), "{}");
         assert_eq!(Json::Arr(vec![]).to_string_compact(), "[]");
+    }
+
+    #[test]
+    fn without_keys_strips_at_every_depth() {
+        let j = Json::obj()
+            .with("latency_ms", 12.5f64)
+            .with("keep", 1u64)
+            .with("nested", Json::obj().with("latency_ms", 3.0f64).with("inner", 2u64))
+            .with(
+                "list",
+                vec![Json::obj().with("latency_ms", 9.0f64).with("x", 1u64)],
+            );
+        let clean = j.without_keys(&["latency_ms"]);
+        assert_eq!(
+            clean.to_string_compact(),
+            r#"{"keep":1,"nested":{"inner":2},"list":[{"x":1}]}"#
+        );
+    }
+
+    #[test]
+    fn without_keys_leaves_scalars_alone() {
+        assert_eq!(Json::Num(1.0).without_keys(&["a"]), Json::Num(1.0));
+        assert_eq!(Json::Str("a".into()).without_keys(&["a"]), Json::Str("a".into()));
     }
 }

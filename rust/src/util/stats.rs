@@ -152,6 +152,98 @@ impl Histogram {
     }
 }
 
+/// Number of buckets in a [`LogHistogram`]: one for exact zeros plus one
+/// per possible bit-length of a `u64` sample.
+pub const LOG_HIST_BUCKETS: usize = 65;
+
+/// Log-bucketed (power-of-two) histogram over non-negative integer samples
+/// (the flight recorder records virtual microseconds).
+///
+/// Bucket 0 holds exact zeros; bucket `i` (1..=64) holds values of
+/// bit-length `i`, i.e. `[2^(i-1), 2^i - 1]`. Merging is per-bucket
+/// addition and a percentile reports its bucket's upper bound, so counts
+/// and percentiles are **integer-deterministic**: independent of sample
+/// order, merge order, and thread interleaving — safe for the differential
+/// harness to byte-compare.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    buckets: [u64; LOG_HIST_BUCKETS],
+    count: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { buckets: [0; LOG_HIST_BUCKETS], count: 0 }
+    }
+}
+
+impl LogHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros()) as usize
+        }
+    }
+
+    /// Upper bound of bucket `i` (what its percentile reports).
+    fn upper_bound(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            64 => u64::MAX,
+            _ => (1u64 << i) - 1,
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket(v)] += 1;
+        self.count += 1;
+    }
+
+    /// Merge another histogram into this one (per-bucket addition).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The `q`-th percentile (`q` in (0, 100]) as the upper bound of the
+    /// bucket where the cumulative count first reaches `ceil(q/100 · n)`.
+    /// Returns 0 when empty.
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q / 100.0) * self.count as f64).ceil() as u64;
+        let target = target.clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return Self::upper_bound(i);
+            }
+        }
+        Self::upper_bound(LOG_HIST_BUCKETS - 1)
+    }
+}
+
 /// Convenience: percentage `part / whole * 100`, 0.0 when whole == 0.
 pub fn pct(part: u64, whole: u64) -> f64 {
     if whole == 0 {
@@ -236,5 +328,58 @@ mod tests {
     fn pct_helper() {
         assert_eq!(pct(1, 4), 25.0);
         assert_eq!(pct(5, 0), 0.0);
+    }
+
+    #[test]
+    fn log_histogram_bucketing() {
+        let mut h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile_us(50.0), 0);
+        for v in [0, 1, 2, 3, 4, 7, 8, u64::MAX] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        // Zeros sit in their own bucket; 1 in bucket 1; {2,3} in bucket 2;
+        // {4,7} in bucket 3; 8 in bucket 4; MAX in bucket 64.
+        assert_eq!(h.percentile_us(12.5), 0);
+        assert_eq!(h.percentile_us(25.0), 1);
+        assert_eq!(h.percentile_us(50.0), 3);
+        assert_eq!(h.percentile_us(75.0), 7);
+        assert_eq!(h.percentile_us(100.0), u64::MAX);
+    }
+
+    #[test]
+    fn log_histogram_percentiles_report_upper_bounds() {
+        let mut h = LogHistogram::new();
+        for _ in 0..999 {
+            h.record(100); // bucket 7: [64, 127]
+        }
+        h.record(1_000_000); // bucket 20
+        assert_eq!(h.percentile_us(50.0), 127);
+        assert_eq!(h.percentile_us(99.9), 127);
+        assert_eq!(h.percentile_us(100.0), (1u64 << 20) - 1);
+    }
+
+    #[test]
+    fn log_histogram_merge_is_order_independent() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in [5, 500, 50_000] {
+            a.record(v);
+        }
+        for v in [1, 9] {
+            b.record(v);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.count(), 5);
+        let mut direct = LogHistogram::new();
+        for v in [5, 500, 50_000, 1, 9] {
+            direct.record(v);
+        }
+        assert_eq!(ab, direct);
     }
 }

@@ -508,7 +508,8 @@ impl Policy for Workstealer {
                 victim: victim_id,
                 victim_cores,
                 victim_was_running,
-                reallocation: None, // decided later, when/if re-stolen
+                victim_failed: false, // requeued: lives on in the steal queue
+                reallocation: None,   // decided later, when/if re-stolen
                 realloc_search: std::time::Duration::ZERO,
             }),
             requeued_via_mirror: via_mirror as u64,

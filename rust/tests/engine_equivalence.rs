@@ -26,6 +26,13 @@
 //!   off). With `on` the whole suite runs with the phase profiler
 //!   collecting — profiling must never change a simulated bit (also
 //!   asserted head-to-head in the dedicated test below).
+//! * `PATS_EQ_TRACE`: `on` | `off` (unset = leave the default, which is
+//!   off). With `on` the whole suite runs with the task-lifecycle flight
+//!   recorder armed: every engine-vs-engine and repeat-vs-repeat
+//!   comparison then also diffs the journal-derived `trace` block of the
+//!   deterministic JSON bit-for-bit — the trace-level differential.
+//!   (The head-to-head journal equality tests live in `rust/tests/trace.rs`,
+//!   which owns the process-wide toggle in default runs.)
 
 use pats::config::{EngineKind, SystemConfig};
 use pats::coordinator::{ControlSurface, Controller};
@@ -93,6 +100,19 @@ fn profile_from_env() -> Option<bool> {
     }
 }
 
+/// `PATS_EQ_TRACE`: same convention as [`index_from_env`]. The environment
+/// is constant for the whole process, so applying it per run never tears an
+/// engine-vs-engine pair (unlike flipping the toggle from a concurrent
+/// test, which `rust/tests/trace.rs` serialises behind a mutex).
+fn trace_from_env() -> Option<bool> {
+    match std::env::var("PATS_EQ_TRACE").as_deref() {
+        Ok("on") | Ok("1") => Some(true),
+        Ok("off") | Ok("0") => Some(false),
+        Err(_) => None,
+        Ok(other) => panic!("PATS_EQ_TRACE must be on|off, got {other:?}"),
+    }
+}
+
 /// The policies the differential runs sweep: the paper's scheduler and the
 /// polling central workstealer (a second, structurally different decision
 /// path: deferred placement + poll ticks).
@@ -127,7 +147,10 @@ fn run_surface<P: Policy + Send>(
     if let Some(on) = profile_from_env() {
         pats::util::profiler::enable(on);
     }
-    if cfg.sharding.shards == 1 {
+    if let Some(on) = trace_from_env() {
+        pats::obs::enable(on);
+    }
+    let out = if cfg.sharding.shards == 1 {
         // The production dispatcher drives the raw controller at one shard;
         // the harness does the same so both engines cover it.
         let controller = Controller::new(cfg.clone(), factory(&cfg));
@@ -146,7 +169,13 @@ fn run_surface<P: Policy + Send>(
             fingerprint: ControlSurface::fingerprint(&p),
             link_slots: p.link_slot_count(),
         }
+    };
+    if trace_from_env() == Some(true) {
+        // Traced runs retain their journal for CLI export; drain it so a
+        // whole traced suite does not accumulate every journal in memory.
+        let _ = pats::obs::take_recorded();
     }
+    out
 }
 
 fn run_pol(

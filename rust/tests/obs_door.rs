@@ -1,0 +1,82 @@
+//! Grep-enforced exhaustiveness door for the flight recorder: adding a
+//! `TraceEventKind` variant must extend the JSONL serializer, the Chrome
+//! exporter, and the lifecycle integration tests in the same change. The
+//! compiler already forces the two `match`es to be total — these checks
+//! additionally forbid satisfying it with a wildcard arm and keep the
+//! integration suite exercising every variant by name.
+
+use std::fs;
+
+/// Variant identifiers, mirrored from `TraceEventKind::ALL`. Deliberately a
+/// string list: this test greps source text, and a new variant that is not
+/// added here trips the count check against `ALL` below.
+const VARIANTS: &[&str] = &[
+    "Admit",
+    "Spill",
+    "Preempt",
+    "Evict",
+    "Place",
+    "Rescue",
+    "Degrade",
+    "Migrate",
+    "TransferStart",
+    "TransferEnd",
+    "ExecStart",
+    "ExecEnd",
+    "Complete",
+    "Fail",
+];
+
+fn repo_file(rel: &str) -> String {
+    let path = format!("{}/{}", env!("CARGO_MANIFEST_DIR"), rel);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+#[test]
+fn variant_list_matches_the_enum() {
+    assert_eq!(
+        VARIANTS.len(),
+        pats::obs::TraceEventKind::ALL.len(),
+        "update VARIANTS when TraceEventKind grows"
+    );
+    for (name, kind) in VARIANTS.iter().zip(pats::obs::TraceEventKind::ALL) {
+        assert_eq!(format!("{kind:?}"), *name, "VARIANTS must mirror ALL's order");
+    }
+}
+
+#[test]
+fn every_variant_is_matched_in_both_exporters_without_wildcards() {
+    let src = repo_file("rust/src/obs/export.rs");
+    let split = src
+        .find("fn chrome_cat")
+        .expect("export.rs lost its chrome_cat exporter");
+    let (jsonl_half, chrome_half) = src.split_at(split);
+    for v in VARIANTS {
+        let needle = format!("TraceEventKind::{v}");
+        assert!(
+            jsonl_half.contains(&needle),
+            "{needle} is not handled by the JSONL serializer (kind_str)"
+        );
+        assert!(
+            chrome_half.contains(&needle),
+            "{needle} is not handled by the Chrome exporter (chrome_cat)"
+        );
+    }
+    assert!(
+        !src.contains("_ =>"),
+        "export.rs must match trace kinds exhaustively, not via a wildcard arm"
+    );
+}
+
+#[test]
+fn every_variant_is_exercised_by_the_lifecycle_tests() {
+    let src = repo_file("rust/tests/trace.rs");
+    for v in VARIANTS {
+        let needle = format!("TraceEventKind::{v}");
+        assert!(
+            src.contains(&needle),
+            "{needle} never appears in rust/tests/trace.rs — extend the \
+             lifecycle automaton for the new variant"
+        );
+    }
+}

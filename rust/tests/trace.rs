@@ -1,0 +1,370 @@
+//! Flight-recorder integration tests: journal bit-identity across engines
+//! and shard counts, lifecycle-automaton conservation against
+//! `ScenarioMetrics`, the tracing-off byte-identity guarantee, and export
+//! smoke. Every `TraceEventKind` variant is exercised by name here — the
+//! `obs_door` test greps this file to keep that exhaustive.
+//!
+//! The recorder toggle (`pats::obs::enable`) is process-wide, so every test
+//! in this binary serialises behind one mutex: a toggle flipped mid-run
+//! from a sibling test could otherwise tear a traced/untraced comparison.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use pats::config::{EngineKind, SystemConfig};
+use pats::coordinator::Controller;
+use pats::metrics::ScenarioMetrics;
+use pats::obs::{self, decompose, export, TraceEvent, TraceEventKind, TraceJournal};
+use pats::scheduler::PatsScheduler;
+use pats::shard::ControlPlane;
+use pats::sim::{run_scenario_dynamic, run_with_surface_dynamic};
+use pats::task::{DeviceId, Priority, TaskId};
+use pats::time::SimTime;
+use pats::trace::{ChurnEvent, ChurnScript, Distribution, Trace};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn seed_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.frames = 80; // 20 cycles over the paper's 4-device topology
+    cfg
+}
+
+fn churn_script() -> ChurnScript {
+    ChurnScript::from_events(vec![
+        (SimTime::from_secs_f64(30.0), ChurnEvent::Crash(DeviceId(1))),
+        (SimTime::from_secs_f64(45.0), ChurnEvent::Drain(DeviceId(2))),
+        (SimTime::from_secs_f64(60.0), ChurnEvent::DegradeLink { factor: 0.7 }),
+        (SimTime::from_secs_f64(90.0), ChurnEvent::RestoreLink),
+    ])
+}
+
+/// Run one scenario with the recorder armed; returns the metrics and the
+/// extracted journal. Callers must hold the GATE.
+fn traced_run(
+    cfg: &SystemConfig,
+    trace: &Trace,
+    churn: &ChurnScript,
+    label: &str,
+) -> (ScenarioMetrics, TraceJournal) {
+    obs::enable(true);
+    let res = run_scenario_dynamic(cfg, trace, churn, label);
+    obs::enable(false);
+    let _ = obs::take_recorded();
+    (res.metrics, res.trace.expect("armed run must extract a journal"))
+}
+
+/// Validate one journal as a set of lifecycle-automaton runs: per task (in
+/// canonical order) admission comes first, placement precedes execution,
+/// transfers only happen to placed tasks, and exactly one terminal event
+/// closes the life. Returns per-task (class, completed).
+///
+/// Transfers are reserved-link artifacts: a late input can arrive after
+/// the window was already violated, and a preempted task's reserved
+/// transfer still occupies the link after the victim terminally failed —
+/// so transfer events are exempt from the nothing-after-terminal rule.
+fn check_lifecycle(journal: &TraceJournal) -> BTreeMap<TaskId, (Priority, bool)> {
+    let mut per_task: BTreeMap<TaskId, Vec<&TraceEvent>> = BTreeMap::new();
+    for ev in &journal.events {
+        match ev.task {
+            Some(t) => per_task.entry(t).or_default().push(ev),
+            None => assert_eq!(
+                ev.kind,
+                TraceEventKind::Migrate,
+                "Migrate is the only task-less event"
+            ),
+        }
+    }
+    let mut out = BTreeMap::new();
+    for (task, evs) in &per_task {
+        let mut admitted = false;
+        let mut class = None;
+        let mut placed = 0usize;
+        let mut transfer_open = false;
+        let mut exec_open = false;
+        let mut exec_seen = false;
+        let mut terminal: Option<bool> = None;
+        for ev in evs {
+            match ev.kind {
+                TraceEventKind::Admit => {
+                    assert!(!admitted, "{task:?} admitted twice");
+                    assert!(terminal.is_none(), "{task:?}: Admit after terminal");
+                    admitted = true;
+                    class = ev.class;
+                }
+                TraceEventKind::Spill => {
+                    assert!(admitted, "{task:?}: Spill before Admit");
+                    assert!(terminal.is_none(), "{task:?}: Spill after terminal");
+                    assert_eq!(placed, 0, "{task:?}: spilled after a placement");
+                }
+                TraceEventKind::Place | TraceEventKind::Rescue => {
+                    assert!(admitted, "{task:?}: placed before Admit");
+                    assert!(terminal.is_none(), "{task:?}: placed after terminal");
+                    placed += 1;
+                }
+                TraceEventKind::Degrade => {
+                    assert!(placed > 0, "{task:?}: Degrade without a placement");
+                }
+                TraceEventKind::Preempt | TraceEventKind::Evict => {
+                    // Evict also hits queued (never-placed) workstealer
+                    // orphans, so only admission is required.
+                    assert!(admitted, "{task:?}: stalled before Admit");
+                    assert!(terminal.is_none(), "{task:?}: stalled after terminal");
+                }
+                TraceEventKind::TransferStart => {
+                    assert!(placed > 0, "{task:?}: transfer without a placement");
+                    assert!(!transfer_open, "{task:?}: nested transfer");
+                    transfer_open = true;
+                }
+                TraceEventKind::TransferEnd => {
+                    assert!(transfer_open, "{task:?}: TransferEnd without start");
+                    transfer_open = false;
+                }
+                TraceEventKind::ExecStart => {
+                    assert!(placed > 0, "{task:?}: ExecStart without a placement");
+                    assert!(!exec_seen, "{task:?}: executed twice");
+                    assert!(terminal.is_none(), "{task:?}: ExecStart after terminal");
+                    exec_open = true;
+                    exec_seen = true;
+                }
+                TraceEventKind::ExecEnd => {
+                    assert!(exec_open, "{task:?}: ExecEnd without start");
+                    exec_open = false;
+                }
+                TraceEventKind::Complete => {
+                    assert!(exec_seen, "{task:?}: Complete without execution");
+                    assert!(terminal.is_none(), "{task:?}: two terminal events");
+                    terminal = Some(true);
+                }
+                TraceEventKind::Fail => {
+                    assert!(admitted, "{task:?}: Fail before Admit");
+                    assert!(terminal.is_none(), "{task:?}: two terminal events");
+                    terminal = Some(false);
+                }
+                TraceEventKind::Migrate => {
+                    unreachable!("{task:?}: Migrate carries no task")
+                }
+            }
+        }
+        assert!(admitted, "{task:?} has events but no Admit");
+        let completed =
+            terminal.unwrap_or_else(|| panic!("{task:?} has no terminal event"));
+        let class = class.unwrap_or_else(|| panic!("{task:?}: Admit without a class"));
+        out.insert(*task, (class, completed));
+    }
+    out
+}
+
+#[test]
+fn tracing_off_output_is_byte_identical_to_untraced() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = seed_cfg();
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+    obs::enable(false);
+    let off = run_scenario_dynamic(&cfg, &trace, &ChurnScript::none(), "seed");
+    assert!(off.trace.is_none(), "disarmed run must not build a journal");
+    let (on_metrics, journal) = traced_run(&cfg, &trace, &ChurnScript::none(), "seed");
+    assert!(!journal.events.is_empty());
+    // Tracing adds the `trace` block and nothing else: stripped of it, the
+    // traced run's deterministic JSON is byte-identical to the untraced
+    // run's, and the text report is a strict prefix extension.
+    assert_eq!(
+        off.metrics.deterministic_json().to_string_pretty(),
+        on_metrics.deterministic_json().without_keys(&["trace"]).to_string_pretty(),
+        "tracing perturbed a simulated counter"
+    );
+    assert!(off.metrics.trace.is_none());
+    assert!(on_metrics.trace.is_some());
+    assert!(
+        on_metrics.render_text().starts_with(&off.metrics.render_text()),
+        "tracing rewrote the text report instead of appending to it"
+    );
+}
+
+#[test]
+fn journals_are_bit_identical_across_engines_and_shard_counts() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg0 = seed_cfg();
+    let trace = Trace::generate(Distribution::Uniform, cfg0.devices, cfg0.frames, cfg0.seed);
+    let script = churn_script();
+    let mut journals: Vec<(String, TraceJournal)> = Vec::new();
+    for engine in [EngineKind::Serial, EngineKind::Parallel] {
+        for k in [1usize, 2, 4] {
+            let mut cfg = cfg0.clone();
+            cfg.sharding.engine = engine;
+            cfg.sharding.shards = k;
+            let (_, journal) = traced_run(&cfg, &trace, &script, "eq");
+            journals.push((format!("{engine}, shards={k}"), journal));
+        }
+    }
+    let (ref_ctx, reference) = &journals[0];
+    assert!(!reference.events.is_empty());
+    assert_eq!(reference.dropped, 0);
+    for (ctx, journal) in &journals[1..] {
+        assert_eq!(
+            reference, journal,
+            "journal of ({ctx}) differs from ({ref_ctx})"
+        );
+    }
+}
+
+#[test]
+fn one_shard_plane_journal_matches_the_raw_controller() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = seed_cfg();
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+    let script = churn_script();
+
+    obs::enable(true);
+    let controller = Controller::new(cfg.clone(), PatsScheduler::from_config(&cfg));
+    let (raw, _c) = run_with_surface_dynamic(&cfg, &trace, &script, "raw", controller);
+    let plane: ControlPlane<PatsScheduler> = ControlPlane::new(&cfg, PatsScheduler::from_config);
+    let (pl, _p) = run_with_surface_dynamic(&cfg, &trace, &script, "k1", plane);
+    obs::enable(false);
+    let _ = obs::take_recorded();
+
+    let raw_journal = raw.trace.expect("raw journal");
+    let plane_journal = pl.trace.expect("plane journal");
+    assert_eq!(raw_journal, plane_journal, "K=1 plane journal drifted from the raw controller");
+    // A 1-shard plane has no sibling to spill to and no rebalancer moves:
+    // the shard-only event kinds must be absent.
+    assert!(
+        !raw_journal
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, TraceEventKind::Spill | TraceEventKind::Migrate)),
+        "shard-only events in an unsharded journal"
+    );
+}
+
+#[test]
+fn lifecycle_conservation_on_the_seed_scenario() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = seed_cfg();
+    // Weighted-4 on the seed topology: the workload the sim suite already
+    // pins as reliably preemption-triggering, so the Preempt identity below
+    // is a real check and not vacuous.
+    let trace = Trace::generate(Distribution::Weighted(4), cfg.devices, cfg.frames, cfg.seed);
+    let (m, journal) = traced_run(&cfg, &trace, &ChurnScript::none(), "seed");
+    let lives = check_lifecycle(&journal);
+
+    let admitted_hp = lives.values().filter(|(c, _)| *c == Priority::High).count() as u64;
+    let admitted_lp = lives.values().filter(|(c, _)| *c == Priority::Low).count() as u64;
+    let done_hp = lives.values().filter(|&&(c, ok)| c == Priority::High && ok).count() as u64;
+    let done_lp = lives.values().filter(|&&(c, ok)| c == Priority::Low && ok).count() as u64;
+    assert_eq!(admitted_hp, m.hp_generated, "one Admit per generated HP task");
+    assert_eq!(admitted_lp, m.lp_generated, "one Admit per generated LP task");
+    assert_eq!(done_hp, m.hp_completed, "one Complete per completed HP task");
+    assert_eq!(done_lp, m.lp_completed, "one Complete per completed LP task");
+
+    let preempts =
+        journal.events.iter().filter(|e| e.kind == TraceEventKind::Preempt).count() as u64;
+    assert_eq!(preempts, m.preemptions, "one Preempt per committed preemption");
+    assert!(m.preemptions > 0, "the seed scenario must exercise preemption");
+
+    // The decomposition agrees with the raw automaton pass.
+    let per_task = decompose(&journal.events);
+    assert_eq!(per_task.len(), lives.len());
+    for (task, tt) in &per_task {
+        assert_eq!((tt.class, tt.lat.completed), lives[task]);
+    }
+
+    // The folded stats rode into ScenarioMetrics bit-exactly.
+    let stats = m.trace.as_ref().expect("trace stats attached");
+    assert_eq!(stats.events, journal.events.len() as u64);
+    assert_eq!(stats.dropped, journal.dropped);
+    assert_eq!(stats.hp.tasks, m.hp_generated);
+    assert_eq!(stats.lp.tasks, m.lp_generated);
+    assert_eq!(stats.hp.completed, m.hp_completed);
+    assert_eq!(stats.lp.completed, m.lp_completed);
+    // Every missed frame is blamed on exactly one dominant component.
+    assert_eq!(stats.miss.frames, m.frames_failed_hp + m.frames_failed_lp);
+    let lane_sum = stats.miss.admission
+        + stats.miss.link
+        + stats.miss.compute
+        + stats.miss.preempt
+        + stats.miss.rescue;
+    assert_eq!(stats.miss.frames, lane_sum);
+}
+
+#[test]
+fn lifecycle_conservation_under_churn() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = seed_cfg();
+    cfg.frames = 160;
+    let trace = Trace::generate(Distribution::Weighted(3), cfg.devices, cfg.frames, cfg.seed);
+    let (m, journal) = traced_run(&cfg, &trace, &churn_script(), "churn");
+    assert!(m.failures_detected > 0, "the script must actually kill a device");
+    let lives = check_lifecycle(&journal);
+
+    let admitted_hp = lives.values().filter(|(c, _)| *c == Priority::High).count() as u64;
+    let admitted_lp = lives.values().filter(|(c, _)| *c == Priority::Low).count() as u64;
+    assert_eq!(admitted_hp, m.hp_generated);
+    assert_eq!(admitted_lp, m.lp_generated);
+    let done_hp = lives.values().filter(|&&(c, ok)| c == Priority::High && ok).count() as u64;
+    let done_lp = lives.values().filter(|&&(c, ok)| c == Priority::Low && ok).count() as u64;
+    assert_eq!(done_hp, m.hp_completed);
+    assert_eq!(done_lp, m.lp_completed);
+
+    // One Evict per churn orphan, one Rescue per relocated HP orphan.
+    let evicts = journal.events.iter().filter(|e| e.kind == TraceEventKind::Evict).count() as u64;
+    assert_eq!(evicts, m.tasks_orphaned(), "one Evict per orphaned task");
+    let rescues =
+        journal.events.iter().filter(|e| e.kind == TraceEventKind::Rescue).count() as u64;
+    assert_eq!(rescues, m.hp_rescued, "one Rescue per relocated HP orphan");
+
+    let stats = m.trace.as_ref().expect("trace stats attached");
+    assert_eq!(stats.miss.frames, m.frames_failed_hp + m.frames_failed_lp);
+}
+
+#[test]
+fn export_round_trip_covers_the_recorded_runs() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = seed_cfg();
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+    obs::enable(true);
+    let res = run_scenario_dynamic(&cfg, &trace, &ChurnScript::none(), "export-seed");
+    obs::enable(false);
+    let runs = obs::take_recorded();
+    assert_eq!(runs.len(), 1, "finalize retains exactly one run");
+    assert_eq!(runs[0].label, "export-seed");
+    assert!(runs[0].summary.contains("deadline-miss attribution"));
+    let journal = res.trace.expect("journal");
+    assert_eq!(runs[0].journal, journal, "retained journal == extracted journal");
+
+    let jsonl = export::jsonl(&runs);
+    assert_eq!(jsonl.lines().count(), journal.events.len(), "one JSONL line per event");
+    assert!(jsonl.contains("\"ev\":\"admit\""));
+    let chrome = export::chrome(&runs);
+    assert!(chrome.starts_with("{\"traceEvents\":["));
+
+    let dir = std::env::temp_dir().join("pats_trace_export_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("out.json");
+    let (chrome_path, jsonl_path) =
+        export::write_files(path.to_str().unwrap(), &runs).unwrap();
+    assert!(std::fs::metadata(&chrome_path).unwrap().len() > 0);
+    assert!(std::fs::metadata(&jsonl_path).unwrap().len() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ring_bound_censors_but_never_corrupts() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = seed_cfg();
+    let trace = Trace::generate(Distribution::Uniform, cfg.devices, cfg.frames, cfg.seed);
+    let (_, full) = traced_run(&cfg, &trace, &ChurnScript::none(), "full");
+    cfg.obs.ring_capacity = 64; // far below the seed scenario's event count
+    let (m, bounded) = traced_run(&cfg, &trace, &ChurnScript::none(), "bounded");
+    // Drop-newest: every emission is either retained or counted in the
+    // dropped tally, never both and never lost — the bounded journal plus
+    // its tally reconstructs the unbounded event count exactly.
+    assert!(bounded.dropped > 0, "the tiny ring must overflow");
+    assert_eq!(
+        bounded.events.len() as u64 + bounded.dropped,
+        full.events.len() as u64,
+        "retained + dropped must equal the unbounded event count"
+    );
+    let stats = m.trace.as_ref().unwrap();
+    assert_eq!(stats.dropped, bounded.dropped);
+}
