@@ -41,6 +41,7 @@ test:
 test-engines:
 	PATS_EQ_SHARDS=1,2,4,8 PATS_EQ_ENGINE=both PATS_EQ_BROKER=off $(CARGO) test -q --test engine_equivalence
 	PATS_EQ_SHARDS=1,2,4,8 PATS_EQ_ENGINE=both PATS_EQ_BROKER=on $(CARGO) test -q --test engine_equivalence
+	PATS_EQ_SHARDS=1,2,4,8 PATS_EQ_ENGINE=both PATS_EQ_BROKER=off PATS_EQ_EXEC=auto $(CARGO) test -q --test engine_equivalence
 
 fmt:
 	$(CARGO) fmt --check
@@ -60,6 +61,7 @@ bench:
 	$(CARGO) bench --bench shards
 	$(CARGO) bench --bench fleet
 	$(CARGO) bench --bench obs
+	$(CARGO) bench --bench executor
 
 # Reduced-size smoke profile: same rows, CI-friendly sizes. The committed
 # BENCH_*.json baselines come from this target.
@@ -67,6 +69,7 @@ bench-smoke:
 	PATS_BENCH_SMOKE=1 $(CARGO) bench --bench shards
 	PATS_BENCH_SMOKE=1 $(CARGO) bench --bench fleet
 	PATS_BENCH_SMOKE=1 $(CARGO) bench --bench obs
+	PATS_BENCH_SMOKE=1 $(CARGO) bench --bench executor
 
 bench-build:
 	$(CARGO) bench --no-run

@@ -1,0 +1,200 @@
+//! Work-stealing executor benchmarks: the persistent pool
+//! (`[sharding] workers`) against the per-batch `std::thread::scope`
+//! spawn/join it replaces.
+//!
+//! Four claims are tracked across commits in `BENCH_executor.json`:
+//!
+//! * **Dispatch floor.** `pool_dispatch/*` vs `spawn_floor/*`: pushing a
+//!   batch of empty jobs through the parked pool vs spawning and joining
+//!   the same number of scoped OS threads — the fixed cost every sweep
+//!   barrier pays, which is the executor's whole reason to exist.
+//! * **Pooled sweep latency.** `sweep_pooled/*` vs `sweep_scoped/*`: the
+//!   same 1024-device `lp_sweep` decision batch with the pool armed vs
+//!   the historical scoped-thread path, at growing shard counts.
+//! * **Steal balance on skewed batches.** `skewed_jobs/*`: one batch
+//!   whose job costs are heavily skewed; thieves drain the long tail, so
+//!   wall clock should track total-work/workers, not the largest job
+//!   chain on one deque.
+//! * **Parallel candidate-plan search.** `rescue_serial` vs
+//!   `rescue_pooled`: a device failure whose high-priority orphan forces
+//!   a full top-K eviction-candidate search on a saturated fleet — the
+//!   nested fan-out path (`rescue::relocate_hp` through
+//!   `executor::current()`).
+
+use pats::bench::{bench_with_setup, section, smoke, write_json, BenchResult};
+use pats::config::{SystemConfig, WorkerCount};
+use pats::coordinator::ControlSurface;
+use pats::scheduler::PatsScheduler;
+use pats::shard::{ControlPlane, LpJob};
+use pats::task::{DeviceId, FrameId};
+use pats::time::SimTime;
+use pats::util::executor::{Executor, Job};
+
+fn plane_and_jobs(
+    devices: usize,
+    shards: usize,
+    workers: WorkerCount,
+) -> (ControlPlane<PatsScheduler>, Vec<Vec<LpJob>>) {
+    let mut cfg = SystemConfig::default();
+    cfg.devices = devices;
+    cfg.sharding.shards = shards;
+    cfg.sharding.workers = workers;
+    let plane = ControlPlane::new(&cfg, PatsScheduler::from_config);
+    let deadline = SimTime::ZERO + cfg.frame_deadline();
+    let mut jobs = vec![Vec::new(); shards];
+    for d in 0..devices as u32 {
+        jobs[plane.home_shard(DeviceId(d))].push(LpJob {
+            frame: FrameId(d as u64),
+            source: DeviceId(d),
+            n: 2,
+            deadline,
+            now: SimTime::ZERO,
+        });
+    }
+    (plane, jobs)
+}
+
+/// A plane on a saturated fleet with one allocated high-priority task on
+/// device 0: crashing device 0 forces the rescue relocation through the
+/// full top-K eviction-candidate search (every surviving device is busy).
+fn crash_fixture(
+    devices: usize,
+    workers: WorkerCount,
+) -> (ControlPlane<PatsScheduler>, SimTime) {
+    let (mut plane, jobs) = plane_and_jobs(devices, 1, workers);
+    // Two 2-task admissions per device fill the 4-core devices.
+    plane.lp_sweep(&jobs, false);
+    let deadline = SimTime::ZERO + SystemConfig::default().frame_deadline();
+    for d in 0..devices as u32 {
+        plane.handle_lp_request(FrameId(10_000 + d as u64), DeviceId(d), 2, deadline, SimTime::ZERO);
+    }
+    plane.handle_hp_request(FrameId(20_000), DeviceId(0), SimTime::ZERO);
+    (plane, SimTime::from_secs_f64(0.5))
+}
+
+/// Deterministic spin so skewed job costs are comparable across runs.
+fn spin(units: u64) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..units * 1_000 {
+        acc = acc.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(i);
+        std::hint::black_box(acc);
+    }
+    acc
+}
+
+fn show(results: &mut Vec<BenchResult>, r: BenchResult) {
+    println!("{}", r.render());
+    results.push(r);
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let devices = if smoke() { 256 } else { 1024 };
+    let iters = if smoke() { 3 } else { 8 };
+    let micro_iters = if smoke() { 10 } else { 50 };
+
+    section("dispatch floor: parked pool vs scoped spawn/join");
+    for &jobs_n in &[4usize, 16] {
+        let r = bench_with_setup(
+            &format!("spawn_floor/jobs={jobs_n}"),
+            1,
+            micro_iters,
+            || (),
+            |()| {
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..jobs_n)
+                        .map(|i| scope.spawn(move || std::hint::black_box(i)))
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+                })
+            },
+        );
+        show(&mut results, r);
+        let r = bench_with_setup(
+            &format!("pool_dispatch/jobs={jobs_n}/workers=4"),
+            1,
+            micro_iters,
+            || Executor::new(4),
+            |pool| {
+                let jobs: Vec<Job<'_>> = (0..jobs_n)
+                    .map(|i| -> Job<'_> {
+                        Box::new(move || {
+                            std::hint::black_box(i);
+                        })
+                    })
+                    .collect();
+                pool.run(jobs);
+            },
+        );
+        show(&mut results, r);
+    }
+
+    section("end-to-end decision sweep: scoped threads vs pooled workers");
+    for &k in &[2usize, 4, 8] {
+        let r = bench_with_setup(
+            &format!("sweep_scoped/devices={devices}/shards={k}"),
+            1,
+            iters,
+            || plane_and_jobs(devices, k, WorkerCount::Off),
+            |(mut plane, jobs)| plane.lp_sweep(&jobs, true).len(),
+        );
+        show(&mut results, r);
+        let r = bench_with_setup(
+            &format!("sweep_pooled/devices={devices}/shards={k}/workers={k}"),
+            1,
+            iters,
+            || plane_and_jobs(devices, k, WorkerCount::Fixed(k)),
+            |(mut plane, jobs)| plane.lp_sweep(&jobs, true).len(),
+        );
+        show(&mut results, r);
+    }
+
+    section("steal balance: heavily skewed job costs");
+    for &w in &[1usize, 4] {
+        let r = bench_with_setup(
+            &format!("skewed_jobs/workers={w}"),
+            1,
+            micro_iters,
+            || Executor::new(w),
+            |pool| {
+                // 1 giant + 63 small jobs: with thieves the small tail
+                // drains in parallel with the giant.
+                let jobs: Vec<Job<'_>> = (0..64)
+                    .map(|i| -> Job<'_> {
+                        let units = if i == 0 { 64 } else { 1 };
+                        Box::new(move || {
+                            std::hint::black_box(spin(units));
+                        })
+                    })
+                    .collect();
+                pool.run(jobs);
+            },
+        );
+        show(&mut results, r);
+    }
+
+    section("rescue candidate-plan search: serial vs pooled fan-out");
+    let rescue_devices = if smoke() { 16 } else { 48 };
+    let rescue_iters = if smoke() { 3 } else { 10 };
+    let r = bench_with_setup(
+        "rescue_serial",
+        1,
+        rescue_iters,
+        || crash_fixture(rescue_devices, WorkerCount::Off),
+        |(mut plane, now)| plane.handle_device_failure(DeviceId(0), now).hp_rescued.len(),
+    );
+    show(&mut results, r);
+    let r = bench_with_setup(
+        "rescue_pooled/workers=4",
+        1,
+        rescue_iters,
+        || crash_fixture(rescue_devices, WorkerCount::Fixed(4)),
+        |(mut plane, now)| plane.handle_device_failure(DeviceId(0), now).hp_rescued.len(),
+    );
+    show(&mut results, r);
+
+    match write_json("executor", &results) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write bench JSON: {e}"),
+    }
+}

@@ -217,6 +217,68 @@ impl std::fmt::Display for EngineKind {
     }
 }
 
+/// Worker-pool size for the persistent work-stealing executor
+/// (`sharding.workers`).
+///
+/// `Off` (the default) keeps the per-batch `std::thread::scope` sweep
+/// threads; `Auto`/`Fixed` spawn a long-lived pool once per
+/// [`crate::shard::ControlPlane`] and route the sweep doors and
+/// candidate-plan fan-outs through it. Every setting is bit-identical to
+/// `Off` — the executor changes where jobs run, never what they compute
+/// (proven by the `PATS_EQ_EXEC` axis in `rust/tests/engine_equivalence.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WorkerCount {
+    /// No persistent pool; sweeps spawn scoped threads per batch.
+    #[default]
+    Off,
+    /// One worker per available CPU.
+    Auto,
+    /// Exactly N workers (N ≥ 1).
+    Fixed(usize),
+}
+
+impl WorkerCount {
+    /// Parse a `sharding.workers` value: `"off"`, `"auto"`, or an integer
+    /// (0 = off, N ≥ 1 = fixed).
+    pub fn parse(v: &crate::util::toml::Value) -> Result<WorkerCount> {
+        if let Some(s) = v.as_str() {
+            return match s {
+                "off" => Ok(WorkerCount::Off),
+                "auto" => Ok(WorkerCount::Auto),
+                other => Err(Error::Config(format!(
+                    "unknown sharding.workers {other:?} (expected \"off\", \"auto\", or an integer)"
+                ))),
+            };
+        }
+        match v.as_i64() {
+            Some(0) => Ok(WorkerCount::Off),
+            Some(n) if n > 0 => Ok(WorkerCount::Fixed(n as usize)),
+            _ => Err(Error::Config(
+                "sharding.workers must be \"off\", \"auto\", or an integer >= 0".into(),
+            )),
+        }
+    }
+
+    /// The pool size to spawn, or `None` when the executor is off.
+    pub fn resolve(self) -> Option<usize> {
+        match self {
+            WorkerCount::Off => None,
+            WorkerCount::Auto => Some(crate::util::executor::auto_workers()),
+            WorkerCount::Fixed(n) => Some(n.max(1)),
+        }
+    }
+}
+
+impl std::fmt::Display for WorkerCount {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkerCount::Off => f.write_str("off"),
+            WorkerCount::Auto => f.write_str("auto"),
+            WorkerCount::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
 /// Epoch-based bandwidth-broker shaping (`[sharding.broker]`), consumed by
 /// [`crate::shard::ControlPlane::epoch`].
 ///
@@ -301,6 +363,15 @@ pub struct ShardingConfig {
     /// valid — and bit-identical — at any shard count, but only a
     /// multi-shard plane gains wall-clock parallelism from it.
     pub engine: EngineKind,
+    /// Persistent work-stealing executor pool size (`sharding.workers`).
+    /// Off by default: sweeps spawn scoped threads per batch. Any setting
+    /// is bit-identical to off.
+    pub workers: WorkerCount,
+    /// Capacity of the thread-local plan-scratch timeline pool
+    /// (`resources/pool.rs`). Long-lived executor workers touch every
+    /// shard, so sizing this to ≥ K keeps one pooled timeline per shard
+    /// resident per worker. Cache-only: any value is bit-identical.
+    pub pool_capacity: usize,
     /// Epoch-based bandwidth broker (`[sharding.broker]`).
     pub broker: BrokerConfig,
     /// Dynamic device re-sharding (`[sharding.rebalance]`).
@@ -314,6 +385,8 @@ impl Default for ShardingConfig {
             spill_fanout: 2,
             sweep_shards: vec![1, 2, 4, 8],
             engine: EngineKind::Serial,
+            workers: WorkerCount::Off,
+            pool_capacity: 8,
             broker: BrokerConfig::default(),
             rebalance: RebalanceConfig::default(),
         }
@@ -597,6 +670,8 @@ impl SystemConfig {
             "sharding.spill_fanout",
             "sharding.sweep_shards",
             "sharding.engine",
+            "sharding.workers",
+            "sharding.pool_capacity",
             "sharding.broker.enabled",
             "sharding.broker.floor",
             "sharding.rebalance.enabled",
@@ -882,6 +957,17 @@ impl SystemConfig {
         if let Some(v) = doc.get_str("sharding.engine") {
             cfg.sharding.engine = EngineKind::parse(v)?;
         }
+        if let Some(v) = doc.get("sharding.workers") {
+            cfg.sharding.workers = WorkerCount::parse(v)?;
+        }
+        if let Some(v) = doc.get_i64("sharding.pool_capacity") {
+            if v < 1 {
+                return Err(Error::Config(format!(
+                    "sharding.pool_capacity must be >= 1, got {v}"
+                )));
+            }
+            cfg.sharding.pool_capacity = v as usize;
+        }
         if let Some(v) = doc.get_bool("sharding.broker.enabled") {
             cfg.sharding.broker.enabled = v;
         }
@@ -1036,6 +1122,9 @@ impl SystemConfig {
             return Err(Error::Config(
                 "sharding.sweep_shards must be a non-empty list of positive shard counts".into(),
             ));
+        }
+        if sh.pool_capacity == 0 {
+            return Err(Error::Config("sharding.pool_capacity must be >= 1".into()));
         }
         if !(sh.broker.floor > 0.0 && sh.broker.floor <= 1.0) {
             // NaN fails both comparisons and is rejected here too. A zero
@@ -1431,6 +1520,39 @@ sweep_shards = [1, 4, 16]
         assert_eq!(c.sharding.engine, EngineKind::Parallel);
         let doc = crate::util::toml::Document::parse("[sharding]\nengine = \"warp\"").unwrap();
         assert!(SystemConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn workers_and_pool_capacity_parse_and_reject() {
+        // Defaults: executor off, pool capacity at the historical 8.
+        let c = SystemConfig::default();
+        assert_eq!(c.sharding.workers, WorkerCount::Off);
+        assert_eq!(c.sharding.pool_capacity, 8);
+        assert_eq!(WorkerCount::Off.resolve(), None);
+        assert_eq!(WorkerCount::Fixed(3).resolve(), Some(3));
+        assert!(WorkerCount::Auto.resolve().unwrap() >= 1);
+        for (snippet, want) in [
+            ("[sharding]\nworkers = \"auto\"", WorkerCount::Auto),
+            ("[sharding]\nworkers = \"off\"", WorkerCount::Off),
+            ("[sharding]\nworkers = 0", WorkerCount::Off),
+            ("[sharding]\nworkers = 6", WorkerCount::Fixed(6)),
+        ] {
+            let doc = crate::util::toml::Document::parse(snippet).unwrap();
+            let c = SystemConfig::from_document(&doc).unwrap();
+            assert_eq!(c.sharding.workers, want, "{snippet}");
+        }
+        let doc = crate::util::toml::Document::parse("[sharding]\npool_capacity = 32").unwrap();
+        let c = SystemConfig::from_document(&doc).unwrap();
+        assert_eq!(c.sharding.pool_capacity, 32);
+        for snippet in [
+            "[sharding]\nworkers = \"turbo\"",
+            "[sharding]\nworkers = -1",
+            "[sharding]\npool_capacity = 0",
+            "[sharding]\npool_capacity = -4",
+        ] {
+            let doc = crate::util::toml::Document::parse(snippet).unwrap();
+            assert!(SystemConfig::from_document(&doc).is_err(), "accepted {snippet:?}");
+        }
     }
 
     #[test]

@@ -350,6 +350,9 @@ pub struct Controller<P: Policy> {
 impl<P: Policy> Controller<P> {
     /// A fresh controller over an empty network.
     pub fn new(cfg: SystemConfig, policy: P) -> Controller<P> {
+        // Size the thread-local plan-scratch pool (a pure cache: any value
+        // is bit-identical; see `resources/pool.rs`).
+        crate::resources::pool::set_capacity(cfg.sharding.pool_capacity);
         let state = NetworkState::new(&cfg);
         let detector = FailureDetector::new(
             cfg.devices,

@@ -28,13 +28,32 @@
 //!   pool hit.
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::Timeline;
 
-/// Entries kept per thread. Candidate searches hold at most a handful of
-/// live plans at once (`RESCUE_TOP_K` + the shared plan), so a small cap
-/// bounds memory without hurting the hit rate.
-const POOL_CAP: usize = 8;
+/// Default entries kept per thread. Candidate searches hold at most a
+/// handful of live plans at once (`RESCUE_TOP_K` + the shared plan), so a
+/// small cap bounds memory without hurting the hit rate.
+const DEFAULT_POOL_CAP: usize = 8;
+
+/// Live capacity (`[sharding] pool_capacity`). Process-global like the
+/// profiler toggle: the pool is a pure cache, so a capacity change can
+/// never affect scheduling output — only the hit rate. The executor's
+/// long-lived workers touch every shard, so sizing this to ≥ K keeps one
+/// pooled timeline per shard resident per worker thread.
+static POOL_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_POOL_CAP);
+
+/// Set the per-thread pool capacity (clamped to ≥ 1). Called from the
+/// controller/plane constructors with `sharding.pool_capacity`.
+pub(crate) fn set_capacity(cap: usize) {
+    POOL_CAP.store(cap.max(1), Ordering::Relaxed);
+}
+
+/// Current per-thread pool capacity.
+pub(crate) fn capacity() -> usize {
+    POOL_CAP.load(Ordering::Relaxed)
+}
 
 thread_local! {
     static POOL: RefCell<Vec<(u64, u64, Timeline)>> = const { RefCell::new(Vec::new()) };
@@ -51,11 +70,12 @@ pub(crate) fn acquire(uid: u64, version: u64) -> Option<Timeline> {
 }
 
 /// Return a fully rolled-back scratch timeline to the pool. Oldest entries
-/// are evicted beyond [`POOL_CAP`].
+/// are evicted beyond the configured [`capacity`].
 pub(crate) fn release(uid: u64, version: u64, tl: Timeline) {
+    let cap = capacity();
     POOL.with(|p| {
         let mut pool = p.borrow_mut();
-        if pool.len() >= POOL_CAP {
+        while pool.len() >= cap {
             pool.remove(0);
         }
         pool.push((uid, version, tl));
@@ -83,16 +103,28 @@ mod tests {
     }
 
     #[test]
-    fn pool_is_bounded() {
-        for i in 0..(POOL_CAP as u64 + 5) {
+    fn pool_is_bounded_by_configured_capacity() {
+        let cap = capacity() as u64;
+        for i in 0..(cap + 5) {
             release(1000 + i, 0, Timeline::new());
         }
         // The oldest entries were evicted; the newest survive.
         assert!(acquire(1000, 0).is_none());
-        assert!(acquire(1000 + POOL_CAP as u64 + 4, 0).is_some());
+        assert!(acquire(1000 + cap + 4, 0).is_some());
         // Drain whatever remains so other tests see a clean pool.
-        for i in 0..(POOL_CAP as u64 + 5) {
+        for i in 0..(cap + 5) {
             let _ = acquire(1000 + i, 0);
         }
+        // Capacity is clamped to >= 1 and releases honour the live value.
+        // (Restore the default afterwards: the knob is process-global and
+        // other tests in this binary assume it.)
+        let before = capacity();
+        set_capacity(0);
+        assert_eq!(capacity(), 1);
+        release(2000, 0, Timeline::new());
+        release(2001, 0, Timeline::new());
+        assert!(acquire(2000, 0).is_none(), "cap 1 keeps only the newest");
+        assert!(acquire(2001, 0).is_some());
+        set_capacity(before);
     }
 }

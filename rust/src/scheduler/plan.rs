@@ -763,6 +763,31 @@ pub fn search_candidates<C: Copy, T>(
     best
 }
 
+/// The [`search_candidates`] selection rule applied to candidate plans
+/// that were already built: the executor fan-out stages every candidate
+/// concurrently (each one read-only against the committed state) and then
+/// picks the winner here. `built` must be in the same preference order
+/// `search_candidates` would have walked — the first plan at the eviction
+/// floor wins, otherwise the minimum cost with earlier candidates winning
+/// ties — so the serial and fan-out paths choose the identical plan.
+/// Losing plans are dropped here, rolling their scratch back untouched.
+pub fn select_candidate<T>(
+    built: Vec<Option<CandidatePlan<T>>>,
+    eviction_floor: u32,
+) -> Option<CandidatePlan<T>> {
+    let mut best: Option<CandidatePlan<T>> = None;
+    for cand in built.into_iter().flatten() {
+        if cand.cost.0 <= eviction_floor {
+            return Some(cand);
+        }
+        match &best {
+            Some(b) if b.cost <= cand.cost => {}
+            _ => best = Some(cand),
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1113,5 +1138,39 @@ mod tests {
         .unwrap();
         assert_eq!(picked.payload, 0);
         assert_eq!(built, 1, "floor short-circuit avoids losing builds");
+    }
+
+    /// The fan-out selection over pre-built plans must pick exactly what
+    /// the lazy serial search picks, across every rule: skipped
+    /// infeasibles, min-cost with order-stable ties, and the floor
+    /// short-circuit.
+    #[test]
+    fn select_candidate_agrees_with_search_candidates() {
+        let (_, st) = state();
+        let mk = |ev: u32, i: usize| {
+            Some(CandidatePlan {
+                plan: PlacementPlan::new(&st),
+                cost: (ev, SimTime::ZERO),
+                payload: i,
+            })
+        };
+        // Min-cost, earliest-in-order ties (floor 0 never reached).
+        let costs = [3u32, 1, 1, 2];
+        let serial =
+            search_candidates(&[0usize, 1, 2, 3], 0, |i| mk(costs[i], i)).unwrap();
+        let fanned = select_candidate(
+            costs.iter().enumerate().map(|(i, &ev)| mk(ev, i)).collect(),
+            0,
+        )
+        .unwrap();
+        assert_eq!(serial.payload, fanned.payload);
+        assert_eq!(fanned.payload, 1, "earliest min-cost candidate wins ties");
+        // Infeasible candidates are skipped; the first floor-reaching plan
+        // wins even when a cheaper-indexed feasible plan sits above floor.
+        let picked =
+            select_candidate(vec![None, mk(2, 1), mk(1, 2), mk(1, 3)], 1).unwrap();
+        assert_eq!(picked.payload, 2, "first plan at the floor wins");
+        // All infeasible: no winner.
+        assert!(select_candidate::<usize>(vec![None, None], 0).is_none());
     }
 }

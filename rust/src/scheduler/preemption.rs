@@ -28,6 +28,7 @@ use crate::scheduler::{high_priority, low_priority, PatsScheduler, PreemptionRep
 use crate::state::NetworkState;
 use crate::task::{FailReason, TaskId, Window};
 use crate::time::SimTime;
+use crate::util::executor;
 use crate::util::profiler::{self, Phase};
 
 /// How many candidate victims the plan search tries before giving up. The
@@ -103,57 +104,118 @@ pub fn preempt_and_retry_at(
     // later (possibly past a spike the reconstructed window overlaps). A
     // probe on the reconstructed window could wrongly discard a viable
     // candidate, so each candidate gets the exact staged retry instead.
-    for &(victim_id, victim_cores, victim_was_running) in
-        ordered.iter().take(MAX_VICTIM_CANDIDATES)
-    {
-        let mut plan = PlacementPlan::new(st);
-        plan.stage_eviction(st, victim_id, now)
-            .expect("candidate came from the device timeline");
-        let preempt_dur = st.link_model.slot_duration(cfg, SlotKind::PreemptMsg);
-        plan.stage_link_earliest(st, now, preempt_dur, SlotKind::PreemptMsg, victim_id);
+    let tried = &ordered[..ordered.len().min(MAX_VICTIM_CANDIDATES)];
 
-        // Re-run the high-priority allocation against the plan view.
-        let Some(hp_window) =
-            high_priority::stage_allocation_at(&mut plan, st, cfg, task, now, variant)
+    // Executor fan-out: each candidate's eviction + notice + HP retry
+    // stages read-only against the committed state, so the builds are
+    // independent stealable jobs. The winner is the first candidate in the
+    // paper's victim order whose retry succeeded — exactly the plan the
+    // serial loop commits — and only the winner gets the victim
+    // reallocation staged (serially, on the main thread). Candidates after
+    // the winner are built and dropped; the drop rolls their scratch back,
+    // so the committed state is bit-identical.
+    let fanned = executor::current().filter(|_| tried.len() > 1);
+    if let Some(exec) = fanned {
+        let st_ref: &NetworkState = st;
+        let mut built: Vec<Option<(PlacementPlan, Window)>> = Vec::new();
+        built.resize_with(tried.len(), || None);
+        let jobs: Vec<executor::Job<'_>> = built
+            .iter_mut()
+            .zip(tried.iter().copied())
+            .map(|(slot, (victim_id, _, _))| -> executor::Job<'_> {
+                Box::new(move || {
+                    *slot = build_victim_plan(st_ref, cfg, task, victim_id, now, variant);
+                })
+            })
+            .collect();
+        exec.run(jobs);
+        for (&victim, result) in tried.iter().zip(built) {
+            if let Some((plan, hp_window)) = result {
+                return commit_with_victim(sched, st, cfg, plan, hp_window, victim, now);
+            }
+        }
+        return (None, None);
+    }
+
+    for &victim in tried {
+        let (victim_id, _, _) = victim;
+        let Some((plan, hp_window)) = build_victim_plan(st, cfg, task, victim_id, now, variant)
         else {
             continue; // eviction insufficient: drop the plan, zero residue
         };
-
-        // Attempt to reallocate the victim before its own deadline, inside
-        // the same transaction — full fidelity first; when the mode permits
-        // it, a victim that cannot be re-placed at full fidelity is retried
-        // at the degraded variants instead of terminally failing.
-        let t0 = Instant::now();
-        let reallocation = if sched.reallocate {
-            low_priority::stage_single_with_fallback(
-                &mut plan,
-                st,
-                cfg,
-                victim_id,
-                now,
-                DegradePath::VictimRealloc,
-            )
-        } else {
-            None
-        };
-        let realloc_search = t0.elapsed();
-        if reallocation.is_none() {
-            plan.stage_fail(victim_id, FailReason::Preempted, now);
-        }
-        st.apply(plan).expect("freshly staged preemption plan");
-        return (
-            Some(hp_window),
-            Some(PreemptionReport {
-                victim: victim_id,
-                victim_cores,
-                victim_was_running,
-                victim_failed: reallocation.is_none(),
-                reallocation,
-                realloc_search,
-            }),
-        );
+        return commit_with_victim(sched, st, cfg, plan, hp_window, victim, now);
     }
     (None, None) // nothing preemptible conflicts, or no eviction suffices
+}
+
+/// Stage eviction + preemption notice + high-priority retry for one victim
+/// candidate. Read-only against the committed state — nothing commits and
+/// the plan rolls back on drop — so candidates can be built concurrently
+/// by the executor. Returns `None` when the eviction does not make the
+/// retry succeed (the plan is dropped with zero residue).
+fn build_victim_plan(
+    st: &NetworkState,
+    cfg: &SystemConfig,
+    task: TaskId,
+    victim_id: TaskId,
+    now: SimTime,
+    variant: VariantId,
+) -> Option<(PlacementPlan, Window)> {
+    let mut plan = PlacementPlan::new(st);
+    plan.stage_eviction(st, victim_id, now)
+        .expect("candidate came from the device timeline");
+    let preempt_dur = st.link_model.slot_duration(cfg, SlotKind::PreemptMsg);
+    plan.stage_link_earliest(st, now, preempt_dur, SlotKind::PreemptMsg, victim_id);
+
+    // Re-run the high-priority allocation against the plan view.
+    let hp_window = high_priority::stage_allocation_at(&mut plan, st, cfg, task, now, variant)?;
+    Some((plan, hp_window))
+}
+
+/// Dispose of the winning candidate's victim and commit: attempt to
+/// reallocate the victim before its own deadline, inside the same
+/// transaction — full fidelity first; when the mode permits it, a victim
+/// that cannot be re-placed at full fidelity is retried at the degraded
+/// variants instead of terminally failing.
+fn commit_with_victim(
+    sched: &PatsScheduler,
+    st: &mut NetworkState,
+    cfg: &SystemConfig,
+    mut plan: PlacementPlan,
+    hp_window: Window,
+    victim: (TaskId, u32, bool),
+    now: SimTime,
+) -> (Option<Window>, Option<PreemptionReport>) {
+    let (victim_id, victim_cores, victim_was_running) = victim;
+    let t0 = Instant::now();
+    let reallocation = if sched.reallocate {
+        low_priority::stage_single_with_fallback(
+            &mut plan,
+            st,
+            cfg,
+            victim_id,
+            now,
+            DegradePath::VictimRealloc,
+        )
+    } else {
+        None
+    };
+    let realloc_search = t0.elapsed();
+    if reallocation.is_none() {
+        plan.stage_fail(victim_id, FailReason::Preempted, now);
+    }
+    st.apply(plan).expect("freshly staged preemption plan");
+    (
+        Some(hp_window),
+        Some(PreemptionReport {
+            victim: victim_id,
+            victim_cores,
+            victim_was_running,
+            victim_failed: reallocation.is_none(),
+            reallocation,
+            realloc_search,
+        }),
+    )
 }
 
 /// Is `victim` part of a request set that already has a terminally failed

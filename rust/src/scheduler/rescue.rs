@@ -40,13 +40,16 @@ use crate::config::SystemConfig;
 use crate::fidelity::{DegradePath, VariantId};
 use crate::resources::{avail, SlotKind};
 use crate::scheduler::high_priority::HP_CORES;
-use crate::scheduler::plan::{search_candidates, CandidatePlan, PlacementPlan};
+use crate::scheduler::plan::{
+    search_candidates, select_candidate, CandidatePlan, PlacementPlan,
+};
 use crate::scheduler::{
     low_priority, HpRescue, PatsScheduler, PreemptionReport, RescueOutcome,
 };
 use crate::state::NetworkState;
 use crate::task::{Allocation, DeviceId, FailReason, Priority, TaskId, Window};
 use crate::time::SimTime;
+use crate::util::executor;
 use crate::util::profiler::{self, Phase};
 
 /// How many adoptive-device candidates the relocation search builds plans
@@ -228,48 +231,76 @@ pub fn relocate_hp(
     } else {
         1
     };
-    let mut base_plan = Some(base_plan);
-    let chosen = search_candidates(&candidates, eviction_floor, |(peak, dev)| {
-        let dev = DeviceId(dev);
-        if peak + HP_CORES <= st.device(dev).capacity() {
-            let mut plan = base_plan
-                .take()
-                .expect("a zero-eviction candidate commits immediately");
-            stage_adoption(&mut plan, st, cfg, task, dev, window, variant);
-            return Some(CandidatePlan { plan, cost: (0, window.end), payload: (dev, None) });
-        }
-        if !allow_preemption {
-            return None;
-        }
-        // §4's farthest-deadline victim on this device; a candidate whose
-        // eviction still leaves no room (an interior non-preemptible
-        // spike) is skipped by the read-only `fits_without` probe before a
-        // plan is even cloned for it.
-        let victim = st
-            .device(dev)
-            .preemption_candidates(&window)
-            .first()
-            .map(|s| (s.task, s.cores, s.window.start <= now))?;
-        let (victim_id, victim_cores, victim_was_running) = victim;
-        if !st.device(dev).fits_without(&window, HP_CORES, victim_id) {
-            return None;
-        }
-        let mut plan = base_plan
-            .as_ref()
-            .expect("base_plan is only moved by the short-circuiting winner")
-            .clone();
-        plan.stage_eviction(st, victim_id, now)
-            .expect("candidate came from the device timeline");
-        let preempt_dur = st.link_model.slot_duration(cfg, SlotKind::PreemptMsg);
-        plan.stage_link_earliest(st, now, preempt_dur, SlotKind::PreemptMsg, victim_id);
-        debug_assert!(plan.device_view(st, dev).fits(&window, HP_CORES));
-        stage_adoption(&mut plan, st, cfg, task, dev, window, variant);
-        Some(CandidatePlan {
-            plan,
-            cost: (1, window.end),
-            payload: (dev, Some((victim_id, victim_cores, victim_was_running))),
-        })
-    })?;
+    // Executor fan-out: every candidate plan stages read-only against the
+    // committed state, so each build is an independent stealable job. All
+    // candidates clone the shared link plan (content-identical to the move
+    // the serial search performs for its short-circuiting winner), and the
+    // winner is chosen by the exact `search_candidates` rule over the
+    // pre-built plans — bit-identical to the serial pick. Losing builds
+    // that the serial floor short-circuit would have skipped are built
+    // here and dropped; the drop rolls their scratch back, so nothing in
+    // the network differs.
+    let fanned = executor::current().filter(|_| candidates.len() > 1);
+    let chosen = if let Some(exec) = fanned {
+        let st_ref: &NetworkState = st;
+        let base = &base_plan;
+        let mut built: Vec<Option<CandidatePlan<RescuePayload>>> = Vec::new();
+        built.resize_with(candidates.len(), || None);
+        let jobs: Vec<executor::Job<'_>> = built
+            .iter_mut()
+            .zip(candidates.iter().copied())
+            .map(|(slot, (peak, dev))| -> executor::Job<'_> {
+                Box::new(move || {
+                    *slot = build_relocation_candidate(
+                        st_ref,
+                        cfg,
+                        base,
+                        task,
+                        window,
+                        now,
+                        allow_preemption,
+                        variant,
+                        peak,
+                        DeviceId(dev),
+                    );
+                })
+            })
+            .collect();
+        exec.run(jobs);
+        select_candidate(built, eviction_floor)?
+    } else {
+        let mut base_plan = Some(base_plan);
+        search_candidates(&candidates, eviction_floor, |(peak, dev)| {
+            let dev = DeviceId(dev);
+            if peak + HP_CORES <= st.device(dev).capacity() {
+                let mut plan = base_plan
+                    .take()
+                    .expect("a zero-eviction candidate commits immediately");
+                stage_adoption(&mut plan, st, cfg, task, dev, window, variant);
+                return Some(CandidatePlan {
+                    plan,
+                    cost: (0, window.end),
+                    payload: (dev, None),
+                });
+            }
+            // Eviction candidates share the clone-based builder with the
+            // fan-out path, so the staged plans are byte-identical.
+            build_relocation_candidate(
+                st,
+                cfg,
+                base_plan
+                    .as_ref()
+                    .expect("base_plan is only moved by the short-circuiting winner"),
+                task,
+                window,
+                now,
+                allow_preemption,
+                variant,
+                peak,
+                dev,
+            )
+        })?
+    };
 
     // Victim disposal is staged onto the winning plan only, inside the
     // same transaction.
@@ -310,6 +341,60 @@ pub fn relocate_hp(
     });
     st.apply(plan).expect("freshly staged relocation plan");
     Some(Relocation { device: dev, window, preemption })
+}
+
+/// Payload of a relocation candidate plan: the adoptive device plus the
+/// staged eviction's `(victim, cores, was_running)`, if one was needed.
+type RescuePayload = (DeviceId, Option<(TaskId, u32, bool)>);
+
+/// Build one relocation candidate plan, read-only against the committed
+/// state: the shared link plan is cloned and the adoption (plus a §4
+/// eviction when the device has no free core) is staged on the clone.
+/// Nothing commits here — the caller selects a winner and applies it.
+/// Shared by the serial search and the executor fan-out so both stage
+/// byte-identical plans.
+#[allow(clippy::too_many_arguments)]
+fn build_relocation_candidate(
+    st: &NetworkState,
+    cfg: &SystemConfig,
+    base: &PlacementPlan,
+    task: TaskId,
+    window: Window,
+    now: SimTime,
+    allow_preemption: bool,
+    variant: VariantId,
+    peak: u32,
+    dev: DeviceId,
+) -> Option<CandidatePlan<RescuePayload>> {
+    if peak + HP_CORES <= st.device(dev).capacity() {
+        let mut plan = base.clone();
+        stage_adoption(&mut plan, st, cfg, task, dev, window, variant);
+        return Some(CandidatePlan { plan, cost: (0, window.end), payload: (dev, None) });
+    }
+    if !allow_preemption {
+        return None;
+    }
+    // §4's farthest-deadline victim on this device; a candidate whose
+    // eviction still leaves no room (an interior non-preemptible spike) is
+    // skipped by the read-only `fits_without` probe before a plan is even
+    // cloned for it.
+    let victim = st
+        .device(dev)
+        .preemption_candidates(&window)
+        .first()
+        .map(|s| (s.task, s.cores, s.window.start <= now))?;
+    let (victim_id, _, _) = victim;
+    if !st.device(dev).fits_without(&window, HP_CORES, victim_id) {
+        return None;
+    }
+    let mut plan = base.clone();
+    plan.stage_eviction(st, victim_id, now)
+        .expect("candidate came from the device timeline");
+    let preempt_dur = st.link_model.slot_duration(cfg, SlotKind::PreemptMsg);
+    plan.stage_link_earliest(st, now, preempt_dur, SlotKind::PreemptMsg, victim_id);
+    debug_assert!(plan.device_view(st, dev).fits(&window, HP_CORES));
+    stage_adoption(&mut plan, st, cfg, task, dev, window, variant);
+    Some(CandidatePlan { plan, cost: (1, window.end), payload: (dev, Some(victim)) })
 }
 
 /// Stage the adoptive placement plus its completion state-update.

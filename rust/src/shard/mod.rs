@@ -82,6 +82,7 @@ use crate::scheduler::{HpOutcome, LpOutcome, LpPlacement, Policy, RescueOutcome}
 use crate::state::{DeviceHealth, TaskRecord};
 use crate::task::{DeviceId, FailReason, FrameId, LpRequest, RequestId, TaskId, Window};
 use crate::time::SimTime;
+use crate::util::executor::{self, Executor};
 use crate::util::profiler::{self, Phase};
 
 /// Cross-shard spill counters, reported by the `pats shards` sweep and
@@ -217,6 +218,20 @@ pub struct ControlPlane<P: Policy> {
     /// transitions — cross-shard spills and device migrations — are the
     /// only events the simulator cannot see from outside.
     trace_run: Option<u64>,
+    /// Persistent work-stealing worker pool (`[sharding] workers`). `None`
+    /// (the default) keeps the per-batch scoped-thread sweeps; `Some` routes
+    /// the sweep doors and nested candidate-plan fan-outs through the pool.
+    /// Bit-identical either way — the pool changes where jobs run, never
+    /// what they compute.
+    exec: Option<Executor>,
+    /// Reusable sweep scratch: original event index per shard, in batch
+    /// order. Cleared at the start of every sweep (allocation reuse only;
+    /// never read across sweeps).
+    sweep_idx: Vec<Vec<usize>>,
+    /// Reusable sweep scratch: the HP job partition per shard.
+    sweep_hp: Vec<Vec<HpSweepJob>>,
+    /// Reusable sweep scratch: the LP-request job partition per shard.
+    sweep_lp: Vec<Vec<LpSweepJob>>,
 }
 
 impl<P: Policy> ControlPlane<P> {
@@ -267,7 +282,24 @@ impl<P: Policy> ControlPlane<P> {
             skew_streak: 0,
             broker: BrokerStats::default(),
             trace_run: None,
+            exec: cfg.sharding.workers.resolve().map(Executor::new),
+            sweep_idx: Vec::new(),
+            sweep_hp: Vec::new(),
+            sweep_lp: Vec::new(),
         }
+    }
+
+    /// The plane's persistent executor, if `[sharding] workers` armed one.
+    pub fn executor(&self) -> Option<&Executor> {
+        self.exec.as_ref()
+    }
+
+    /// Install the plane's executor (if any) as the current thread's
+    /// executor for the guard's lifetime, so candidate-plan fan-outs deep
+    /// in the scheduler (`rescue::relocate_hp`, `preemption`) can find the
+    /// pool without threading a handle through the `Policy` signatures.
+    fn exec_guard(&self) -> Option<executor::InstallGuard> {
+        self.exec.as_ref().map(|e| e.install())
     }
 
     /// Record one surface-local flight-recorder event (no-op unless the
@@ -665,27 +697,12 @@ impl<P: Policy> ControlPlane<P> {
                 })
                 .collect()
         }
+        // Install the pool handle on this thread too: the submitter helps
+        // run jobs while it waits, and a helped job's nested candidate
+        // fan-out finds the pool through `executor::current()`.
+        let _exec = self.exec_guard();
         let results: Vec<Vec<(RequestId, LpOutcome)>> = if parallel {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .shards
-                    .iter_mut()
-                    .zip(jobs)
-                    .map(|(shard, batch)| {
-                        scope.spawn(move || {
-                            let r = run_batch(shard, batch);
-                            // Sweep threads die at the join barrier: fold
-                            // their phase totals into the global report now.
-                            profiler::flush_thread();
-                            r
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|handle| handle.join().expect("shard sweep thread panicked"))
-                    .collect()
-            })
+            sweep_shards(self.exec.as_ref(), &mut self.shards, jobs, run_batch::<P>)
         } else {
             self.shards
                 .iter_mut()
@@ -761,6 +778,62 @@ impl<P: Policy> ControlPlane<P> {
     }
 }
 
+/// Run one job batch per shard — as stealable jobs on the persistent
+/// executor when the plane has one, else one scoped OS thread per shard
+/// (the historical path). Per-shard result lists come back in shard order
+/// either way. Bit-identity holds at any worker count because each job
+/// owns exactly one shard's `&mut Controller` and writes one disjoint
+/// output slot: execution order is unobservable in the results.
+fn sweep_shards<P, J, D>(
+    exec: Option<&Executor>,
+    shards: &mut [Controller<P>],
+    per: &[Vec<J>],
+    run: fn(&mut Controller<P>, &[J]) -> Vec<D>,
+) -> Vec<Vec<D>>
+where
+    P: Policy + Send,
+    J: Sync,
+    D: Send,
+{
+    if let Some(exec) = exec {
+        let mut out: Vec<Option<Vec<D>>> = (0..shards.len()).map(|_| None).collect();
+        let jobs: Vec<executor::Job<'_>> = shards
+            .iter_mut()
+            .zip(per)
+            .zip(out.iter_mut())
+            .map(|((shard, batch), slot)| -> executor::Job<'_> {
+                Box::new(move || {
+                    *slot = Some(run(shard, batch));
+                })
+            })
+            .collect();
+        // The workers flush profiler/trace state at every job boundary,
+        // mirroring the scoped threads' flush-at-death.
+        exec.run(jobs);
+        out.into_iter().map(|d| d.expect("every shard job ran")).collect()
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .iter_mut()
+                .zip(per)
+                .map(|(shard, batch)| {
+                    scope.spawn(move || {
+                        let r = run(shard, batch);
+                        // Sweep threads die at the join barrier: fold
+                        // their phase totals into the global report now.
+                        profiler::flush_thread();
+                        r
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|handle| handle.join().expect("shard sweep thread panicked"))
+                .collect()
+        })
+    }
+}
+
 impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
     fn handle_hp_request(
         &mut self,
@@ -770,6 +843,7 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
     ) -> (TaskId, SimTime, HpOutcome) {
         // High-priority tasks are pinned to their source device (§3.1), so
         // they never spill: only the home shard owns that device.
+        let _exec = self.exec_guard();
         let h = self.home_shard(source);
         let (id, t, out) = self.shards[h].handle_hp_request(frame, source, now);
         self.task_home.insert(id, h);
@@ -789,6 +863,7 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
         frame_deadline: SimTime,
         now: SimTime,
     ) -> (RequestId, SimTime, LpOutcome) {
+        let _exec = self.exec_guard();
         let h = self.home_shard(source);
         let (rid, decision_t, out) =
             self.shards[h].handle_lp_request(frame, source, n, frame_deadline, now);
@@ -827,6 +902,7 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
         completed: bool,
         now: SimTime,
     ) -> Vec<LpPlacement> {
+        let _exec = self.exec_guard();
         let s = self.shard_of_task(task).expect("state update for unrouted task");
         self.shards[s].handle_state_update(task, completed, now)
     }
@@ -834,11 +910,13 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
     fn handle_device_failure(&mut self, device: DeviceId, now: SimTime) -> RescueOutcome {
         // Failure detection, reclamation, and rescue stay shard-local:
         // every task placed on `device` is registered in its home shard.
+        let _exec = self.exec_guard();
         let h = self.home_shard(device);
         self.shards[h].handle_device_failure(device, now)
     }
 
     fn handle_device_drain(&mut self, device: DeviceId, now: SimTime) {
+        let _exec = self.exec_guard();
         let h = self.home_shard(device);
         self.shards[h].handle_device_drain(device, now);
     }
@@ -857,6 +935,7 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
     }
 
     fn poll(&mut self, device: DeviceId, now: SimTime) -> Vec<LpPlacement> {
+        let _exec = self.exec_guard();
         let h = self.home_shard(device);
         let shard = &mut self.shards[h];
         shard.policy.poll(&mut shard.state, &self.cfg, device, now)
@@ -966,35 +1045,37 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
 
     fn hp_sweep(&mut self, jobs: &[HpSweepJob]) -> Vec<HpSweepDecision> {
         // Partition the batch by home shard, preserving slice order within
-        // each shard (the sweep contract), then run one shard per OS
-        // thread — sound because shards share no mutable state. HP tasks
-        // never spill, so the router is not involved mid-sweep.
+        // each shard (the sweep contract), then run one job per shard
+        // sub-batch — on the persistent executor when armed, else one
+        // scoped OS thread per shard. Sound because shards share no
+        // mutable state. HP tasks never spill, so the router is not
+        // involved mid-sweep. The partition scratch lives on the plane
+        // and is cleared per sweep (allocation reuse, not state).
+        let _exec = self.exec_guard();
         let k = self.shards.len();
-        let mut idx: Vec<Vec<usize>> = vec![Vec::new(); k];
-        let mut per: Vec<Vec<HpSweepJob>> = vec![Vec::new(); k];
+        let mut idx = std::mem::take(&mut self.sweep_idx);
+        let mut per = std::mem::take(&mut self.sweep_hp);
+        idx.resize_with(k, Vec::new);
+        per.resize_with(k, Vec::new);
+        for v in &mut idx {
+            v.clear();
+        }
+        for v in &mut per {
+            v.clear();
+        }
         for (i, j) in jobs.iter().enumerate() {
             let s = self.home[j.source.0 as usize];
             idx[s].push(i);
             per[s].push(*j);
         }
-        let per_shard: Vec<Vec<HpSweepDecision>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .shards
-                .iter_mut()
-                .zip(&per)
-                .map(|(shard, batch)| {
-                    scope.spawn(move || {
-                        let r = ControlSurface::hp_sweep(shard, batch);
-                        profiler::flush_thread();
-                        r
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|handle| handle.join().expect("shard sweep thread panicked"))
-                .collect()
-        });
+        fn run_batch<P: Policy>(
+            shard: &mut Controller<P>,
+            batch: &[HpSweepJob],
+        ) -> Vec<HpSweepDecision> {
+            ControlSurface::hp_sweep(shard, batch)
+        }
+        let per_shard: Vec<Vec<HpSweepDecision>> =
+            sweep_shards(self.exec.as_ref(), &mut self.shards, &per, run_batch::<P>);
         // Scatter the decisions back to the original event order and fold
         // the minted ids into the router's home maps.
         let mut out: Vec<Option<HpSweepDecision>> = vec![None; jobs.len()];
@@ -1007,6 +1088,8 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
                 out[i] = Some(d);
             }
         }
+        self.sweep_idx = idx;
+        self.sweep_hp = per;
         out.into_iter().map(|d| d.expect("every sweep job decided")).collect()
     }
 
@@ -1015,6 +1098,7 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
         // serialise through the router. The batched engine never batches
         // LP requests while `spill_active()`, but stay correct (serial,
         // spill-capable) if a caller sweeps anyway.
+        let _exec = self.exec_guard();
         if self.spill_active() {
             return jobs
                 .iter()
@@ -1034,31 +1118,29 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
                 .collect();
         }
         let k = self.shards.len();
-        let mut idx: Vec<Vec<usize>> = vec![Vec::new(); k];
-        let mut per: Vec<Vec<LpSweepJob>> = vec![Vec::new(); k];
+        let mut idx = std::mem::take(&mut self.sweep_idx);
+        let mut per = std::mem::take(&mut self.sweep_lp);
+        idx.resize_with(k, Vec::new);
+        per.resize_with(k, Vec::new);
+        for v in &mut idx {
+            v.clear();
+        }
+        for v in &mut per {
+            v.clear();
+        }
         for (i, j) in jobs.iter().enumerate() {
             let s = self.home[j.source.0 as usize];
             idx[s].push(i);
             per[s].push(*j);
         }
-        let per_shard: Vec<Vec<LpSweepDecision>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .shards
-                .iter_mut()
-                .zip(&per)
-                .map(|(shard, batch)| {
-                    scope.spawn(move || {
-                        let r = ControlSurface::lp_request_sweep(shard, batch);
-                        profiler::flush_thread();
-                        r
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|handle| handle.join().expect("shard sweep thread panicked"))
-                .collect()
-        });
+        fn run_batch<P: Policy>(
+            shard: &mut Controller<P>,
+            batch: &[LpSweepJob],
+        ) -> Vec<LpSweepDecision> {
+            ControlSurface::lp_request_sweep(shard, batch)
+        }
+        let per_shard: Vec<Vec<LpSweepDecision>> =
+            sweep_shards(self.exec.as_ref(), &mut self.shards, &per, run_batch::<P>);
         let mut out: Vec<Option<LpSweepDecision>> = vec![None; jobs.len()];
         for (s, decisions) in per_shard.into_iter().enumerate() {
             for (d, &i) in decisions.into_iter().zip(&idx[s]) {
@@ -1072,6 +1154,8 @@ impl<P: Policy + Send> ControlSurface for ControlPlane<P> {
                 out[i] = Some(d);
             }
         }
+        self.sweep_idx = idx;
+        self.sweep_lp = per;
         out.into_iter().map(|d| d.expect("every sweep job decided")).collect()
     }
 }

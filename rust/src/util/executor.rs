@@ -1,0 +1,650 @@
+//! Persistent work-stealing executor.
+//!
+//! A worker pool spawned once per [`crate::shard::ControlPlane`]
+//! (`[sharding] workers = "auto" | N`) that replaces the per-batch
+//! `std::thread::scope` spawn/join in the shard sweep doors. Each worker
+//! owns one bounded **Chase-Lev deque** (owner pushes and pops at the
+//! bottom; thieves CAS the top), fed from a **global injector**; workers
+//! park on a condvar when every queue is empty and are unparked by the
+//! next submission instead of dying at the barrier. Hand-rolled per the
+//! repo's no-external-deps constraint.
+//!
+//! # Why results stay bit-identical under stealing
+//!
+//! The executor never decides *what* runs, only *where*. Every caller
+//! submits a closed set of jobs and blocks in [`Executor::run`] until all
+//! of them have executed; each job writes into its own disjoint output
+//! slot (a sweep job owns exactly one shard's `&mut Controller`, a
+//! candidate-plan job stages read-only against the committed state). The
+//! caller then consumes the slots in the same canonical order as the
+//! scoped-thread path, so scheduling order — which worker ran which job,
+//! who stole from whom — is unobservable in any deterministic output.
+//!
+//! # Deque / injector protocol
+//!
+//! - `run` pushes every job of a batch onto the injector (a mutexed MPMC
+//!   queue — the deques are the lock-free part) and bumps the wakeup
+//!   signal under the sleep lock, so a worker that raced to sleep re-scans
+//!   instead of missing the batch.
+//! - An idle worker pops one injector job and moves a fair chunk
+//!   (`len / workers`, capped by deque capacity) into its own deque in the
+//!   same critical section; siblings that go idle steal from it top-end.
+//! - The deque is the fixed-capacity variant of Chase-Lev (capacity
+//!   [`DEQUE_CAP`], a power of two): `push` refuses when full and the
+//!   overflow stays in the injector, which sidesteps the buffer-growth /
+//!   reclamation half of the published algorithm entirely. Orderings
+//!   follow Lê et al., "Correct and Efficient Work-Stealing for Weak
+//!   Memory Models" (the `SeqCst` fences in `pop`/`steal` arbitrate the
+//!   last-element race).
+//! - While a batch is outstanding its submitter *helps*: it runs jobs from
+//!   the injector and steals from workers rather than blocking. This is
+//!   what makes nested submission — a sweep job fanning out candidate-plan
+//!   jobs on the same pool — deadlock-free: the deepest waiter can always
+//!   execute its own jobs, so every latch eventually resolves.
+//!
+//! # Phase accounting
+//!
+//! Workers are long-lived, so thread-local profiler samples and
+//! flight-recorder rings can no longer be folded at thread death the way
+//! the scoped sweep threads did it. Instead [`profiler::flush_thread`] and
+//! [`obs::flush_thread`] run at every job boundary (and before parking),
+//! keeping phase accounting and trace capture identical to the scoped
+//! path. Each job executes under [`Phase::ExecJob`]; successful steals and
+//! parks tick [`Counter::Steal`] / [`Counter::Park`].
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::ptr;
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::obs;
+use crate::util::profiler::{self, Counter, Phase};
+
+/// A unit of work: boxed so the queues stay homogeneous, lifetime-bounded
+/// so jobs may borrow the caller's stack ([`Executor::run`] erases the
+/// lifetime internally and never returns before every job has run).
+pub type Job<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// Per-worker deque capacity. A power of two; one shard sub-batch or one
+/// top-K candidate fan-out is far below this, so overflow (which falls
+/// back to the injector) is a correctness valve, not a steady state.
+const DEQUE_CAP: usize = 256;
+
+/// Resolve `workers = "auto"`: one worker per available CPU.
+pub fn auto_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Heap cell a queued job lives in; queues pass thin raw pointers to it.
+struct JobCell {
+    run: Box<dyn FnOnce() + Send + 'static>,
+}
+
+/// Thin owning pointer to a queued [`JobCell`]. The queues guarantee each
+/// cell is handed out exactly once; `execute` reboxes and frees it.
+struct RawJob(*mut JobCell);
+
+// SAFETY: the cell holds a `Send` closure and ownership transfers with the
+// pointer — exactly one thread ever reboxes it.
+unsafe impl Send for RawJob {}
+
+enum StealResult {
+    /// Stole the top job.
+    Job(RawJob),
+    /// Queue observed empty.
+    Empty,
+    /// Lost the CAS race to another thief (or the owner); rescan.
+    Retry,
+}
+
+/// Fixed-capacity Chase-Lev work-stealing deque. The owner worker calls
+/// `push`/`pop` (bottom end, no CAS except for the last element); any
+/// thread may call `steal` (top end, CAS). Indices grow monotonically and
+/// wrap into the slot array by mask.
+struct Deque {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    slots: Box<[AtomicPtr<JobCell>]>,
+}
+
+impl Deque {
+    fn new() -> Deque {
+        Deque {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            slots: (0..DEQUE_CAP).map(|_| AtomicPtr::new(ptr::null_mut())).collect(),
+        }
+    }
+
+    #[inline]
+    fn slot(&self, i: isize) -> &AtomicPtr<JobCell> {
+        &self.slots[(i & (DEQUE_CAP as isize - 1)) as usize]
+    }
+
+    /// Owner-only. `Err` hands the job back when the deque is full (the
+    /// caller leaves it in the injector instead).
+    fn push(&self, job: RawJob) -> Result<(), RawJob> {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        if b - t >= DEQUE_CAP as isize {
+            return Err(job);
+        }
+        self.slot(b).store(job.0, Ordering::Relaxed);
+        // Publish the slot before the new bottom becomes visible to thieves.
+        self.bottom.store(b + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Owner-only: pop the most recently pushed job (LIFO end).
+    fn pop(&self) -> Option<RawJob> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        // Order the bottom decrement against thieves' top reads.
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // Already empty: restore and bail.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let p = self.slot(b).load(Ordering::Relaxed);
+        if t == b {
+            // Exactly one job left: race thieves for it via the top index.
+            let won = self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return if won { Some(RawJob(p)) } else { None };
+        }
+        Some(RawJob(p))
+    }
+
+    /// Any thread: steal the oldest job (FIFO end).
+    fn steal(&self) -> StealResult {
+        let t = self.top.load(Ordering::Acquire);
+        // Order the top read against the owner's bottom updates.
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return StealResult::Empty;
+        }
+        let p = self.slot(t).load(Ordering::Relaxed);
+        if self
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+        {
+            StealResult::Job(RawJob(p))
+        } else {
+            StealResult::Retry
+        }
+    }
+}
+
+/// Completion latch for one submitted batch. The counter is decremented by
+/// the job wrapper; the final decrement notifies the submitter under the
+/// latch mutex, so the waiting side cannot miss the wakeup. The first
+/// panicking job parks its payload here for the submitter to re-throw.
+struct Batch {
+    remaining: AtomicUsize,
+    lock: Mutex<()>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+struct SleepState {
+    /// Bumped on every submission; a worker that saw no work re-checks
+    /// this under the lock before sleeping, closing the lost-wakeup race.
+    signals: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    deques: Vec<Deque>,
+    injector: Mutex<VecDeque<RawJob>>,
+    sleep: Mutex<SleepState>,
+    wakeup: Condvar,
+}
+
+thread_local! {
+    /// `(Arc::as_ptr of the pool, worker index)` for pool worker threads —
+    /// lets a nested `run` from inside a job use the worker's own deque.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+    /// Stack of installed executor handles; [`current`] reads the top.
+    static CURRENT: RefCell<Vec<Handle>> = const { RefCell::new(Vec::new()) };
+}
+
+impl Shared {
+    fn addr(self: &Arc<Self>) -> usize {
+        Arc::as_ptr(self) as usize
+    }
+
+    /// This thread's worker index *in this pool*, if it is one.
+    fn my_index(self: &Arc<Self>) -> Option<usize> {
+        let addr = self.addr();
+        WORKER.with(|w| w.get().and_then(|(a, i)| (a == addr).then_some(i)))
+    }
+
+    /// Wake every parked worker (new work or shutdown).
+    fn signal(&self) {
+        let mut s = self.sleep.lock().unwrap();
+        s.signals = s.signals.wrapping_add(1);
+        self.wakeup.notify_all();
+    }
+
+    /// Find one runnable job: own deque first (workers), then an injector
+    /// chunk, then stealing from every sibling. Returns `None` only when
+    /// every queue was observed empty with no steal race in flight — at
+    /// that point any still-unfinished job is already executing on some
+    /// other thread.
+    fn find_job(&self, me: Option<usize>) -> Option<RawJob> {
+        if let Some(i) = me {
+            if let Some(job) = self.deques[i].pop() {
+                return Some(job);
+            }
+        }
+        loop {
+            {
+                let mut q = self.injector.lock().unwrap();
+                if let Some(job) = q.pop_front() {
+                    if let Some(i) = me {
+                        // Move a fair share into our own deque in the same
+                        // critical section, so a later emptiness scan that
+                        // saw the injector drained also sees these slots.
+                        let chunk = (q.len() / self.deques.len()).min(DEQUE_CAP - 1);
+                        for _ in 0..chunk {
+                            let Some(next) = q.pop_front() else { break };
+                            if let Err(back) = self.deques[i].push(next) {
+                                q.push_front(back);
+                                break;
+                            }
+                        }
+                    }
+                    return Some(job);
+                }
+            }
+            let mut raced = false;
+            for (j, d) in self.deques.iter().enumerate() {
+                if Some(j) == me {
+                    continue;
+                }
+                match d.steal() {
+                    StealResult::Job(job) => {
+                        profiler::count(Counter::Steal, 1);
+                        return Some(job);
+                    }
+                    StealResult::Retry => raced = true,
+                    StealResult::Empty => {}
+                }
+            }
+            if !raced {
+                return None;
+            }
+            // Lost a CAS race: somebody is making progress; rescan.
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Run one job, then fold this thread's profiler samples and
+    /// flight-recorder ring at the job boundary — the long-lived-worker
+    /// replacement for the scoped sweep threads' flush-at-death.
+    fn execute(&self, job: RawJob) {
+        // SAFETY: the queues hand each cell out exactly once.
+        let cell = unsafe { Box::from_raw(job.0) };
+        {
+            let _span = profiler::scope(Phase::ExecJob);
+            (cell.run)();
+        }
+        profiler::flush_thread();
+        obs::flush_thread();
+    }
+
+    /// Submit a batch and block until every job has executed; see
+    /// [`Executor::run`].
+    fn run(self: &Arc<Self>, jobs: Vec<Job<'_>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        // SAFETY: lifetime erasure only — layout is identical, and this
+        // function does not return until every job has run, so the
+        // borrows the jobs capture strictly outlive their use.
+        let jobs: Vec<Box<dyn FnOnce() + Send + 'static>> = unsafe { std::mem::transmute(jobs) };
+        let batch = Arc::new(Batch {
+            remaining: AtomicUsize::new(n),
+            lock: Mutex::new(()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.injector.lock().unwrap();
+            for job in jobs {
+                let b = Arc::clone(&batch);
+                let wrapped: Box<dyn FnOnce() + Send + 'static> = Box::new(move || {
+                    if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+                        b.panic.lock().unwrap().get_or_insert(payload);
+                    }
+                    if b.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        let _g = b.lock.lock().unwrap();
+                        b.done.notify_all();
+                    }
+                });
+                q.push_back(RawJob(Box::into_raw(Box::new(JobCell { run: wrapped }))));
+            }
+        }
+        self.signal();
+        // Help while the batch is outstanding instead of blocking: this is
+        // what keeps nested submission (candidate-plan jobs spawned from
+        // inside a sweep job) deadlock-free.
+        let me = self.my_index();
+        while batch.remaining.load(Ordering::Acquire) != 0 {
+            match self.find_job(me) {
+                Some(job) => self.execute(job),
+                None => break,
+            }
+        }
+        // Whatever is left is executing on other threads; wait it out.
+        {
+            let mut g = batch.lock.lock().unwrap();
+            while batch.remaining.load(Ordering::Acquire) != 0 {
+                g = batch.done.wait(g).unwrap();
+            }
+        }
+        if let Some(payload) = batch.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+fn worker_main(shared: Arc<Shared>, index: usize) {
+    WORKER.with(|w| w.set(Some((shared.addr(), index))));
+    // Jobs that fan out sub-jobs (nested candidate search) find their own
+    // pool through the installed handle.
+    let _install = Handle { shared: Arc::clone(&shared) }.install();
+    let mut seen = shared.sleep.lock().unwrap().signals;
+    loop {
+        while let Some(job) = shared.find_job(Some(index)) {
+            shared.execute(job);
+        }
+        let mut s = shared.sleep.lock().unwrap();
+        if s.shutdown {
+            break;
+        }
+        if s.signals != seen {
+            // A submission landed after our empty scan: rescan, don't park.
+            seen = s.signals;
+            continue;
+        }
+        profiler::count(Counter::Park, 1);
+        profiler::flush_thread();
+        obs::flush_thread();
+        s = shared.wakeup.wait(s).unwrap();
+        seen = s.signals;
+        if s.shutdown {
+            break;
+        }
+    }
+    profiler::flush_thread();
+    obs::flush_thread();
+}
+
+/// A persistent work-stealing worker pool. Dropping it shuts the workers
+/// down and joins them.
+pub struct Executor {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn a pool of `workers` threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Executor {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            deques: (0..workers).map(|_| Deque::new()).collect(),
+            injector: Mutex::new(VecDeque::new()),
+            sleep: Mutex::new(SleepState { signals: 0, shutdown: false }),
+            wakeup: Condvar::new(),
+        });
+        let threads = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pats-exec-{i}"))
+                    .spawn(move || worker_main(shared, i))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor { shared, threads }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    /// Submit `jobs` and block until every one of them has executed.
+    /// The submitting thread helps (runs queued jobs) while it waits. If a
+    /// job panicked, the first panic payload is re-thrown here after the
+    /// whole batch has settled. Jobs may borrow the caller's stack.
+    pub fn run<'a>(&self, jobs: Vec<Job<'a>>) {
+        self.shared.run(jobs);
+    }
+
+    /// A cheap cloneable submission handle.
+    pub fn handle(&self) -> Handle {
+        Handle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Install this pool as the thread's current executor for the guard's
+    /// lifetime, making it visible to [`current`] (used by the nested
+    /// candidate-plan fan-outs deep in the scheduler, which cannot thread
+    /// an executor reference through the `Policy` signatures).
+    pub fn install(&self) -> InstallGuard {
+        self.handle().install()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut s = self.shared.sleep.lock().unwrap();
+            s.shutdown = true;
+            self.shared.wakeup.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // `run` is synchronous, so nothing should still be queued; free
+        // stragglers (reachable only if a submitter itself panicked).
+        let mut q = self.shared.injector.lock().unwrap();
+        while let Some(job) = q.pop_front() {
+            drop(unsafe { Box::from_raw(job.0) });
+        }
+    }
+}
+
+/// Cloneable submission handle to a live pool (see [`Executor::handle`]).
+#[derive(Clone)]
+pub struct Handle {
+    shared: Arc<Shared>,
+}
+
+impl Handle {
+    /// See [`Executor::run`].
+    pub fn run<'a>(&self, jobs: Vec<Job<'a>>) {
+        self.shared.run(jobs);
+    }
+
+    /// See [`Executor::workers`].
+    pub fn workers(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    /// See [`Executor::install`].
+    pub fn install(self) -> InstallGuard {
+        CURRENT.with(|c| c.borrow_mut().push(self));
+        InstallGuard { _priv: () }
+    }
+}
+
+/// The executor installed on this thread, if any: the innermost
+/// [`Executor::install`] guard, or the worker's own pool on pool threads.
+pub fn current() -> Option<Handle> {
+    CURRENT.with(|c| c.borrow().last().cloned())
+}
+
+/// RAII guard for [`Executor::install`]; uninstalls on drop.
+#[must_use = "the executor is uninstalled when the guard drops"]
+pub struct InstallGuard {
+    _priv: (),
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| {
+            c.borrow_mut().pop();
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let pool = Executor::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        let jobs: Vec<Job<'_>> = hits
+            .iter()
+            .map(|h| -> Job<'_> { Box::new(move || { h.fetch_add(1, Ordering::Relaxed); }) })
+            .collect();
+        pool.run(jobs);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn jobs_may_borrow_and_mutate_disjoint_slots() {
+        let pool = Executor::new(2);
+        let mut out = vec![0u64; 64];
+        {
+            let jobs: Vec<Job<'_>> = out
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| -> Job<'_> { Box::new(move || *slot = i as u64 * 3) })
+                .collect();
+            pool.run(jobs);
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn nested_submission_from_inside_a_job_completes() {
+        let pool = Executor::new(2);
+        let total = AtomicU64::new(0);
+        {
+            let handle = pool.handle();
+            let total = &total;
+            let jobs: Vec<Job<'_>> = (0..4)
+                .map(|_| -> Job<'_> {
+                    let handle = handle.clone();
+                    Box::new(move || {
+                        let inner: Vec<Job<'_>> = (0..8)
+                            .map(|_| -> Job<'_> {
+                                Box::new(move || {
+                                    total.fetch_add(1, Ordering::Relaxed);
+                                })
+                            })
+                            .collect();
+                        handle.run(inner);
+                    })
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn panicking_job_propagates_after_batch_settles() {
+        let pool = Executor::new(2);
+        let ran = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Job<'_>> = (0..8)
+                .map(|i| -> Job<'_> {
+                    let ran = &ran;
+                    Box::new(move || {
+                        ran.fetch_add(1, Ordering::Relaxed);
+                        if i == 3 {
+                            panic!("job 3 exploded");
+                        }
+                    })
+                })
+                .collect();
+            pool.run(jobs);
+        }));
+        assert!(result.is_err(), "the job panic reaches the submitter");
+        assert_eq!(ran.load(Ordering::Relaxed), 8, "the rest of the batch still ran");
+        // The pool survives a panicked batch.
+        let again = AtomicUsize::new(0);
+        let jobs: Vec<Job<'_>> = (0..4)
+            .map(|_| -> Job<'_> {
+                let again = &again;
+                Box::new(move || {
+                    again.fetch_add(1, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(again.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn deque_push_pop_is_lifo_and_steal_is_fifo() {
+        fn cell(v: usize) -> RawJob {
+            RawJob(Box::into_raw(Box::new(JobCell { run: Box::new(move || drop(v)) })))
+        }
+        fn free(j: RawJob) {
+            drop(unsafe { Box::from_raw(j.0) });
+        }
+        let d = Deque::new();
+        assert!(d.pop().is_none());
+        for v in 0..3 {
+            d.push(cell(v)).ok().unwrap();
+        }
+        // Steal takes the oldest, pop takes the newest.
+        let stolen = match d.steal() {
+            StealResult::Job(j) => j,
+            _ => panic!("steal from non-empty deque"),
+        };
+        free(stolen);
+        free(d.pop().expect("two left"));
+        free(d.pop().expect("one left"));
+        assert!(d.pop().is_none());
+        assert!(matches!(d.steal(), StealResult::Empty));
+    }
+
+    #[test]
+    fn install_stack_nests_and_unwinds() {
+        assert!(current().is_none());
+        let a = Executor::new(1);
+        let b = Executor::new(2);
+        {
+            let _ga = a.install();
+            assert_eq!(current().unwrap().workers(), 1);
+            {
+                let _gb = b.install();
+                assert_eq!(current().unwrap().workers(), 2);
+            }
+            assert_eq!(current().unwrap().workers(), 1);
+        }
+        assert!(current().is_none());
+    }
+}

@@ -6,6 +6,7 @@
 //! scoped to exactly what PATS uses.
 
 pub mod cli;
+pub mod executor;
 pub mod json;
 pub mod logging;
 pub mod profiler;

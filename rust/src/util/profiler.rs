@@ -74,11 +74,14 @@ pub enum Phase {
     PlaceRescue,
     /// Bandwidth-broker / rebalance epoch (`shard::ControlPlane::run_epoch`).
     BrokerEpoch,
+    /// One job executed on the persistent work-stealing executor
+    /// (`util::executor`) — a shard sub-batch or a candidate-plan build.
+    ExecJob,
 }
 
 impl Phase {
     /// Every phase, in display order. Indexes the flat accumulators.
-    pub const ALL: [Phase; 16] = [
+    pub const ALL: [Phase; 17] = [
         Phase::Drain,
         Phase::AdmitHp,
         Phase::AdmitLp,
@@ -95,6 +98,7 @@ impl Phase {
         Phase::PlacePreempt,
         Phase::PlaceRescue,
         Phase::BrokerEpoch,
+        Phase::ExecJob,
     ];
 
     /// Stable snake_case name (used in JSON and text reports).
@@ -116,6 +120,7 @@ impl Phase {
             Phase::PlacePreempt => "place_preempt",
             Phase::PlaceRescue => "place_rescue",
             Phase::BrokerEpoch => "broker_epoch",
+            Phase::ExecJob => "exec_job",
         }
     }
 }
@@ -135,16 +140,22 @@ pub enum Counter {
     DevicesSettled,
     /// Candidate devices that paid the direct per-device calendar scan.
     DevicesScanned,
+    /// Jobs taken from a sibling worker's deque (executor steals).
+    Steal,
+    /// Times an executor worker parked with every queue empty.
+    Park,
 }
 
 impl Counter {
     /// Every counter, in display order. Indexes the flat accumulators.
-    pub const ALL: [Counter; 5] = [
+    pub const ALL: [Counter; 7] = [
         Counter::IndexHit,
         Counter::IndexMiss,
         Counter::IndexBuild,
         Counter::DevicesSettled,
         Counter::DevicesScanned,
+        Counter::Steal,
+        Counter::Park,
     ];
 
     /// Stable snake_case name (used in JSON and text reports).
@@ -155,6 +166,8 @@ impl Counter {
             Counter::IndexBuild => "index_build",
             Counter::DevicesSettled => "devices_settled",
             Counter::DevicesScanned => "devices_scanned",
+            Counter::Steal => "steal",
+            Counter::Park => "park",
         }
     }
 }

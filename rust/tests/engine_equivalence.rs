@@ -33,8 +33,15 @@
 //!   deterministic JSON bit-for-bit — the trace-level differential.
 //!   (The head-to-head journal equality tests live in `rust/tests/trace.rs`,
 //!   which owns the process-wide toggle in default runs.)
+//! * `PATS_EQ_EXEC`: `off` | `auto` | a worker count (unset = leave the
+//!   default, which is off). When set, every plane in the suite runs with
+//!   `[sharding] workers` forced to that value, so the whole differential
+//!   re-runs with the persistent work-stealing executor driving the sweep
+//!   doors and the nested candidate-plan fan-outs — which must be
+//!   bit-identical to the scoped-thread path at every worker count (also
+//!   asserted head-to-head in the dedicated test below).
 
-use pats::config::{EngineKind, SystemConfig};
+use pats::config::{EngineKind, SystemConfig, WorkerCount};
 use pats::coordinator::{ControlSurface, Controller};
 use pats::metrics::ScenarioMetrics;
 use pats::scheduler::{PatsScheduler, Policy};
@@ -113,6 +120,22 @@ fn trace_from_env() -> Option<bool> {
     }
 }
 
+/// `PATS_EQ_EXEC`: `Some(workers)` when set, `None` to leave the config
+/// default (executor off) untouched.
+fn exec_from_env() -> Option<WorkerCount> {
+    match std::env::var("PATS_EQ_EXEC").as_deref() {
+        Ok("off") | Ok("0") => Some(WorkerCount::Off),
+        Ok("on") | Ok("auto") => Some(WorkerCount::Auto),
+        Ok(n) => Some(WorkerCount::Fixed(
+            n.parse::<usize>()
+                .ok()
+                .filter(|&w| w > 0)
+                .unwrap_or_else(|| panic!("PATS_EQ_EXEC must be off|auto|N, got {n:?}")),
+        )),
+        Err(_) => None,
+    }
+}
+
 /// The policies the differential runs sweep: the paper's scheduler and the
 /// polling central workstealer (a second, structurally different decision
 /// path: deferred placement + poll ticks).
@@ -140,6 +163,9 @@ fn run_surface<P: Policy + Send>(
     if broker_from_env() {
         cfg.sharding.broker.enabled = true;
         cfg.sharding.rebalance.enabled = true;
+    }
+    if let Some(workers) = exec_from_env() {
+        cfg.sharding.workers = workers;
     }
     if let Some(on) = index_from_env() {
         pats::resources::avail::set_enabled(on);
@@ -473,6 +499,96 @@ fn repeated_parallel_runs_serialise_byte_identical_metrics() {
                     "repeat {rep} produced different JSON ({engine}, shards={k})"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn executor_on_is_bit_identical_to_scoped_threads() {
+    // The work-stealing executor changes *where* sweep jobs and candidate
+    // plans run, never what they compute: with `[sharding] workers` armed,
+    // every engine and shard count must leave the exact network state and
+    // byte-identical deterministic JSON the scoped-thread path produces.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 16;
+    cfg.frames = 96;
+    cfg.sharding.spill_fanout = 0; // LP admissions ride the sweep path
+    let trace = Trace::generate(Distribution::Weighted(3), cfg.devices, cfg.frames, cfg.seed);
+    let script = ChurnScript::from_events(vec![
+        (SimTime::from_secs_f64(30.0), ChurnEvent::Crash(DeviceId(1))),
+        (SimTime::from_secs_f64(50.0), ChurnEvent::Drain(DeviceId(2))),
+        (SimTime::from_secs_f64(60.0), ChurnEvent::DegradeLink { factor: 0.7 }),
+        (SimTime::from_secs_f64(90.0), ChurnEvent::RestoreLink),
+    ]);
+    for engine in engines() {
+        for k in [2usize, 4] {
+            let mut off_cfg = cfg.clone();
+            off_cfg.sharding.shards = k;
+            off_cfg.sharding.workers = WorkerCount::Off;
+            let off = run_pol(Pol::Scheduler, &off_cfg, &trace, &script, engine);
+            // The scenario exercises the paths the executor parallelises.
+            assert!(off.metrics.preemptions > 0, "scenario never preempted");
+            assert!(off.metrics.failures_detected > 0, "scenario never rescued");
+            for workers in [1usize, 3, 8] {
+                let mut on_cfg = off_cfg.clone();
+                on_cfg.sharding.workers = WorkerCount::Fixed(workers);
+                let on = run_pol(Pol::Scheduler, &on_cfg, &trace, &script, engine);
+                assert_eq!(
+                    off.fingerprint, on.fingerprint,
+                    "executor workers={workers} left a different network state \
+                     ({engine}, shards={k})"
+                );
+                assert_metrics_identical(
+                    &off.metrics,
+                    &on.metrics,
+                    &format!("executor off vs workers={workers}, {engine}, shards={k}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_executor_runs_serialise_byte_identical_metrics() {
+    // Determinism stress for the pool: 16 repeats at every worker count on
+    // a churning hotspot scenario must serialise byte-identical
+    // deterministic JSON — no drift from steal order, park/unpark timing,
+    // or injector chunking — and all worker counts must agree with the
+    // workers-off reference.
+    let mut cfg = SystemConfig::default();
+    cfg.devices = 16;
+    cfg.frames = 96;
+    cfg.sharding.shards = 4;
+    cfg.sharding.spill_fanout = 0;
+    let profile = FleetProfile {
+        pattern: FleetPattern::Hotspot { hot_pct: 25 },
+        hp_only_pct: 0,
+        lp_weight: 4,
+    };
+    let trace = Trace::generate_fleet(&profile, cfg.devices, 6, cfg.seed);
+    let script = ChurnScript::from_events(vec![
+        (SimTime::from_secs_f64(35.0), ChurnEvent::Crash(DeviceId(2))),
+        (SimTime::from_secs_f64(50.0), ChurnEvent::Drain(DeviceId(11))),
+        (SimTime::from_secs_f64(70.0), ChurnEvent::DegradeLink { factor: 0.8 }),
+        (SimTime::from_secs_f64(95.0), ChurnEvent::RestoreLink),
+    ]);
+    let reference =
+        run_pol(Pol::Scheduler, &cfg, &trace, &script, EngineKind::Parallel);
+    let ref_json = reference.metrics.deterministic_json().to_string_pretty();
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = cfg.clone();
+        cfg.sharding.workers = WorkerCount::Fixed(workers);
+        for rep in 0..16 {
+            let run = run_pol(Pol::Scheduler, &cfg, &trace, &script, EngineKind::Parallel);
+            assert_eq!(
+                reference.fingerprint, run.fingerprint,
+                "workers={workers} repeat {rep} diverged from the scoped reference"
+            );
+            assert_eq!(
+                ref_json,
+                run.metrics.deterministic_json().to_string_pretty(),
+                "workers={workers} repeat {rep} produced different JSON"
+            );
         }
     }
 }

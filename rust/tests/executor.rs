@@ -1,0 +1,171 @@
+//! Stress tests for the persistent work-stealing executor
+//! (`util::executor`): many producer threads hammering one pool with
+//! random job sets while the workers steal from each other. The contract
+//! under test is the executor's whole reason to exist — every submitted
+//! job runs exactly once, no batch returns before its jobs finished, the
+//! pool drains and re-parks cleanly between storms, and nested submission
+//! from inside a job cannot deadlock.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use pats::util::executor::{current, Executor, Job};
+use pats::util::rng::Rng;
+
+/// N producer threads × M stealing workers over random batch sizes: every
+/// job must execute exactly once (its slot goes 0 → 1, never 2), and every
+/// `run` call must observe its own batch complete before returning.
+#[test]
+fn concurrent_producers_run_every_job_exactly_once() {
+    const PRODUCERS: usize = 6;
+    const BATCHES: usize = 40;
+    const MAX_BATCH: u64 = 48;
+
+    let pool = Executor::new(4);
+    let handle = pool.handle();
+    // One hit-counter slab per producer; slot (b, j) belongs to batch b's
+    // j-th job. Sized for the worst case up front so slices are disjoint.
+    let slabs: Vec<Vec<AtomicUsize>> = (0..PRODUCERS)
+        .map(|_| (0..BATCHES * MAX_BATCH as usize).map(|_| AtomicUsize::new(0)).collect())
+        .collect();
+    let submitted: Vec<AtomicUsize> = (0..PRODUCERS).map(|_| AtomicUsize::new(0)).collect();
+
+    std::thread::scope(|scope| {
+        for (p, slab) in slabs.iter().enumerate() {
+            let handle = handle.clone();
+            let submitted = &submitted[p];
+            scope.spawn(move || {
+                let mut rng = Rng::seed_from_u64(0x9E37_79B9 + p as u64);
+                for b in 0..BATCHES {
+                    let n = rng.below(MAX_BATCH) as usize; // 0 included: empty batches are legal
+                    let jobs: Vec<Job<'_>> = (0..n)
+                        .map(|j| -> Job<'_> {
+                            let slot = &slab[b * MAX_BATCH as usize + j];
+                            Box::new(move || {
+                                slot.fetch_add(1, Ordering::Relaxed);
+                            })
+                        })
+                        .collect();
+                    submitted.fetch_add(n, Ordering::Relaxed);
+                    handle.run(jobs);
+                    // The batch latch resolved: every one of *our* jobs has
+                    // run (other producers' batches may still be in flight).
+                    for j in 0..n {
+                        assert_eq!(
+                            slab[b * MAX_BATCH as usize + j].load(Ordering::Relaxed),
+                            1,
+                            "producer {p} batch {b} job {j} not exactly-once at latch"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    for (p, slab) in slabs.iter().enumerate() {
+        let ran: usize = slab.iter().map(|s| s.load(Ordering::Relaxed)).sum();
+        assert_eq!(
+            ran,
+            submitted[p].load(Ordering::Relaxed),
+            "producer {p}: jobs lost or duplicated"
+        );
+        assert!(slab.iter().all(|s| s.load(Ordering::Relaxed) <= 1), "a job ran twice");
+    }
+
+    // The storm is over: the pool must have drained and re-parked, not
+    // wedged — a fresh batch still completes, and drop joins every worker
+    // (a stuck worker would hang the test here, failing it by timeout).
+    let after = AtomicUsize::new(0);
+    let jobs: Vec<Job<'_>> = (0..32)
+        .map(|_| -> Job<'_> {
+            let after = &after;
+            Box::new(move || {
+                after.fetch_add(1, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    pool.run(jobs);
+    assert_eq!(after.load(Ordering::Relaxed), 32, "pool wedged after the storm");
+    drop(pool);
+}
+
+/// Random nested fan-outs: jobs submit sub-batches through the worker's
+/// own installed handle (`executor::current()`), exactly how the scheduler
+/// candidate-plan searches reach the pool from inside a sweep job. The
+/// caller-helps protocol must keep arbitrary nesting deadlock-free, and
+/// the grand total must account for every leaf exactly once.
+#[test]
+fn random_nested_fanouts_complete_without_deadlock() {
+    let pool = Executor::new(3);
+    let total = Arc::new(AtomicUsize::new(0));
+    let mut expected = 0usize;
+    let mut rng = Rng::seed_from_u64(0xDEAD_BEEF);
+
+    for round in 0..20 {
+        let outer = 1 + rng.below(6) as usize;
+        let inner: Vec<usize> = (0..outer).map(|_| rng.below(9) as usize).collect();
+        expected += inner.iter().map(|&i| 1 + i).sum::<usize>();
+        let total = &total;
+        let jobs: Vec<Job<'_>> = inner
+            .iter()
+            .map(|&n| -> Job<'_> {
+                Box::new(move || {
+                    total.fetch_add(1, Ordering::Relaxed);
+                    // On a worker thread the pool's own handle is installed;
+                    // fan the sub-jobs back into the same pool.
+                    let pool = current().expect("worker thread has a handle installed");
+                    let sub: Vec<Job<'_>> = (0..n)
+                        .map(|_| -> Job<'_> {
+                            Box::new(move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            })
+                        })
+                        .collect();
+                    pool.run(sub);
+                })
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(
+            total.load(Ordering::Relaxed),
+            expected,
+            "round {round}: nested jobs lost or duplicated"
+        );
+    }
+}
+
+/// A panicking job must not poison the pool for *other* producers: their
+/// concurrent batches still complete exactly once, the panic reaches only
+/// the submitter that owned the job, and the pool keeps working after.
+#[test]
+fn panic_in_one_batch_leaves_other_producers_unharmed() {
+    let pool = Executor::new(2);
+    let handle = pool.handle();
+    let clean = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        let panicker = {
+            let handle = handle.clone();
+            scope.spawn(move || {
+                let jobs: Vec<Job<'_>> =
+                    vec![Box::new(|| panic!("intentional test panic")) as Job<'_>];
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handle.run(jobs)))
+            })
+        };
+        let clean_ref = &clean;
+        scope.spawn(move || {
+            for _ in 0..30 {
+                let jobs: Vec<Job<'_>> = (0..16)
+                    .map(|_| -> Job<'_> {
+                        Box::new(move || {
+                            clean_ref.fetch_add(1, Ordering::Relaxed);
+                        })
+                    })
+                    .collect();
+                handle.run(jobs);
+            }
+        });
+        assert!(panicker.join().unwrap().is_err(), "the panic must reach its submitter");
+    });
+    assert_eq!(clean.load(Ordering::Relaxed), 30 * 16, "bystander batches were disturbed");
+}
